@@ -1,0 +1,71 @@
+//! Fine-tuning example (the paper's GLUE setup): pretrain the encoder
+//! classifier on one synthetic task instance, then fine-tune it on a
+//! *different* instance under DSQ — the "pre-train then fine-tune"
+//! paradigm of §1, with the precision schedule applied to fine-tuning
+//! exactly as the paper applies DSQ to RoBERTa-base.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example finetune_classification
+//! ```
+
+use dsq::coordinator::{Finetuner, FinetuneConfig, LrSchedule};
+use dsq::schedule::{DsqController, PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    dsq::util::logging::level_from_env();
+    let ckpt = std::env::temp_dir().join("dsq_pretrained_encoder.bin");
+
+    // Phase 1: "pre-training" — task instance seed 100, fp32.
+    println!("== phase 1: pretrain encoder (task seed 100, fp32) ==");
+    let pre_cfg = FinetuneConfig {
+        artifacts: "artifacts".into(),
+        seed: 100,
+        epochs: 3,
+        batches_per_epoch: 25,
+        lr: LrSchedule::Polynomial { lr: 1e-3, warmup_steps: 15, total_steps: 2000 },
+        nclasses: 3,
+        val_batches: 3,
+        checkpoint: Some(ckpt.clone()),
+        init_checkpoint: None,
+    };
+    let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(PrecisionConfig::FP32));
+    let report = Finetuner::new(pre_cfg)?.run(schedule.as_mut())?;
+    println!(
+        "pretrained: val {:.4}, acc {:.1}%\n",
+        report.final_val_loss,
+        report.final_accuracy * 100.0
+    );
+
+    // Phase 2: fine-tune on a new task instance (seed 200) under DSQ vs
+    // from-scratch — transfer should win at equal budget.
+    for (name, init) in [("fine-tune from checkpoint", Some(ckpt.clone())), ("from scratch", None)]
+    {
+        println!("== phase 2 ({name}, task seed 200, DSQ schedule) ==");
+        let cfg = FinetuneConfig {
+            artifacts: "artifacts".into(),
+            seed: 200,
+            epochs: 3,
+            batches_per_epoch: 25,
+            lr: LrSchedule::Polynomial { lr: 5e-4, warmup_steps: 10, total_steps: 2000 },
+            nclasses: 3,
+            val_batches: 3,
+            checkpoint: None,
+            init_checkpoint: init,
+        };
+        let mut schedule: Box<dyn Schedule> =
+            Box::new(DsqController::paper_default(QuantMode::Bfp));
+        let report = Finetuner::new(cfg)?.run(schedule.as_mut())?;
+        println!(
+            "{name}: val {:.4}, acc {:.1}%, trace {:?}\n",
+            report.final_val_loss,
+            report.final_accuracy * 100.0,
+            report
+                .trace
+                .iter()
+                .map(|(p, n)| format!("{}x{}", p.notation(), n))
+                .collect::<Vec<_>>()
+        );
+    }
+    std::fs::remove_file(&ckpt).ok();
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: the smallest complete DSQ workflow.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the AOT artifacts, initializes a model, runs a handful of
+//! training steps at three precision configs (fp32, static stashing,
+//! DSQ level 0), and prints each step's loss plus the hardware cost the
+//! cost model assigns to the configs on the paper-scale IWSLT workload.
+
+use dsq::coordinator::{LrSchedule, Trainer, TrainerConfig};
+use dsq::costmodel::{self, TransformerWorkload};
+use dsq::data::Variant;
+use dsq::schedule::{PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    dsq::util::logging::level_from_env();
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string());
+
+    let workload = TransformerWorkload::iwslt_6layer();
+    println!("== DSQ quickstart ==\n");
+    println!("precision configs and their hardware cost (paper-scale IWSLT, fixed32 = 1.00x):");
+    let configs = [
+        ("fp32", PrecisionConfig::FP32),
+        ("stashing BFP [16,4,4,16]", PrecisionConfig::stashing(QuantMode::Bfp)),
+        ("DSQ level 0 [2,2,2,16]", PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0)),
+    ];
+    for (name, p) in &configs {
+        let row = costmodel::normalized_row(&workload, name, p, p.mode != QuantMode::Fp32);
+        println!("  {}", row.fmt_paper_style());
+    }
+
+    println!("\ntraining 2 epochs x 6 batches under each config (same seed):");
+    for (name, p) in &configs {
+        let cfg = TrainerConfig {
+            artifacts: artifacts.clone().into(),
+            seed: 0,
+            epochs: 2,
+            batches_per_epoch: 6,
+            lr: LrSchedule::InverseSqrt { peak_lr: 3e-3, warmup_steps: 20 },
+            variant: Variant::Iwslt,
+            val_batches: 2,
+            bleu_batches: 0,
+            checkpoint: None,
+            init_checkpoint: None,
+            prefetch: 2,
+        };
+        let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(*p));
+        let mut trainer = Trainer::new(cfg)?;
+        let report = trainer.run(schedule.as_mut())?;
+        println!(
+            "  {name:<28} loss {:.4} -> {:.4} | val {:.4} | {:.1} steps/s",
+            report.loss_curve.first().map(|x| x.1).unwrap_or(f64::NAN),
+            report.loss_curve.last().map(|x| x.1).unwrap_or(f64::NAN),
+            report.final_val_loss,
+            report.steps_per_s(),
+        );
+    }
+    println!("\nnext: cargo run --release --example train_translation  (the full e2e driver)");
+    Ok(())
+}

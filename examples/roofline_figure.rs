@@ -1,0 +1,71 @@
+//! Figure 1 as an ASCII roofline plot: where fp32, static quantization
+//! and DSQ training sit relative to the machine balance point, on both
+//! an A100-like and an edge-device profile (the paper's on-device
+//! motivation).
+//!
+//! ```bash
+//! cargo run --release --example roofline_figure
+//! ```
+//! (cost model only — no artifacts/PJRT needed.)
+
+use dsq::costmodel::{roofline, Machine, TransformerWorkload};
+use dsq::experiments::figure1;
+
+fn main() {
+    let w = TransformerWorkload::iwslt_6layer();
+    for machine in [Machine::a100_like(), Machine::edge_like()] {
+        figure1::print_roofline(&machine, &w);
+        plot(&machine, &w);
+        println!();
+    }
+}
+
+/// Log-log ASCII plot: roofline curve + the figure's points.
+fn plot(m: &Machine, w: &TransformerWorkload) {
+    const COLS: usize = 72;
+    const ROWS: usize = 16;
+    let points = figure1::figure_points(w, m);
+    let (x_lo, x_hi) = (0.1f64.ln(), 1000.0f64.ln());
+    let y_hi = m.peak_macs_per_s.ln();
+    let y_lo = m.attainable(0.1).ln();
+
+    let mut grid = vec![vec![b' '; COLS]; ROWS];
+    // Roofline curve.
+    for c in 0..COLS {
+        let x = (x_lo + (x_hi - x_lo) * c as f64 / (COLS - 1) as f64).exp();
+        let y = m.attainable(x).ln();
+        let r = ((y_hi - y) / (y_hi - y_lo) * (ROWS - 1) as f64).round() as usize;
+        if r < ROWS {
+            grid[r][c] = b'.';
+        }
+    }
+    // Balance point marker.
+    let bc = ((m.balance().ln() - x_lo) / (x_hi - x_lo) * (COLS - 1) as f64).round() as usize;
+    for row in grid.iter_mut() {
+        if bc < COLS && row[bc] == b' ' {
+            row[bc] = b'|';
+        }
+    }
+    // Points (1)(2)(3)...
+    for (i, p) in points.iter().enumerate() {
+        let c = (((p.intensity.ln() - x_lo) / (x_hi - x_lo)) * (COLS - 1) as f64)
+            .round()
+            .clamp(0.0, (COLS - 1) as f64) as usize;
+        let y = p.attainable.ln();
+        let r = ((y_hi - y) / (y_hi - y_lo) * (ROWS - 1) as f64).round() as usize;
+        if r < ROWS {
+            grid[r][c] = b'1' + i as u8;
+        }
+    }
+    println!("  attainable (log)  [| = balance point I_opt = {:.0} MAC/byte]", m.balance());
+    for row in &grid {
+        println!("  {}", String::from_utf8_lossy(row));
+    }
+    println!("  0.1 {:>66}", "operational intensity (MAC/byte, log) 1000");
+    for (i, p) in points.iter().enumerate() {
+        println!("   {}: {} (I = {:.1})", i + 1, p.label, p.intensity);
+    }
+}
+
+#[allow(unused_imports)]
+use roofline as _;

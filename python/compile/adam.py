@@ -1,0 +1,52 @@
+"""Adam optimizer (β₁=0.9, β₂=0.98, paper Appendix B) over a flat param dict.
+
+State (m, v) and master weights are f32 — the paper quantizes GEMM
+operands and the fwd→bwd stash, not the optimizer state. The learning
+rate arrives as a runtime scalar: the LR *schedule* (inverse-sqrt /
+polynomial decay) is owned by the rust coordinator (L3), keeping the AOT
+graph schedule-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BETA1 = 0.9
+BETA2 = 0.98
+EPS = 1e-9
+
+
+def init_state(params: dict) -> tuple[dict, dict]:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def update(
+    params: dict,
+    grads: dict,
+    m: dict,
+    v: dict,
+    step: jax.Array,
+    lr: jax.Array,
+    weight_decay: float = 0.0,
+) -> tuple[dict, dict, dict]:
+    """One Adam step. ``step`` is the 1-based step count (f32 scalar)."""
+    b1t = jnp.power(BETA1, step)
+    b2t = jnp.power(BETA2, step)
+
+    def upd(p, g, mi, vi):
+        if weight_decay:
+            g = g + weight_decay * p
+        mn = BETA1 * mi + (1.0 - BETA1) * g
+        vn = BETA2 * vi + (1.0 - BETA2) * jnp.square(g)
+        mhat = mn / (1.0 - b1t)
+        vhat = vn / (1.0 - b2t)
+        pn = p - lr * mhat / (jnp.sqrt(vhat) + EPS)
+        return pn, mn, vn
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, new_m, new_v

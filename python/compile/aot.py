@@ -1,0 +1,310 @@
+"""AOT pipeline: lower the L2 models to HLO **text** + a JSON manifest.
+
+Run once by ``make artifacts`` (python never appears on the request
+path). Each exported function is jitted, lowered to StableHLO, converted
+to an XlaComputation and dumped as HLO *text* — jax ≥ 0.5 serialized
+protos carry 64-bit instruction ids that the rust side's xla_extension
+0.5.1 rejects, while the text parser reassigns ids (see
+/opt/xla-example/README.md and DESIGN.md §2).
+
+Flat calling convention: parameter dicts are flattened to tuples in
+sorted-key order; ``manifest.json`` records the exact order and shapes so
+the rust runtime can marshal literals positionally. All exported
+functions return tuples (``return_tuple=True``), unwrapped on the rust
+side via tuple decomposition.
+
+Shapes are baked at lowering; precision (``qcfg = [mode,q0,q1,q2,q3]``)
+and learning rate stay runtime scalars so the L3 dynamic controller never
+recompiles.
+
+Config via environment (defaults = the "small" testbed preset):
+  DSQ_VOCAB, DSQ_DMODEL, DSQ_HEADS, DSQ_DFF, DSQ_ENC_LAYERS,
+  DSQ_DEC_LAYERS, DSQ_SRC_LEN, DSQ_TGT_LEN, DSQ_BATCH,
+  DSQ_CLS_SEQ, DSQ_CLS_LAYERS, DSQ_CLS_CLASSES
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import layers
+from . import model as M
+from .kernels.bfp import bfp_quantize
+from .kernels.fixed import fixed_quantize
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _env_int(name: str, default: int) -> int:
+    return int(os.environ.get(name, default))
+
+
+def nmt_config() -> M.Seq2SeqConfig:
+    return M.Seq2SeqConfig(
+        vocab=_env_int("DSQ_VOCAB", 256),
+        d_model=_env_int("DSQ_DMODEL", 128),
+        nheads=_env_int("DSQ_HEADS", 4),
+        d_ff=_env_int("DSQ_DFF", 256),
+        enc_layers=_env_int("DSQ_ENC_LAYERS", 2),
+        dec_layers=_env_int("DSQ_DEC_LAYERS", 2),
+        src_len=_env_int("DSQ_SRC_LEN", 24),
+        tgt_len=_env_int("DSQ_TGT_LEN", 24),
+        batch=_env_int("DSQ_BATCH", 16),
+    )
+
+
+def cls_config() -> M.ClassifierConfig:
+    return M.ClassifierConfig(
+        vocab=_env_int("DSQ_VOCAB", 256),
+        d_model=_env_int("DSQ_DMODEL", 128),
+        nheads=_env_int("DSQ_HEADS", 4),
+        d_ff=_env_int("DSQ_DFF", 256),
+        layers=_env_int("DSQ_CLS_LAYERS", 2),
+        seq_len=_env_int("DSQ_CLS_SEQ", 48),
+        nclasses=_env_int("DSQ_CLS_CLASSES", 3),
+        batch=_env_int("DSQ_BATCH", 16),
+    )
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def param_specs(params: dict) -> list[tuple[str, tuple[int, ...]]]:
+    return [(k, tuple(int(d) for d in params[k].shape)) for k in sorted(params)]
+
+
+def _shape(s, dtype=F32):
+    return jax.ShapeDtypeStruct(s, dtype)
+
+
+def export(fn, example_args, path: str) -> int:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+# ----------------------------------------------------------- flat wrappers
+
+
+def build_nmt_exports(cfg: M.Seq2SeqConfig):
+    """Return ({name: (fn, example_args)}, param_specs) for seq2seq."""
+    p0 = jax.eval_shape(lambda s: M.init_seq2seq(cfg, s), jnp.zeros((), I32))
+    names = sorted(p0.keys())
+    shapes = [p0[k].shape for k in names]
+    n = len(names)
+
+    def pack(flat):
+        return dict(zip(names, flat))
+
+    def init_fn(seed):
+        p = M.init_seq2seq(cfg, seed)
+        return tuple(p[k] for k in names)
+
+    def train_fn(*args):
+        p = pack(args[0:n])
+        m = pack(args[n : 2 * n])
+        v = pack(args[2 * n : 3 * n])
+        step, src, tgt_in, tgt_out, qcfg, lr = args[3 * n :]
+        p2, m2, v2, loss = M.nmt_train_step(p, m, v, step, src, tgt_in, tgt_out, qcfg, lr, cfg)
+        return (
+            tuple(p2[k] for k in names)
+            + tuple(m2[k] for k in names)
+            + tuple(v2[k] for k in names)
+            + (loss,)
+        )
+
+    def eval_fn(*args):
+        p = pack(args[0:n])
+        src, tgt_in, tgt_out = args[n:]
+        return M.nmt_eval_step(p, src, tgt_in, tgt_out, cfg)
+
+    def decode_fn(*args):
+        p = pack(args[0:n])
+        (src,) = args[n:]
+        return (M.nmt_greedy_decode(p, src, cfg),)
+
+    ps = [_shape(s) for s in shapes]
+    B, S, T = cfg.batch, cfg.src_len, cfg.tgt_len
+    scalar = _shape((), F32)
+    qcfg = _shape((5,), F32)
+    train_args = (
+        ps * 3
+        + [scalar, _shape((B, S), I32), _shape((B, T), I32), _shape((B, T), I32), qcfg, scalar]
+    )
+    exports = {
+        "init": (init_fn, [_shape((), I32)]),
+        # Per-quantizer train variants: identical signature, the variant
+        # bakes which quantizer `mode >= 1` selects (compile-time split,
+        # see layers.set_quantizers).
+        "train_bfp": (train_fn, train_args),
+        "train_fixed": (train_fn, train_args),
+        "eval": (eval_fn, ps + [_shape((B, S), I32), _shape((B, T), I32), _shape((B, T), I32)]),
+        "decode": (decode_fn, ps + [_shape((B, S), I32)]),
+    }
+    return exports, param_specs(p0)
+
+
+def build_cls_exports(cfg: M.ClassifierConfig):
+    p0 = jax.eval_shape(lambda s: M.init_classifier(cfg, s), jnp.zeros((), I32))
+    names = sorted(p0.keys())
+    shapes = [p0[k].shape for k in names]
+    n = len(names)
+
+    def pack(flat):
+        return dict(zip(names, flat))
+
+    def init_fn(seed):
+        p = M.init_classifier(cfg, seed)
+        return tuple(p[k] for k in names)
+
+    def train_fn(*args):
+        p = pack(args[0:n])
+        m = pack(args[n : 2 * n])
+        v = pack(args[2 * n : 3 * n])
+        step, tokens, labels, qcfg, lr = args[3 * n :]
+        p2, m2, v2, loss = M.cls_train_step(p, m, v, step, tokens, labels, qcfg, lr, cfg)
+        return (
+            tuple(p2[k] for k in names)
+            + tuple(m2[k] for k in names)
+            + tuple(v2[k] for k in names)
+            + (loss,)
+        )
+
+    def eval_fn(*args):
+        p = pack(args[0:n])
+        tokens, labels = args[n:]
+        return M.cls_eval_step(p, tokens, labels, cfg)
+
+    ps = [_shape(s) for s in shapes]
+    B, L = cfg.batch, cfg.seq_len
+    scalar = _shape((), F32)
+    train_args = (
+        ps * 3 + [scalar, _shape((B, L), I32), _shape((B,), I32), _shape((5,), F32), scalar]
+    )
+    exports = {
+        "init": (init_fn, [_shape((), I32)]),
+        "train_bfp": (train_fn, train_args),
+        "train_fixed": (train_fn, train_args),
+        "eval": (eval_fn, ps + [_shape((B, L), I32), _shape((B,), I32)]),
+    }
+    return exports, param_specs(p0)
+
+
+QUANT_SHAPE = (64, 64)
+
+
+def build_quant_exports():
+    """Standalone quantizer artifacts — the rust mirrors cross-check
+    against these (integration tests) and they double as runtime probes."""
+
+    def bfp_fn(x, bits):
+        return (bfp_quantize(x, bits),)
+
+    def fixed_fn(x, bits):
+        return (fixed_quantize(x, bits),)
+
+    args = [_shape(QUANT_SHAPE), _shape((), F32)]
+    return {"quant_bfp": (bfp_fn, args), "quant_fixed": (fixed_fn, args)}
+
+
+# ------------------------------------------------------------------- main
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="DSQ AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--only", default="", help="comma-separated artifact subset (e.g. nmt_train,quant_bfp)"
+    )
+    args = ap.parse_args()
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    only = set(filter(None, args.only.split(",")))
+
+    ncfg = nmt_config()
+    ccfg = cls_config()
+    nmt_exports, nmt_params = build_nmt_exports(ncfg)
+    cls_exports, cls_params = build_cls_exports(ccfg)
+    quant_exports = build_quant_exports()
+
+    manifest = {
+        "version": 1,
+        "models": {
+            "nmt": {
+                "config": {
+                    "vocab": ncfg.vocab,
+                    "d_model": ncfg.d_model,
+                    "nheads": ncfg.nheads,
+                    "d_ff": ncfg.d_ff,
+                    "enc_layers": ncfg.enc_layers,
+                    "dec_layers": ncfg.dec_layers,
+                    "src_len": ncfg.src_len,
+                    "tgt_len": ncfg.tgt_len,
+                    "batch": ncfg.batch,
+                },
+                "params": [{"name": k, "shape": list(s)} for k, s in nmt_params],
+                "artifacts": {k: f"nmt_{k}.hlo.txt" for k in nmt_exports},
+            },
+            "cls": {
+                "config": {
+                    "vocab": ccfg.vocab,
+                    "d_model": ccfg.d_model,
+                    "nheads": ccfg.nheads,
+                    "d_ff": ccfg.d_ff,
+                    "layers": ccfg.layers,
+                    "seq_len": ccfg.seq_len,
+                    "nclasses": ccfg.nclasses,
+                    "batch": ccfg.batch,
+                },
+                "params": [{"name": k, "shape": list(s)} for k, s in cls_params],
+                "artifacts": {k: f"cls_{k}.hlo.txt" for k in cls_exports},
+            },
+        },
+        "quant": {
+            "shape": list(QUANT_SHAPE),
+            "artifacts": {k: f"{k}.hlo.txt" for k in quant_exports},
+        },
+    }
+
+    jobs = (
+        [(f"nmt_{k}", fn, ex) for k, (fn, ex) in nmt_exports.items()]
+        + [(f"cls_{k}", fn, ex) for k, (fn, ex) in cls_exports.items()]
+        + [(k, fn, ex) for k, (fn, ex) in quant_exports.items()]
+    )
+    for name, fn, ex in jobs:
+        if only and name not in only:
+            continue
+        # Train variants bake a single quantizer path (compile-time split).
+        if name.endswith("_bfp"):
+            layers.set_quantizers("bfp")
+        elif name.endswith("_fixed"):
+            layers.set_quantizers("fixed")
+        else:
+            layers.set_quantizers("both")
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        nbytes = export(fn, ex, path)
+        print(f"  {name}: {nbytes} bytes -> {path}", file=sys.stderr)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"  manifest -> {outdir}/manifest.json", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

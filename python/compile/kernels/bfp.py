@@ -1,0 +1,115 @@
+"""Pallas kernel: Block-Floating-Point (MSFP) fake quantization.
+
+This is the paper's L1 compute hot-spot: every tensor DSQ touches (GEMM
+inputs, the q1 stash, backward gradients) goes through this quantizer, so
+it is written as a Pallas kernel that lowers into the same HLO module as
+the L2 model.
+
+Layout / TPU mapping (see DESIGN.md §Hardware-Adaptation):
+
+* the tensor is viewed as ``(rows, cols)`` with ``cols % BOX == 0``; the
+  bounding box (16 elements sharing an exponent) lies along the minor
+  (lane) dimension, so on a real TPU the per-box ``max``/scale/round are
+  plain VPU lane operations and the box never straddles a tile;
+* the grid walks row-blocks; each grid step holds one ``(block_rows, cols)``
+  tile in VMEM. ``block_rows`` is chosen so a tile stays well under VMEM
+  (≈16 MiB) — see ``pick_block_rows``;
+* the runtime mantissa width ``m`` arrives as a ``(1, 1)`` f32 operand
+  broadcast to every grid step, which is what lets the L3 coordinator
+  re-tune precision step-by-step without recompiling;
+* ``interpret=True`` everywhere in this repo: the CPU PJRT plugin cannot
+  execute Mosaic custom-calls, so the kernel is lowered through the
+  interpreter into plain HLO (same numerics, CPU-executable).
+
+Semantics are identical to ``ref.bfp_quantize_ref`` (the pure-jnp oracle);
+pytest asserts bit-equality.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BOX, EXP_MAX, EXP_MIN, PASSTHROUGH_BITS, exact_pow2
+
+# VMEM budget used to pick the row-block size: one f32 input tile + one
+# output tile must fit with generous headroom (real TPU VMEM ≈ 16 MiB/core).
+_VMEM_BUDGET_BYTES = 4 * 1024 * 1024
+
+
+def pick_block_rows(rows: int, cols: int) -> int:
+    """Largest row-block that (a) divides ``rows`` and (b) fits the budget."""
+    per_row = cols * 4 * 2  # input + output f32 tiles
+    cap = max(1, _VMEM_BUDGET_BYTES // per_row)
+    best = 1
+    for cand in range(1, min(rows, cap) + 1):
+        if rows % cand == 0:
+            best = cand
+    return best
+
+
+def _bfp_kernel(m_ref, x_ref, o_ref, *, box: int):
+    """One row-block: per-box shared exponent -> round -> clamp -> dequant."""
+    x = x_ref[...]
+    m = m_ref[0, 0]
+    br, cols = x.shape
+    boxed = x.reshape(br, cols // box, box)
+    amax = jnp.max(jnp.abs(boxed), axis=-1, keepdims=True)
+    # floor(log2(amax)) via the IEEE-754 exponent field — exact, and
+    # identical to the rust mirror (rust/src/quant/bfp.rs).
+    ebits = jax.lax.bitcast_convert_type(amax, jnp.int32)
+    e = (((ebits >> 23) & 0xFF) - 127).astype(jnp.float32)
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+    # exact_pow2 + clamp to normal range: XLA exp2 is inexact, and FTZ
+    # would flush a subnormal step to zero (see ref._quantize_with_exponent).
+    step = exact_pow2(jnp.clip(e - m + 2.0, EXP_MIN, EXP_MAX))
+    maxmag = exact_pow2(m - 1.0) - 1.0
+    mag = jnp.clip(jnp.round(boxed / step), -maxmag, maxmag)
+    q = (mag * step).reshape(br, cols)
+    q = jnp.where((amax > 0.0).reshape(br, cols // box, 1).repeat(box, -1).reshape(br, cols), q, 0.0)
+    o_ref[...] = jnp.where(m >= PASSTHROUGH_BITS, x, q)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _bfp_quantize_2d(x: jax.Array, mbits: jax.Array, interpret: bool = True) -> jax.Array:
+    """Pallas call over a padded 2D view; x.shape[1] % BOX == 0 required."""
+    rows, cols = x.shape
+    br = pick_block_rows(rows, cols)
+    m2d = mbits.reshape(1, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_bfp_kernel, box=BOX),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(m2d, x)
+
+
+def bfp_quantize(x: jax.Array, mbits, interpret: bool = True) -> jax.Array:
+    """BFP fake-quantize an arbitrary-shape f32 tensor (boxes on last axis).
+
+    Wrapper responsibilities: flatten leading axes, zero-pad the last axis
+    to a BOX multiple (padding never changes a real box's max because a box
+    is either all-real, all-pad, or real-prefix+zero-pad), call the kernel,
+    slice back.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.asarray(mbits, jnp.float32)
+    orig_shape = x.shape
+    n = x.shape[-1] if x.ndim else 1
+    flat = x.reshape(-1, n) if x.ndim else x.reshape(1, 1)
+    inner = flat.shape[-1]
+    pad = (-inner) % BOX
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    q = _bfp_quantize_2d(flat, m, interpret=interpret)
+    if pad:
+        q = q[:, :inner]
+    return q.reshape(orig_shape)

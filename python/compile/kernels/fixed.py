@@ -1,0 +1,71 @@
+"""Pallas kernel: dynamic per-tensor fixed-point fake quantization.
+
+The fixed-point baseline ("the standard 16-bit fixed-point widely used in
+on-device learning", paper §1/§4) shares ONE exponent across the whole
+tensor. That global reduction makes it a two-stage kernel on real
+hardware; here the tensor sizes DSQ stashes (≤ a few MiB) fit a single
+VMEM-resident block, so the kernel runs as one grid step: global |max| →
+shared exponent → round/clamp/dequant. Tensors too large for the budget
+fall back to the jnp oracle (same numerics, XLA-fused) — documented in
+DESIGN.md §Perf.
+
+Semantics identical to ``ref.fixed_quantize_ref``; pytest asserts
+bit-equality.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EXP_MAX, EXP_MIN, PASSTHROUGH_BITS, exact_pow2, fixed_quantize_ref
+
+# Single-block budget: input + output f32 tiles (see bfp.py for rationale).
+_SINGLE_BLOCK_LIMIT = (4 * 1024 * 1024) // (4 * 2)
+
+
+def _fixed_kernel(b_ref, x_ref, o_ref):
+    x = x_ref[...]
+    b = b_ref[0, 0]
+    amax = jnp.max(jnp.abs(x))
+    ebits = jax.lax.bitcast_convert_type(amax, jnp.int32)
+    e = (((ebits >> 23) & 0xFF) - 127).astype(jnp.float32)
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+    # exact_pow2 + clamp to normal range (XLA exp2 inexact; FTZ), see ref.py.
+    step = exact_pow2(jnp.clip(e - b + 2.0, EXP_MIN, EXP_MAX))
+    maxmag = exact_pow2(b - 1.0) - 1.0
+    mag = jnp.clip(jnp.round(x / step), -maxmag, maxmag)
+    q = jnp.where(amax > 0.0, mag * step, 0.0)
+    o_ref[...] = jnp.where(b >= PASSTHROUGH_BITS, x, q)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fixed_quantize_2d(x: jax.Array, bits: jax.Array, interpret: bool = True) -> jax.Array:
+    rows, cols = x.shape
+    b2d = bits.reshape(1, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        _fixed_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(b2d, x)
+
+
+def fixed_quantize(x: jax.Array, bits, interpret: bool = True) -> jax.Array:
+    """Per-tensor dynamic fixed-point fake quantization (any shape)."""
+    x = jnp.asarray(x, jnp.float32)
+    b = jnp.asarray(bits, jnp.float32)
+    if x.size > _SINGLE_BLOCK_LIMIT or x.ndim == 0:
+        return fixed_quantize_ref(x, b)
+    n = x.shape[-1]
+    flat = x.reshape(-1, n)
+    q = _fixed_quantize_2d(flat, b, interpret=interpret)
+    return q.reshape(x.shape)

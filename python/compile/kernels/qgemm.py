@@ -1,0 +1,111 @@
+"""Pallas kernel: fused BFP-quantized GEMM (quantize tiles -> MXU matmul).
+
+This is the kernel a real TPU deployment of DSQ would run for every GEMM:
+HBM tiles of ``x`` and ``w`` are staged into VMEM, BFP fake-quantized
+in-register (boxes along the contraction axis), multiplied on the MXU in
+f32, and accumulated into a VMEM accumulator across the K grid axis.
+
+Key structural points (DESIGN.md §Hardware-Adaptation):
+
+* the bounding box (16) lies along K, and the K block size is a multiple
+  of BOX, so boxes never straddle tiles — tile-local quantization is
+  bit-identical to whole-tensor quantization (asserted in pytest);
+* ``x`` is quantized row-wise (boxes along K) and ``w`` column-wise: for
+  ``w`` we box along its first axis (K) by transposing the tile view, the
+  layout MSFP hardware uses so both GEMM operands share exponents along
+  the dot-product dimension;
+* accumulation is full f32 (wide accumulators — the paper's cost model
+  likewise charges mantissa-width multipliers + wide adders).
+
+Used by benches and tests as the standalone hot path; the L2 model uses
+``bfp_quantize`` + XLA dot so the custom_vjp can control the stash
+separately (see layers.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BOX, EXP_MAX, EXP_MIN, PASSTHROUGH_BITS, exact_pow2
+
+
+def _quant_boxed(t: jax.Array, m: jax.Array, box: int) -> jax.Array:
+    """BFP fake-quantize a 2D tile with boxes along the LAST axis."""
+    r, c = t.shape
+    boxed = t.reshape(r, c // box, box)
+    amax = jnp.max(jnp.abs(boxed), axis=-1, keepdims=True)
+    ebits = jax.lax.bitcast_convert_type(amax, jnp.int32)
+    e = (((ebits >> 23) & 0xFF) - 127).astype(jnp.float32)
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+    # exact_pow2 + clamp to normal range (XLA exp2 inexact; FTZ), see ref.py.
+    step = exact_pow2(jnp.clip(e - m + 2.0, EXP_MIN, EXP_MAX))
+    maxmag = exact_pow2(m - 1.0) - 1.0
+    mag = jnp.clip(jnp.round(boxed / step), -maxmag, maxmag)
+    q = jnp.where(amax > 0.0, mag * step, 0.0).reshape(r, c)
+    return jnp.where(m >= PASSTHROUGH_BITS, t, q)
+
+
+def _qgemm_kernel(bx_ref, bw_ref, x_ref, w_ref, o_ref, *, box: int, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xq = _quant_boxed(x_ref[...], bx_ref[0, 0], box)  # (bm, bk): boxes on K
+    # w tile is (bk, bn); boxes must lie along K -> transpose, box, restore.
+    wq = _quant_boxed(w_ref[...].T, bw_ref[0, 0], box).T
+    o_ref[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def _pick(dim: int, pref: int) -> int:
+    """Largest divisor of ``dim`` that is <= pref (tile-size helper)."""
+    best = 1
+    for cand in range(1, min(dim, pref) + 1):
+        if dim % cand == 0:
+            best = cand
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bm", "bn", "bk"))
+def bfp_qgemm(
+    x: jax.Array,
+    w: jax.Array,
+    bits_x: jax.Array,
+    bits_w: jax.Array,
+    interpret: bool = True,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """``q(x) @ q(w)`` with BFP boxes along the contraction axis.
+
+    Requires ``x.shape = (M, K)``, ``w.shape = (K, N)``, ``K % BOX == 0``.
+    Block sizes are clipped to divisors of the problem (K blocks stay BOX
+    multiples).
+    """
+    (m, k), (k2, n) = x.shape, w.shape
+    assert k == k2 and k % BOX == 0, (x.shape, w.shape)
+    bm = _pick(m, bm)
+    bn = _pick(n, bn)
+    bk = _pick(k // BOX, max(1, bk // BOX)) * BOX
+    nk = k // bk
+    bx2 = jnp.asarray(bits_x, jnp.float32).reshape(1, 1)
+    bw2 = jnp.asarray(bits_w, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_qgemm_kernel, box=BOX, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(bx2, bw2, x, w)

@@ -1,0 +1,156 @@
+"""Pure-jnp reference oracles for the DSQ quantizers.
+
+These are the ground truth the Pallas kernels (bfp.py, qgemm.py) and the
+rust mirrors (rust/src/quant/) are validated against. The math is written
+so that a bit-exact rust implementation is possible:
+
+* shared/box exponents are extracted from IEEE-754 bit patterns
+  (``floor(log2(|x|))`` for normal floats) instead of ``log2`` — exact and
+  platform independent;
+* scales are powers of two computed with ``exp2`` of integer-valued floats
+  — exact in f32 for the exponent ranges we use;
+* rounding is round-half-to-even (``jnp.round`` / rust
+  ``f32::round_ties_even``).
+
+Conventions (MSFP-style Block Floating Point, Darvish Rouhani et al. 2020):
+
+* bounding box = ``BOX`` (16) consecutive elements along the last axis;
+* per box: shared exponent ``e = floor(log2(max|x|))`` clamped to the 8-bit
+  biased-exponent range ``[-126, 127]``;
+* each element keeps a sign + ``(m-1)``-bit magnitude: with ``m`` total
+  mantissa bits the quantization step is ``2^(e - m + 2)`` and magnitudes
+  clamp to ``2^(m-1) - 1``;
+* ``m >= 25`` (wider than f32's 24-bit significand) short-circuits to the
+  identity, which is how "32-bit"/fp32 rows are expressed at runtime;
+* all-zero boxes quantize to zero.
+
+Dynamic fixed point uses the same element rule with a single *per-tensor*
+exponent — its per-tensor (vs per-box) scaling is exactly the weakness the
+paper's Stashing(Fixed) rows expose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BOX = 16  # bounding-box size (elements sharing one exponent)
+EXP_BITS = 8  # shared-exponent width; gives the [-126, 127] clamp below
+EXP_MIN = -126.0
+EXP_MAX = 127.0
+PASSTHROUGH_BITS = 25.0  # m >= 25 cannot lose f32 information -> identity
+
+
+def floor_log2(x: jax.Array) -> jax.Array:
+    """floor(log2(x)) for x > 0, exact, via the IEEE-754 exponent field.
+
+    Subnormals (< 2^-126) are mapped to -127 which the callers treat like
+    zero (they clamp the shared exponent to EXP_MIN and the magnitudes all
+    round to 0 at any mantissa width we support).
+    """
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.int32)
+    e = ((bits >> 23) & 0xFF) - 127
+    return e.astype(jnp.float32)
+
+
+def exact_pow2(k: jax.Array) -> jax.Array:
+    """Exact 2^k for integer-valued f32 ``k`` via bit construction.
+
+    XLA's ``exp2`` is approximate (CPU lowers it through ``exp(k·ln2)``;
+    e.g. ``exp2(23.0)`` returns 8388603.5, 7 ulp off), which breaks the
+    bit-exactness contract with the rust mirror. Powers of two are instead
+    assembled directly in the exponent field, including the subnormal
+    range (k ≥ -149); k below that underflows to 0.
+    """
+    ki = jnp.clip(k, -200.0, 127.0).astype(jnp.int32)
+    normal = jax.lax.bitcast_convert_type((ki + 127) << 23, jnp.float32)
+    sub_shift = jnp.clip(ki + 149, 0, 30)
+    sub = jax.lax.bitcast_convert_type(
+        jnp.left_shift(jnp.int32(1), sub_shift), jnp.float32
+    )
+    return jnp.where(ki >= -126, normal, jnp.where(ki >= -149, sub, 0.0))
+
+
+def _quantize_with_exponent(x: jax.Array, e: jax.Array, m: jax.Array) -> jax.Array:
+    """Sign + (m-1)-bit magnitude quantization against shared exponent e.
+
+    ``e`` must broadcast against ``x``; ``m`` is a scalar (runtime) mantissa
+    width in bits. Returns the dequantized (fake-quantized) f32 values.
+    """
+    m = jnp.asarray(m, jnp.float32)
+    e = jnp.clip(e, EXP_MIN, EXP_MAX)
+    # Quantization step 2^(e - m + 2); max magnitude 2^(m-1) - 1 so that the
+    # largest representable value is ~2^(e+1), covering amax in [2^e, 2^(e+1)).
+    # exact_pow2, not exp2: XLA's exp2 is off by ulps (see its docstring).
+    # The step exponent is clamped to the normal-f32 range: XLA CPU runs
+    # with FTZ, so a subnormal step would flush to 0 (and real MSFP
+    # hardware has no subnormal support either).
+    step = exact_pow2(jnp.clip(e - m + 2.0, EXP_MIN, EXP_MAX))
+    maxmag = exact_pow2(m - 1.0) - 1.0
+    mag = jnp.round(x / step)
+    mag = jnp.clip(mag, -maxmag, maxmag)
+    return mag * step
+
+
+def bfp_quantize_ref(x: jax.Array, mbits) -> jax.Array:
+    """Block-floating-point fake quantization, boxes along the last axis.
+
+    The last axis is zero-padded to a multiple of BOX, boxed, quantized and
+    sliced back — matching the physical layout of an MSFP tensor.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.asarray(mbits, jnp.float32)
+    orig_shape = x.shape
+    n = x.shape[-1] if x.ndim else 1
+    flat = x.reshape(-1, n) if x.ndim else x.reshape(1, 1)
+    padded = flat.shape[-1]
+    pad = (-padded) % BOX
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    boxed = flat.reshape(flat.shape[0], -1, BOX)
+    amax = jnp.max(jnp.abs(boxed), axis=-1, keepdims=True)
+    e = floor_log2(amax)
+    q = _quantize_with_exponent(boxed, e, m)
+    q = jnp.where(amax > 0.0, q, 0.0)
+    q = q.reshape(flat.shape)
+    if pad:
+        q = q[:, :padded]
+    q = q.reshape(orig_shape)
+    return jnp.where(m >= PASSTHROUGH_BITS, x, q)
+
+
+def fixed_quantize_ref(x: jax.Array, bits) -> jax.Array:
+    """Dynamic per-tensor fixed-point fake quantization.
+
+    One shared exponent for the whole tensor (chosen from the global max),
+    sign + (bits-1)-bit magnitude. This is the strong variant of the 16-bit
+    fixed-point baseline used in on-device learning; its global scaling is
+    what makes aggressive widths fail on heavy-tailed tensors (Table 5).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    b = jnp.asarray(bits, jnp.float32)
+    amax = jnp.max(jnp.abs(x))
+    e = floor_log2(amax)
+    q = _quantize_with_exponent(x, e, b)
+    q = jnp.where(amax > 0.0, q, 0.0)
+    return jnp.where(b >= PASSTHROUGH_BITS, x, q)
+
+
+def select_quantize_ref(x: jax.Array, mode, bits) -> jax.Array:
+    """mode: 0 = identity (fp32), 1 = dynamic fixed point, 2 = BFP."""
+    mode = jnp.asarray(mode, jnp.float32)
+    qf = fixed_quantize_ref(x, bits)
+    qb = bfp_quantize_ref(x, bits)
+    return jnp.where(mode == 1.0, qf, jnp.where(mode == 2.0, qb, x))
+
+
+def qgemm_ref(x: jax.Array, w: jax.Array, mode, bx, bw) -> jax.Array:
+    """Quantize both operands, then matmul in f32 (wide accumulation).
+
+    BFP boxes lie along the contraction axis for BOTH operands (x's last
+    axis, w's first axis) — the MSFP hardware layout, so each dot product
+    consumes whole boxes. w is therefore boxed through its transpose.
+    """
+    xq = select_quantize_ref(x, mode, bx)
+    wq = select_quantize_ref(w.T, mode, bw).T
+    return xq @ wq

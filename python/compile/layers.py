@@ -1,0 +1,225 @@
+"""L2 building blocks: the DSQ dataflow (paper Figure 2) as custom-VJP ops.
+
+Every GEMM in the model goes through :func:`dsq_dot` (weights) or
+:func:`dsq_bmm` (activation×activation, i.e. attention). The custom VJP
+implements exactly the paper's four quantization points:
+
+* ``q0`` — both forward-GEMM operands are quantized before the multiply;
+* ``q1`` — the **stash**: the activations needed by the backward pass are
+  quantized at ``q1`` *in the forward pass* and only that version is kept
+  as a residual — the full-precision tensor is dead after the forward
+  GEMM, which is the whole point (DRAM traffic between the passes drops
+  to ``q1`` bits/element);
+* ``q2`` — the incoming gradient and the weight are (re-)quantized at
+  ``q2`` for the first backward GEMM (``dx = dy @ wᵀ``);
+* ``q3`` — the outgoing gradient ``dx`` is quantized at ``q3`` before it
+  is "written to DRAM" (returned), and the incoming ``dy`` is passed
+  through the (idempotent) ``q3`` quantizer to model that it was fetched
+  from DRAM in ``q3`` form. The weight-gradient GEMM therefore runs at
+  ``q1 × q3`` — matching the cost model's charging.
+
+The precision vector ``qcfg = [mode, q0, q1, q2, q3]`` is a *runtime* f32
+array: mode 0 = fp32 (identity), 1 = dynamic fixed point, 2 = BFP. Bits
+≥ 25 short-circuit to identity, so ``[0,32,32,32,32]``-style configs cost
+nothing numerically. BFP boxes always lie along the contraction axis of
+the GEMM that consumes the tensor (MSFP layout).
+
+Master weights and the optimizer state stay f32 (the paper quantizes
+GEMM operands and DRAM-resident intermediates, not the Adam state).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.bfp import bfp_quantize
+from .kernels.fixed import fixed_quantize
+
+# Pallas kernels are the default quantizer implementation (they lower into
+# the AOT HLO); DSQ_NO_PALLAS=1 switches to the jnp oracle (bit-identical,
+# used to A/B compile times and for fast python-side tests).
+_USE_PALLAS = os.environ.get("DSQ_NO_PALLAS", "0") != "1"
+
+# Which quantizer paths are compiled into the graph. "both" supports the
+# full runtime mode selector {0: fp32, 1: fixed, 2: bfp}; "bfp" / "fixed"
+# compile a single quantizer (mode >= 1 selects it), halving the number of
+# quantize subgraphs — XLA 0.5.1's CPU pipeline scales badly with the
+# subgraph count (~270 s vs ~100 s compile for the train step, DESIGN.md
+# §Perf), so aot.py exports per-quantizer *train* artifact variants and
+# the rust coordinator picks by schedule mode.
+_QUANTIZERS = os.environ.get("DSQ_QUANTIZERS", "both")
+
+
+def set_quantizers(which: str) -> None:
+    """Select which quantizer paths future traces compile ("both"/"bfp"/
+    "fixed"). Used by aot.py to emit per-variant train artifacts."""
+    global _QUANTIZERS
+    assert which in ("both", "bfp", "fixed"), which
+    _QUANTIZERS = which
+
+
+def _bfp(x, bits):
+    return bfp_quantize(x, bits) if _USE_PALLAS else ref.bfp_quantize_ref(x, bits)
+
+
+def _fixed(x, bits):
+    return fixed_quantize(x, bits) if _USE_PALLAS else ref.fixed_quantize_ref(x, bits)
+
+
+def quantize(x: jax.Array, mode: jax.Array, bits: jax.Array) -> jax.Array:
+    """Runtime-selected fake quantization; boxes along the last axis."""
+    if _QUANTIZERS == "bfp":
+        return jnp.where(mode >= 1.0, _bfp(x, bits), x)
+    if _QUANTIZERS == "fixed":
+        return jnp.where(mode >= 1.0, _fixed(x, bits), x)
+    qf = _fixed(x, bits)
+    qb = _bfp(x, bits)
+    return jnp.where(mode == 1.0, qf, jnp.where(mode == 2.0, qb, x))
+
+
+def quantize_contract(x: jax.Array, mode: jax.Array, bits: jax.Array, axis: int) -> jax.Array:
+    """Quantize with BFP boxes along ``axis`` (the contraction axis)."""
+    if axis in (-1, x.ndim - 1):
+        return quantize(x, mode, bits)
+    xs = jnp.swapaxes(x, axis, -1)
+    return jnp.swapaxes(quantize(xs, mode, bits), axis, -1)
+
+
+# --------------------------------------------------------------- dsq_dot
+
+
+@jax.custom_vjp
+def dsq_dot(x: jax.Array, w: jax.Array, qcfg: jax.Array) -> jax.Array:
+    """Quantized ``x @ w`` for a weight GEMM; x: (M, K), w: (K, N)."""
+    mode, q0 = qcfg[0], qcfg[1]
+    xq = quantize(x, mode, q0)  # boxes along K
+    wq = quantize_contract(w, mode, q0, 0)  # boxes along K
+    return xq @ wq
+
+
+def _dsq_dot_fwd(x, w, qcfg):
+    mode, q0, q1 = qcfg[0], qcfg[1], qcfg[2]
+    xq = quantize(x, mode, q0)
+    wq = quantize_contract(w, mode, q0, 0)
+    y = xq @ wq
+    # THE stash: x survives to the backward pass only in q1 form.
+    xs = quantize(x, mode, q1)
+    return y, (xs, w, qcfg)
+
+
+def _dsq_dot_bwd(res, dy):
+    xs, w, qcfg = res
+    mode, q2, q3 = qcfg[0], qcfg[3], qcfg[4]
+    # dy was written to DRAM at q3 by the consumer layer; model the fetch.
+    dy = quantize(dy, mode, q3)
+    # GEMM 2: dx = dy @ w^T, contraction over N -> boxes along N.
+    dyq = quantize(dy, mode, q2)
+    wq = quantize(w, mode, q2)  # boxes along N (w's last axis)
+    dx = dyq @ wq.T
+    dx = quantize(dx, mode, q3)  # written back to DRAM at q3
+    # GEMM 3: dw = xs^T @ dy, runs on the q1 stash and the q3 gradient.
+    dw = xs.T @ dy
+    return dx, dw, jnp.zeros_like(qcfg)
+
+
+dsq_dot.defvjp(_dsq_dot_fwd, _dsq_dot_bwd)
+
+
+# --------------------------------------------------------------- dsq_bmm
+
+
+@jax.custom_vjp
+def dsq_bmm(a: jax.Array, b: jax.Array, qcfg: jax.Array) -> jax.Array:
+    """Quantized batched ``a @ b`` (attention GEMMs).
+
+    a: (..., M, K), b: (..., K, N), identical leading dims. Both operands
+    are activations, so BOTH are stashed at q1 for the backward pass.
+    """
+    mode, q0 = qcfg[0], qcfg[1]
+    aq = quantize(a, mode, q0)
+    bq = quantize_contract(b, mode, q0, b.ndim - 2)
+    return aq @ bq
+
+
+def _dsq_bmm_fwd(a, b, qcfg):
+    mode, q0, q1 = qcfg[0], qcfg[1], qcfg[2]
+    aq = quantize(a, mode, q0)
+    bq = quantize_contract(b, mode, q0, b.ndim - 2)
+    y = aq @ bq
+    a_s = quantize(a, mode, q1)
+    b_s = quantize_contract(b, mode, q1, b.ndim - 2)
+    return y, (a_s, b_s, qcfg)
+
+
+def _dsq_bmm_bwd(res, dy):
+    a_s, b_s, qcfg = res
+    mode, q2, q3 = qcfg[0], qcfg[3], qcfg[4]
+    dy = quantize(dy, mode, q3)
+    dyq = quantize(dy, mode, q2)
+    # da = dy @ b^T (contraction over N): b_s is the q1 DRAM copy.
+    da = dyq @ jnp.swapaxes(b_s, -1, -2)
+    da = quantize(da, mode, q3)
+    # db = a^T @ dy (contraction over M).
+    db = jnp.swapaxes(a_s, -1, -2) @ dy
+    db = quantize_contract(db, mode, q3, db.ndim - 2)
+    return da, db, jnp.zeros_like(qcfg)
+
+
+dsq_bmm.defvjp(_dsq_bmm_fwd, _dsq_bmm_bwd)
+
+
+# --------------------------------------------------------------- layers
+
+
+def dsq_linear(x: jax.Array, w: jax.Array, b: jax.Array, qcfg: jax.Array) -> jax.Array:
+    """DSQ linear layer over the last axis of x (leading axes flattened)."""
+    lead = x.shape[:-1]
+    y = dsq_dot(x.reshape(-1, x.shape[-1]), w, qcfg)
+    return y.reshape(*lead, w.shape[-1]) + b
+
+
+def layer_norm(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """f32 LayerNorm (normalization ops are not quantized — paper §3)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def multi_head_attention(
+    q_in: jax.Array,
+    kv_in: jax.Array,
+    p: dict,
+    prefix: str,
+    nheads: int,
+    mask: jax.Array,
+    qcfg: jax.Array,
+) -> jax.Array:
+    """DSQ multi-head attention; all four projections + both attention
+    GEMMs (QKᵀ and AV) run through the DSQ flow.
+
+    mask: additive (broadcastable to (B, H, Tq, Tk)), 0 = keep, -inf = drop.
+    """
+    B, Tq, D = q_in.shape
+    Tk = kv_in.shape[1]
+    dh = D // nheads
+    q = dsq_linear(q_in, p[f"{prefix}.wq"], p[f"{prefix}.bq"], qcfg)
+    k = dsq_linear(kv_in, p[f"{prefix}.wk"], p[f"{prefix}.bk"], qcfg)
+    v = dsq_linear(kv_in, p[f"{prefix}.wv"], p[f"{prefix}.bv"], qcfg)
+    q = q.reshape(B, Tq, nheads, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(B, Tk, nheads, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(B, Tk, nheads, dh).transpose(0, 2, 1, 3)
+    scores = dsq_bmm(q, jnp.swapaxes(k, -1, -2), qcfg) / jnp.sqrt(float(dh))
+    scores = scores + mask
+    probs = jax.nn.softmax(scores, axis=-1)  # f32 softmax
+    ctx = dsq_bmm(probs, v, qcfg)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(B, Tq, D)
+    return dsq_linear(ctx, p[f"{prefix}.wo"], p[f"{prefix}.bo"], qcfg)
+
+
+def ffn(x: jax.Array, p: dict, prefix: str, qcfg: jax.Array) -> jax.Array:
+    h = jax.nn.relu(dsq_linear(x, p[f"{prefix}.w1"], p[f"{prefix}.b1"], qcfg))
+    return dsq_linear(h, p[f"{prefix}.w2"], p[f"{prefix}.b2"], qcfg)

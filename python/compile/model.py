@@ -1,0 +1,286 @@
+"""L2: the paper's models, built on the DSQ ops in layers.py.
+
+Two model families, matching the paper's evaluation:
+
+* :class:`Seq2SeqConfig` — a pre-LN encoder–decoder transformer
+  (Vaswani et al.), the "6-layer transformer" used for IWSLT/WMT
+  translation, here dimension-scaled to the testbed (DESIGN.md §4) —
+  the *architecture* (pre-LN blocks, MHA, label-smoothed CE ε=0.1,
+  Adam β=(0.9,0.98), tied output embedding) is kept;
+* classifier (:class:`ClassifierConfig`) — an encoder + mean-pool + MLP
+  head standing in for the RoBERTa-base GLUE fine-tuning runs.
+
+All GEMMs (projections, attention, FFN, logits) run the DSQ custom-VJP
+flow; LayerNorm / softmax / embedding-gather / loss stay f32 (paper §3
+quantizes GEMMs and the fwd→bwd stash only).
+
+Conventions: token 0 = PAD, 1 = BOS, 2 = EOS. Masks are derived in-graph
+from the tokens, so artifacts take only token tensors as input.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import adam
+from .layers import dsq_dot, dsq_linear, ffn, layer_norm, multi_head_attention
+
+PAD, BOS, EOS = 0, 1, 2
+NEG_INF = -1e9
+LABEL_SMOOTHING = 0.1
+
+FP32_QCFG = (0.0, 32.0, 32.0, 32.0, 32.0)
+
+
+@dataclass(frozen=True)
+class Seq2SeqConfig:
+    vocab: int = 256
+    d_model: int = 128
+    nheads: int = 4
+    d_ff: int = 256
+    enc_layers: int = 2
+    dec_layers: int = 2
+    src_len: int = 24
+    tgt_len: int = 24
+    batch: int = 16
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.nheads
+
+
+@dataclass(frozen=True)
+class ClassifierConfig:
+    vocab: int = 256
+    d_model: int = 128
+    nheads: int = 4
+    d_ff: int = 256
+    layers: int = 2
+    seq_len: int = 48
+    nclasses: int = 3
+    batch: int = 16
+
+
+# ------------------------------------------------------------------ init
+
+
+def _dense_init(key, fan_in, fan_out):
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale
+
+
+def _attn_params(keys, prefix: str, d: int) -> dict:
+    p = {}
+    for i, name in enumerate(("q", "k", "v", "o")):
+        p[f"{prefix}.w{name}"] = _dense_init(keys[i], d, d)
+        p[f"{prefix}.b{name}"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def _block_common(key, prefix: str, d: int, d_ff: int) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        f"{prefix}.ln1.g": jnp.ones((d,), jnp.float32),
+        f"{prefix}.ln1.b": jnp.zeros((d,), jnp.float32),
+        f"{prefix}.ln2.g": jnp.ones((d,), jnp.float32),
+        f"{prefix}.ln2.b": jnp.zeros((d,), jnp.float32),
+        f"{prefix}.ffn.w1": _dense_init(ks[0], d, d_ff),
+        f"{prefix}.ffn.b1": jnp.zeros((d_ff,), jnp.float32),
+        f"{prefix}.ffn.w2": _dense_init(ks[1], d_ff, d),
+        f"{prefix}.ffn.b2": jnp.zeros((d,), jnp.float32),
+    }
+    p.update(_attn_params(jax.random.split(ks[2], 4), f"{prefix}.attn", d))
+    return p
+
+
+def init_seq2seq(cfg: Seq2SeqConfig, seed) -> dict:
+    """Initialize all parameters from a (runtime) integer seed."""
+    key = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+    n_blocks = cfg.enc_layers + cfg.dec_layers
+    keys = jax.random.split(key, n_blocks + 4)
+    p = {
+        "src_emb": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "tgt_emb": jax.random.normal(keys[1], (cfg.vocab, cfg.d_model)) * 0.02,
+        "src_pos": jax.random.normal(keys[2], (cfg.src_len, cfg.d_model)) * 0.02,
+        "tgt_pos": jax.random.normal(keys[3], (cfg.tgt_len, cfg.d_model)) * 0.02,
+        "enc_ln.g": jnp.ones((cfg.d_model,), jnp.float32),
+        "enc_ln.b": jnp.zeros((cfg.d_model,), jnp.float32),
+        "dec_ln.g": jnp.ones((cfg.d_model,), jnp.float32),
+        "dec_ln.b": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    for i in range(cfg.enc_layers):
+        p.update(_block_common(keys[4 + i], f"enc{i}", cfg.d_model, cfg.d_ff))
+    for i in range(cfg.dec_layers):
+        k = keys[4 + cfg.enc_layers + i]
+        p.update(_block_common(k, f"dec{i}", cfg.d_model, cfg.d_ff))
+        kx = jax.random.split(jax.random.fold_in(k, 7), 4)
+        p.update(_attn_params(kx, f"dec{i}.xattn", cfg.d_model))
+        p[f"dec{i}.ln3.g"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"dec{i}.ln3.b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def init_classifier(cfg: ClassifierConfig, seed) -> dict:
+    key = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+    keys = jax.random.split(key, cfg.layers + 4)
+    p = {
+        "emb": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02,
+        "pos": jax.random.normal(keys[1], (cfg.seq_len, cfg.d_model)) * 0.02,
+        "enc_ln.g": jnp.ones((cfg.d_model,), jnp.float32),
+        "enc_ln.b": jnp.zeros((cfg.d_model,), jnp.float32),
+        "head.w1": _dense_init(keys[2], cfg.d_model, cfg.d_model),
+        "head.b1": jnp.zeros((cfg.d_model,), jnp.float32),
+        "head.w2": _dense_init(keys[3], cfg.d_model, cfg.nclasses),
+        "head.b2": jnp.zeros((cfg.nclasses,), jnp.float32),
+    }
+    for i in range(cfg.layers):
+        p.update(_block_common(keys[4 + i - cfg.layers], f"enc{i}", cfg.d_model, cfg.d_ff))
+    return p
+
+
+# -------------------------------------------------------- encoder/decoder
+
+
+def _enc_block(x, p, prefix, nheads, mask, qcfg):
+    h = layer_norm(x, p[f"{prefix}.ln1.g"], p[f"{prefix}.ln1.b"])
+    x = x + multi_head_attention(h, h, p, f"{prefix}.attn", nheads, mask, qcfg)
+    h = layer_norm(x, p[f"{prefix}.ln2.g"], p[f"{prefix}.ln2.b"])
+    return x + ffn(h, p, f"{prefix}.ffn", qcfg)
+
+
+def encode(p: dict, cfg: Seq2SeqConfig, src: jax.Array, qcfg: jax.Array) -> jax.Array:
+    """src: (B, S) int32 -> (B, S, D) encoder states (final LN applied)."""
+    pad_mask = jnp.where(src == PAD, NEG_INF, 0.0)[:, None, None, :]
+    x = p["src_emb"][src] + p["src_pos"][None, :, :]
+    for i in range(cfg.enc_layers):
+        x = _enc_block(x, p, f"enc{i}", cfg.nheads, pad_mask, qcfg)
+    return layer_norm(x, p["enc_ln.g"], p["enc_ln.b"])
+
+
+def decode_states(
+    p: dict,
+    cfg: Seq2SeqConfig,
+    enc: jax.Array,
+    src: jax.Array,
+    tgt_in: jax.Array,
+    qcfg: jax.Array,
+) -> jax.Array:
+    """tgt_in: (B, T) int32 -> (B, T, V) logits (tied output embedding)."""
+    T = cfg.tgt_len
+    causal = jnp.where(jnp.tril(jnp.ones((T, T), bool)), 0.0, NEG_INF)[None, None, :, :]
+    tgt_pad = jnp.where(tgt_in == PAD, NEG_INF, 0.0)[:, None, None, :]
+    self_mask = causal + tgt_pad
+    cross_mask = jnp.where(src == PAD, NEG_INF, 0.0)[:, None, None, :]
+    x = p["tgt_emb"][tgt_in] + p["tgt_pos"][None, :, :]
+    for i in range(cfg.dec_layers):
+        h = layer_norm(x, p[f"dec{i}.ln1.g"], p[f"dec{i}.ln1.b"])
+        x = x + multi_head_attention(h, h, p, f"dec{i}.attn", cfg.nheads, self_mask, qcfg)
+        h = layer_norm(x, p[f"dec{i}.ln3.g"], p[f"dec{i}.ln3.b"])
+        x = x + multi_head_attention(h, enc, p, f"dec{i}.xattn", cfg.nheads, cross_mask, qcfg)
+        h = layer_norm(x, p[f"dec{i}.ln2.g"], p[f"dec{i}.ln2.b"])
+        x = x + ffn(h, p, f"dec{i}.ffn", qcfg)
+    x = layer_norm(x, p["dec_ln.g"], p["dec_ln.b"])
+    # Tied output projection: logits = x @ tgt_embᵀ, as a DSQ GEMM.
+    B = x.shape[0]
+    logits = dsq_dot(x.reshape(B * T, -1), p["tgt_emb"].T, qcfg)
+    return logits.reshape(B, T, cfg.vocab)
+
+
+# ------------------------------------------------------------------ losses
+
+
+def smoothed_ce(logits: jax.Array, targets: jax.Array, vocab: int):
+    """Label-smoothed CE (ε=0.1), PAD-masked. Returns (loss_sum, ntok)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    conf = 1.0 - LABEL_SMOOTHING
+    low = LABEL_SMOOTHING / (vocab - 1)
+    onehot = jax.nn.one_hot(targets, vocab, dtype=jnp.float32)
+    soft = onehot * conf + (1.0 - onehot) * low
+    nll = -jnp.sum(soft * logp, axis=-1)
+    mask = (targets != PAD).astype(jnp.float32)
+    return jnp.sum(nll * mask), jnp.sum(mask)
+
+
+def nmt_loss(p, cfg: Seq2SeqConfig, src, tgt_in, tgt_out, qcfg):
+    enc = encode(p, cfg, src, qcfg)
+    logits = decode_states(p, cfg, enc, src, tgt_in, qcfg)
+    loss_sum, ntok = smoothed_ce(logits, tgt_out, cfg.vocab)
+    return loss_sum / jnp.maximum(ntok, 1.0), (loss_sum, ntok, logits)
+
+
+# ------------------------------------------------------------------- steps
+
+
+def nmt_train_step(p, m, v, step, src, tgt_in, tgt_out, qcfg, lr, cfg: Seq2SeqConfig):
+    """One full training step: DSQ fwd + bwd + Adam. Returns new state."""
+    (loss, _aux), grads = jax.value_and_grad(
+        lambda pp: nmt_loss(pp, cfg, src, tgt_in, tgt_out, qcfg), has_aux=True
+    )(p)
+    p2, m2, v2 = adam.update(p, grads, m, v, step, lr)
+    return p2, m2, v2, loss
+
+
+def nmt_eval_step(p, src, tgt_in, tgt_out, cfg: Seq2SeqConfig):
+    """Teacher-forced eval in fp32: (loss_sum, ncorrect, ntok)."""
+    qcfg = jnp.asarray(FP32_QCFG, jnp.float32)
+    _, (loss_sum, ntok, logits) = nmt_loss(p, cfg, src, tgt_in, tgt_out, qcfg)
+    pred = jnp.argmax(logits, axis=-1)
+    mask = (tgt_out != PAD).astype(jnp.float32)
+    ncorrect = jnp.sum((pred == tgt_out).astype(jnp.float32) * mask)
+    return loss_sum, ncorrect, ntok
+
+
+def nmt_greedy_decode(p, src, cfg: Seq2SeqConfig):
+    """Greedy decode (fp32): (B, S) int32 -> (B, T) generated tokens."""
+    qcfg = jnp.asarray(FP32_QCFG, jnp.float32)
+    enc = encode(p, cfg, src, qcfg)
+    B, T = src.shape[0], cfg.tgt_len
+
+    def body(t, tgt):
+        logits = decode_states(p, cfg, enc, src, tgt, qcfg)
+        nxt = jnp.argmax(logits[:, t, :], axis=-1).astype(jnp.int32)
+        return jax.lax.dynamic_update_slice(tgt, nxt[:, None], (0, t + 1))
+
+    tgt0 = jnp.full((B, T), PAD, jnp.int32).at[:, 0].set(BOS)
+    return jax.lax.fori_loop(0, T - 1, body, tgt0)
+
+
+# --------------------------------------------------------------- classifier
+
+
+def classifier_logits(p, cfg: ClassifierConfig, tokens, qcfg):
+    pad_mask = jnp.where(tokens == PAD, NEG_INF, 0.0)[:, None, None, :]
+    x = p["emb"][tokens] + p["pos"][None, :, :]
+    for i in range(cfg.layers):
+        x = _enc_block(x, p, f"enc{i}", cfg.nheads, pad_mask, qcfg)
+    x = layer_norm(x, p["enc_ln.g"], p["enc_ln.b"])
+    keep = (tokens != PAD).astype(jnp.float32)[:, :, None]
+    pooled = jnp.sum(x * keep, axis=1) / jnp.maximum(jnp.sum(keep, axis=1), 1.0)
+    h = jax.nn.relu(dsq_linear(pooled, p["head.w1"], p["head.b1"], qcfg))
+    return dsq_linear(h, p["head.w2"], p["head.b2"], qcfg)
+
+
+def cls_loss(p, cfg: ClassifierConfig, tokens, labels, qcfg):
+    logits = classifier_logits(p, cfg, tokens, qcfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll), logits
+
+
+def cls_train_step(p, m, v, step, tokens, labels, qcfg, lr, cfg: ClassifierConfig):
+    (loss, _), grads = jax.value_and_grad(
+        lambda pp: cls_loss(pp, cfg, tokens, labels, qcfg), has_aux=True
+    )(p)
+    p2, m2, v2 = adam.update(p, grads, m, v, step, lr)
+    return p2, m2, v2, loss
+
+
+def cls_eval_step(p, tokens, labels, cfg: ClassifierConfig):
+    qcfg = jnp.asarray(FP32_QCFG, jnp.float32)
+    loss, logits = cls_loss(p, cfg, tokens, labels, qcfg)
+    ncorrect = jnp.sum((jnp.argmax(logits, -1) == labels).astype(jnp.float32))
+    n = jnp.full((), float(labels.shape[0]), jnp.float32)
+    return loss, ncorrect, n

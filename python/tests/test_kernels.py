@@ -1,0 +1,240 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Bit-equality is required for the quantizers (same ops, same order); the
+fused qgemm is allclose against quantize-then-dot (different accumulation
+order is allowed).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.bfp import bfp_quantize, pick_block_rows
+from compile.kernels.fixed import fixed_quantize
+from compile.kernels.qgemm import bfp_qgemm
+
+RNG = np.random.default_rng(2023)
+
+
+def rand(shape, scale_lo=-8, scale_hi=8):
+    return (
+        RNG.standard_normal(shape) * np.exp(RNG.uniform(scale_lo, scale_hi, shape))
+    ).astype(np.float32)
+
+
+# ---------------------------------------------------------------- BFP
+
+
+@pytest.mark.parametrize("shape", [(1, 16), (4, 16), (3, 24), (8, 128), (2, 3, 40), (7,), (5, 1)])
+@pytest.mark.parametrize("mbits", [2.0, 3.0, 4.0, 8.0, 12.0, 16.0, 24.0, 25.0, 32.0])
+def test_bfp_matches_ref(shape, mbits):
+    x = rand(shape)
+    got = np.asarray(bfp_quantize(x, mbits))
+    want = np.asarray(ref.bfp_quantize_ref(x, mbits))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_bfp_passthrough_at_high_bits():
+    x = rand((4, 32))
+    np.testing.assert_array_equal(np.asarray(bfp_quantize(x, 25.0)), x)
+    np.testing.assert_array_equal(np.asarray(bfp_quantize(x, 32.0)), x)
+
+
+def test_bfp_idempotent():
+    x = rand((8, 64))
+    for m in [2.0, 4.0, 8.0, 16.0]:
+        q1 = np.asarray(bfp_quantize(x, m))
+        q2 = np.asarray(bfp_quantize(q1, m))
+        np.testing.assert_array_equal(q1, q2)
+
+
+def test_bfp_zero_box():
+    x = np.zeros((2, 32), np.float32)
+    np.testing.assert_array_equal(np.asarray(bfp_quantize(x, 4.0)), x)
+
+
+def test_bfp_preserves_sign_and_scale():
+    x = rand((16, 64))
+    q = np.asarray(bfp_quantize(x, 8.0))
+    # max relative error within a box is bounded by one quantization step
+    # relative to the box max: step/|x| <= 2^(2-m) * box_amax/|x|; at the box
+    # max itself the relative error is <= 2^(1-m).
+    boxed_x = x.reshape(16, 4, 16)
+    boxed_q = q.reshape(16, 4, 16)
+    amax = np.abs(boxed_x).max(-1, keepdims=True)
+    err = np.abs(boxed_q - boxed_x)
+    assert (err <= amax * 2.0 ** (2 - 8.0) + 1e-30).all()
+
+
+def test_bfp_respects_box_structure():
+    # Two boxes with wildly different magnitudes: the small box must keep
+    # resolution (per-box exponent), unlike per-tensor fixed point.
+    x = np.concatenate(
+        [np.full((1, 16), 1000.0, np.float32), np.full((1, 16), 0.001, np.float32)], axis=1
+    )
+    q = np.asarray(bfp_quantize(x, 4.0))
+    assert abs(q[0, 20] - 0.001) / 0.001 < 0.25  # small box survives
+    qf = np.asarray(fixed_quantize(x, 4.0))
+    assert qf[0, 20] == 0.0  # per-tensor fixed point flushes it
+
+
+def test_pick_block_rows_divides():
+    for rows in [1, 2, 7, 24, 128, 384]:
+        for cols in [16, 128, 4096]:
+            br = pick_block_rows(rows, cols)
+            assert rows % br == 0 and br >= 1
+            assert br * cols * 8 <= 4 * 1024 * 1024 or br == 1
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.integers(1, 24),
+    cols=st.integers(1, 80),
+    mbits=st.sampled_from([2.0, 3.0, 5.0, 8.0, 13.0, 24.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bfp_hypothesis_sweep(rows, cols, mbits, seed):
+    r = np.random.default_rng(seed)
+    x = (r.standard_normal((rows, cols)) * np.exp(r.uniform(-20, 20, (rows, cols)))).astype(
+        np.float32
+    )
+    got = np.asarray(bfp_quantize(x, mbits))
+    want = np.asarray(ref.bfp_quantize_ref(x, mbits))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    vals=st.lists(
+        st.floats(
+            min_value=float(np.float32(-1e30)),
+            max_value=float(np.float32(1e30)),
+            allow_nan=False,
+            allow_infinity=False,
+            width=32,
+        ),
+        min_size=1,
+        max_size=48,
+    ),
+    mbits=st.sampled_from([2.0, 4.0, 8.0, 16.0]),
+)
+def test_bfp_hypothesis_adversarial_values(vals, mbits):
+    x = np.asarray(vals, np.float32).reshape(1, -1)
+    got = np.asarray(bfp_quantize(x, mbits))
+    want = np.asarray(ref.bfp_quantize_ref(x, mbits))
+    np.testing.assert_array_equal(got, want)
+    # quantization never inflates the box max beyond one step
+    assert np.isfinite(got).all()
+
+
+# ---------------------------------------------------------------- fixed
+
+
+@pytest.mark.parametrize("shape", [(1, 16), (4, 32), (3, 24), (2, 3, 8)])
+@pytest.mark.parametrize("bits", [4.0, 8.0, 16.0, 25.0])
+def test_fixed_matches_ref(shape, bits):
+    x = rand(shape, -4, 4)
+    got = np.asarray(fixed_quantize(x, bits))
+    want = np.asarray(ref.fixed_quantize_ref(x, bits))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fixed_idempotent():
+    x = rand((8, 16), -2, 2)
+    for b in [4.0, 8.0, 16.0]:
+        q1 = np.asarray(fixed_quantize(x, b))
+        q2 = np.asarray(fixed_quantize(q1, b))
+        np.testing.assert_array_equal(q1, q2)
+
+
+def test_fixed_zero_tensor():
+    x = np.zeros((3, 16), np.float32)
+    np.testing.assert_array_equal(np.asarray(fixed_quantize(x, 8.0)), x)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(1, 16),
+    cols=st.integers(1, 40),
+    bits=st.sampled_from([2.0, 4.0, 8.0, 16.0, 24.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fixed_hypothesis_sweep(rows, cols, bits, seed):
+    r = np.random.default_rng(seed)
+    x = (r.standard_normal((rows, cols)) * np.exp(r.uniform(-12, 12, (rows, cols)))).astype(
+        np.float32
+    )
+    got = np.asarray(fixed_quantize(x, bits))
+    want = np.asarray(ref.fixed_quantize_ref(x, bits))
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------- select
+
+
+@pytest.mark.parametrize("mode,bits", [(0.0, 4.0), (1.0, 8.0), (2.0, 4.0)])
+def test_select_quantize_modes(mode, bits):
+    x = rand((4, 32))
+    got = np.asarray(ref.select_quantize_ref(x, mode, bits))
+    if mode == 0.0:
+        np.testing.assert_array_equal(got, x)
+    elif mode == 1.0:
+        np.testing.assert_array_equal(got, np.asarray(ref.fixed_quantize_ref(x, bits)))
+    else:
+        np.testing.assert_array_equal(got, np.asarray(ref.bfp_quantize_ref(x, bits)))
+
+
+# ---------------------------------------------------------------- qgemm
+
+
+@pytest.mark.parametrize("mkn", [(8, 32, 8), (16, 128, 24), (64, 256, 64), (24, 48, 96)])
+@pytest.mark.parametrize("bits", [(2.0, 2.0), (4.0, 4.0), (8.0, 16.0), (25.0, 25.0)])
+def test_qgemm_matches_ref(mkn, bits):
+    m, k, n = mkn
+    bx, bw = bits
+    x = rand((m, k), -4, 4)
+    w = rand((k, n), -4, 4)
+    got = np.asarray(bfp_qgemm(x, w, bx, bw))
+    want = np.asarray(ref.qgemm_ref(x, w, 2.0, bx, bw))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5 * max(1.0, np.abs(want).max()))
+
+
+def test_qgemm_tiling_invariance():
+    # Tile-local quantization must equal whole-tensor quantization because
+    # boxes never straddle K tiles.
+    x = rand((32, 256), -3, 3)
+    w = rand((256, 32), -3, 3)
+    a = np.asarray(bfp_qgemm(x, w, 4.0, 4.0, bm=32, bn=32, bk=256))
+    b = np.asarray(bfp_qgemm(x, w, 4.0, 4.0, bm=8, bn=8, bk=64))
+    c = np.asarray(bfp_qgemm(x, w, 4.0, 4.0, bm=16, bn=16, bk=16))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-4)
+    np.testing.assert_allclose(a, c, rtol=1e-6, atol=1e-4)
+
+
+def test_qgemm_passthrough_is_plain_matmul():
+    x = rand((16, 64), -2, 2)
+    w = rand((64, 16), -2, 2)
+    got = np.asarray(bfp_qgemm(x, w, 25.0, 25.0))
+    np.testing.assert_allclose(got, x @ w, rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 12),
+    kboxes=st.integers(1, 6),
+    n=st.integers(1, 12),
+    bx=st.sampled_from([2.0, 4.0, 8.0]),
+    bw=st.sampled_from([2.0, 4.0, 8.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qgemm_hypothesis_sweep(m, kboxes, n, bx, bw, seed):
+    r = np.random.default_rng(seed)
+    k = kboxes * 16
+    x = r.standard_normal((m, k)).astype(np.float32)
+    w = r.standard_normal((k, n)).astype(np.float32)
+    got = np.asarray(bfp_qgemm(x, w, bx, bw))
+    want = np.asarray(ref.qgemm_ref(x, w, 2.0, bx, bw))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4 * max(1.0, np.abs(want).max()))

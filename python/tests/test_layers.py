@@ -1,0 +1,180 @@
+"""L2 DSQ-flow correctness: the custom VJP implements paper Figure 2.
+
+Verifies, against hand-computed compositions of the ref quantizers, that
+each of the four quantization points (q0 fwd GEMM, q1 stash, q2 first
+backward GEMM, q3 gradient output) is applied exactly where the paper
+puts it.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.layers import dsq_bmm, dsq_dot, quantize_contract
+
+RNG = np.random.default_rng(7)
+
+
+def rand(shape, lo=-3, hi=3):
+    return (RNG.standard_normal(shape) * np.exp(RNG.uniform(lo, hi, shape))).astype(np.float32)
+
+
+def qcfg(mode, q0, q1, q2, q3):
+    return jnp.array([mode, q0, q1, q2, q3], jnp.float32)
+
+
+FP32 = qcfg(0, 32, 32, 32, 32)
+
+
+# ------------------------------------------------------------- forward
+
+
+def test_dot_fp32_is_plain_matmul():
+    x, w = rand((8, 32)), rand((32, 16))
+    got = np.asarray(dsq_dot(x, w, FP32))
+    # XLA vs numpy accumulation order -> small relative noise is expected.
+    np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_dot_fwd_quantizes_at_q0():
+    x, w = rand((8, 32)), rand((32, 16))
+    c = qcfg(2, 4, 2, 8, 16)
+    got = np.asarray(dsq_dot(x, w, c))
+    xq = ref.bfp_quantize_ref(x, 4.0)
+    wq = ref.bfp_quantize_ref(w.T, 4.0).T  # boxes along K
+    np.testing.assert_allclose(got, np.asarray(xq @ wq), rtol=1e-6, atol=1e-6)
+
+
+def test_dot_fixed_mode():
+    x, w = rand((4, 16)), rand((16, 8))
+    c = qcfg(1, 8, 8, 8, 16)
+    got = np.asarray(dsq_dot(x, w, c))
+    xq = ref.fixed_quantize_ref(x, 8.0)
+    wq = ref.fixed_quantize_ref(w.T, 8.0).T
+    np.testing.assert_allclose(got, np.asarray(xq @ wq), rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------- backward
+
+
+def _dot_grads(x, w, c, gscale=1.0):
+    def f(x, w):
+        return jnp.sum(dsq_dot(x, w, c) * gscale)
+
+    return jax.grad(f, argnums=(0, 1))(x, w)
+
+
+def test_dot_fp32_grads_match_plain():
+    x, w = rand((8, 32)), rand((32, 16))
+    dx, dw = _dot_grads(x, w, FP32)
+    dy = np.ones((8, 16), np.float32)
+    np.testing.assert_allclose(np.asarray(dx), dy @ w.T, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw), x.T @ dy, rtol=1e-5)
+
+
+def test_dot_backward_quantization_points():
+    """dx must equal q3(q2(dy) @ q2(w)ᵀ); dw must equal q1(x)ᵀ @ q3(dy)."""
+    x, w = rand((8, 32)), rand((32, 16))
+    q0, q1, q2, q3 = 16.0, 4.0, 4.0, 16.0
+    c = qcfg(2, q0, q1, q2, q3)
+    # Loss = sum(y * r) gives dy = r, a non-trivial upstream gradient.
+    r = rand((8, 16), -1, 1)
+
+    def f(x, w):
+        return jnp.sum(dsq_dot(x, w, c) * r)
+
+    dx, dw = jax.grad(f, argnums=(0, 1))(x, w)
+
+    dy = ref.bfp_quantize_ref(r, q3)  # fetched from DRAM at q3
+    dyq = ref.bfp_quantize_ref(dy, q2)
+    wq = ref.bfp_quantize_ref(w, q2)  # boxes along N
+    dx_want = ref.bfp_quantize_ref(dyq @ wq.T, q3)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_want), rtol=1e-6, atol=1e-6)
+
+    xs = ref.bfp_quantize_ref(x, q1)  # the stash
+    dw_want = xs.T @ dy
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_want), rtol=1e-6, atol=1e-6)
+
+
+def test_dot_stash_is_aggressive():
+    """q1 ≪ q0: the weight gradient must be computed from the LOW-precision
+    stash even though the forward pass used high precision."""
+    x, w = rand((16, 32)), rand((32, 16))
+    c_hi_stash = qcfg(2, 16, 16, 16, 16)
+    c_lo_stash = qcfg(2, 16, 2, 16, 16)
+    _, dw_hi = _dot_grads(x, w, c_hi_stash)
+    _, dw_lo = _dot_grads(x, w, c_lo_stash)
+    # Different stashes -> different dw; fwd outputs identical.
+    y_hi = np.asarray(dsq_dot(x, w, c_hi_stash))
+    y_lo = np.asarray(dsq_dot(x, w, c_lo_stash))
+    np.testing.assert_allclose(y_hi, y_lo, rtol=1e-6)
+    assert not np.allclose(np.asarray(dw_hi), np.asarray(dw_lo))
+
+
+def test_dot_qcfg_gets_zero_grad():
+    x, w = rand((4, 16)), rand((16, 8))
+    c = qcfg(2, 8, 4, 4, 16)
+    g = jax.grad(lambda cc: jnp.sum(dsq_dot(x, w, cc)))(c)
+    np.testing.assert_array_equal(np.asarray(g), np.zeros(5, np.float32))
+
+
+def test_dot_grad_error_grows_as_stash_shrinks():
+    x, w = rand((32, 64), -1, 1), rand((64, 32), -1, 1)
+    r = rand((32, 32), -1, 1)
+
+    def dw_at(q1bits):
+        c = qcfg(2, 25, q1bits, 25, 25)
+        return np.asarray(jax.grad(lambda ww: jnp.sum(dsq_dot(x, ww, c) * r))(w))
+
+    exact = x.T @ np.asarray(ref.bfp_quantize_ref(r, 25.0))
+    errs = [np.abs(dw_at(b) - exact).mean() for b in (16.0, 8.0, 4.0, 2.0)]
+    assert errs[0] <= errs[1] <= errs[2] <= errs[3]
+    assert errs[3] > errs[0]
+
+
+# ------------------------------------------------------------- dsq_bmm
+
+
+def test_bmm_fp32_matches_plain():
+    a, b = rand((2, 3, 8, 16)), rand((2, 3, 16, 8))
+    got = np.asarray(dsq_bmm(a, b, FP32))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-4)
+
+
+def test_bmm_fwd_quantizes_both_operands():
+    a, b = rand((2, 4, 16)), rand((2, 16, 8))
+    c = qcfg(2, 4, 2, 8, 16)
+    got = np.asarray(dsq_bmm(a, b, c))
+    aq = np.asarray(ref.bfp_quantize_ref(a, 4.0))
+    bq = np.asarray(quantize_contract(jnp.asarray(b), jnp.float32(2.0), jnp.float32(4.0), 1))
+    np.testing.assert_allclose(got, aq @ bq, rtol=1e-6, atol=1e-6)
+
+
+def test_bmm_backward_points():
+    a, b = rand((2, 8, 16)), rand((2, 16, 8))
+    q0, q1, q2, q3 = 16.0, 4.0, 4.0, 16.0
+    c = qcfg(2, q0, q1, q2, q3)
+    r = rand((2, 8, 8), -1, 1)
+    da, db = jax.grad(lambda aa, bb: jnp.sum(dsq_bmm(aa, bb, c) * r), argnums=(0, 1))(a, b)
+
+    dy = ref.bfp_quantize_ref(r, q3)
+    dyq = ref.bfp_quantize_ref(dy, q2)
+    b_s = np.asarray(quantize_contract(jnp.asarray(b), jnp.float32(2.0), jnp.float32(q1), 1))
+    da_want = ref.bfp_quantize_ref(dyq @ np.swapaxes(b_s, -1, -2), q3)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(da_want), rtol=1e-6, atol=1e-6)
+
+    a_s = ref.bfp_quantize_ref(a, q1)
+    db_raw = jnp.swapaxes(jnp.asarray(a_s), -1, -2) @ dy
+    db_want = quantize_contract(db_raw, jnp.float32(2.0), jnp.float32(q3), db_raw.ndim - 2)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(db_want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", [0.0, 1.0, 2.0])
+def test_bmm_modes_finite(mode):
+    a, b = rand((2, 8, 16)), rand((2, 16, 8))
+    c = qcfg(mode, 8, 4, 4, 16)
+    y = np.asarray(dsq_bmm(a, b, c))
+    assert np.isfinite(y).all()

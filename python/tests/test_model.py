@@ -1,0 +1,197 @@
+"""L2 model tests: shapes, trainability under DSQ, eval/decode, classifier.
+
+Uses a tiny config + the jnp quantizer path (DSQ_NO_PALLAS) for speed;
+test_kernels.py already proves the pallas kernels are bit-identical, and
+test_aot.py exercises the pallas path end-to-end.
+"""
+
+import os
+
+os.environ.setdefault("DSQ_NO_PALLAS", "1")
+
+import functools
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+
+TINY = M.Seq2SeqConfig(
+    vocab=64, d_model=32, nheads=2, d_ff=64, enc_layers=1, dec_layers=1,
+    src_len=16, tgt_len=16, batch=8,
+)
+CTINY = M.ClassifierConfig(
+    vocab=64, d_model=32, nheads=2, d_ff=64, layers=1, seq_len=16, nclasses=3, batch=8,
+)
+
+FP32 = jnp.asarray(M.FP32_QCFG, jnp.float32)
+DSQ_AGGR = jnp.array([2.0, 2.0, 2.0, 2.0, 16.0], jnp.float32)
+
+
+def make_batch(cfg, rng):
+    """Copy-task batch: target = source (learnable by a tiny model)."""
+    lens = rng.integers(cfg.src_len // 2, cfg.src_len, cfg.batch)
+    src = np.zeros((cfg.batch, cfg.src_len), np.int32)
+    for i, L in enumerate(lens):
+        src[i, :L] = rng.integers(3, cfg.vocab, L)
+    tgt_in = np.concatenate([np.full((cfg.batch, 1), M.BOS, np.int32), src[:, :-1]], 1)
+    return src, tgt_in, src.copy()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_seq2seq(TINY, 0)
+
+
+def test_init_param_shapes(params):
+    assert params["src_emb"].shape == (64, 32)
+    assert params["enc0.attn.wq"].shape == (32, 32)
+    assert params["dec0.xattn.wo"].shape == (32, 32)
+    assert params["dec0.ffn.w1"].shape == (32, 64)
+    for k, v in params.items():
+        assert v.dtype == jnp.float32, k
+        assert np.isfinite(np.asarray(v)).all(), k
+
+
+def test_init_deterministic():
+    p1 = M.init_seq2seq(TINY, 42)
+    p2 = M.init_seq2seq(TINY, 42)
+    p3 = M.init_seq2seq(TINY, 43)
+    np.testing.assert_array_equal(np.asarray(p1["src_emb"]), np.asarray(p2["src_emb"]))
+    assert not np.array_equal(np.asarray(p1["src_emb"]), np.asarray(p3["src_emb"]))
+
+
+def test_encode_shape(params):
+    rng = np.random.default_rng(0)
+    src, _, _ = make_batch(TINY, rng)
+    enc = M.encode(params, TINY, src, FP32)
+    assert enc.shape == (8, 16, 32)
+    assert np.isfinite(np.asarray(enc)).all()
+
+
+def test_logits_shape(params):
+    rng = np.random.default_rng(0)
+    src, tgt_in, _ = make_batch(TINY, rng)
+    enc = M.encode(params, TINY, src, FP32)
+    logits = M.decode_states(params, TINY, enc, src, tgt_in, FP32)
+    assert logits.shape == (8, 16, 64)
+
+
+def test_smoothed_ce_ignores_pad():
+    logits = jnp.zeros((2, 3, 8), jnp.float32)
+    tgt = jnp.array([[3, 4, 0], [0, 0, 0]], jnp.int32)
+    loss_sum, ntok = M.smoothed_ce(logits, tgt, 8)
+    assert float(ntok) == 2.0
+    assert float(loss_sum) > 0.0
+
+
+def _train(cfg, qcfg, steps, lr=3e-3, seed=0, nbatches=4):
+    """Train on a small fixed batch pool (memorization = trainability)."""
+    p = M.init_seq2seq(cfg, seed)
+    m = jax.tree_util.tree_map(jnp.zeros_like, p)
+    v = jax.tree_util.tree_map(jnp.zeros_like, p)
+    rng = np.random.default_rng(seed)
+    batches = [make_batch(cfg, rng) for _ in range(nbatches)]
+    fn = jax.jit(functools.partial(M.nmt_train_step, cfg=cfg))
+    losses = []
+    for i in range(1, steps + 1):
+        src, tgt_in, tgt_out = batches[i % nbatches]
+        p, m, v, loss = fn(p, m, v, float(i), src, tgt_in, tgt_out, qcfg, lr)
+        losses.append(float(loss))
+    return p, losses
+
+
+def test_fp32_training_decreases_loss():
+    _, losses = _train(TINY, FP32, 60)
+    assert losses[-1] < losses[0] - 1.0
+    assert all(np.isfinite(losses))
+
+
+def test_dsq_aggressive_training_still_learns():
+    """Paper Table 4: [2,2,2,16] BFP still trains at the start (slower,
+    but the loss moves down rather than diverging)."""
+    _, losses = _train(TINY, DSQ_AGGR, 60)
+    assert losses[-1] < losses[0] - 0.05
+    assert all(np.isfinite(losses))
+
+
+def test_dsq_vs_fp32_losses_comparable():
+    _, l_fp = _train(TINY, FP32, 40)
+    _, l_q = _train(TINY, jnp.array([2.0, 16.0, 4.0, 4.0, 16.0], jnp.float32), 40)
+    # Stashing(BFP) [16,4,4,16] tracks fp32 closely (paper Table 1).
+    assert abs(l_q[-1] - l_fp[-1]) < 0.6
+
+
+def test_eval_step_counts(params):
+    rng = np.random.default_rng(1)
+    src, tgt_in, tgt_out = make_batch(TINY, rng)
+    loss_sum, ncorrect, ntok = M.nmt_eval_step(params, src, tgt_in, tgt_out, TINY)
+    assert float(ntok) == float((tgt_out != 0).sum())
+    assert 0.0 <= float(ncorrect) <= float(ntok)
+    assert np.isfinite(float(loss_sum))
+
+
+def test_greedy_decode_shape_and_range(params):
+    rng = np.random.default_rng(2)
+    src, _, _ = make_batch(TINY, rng)
+    toks = np.asarray(M.nmt_greedy_decode(params, src, TINY))
+    assert toks.shape == (8, 16)
+    assert toks[:, 0].tolist() == [M.BOS] * 8
+    assert ((toks >= 0) & (toks < TINY.vocab)).all()
+
+
+# ----------------------------------------------------------- classifier
+
+
+def make_cls_batch(cfg, rng):
+    """Separable rule: label = bucket of the count of 'marker' token 3."""
+    toks = rng.integers(4, cfg.vocab, (cfg.batch, cfg.seq_len)).astype(np.int32)
+    labels = rng.integers(0, cfg.nclasses, cfg.batch).astype(np.int32)
+    for i, lab in enumerate(labels):
+        toks[i, : 2 * lab + 1] = 3
+    return toks, labels
+
+
+def test_classifier_logits_shape():
+    p = M.init_classifier(CTINY, 0)
+    toks, _ = make_cls_batch(CTINY, np.random.default_rng(0))
+    logits = M.classifier_logits(p, CTINY, toks, FP32)
+    assert logits.shape == (8, 3)
+
+
+def test_classifier_trains():
+    p = M.init_classifier(CTINY, 0)
+    m = jax.tree_util.tree_map(jnp.zeros_like, p)
+    v = jax.tree_util.tree_map(jnp.zeros_like, p)
+    rng = np.random.default_rng(0)
+    fn = jax.jit(functools.partial(M.cls_train_step, cfg=CTINY))
+    stash = jnp.array([2.0, 16.0, 4.0, 4.0, 16.0], jnp.float32)  # Stashing(BFP)
+    batches = [make_cls_batch(CTINY, rng) for _ in range(4)]
+    first = last = None
+    for i in range(1, 81):
+        toks, labels = batches[i % 4]
+        p, m, v, loss = fn(p, m, v, float(i), toks, labels, stash, 3e-3)
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+    assert last < first - 0.2
+
+    toks, labels = batches[0]
+    loss, ncorrect, n = M.cls_eval_step(p, toks, labels, CTINY)
+    assert float(n) == 8.0
+    assert float(ncorrect) >= 5.0  # well above 1/3 chance
+
+
+def test_adam_bias_correction_first_step():
+    from compile import adam
+
+    p = {"w": jnp.ones((4,), jnp.float32)}
+    g = {"w": jnp.full((4,), 0.5, jnp.float32)}
+    m, v = adam.init_state(p)
+    p2, m2, v2 = adam.update(p, g, m, v, jnp.float32(1.0), jnp.float32(0.1))
+    # After bias correction, first step ~= -lr * sign(g).
+    np.testing.assert_allclose(np.asarray(p2["w"]), 1.0 - 0.1, rtol=1e-4)
+    assert np.allclose(np.asarray(m2["w"]), 0.05)

@@ -1,0 +1,21 @@
+//! Bench: Figure 1 — roofline placements on A100-like and edge-like
+//! machine profiles, plus timing of the placement computation.
+
+use dsq::bench::{header, Bencher};
+use dsq::costmodel::{Machine, TransformerWorkload};
+use dsq::experiments::figure1;
+
+fn main() {
+    header("Figure 1 (roofline model)");
+    let w = TransformerWorkload::iwslt_6layer();
+    for m in [Machine::a100_like(), Machine::edge_like()] {
+        figure1::print_roofline(&m, &w);
+        println!();
+    }
+    let m = Machine::a100_like();
+    let b = Bencher::default();
+    let r = b.bench("figure1 point placement (5 configs)", || {
+        std::hint::black_box(figure1::figure_points(&w, &m));
+    });
+    println!("{}", r.report());
+}

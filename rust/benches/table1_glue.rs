@@ -1,0 +1,44 @@
+//! Bench: Table 1's GLUE (RoBERTa-base) cost columns.
+//!
+//! Uniform rows carry the same relative costs as IWSLT (they scale all
+//! components together); the stash/DSQ rows shift with RoBERTa's
+//! activation/weight mix — which is why the paper reports DSQ MNLI/QNLI
+//! at 0.043x (shorter fine-tuning spends proportionally more time at
+//! the higher ladder rungs).
+
+use dsq::bench::{header, Bencher};
+use dsq::costmodel::{self, tables, TransformerWorkload};
+use dsq::schedule::{PrecisionConfig, QuantMode};
+
+fn main() {
+    header("Table 1 (GLUE MNLI/QNLI, RoBERTa-base) — cost columns");
+    let w = TransformerWorkload::roberta_base();
+    println!("workload: {} ({:.0}M params)", w.name, w.params / 1e6);
+    println!("{:<18} {:<16} {:>8} {:>8}", "method", "precision", "arith", "dram");
+    for (m, p, score) in tables::standard_methods() {
+        let row = costmodel::normalized_row(&w, m, &p, score);
+        println!("{}", row.fmt_paper_style());
+    }
+    // Fine-tuning trace (paper: DSQ = 0.043x / 0.26x): more time at the
+    // higher rungs than the from-scratch run.
+    let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
+    let mid = PrecisionConfig::new(QuantMode::Bfp, 8.0, 4.0, 4.0, 16.0);
+    let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+    let dsq = tables::dsq_trace_row(&w, &[(lo, 70), (mid, 20), (hi, 10)]);
+    println!(
+        "{:<18} {:<16} {:>7.3}x {:>7.3}x   (paper 0.043x / 0.26x)",
+        "DSQ (BFP)",
+        "-",
+        dsq.arith_rel.unwrap(),
+        dsq.dram_rel.unwrap()
+    );
+
+    let b = Bencher::default();
+    let r = b.bench("roberta-base workload build + table", || {
+        let w = TransformerWorkload::roberta_base();
+        for (m, p, score) in tables::standard_methods() {
+            std::hint::black_box(costmodel::normalized_row(&w, m, &p, score));
+        }
+    });
+    println!("\n{}", r.report());
+}

@@ -1,0 +1,69 @@
+//! Bench: regenerate Table 1's IWSLT cost columns and time the cost
+//! model itself (the harness that produces every table).
+//!
+//! The accuracy half of Table 1 comes from training runs
+//! (`dsq experiment table1-iwslt`); this bench regenerates the
+//! hardware-cost half and checks it against the paper's reference
+//! values, row by row, while timing table generation.
+
+use dsq::bench::{header, Bencher};
+use dsq::costmodel::{self, tables, TransformerWorkload};
+use dsq::schedule::{PrecisionConfig, QuantMode};
+
+fn main() {
+    header("Table 1 (IWSLT17 DE-EN, 6-layer transformer) — cost columns");
+    let w = TransformerWorkload::iwslt_6layer();
+
+    println!(
+        "{:<18} {:<16} {:>8} {:>8}   {:>8} {:>8}",
+        "method", "precision", "arith", "dram", "paper-a", "paper-d"
+    );
+    for (m, p, score) in tables::standard_methods() {
+        let row = costmodel::normalized_row(&w, m, &p, score);
+        let paper = tables::PAPER_COST_ROWS
+            .iter()
+            .find(|(pm, pp, _, _)| *pm == m && *pp == p.notation());
+        println!(
+            "{:<18} {:<16} {:>8} {:>8}   {:>8} {:>8}",
+            m,
+            p.notation(),
+            row.arith_rel.map_or("-".into(), |v| format!("{v:.3}x")),
+            row.dram_rel.map_or("-".into(), |v| format!("{v:.3}x")),
+            paper.map_or("-".into(), |(_, _, a, _)| format!("{a:.2}x")),
+            paper.map_or("-".into(), |(_, _, _, d)| format!("{d:.2}x")),
+        );
+    }
+    let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
+    let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+    let dsq = tables::dsq_trace_row(&w, &[(lo, 96), (hi, 4)]);
+    println!(
+        "{:<18} {:<16} {:>8} {:>8}   {:>8} {:>8}",
+        "DSQ (BFP)",
+        "-",
+        format!("{:.3}x", dsq.arith_rel.unwrap()),
+        format!("{:.3}x", dsq.dram_rel.unwrap()),
+        "0.012x",
+        "0.20x"
+    );
+    let f16 = costmodel::normalized_row(
+        &w,
+        "fixed16",
+        &PrecisionConfig::uniform(QuantMode::Fixed, 16.0),
+        true,
+    );
+    println!(
+        "\nheadline: {:.1}x fewer arith ops, {:.2}x less DRAM vs fixed-16 (paper 20.95x / 2.55x)\n",
+        f16.arith_rel.unwrap() / dsq.arith_rel.unwrap(),
+        f16.dram_rel.unwrap() / dsq.dram_rel.unwrap()
+    );
+
+    // Timing: full-table generation is the repeated unit in sweeps.
+    let b = Bencher::default();
+    let r = b.bench("table1 cost-column generation (8 rows)", || {
+        for (m, p, score) in tables::standard_methods() {
+            std::hint::black_box(costmodel::normalized_row(&w, m, &p, score));
+        }
+        std::hint::black_box(tables::dsq_trace_row(&w, &[(lo, 96), (hi, 4)]));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,58 @@
+//! Bench: Table 4 (Appendix B) — the stash-precision sweep's cost side
+//! plus quantization-error measurements that explain its BLEU shape.
+//!
+//! The paper's BLEU column needs training (`dsq experiment table4`);
+//! here we regenerate, for every sweep point: the hardware cost columns
+//! AND the measured stash quantization error (rust BFP mirror on a
+//! transformer-like activation distribution) — the error curve is the
+//! mechanism behind the BLEU cliff at [2,2,2,16].
+
+use dsq::bench::{header, Bencher};
+use dsq::costmodel::{self, TransformerWorkload};
+use dsq::experiments::table4::SWEEP;
+use dsq::quant;
+use dsq::schedule::{PrecisionConfig, QuantMode};
+use dsq::util::rng::Pcg32;
+
+fn main() {
+    header("Table 4 (stash precision sweep)");
+    let w = TransformerWorkload::iwslt_6layer();
+
+    // Activation-like data (heavy-ish tails, like post-GELU/attention).
+    let mut rng = Pcg32::new(4);
+    let acts: Vec<f32> =
+        (0..1 << 16).map(|_| rng.normal() * (rng.normal() * 1.5).exp()).collect();
+
+    println!(
+        "{:<14} {:>8} {:>8} {:>12} {:>12}   {:>8}",
+        "precision", "arith", "dram", "q1 rel-err", "q0 rel-err", "paperΔ"
+    );
+    for (setup, paper_delta) in SWEEP {
+        let p = PrecisionConfig::parse(QuantMode::Bfp, setup).unwrap();
+        let row = costmodel::normalized_row(&w, "stash", &p, true);
+        let err = |bits: f32| {
+            let q = quant::bfp_quantize(&acts, 256, bits);
+            let (mut num, mut den) = (0f64, 0f64);
+            for (a, b) in acts.iter().zip(&q) {
+                num += ((a - b) * (a - b)) as f64;
+                den += (a * a) as f64;
+            }
+            (num / den).sqrt()
+        };
+        println!(
+            "{:<14} {:>7.3}x {:>7.3}x {:>12.4} {:>12.4}   {:>+8.2}",
+            setup,
+            row.arith_rel.unwrap(),
+            row.dram_rel.unwrap(),
+            err(p.q1),
+            err(p.q0),
+            paper_delta
+        );
+    }
+
+    let b = Bencher::default();
+    let r = b.bench("bfp stash quantize 64k elems @4b", || {
+        std::hint::black_box(quant::bfp_quantize(&acts, 256, 4.0));
+    });
+    println!("\n{}  ({:.1} Melem/s)", r.report(), r.throughput(65536.0) / 1e6);
+}

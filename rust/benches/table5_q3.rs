@@ -1,0 +1,70 @@
+//! Bench: Table 5 (Appendix C) — why q3 must stay >= 16.
+//!
+//! Regenerates the cost rows for [8,8,8,{32,16,8}] fixed-point and
+//! measures the *gradient* quantization error of per-tensor fixed point
+//! vs BFP at each q3 — the dynamic-range starvation that makes the
+//! 8-bit row diverge (the training side is `dsq experiment table5`).
+
+use dsq::bench::{header, Bencher};
+use dsq::costmodel::{self, TransformerWorkload};
+use dsq::experiments::table5::SWEEP;
+use dsq::quant;
+use dsq::schedule::{PrecisionConfig, QuantMode};
+use dsq::util::rng::Pcg32;
+
+fn main() {
+    header("Table 5 (gradient-output precision q3, fixed-point stashing)");
+    let w = TransformerWorkload::iwslt_6layer();
+
+    // Gradient-like data: near-sparse, heavy-tailed (a few dominant
+    // directions + tiny everything else) — the worst case for a single
+    // per-tensor exponent.
+    let mut rng = Pcg32::new(5);
+    let grads: Vec<f32> = (0..1 << 16)
+        .map(|_| {
+            if rng.chance(0.01) {
+                rng.normal() * 10.0
+            } else {
+                rng.normal() * 0.01
+            }
+        })
+        .collect();
+
+    println!(
+        "{:<14} {:>8} {:>8} {:>14} {:>14} {:>16}",
+        "precision", "arith", "dram", "fixed rel-err", "bfp rel-err", "fixed zeroed %"
+    );
+    for (setup, _paper) in SWEEP {
+        let p = PrecisionConfig::parse(QuantMode::Fixed, setup).unwrap();
+        let row = costmodel::normalized_row(&w, "stash-fixed", &p, true);
+        let qf = quant::fixed_quantize(&grads, p.q3);
+        let qb = quant::bfp_quantize(&grads, 256, p.q3);
+        let rel = |q: &[f32]| {
+            let (mut num, mut den) = (0f64, 0f64);
+            for (a, b) in grads.iter().zip(q) {
+                num += ((a - b) * (a - b)) as f64;
+                den += (a * a) as f64;
+            }
+            (num / den).sqrt()
+        };
+        let zeroed =
+            qf.iter().zip(&grads).filter(|(q, g)| **q == 0.0 && **g != 0.0).count() as f64
+                / grads.len() as f64;
+        println!(
+            "{:<14} {:>7.3}x {:>7.3}x {:>14.4} {:>14.4} {:>15.1}%",
+            setup,
+            row.arith_rel.unwrap(),
+            row.dram_rel.unwrap(),
+            rel(&qf),
+            rel(&qb),
+            zeroed * 100.0
+        );
+    }
+    println!("\n(q3=8 fixed point zeroes nearly all small gradient mass -> divergence, paper 'Failed')");
+
+    let b = Bencher::default();
+    let r = b.bench("fixed quantize 64k grads @8b", || {
+        std::hint::black_box(quant::fixed_quantize(&grads, 8.0));
+    });
+    println!("{}", r.report());
+}

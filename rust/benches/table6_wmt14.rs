@@ -1,0 +1,46 @@
+//! Bench: Table 6 (Appendix D) — the WMT14 variant's cost columns.
+//!
+//! Same 6-layer architecture on the larger-vocab WMT workload; the cost
+//! ratios carry over (they are per-step relative), the BLEU column needs
+//! training on the harder bigram synthetic variant
+//! (`dsq experiment table6`).
+
+use dsq::bench::{header, Bencher};
+use dsq::costmodel::{self, tables, TransformerWorkload};
+use dsq::experiments::table6::PAPER_WMT_DELTAS;
+
+fn main() {
+    header("Table 6 (WMT14 EN-DE, 6-layer transformer) — cost columns");
+    let w = TransformerWorkload::wmt_6layer();
+    println!(
+        "workload: {} ({:.0}M params, {:.1} GMAC/step fwd)",
+        w.name,
+        w.params / 1e6,
+        w.total_macs() / 1e9
+    );
+    println!("{:<18} {:<16} {:>8} {:>8} {:>9}", "method", "precision", "arith", "dram", "paperΔ");
+    for (m, p, score) in tables::standard_methods() {
+        let row = costmodel::normalized_row(&w, m, &p, score);
+        let paper = PAPER_WMT_DELTAS
+            .iter()
+            .find(|(pm, pp, _)| *pm == m && *pp == p.notation())
+            .map(|(_, _, d)| *d);
+        println!(
+            "{:<18} {:<16} {:>8} {:>8} {:>9}",
+            m,
+            p.notation(),
+            row.arith_rel.map_or("-".into(), |v| format!("{v:.3}x")),
+            row.dram_rel.map_or("-".into(), |v| format!("{v:.3}x")),
+            paper.map_or("-".into(), |d| format!("{d:+.2}")),
+        );
+    }
+
+    let b = Bencher::default();
+    let r = b.bench("wmt workload build + 7 rows", || {
+        let w = TransformerWorkload::wmt_6layer();
+        for (m, p, score) in tables::standard_methods() {
+            std::hint::black_box(costmodel::normalized_row(&w, m, &p, score));
+        }
+    });
+    println!("\n{}", r.report());
+}

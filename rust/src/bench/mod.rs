@@ -1,0 +1,173 @@
+//! Mini-criterion: a bench harness for `harness = false` bench targets
+//! (criterion is unavailable offline).
+//!
+//! Provides warmup, adaptive iteration counts, robust statistics and a
+//! compact report. Used by every `rust/benches/*.rs` target, which in
+//! turn regenerate the paper's tables (the "benchmark" for a cost-model
+//! table is its generation + consistency checks; the hot-path benches
+//! time real code).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// One timed benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} {:>12} {:>10} ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            format!("±{}", fmt_ns(self.stddev_ns)),
+            self.iters
+        )
+    }
+
+    /// Throughput helper: elements per second given elements per iter.
+    pub fn throughput(&self, elems_per_iter: f64) -> f64 {
+        elems_per_iter / (self.mean_ns * 1e-9)
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Bench runner configuration.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 10,
+            max_iters: 1_000_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end benches (PJRT steps).
+    pub fn slow() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(500),
+            measure: Duration::from_secs(3),
+            min_iters: 3,
+            max_iters: 1_000,
+        }
+    }
+
+    /// Time `f`, returning robust stats over per-iteration samples.
+    pub fn bench<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + estimate cost.
+        let wstart = Instant::now();
+        let mut wi = 0u64;
+        while wstart.elapsed() < self.warmup || wi < 3 {
+            f();
+            wi += 1;
+        }
+        let per_iter = wstart.elapsed().as_secs_f64() / wi as f64;
+        let target =
+            ((self.measure.as_secs_f64() / per_iter.max(1e-9)) as u64).clamp(self.min_iters, self.max_iters);
+
+        // Sample in batches so Instant overhead stays negligible.
+        let batch = (target / 50).max(1);
+        let mut samples = Vec::new();
+        let mut done = 0u64;
+        while done < target {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = s.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(ns);
+            done += batch;
+        }
+        BenchResult {
+            name: name.to_string(),
+            iters: done,
+            mean_ns: stats::mean(&samples),
+            median_ns: stats::median(&samples),
+            stddev_ns: stats::stddev(&samples),
+            min_ns: stats::min(&samples),
+            max_ns: stats::max(&samples),
+        }
+    }
+}
+
+/// Standard bench-report header used by all bench targets.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+    println!("{:<44} {:>12} {:>12} {:>10}", "benchmark", "median", "mean", "stddev");
+    println!("{}", "-".repeat(84));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 5,
+            max_iters: 100_000,
+        };
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn throughput() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            stddev_ns: 0.0,
+            min_ns: 1e9,
+            max_ns: 1e9,
+        };
+        assert!((r.throughput(1000.0) - 1000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,316 @@
+//! CLI dispatch for the `dsq` binary.
+//!
+//! ```text
+//! dsq train       --schedule dsq|fp32|<mode>:<q0,q1,q2,q3> ...
+//! dsq finetune    --nclasses 2|3 --init-checkpoint ...
+//! dsq cost-table  --workload iwslt|wmt|roberta|testbed
+//! dsq roofline    --machine a100|edge
+//! dsq experiment  table1-iwslt|table1-glue|table4|table5|table6|figure1|all
+//! dsq info        (artifact manifest summary)
+//! dsq version
+//! ```
+
+use std::path::PathBuf;
+
+use crate::costmodel::{self, TransformerWorkload, WorkloadKind};
+use crate::data::Variant;
+use crate::schedule::{DsqController, PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use crate::util::cli::{ArgSpec, Args};
+use crate::{Error, Result};
+
+use super::finetune::{FinetuneConfig, Finetuner};
+use super::lr::LrSchedule;
+use super::trainer::{Trainer, TrainerConfig};
+
+/// Dispatch a raw argument list; returns the process exit code.
+pub fn dispatch(args: &[String]) -> i32 {
+    let (cmd, rest) = match args.split_first() {
+        Some((c, r)) => (c.as_str(), r),
+        None => ("help", &[][..]),
+    };
+    let result = match cmd {
+        "train" => cmd_train(rest),
+        "finetune" => cmd_finetune(rest),
+        "cost-table" => cmd_cost_table(rest),
+        "roofline" => cmd_roofline(rest),
+        "experiment" => cmd_experiment(rest),
+        "info" => cmd_info(rest),
+        "version" => {
+            println!("dsq {} — Dynamic Stashing Quantization trainer", env!("CARGO_PKG_VERSION"));
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown subcommand '{other}'\n{HELP}"))),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(Error::Config(msg)) => {
+            eprintln!("{msg}");
+            2
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+const HELP: &str = "dsq — Dynamic Stashing Quantization for Efficient Transformer Training
+
+subcommands:
+  train        train the seq2seq model on the synthetic translation task
+  finetune     fine-tune the classifier (GLUE-style)
+  cost-table   print the paper's Arith/DRAM cost columns for a workload
+  roofline     print Figure 1 (roofline placements)
+  experiment   regenerate a paper table/figure (table1-iwslt, table1-glue,
+               table4, table5, table6, figure1, all)
+  info         artifact manifest summary
+  version      print version
+";
+
+/// Parse `--schedule`: `dsq`, `fp32`, or `<mode>:<q0,q1,q2,q3>`
+/// (e.g. `bfp:16,4,4,16`, `fixed:8,8,8,16`).
+pub fn parse_schedule(spec: &str) -> Result<Box<dyn Schedule>> {
+    match spec {
+        "dsq" => Ok(Box::new(DsqController::paper_default(QuantMode::Bfp))),
+        "dsq-fixed" => Ok(Box::new(DsqController::paper_default(QuantMode::Fixed))),
+        "fp32" => Ok(Box::new(StaticSchedule(PrecisionConfig::FP32))),
+        other => {
+            let (mode_s, bits) = other
+                .split_once(':')
+                .ok_or_else(|| Error::Config(format!("bad --schedule '{other}'")))?;
+            let mode = match mode_s {
+                "bfp" => QuantMode::Bfp,
+                "fixed" => QuantMode::Fixed,
+                m => return Err(Error::Config(format!("unknown quantizer mode '{m}'"))),
+            };
+            Ok(Box::new(StaticSchedule(PrecisionConfig::parse(mode, bits)?)))
+        }
+    }
+}
+
+fn common_train_flags(spec: ArgSpec) -> ArgSpec {
+    spec.opt("artifacts", "artifacts", "artifact directory (make artifacts)")
+        .opt("seed", "0", "RNG seed for init + corpus")
+        .opt("epochs", "4", "training epochs")
+        .opt("batches-per-epoch", "50", "train batches per epoch")
+        .opt("schedule", "dsq", "dsq | fp32 | bfp:q0,q1,q2,q3 | fixed:q0,q1,q2,q3")
+        .opt("checkpoint", "", "save final checkpoint here")
+        .opt("init-checkpoint", "", "initialize from this checkpoint")
+        .bool("json", "print the full report as JSON")
+}
+
+fn cmd_train(raw: &[String]) -> Result<()> {
+    let spec = common_train_flags(ArgSpec::new("train", "train seq2seq with DSQ"))
+        .opt("lr", "isqrt:3e-3:100", "lr schedule: const:x | isqrt:x:warmup | poly:x:w:total")
+        .opt("variant", "iwslt", "task variant: iwslt | wmt")
+        .opt("val-batches", "4", "validation batches")
+        .opt("bleu-batches", "4", "test batches for BLEU (0 = skip)");
+    let a = spec.parse(raw)?;
+    let cfg = TrainerConfig {
+        artifacts: PathBuf::from(a.get("artifacts")),
+        seed: a.get_u64("seed")?,
+        epochs: a.get_usize("epochs")?,
+        batches_per_epoch: a.get_usize("batches-per-epoch")?,
+        lr: LrSchedule::parse(a.get("lr"))?,
+        variant: parse_variant(a.get("variant"))?,
+        val_batches: a.get_usize("val-batches")?,
+        bleu_batches: a.get_usize("bleu-batches")?,
+        checkpoint: opt_path(&a, "checkpoint"),
+        init_checkpoint: opt_path(&a, "init-checkpoint"),
+        prefetch: 4,
+    };
+    let mut schedule = parse_schedule(a.get("schedule"))?;
+    let mut trainer = Trainer::new(cfg)?;
+    let report = trainer.run(schedule.as_mut())?;
+    let iwslt = TransformerWorkload::iwslt_6layer();
+    let (arith, dram) = report.cost_on(&iwslt);
+    println!(
+        "steps={} val_loss={:.4} token_acc={:.1}% bleu={} diverged={} ({:.2} steps/s)",
+        report.steps,
+        report.final_val_loss,
+        report.final_token_acc * 100.0,
+        report.bleu.map_or("-".into(), |b| format!("{b:.2}")),
+        report.diverged,
+        report.steps_per_s()
+    );
+    println!(
+        "hardware cost of this schedule on paper-scale IWSLT: arith {arith:.3}x dram {dram:.3}x (vs fixed32)"
+    );
+    if a.get_bool("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    }
+    Ok(())
+}
+
+fn cmd_finetune(raw: &[String]) -> Result<()> {
+    let spec = common_train_flags(ArgSpec::new("finetune", "fine-tune the classifier"))
+        .opt("lr", "poly:1e-3:20:2000", "lr schedule")
+        .opt("nclasses", "3", "2 = QNLI-style, 3 = MNLI-style")
+        .opt("val-batches", "4", "validation batches");
+    let a = spec.parse(raw)?;
+    let cfg = FinetuneConfig {
+        artifacts: PathBuf::from(a.get("artifacts")),
+        seed: a.get_u64("seed")?,
+        epochs: a.get_usize("epochs")?,
+        batches_per_epoch: a.get_usize("batches-per-epoch")?,
+        lr: LrSchedule::parse(a.get("lr"))?,
+        nclasses: a.get_usize("nclasses")?,
+        val_batches: a.get_usize("val-batches")?,
+        checkpoint: opt_path(&a, "checkpoint"),
+        init_checkpoint: opt_path(&a, "init-checkpoint"),
+    };
+    let mut schedule = parse_schedule(a.get("schedule"))?;
+    let mut tuner = Finetuner::new(cfg)?;
+    let report = tuner.run(schedule.as_mut())?;
+    println!(
+        "steps={} val_loss={:.4} accuracy={:.1}% diverged={}",
+        report.steps,
+        report.final_val_loss,
+        report.final_accuracy * 100.0,
+        report.diverged
+    );
+    if a.get_bool("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    }
+    Ok(())
+}
+
+pub fn parse_variant(s: &str) -> Result<Variant> {
+    match s {
+        "iwslt" => Ok(Variant::Iwslt),
+        "wmt" => Ok(Variant::Wmt),
+        other => Err(Error::Config(format!("unknown variant '{other}'"))),
+    }
+}
+
+pub fn parse_workload(s: &str) -> Result<TransformerWorkload> {
+    Ok(match s {
+        "iwslt" => TransformerWorkload::for_kind(WorkloadKind::Iwslt6Layer),
+        "wmt" => TransformerWorkload::for_kind(WorkloadKind::Wmt6Layer),
+        "roberta" => TransformerWorkload::for_kind(WorkloadKind::RobertaBase),
+        "testbed" => TransformerWorkload::for_kind(WorkloadKind::Testbed),
+        other => return Err(Error::Config(format!("unknown workload '{other}'"))),
+    })
+}
+
+fn opt_path(a: &Args, key: &str) -> Option<PathBuf> {
+    let v = a.get(key);
+    if v.is_empty() {
+        None
+    } else {
+        Some(PathBuf::from(v))
+    }
+}
+
+fn cmd_cost_table(raw: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("cost-table", "paper cost columns for a workload")
+        .opt("workload", "iwslt", "iwslt | wmt | roberta | testbed");
+    let a = spec.parse(raw)?;
+    let w = parse_workload(a.get("workload"))?;
+    println!(
+        "{:<18} {:<16} {:>8} {:>8}   (workload: {}, fixed32 = 1.00x)",
+        "method", "precision", "arith", "dram", w.name
+    );
+    for (m, p, score) in costmodel::tables::standard_methods() {
+        println!("{}", costmodel::normalized_row(&w, m, &p, score).fmt_paper_style());
+    }
+    // The canonical DSQ trace (mostly level-0 steps).
+    let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
+    let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+    println!("{}", costmodel::tables::dsq_trace_row(&w, &[(lo, 96), (hi, 4)]).fmt_paper_style());
+    Ok(())
+}
+
+fn cmd_roofline(raw: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("roofline", "Figure 1 placements")
+        .opt("machine", "a100", "a100 | edge")
+        .opt("workload", "iwslt", "iwslt | wmt | roberta | testbed");
+    let a = spec.parse(raw)?;
+    let machine = match a.get("machine") {
+        "a100" => costmodel::Machine::a100_like(),
+        "edge" => costmodel::Machine::edge_like(),
+        other => return Err(Error::Config(format!("unknown machine '{other}'"))),
+    };
+    let w = parse_workload(a.get("workload"))?;
+    crate::experiments::figure1::print_roofline(&machine, &w);
+    Ok(())
+}
+
+fn cmd_experiment(raw: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("experiment", "regenerate a paper table/figure")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("out", "results", "output directory for reports")
+        .opt("train-epochs", "3", "training epochs per table row")
+        .opt("batches-per-epoch", "40", "train batches per epoch")
+        .bool("no-train", "cost columns only (skip accuracy training runs)");
+    let a = spec.parse(raw)?;
+    let which = a
+        .positional
+        .first()
+        .ok_or_else(|| Error::Config("experiment name required (e.g. table1-iwslt)".into()))?;
+    let opts = crate::experiments::ExperimentOpts {
+        artifacts: PathBuf::from(a.get("artifacts")),
+        out: PathBuf::from(a.get("out")),
+        train_epochs: a.get_usize("train-epochs")?,
+        batches_per_epoch: a.get_usize("batches-per-epoch")?,
+        train: !a.get_bool("no-train"),
+    };
+    crate::experiments::run(which, &opts)
+}
+
+fn cmd_info(raw: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("info", "artifact manifest summary")
+        .opt("artifacts", "artifacts", "artifact directory");
+    let a = spec.parse(raw)?;
+    let man = crate::runtime::ArtifactManifest::load(&PathBuf::from(a.get("artifacts")))?;
+    println!("artifacts: {:?}", man.dir);
+    for (name, m) in [("nmt", &man.nmt), ("cls", &man.cls)] {
+        println!(
+            "  {name}: {} param tensors, {} total params, artifacts: {}",
+            m.params.len(),
+            m.total_params(),
+            m.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+        );
+        for (k, v) in &m.config {
+            println!("    {k} = {v}");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_schedule_variants() {
+        assert!(parse_schedule("dsq").is_ok());
+        assert!(parse_schedule("fp32").is_ok());
+        let s = parse_schedule("bfp:16,4,4,16").unwrap();
+        assert_eq!(s.current().notation(), "[16,4,4,16]");
+        assert_eq!(s.current().mode, QuantMode::Bfp);
+        let s = parse_schedule("fixed:8,8,8,32").unwrap();
+        assert_eq!(s.current().mode, QuantMode::Fixed);
+        assert!(parse_schedule("nope").is_err());
+        assert!(parse_schedule("bfp:1,2").is_err());
+    }
+
+    #[test]
+    fn parse_workloads() {
+        for w in ["iwslt", "wmt", "roberta", "testbed"] {
+            assert!(parse_workload(w).is_ok());
+        }
+        assert!(parse_workload("nope").is_err());
+    }
+
+    #[test]
+    fn unknown_subcommand_exit_code() {
+        assert_eq!(dispatch(&["bogus".to_string()]), 2);
+        assert_eq!(dispatch(&["version".to_string()]), 0);
+        assert_eq!(dispatch(&[]), 0); // help
+    }
+}

@@ -1,0 +1,240 @@
+//! Fine-tuning coordinator for the classifier (the paper's GLUE setup).
+//!
+//! Mirrors [`super::trainer`] for the encoder-classifier artifacts. The
+//! "pre-train then fine-tune" paradigm is reproduced by initializing
+//! from a checkpoint of a *previous* run on a different task instance
+//! (`--init-checkpoint`), exactly how the paper fine-tunes RoBERTa-base
+//! with DSQ precision schedules.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::data::classify::{ClassifyConfig, ClassifyTask};
+use crate::data::batcher::{assemble_cls, ClsBatch};
+use crate::metrics::LossTracker;
+use crate::model::{checkpoint, ModelState};
+use crate::runtime::{ArtifactManifest, HostTensor, Runtime};
+use crate::schedule::{PrecisionConfig, QuantMode, Schedule};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::{Error, Result};
+
+use super::lr::LrSchedule;
+
+/// Fine-tune configuration.
+#[derive(Clone, Debug)]
+pub struct FinetuneConfig {
+    pub artifacts: PathBuf,
+    pub seed: u64,
+    pub epochs: usize,
+    pub batches_per_epoch: usize,
+    pub lr: LrSchedule,
+    /// 2 = QNLI-style, 3 = MNLI-style. Must be <= the artifact's
+    /// `nclasses` (labels above the artifact head size are impossible).
+    pub nclasses: usize,
+    pub val_batches: usize,
+    pub checkpoint: Option<PathBuf>,
+    pub init_checkpoint: Option<PathBuf>,
+}
+
+impl FinetuneConfig {
+    pub fn quick(artifacts: PathBuf) -> Self {
+        FinetuneConfig {
+            artifacts,
+            seed: 0,
+            epochs: 2,
+            batches_per_epoch: 20,
+            lr: LrSchedule::Polynomial { lr: 1e-3, warmup_steps: 10, total_steps: 2000 },
+            nclasses: 3,
+            val_batches: 4,
+            checkpoint: None,
+            init_checkpoint: None,
+        }
+    }
+}
+
+/// Result of a fine-tuning run.
+#[derive(Clone, Debug)]
+pub struct FinetuneReport {
+    pub steps: u64,
+    pub final_val_loss: f64,
+    pub final_accuracy: f64,
+    pub diverged: bool,
+    pub trace: Vec<(PrecisionConfig, usize)>,
+    pub val_curve: Vec<(u64, f64)>,
+    pub schedule_desc: String,
+    pub wall_s: f64,
+}
+
+impl FinetuneReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("steps", Json::num(self.steps as f64)),
+            ("final_val_loss", Json::num(self.final_val_loss)),
+            ("final_accuracy", Json::num(self.final_accuracy)),
+            ("diverged", Json::Bool(self.diverged)),
+            ("schedule", Json::str(&self.schedule_desc)),
+            ("wall_s", Json::num(self.wall_s)),
+            (
+                "trace",
+                Json::arr(self.trace.iter().map(|(p, n)| {
+                    Json::obj(vec![
+                        ("precision", Json::str(&p.notation())),
+                        ("mode", Json::str(p.mode.name())),
+                        ("steps", Json::num(*n as f64)),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// The classifier fine-tuner.
+pub struct Finetuner {
+    pub cfg: FinetuneConfig,
+    man: ArtifactManifest,
+    task: ClassifyTask,
+    state: ModelState,
+    batch: usize,
+    seq_len: usize,
+}
+
+impl Finetuner {
+    pub fn new(cfg: FinetuneConfig) -> Result<Self> {
+        let man = ArtifactManifest::load(&cfg.artifacts)?;
+        let (b, l, v, ncls) = (
+            man.cls.cfg("batch")?,
+            man.cls.cfg("seq_len")?,
+            man.cls.cfg("vocab")?,
+            man.cls.cfg("nclasses")?,
+        );
+        if cfg.nclasses > ncls {
+            return Err(Error::Config(format!(
+                "--nclasses {} exceeds artifact head size {ncls}",
+                cfg.nclasses
+            )));
+        }
+        let task = ClassifyTask::new(ClassifyConfig {
+            vocab: v as i32,
+            seq_len: l,
+            nclasses: cfg.nclasses,
+            seed: cfg.seed,
+        });
+        let rt = Runtime::global();
+        let state = match &cfg.init_checkpoint {
+            Some(path) => checkpoint::load_checkpoint(path, &man.cls)?,
+            None => ModelState::init(rt, &man, "cls", cfg.seed as i32)?,
+        };
+        Ok(Finetuner { batch: b, seq_len: l, cfg, man, task, state })
+    }
+
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.man
+    }
+
+    fn make_batch(&self, rng: &mut Pcg32) -> ClsBatch {
+        let exs: Vec<_> = (0..self.batch).map(|_| self.task.sample(rng)).collect();
+        assemble_cls(&exs, self.seq_len)
+    }
+
+    fn train_artifact_kind(mode: QuantMode) -> &'static str {
+        match mode {
+            QuantMode::Fixed => "train_fixed",
+            QuantMode::Bfp | QuantMode::Fp32 => "train_bfp",
+        }
+    }
+
+    /// Mean loss + accuracy over batches.
+    pub fn evaluate(&self, batches: &[ClsBatch]) -> Result<(f64, f64)> {
+        let exe = Runtime::global().load(&self.man.model_path("cls", "eval")?)?;
+        let (mut loss_sum, mut ncorrect, mut total) = (0f64, 0f64, 0f64);
+        for batch in batches {
+            let mut inputs = self.state.params.clone();
+            inputs.push(HostTensor::i32(vec![self.batch, self.seq_len], batch.tokens.clone()));
+            inputs.push(HostTensor::i32(vec![self.batch], batch.labels.clone()));
+            let outs = exe.run(&inputs)?;
+            loss_sum += outs[0].item_f32()? as f64;
+            ncorrect += outs[1].item_f32()? as f64;
+            total += outs[2].item_f32()? as f64;
+        }
+        Ok((loss_sum / batches.len().max(1) as f64, ncorrect / total.max(1.0)))
+    }
+
+    /// Run fine-tuning under `schedule`.
+    pub fn run(&mut self, schedule: &mut dyn Schedule) -> Result<FinetuneReport> {
+        let rt = Runtime::global();
+        let start = Instant::now();
+        let mut tracker = LossTracker::new();
+        let mut trace: Vec<(PrecisionConfig, usize)> = Vec::new();
+        let mut val_curve = Vec::new();
+        let mut diverged = false;
+
+        let mut vrng = self.task.split_rng("valid");
+        let val_set: Vec<ClsBatch> =
+            (0..self.cfg.val_batches).map(|_| self.make_batch(&mut vrng)).collect();
+
+        'epochs: for epoch in 0..self.cfg.epochs {
+            let mut rng =
+                Pcg32::new(self.cfg.seed ^ ((epoch as u64 + 1) << 32) ^ 0xF17E);
+            for _ in 0..self.cfg.batches_per_epoch {
+                let batch = self.make_batch(&mut rng);
+                let pc = schedule.current();
+                let exe =
+                    rt.load(&self.man.model_path("cls", Self::train_artifact_kind(pc.mode))?)?;
+                let lr = self.cfg.lr.at(self.state.step + 1) as f32;
+                let mut inputs = Vec::with_capacity(3 * self.state.params.len() + 5);
+                inputs.extend(self.state.params.iter().cloned());
+                inputs.extend(self.state.m.iter().cloned());
+                inputs.extend(self.state.v.iter().cloned());
+                inputs.push(HostTensor::scalar_f32((self.state.step + 1) as f32));
+                inputs.push(HostTensor::i32(
+                    vec![self.batch, self.seq_len],
+                    batch.tokens.clone(),
+                ));
+                inputs.push(HostTensor::i32(vec![self.batch], batch.labels.clone()));
+                inputs.push(HostTensor::f32(vec![5], pc.as_qcfg().to_vec()));
+                inputs.push(HostTensor::scalar_f32(lr));
+                let outs = exe.run(&inputs)?;
+                let loss = self.state.absorb_step_output(outs)? as f64;
+                tracker.record(self.state.step, loss);
+                match trace.last_mut() {
+                    Some((last, n)) if *last == pc => *n += 1,
+                    _ => trace.push((pc, 1)),
+                }
+                if tracker.diverged() {
+                    diverged = true;
+                    crate::warn!("fine-tuning diverged at step {}", self.state.step);
+                    break 'epochs;
+                }
+            }
+            let (val_loss, val_acc) = self.evaluate(&val_set)?;
+            val_curve.push((self.state.step, val_loss));
+            schedule.observe_validation(val_loss);
+            crate::info!(
+                "epoch {epoch}: val {val_loss:.4} acc {:.1}% | {}",
+                val_acc * 100.0,
+                schedule.describe()
+            );
+        }
+
+        let (final_val_loss, final_accuracy) = self.evaluate(&val_set)?;
+        if let Some(path) = &self.cfg.checkpoint {
+            checkpoint::save_checkpoint(path, &self.state, &self.man.cls)?;
+            crate::info!("checkpoint saved to {path:?}");
+        }
+        Ok(FinetuneReport {
+            steps: self.state.step,
+            final_val_loss,
+            final_accuracy,
+            diverged,
+            trace,
+            val_curve,
+            schedule_desc: schedule.describe(),
+            wall_s: start.elapsed().as_secs_f64(),
+        })
+    }
+}

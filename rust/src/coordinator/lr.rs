@@ -1,0 +1,127 @@
+//! Learning-rate schedules (owned by L3; the AOT graph takes lr as a
+//! runtime scalar).
+//!
+//! The paper (Appendix B): Inverse Square Root for training from
+//! scratch, Polynomial Decay for fine-tuning.
+
+/// A learning-rate schedule; `step` is 1-based.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    Constant {
+        lr: f64,
+    },
+    /// fairseq-style inverse-sqrt with linear warmup.
+    InverseSqrt {
+        peak_lr: f64,
+        warmup_steps: u64,
+    },
+    /// Linear-to-zero polynomial decay (power 1.0) from `lr` over
+    /// `total_steps`, with optional warmup.
+    Polynomial {
+        lr: f64,
+        warmup_steps: u64,
+        total_steps: u64,
+    },
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: u64) -> f64 {
+        let s = step.max(1) as f64;
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::InverseSqrt { peak_lr, warmup_steps } => {
+                let w = warmup_steps.max(1) as f64;
+                peak_lr * (s / w).min((w / s).sqrt())
+            }
+            LrSchedule::Polynomial { lr, warmup_steps, total_steps } => {
+                let w = warmup_steps.max(1) as f64;
+                let t = total_steps.max(1) as f64;
+                if s <= w {
+                    lr * s / w
+                } else {
+                    lr * ((t - s) / (t - w)).max(0.0)
+                }
+            }
+        }
+    }
+
+    /// Parse `"const:0.001"`, `"isqrt:0.003:400"`,
+    /// `"poly:0.0001:100:5000"`.
+    pub fn parse(s: &str) -> crate::Result<LrSchedule> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let bad = || crate::Error::Config(format!("bad lr schedule '{s}'"));
+        let f = |x: &str| x.parse::<f64>().map_err(|_| bad());
+        let u = |x: &str| x.parse::<u64>().map_err(|_| bad());
+        match parts.as_slice() {
+            ["const", lr] => Ok(LrSchedule::Constant { lr: f(lr)? }),
+            ["isqrt", lr, w] => {
+                Ok(LrSchedule::InverseSqrt { peak_lr: f(lr)?, warmup_steps: u(w)? })
+            }
+            ["poly", lr, w, t] => Ok(LrSchedule::Polynomial {
+                lr: f(lr)?,
+                warmup_steps: u(w)?,
+                total_steps: u(t)?,
+            }),
+            _ => Err(bad()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        let s = LrSchedule::Constant { lr: 0.01 };
+        assert_eq!(s.at(1), 0.01);
+        assert_eq!(s.at(10_000), 0.01);
+    }
+
+    #[test]
+    fn inverse_sqrt_warms_up_then_decays() {
+        let s = LrSchedule::InverseSqrt { peak_lr: 1.0, warmup_steps: 100 };
+        assert!((s.at(50) - 0.5).abs() < 1e-12);
+        assert!((s.at(100) - 1.0).abs() < 1e-12);
+        assert!((s.at(400) - 0.5).abs() < 1e-12); // sqrt(100/400) = 0.5
+        assert!(s.at(401) < s.at(400));
+    }
+
+    #[test]
+    fn polynomial_hits_zero_at_end() {
+        let s = LrSchedule::Polynomial { lr: 1.0, warmup_steps: 10, total_steps: 100 };
+        assert!((s.at(5) - 0.5).abs() < 1e-12);
+        assert!((s.at(10) - 1.0).abs() < 1e-12);
+        assert!((s.at(55) - 0.5).abs() < 1e-12);
+        assert_eq!(s.at(100), 0.0);
+        assert_eq!(s.at(200), 0.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(LrSchedule::parse("const:0.01").unwrap(), LrSchedule::Constant { lr: 0.01 });
+        assert_eq!(
+            LrSchedule::parse("isqrt:0.003:400").unwrap(),
+            LrSchedule::InverseSqrt { peak_lr: 0.003, warmup_steps: 400 }
+        );
+        assert_eq!(
+            LrSchedule::parse("poly:1e-4:100:5000").unwrap(),
+            LrSchedule::Polynomial { lr: 1e-4, warmup_steps: 100, total_steps: 5000 }
+        );
+        assert!(LrSchedule::parse("bogus").is_err());
+        assert!(LrSchedule::parse("isqrt:x:400").is_err());
+    }
+
+    #[test]
+    fn never_negative() {
+        for sched in [
+            LrSchedule::Constant { lr: 0.1 },
+            LrSchedule::InverseSqrt { peak_lr: 0.1, warmup_steps: 10 },
+            LrSchedule::Polynomial { lr: 0.1, warmup_steps: 5, total_steps: 50 },
+        ] {
+            for step in 1..200 {
+                assert!(sched.at(step) >= 0.0, "{sched:?} at {step}");
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator: training loops, the DSQ dynamic precision controller
+//! glue, checkpoints, and the CLI surface.
+
+pub mod cli;
+pub mod finetune;
+pub mod lr;
+pub mod trainer;
+
+pub use cli::dispatch;
+pub use finetune::{FinetuneConfig, FinetuneReport, Finetuner};
+pub use lr::LrSchedule;
+pub use trainer::{TrainReport, Trainer, TrainerConfig};

@@ -1,0 +1,152 @@
+//! Number formats and their hardware costs.
+//!
+//! Cost conventions (normalization target: one int32 MAC ≡ 1.0, one
+//! 32-bit DRAM element ≡ 32 bits):
+//!
+//! * **fixed-point b-bit MAC**: `(b₁·b₂)/32²` — multiplier area/energy is
+//!   proportional to the product of operand widths (standard array
+//!   multiplier scaling; also what makes the paper's fixed-16 row exactly
+//!   0.25×).
+//! * **BFP m-bit MAC**: `A·(m₁·m₂)/32² + B·max(m₁,m₂)/32` — a mantissa
+//!   multiply plus the per-element alignment/normalization shifter that
+//!   scales linearly with width. Fitting the paper's BFP-32 (0.56×) and
+//!   BFP-16 (0.18×) rows gives **A = 0.40, B = 0.16**; the stashing rows
+//!   then come out at 0.104 (paper 0.10) as a *prediction*.
+//! * **fp32 MAC**: 1.2 (aligner + normalizer over int32; the paper
+//!   normalizes to fixed-32 and leaves fp32 rows unscored — we do the
+//!   same in tables, this constant only feeds the roofline).
+//! * **storage**: fixed-b = `b` bits/element; BFP-b = `b + 4`
+//!   bits/element (sign+mantissa `b`, amortized shared exponent 8/16 =
+//!   0.5, container padding — fitted: BFP-32 → 36/32 = 1.13×, BFP-16 →
+//!   20/32 = 0.63×, both matching the paper exactly).
+
+use crate::schedule::QuantMode;
+
+/// Fitted BFP MAC constants (DESIGN.md §6).
+pub const BFP_MAC_MUL: f64 = 0.40;
+pub const BFP_MAC_SHIFT: f64 = 0.16;
+/// fp32 MAC cost relative to int32 (roofline only).
+pub const FP32_MAC: f64 = 1.2;
+/// BFP per-element storage overhead in bits (exponent share + padding).
+pub const BFP_STORAGE_OVERHEAD_BITS: f64 = 4.0;
+
+/// A concrete number format for one tensor/operand.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum NumFormat {
+    /// IEEE-754 binary32.
+    Fp32,
+    /// Fixed point with `b` total bits (sign + magnitude/fraction).
+    Fixed(f64),
+    /// Block floating point with `m` mantissa bits (box 16, 8-bit
+    /// shared exponent).
+    Bfp(f64),
+}
+
+impl NumFormat {
+    /// Map a schedule (mode, bits) pair onto a format. Bits ≥ 25 mean
+    /// "effectively full precision" numerically, but the *hardware* cost
+    /// still reflects the container (32-bit fixed / BFP-32): the paper's
+    /// `[32,32,32,32]` rows are real 32-bit hardware paths.
+    pub fn from_qbits(mode: QuantMode, bits: f32) -> NumFormat {
+        match mode {
+            QuantMode::Fp32 => NumFormat::Fp32,
+            QuantMode::Fixed => NumFormat::Fixed(bits as f64),
+            QuantMode::Bfp => NumFormat::Bfp(bits as f64),
+        }
+    }
+
+    /// Storage bits per element in DRAM.
+    pub fn storage_bits(&self) -> f64 {
+        match *self {
+            NumFormat::Fp32 => 32.0,
+            NumFormat::Fixed(b) => b,
+            NumFormat::Bfp(m) => m + BFP_STORAGE_OVERHEAD_BITS,
+        }
+    }
+
+    pub fn is_bfp(&self) -> bool {
+        matches!(self, NumFormat::Bfp(_))
+    }
+}
+
+/// Relative cost of one MAC with operand formats `a` and `b`
+/// (int32 MAC ≡ 1.0).
+pub fn mac_cost(a: NumFormat, b: NumFormat) -> f64 {
+    use NumFormat::*;
+    match (a, b) {
+        (Fp32, _) | (_, Fp32) => FP32_MAC,
+        (Fixed(b1), Fixed(b2)) => (b1 * b2) / 1024.0,
+        (Bfp(m1), Bfp(m2)) => {
+            BFP_MAC_MUL * (m1 * m2) / 1024.0 + BFP_MAC_SHIFT * m1.max(m2) / 32.0
+        }
+        // Mixed fixed/BFP operands: treat the fixed side as a degenerate
+        // one-box BFP (same multiplier, shared alignment path).
+        (Fixed(b1), Bfp(m2)) | (Bfp(m2), Fixed(b1)) => {
+            BFP_MAC_MUL * (b1 * m2) / 1024.0 + BFP_MAC_SHIFT * b1.max(m2) / 32.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_mac_matches_paper_static_rows() {
+        // fixed32 = 1.00x (the normalization anchor), fixed16 = 0.25x.
+        assert!((mac_cost(NumFormat::Fixed(32.0), NumFormat::Fixed(32.0)) - 1.0).abs() < 1e-12);
+        assert!((mac_cost(NumFormat::Fixed(16.0), NumFormat::Fixed(16.0)) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bfp_mac_matches_paper_static_rows() {
+        // BFP32 = 0.56x, BFP16 = 0.18x (the two fitted anchors).
+        let c32 = mac_cost(NumFormat::Bfp(32.0), NumFormat::Bfp(32.0));
+        let c16 = mac_cost(NumFormat::Bfp(16.0), NumFormat::Bfp(16.0));
+        assert!((c32 - 0.56).abs() < 0.005, "bfp32 {c32}");
+        assert!((c16 - 0.18).abs() < 0.005, "bfp16 {c16}");
+    }
+
+    #[test]
+    fn bfp_stash_prediction_near_paper() {
+        // Prediction check (not fitted): mean of the three GEMMs of a
+        // [16,4,4,16] BFP stashing step = 0.104 vs paper 0.10.
+        let f = |a, b| mac_cost(NumFormat::Bfp(a), NumFormat::Bfp(b));
+        let mean = (f(16.0, 16.0) + f(4.0, 4.0) + f(4.0, 16.0)) / 3.0;
+        assert!((mean - 0.10).abs() < 0.01, "stash-bfp arith {mean}");
+    }
+
+    #[test]
+    fn storage_matches_paper_dram_anchors() {
+        // BFP32 -> 36/32 = 1.125 (paper 1.13), BFP16 -> 20/32 = 0.625 (0.63).
+        assert_eq!(NumFormat::Bfp(32.0).storage_bits() / 32.0, 1.125);
+        assert_eq!(NumFormat::Bfp(16.0).storage_bits() / 32.0, 0.625);
+        assert_eq!(NumFormat::Fixed(16.0).storage_bits() / 32.0, 0.5);
+        assert_eq!(NumFormat::Fp32.storage_bits(), 32.0);
+    }
+
+    #[test]
+    fn mac_cost_monotone_in_bits() {
+        for b in [2.0, 4.0, 8.0, 16.0, 24.0] {
+            let big = b * 2.0;
+            assert!(
+                mac_cost(NumFormat::Bfp(b), NumFormat::Bfp(b))
+                    < mac_cost(NumFormat::Bfp(big), NumFormat::Bfp(big))
+            );
+            assert!(
+                mac_cost(NumFormat::Fixed(b), NumFormat::Fixed(b))
+                    < mac_cost(NumFormat::Fixed(big), NumFormat::Fixed(big))
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_operand_cost_symmetric() {
+        let a = mac_cost(NumFormat::Bfp(4.0), NumFormat::Bfp(16.0));
+        let b = mac_cost(NumFormat::Bfp(16.0), NumFormat::Bfp(4.0));
+        assert_eq!(a, b);
+        let c = mac_cost(NumFormat::Fixed(4.0), NumFormat::Bfp(16.0));
+        let d = mac_cost(NumFormat::Bfp(16.0), NumFormat::Fixed(4.0));
+        assert_eq!(c, d);
+    }
+}

@@ -1,0 +1,35 @@
+//! Hardware cost model: arithmetic operations and DRAM traffic for
+//! quantized transformer training (the framework behind the paper's
+//! "Arith Ops" and "DRAM R/W" columns and Figure 1).
+//!
+//! The paper derives these columns from a performance-modeling framework
+//! calibrated on a production MSFP system (Darvish Rouhani et al.); the
+//! hardware itself is unavailable, so this module rebuilds the model from
+//! first principles with constants calibrated once against the paper's
+//! *static* rows — every other number (stashing rows, DSQ rows, WMT
+//! table, roofline) is then a prediction. Calibration derivation:
+//! DESIGN.md §6; per-cell fit: EXPERIMENTS.md.
+//!
+//! Layout:
+//! * [`formats`] — number formats and per-MAC / per-element-storage costs;
+//! * [`workload`] — transformer training workloads as GEMM lists
+//!   (paper-scale IWSLT/WMT 6-layer and RoBERTa-base, plus the local
+//!   testbed dims);
+//! * [`training`] — per-step cost of a workload under a
+//!   [`crate::schedule::PrecisionConfig`], split into the paper's
+//!   components (fwd GEMM, stash, backward GEMMs, optimizer);
+//! * [`tables`] — normalized table rows (fixed-point-32 ≡ 1.00×);
+//! * [`roofline`] — Figure 1: operational intensity vs attainable
+//!   performance.
+
+pub mod formats;
+pub mod roofline;
+pub mod tables;
+pub mod training;
+pub mod workload;
+
+pub use formats::NumFormat;
+pub use roofline::{Machine, RooflinePoint};
+pub use tables::{normalized_row, CostRow};
+pub use training::{step_cost, StepCost};
+pub use workload::{Gemm, GemmKind, TransformerWorkload, WorkloadKind};

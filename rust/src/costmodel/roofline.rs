@@ -1,0 +1,142 @@
+//! Figure 1: the Roofline model.
+//!
+//! Operational intensity `I = ops / DRAM-bytes`; attainable performance
+//! `P = min(peak, I × bandwidth)`. The paper's Figure 1 places (1)
+//! non-quantized, (2) statically quantized and (3) DSQ training on the
+//! intensity axis and argues DSQ moves the workload toward the machine
+//! balance point `I_opt = peak / bandwidth` because it cuts DRAM traffic
+//! far more than it cuts (effective) arithmetic *throughput need*.
+//!
+//! "Operations" here are raw MACs (the work that must happen regardless
+//! of format) and "bytes" are the format-dependent DRAM traffic from the
+//! cost model — matching the paper's definition (quantization does not
+//! change how many mathematical operations the training step performs,
+//! it changes how many bytes move and how cheap each MAC is).
+
+use super::training::StepCost;
+
+/// A machine for the roofline: peak compute and DRAM bandwidth.
+#[derive(Clone, Copy, Debug)]
+pub struct Machine {
+    pub name: &'static str,
+    /// Peak throughput in MAC/s (int32-MAC-equivalents).
+    pub peak_macs_per_s: f64,
+    /// DRAM bandwidth in bytes/s.
+    pub dram_bytes_per_s: f64,
+}
+
+impl Machine {
+    /// An A100-SXM-80GB-like balance point (the paper's testbed):
+    /// ~312 TFLOPS tensor / 2 ~= 156 TMAC/s, 2.0 TB/s HBM.
+    pub fn a100_like() -> Machine {
+        Machine { name: "A100-like", peak_macs_per_s: 156e12, dram_bytes_per_s: 2.0e12 }
+    }
+
+    /// An edge/on-device accelerator profile (the paper's motivation):
+    /// 4 TMAC/s, 25 GB/s LPDDR.
+    pub fn edge_like() -> Machine {
+        Machine { name: "edge-like", peak_macs_per_s: 4e12, dram_bytes_per_s: 25e9 }
+    }
+
+    /// Machine balance point `I_opt` in MAC/byte.
+    pub fn balance(&self) -> f64 {
+        self.peak_macs_per_s / self.dram_bytes_per_s
+    }
+
+    /// Attainable performance at intensity `i` (MAC/s).
+    pub fn attainable(&self, i: f64) -> f64 {
+        (i * self.dram_bytes_per_s).min(self.peak_macs_per_s)
+    }
+}
+
+/// One point on the roofline plot.
+#[derive(Clone, Debug)]
+pub struct RooflinePoint {
+    pub label: String,
+    /// Operational intensity (MAC/byte).
+    pub intensity: f64,
+    /// Attainable performance on the machine (MAC/s).
+    pub attainable: f64,
+    /// Fraction of peak.
+    pub peak_fraction: f64,
+    pub memory_bound: bool,
+}
+
+/// Place a per-step cost on a machine's roofline.
+pub fn place(machine: &Machine, label: &str, cost: &StepCost) -> RooflinePoint {
+    let intensity = cost.raw_macs / cost.dram_bytes();
+    let attainable = machine.attainable(intensity);
+    RooflinePoint {
+        label: label.to_string(),
+        intensity,
+        attainable,
+        peak_fraction: attainable / machine.peak_macs_per_s,
+        memory_bound: intensity < machine.balance(),
+    }
+}
+
+/// The series for the roofline curve itself (log-spaced intensities).
+pub fn roofline_curve(machine: &Machine, points: usize) -> Vec<(f64, f64)> {
+    (0..points)
+        .map(|i| {
+            let x = 0.1 * (10_000.0f64).powf(i as f64 / (points - 1) as f64);
+            (x, machine.attainable(x))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::training::step_cost;
+    use crate::costmodel::workload::TransformerWorkload;
+    use crate::schedule::{PrecisionConfig, QuantMode};
+
+    #[test]
+    fn balance_points() {
+        let a100 = Machine::a100_like();
+        assert!((a100.balance() - 78.0).abs() < 1.0);
+        assert!(Machine::edge_like().balance() > 100.0);
+    }
+
+    #[test]
+    fn attainable_clips_at_peak() {
+        let m = Machine::a100_like();
+        assert_eq!(m.attainable(1e9), m.peak_macs_per_s);
+        assert!(m.attainable(1.0) < m.peak_macs_per_s);
+    }
+
+    #[test]
+    fn paper_figure1_ordering() {
+        // Figure 1's claim: I(fp32/fixed32) < I(static quant) < I(DSQ),
+        // i.e. DSQ moves training toward (or past) the balance point.
+        let w = TransformerWorkload::iwslt_6layer();
+        let m = Machine::a100_like();
+        let p1 = place(&m, "fixed32", &step_cost(&w, &PrecisionConfig::uniform(QuantMode::Fixed, 32.0)));
+        let p2 = place(&m, "bfp16", &step_cost(&w, &PrecisionConfig::uniform(QuantMode::Bfp, 16.0)));
+        let p3 = place(
+            &m,
+            "dsq[2,2,2,16]",
+            &step_cost(&w, &PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0)),
+        );
+        assert!(p1.intensity < p2.intensity, "{} < {}", p1.intensity, p2.intensity);
+        assert!(p2.intensity < p3.intensity, "{} < {}", p2.intensity, p3.intensity);
+        // Transformer training is memory-bound at fp32/fixed32 (Ivanov
+        // et al.) on the A100 profile.
+        assert!(p1.memory_bound);
+        // ...and DSQ raises attainable performance.
+        assert!(p3.attainable > p1.attainable);
+    }
+
+    #[test]
+    fn curve_is_monotone_then_flat() {
+        let m = Machine::a100_like();
+        let curve = roofline_curve(&m, 64);
+        assert_eq!(curve.len(), 64);
+        for w in curve.windows(2) {
+            assert!(w[1].0 > w[0].0);
+            assert!(w[1].1 >= w[0].1);
+        }
+        assert_eq!(curve.last().unwrap().1, m.peak_macs_per_s);
+    }
+}

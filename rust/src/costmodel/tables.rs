@@ -1,0 +1,195 @@
+//! Normalized table rows (the paper's "Arith Ops (↓)" and "DRAM R/W (↓)"
+//! columns, fixed-point-32 ≡ 1.00×) and the standard method lists.
+
+use super::training::{fixed32_reference, step_cost, StepCost};
+use super::workload::TransformerWorkload;
+use crate::schedule::{PrecisionConfig, QuantMode};
+
+/// One table row: a method + its relative hardware costs.
+#[derive(Clone, Debug)]
+pub struct CostRow {
+    pub method: String,
+    pub precision: String,
+    /// Relative arithmetic cost (fixed32 = 1.0); None for the fp32 row
+    /// (the paper leaves it unscored, "-").
+    pub arith_rel: Option<f64>,
+    pub dram_rel: Option<f64>,
+    /// Absolute per-step cost (for roofline / cumulative accounting).
+    pub step: StepCost,
+}
+
+impl CostRow {
+    pub fn fmt_paper_style(&self) -> String {
+        let fmt = |v: Option<f64>| match v {
+            None => "      -".to_string(),
+            Some(x) if x < 0.1 => format!("{x:7.3}x"),
+            Some(x) => format!("{x:7.2}x"),
+        };
+        format!(
+            "{:<18} {:<16} {} {}",
+            self.method,
+            self.precision,
+            fmt(self.arith_rel),
+            fmt(self.dram_rel)
+        )
+    }
+}
+
+/// Relative costs for a static config on a workload.
+pub fn normalized_row(
+    w: &TransformerWorkload,
+    method: &str,
+    p: &PrecisionConfig,
+    score: bool,
+) -> CostRow {
+    let base = fixed32_reference(w);
+    let c = step_cost(w, p);
+    CostRow {
+        method: method.to_string(),
+        precision: p.notation(),
+        arith_rel: score.then_some(c.arith_macs / base.arith_macs),
+        dram_rel: score.then_some(c.dram_bits / base.dram_bits),
+        step: c,
+    }
+}
+
+/// Relative cost of a *schedule trace*: per-level step counts from a DSQ
+/// run, time-weighted (this is how the paper's DSQ rows are produced).
+pub fn dsq_trace_row(
+    w: &TransformerWorkload,
+    trace: &[(PrecisionConfig, usize)],
+) -> CostRow {
+    let base = fixed32_reference(w);
+    let total_steps: usize = trace.iter().map(|(_, n)| n).sum();
+    let mut acc = StepCost::default();
+    for (p, n) in trace {
+        acc.add(&step_cost(w, p).scale(*n as f64));
+    }
+    let avg = acc.scale(1.0 / total_steps.max(1) as f64);
+    CostRow {
+        method: "DSQ (BFP)".to_string(),
+        precision: "-".to_string(),
+        arith_rel: Some(avg.arith_macs / base.arith_macs),
+        dram_rel: Some(avg.dram_bits / base.dram_bits),
+        step: avg,
+    }
+}
+
+/// The standard method list of Tables 1 and 6 (without the DSQ row,
+/// which needs a schedule trace).
+pub fn standard_methods() -> Vec<(&'static str, PrecisionConfig, bool)> {
+    vec![
+        ("Floating-point", PrecisionConfig::FP32, false),
+        ("Fixed-point", PrecisionConfig::uniform(QuantMode::Fixed, 32.0), true),
+        ("Fixed-point", PrecisionConfig::uniform(QuantMode::Fixed, 16.0), true),
+        ("Block FP", PrecisionConfig::uniform(QuantMode::Bfp, 32.0), true),
+        ("Block FP", PrecisionConfig::uniform(QuantMode::Bfp, 16.0), true),
+        ("Stashing (Fixed)", PrecisionConfig::stashing(QuantMode::Fixed), true),
+        ("Stashing (BFP)", PrecisionConfig::stashing(QuantMode::Bfp), true),
+    ]
+}
+
+/// Paper Table 1/6 reference values for the cost columns, used by tests
+/// and EXPERIMENTS.md reporting: (method, precision, arith, dram).
+pub const PAPER_COST_ROWS: &[(&str, &str, f64, f64)] = &[
+    ("Fixed-point", "[32,32,32,32]", 1.00, 1.00),
+    ("Fixed-point", "[16,16,16,16]", 0.25, 0.50),
+    ("Block FP", "[32,32,32,32]", 0.56, 1.13),
+    ("Block FP", "[16,16,16,16]", 0.18, 0.63),
+    ("Stashing (Fixed)", "[16,4,4,16]", 0.13, 0.31),
+    ("Stashing (BFP)", "[16,4,4,16]", 0.10, 0.45),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_rows_against_paper() {
+        let w = TransformerWorkload::iwslt_6layer();
+        let rows: Vec<CostRow> = standard_methods()
+            .iter()
+            .map(|(m, p, s)| normalized_row(&w, m, p, *s))
+            .collect();
+        // Align by (method, precision) with the paper's reference values.
+        for (method, precision, pa, pd) in PAPER_COST_ROWS {
+            let row = rows
+                .iter()
+                .find(|r| r.method == *method && r.precision == *precision)
+                .unwrap_or_else(|| panic!("missing row {method} {precision}"));
+            let a = row.arith_rel.unwrap();
+            let d = row.dram_rel.unwrap();
+            assert!(
+                (a - pa).abs() <= 0.03,
+                "{method} {precision}: arith {a:.3} vs paper {pa}"
+            );
+            assert!(
+                (d - pd).abs() <= 0.08,
+                "{method} {precision}: dram {d:.3} vs paper {pd}"
+            );
+        }
+    }
+
+    #[test]
+    fn fp32_row_unscored() {
+        let w = TransformerWorkload::iwslt_6layer();
+        let row = normalized_row(&w, "Floating-point", &PrecisionConfig::FP32, false);
+        assert!(row.arith_rel.is_none());
+        assert!(row.fmt_paper_style().contains('-'));
+    }
+
+    #[test]
+    fn dsq_trace_blends_levels() {
+        let w = TransformerWorkload::iwslt_6layer();
+        let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
+        let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+        let all_lo = dsq_trace_row(&w, &[(lo, 100)]);
+        let all_hi = dsq_trace_row(&w, &[(hi, 100)]);
+        let mix = dsq_trace_row(&w, &[(lo, 96), (hi, 4)]);
+        let (alo, ahi, amix) =
+            (all_lo.arith_rel.unwrap(), all_hi.arith_rel.unwrap(), mix.arith_rel.unwrap());
+        assert!(alo < amix && amix < ahi, "{alo} {amix} {ahi}");
+        // The headline: mostly-2-bit training lands near the paper's 0.012x.
+        assert!((amix - 0.012).abs() < 0.01, "dsq arith {amix}");
+    }
+
+    #[test]
+    fn headline_ratios_vs_fixed16() {
+        // Paper abstract: DSQ reduces arith by 20.95x and DRAM by 2.55x
+        // vs 16-bit fixed point. Using the paper's own DSQ IWSLT row
+        // (0.012 / 0.196): 0.25/0.012 = 20.8, 0.50/0.196 = 2.55.
+        let w = TransformerWorkload::iwslt_6layer();
+        let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
+        let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+        let dsq = dsq_trace_row(&w, &[(lo, 96), (hi, 4)]);
+        let f16 = normalized_row(
+            &w,
+            "Fixed-point",
+            &PrecisionConfig::uniform(QuantMode::Fixed, 16.0),
+            true,
+        );
+        let arith_ratio = f16.arith_rel.unwrap() / dsq.arith_rel.unwrap();
+        let dram_ratio = f16.dram_rel.unwrap() / dsq.dram_rel.unwrap();
+        assert!(arith_ratio > 10.0, "arith reduction {arith_ratio:.1}x (paper 20.95x)");
+        assert!(dram_ratio > 1.3, "dram reduction {dram_ratio:.2}x (paper 2.55x)");
+    }
+
+    #[test]
+    fn rows_consistent_across_workloads() {
+        // Relative *uniform* rows are nearly workload-independent (all
+        // components scale together); stash rows shift with the
+        // activation/weight mix. Check uniform stability.
+        for w in
+            [TransformerWorkload::iwslt_6layer(), TransformerWorkload::roberta_base()]
+        {
+            let r = normalized_row(
+                &w,
+                "Fixed-point",
+                &PrecisionConfig::uniform(QuantMode::Fixed, 16.0),
+                true,
+            );
+            assert!((r.arith_rel.unwrap() - 0.25).abs() < 1e-9);
+            assert!((r.dram_rel.unwrap() - 0.50).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Transformer training workloads as GEMM lists.
+//!
+//! A workload is every GEMM executed in one training step, with its
+//! dimensions and operand kinds (weight vs activation) — that
+//! distinction drives the traffic model: weight GEMMs have an optimizer
+//! and a weight-gradient, activation×activation GEMMs (attention) stash
+//! both operands.
+//!
+//! Paper-scale builders reproduce the evaluation section's models:
+//! * IWSLT/WMT 6-layer base transformer (Vaswani et al.): d=512,
+//!   ff=2048, h=8, 6+6 layers, ~4096 tokens/batch (Appendix B);
+//! * RoBERTa-base (GLUE fine-tuning): d=768, ff=3072, h=12, 12 layers,
+//!   batch 32 × 128 tokens.
+
+/// Operand/role classification of one GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKind {
+    /// `activations (tokens×k) @ weights (k×n)` — linear layers, logits.
+    Weight,
+    /// `activations @ activations` — attention score and context GEMMs.
+    Activation,
+}
+
+/// One GEMM: `(m × k) @ (k × n)`, executed `count` times per step.
+#[derive(Clone, Copy, Debug)]
+pub struct Gemm {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub count: usize,
+    pub kind: GemmKind,
+}
+
+impl Gemm {
+    pub fn macs(&self) -> f64 {
+        self.m as f64 * self.k as f64 * self.n as f64 * self.count as f64
+    }
+
+    /// Elements of the left (activation) operand.
+    pub fn lhs_elems(&self) -> f64 {
+        (self.m * self.k * self.count) as f64
+    }
+
+    /// Elements of the right operand (weights or activations).
+    pub fn rhs_elems(&self) -> f64 {
+        (self.k * self.n * self.count) as f64
+    }
+
+    /// Elements of the output.
+    pub fn out_elems(&self) -> f64 {
+        (self.m * self.n * self.count) as f64
+    }
+}
+
+/// Which paper workload a table row refers to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// 6-layer base transformer on IWSLT'17-style batches.
+    Iwslt6Layer,
+    /// 6-layer base transformer on WMT'14-style batches (same model,
+    /// same max-tokens → same per-step shape; kept distinct for
+    /// reporting).
+    Wmt6Layer,
+    /// RoBERTa-base fine-tuning (MNLI/QNLI).
+    RobertaBase,
+    /// The local small testbed model (matches artifacts/manifest.json).
+    Testbed,
+}
+
+/// A full training-step workload.
+#[derive(Clone, Debug)]
+pub struct TransformerWorkload {
+    pub name: &'static str,
+    pub gemms: Vec<Gemm>,
+    /// Total trainable parameters (optimizer traffic).
+    pub params: f64,
+}
+
+fn encoder_layer(gemms: &mut Vec<Gemm>, tokens: usize, d: usize, ff: usize, seq: usize) {
+    let w = GemmKind::Weight;
+    let a = GemmKind::Activation;
+    // q, k, v, o projections.
+    gemms.push(Gemm { m: tokens, k: d, n: d, count: 4, kind: w });
+    // Attention: scores QK^T and context AV. Per batch row of length
+    // `seq`: (seq × d) @ (d × seq) and (seq × seq) @ (seq × d) across all
+    // heads together (head split doesn't change MACs or element counts).
+    let rows = tokens / seq;
+    gemms.push(Gemm { m: seq, k: d, n: seq, count: rows, kind: a });
+    gemms.push(Gemm { m: seq, k: seq, n: d, count: rows, kind: a });
+    // FFN.
+    gemms.push(Gemm { m: tokens, k: d, n: ff, count: 1, kind: w });
+    gemms.push(Gemm { m: tokens, k: ff, n: d, count: 1, kind: w });
+}
+
+fn decoder_layer(
+    gemms: &mut Vec<Gemm>,
+    tgt_tokens: usize,
+    src_tokens: usize,
+    d: usize,
+    ff: usize,
+    tgt_seq: usize,
+    src_seq: usize,
+) {
+    let w = GemmKind::Weight;
+    let a = GemmKind::Activation;
+    // Self-attention.
+    gemms.push(Gemm { m: tgt_tokens, k: d, n: d, count: 4, kind: w });
+    let rows = tgt_tokens / tgt_seq;
+    gemms.push(Gemm { m: tgt_seq, k: d, n: tgt_seq, count: rows, kind: a });
+    gemms.push(Gemm { m: tgt_seq, k: tgt_seq, n: d, count: rows, kind: a });
+    // Cross-attention: q from target, k/v from source.
+    gemms.push(Gemm { m: tgt_tokens, k: d, n: d, count: 2, kind: w }); // q, o
+    gemms.push(Gemm { m: src_tokens, k: d, n: d, count: 2, kind: w }); // k, v
+    let _ = src_seq;
+    gemms.push(Gemm { m: tgt_seq, k: d, n: src_seq, count: rows, kind: a });
+    gemms.push(Gemm { m: tgt_seq, k: src_seq, n: d, count: rows, kind: a });
+    // FFN.
+    gemms.push(Gemm { m: tgt_tokens, k: d, n: ff, count: 1, kind: w });
+    gemms.push(Gemm { m: tgt_tokens, k: ff, n: d, count: 1, kind: w });
+}
+
+/// Parameter count for a (pre-LN) encoder-decoder transformer.
+fn seq2seq_params(
+    d: usize,
+    ff: usize,
+    enc_layers: usize,
+    dec_layers: usize,
+    vocab: usize,
+    seq: usize,
+) -> f64 {
+    let attn = 4 * d * d + 4 * d;
+    let ffn = d * ff + ff + ff * d + d;
+    let ln = 2 * d;
+    let enc = enc_layers * (attn + ffn + 2 * ln);
+    let dec = dec_layers * (2 * attn + ffn + 3 * ln);
+    let emb = 2 * vocab * d + 2 * seq * d;
+    (enc + dec + emb + 2 * ln) as f64
+}
+
+impl TransformerWorkload {
+    /// 6-layer base transformer, IWSLT-style max-tokens batch (4096).
+    pub fn iwslt_6layer() -> Self {
+        Self::seq2seq("iwslt17-transformer6", 512, 2048, 6, 6, 32_000, 64, 4096)
+    }
+
+    /// Same architecture on WMT14 batches (Appendix D).
+    pub fn wmt_6layer() -> Self {
+        Self::seq2seq("wmt14-transformer6", 512, 2048, 6, 6, 37_000, 64, 4096)
+    }
+
+    /// A generic seq2seq builder.
+    pub fn seq2seq(
+        name: &'static str,
+        d: usize,
+        ff: usize,
+        enc_layers: usize,
+        dec_layers: usize,
+        vocab: usize,
+        seq: usize,
+        max_tokens: usize,
+    ) -> Self {
+        let tokens = (max_tokens / seq) * seq; // whole sentences
+        let mut gemms = Vec::new();
+        for _ in 0..enc_layers {
+            encoder_layer(&mut gemms, tokens, d, ff, seq);
+        }
+        for _ in 0..dec_layers {
+            decoder_layer(&mut gemms, tokens, tokens, d, ff, seq, seq);
+        }
+        // Output projection (tied embedding still does the GEMM).
+        gemms.push(Gemm { m: tokens, k: d, n: vocab, count: 1, kind: GemmKind::Weight });
+        TransformerWorkload {
+            name,
+            gemms,
+            params: seq2seq_params(d, ff, enc_layers, dec_layers, vocab, seq),
+        }
+    }
+
+    /// RoBERTa-base fine-tuning on GLUE (batch 32 × 128 tokens).
+    pub fn roberta_base() -> Self {
+        Self::encoder_classifier("roberta-base", 768, 3072, 12, 50_265, 128, 32, 3)
+    }
+
+    /// A generic encoder-classifier builder.
+    pub fn encoder_classifier(
+        name: &'static str,
+        d: usize,
+        ff: usize,
+        layers: usize,
+        vocab: usize,
+        seq: usize,
+        batch: usize,
+        nclasses: usize,
+    ) -> Self {
+        let tokens = batch * seq;
+        let mut gemms = Vec::new();
+        for _ in 0..layers {
+            encoder_layer(&mut gemms, tokens, d, ff, seq);
+        }
+        // Pooled classification head.
+        gemms.push(Gemm { m: batch, k: d, n: d, count: 1, kind: GemmKind::Weight });
+        gemms.push(Gemm { m: batch, k: d, n: nclasses, count: 1, kind: GemmKind::Weight });
+        let attn = 4 * d * d + 4 * d;
+        let ffn = d * ff + ff + ff * d + d;
+        let params =
+            (layers * (attn + ffn + 4 * d) + vocab * d + seq * d + d * d + d * nclasses) as f64;
+        TransformerWorkload { name, gemms, params }
+    }
+
+    /// The local testbed model (dims from the artifact manifest).
+    pub fn testbed(
+        d: usize,
+        ff: usize,
+        enc_layers: usize,
+        dec_layers: usize,
+        vocab: usize,
+        seq: usize,
+        batch: usize,
+    ) -> Self {
+        Self::seq2seq("testbed", d, ff, enc_layers, dec_layers, vocab, seq, batch * seq)
+    }
+
+    pub fn for_kind(kind: WorkloadKind) -> Self {
+        match kind {
+            WorkloadKind::Iwslt6Layer => Self::iwslt_6layer(),
+            WorkloadKind::Wmt6Layer => Self::wmt_6layer(),
+            WorkloadKind::RobertaBase => Self::roberta_base(),
+            WorkloadKind::Testbed => Self::testbed(128, 256, 2, 2, 256, 24, 16),
+        }
+    }
+
+    pub fn total_macs(&self) -> f64 {
+        self.gemms.iter().map(Gemm::macs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iwslt_workload_sane() {
+        let w = TransformerWorkload::iwslt_6layer();
+        // Base transformer ~= 60-75M params (we carry two embeddings +
+        // learned positions).
+        assert!(w.params > 40e6 && w.params < 110e6, "params {}", w.params);
+        // Fwd MACs per 4096-token batch: O(100 GMAC).
+        assert!(w.total_macs() > 1e10 && w.total_macs() < 1e12, "macs {}", w.total_macs());
+        assert!(w.gemms.iter().any(|g| g.kind == GemmKind::Activation));
+    }
+
+    #[test]
+    fn roberta_workload_sane() {
+        let w = TransformerWorkload::roberta_base();
+        // RoBERTa-base ~ 125M params.
+        assert!(w.params > 100e6 && w.params < 150e6, "params {}", w.params);
+    }
+
+    #[test]
+    fn gemm_helpers() {
+        let g = Gemm { m: 4, k: 8, n: 2, count: 3, kind: GemmKind::Weight };
+        assert_eq!(g.macs(), 4.0 * 8.0 * 2.0 * 3.0);
+        assert_eq!(g.lhs_elems(), 96.0);
+        assert_eq!(g.rhs_elems(), 48.0);
+        assert_eq!(g.out_elems(), 24.0);
+    }
+
+    #[test]
+    fn attention_macs_scale_quadratically_with_seq() {
+        let short = TransformerWorkload::seq2seq("s", 256, 512, 2, 2, 1000, 32, 2048);
+        let long = TransformerWorkload::seq2seq("l", 256, 512, 2, 2, 1000, 128, 2048);
+        let attn = |w: &TransformerWorkload| -> f64 {
+            w.gemms.iter().filter(|g| g.kind == GemmKind::Activation).map(Gemm::macs).sum()
+        };
+        // Same token count, 4x sequence length -> ~4x attention MACs.
+        let ratio = attn(&long) / attn(&short);
+        assert!((3.0..5.0).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn testbed_matches_manifest_dims() {
+        let w = TransformerWorkload::for_kind(WorkloadKind::Testbed);
+        assert!(w.total_macs() > 1e6);
+        assert!(w.params > 50_000.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Batch assembly for fixed-shape artifacts.
+//!
+//! Artifact shapes are baked at lowering, so every batch is exactly
+//! `(B, S)`/`(B, T)` with PAD fill. The batcher buckets sentence pairs by
+//! source length before grouping so padding waste stays low (the cheap
+//! stand-in for fairseq's max-tokens batching, which the fixed-shape
+//! constraint rules out), then shuffles bucket order per epoch.
+
+use crate::util::rng::Pcg32;
+
+use super::translation::SentencePair;
+use super::{BOS, PAD};
+
+/// One seq2seq batch in artifact layout (row-major `(B, len)`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub src: Vec<i32>,
+    pub tgt_in: Vec<i32>,
+    pub tgt_out: Vec<i32>,
+    pub batch: usize,
+    pub src_len: usize,
+    pub tgt_len: usize,
+    /// Non-pad target tokens (loss normalizer).
+    pub ntokens: usize,
+}
+
+/// One classification batch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClsBatch {
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    pub batch: usize,
+    pub seq_len: usize,
+}
+
+/// Fixed-shape batcher for sentence pairs.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    pub batch: usize,
+    pub src_len: usize,
+    pub tgt_len: usize,
+}
+
+impl Batcher {
+    pub fn new(batch: usize, src_len: usize, tgt_len: usize) -> Self {
+        Batcher { batch, src_len, tgt_len }
+    }
+
+    /// Assemble one batch from exactly `self.batch` pairs (truncating
+    /// overlong sentences — sample generators shouldn't produce them).
+    pub fn assemble(&self, pairs: &[SentencePair]) -> Batch {
+        assert_eq!(pairs.len(), self.batch, "need exactly B pairs");
+        let (b, s, t) = (self.batch, self.src_len, self.tgt_len);
+        let mut src = vec![PAD; b * s];
+        let mut tgt_in = vec![PAD; b * t];
+        let mut tgt_out = vec![PAD; b * t];
+        let mut ntokens = 0;
+        for (i, p) in pairs.iter().enumerate() {
+            let sl = p.src.len().min(s);
+            src[i * s..i * s + sl].copy_from_slice(&p.src[..sl]);
+            let tl = p.tgt.len().min(t);
+            // Teacher forcing: tgt_in = BOS + tgt[..-1], tgt_out = tgt.
+            tgt_in[i * t] = BOS;
+            for j in 0..tl.saturating_sub(1).min(t - 1) {
+                tgt_in[i * t + j + 1] = p.tgt[j];
+            }
+            tgt_out[i * t..i * t + tl].copy_from_slice(&p.tgt[..tl]);
+            ntokens += tl;
+        }
+        Batch { src, tgt_in, tgt_out, batch: b, src_len: s, tgt_len: t, ntokens }
+    }
+
+    /// Build an epoch of batches from a pool of pairs: length-bucket,
+    /// group, shuffle batch order. Leftover pairs (< B) are dropped.
+    pub fn epoch(&self, pool: &mut Vec<SentencePair>, rng: &mut Pcg32) -> Vec<Batch> {
+        pool.sort_by_key(|p| p.src.len());
+        let mut batches: Vec<Batch> =
+            pool.chunks(self.batch).filter(|c| c.len() == self.batch).map(|c| self.assemble(c)).collect();
+        rng.shuffle(&mut batches);
+        batches
+    }
+
+    /// Fraction of src positions that are real tokens (padding efficiency).
+    pub fn src_efficiency(batches: &[Batch]) -> f64 {
+        let total: usize = batches.iter().map(|b| b.src.len()).sum();
+        let real: usize =
+            batches.iter().map(|b| b.src.iter().filter(|&&x| x != PAD).count()).sum();
+        real as f64 / total.max(1) as f64
+    }
+}
+
+/// Assemble a classification batch (exactly B examples).
+pub fn assemble_cls(examples: &[super::classify::Example], seq_len: usize) -> ClsBatch {
+    let b = examples.len();
+    let mut tokens = vec![PAD; b * seq_len];
+    let mut labels = vec![0i32; b];
+    for (i, ex) in examples.iter().enumerate() {
+        let l = ex.tokens.len().min(seq_len);
+        tokens[i * seq_len..i * seq_len + l].copy_from_slice(&ex.tokens[..l]);
+        labels[i] = ex.label;
+    }
+    ClsBatch { tokens, labels, batch: b, seq_len }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::translation::{TranslationConfig, TranslationTask, Variant};
+    use crate::util::prop::Prop;
+
+    fn make_pool(n: usize, seed: u64) -> (TranslationTask, Vec<SentencePair>) {
+        let task = TranslationTask::new(TranslationConfig {
+            vocab: 256,
+            src_len: 24,
+            tgt_len: 24,
+            variant: Variant::Iwslt,
+            seed,
+        });
+        let mut rng = task.split_rng("train");
+        let pool = (0..n).map(|_| task.sample_pair(&mut rng)).collect();
+        (task, pool)
+    }
+
+    #[test]
+    fn assemble_shapes_and_teacher_forcing() {
+        let (_, pool) = make_pool(16, 1);
+        let b = Batcher::new(16, 24, 24);
+        let batch = b.assemble(&pool);
+        assert_eq!(batch.src.len(), 16 * 24);
+        assert_eq!(batch.tgt_in.len(), 16 * 24);
+        for i in 0..16 {
+            assert_eq!(batch.tgt_in[i * 24], BOS);
+            // tgt_in is tgt_out shifted right by one (the final target
+            // token — EOS — never appears in the input).
+            for j in 0..23 {
+                if batch.tgt_in[i * 24 + j + 1] != PAD {
+                    assert_eq!(batch.tgt_in[i * 24 + j + 1], batch.tgt_out[i * 24 + j]);
+                }
+            }
+        }
+        assert_eq!(
+            batch.ntokens,
+            pool.iter().map(|p| p.tgt.len()).sum::<usize>()
+        );
+    }
+
+    #[test]
+    fn epoch_batches_complete_and_shuffled() {
+        let (task, mut pool) = make_pool(100, 2);
+        let b = Batcher::new(16, 24, 24);
+        let mut rng = task.split_rng("train");
+        let batches = b.epoch(&mut pool, &mut rng);
+        assert_eq!(batches.len(), 6); // 100/16 = 6 full batches
+        for batch in &batches {
+            assert_eq!(batch.src.len(), 16 * 24);
+        }
+    }
+
+    #[test]
+    fn bucketing_improves_padding_efficiency() {
+        let (task, mut pool) = make_pool(400, 3);
+        let b = Batcher::new(16, 24, 24);
+        let mut rng = task.split_rng("train");
+        // Unbucketed: assemble in arrival order.
+        let unbucketed: Vec<Batch> =
+            pool.chunks(16).filter(|c| c.len() == 16).map(|c| b.assemble(c)).collect();
+        let bucketed = b.epoch(&mut pool, &mut rng);
+        // Bucketing can't hurt global efficiency (same tokens, same
+        // slots) — it matters for max-len-per-batch; just sanity check.
+        let eu = Batcher::src_efficiency(&unbucketed);
+        let eb = Batcher::src_efficiency(&bucketed);
+        assert!((eu - eb).abs() < 1e-9);
+        assert!(eb > 0.5);
+    }
+
+    #[test]
+    fn cls_batch_assembly() {
+        let t = crate::data::classify::ClassifyTask::new(crate::data::classify::ClassifyConfig {
+            vocab: 256,
+            seq_len: 48,
+            nclasses: 3,
+            seed: 4,
+        });
+        let mut rng = t.split_rng("train");
+        let exs: Vec<_> = (0..16).map(|_| t.sample(&mut rng)).collect();
+        let batch = assemble_cls(&exs, 48);
+        assert_eq!(batch.tokens.len(), 16 * 48);
+        assert_eq!(batch.labels.len(), 16);
+    }
+
+    #[test]
+    fn batch_rows_never_exceed_shape_property() {
+        Prop::new("batcher output always fits artifact shape").cases(40).run(
+            |rng, size| {
+                let n = 16 * (1 + size as usize / 30);
+                let (task, pool) = make_pool(n, rng.next_u64());
+                (task, pool)
+            },
+            |(task, pool)| {
+                let b = Batcher::new(16, 24, 24);
+                let mut pool = pool.clone();
+                let mut rng = task.split_rng("train");
+                for batch in b.epoch(&mut pool, &mut rng) {
+                    if batch.src.len() != 16 * 24 || batch.tgt_in.len() != 16 * 24 {
+                        return Err("wrong shape".into());
+                    }
+                    if batch.src.iter().any(|&t| !(0..256).contains(&t)) {
+                        return Err("token out of range".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

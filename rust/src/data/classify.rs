@@ -1,0 +1,203 @@
+//! Synthetic entailment-style classification (the GLUE stand-in).
+//!
+//! An example is `[premise SEP hypothesis]`; the label is determined by
+//! the overlap structure between the mapped premise and the hypothesis:
+//!
+//! * **entailment (0)** — the hypothesis is a contiguous, token-mapped
+//!   fragment of the premise;
+//! * **contradiction (1)** — the hypothesis is disjoint from the mapped
+//!   premise (sampled from tokens the premise does not map to);
+//! * **neutral (2, MNLI-style 3-way only)** — half fragment, half
+//!   unrelated tokens.
+//!
+//! With `nclasses = 2` this is the QNLI shape (entail / not-entail),
+//! with `nclasses = 3` the MNLI shape. The decision signal is
+//! distributed across the sequence, so the mean-pooled encoder must
+//! learn the premise↔hypothesis token correspondence — a real (if
+//! small) inference task, not a keyword lookup.
+
+use crate::util::rng::Pcg32;
+
+use super::{FIRST_TOKEN, SEP};
+
+/// Task configuration. `seq_len` must match the cls artifact.
+#[derive(Clone, Debug)]
+pub struct ClassifyConfig {
+    pub vocab: i32,
+    pub seq_len: usize,
+    pub nclasses: usize,
+    pub seed: u64,
+}
+
+/// One labeled example.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub label: i32,
+}
+
+/// A seeded synthetic entailment task.
+#[derive(Clone, Debug)]
+pub struct ClassifyTask {
+    pub cfg: ClassifyConfig,
+    /// Premise->hypothesis token correspondence (bijective).
+    map: Vec<i32>,
+}
+
+impl ClassifyTask {
+    pub fn new(cfg: ClassifyConfig) -> Self {
+        assert!(cfg.vocab > FIRST_TOKEN + 8, "vocab too small");
+        assert!((2..=3).contains(&cfg.nclasses), "nclasses must be 2 or 3");
+        assert!(cfg.seq_len >= 8, "seq_len too small");
+        let mut rng = Pcg32::new(cfg.seed ^ 0xC1A55);
+        let mut map: Vec<i32> = (FIRST_TOKEN..cfg.vocab).collect();
+        rng.shuffle(&mut map);
+        ClassifyTask { cfg, map }
+    }
+
+    #[inline]
+    fn map(&self, tok: i32) -> i32 {
+        self.map[(tok - FIRST_TOKEN) as usize]
+    }
+
+    /// Sample one example from the stream.
+    pub fn sample(&self, rng: &mut Pcg32) -> Example {
+        let label = rng.below(self.cfg.nclasses as u32) as i32;
+        // Premise takes ~60% of the sequence, hypothesis the rest.
+        let p_len = (self.cfg.seq_len * 3 / 5).saturating_sub(1).max(4);
+        let h_len = self.cfg.seq_len - p_len - 1; // 1 for SEP
+        let premise: Vec<i32> = (0..p_len)
+            .map(|_| rng.range(FIRST_TOKEN as u32, self.cfg.vocab as u32) as i32)
+            .collect();
+        let mapped: Vec<i32> = premise.iter().map(|&t| self.map(t)).collect();
+        let mapped_set: std::collections::HashSet<i32> = mapped.iter().copied().collect();
+
+        fn unrelated(
+            rng: &mut Pcg32,
+            vocab: i32,
+            mapped_set: &std::collections::HashSet<i32>,
+        ) -> i32 {
+            loop {
+                let t = rng.range(FIRST_TOKEN as u32, vocab as u32) as i32;
+                if !mapped_set.contains(&t) {
+                    return t;
+                }
+            }
+        }
+
+        let hypothesis: Vec<i32> = match label {
+            0 => {
+                // Entailment: contiguous mapped fragment.
+                let start = rng.below((p_len - h_len.min(p_len) + 1) as u32) as usize;
+                (0..h_len).map(|i| mapped[(start + i) % p_len]).collect()
+            }
+            1 => (0..h_len).map(|_| unrelated(rng, self.cfg.vocab, &mapped_set)).collect(),
+            _ => {
+                // Neutral: first half fragment, second half unrelated.
+                let start = rng.below(p_len as u32) as usize;
+                (0..h_len)
+                    .map(|i| {
+                        if i < h_len / 2 {
+                            mapped[(start + i) % p_len]
+                        } else {
+                            unrelated(rng, self.cfg.vocab, &mapped_set)
+                        }
+                    })
+                    .collect()
+            }
+        };
+
+        let mut tokens = premise;
+        tokens.push(SEP);
+        tokens.extend(hypothesis);
+        debug_assert_eq!(tokens.len(), self.cfg.seq_len);
+        Example { tokens, label }
+    }
+
+    pub fn split_rng(&self, split: &str) -> Pcg32 {
+        let tag = match split {
+            "train" => 11u64,
+            "valid" => 12,
+            "test" => 13,
+            other => panic!("unknown split '{other}'"),
+        };
+        Pcg32::new(self.cfg.seed.wrapping_mul(0x9E3779B97F4A7C15) ^ tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(nclasses: usize) -> ClassifyTask {
+        ClassifyTask::new(ClassifyConfig { vocab: 256, seq_len: 48, nclasses, seed: 3 })
+    }
+
+    #[test]
+    fn examples_have_artifact_shape() {
+        let t = task(3);
+        let mut rng = t.split_rng("train");
+        for _ in 0..100 {
+            let ex = t.sample(&mut rng);
+            assert_eq!(ex.tokens.len(), 48);
+            assert!((0..3).contains(&ex.label));
+            assert_eq!(ex.tokens.iter().filter(|&&t| t == SEP).count(), 1);
+        }
+    }
+
+    #[test]
+    fn labels_cover_all_classes() {
+        let t = task(3);
+        let mut rng = t.split_rng("train");
+        let mut seen = [0usize; 3];
+        for _ in 0..300 {
+            seen[t.sample(&mut rng).label as usize] += 1;
+        }
+        assert!(seen.iter().all(|&c| c > 50), "unbalanced: {seen:?}");
+    }
+
+    #[test]
+    fn entailment_hypothesis_is_mapped_fragment() {
+        let t = task(2);
+        let mut rng = t.split_rng("train");
+        for _ in 0..50 {
+            let ex = t.sample(&mut rng);
+            if ex.label != 0 {
+                continue;
+            }
+            let sep = ex.tokens.iter().position(|&x| x == SEP).unwrap();
+            let premise = &ex.tokens[..sep];
+            let hyp = &ex.tokens[sep + 1..];
+            let mapped: std::collections::HashSet<i32> =
+                premise.iter().map(|&x| t.map(x)).collect();
+            assert!(hyp.iter().all(|h| mapped.contains(h)));
+        }
+    }
+
+    #[test]
+    fn contradiction_hypothesis_is_disjoint() {
+        let t = task(2);
+        let mut rng = t.split_rng("train");
+        for _ in 0..50 {
+            let ex = t.sample(&mut rng);
+            if ex.label != 1 {
+                continue;
+            }
+            let sep = ex.tokens.iter().position(|&x| x == SEP).unwrap();
+            let premise = &ex.tokens[..sep];
+            let hyp = &ex.tokens[sep + 1..];
+            let mapped: std::collections::HashSet<i32> =
+                premise.iter().map(|&x| t.map(x)).collect();
+            assert!(hyp.iter().all(|h| !mapped.contains(h)));
+        }
+    }
+
+    #[test]
+    fn two_way_task_has_no_neutral() {
+        let t = task(2);
+        let mut rng = t.split_rng("train");
+        for _ in 0..100 {
+            assert!(t.sample(&mut rng).label < 2);
+        }
+    }
+}

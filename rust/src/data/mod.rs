@@ -1,0 +1,36 @@
+//! Synthetic corpora + batching.
+//!
+//! The paper's datasets (IWSLT'17/IWSLT'14, WMT'14, GLUE MNLI/QNLI) are
+//! external gates; per DESIGN.md §4 they are replaced by seeded synthetic
+//! tasks that exercise the identical training paths:
+//!
+//! * [`translation`] — seq2seq "translation": a deterministic,
+//!   attention-requiring transformation of a source sentence (per-token
+//!   bijective vocabulary map + sentence reversal; the harder WMT-style
+//!   variant adds bigram dependence). BLEU against the reference is a
+//!   real generation metric on this task.
+//! * [`classify`] — entailment-style premise/hypothesis pairs with
+//!   2- or 3-way labels decidable from token-overlap structure
+//!   (QNLI ~ 2-way, MNLI ~ 3-way).
+//! * [`batcher`] — fixed-shape batch assembly with padding (artifact
+//!   shapes are baked at lowering), length bucketing to limit padding
+//!   waste, and epoch shuffling.
+//!
+//! Token conventions match the L2 model: 0 = PAD, 1 = BOS, 2 = EOS,
+//! 3 = SEP/marker, real tokens start at 4.
+
+pub mod batcher;
+pub mod classify;
+pub mod translation;
+
+pub use batcher::{Batch, Batcher, ClsBatch};
+pub use classify::{ClassifyConfig, ClassifyTask};
+pub use translation::{TranslationConfig, TranslationTask, Variant};
+
+/// Reserved token ids (match python/compile/model.py).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+/// First unreserved vocabulary id.
+pub const FIRST_TOKEN: i32 = 4;

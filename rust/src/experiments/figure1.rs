@@ -1,0 +1,116 @@
+//! Figure 1: the Roofline picture — (1) non-quantized, (2) static
+//! quantization, (3) DSQ, against the machine balance point.
+
+use crate::costmodel::{self, roofline, Machine, TransformerWorkload};
+use crate::schedule::{PrecisionConfig, QuantMode};
+use crate::util::json::Json;
+use crate::Result;
+
+use super::ExperimentOpts;
+
+/// The three points of the paper's Figure 1 + extras.
+pub fn figure_points(w: &TransformerWorkload, m: &Machine) -> Vec<roofline::RooflinePoint> {
+    let configs: Vec<(&str, PrecisionConfig)> = vec![
+        ("(1) fp32 (non-quantized)", PrecisionConfig::FP32),
+        ("fixed-point 32", PrecisionConfig::uniform(QuantMode::Fixed, 32.0)),
+        ("(2) static quant: BFP16", PrecisionConfig::uniform(QuantMode::Bfp, 16.0)),
+        ("static stashing [16,4,4,16]", PrecisionConfig::stashing(QuantMode::Bfp)),
+        ("(3) DSQ @ [2,2,2,16]", PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0)),
+    ];
+    configs
+        .into_iter()
+        .map(|(label, p)| roofline::place(m, label, &costmodel::step_cost(w, &p)))
+        .collect()
+}
+
+pub fn print_roofline(m: &Machine, w: &TransformerWorkload) {
+    println!(
+        "roofline on {} (peak {:.0} TMAC/s, bw {:.0} GB/s, balance I_opt = {:.1} MAC/byte), workload {}",
+        m.name,
+        m.peak_macs_per_s / 1e12,
+        m.dram_bytes_per_s / 1e9,
+        m.balance(),
+        w.name
+    );
+    println!(
+        "{:<32} {:>14} {:>16} {:>10} {:>8}",
+        "config", "I (MAC/byte)", "attainable", "% peak", "bound"
+    );
+    for p in figure_points(w, m) {
+        println!(
+            "{:<32} {:>14.2} {:>12.2e}/s {:>9.1}% {:>8}",
+            p.label,
+            p.intensity,
+            p.attainable,
+            p.peak_fraction * 100.0,
+            if p.memory_bound { "memory" } else { "compute" }
+        );
+    }
+}
+
+pub fn run(opts: &ExperimentOpts) -> Result<()> {
+    let w = TransformerWorkload::iwslt_6layer();
+    let mut md = String::from("# Figure 1: Roofline placements\n\n");
+    let mut json_machines = Vec::new();
+    for m in [Machine::a100_like(), Machine::edge_like()] {
+        print_roofline(&m, &w);
+        println!();
+        md.push_str(&format!(
+            "## {} (balance I_opt = {:.1} MAC/byte)\n\n| config | intensity | attainable (MAC/s) | % of peak | bound |\n|---|---|---|---|---|\n",
+            m.name,
+            m.balance()
+        ));
+        let pts = figure_points(&w, &m);
+        for p in &pts {
+            md.push_str(&format!(
+                "| {} | {:.2} | {:.3e} | {:.1}% | {} |\n",
+                p.label,
+                p.intensity,
+                p.attainable,
+                p.peak_fraction * 100.0,
+                if p.memory_bound { "memory" } else { "compute" }
+            ));
+        }
+        md.push('\n');
+        json_machines.push(Json::obj(vec![
+            ("machine", Json::str(m.name)),
+            ("balance", Json::num(m.balance())),
+            (
+                "points",
+                Json::arr(pts.iter().map(|p| {
+                    Json::obj(vec![
+                        ("label", Json::str(&p.label)),
+                        ("intensity", Json::num(p.intensity)),
+                        ("attainable", Json::num(p.attainable)),
+                        ("peak_fraction", Json::num(p.peak_fraction)),
+                        ("memory_bound", Json::Bool(p.memory_bound)),
+                    ])
+                })),
+            ),
+            (
+                "curve",
+                Json::arr(
+                    roofline::roofline_curve(&m, 32)
+                        .into_iter()
+                        .map(|(x, y)| Json::arr([Json::num(x), Json::num(y)])),
+                ),
+            ),
+        ]));
+    }
+    super::write_report(&opts.out, "figure1", &md, &Json::arr(json_machines))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_points_ordering_matches_paper() {
+        let w = TransformerWorkload::iwslt_6layer();
+        let m = Machine::a100_like();
+        let pts = figure_points(&w, &m);
+        // Intensity must increase monotonically from (1) to (3).
+        let i: Vec<f64> = pts.iter().map(|p| p.intensity).collect();
+        assert!(i[0] < i[2] && i[2] < i[4], "{i:?}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §8).
+//!
+//! Each experiment combines the analytic cost columns (always) with real
+//! training runs on the synthetic stand-in tasks (unless `--no-train`),
+//! prints the paper-style table with paper reference values alongside,
+//! and writes `results/<id>.{md,json}`.
+
+pub mod figure1;
+pub mod table1;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Shared experiment options (from `dsq experiment` flags).
+#[derive(Clone, Debug)]
+pub struct ExperimentOpts {
+    pub artifacts: PathBuf,
+    pub out: PathBuf,
+    pub train_epochs: usize,
+    pub batches_per_epoch: usize,
+    /// false = cost columns only (fast, no PJRT).
+    pub train: bool,
+}
+
+impl ExperimentOpts {
+    pub fn quick(artifacts: PathBuf) -> Self {
+        ExperimentOpts {
+            artifacts,
+            out: PathBuf::from("results"),
+            train_epochs: 2,
+            batches_per_epoch: 20,
+            train: true,
+        }
+    }
+}
+
+/// Run one experiment by id.
+pub fn run(which: &str, opts: &ExperimentOpts) -> Result<()> {
+    match which {
+        "table1-iwslt" => table1::run_iwslt(opts),
+        "table1-glue" => table1::run_glue(opts),
+        "table4" => table4::run(opts),
+        "table5" => table5::run(opts),
+        "table6" => table6::run(opts),
+        "figure1" => figure1::run(opts),
+        "all" => {
+            for id in ["figure1", "table1-iwslt", "table1-glue", "table4", "table5", "table6"] {
+                crate::info!("=== experiment {id} ===");
+                run(id, opts)?;
+            }
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown experiment '{other}' (table1-iwslt, table1-glue, table4, table5, table6, figure1, all)"
+        ))),
+    }
+}
+
+/// Write an experiment report to `<out>/<id>.md` and `.json`.
+pub fn write_report(out: &Path, id: &str, markdown: &str, json: &Json) -> Result<()> {
+    std::fs::create_dir_all(out)?;
+    std::fs::write(out.join(format!("{id}.md")), markdown)?;
+    std::fs::write(out.join(format!("{id}.json")), json.to_string_pretty())?;
+    crate::info!("report written to {}/{id}.{{md,json}}", out.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_is_error() {
+        let opts = ExperimentOpts::quick(PathBuf::from("/nonexistent"));
+        assert!(run("bogus", &opts).is_err());
+    }
+
+    #[test]
+    fn write_report_creates_files() {
+        let dir = std::env::temp_dir().join(format!("dsq-exp-{}", std::process::id()));
+        write_report(&dir, "test", "# hi\n", &Json::obj(vec![("a", Json::num(1))])).unwrap();
+        assert!(dir.join("test.md").exists());
+        assert!(dir.join("test.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,100 @@
+//! Table 4 (Appendix B): stash-precision sweep — how aggressive can
+//! `[q0,q1,q2,16]` get before BLEU collapses?
+//!
+//! Paper reference (IWSLT14 DE-EN, Stashing BFP, fp32 = 35.22):
+//!
+//! | precision      | BLEU (Δ)        |
+//! |----------------|-----------------|
+//! | [2,2,2,16]     | 17.45 (−17.77)  |
+//! | [4,2,2,16]     | 33.51 (−1.71)   |
+//! | [4,4,4,16]     | 34.47 (−0.75)   |
+//! | [8,4,4,16]     | 34.47 (−0.75)   |
+//! | [8,8,8,16]     | 34.65 (−0.57)   |
+//! | [16,4,4,16]    | 34.78 (−0.44)   |
+//! | [16,8,8,16]    | 34.47 (−0.75)   |
+//!
+//! The reproduction target is the *shape*: [2,2,2,16] clearly behind,
+//! everything from [4,4,4,16] up clustered near fp32 — which is exactly
+//! the observation that justifies DSQ's ladder.
+
+use crate::coordinator::{Trainer, TrainerConfig};
+use crate::data::Variant;
+use crate::schedule::{PrecisionConfig, QuantMode, StaticSchedule, Schedule};
+use crate::util::json::Json;
+use crate::Result;
+
+use super::ExperimentOpts;
+
+pub const SWEEP: &[(&str, f64)] = &[
+    ("[2,2,2,16]", -17.77),
+    ("[4,2,2,16]", -1.71),
+    ("[4,4,4,16]", -0.75),
+    ("[8,4,4,16]", -0.75),
+    ("[8,8,8,16]", -0.57),
+    ("[16,4,4,16]", -0.44),
+    ("[16,8,8,16]", -0.75),
+];
+
+pub fn run(opts: &ExperimentOpts) -> Result<()> {
+    let mut md = String::from(
+        "# Table 4: stash precision sweep (Stashing BFP, synthetic IWSLT-style task)\n\n\
+         | precision | BLEU | Δ vs fp32 | paper Δ |\n|---|---|---|---|\n",
+    );
+    let mut json_rows = Vec::new();
+
+    // fp32 baseline first.
+    let fp32_bleu = if opts.train {
+        let report = train_one(opts, PrecisionConfig::FP32)?;
+        report.bleu
+    } else {
+        None
+    };
+    md.push_str(&format!(
+        "| fp32 [32,32,32,32] | {} | - | - |\n",
+        fp32_bleu.map_or("-".into(), |b| format!("{b:.2}"))
+    ));
+
+    for (setup, paper_delta) in SWEEP {
+        let p = PrecisionConfig::parse(QuantMode::Bfp, setup)?;
+        let (bleu, delta) = if opts.train {
+            let report = train_one(opts, p)?;
+            let delta = match (report.bleu, fp32_bleu) {
+                (Some(b), Some(f)) => Some(b - f),
+                _ => None,
+            };
+            (report.bleu, delta)
+        } else {
+            (None, None)
+        };
+        md.push_str(&format!(
+            "| {} | {} | {} | {paper_delta:+.2} |\n",
+            setup,
+            bleu.map_or("-".into(), |b| format!("{b:.2}")),
+            delta.map_or("-".into(), |d| format!("{d:+.2}")),
+        ));
+        json_rows.push(Json::obj(vec![
+            ("precision", Json::str(setup)),
+            ("bleu", bleu.map_or(Json::Null, Json::num)),
+            ("delta", delta.map_or(Json::Null, Json::num)),
+            ("paper_delta", Json::num(*paper_delta)),
+        ]));
+    }
+    println!("{md}");
+    super::write_report(&opts.out, "table4", &md, &Json::arr(json_rows))
+}
+
+fn train_one(
+    opts: &ExperimentOpts,
+    p: PrecisionConfig,
+) -> Result<crate::coordinator::TrainReport> {
+    let cfg = TrainerConfig {
+        artifacts: opts.artifacts.clone(),
+        seed: 0,
+        epochs: opts.train_epochs,
+        batches_per_epoch: opts.batches_per_epoch,
+        variant: Variant::Iwslt,
+        ..TrainerConfig::quick(opts.artifacts.clone())
+    };
+    let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(p));
+    Trainer::new(cfg)?.run(schedule.as_mut())
+}

@@ -1,0 +1,69 @@
+//! Table 5 (Appendix C): the effect of the gradient-output width `q3`
+//! under fixed-point stashing.
+//!
+//! Paper reference (IWSLT14, Stashing Fixed):
+//!
+//! | precision     | BLEU   |
+//! |---------------|--------|
+//! | [8,8,8,32]    | 34.08  |
+//! | [8,8,8,16]    | 31.94  |
+//! | [8,8,8,8]     | Failed |
+//!
+//! This is why every DSQ ladder keeps `q3 ≥ 16`: 8-bit per-tensor
+//! fixed-point gradients lose the dynamic range the backward pass needs
+//! and training diverges. The divergence detector (metrics::tracker) is
+//! what flags the "Failed" row here.
+
+use crate::coordinator::{Trainer, TrainerConfig};
+use crate::data::Variant;
+use crate::schedule::{PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use crate::util::json::Json;
+use crate::Result;
+
+use super::ExperimentOpts;
+
+pub const SWEEP: &[(&str, Option<f64>)] =
+    &[("[8,8,8,32]", Some(34.08)), ("[8,8,8,16]", Some(31.94)), ("[8,8,8,8]", None)];
+
+pub fn run(opts: &ExperimentOpts) -> Result<()> {
+    let mut md = String::from(
+        "# Table 5: gradient-output precision q3 (Stashing Fixed, synthetic IWSLT-style task)\n\n\
+         | precision | BLEU | val loss | diverged | paper BLEU |\n|---|---|---|---|---|\n",
+    );
+    let mut json_rows = Vec::new();
+    for (setup, paper) in SWEEP {
+        let p = PrecisionConfig::parse(QuantMode::Fixed, setup)?;
+        let (bleu, val, diverged) = if opts.train {
+            let cfg = TrainerConfig {
+                artifacts: opts.artifacts.clone(),
+                seed: 0,
+                epochs: opts.train_epochs,
+                batches_per_epoch: opts.batches_per_epoch,
+                variant: Variant::Iwslt,
+                ..TrainerConfig::quick(opts.artifacts.clone())
+            };
+            let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(p));
+            let report = Trainer::new(cfg)?.run(schedule.as_mut())?;
+            (report.bleu, Some(report.final_val_loss), report.diverged)
+        } else {
+            (None, None, false)
+        };
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {} |\n",
+            setup,
+            if diverged { "Failed".into() } else { bleu.map_or("-".into(), |b| format!("{b:.2}")) },
+            val.map_or("-".into(), |v| format!("{v:.3}")),
+            diverged,
+            paper.map_or("Failed".into(), |b| format!("{b:.2}")),
+        ));
+        json_rows.push(Json::obj(vec![
+            ("precision", Json::str(setup)),
+            ("bleu", bleu.map_or(Json::Null, Json::num)),
+            ("val_loss", val.map_or(Json::Null, Json::num)),
+            ("diverged", Json::Bool(diverged)),
+            ("paper_bleu", paper.map_or(Json::str("Failed"), Json::num)),
+        ]));
+    }
+    println!("{md}");
+    super::write_report(&opts.out, "table5", &md, &Json::arr(json_rows))
+}

@@ -1,0 +1,104 @@
+//! Table 6 (Appendix D): the WMT14 EN-DE variant of Table 1 — same
+//! method list on the harder task (paper trains 15 epochs only, BLEU
+//! 25.79 fp32; the bigram synthetic variant is likewise harder than the
+//! unigram one at equal budget).
+
+use crate::coordinator::{Trainer, TrainerConfig};
+use crate::costmodel::{self, TransformerWorkload};
+use crate::data::Variant;
+use crate::schedule::{PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use crate::util::json::Json;
+use crate::Result;
+
+use super::ExperimentOpts;
+
+/// Paper Table 6 BLEU deltas vs fp32 (25.79).
+pub const PAPER_WMT_DELTAS: &[(&str, &str, f64)] = &[
+    ("Fixed-point", "[32,32,32,32]", -0.38),
+    ("Fixed-point", "[16,16,16,16]", -2.39),
+    ("Block FP", "[32,32,32,32]", -0.03),
+    ("Block FP", "[16,16,16,16]", -0.18),
+    ("Stashing (Fixed)", "[16,4,4,16]", -3.93),
+    ("Stashing (BFP)", "[16,4,4,16]", -0.55),
+];
+
+pub fn run(opts: &ExperimentOpts) -> Result<()> {
+    let workload = TransformerWorkload::wmt_6layer();
+    let methods: Vec<(&str, PrecisionConfig)> = vec![
+        ("Floating-point", PrecisionConfig::FP32),
+        ("Fixed-point", PrecisionConfig::uniform(QuantMode::Fixed, 32.0)),
+        ("Fixed-point", PrecisionConfig::uniform(QuantMode::Fixed, 16.0)),
+        ("Block FP", PrecisionConfig::uniform(QuantMode::Bfp, 32.0)),
+        ("Block FP", PrecisionConfig::uniform(QuantMode::Bfp, 16.0)),
+        ("Stashing (Fixed)", PrecisionConfig::stashing(QuantMode::Fixed)),
+        ("Stashing (BFP)", PrecisionConfig::stashing(QuantMode::Bfp)),
+    ];
+
+    let mut md = String::from(
+        "# Table 6: WMT14-style translation (bigram synthetic variant)\n\n\
+         | method | precision | BLEU (Δ) | arith | dram | paper Δ |\n|---|---|---|---|---|---|\n",
+    );
+    let mut json_rows = Vec::new();
+    let mut fp32_bleu: Option<f64> = None;
+
+    for (method, p) in methods {
+        let scored = p.mode != QuantMode::Fp32;
+        let cost = costmodel::normalized_row(&workload, method, &p, scored);
+        let (bleu, delta, diverged) = if opts.train {
+            let cfg = TrainerConfig {
+                artifacts: opts.artifacts.clone(),
+                seed: 0,
+                epochs: opts.train_epochs,
+                batches_per_epoch: opts.batches_per_epoch,
+                variant: Variant::Wmt,
+                ..TrainerConfig::quick(opts.artifacts.clone())
+            };
+            let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(p));
+            let report = Trainer::new(cfg)?.run(schedule.as_mut())?;
+            if p.mode == QuantMode::Fp32 {
+                fp32_bleu = report.bleu;
+            }
+            let delta = match (report.bleu, fp32_bleu) {
+                (Some(b), Some(f)) if p.mode != QuantMode::Fp32 => Some(b - f),
+                _ => None,
+            };
+            (report.bleu, delta, report.diverged)
+        } else {
+            (None, None, false)
+        };
+
+        let paper_delta = PAPER_WMT_DELTAS
+            .iter()
+            .find(|(m, pr, _)| *m == method && *pr == p.notation())
+            .map(|(_, _, d)| *d);
+        let f = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.3}x"));
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} |\n",
+            method,
+            p.notation(),
+            if diverged {
+                "Failed".into()
+            } else {
+                bleu.map_or("-".into(), |b| format!(
+                    "{b:.2}{}",
+                    delta.map_or(String::new(), |d| format!(" ({d:+.2})"))
+                ))
+            },
+            f(cost.arith_rel),
+            f(cost.dram_rel),
+            paper_delta.map_or("-".into(), |d| format!("{d:+.2}")),
+        ));
+        json_rows.push(Json::obj(vec![
+            ("method", Json::str(method)),
+            ("precision", Json::str(&p.notation())),
+            ("bleu", bleu.map_or(Json::Null, Json::num)),
+            ("delta", delta.map_or(Json::Null, Json::num)),
+            ("arith_rel", cost.arith_rel.map_or(Json::Null, Json::num)),
+            ("dram_rel", cost.dram_rel.map_or(Json::Null, Json::num)),
+            ("paper_delta", paper_delta.map_or(Json::Null, Json::num)),
+            ("diverged", Json::Bool(diverged)),
+        ]));
+    }
+    println!("{md}");
+    super::write_report(&opts.out, "table6", &md, &Json::arr(json_rows))
+}

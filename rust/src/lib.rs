@@ -1,0 +1,57 @@
+//! # DSQ — Dynamic Stashing Quantization for Efficient Transformer Training
+//!
+//! Rust reproduction of Yang, Mullins, Lo & Zhao (EMNLP 2023 Findings):
+//! a quantized-training system in which **all GEMM operands are quantized**
+//! and the intermediate tensors *stashed* between the forward and backward
+//! passes are quantized far more aggressively (`q1`, the stash) than the
+//! compute path, with a **time-adaptive schedule** that starts at 2-bit
+//! block-floating-point and monotonically raises precision when the
+//! validation loss plateaus.
+//!
+//! Architecture (see `DESIGN.md`):
+//!
+//! * **L1/L2 (build time, python)** — Pallas quantizer kernels + a JAX
+//!   transformer whose autodiff implements the paper's Figure-2 dataflow;
+//!   AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **L3 (this crate)** — the training coordinator: loads the artifacts
+//!   through PJRT ([`runtime`]), synthesizes corpora ([`data`]), drives
+//!   training with the dynamic precision controller ([`schedule`],
+//!   [`coordinator`]), accounts hardware cost per step ([`costmodel`]),
+//!   scores BLEU/accuracy ([`metrics`]) and regenerates every table and
+//!   figure of the paper ([`experiments`]).
+//!
+//! Python never runs at request time: once `make artifacts` has produced
+//! the HLO text, the `dsq` binary is self-contained.
+
+pub mod bench;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod schedule;
+pub mod util;
+
+/// Crate-wide error type.
+#[derive(thiserror::Error, Debug)]
+pub enum Error {
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json error: {0}")]
+    Json(String),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("shape error: {0}")]
+    Shape(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("training diverged: {0}")]
+    Diverged(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

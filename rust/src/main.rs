@@ -1,0 +1,10 @@
+//! `dsq` — CLI entrypoint for the DSQ training coordinator.
+//!
+//! Subcommand dispatch lives here; each subcommand's implementation is in
+//! the library ([`dsq::coordinator`], [`dsq::experiments`], ...).
+
+fn main() {
+    dsq::util::logging::level_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(dsq::coordinator::cli::dispatch(&args));
+}

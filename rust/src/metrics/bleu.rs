@@ -1,0 +1,186 @@
+//! Corpus BLEU (Papineni et al. 2002) over token-id sequences.
+//!
+//! Standard BLEU-4: geometric mean of clipped n-gram precisions (n ≤ 4)
+//! × brevity penalty, accumulated at corpus level. Precision smoothing
+//! follows the common "+1 on higher orders when a count is zero"
+//! (Lin & Och smoothing-1-like) so short synthetic sentences don't
+//! zero the score. Token sequences stop at the first EOS/PAD, matching
+//! how the decode artifact emits hypotheses.
+
+use std::collections::HashMap;
+
+use crate::data::{EOS, PAD};
+
+/// Corpus BLEU result.
+#[derive(Clone, Debug)]
+pub struct BleuScore {
+    /// BLEU-4 in percent (0..100).
+    pub bleu: f64,
+    /// Per-order clipped precisions.
+    pub precisions: [f64; 4],
+    pub brevity_penalty: f64,
+    pub hyp_len: usize,
+    pub ref_len: usize,
+}
+
+/// Cut a raw decode row at BOS prefix / first EOS or PAD.
+pub fn sentence_tokens(row: &[i32]) -> Vec<i32> {
+    let start = usize::from(row.first() == Some(&crate::data::BOS));
+    row[start..]
+        .iter()
+        .take_while(|&&t| t != EOS && t != PAD)
+        .copied()
+        .collect()
+}
+
+fn ngram_counts(tokens: &[i32], n: usize) -> HashMap<&[i32], usize> {
+    let mut m: HashMap<&[i32], usize> = HashMap::new();
+    if tokens.len() >= n {
+        for w in tokens.windows(n) {
+            *m.entry(w).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Corpus BLEU over (hypothesis, reference) pairs.
+pub fn corpus_bleu(pairs: &[(Vec<i32>, Vec<i32>)]) -> BleuScore {
+    let mut matches = [0usize; 4];
+    let mut totals = [0usize; 4];
+    let mut hyp_len = 0usize;
+    let mut ref_len = 0usize;
+    for (hyp, reference) in pairs {
+        hyp_len += hyp.len();
+        ref_len += reference.len();
+        for n in 1..=4 {
+            let h = ngram_counts(hyp, n);
+            let r = ngram_counts(reference, n);
+            for (gram, &hc) in &h {
+                let rc = r.get(gram).copied().unwrap_or(0);
+                matches[n - 1] += hc.min(rc);
+            }
+            totals[n - 1] += hyp.len().saturating_sub(n - 1);
+        }
+    }
+
+    let mut precisions = [0f64; 4];
+    let mut log_sum = 0f64;
+    for n in 0..4 {
+        // Smoothing: +1 on HIGHER orders (n >= 2) with no matches; a
+        // zero unigram precision legitimately zeroes the score.
+        let (num, den) = if totals[n] == 0 {
+            (0.0, 1.0)
+        } else if matches[n] == 0 && n > 0 {
+            (1.0, totals[n] as f64 + 1.0)
+        } else {
+            (matches[n] as f64, totals[n] as f64)
+        };
+        precisions[n] = num / den;
+        log_sum += if precisions[n] > 0.0 { precisions[n].ln() } else { f64::NEG_INFINITY };
+    }
+
+    let bp = if hyp_len == 0 {
+        0.0
+    } else if hyp_len >= ref_len {
+        1.0
+    } else {
+        (1.0 - ref_len as f64 / hyp_len as f64).exp()
+    };
+    let bleu = if log_sum.is_finite() { 100.0 * bp * (log_sum / 4.0).exp() } else { 0.0 };
+    BleuScore { bleu, precisions, brevity_penalty: bp, hyp_len, ref_len }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_match_is_100() {
+        let r = vec![4, 5, 6, 7, 8, 9];
+        let s = corpus_bleu(&[(r.clone(), r)]);
+        assert!((s.bleu - 100.0).abs() < 1e-9, "{}", s.bleu);
+        assert_eq!(s.brevity_penalty, 1.0);
+    }
+
+    #[test]
+    fn disjoint_is_zero_ish() {
+        let s = corpus_bleu(&[(vec![4, 5, 6, 7], vec![8, 9, 10, 11])]);
+        assert!(s.bleu < 5.0, "{}", s.bleu);
+    }
+
+    #[test]
+    fn known_value_half_overlap() {
+        // hyp: "a b c d", ref: "a b e f" -> p1 = 2/4, p2 = 1/3 (only
+        // "a b" matches), p3 = 0/2 (smoothed 1/3), p4 = 0/1 (smoothed 1/2).
+        let s = corpus_bleu(&[(vec![1, 2, 3, 4], vec![1, 2, 5, 6])]);
+        assert!((s.precisions[0] - 0.5).abs() < 1e-12);
+        assert!((s.precisions[1] - 1.0 / 3.0).abs() < 1e-12);
+        let expected = 100.0 * (0.5f64.ln() / 4.0 + (1.0 / 3.0f64).ln() / 4.0
+            + (1.0 / 3.0f64).ln() / 4.0 + 0.5f64.ln() / 4.0)
+            .exp();
+        assert!((s.bleu - expected).abs() < 1e-9, "{} vs {expected}", s.bleu);
+    }
+
+    #[test]
+    fn brevity_penalty_punishes_short_hyps() {
+        let reference: Vec<i32> = (4..24).collect();
+        let short: Vec<i32> = (4..14).collect(); // 10 vs 20 tokens
+        let s = corpus_bleu(&[(short, reference.clone())]);
+        assert!((s.brevity_penalty - (1.0f64 - 2.0).exp()).abs() < 1e-12);
+        let full = corpus_bleu(&[(reference.clone(), reference)]);
+        assert!(s.bleu < full.bleu);
+    }
+
+    #[test]
+    fn clipping_prevents_repeated_unigram_gaming() {
+        // "the the the the" vs "the cat": clipped p1 = 1/4.
+        let s = corpus_bleu(&[(vec![7, 7, 7, 7], vec![7, 8])]);
+        assert!((s.precisions[0] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn corpus_level_accumulation() {
+        // Two sentences, one perfect, one disjoint: corpus BLEU must be
+        // far below 50 (geometric-mean behavior, not averaging).
+        let a = (vec![4, 5, 6, 7], vec![4, 5, 6, 7]);
+        let b = (vec![8, 9, 10, 11], vec![12, 13, 14, 15]);
+        let s = corpus_bleu(&[a, b]);
+        assert!(s.bleu > 10.0 && s.bleu < 80.0, "{}", s.bleu);
+    }
+
+    #[test]
+    fn sentence_tokens_strips_bos_eos_pad() {
+        assert_eq!(sentence_tokens(&[1, 5, 6, 2, 0, 0]), vec![5, 6]);
+        assert_eq!(sentence_tokens(&[5, 6, 0, 7]), vec![5, 6]);
+        assert_eq!(sentence_tokens(&[2, 5]), Vec::<i32>::new());
+        assert_eq!(sentence_tokens(&[1]), Vec::<i32>::new());
+    }
+
+    #[test]
+    fn empty_corpus_is_zero() {
+        let s = corpus_bleu(&[]);
+        assert_eq!(s.bleu, 0.0);
+    }
+
+    #[test]
+    fn range_property() {
+        use crate::util::prop::Prop;
+        Prop::new("BLEU in [0, 100]").cases(60).run(
+            |rng, size| {
+                let len = 1 + rng.below(size.max(2)) as usize;
+                let hyp: Vec<i32> = (0..len).map(|_| rng.range(4, 20) as i32).collect();
+                let rlen = 1 + rng.below(size.max(2)) as usize;
+                let reference: Vec<i32> = (0..rlen).map(|_| rng.range(4, 20) as i32).collect();
+                (hyp, reference)
+            },
+            |(h, r)| {
+                let s = corpus_bleu(&[(h.clone(), r.clone())]);
+                if (0.0..=100.0 + 1e-9).contains(&s.bleu) {
+                    Ok(())
+                } else {
+                    Err(format!("bleu {}", s.bleu))
+                }
+            },
+        );
+    }
+}

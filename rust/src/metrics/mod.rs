@@ -1,0 +1,27 @@
+//! Evaluation metrics: BLEU for the translation tables, accuracies for
+//! the GLUE-style tables, and the loss tracker feeding the DSQ
+//! controller's plateau detection.
+
+pub mod bleu;
+pub mod tracker;
+
+pub use bleu::{corpus_bleu, sentence_tokens, BleuScore};
+pub use tracker::LossTracker;
+
+/// Classification accuracy in percent.
+pub fn accuracy_pct(ncorrect: f64, total: f64) -> f64 {
+    if total <= 0.0 {
+        0.0
+    } else {
+        100.0 * ncorrect / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn accuracy_pct_basic() {
+        assert_eq!(super::accuracy_pct(3.0, 4.0), 75.0);
+        assert_eq!(super::accuracy_pct(0.0, 0.0), 0.0);
+    }
+}

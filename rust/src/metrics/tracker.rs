@@ -1,0 +1,173 @@
+//! Training-loss tracking: history, EMA smoothing, divergence detection.
+//!
+//! The DSQ controller consumes *validation* losses directly; this tracker
+//! watches the *training* loss stream for logging and for the failure
+//! mode Table 5 reproduces (fixed-point q3=8 diverges — detected here as
+//! NaN or sustained blow-up past `divergence_factor ×` the initial loss).
+
+use crate::util::stats::Ema;
+
+#[derive(Clone, Debug)]
+pub struct LossTracker {
+    history: Vec<(u64, f64)>,
+    ema: Ema,
+    initial: Option<f64>,
+    best: f64,
+    nan_seen: bool,
+    /// Loss above `divergence_factor * initial` (smoothed) = diverged.
+    pub divergence_factor: f64,
+}
+
+impl Default for LossTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LossTracker {
+    pub fn new() -> Self {
+        LossTracker {
+            history: Vec::new(),
+            ema: Ema::new(0.05),
+            initial: None,
+            best: f64::INFINITY,
+            nan_seen: false,
+            divergence_factor: 3.0,
+        }
+    }
+
+    pub fn record(&mut self, step: u64, loss: f64) {
+        if !loss.is_finite() {
+            self.nan_seen = true;
+        }
+        if self.initial.is_none() && loss.is_finite() {
+            self.initial = Some(loss);
+        }
+        if loss.is_finite() {
+            self.ema.update(loss);
+            self.best = self.best.min(loss);
+        }
+        self.history.push((step, loss));
+    }
+
+    pub fn smoothed(&self) -> Option<f64> {
+        self.ema.get()
+    }
+
+    pub fn best(&self) -> f64 {
+        self.best
+    }
+
+    pub fn last(&self) -> Option<f64> {
+        self.history.last().map(|&(_, l)| l)
+    }
+
+    pub fn len(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.history.is_empty()
+    }
+
+    pub fn history(&self) -> &[(u64, f64)] {
+        &self.history
+    }
+
+    /// Training failure: NaN/Inf seen, or smoothed loss blown past the
+    /// divergence threshold (Table 5's "Failed").
+    pub fn diverged(&self) -> bool {
+        if self.nan_seen {
+            return true;
+        }
+        match (self.initial, self.smoothed()) {
+            (Some(init), Some(cur)) => cur > init * self.divergence_factor,
+            _ => false,
+        }
+    }
+
+    /// Mean loss over the last `n` records (for epoch summaries).
+    pub fn window_mean(&self, n: usize) -> Option<f64> {
+        if self.history.is_empty() {
+            return None;
+        }
+        let tail: Vec<f64> = self
+            .history
+            .iter()
+            .rev()
+            .take(n)
+            .map(|&(_, l)| l)
+            .filter(|l| l.is_finite())
+            .collect();
+        if tail.is_empty() {
+            None
+        } else {
+            Some(tail.iter().sum::<f64>() / tail.len() as f64)
+        }
+    }
+
+    /// Dump the loss curve as `step\tloss` lines (EXPERIMENTS.md logs).
+    pub fn curve_tsv(&self) -> String {
+        let mut s = String::from("step\tloss\n");
+        for &(step, loss) in &self.history {
+            s.push_str(&format!("{step}\t{loss:.6}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summaries() {
+        let mut t = LossTracker::new();
+        assert!(t.is_empty());
+        for i in 0..10 {
+            t.record(i, 10.0 - i as f64);
+        }
+        assert_eq!(t.len(), 10);
+        assert_eq!(t.best(), 1.0);
+        assert_eq!(t.last(), Some(1.0));
+        assert!(t.smoothed().unwrap() < 10.0);
+        assert_eq!(t.window_mean(2), Some(1.5));
+        assert!(!t.diverged());
+    }
+
+    #[test]
+    fn nan_marks_divergence() {
+        let mut t = LossTracker::new();
+        t.record(0, 5.0);
+        t.record(1, f64::NAN);
+        assert!(t.diverged());
+    }
+
+    #[test]
+    fn blowup_marks_divergence() {
+        let mut t = LossTracker::new();
+        t.record(0, 2.0);
+        for i in 1..200 {
+            t.record(i, 50.0);
+        }
+        assert!(t.diverged());
+    }
+
+    #[test]
+    fn healthy_run_not_diverged() {
+        let mut t = LossTracker::new();
+        for i in 0..100 {
+            t.record(i, 4.0 - (i as f64) * 0.01);
+        }
+        assert!(!t.diverged());
+    }
+
+    #[test]
+    fn curve_tsv_format() {
+        let mut t = LossTracker::new();
+        t.record(1, 2.5);
+        let tsv = t.curve_tsv();
+        assert!(tsv.starts_with("step\tloss\n"));
+        assert!(tsv.contains("1\t2.5"));
+    }
+}

@@ -1,0 +1,238 @@
+//! Binary checkpoint format (no serde available; a simple, versioned,
+//! length-prefixed layout):
+//!
+//! ```text
+//! magic   b"DSQCKPT1"
+//! u64     adam step
+//! u32     tensor-group count (always 3: params, m, v)
+//! per group:
+//!   u32   tensor count
+//!   per tensor:
+//!     u32       name length, then name bytes (UTF-8)
+//!     u32       ndims, then u64 dims...
+//!     f32[...]  row-major data (little-endian)
+//! ```
+//!
+//! Checkpoints are validated against the artifact manifest on load, so a
+//! checkpoint from a different model config fails loudly instead of
+//! producing garbage.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::model::ModelState;
+use crate::runtime::{HostTensor, ModelManifest};
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"DSQCKPT1";
+
+/// A loaded checkpoint (pre-validation).
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub state: ModelState,
+    pub names: Vec<String>,
+}
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_tensor(w: &mut impl Write, name: &str, t: &HostTensor) -> Result<()> {
+    write_u32(w, name.len() as u32)?;
+    w.write_all(name.as_bytes())?;
+    write_u32(w, t.shape.len() as u32)?;
+    for &d in &t.shape {
+        write_u64(w, d as u64)?;
+    }
+    let data = t.as_f32()?;
+    // Bulk little-endian write.
+    let mut bytes = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<(String, HostTensor)> {
+    let name_len = read_u32(r)? as usize;
+    if name_len > 4096 {
+        return Err(Error::Manifest(format!("checkpoint name length {name_len} implausible")));
+    }
+    let mut name_bytes = vec![0u8; name_len];
+    r.read_exact(&mut name_bytes)?;
+    let name = String::from_utf8(name_bytes)
+        .map_err(|_| Error::Manifest("checkpoint name not UTF-8".into()))?;
+    let ndims = read_u32(r)? as usize;
+    if ndims > 16 {
+        return Err(Error::Manifest(format!("checkpoint rank {ndims} implausible")));
+    }
+    let mut shape = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        shape.push(read_u64(r)? as usize);
+    }
+    let numel: usize = shape.iter().product();
+    let mut bytes = vec![0u8; numel * 4];
+    r.read_exact(&mut bytes)?;
+    let data: Vec<f32> =
+        bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+    Ok((name, HostTensor::f32(shape, data)))
+}
+
+/// Save a model state (names come from the manifest order).
+pub fn save_checkpoint(path: &Path, state: &ModelState, mm: &ModelManifest) -> Result<()> {
+    ModelState::validate_against(&state.params, mm)?;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("tmp");
+    {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
+        w.write_all(MAGIC)?;
+        write_u64(&mut w, state.step)?;
+        write_u32(&mut w, 3)?;
+        for group in [&state.params, &state.m, &state.v] {
+            write_u32(&mut w, group.len() as u32)?;
+            for (t, spec) in group.iter().zip(&mm.params) {
+                write_tensor(&mut w, &spec.name, t)?;
+            }
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)?; // atomic-ish publish
+    Ok(())
+}
+
+/// Load and validate a checkpoint against the manifest.
+pub fn load_checkpoint(path: &Path, mm: &ModelManifest) -> Result<ModelState> {
+    let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Manifest(format!("{path:?}: not a DSQ checkpoint")));
+    }
+    let step = read_u64(&mut r)?;
+    let groups = read_u32(&mut r)?;
+    if groups != 3 {
+        return Err(Error::Manifest(format!("checkpoint has {groups} groups, expected 3")));
+    }
+    let mut all: Vec<Vec<HostTensor>> = Vec::with_capacity(3);
+    for _ in 0..3 {
+        let count = read_u32(&mut r)? as usize;
+        if count != mm.params.len() {
+            return Err(Error::Manifest(format!(
+                "checkpoint group has {count} tensors, manifest has {}",
+                mm.params.len()
+            )));
+        }
+        let mut group = Vec::with_capacity(count);
+        for spec in &mm.params {
+            let (name, t) = read_tensor(&mut r)?;
+            if name != spec.name {
+                return Err(Error::Manifest(format!(
+                    "checkpoint tensor '{name}' where manifest expects '{}' \
+                     (different model config?)",
+                    spec.name
+                )));
+            }
+            if t.shape != spec.shape {
+                return Err(Error::Manifest(format!(
+                    "checkpoint '{name}': shape {:?} != manifest {:?}",
+                    t.shape, spec.shape
+                )));
+            }
+            group.push(t);
+        }
+        all.push(group);
+    }
+    let v = all.pop().unwrap();
+    let m = all.pop().unwrap();
+    let params = all.pop().unwrap();
+    Ok(ModelState { params, m, v, step })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+
+    fn mm() -> ModelManifest {
+        ModelManifest {
+            config: Default::default(),
+            params: vec![
+                ParamSpec { name: "a.w".into(), shape: vec![2, 3] },
+                ParamSpec { name: "b.b".into(), shape: vec![4] },
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn state() -> ModelState {
+        let p = vec![
+            HostTensor::f32(vec![2, 3], (0..6).map(|x| x as f32).collect()),
+            HostTensor::f32(vec![4], vec![-1.0, 0.5, 2.0, 3.5]),
+        ];
+        let m = vec![HostTensor::zeros(&[2, 3]), HostTensor::zeros(&[4])];
+        ModelState { params: p, m: m.clone(), v: m, step: 42 }
+    }
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("dsq-ckpt-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmpfile("roundtrip.bin");
+        let st = state();
+        save_checkpoint(&path, &st, &mm()).unwrap();
+        let back = load_checkpoint(&path, &mm()).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.params[0], st.params[0]);
+        assert_eq!(back.params[1], st.params[1]);
+        assert_eq!(back.v[1], st.v[1]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_manifest() {
+        let path = tmpfile("wrongman.bin");
+        save_checkpoint(&path, &state(), &mm()).unwrap();
+        let mut other = mm();
+        other.params[0].shape = vec![3, 2];
+        assert!(load_checkpoint(&path, &other).is_err());
+        other.params[0] = ParamSpec { name: "z.w".into(), shape: vec![2, 3] };
+        assert!(load_checkpoint(&path, &other).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = tmpfile("garbage.bin");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load_checkpoint(&path, &mm()).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load_checkpoint(std::path::Path::new("/nonexistent/x.bin"), &mm()).is_err());
+    }
+}

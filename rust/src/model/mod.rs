@@ -1,0 +1,150 @@
+//! Host-side model state: parameters + Adam moments as flat tensor
+//! lists (the artifact calling convention), plus a binary checkpoint
+//! format.
+
+pub mod checkpoint;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
+
+use crate::runtime::{ArtifactManifest, HostTensor, ModelManifest, Runtime};
+use crate::{Error, Result};
+
+/// Parameters + optimizer state for one model, in manifest order.
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub params: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    /// 1-based Adam step count already applied.
+    pub step: u64,
+}
+
+impl ModelState {
+    /// Initialize from the model's `init` artifact (seeded, on-device).
+    pub fn init(rt: &Runtime, man: &ArtifactManifest, model: &str, seed: i32) -> Result<Self> {
+        let exe = rt.load(&man.model_path(model, "init")?)?;
+        let params = exe.run(&[HostTensor::scalar_i32(seed)])?;
+        let mm = match model {
+            "nmt" => &man.nmt,
+            "cls" => &man.cls,
+            other => return Err(Error::Config(format!("unknown model '{other}'"))),
+        };
+        Self::validate_against(&params, mm)?;
+        let zeros: Vec<HostTensor> =
+            mm.params.iter().map(|s| HostTensor::zeros(&s.shape)).collect();
+        Ok(ModelState { params, m: zeros.clone(), v: zeros, step: 0 })
+    }
+
+    /// Check a tensor list against the manifest's shapes.
+    pub fn validate_against(tensors: &[HostTensor], mm: &ModelManifest) -> Result<()> {
+        if tensors.len() != mm.params.len() {
+            return Err(Error::Shape(format!(
+                "expected {} tensors, got {}",
+                mm.params.len(),
+                tensors.len()
+            )));
+        }
+        for (t, spec) in tensors.iter().zip(&mm.params) {
+            if t.shape != spec.shape {
+                return Err(Error::Shape(format!(
+                    "param '{}': shape {:?} != manifest {:?}",
+                    spec.name, t.shape, spec.shape
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume a train-step output tuple (p', m', v', loss) and return
+    /// the loss.
+    pub fn absorb_step_output(&mut self, outs: Vec<HostTensor>) -> Result<f32> {
+        let n = self.params.len();
+        if outs.len() != 3 * n + 1 {
+            return Err(Error::Shape(format!(
+                "train step returned {} tensors, expected {}",
+                outs.len(),
+                3 * n + 1
+            )));
+        }
+        let mut it = outs.into_iter();
+        self.params = it.by_ref().take(n).collect();
+        self.m = it.by_ref().take(n).collect();
+        self.v = it.by_ref().take(n).collect();
+        let loss = it.next().unwrap().item_f32()?;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    /// Total parameter count.
+    pub fn numel(&self) -> usize {
+        self.params.iter().map(HostTensor::len).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamSpec;
+
+    fn fake_manifest_model() -> ModelManifest {
+        ModelManifest {
+            config: Default::default(),
+            params: vec![
+                ParamSpec { name: "a".into(), shape: vec![2, 2] },
+                ParamSpec { name: "b".into(), shape: vec![3] },
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    fn fake_state() -> ModelState {
+        let p = vec![
+            HostTensor::f32(vec![2, 2], vec![1.0; 4]),
+            HostTensor::f32(vec![3], vec![2.0; 3]),
+        ];
+        ModelState { params: p.clone(), m: p.clone(), v: p, step: 0 }
+    }
+
+    #[test]
+    fn validate_against_catches_mismatches() {
+        let mm = fake_manifest_model();
+        let good = fake_state();
+        assert!(ModelState::validate_against(&good.params, &mm).is_ok());
+        let bad = vec![HostTensor::f32(vec![2, 2], vec![0.0; 4])];
+        assert!(ModelState::validate_against(&bad, &mm).is_err());
+        let wrong_shape = vec![
+            HostTensor::f32(vec![4], vec![0.0; 4]),
+            HostTensor::f32(vec![3], vec![0.0; 3]),
+        ];
+        assert!(ModelState::validate_against(&wrong_shape, &mm).is_err());
+    }
+
+    #[test]
+    fn absorb_step_output_rotates_state() {
+        let mut st = fake_state();
+        let mut outs = Vec::new();
+        for v in [10.0f32, 20.0, 30.0] {
+            outs.push(HostTensor::f32(vec![2, 2], vec![v; 4]));
+            outs.push(HostTensor::f32(vec![3], vec![v; 3]));
+        }
+        outs.push(HostTensor::scalar_f32(1.25));
+        let loss = st.absorb_step_output(outs).unwrap();
+        assert_eq!(loss, 1.25);
+        assert_eq!(st.step, 1);
+        assert_eq!(st.params[0].as_f32().unwrap()[0], 10.0);
+        assert_eq!(st.m[1].as_f32().unwrap()[0], 20.0);
+        assert_eq!(st.v[0].as_f32().unwrap()[0], 30.0);
+    }
+
+    #[test]
+    fn absorb_rejects_wrong_arity() {
+        let mut st = fake_state();
+        let outs = vec![HostTensor::scalar_f32(1.0)];
+        assert!(st.absorb_step_output(outs).is_err());
+    }
+
+    #[test]
+    fn numel() {
+        assert_eq!(fake_state().numel(), 7);
+    }
+}

@@ -1,0 +1,187 @@
+//! Block-Floating-Point (MSFP) fake quantization — rust mirror of
+//! `python/compile/kernels/bfp.py`.
+//!
+//! A tensor is viewed as rows of `inner` contiguous elements; each row is
+//! split into boxes of [`BOX`] (16) elements (the last box may be short —
+//! identical to the kernel's zero-padding because pad zeros never change
+//! a box max). Per box: shared exponent from the box |max|, then sign +
+//! (m-1)-bit magnitude per element.
+
+use super::{floor_log2, ftz, pow2, BOX, EXP_MAX, EXP_MIN, PASSTHROUGH_BITS};
+
+/// Quantize `x` in place. `inner` is the length of the minor (last)
+/// axis; `x.len()` must be a multiple of it.
+pub fn bfp_quantize_into(x: &mut [f32], inner: usize, mbits: f32) {
+    assert!(inner > 0 && x.len() % inner == 0, "len {} not a multiple of inner {inner}", x.len());
+    if mbits >= PASSTHROUGH_BITS {
+        return;
+    }
+    for row in x.chunks_mut(inner) {
+        for boxed in row.chunks_mut(BOX) {
+            quantize_box(boxed, mbits);
+        }
+    }
+}
+
+/// Out-of-place variant.
+pub fn bfp_quantize(x: &[f32], inner: usize, mbits: f32) -> Vec<f32> {
+    let mut out = x.to_vec();
+    bfp_quantize_into(&mut out, inner, mbits);
+    out
+}
+
+#[inline]
+fn quantize_box(boxed: &mut [f32], m: f32) {
+    // FTZ to match the XLA artifacts (subnormals read as zero there).
+    let amax = boxed.iter().fold(0.0f32, |a, &v| a.max(ftz(v.abs())));
+    if amax <= 0.0 {
+        boxed.fill(0.0);
+        return;
+    }
+    // Hoist the box constants out of the element loop (§Perf: computing
+    // step/maxmag per element cost ~2.4x throughput); the element rule
+    // stays identical to quantize_with_exponent.
+    let e = floor_log2(amax).clamp(super::EXP_MIN, super::EXP_MAX);
+    let step = pow2((e - m as i32 + 2).clamp(super::EXP_MIN, super::EXP_MAX));
+    let maxmag = pow2(m as i32 - 1) - 1.0;
+    for v in boxed.iter_mut() {
+        *v = (ftz(*v) / step).round_ties_even().clamp(-maxmag, maxmag) * step;
+    }
+}
+
+/// Per-box statistics used by the cost model's error analysis and the
+/// ablation benches: (shared exponent, quantization step, max magnitude).
+pub fn bfp_dequantize_box_stats(boxed: &[f32], mbits: f32) -> (i32, f32, f32) {
+    let amax = boxed.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let e = floor_log2(amax).clamp(EXP_MIN, EXP_MAX);
+    let step = pow2(e - mbits as i32 + 2);
+    let maxmag = pow2(mbits as i32 - 1) - 1.0;
+    (e, step, maxmag)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen_f32s, Prop};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn passthrough_at_25_bits() {
+        let x = vec![1.123f32, -0.004, 7e8, 3e-9];
+        assert_eq!(bfp_quantize(&x, 4, 25.0), x);
+        assert_eq!(bfp_quantize(&x, 4, 32.0), x);
+    }
+
+    #[test]
+    fn zero_box_stays_zero() {
+        let x = vec![0.0f32; 32];
+        assert_eq!(bfp_quantize(&x, 32, 4.0), x);
+    }
+
+    #[test]
+    fn known_values_m4() {
+        // One box: amax = 1.0 -> e = 0, step = 2^-2 = 0.25, maxmag 7.
+        let x = vec![1.0f32, 0.3, -0.6, 0.125, 0.0, 0.0, 0.0, 0.0,
+                     0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let q = bfp_quantize(&x, 16, 4.0);
+        assert_eq!(q[0], 1.0);
+        assert_eq!(q[1], 0.25);
+        assert_eq!(q[2], -0.5); // -2.4 rounds to -2
+        assert_eq!(q[3], 0.0); // 0.5 ties to even -> 0
+    }
+
+    #[test]
+    fn boxes_have_independent_exponents() {
+        // Box 1 huge, box 2 tiny: per-box scaling keeps the tiny box alive.
+        let mut x = vec![0.0f32; 32];
+        x[..16].fill(1000.0);
+        x[16..].fill(0.001);
+        let q = bfp_quantize(&x, 32, 4.0);
+        assert!((q[20] - 0.001).abs() / 0.001 < 0.25, "small box lost: {}", q[20]);
+    }
+
+    #[test]
+    fn short_final_box_matches_zero_padding() {
+        // inner=24 -> boxes of 16 and 8; quantizing the 8 with 8 zeros
+        // appended must give identical results.
+        let mut rng = Pcg32::new(11);
+        let x = gen_f32s(&mut rng, 24, 6.0);
+        let q_short = bfp_quantize(&x, 24, 4.0);
+        let mut padded = x.clone();
+        padded.extend_from_slice(&[0.0; 8]);
+        let q_pad = bfp_quantize(&padded, 32, 4.0);
+        assert_eq!(&q_short[16..24], &q_pad[16..24]);
+    }
+
+    #[test]
+    fn idempotent_property() {
+        Prop::new("bfp quantization is idempotent").cases(60).run(
+            |rng, size| {
+                let len = 16 * (1 + size as usize / 20);
+                (gen_f32s(rng, len, 12.0), [2.0f32, 4.0, 8.0, 16.0][rng.below(4) as usize])
+            },
+            |(x, m)| {
+                let q1 = bfp_quantize(x, x.len(), *m);
+                let q2 = bfp_quantize(&q1, x.len(), *m);
+                if q1 == q2 {
+                    Ok(())
+                } else {
+                    Err("q(q(x)) != q(x)".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn error_bounded_by_step_property() {
+        Prop::new("bfp error <= step/2 for unclamped values").cases(60).run(
+            |rng, size| (gen_f32s(rng, 16 * (1 + size as usize / 30), 8.0), 2.0 + rng.below(14) as f32),
+            |(x, m)| {
+                let q = bfp_quantize(x, x.len(), *m);
+                for (boxed, qboxed) in x.chunks(16).zip(q.chunks(16)) {
+                    let (_, step, maxmag) = bfp_dequantize_box_stats(boxed, *m);
+                    for (&xi, &qi) in boxed.iter().zip(qboxed) {
+                        let clamped = (xi / step).abs() > maxmag;
+                        if !clamped && (qi - xi).abs() > step / 2.0 + step * 1e-6 {
+                            return Err(format!("|q-x|={} > step/2={}", (qi - xi).abs(), step / 2.0));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn monotone_error_in_bits_property() {
+        Prop::new("wider mantissa never increases total error").cases(40).run(
+            |rng, size| gen_f32s(rng, 16 * (1 + size as usize / 25), 6.0),
+            |x| {
+                let err = |m: f32| {
+                    bfp_quantize(x, x.len(), m)
+                        .iter()
+                        .zip(x)
+                        .map(|(q, x)| ((q - x) as f64).abs())
+                        .sum::<f64>()
+                };
+                let errs: Vec<f64> = [2.0f32, 4.0, 8.0, 16.0, 24.0].iter().map(|&m| err(m)).collect();
+                for w in errs.windows(2) {
+                    if w[1] > w[0] * 1.0000001 + 1e-12 {
+                        return Err(format!("error increased with bits: {errs:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sign_preserved() {
+        let mut rng = Pcg32::new(3);
+        let x = gen_f32s(&mut rng, 256, 10.0);
+        let q = bfp_quantize(&x, 16, 4.0);
+        for (&xi, &qi) in x.iter().zip(&q) {
+            assert!(qi == 0.0 || qi.signum() == xi.signum(), "sign flip: {xi} -> {qi}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Dynamic per-tensor fixed-point fake quantization — rust mirror of
+//! `python/compile/kernels/fixed.py`.
+//!
+//! One shared exponent for the whole tensor (from the global |max|); the
+//! per-element rule is identical to BFP's. Its global scaling is exactly
+//! the weakness the paper's Stashing(Fixed) rows expose: a heavy-tailed
+//! tensor flushes most of its mass to zero at aggressive widths.
+
+use super::{floor_log2, ftz, PASSTHROUGH_BITS};
+
+/// Quantize `x` in place with `bits` total mantissa width.
+pub fn fixed_quantize_into(x: &mut [f32], bits: f32) {
+    if bits >= PASSTHROUGH_BITS {
+        return;
+    }
+    // FTZ to match the XLA artifacts (subnormals read as zero there).
+    let amax = x.iter().fold(0.0f32, |a, &v| a.max(ftz(v.abs())));
+    if amax <= 0.0 {
+        x.fill(0.0);
+        return;
+    }
+    // Hoist the per-tensor constants out of the element loop (§Perf);
+    // identical element rule to quantize_with_exponent.
+    let e = floor_log2(amax).clamp(super::EXP_MIN, super::EXP_MAX);
+    let step = super::pow2((e - bits as i32 + 2).clamp(super::EXP_MIN, super::EXP_MAX));
+    let maxmag = super::pow2(bits as i32 - 1) - 1.0;
+    for v in x.iter_mut() {
+        *v = (ftz(*v) / step).round_ties_even().clamp(-maxmag, maxmag) * step;
+    }
+}
+
+/// Out-of-place variant.
+pub fn fixed_quantize(x: &[f32], bits: f32) -> Vec<f32> {
+    let mut out = x.to_vec();
+    fixed_quantize_into(&mut out, bits);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bfp::bfp_quantize;
+    use crate::util::prop::{gen_f32s, Prop};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn passthrough_at_25_bits() {
+        let x = vec![1.5f32, -2e10, 3e-20];
+        assert_eq!(fixed_quantize(&x, 25.0), x);
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let x = vec![0.0f32; 8];
+        assert_eq!(fixed_quantize(&x, 8.0), x);
+    }
+
+    #[test]
+    fn known_values() {
+        // amax = 4.0 -> e = 2, m = 4 -> step = 2^0 = 1, maxmag 7.
+        let x = vec![4.0f32, 1.3, -2.5, 0.4];
+        let q = fixed_quantize(&x, 4.0);
+        assert_eq!(q, vec![4.0, 1.0, -2.0, 0.0]); // -2.5 ties-to-even -> -2
+    }
+
+    #[test]
+    fn heavy_tail_flushes_small_values() {
+        // The paper's fixed-point failure mode: one outlier kills resolution.
+        let mut x = vec![0.01f32; 64];
+        x[0] = 1000.0;
+        let q = fixed_quantize(&x, 4.0);
+        assert_eq!(q[1], 0.0, "per-tensor scaling must flush the tail");
+        // ... while BFP keeps the other boxes alive:
+        let qb = bfp_quantize(&x, 64, 4.0);
+        assert!(qb[20] > 0.0, "per-box scaling must keep the tail");
+    }
+
+    #[test]
+    fn idempotent_property() {
+        Prop::new("fixed quantization is idempotent").cases(60).run(
+            |rng, size| (gen_f32s(rng, 8 * (1 + size as usize / 12), 8.0), 2.0 + rng.below(14) as f32),
+            |(x, b)| {
+                let q1 = fixed_quantize(x, *b);
+                let q2 = fixed_quantize(&q1, *b);
+                if q1 == q2 {
+                    Ok(())
+                } else {
+                    Err("q(q(x)) != q(x)".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn bfp_never_worse_than_fixed_property() {
+        // With equal bit width, per-box scaling has error <= per-tensor
+        // scaling on every element grid (same rule, finer exponents).
+        Prop::new("bfp total error <= fixed total error").cases(40).run(
+            |rng, size| (gen_f32s(rng, 16 * (1 + size as usize / 25), 10.0), 2.0 + rng.below(10) as f32),
+            |(x, b)| {
+                let err = |q: &[f32]| {
+                    q.iter().zip(x.iter()).map(|(q, x)| ((q - x) as f64).abs()).sum::<f64>()
+                };
+                let ef = err(&fixed_quantize(x, *b));
+                let eb = err(&bfp_quantize(x, x.len(), *b));
+                if eb <= ef * 1.0000001 + 1e-12 {
+                    Ok(())
+                } else {
+                    Err(format!("bfp {eb} > fixed {ef}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn max_value_representable() {
+        let mut rng = Pcg32::new(5);
+        for _ in 0..50 {
+            let x = gen_f32s(&mut rng, 32, 12.0);
+            let q = fixed_quantize(&x, 8.0);
+            let amax_idx =
+                x.iter().enumerate().max_by(|a, b| a.1.abs().total_cmp(&b.1.abs())).unwrap().0;
+            let rel = (q[amax_idx] - x[amax_idx]).abs() / x[amax_idx].abs();
+            assert!(rel < 0.01, "max poorly represented: {} -> {}", x[amax_idx], q[amax_idx]);
+        }
+    }
+}

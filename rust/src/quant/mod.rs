@@ -1,0 +1,131 @@
+//! Rust mirrors of the L1 quantizer kernels.
+//!
+//! Semantics are bit-identical to `python/compile/kernels/ref.py` (and
+//! therefore to the Pallas kernels and the AOT artifacts — asserted by
+//! the `artifact_crosscheck` integration test):
+//!
+//! * exponents come from the IEEE-754 bit pattern (`floor(log2|x|)` for
+//!   normals), never from `log2` — exact on both sides;
+//! * power-of-two scales are constructed exactly from bits ([`pow2`]);
+//! * rounding is round-half-to-even (`f32::round_ties_even`, matching
+//!   XLA's `round_nearest_even`);
+//! * mantissa widths ≥ 25 are identity (wider than f32's significand).
+//!
+//! These mirrors serve three purposes: (1) cross-validating the AOT
+//! artifacts from the rust side, (2) the cost model's error-analysis
+//! ablations, (3) letting host-side components (e.g. checkpoint
+//! compaction) reason about quantized values without a PJRT round trip.
+
+pub mod bfp;
+pub mod fixed;
+
+pub use bfp::{bfp_dequantize_box_stats, bfp_quantize, bfp_quantize_into};
+pub use fixed::{fixed_quantize, fixed_quantize_into};
+
+/// Bounding-box size (elements sharing one exponent), paper §4 / MSFP.
+pub const BOX: usize = 16;
+/// Shared-exponent width in bits (8-bit biased exponent).
+pub const EXP_BITS: u32 = 8;
+/// Exponent clamp range implied by the 8-bit exponent.
+pub const EXP_MIN: i32 = -126;
+pub const EXP_MAX: i32 = 127;
+/// Mantissa widths at or above this are an exact identity for f32 data.
+pub const PASSTHROUGH_BITS: f32 = 25.0;
+
+/// `floor(log2(|x|))` for normal f32; -127 for zero/subnormals
+/// (callers clamp to [`EXP_MIN`], matching the kernels).
+#[inline]
+pub fn floor_log2(x: f32) -> i32 {
+    (((x.abs().to_bits() >> 23) & 0xFF) as i32) - 127
+}
+
+/// Exact `2^k` as f32, including the subnormal range (k ≥ -149).
+#[inline]
+pub fn pow2(k: i32) -> f32 {
+    if k >= -126 {
+        debug_assert!(k <= 127);
+        f32::from_bits(((k + 127) as u32) << 23)
+    } else if k >= -149 {
+        f32::from_bits(1u32 << (k + 149))
+    } else {
+        0.0
+    }
+}
+
+/// Flush-to-zero for subnormal magnitudes: XLA CPU runs with FTZ/DAZ, so
+/// the artifacts see subnormal inputs as zero; the mirror must agree
+/// (real MSFP hardware has no subnormal support either).
+#[inline]
+pub fn ftz(x: f32) -> f32 {
+    if x != 0.0 && x.abs() < f32::MIN_POSITIVE {
+        0.0
+    } else {
+        x
+    }
+}
+
+/// Quantize one value against shared exponent `e` with `m` mantissa bits
+/// (sign + (m-1)-bit magnitude), mirroring `_quantize_with_exponent`.
+///
+/// The step exponent is clamped to the normal-f32 range — a subnormal
+/// step would flush to zero under XLA's FTZ (see kernels/ref.py).
+#[inline]
+pub fn quantize_with_exponent(x: f32, e: i32, m: f32) -> f32 {
+    let e = e.clamp(EXP_MIN, EXP_MAX);
+    let step = pow2((e - m as i32 + 2).clamp(EXP_MIN, EXP_MAX));
+    let maxmag = pow2(m as i32 - 1) - 1.0;
+    let mag = (ftz(x) / step).round_ties_even().clamp(-maxmag, maxmag);
+    mag * step
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn floor_log2_exact_on_powers() {
+        assert_eq!(floor_log2(1.0), 0);
+        assert_eq!(floor_log2(2.0), 1);
+        assert_eq!(floor_log2(0.5), -1);
+        assert_eq!(floor_log2(1024.0), 10);
+        assert_eq!(floor_log2(-8.0), 3);
+    }
+
+    #[test]
+    fn floor_log2_between_powers() {
+        assert_eq!(floor_log2(1.5), 0);
+        assert_eq!(floor_log2(3.999), 1);
+        assert_eq!(floor_log2(0.75), -1);
+    }
+
+    #[test]
+    fn floor_log2_zero_and_subnormal() {
+        assert_eq!(floor_log2(0.0), -127);
+        assert_eq!(floor_log2(f32::MIN_POSITIVE / 2.0), -127);
+    }
+
+    #[test]
+    fn pow2_exact() {
+        for k in -149..=127 {
+            let p = pow2(k);
+            assert!(p > 0.0);
+            if k >= -126 {
+                assert_eq!(p, 2.0f32.powi(k), "k={k}");
+            }
+        }
+        assert_eq!(pow2(0), 1.0);
+        assert_eq!(pow2(-149), f32::from_bits(1));
+        assert_eq!(pow2(-150), 0.0);
+    }
+
+    #[test]
+    fn quantize_with_exponent_matches_grid() {
+        // e=0, m=4: step = 2^-2 = 0.25, maxmag = 7.
+        let q = |x| quantize_with_exponent(x, 0, 4.0);
+        assert_eq!(q(0.3), 0.25);
+        assert_eq!(q(0.125), 0.0); // ties to even: 0.5 -> 0
+        assert_eq!(q(0.375), 0.5); // 1.5 -> 2 (even)
+        assert_eq!(q(10.0), 7.0 * 0.25); // clamped
+        assert_eq!(q(-10.0), -7.0 * 0.25);
+    }
+}

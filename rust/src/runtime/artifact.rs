@@ -1,0 +1,254 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+//!
+//! `manifest.json` records, for each model, the **flat parameter order**
+//! (sorted names + shapes) and the artifact filenames. The runtime
+//! marshals literals positionally against this order; getting it from a
+//! file (rather than hard-coding) keeps the rust binary valid across
+//! model-config changes without recompiling rust.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+use crate::{Error, Result};
+
+/// One parameter tensor's name + shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest entry for one model family ("nmt" or "cls").
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    /// Model hyper-parameters as recorded by aot.py (vocab, d_model, ...).
+    pub config: std::collections::BTreeMap<String, i64>,
+    /// Flat parameter order (sorted by name, matching jax's dict order).
+    pub params: Vec<ParamSpec>,
+    /// artifact-kind ("init"/"train"/...) -> filename.
+    pub artifacts: std::collections::BTreeMap<String, String>,
+}
+
+impl ModelManifest {
+    pub fn cfg(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .map(|&v| v as usize)
+            .ok_or_else(|| Error::Manifest(format!("missing config key '{key}'")))
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(ParamSpec::numel).sum()
+    }
+
+    pub fn artifact_file(&self, kind: &str) -> Result<&str> {
+        self.artifacts
+            .get(kind)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::Manifest(format!("no '{kind}' artifact")))
+    }
+}
+
+/// The parsed manifest + its directory (for resolving artifact paths).
+#[derive(Clone, Debug)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub nmt: ModelManifest,
+    pub cls: ModelManifest,
+    /// Quantizer probe artifacts: name -> filename, plus their input shape.
+    pub quant_artifacts: std::collections::BTreeMap<String, String>,
+    pub quant_shape: Vec<usize>,
+}
+
+fn parse_model(j: &Json) -> Result<ModelManifest> {
+    let config = j
+        .req("config")?
+        .as_obj()
+        .ok_or_else(|| Error::Manifest("config not an object".into()))?
+        .iter()
+        .map(|(k, v)| {
+            v.as_i64()
+                .map(|n| (k.clone(), n))
+                .ok_or_else(|| Error::Manifest(format!("config '{k}' not a number")))
+        })
+        .collect::<Result<_>>()?;
+    let params = j
+        .req("params")?
+        .as_arr()
+        .ok_or_else(|| Error::Manifest("params not an array".into()))?
+        .iter()
+        .map(|p| {
+            let name = p
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("param name not a string".into()))?
+                .to_string();
+            let shape = p
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| Error::Manifest("param shape not an array".into()))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| Error::Manifest("bad dim".into())))
+                .collect::<Result<_>>()?;
+            Ok(ParamSpec { name, shape })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    // The flat convention requires sorted order; verify rather than trust.
+    for w in params.windows(2) {
+        if w[0].name >= w[1].name {
+            return Err(Error::Manifest(format!(
+                "params not sorted: '{}' >= '{}'",
+                w[0].name, w[1].name
+            )));
+        }
+    }
+    let artifacts = j
+        .req("artifacts")?
+        .as_obj()
+        .ok_or_else(|| Error::Manifest("artifacts not an object".into()))?
+        .iter()
+        .map(|(k, v)| {
+            v.as_str()
+                .map(|s| (k.clone(), s.to_string()))
+                .ok_or_else(|| Error::Manifest("artifact not a string".into()))
+        })
+        .collect::<Result<_>>()?;
+    Ok(ModelManifest { config, params, artifacts })
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let j = json::parse_file(&dir.join("manifest.json"))?;
+        let version = j.req("version")?.as_i64().unwrap_or(0);
+        if version != 1 {
+            return Err(Error::Manifest(format!("unsupported manifest version {version}")));
+        }
+        let models = j.req("models")?;
+        let quant = j.req("quant")?;
+        let quant_artifacts = quant
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("quant artifacts not an object".into()))?
+            .iter()
+            .map(|(k, v)| (k.clone(), v.as_str().unwrap_or_default().to_string()))
+            .collect();
+        let quant_shape = quant
+            .req("shape")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("quant shape not an array".into()))?
+            .iter()
+            .map(|d| d.as_usize().unwrap_or(0))
+            .collect();
+        Ok(ArtifactManifest {
+            dir: dir.to_path_buf(),
+            nmt: parse_model(models.req("nmt")?)?,
+            cls: parse_model(models.req("cls")?)?,
+            quant_artifacts,
+            quant_shape,
+        })
+    }
+
+    /// Absolute path of a model artifact.
+    pub fn model_path(&self, model: &str, kind: &str) -> Result<PathBuf> {
+        let m = match model {
+            "nmt" => &self.nmt,
+            "cls" => &self.cls,
+            other => return Err(Error::Manifest(format!("unknown model '{other}'"))),
+        };
+        Ok(self.dir.join(m.artifact_file(kind)?))
+    }
+
+    /// Absolute path of a quantizer probe artifact ("quant_bfp"/"quant_fixed").
+    pub fn quant_path(&self, name: &str) -> Result<PathBuf> {
+        self.quant_artifacts
+            .get(name)
+            .map(|f| self.dir.join(f))
+            .ok_or_else(|| Error::Manifest(format!("no quant artifact '{name}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> String {
+        r#"{
+          "version": 1,
+          "models": {
+            "nmt": {
+              "config": {"vocab": 256, "d_model": 128, "batch": 16},
+              "params": [
+                {"name": "a.w", "shape": [2, 3]},
+                {"name": "b.w", "shape": [4]}
+              ],
+              "artifacts": {"train": "nmt_train.hlo.txt", "init": "nmt_init.hlo.txt"}
+            },
+            "cls": {
+              "config": {"vocab": 256, "seq_len": 48},
+              "params": [{"name": "emb", "shape": [256, 128]}],
+              "artifacts": {"train": "cls_train.hlo.txt"}
+            }
+          },
+          "quant": {"shape": [64, 64], "artifacts": {"quant_bfp": "quant_bfp.hlo.txt"}}
+        }"#
+        .to_string()
+    }
+
+    fn load_from_str(s: &str) -> Result<ArtifactManifest> {
+        let dir = std::env::temp_dir().join(format!("dsq-manifest-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), s).unwrap();
+        ArtifactManifest::load(&dir)
+    }
+
+    #[test]
+    fn parses_fake_manifest() {
+        let m = load_from_str(&fake_manifest()).unwrap();
+        assert_eq!(m.nmt.cfg("vocab").unwrap(), 256);
+        assert_eq!(m.nmt.params.len(), 2);
+        assert_eq!(m.nmt.params[0].numel(), 6);
+        assert_eq!(m.nmt.total_params(), 10);
+        assert_eq!(m.cls.params[0].shape, vec![256, 128]);
+        assert!(m.model_path("nmt", "train").unwrap().ends_with("nmt_train.hlo.txt"));
+        assert!(m.quant_path("quant_bfp").unwrap().ends_with("quant_bfp.hlo.txt"));
+        assert!(m.model_path("nmt", "decode").is_err());
+        assert!(m.model_path("xxx", "train").is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_params() {
+        let bad = fake_manifest().replace(
+            r#"{"name": "a.w", "shape": [2, 3]},
+                {"name": "b.w", "shape": [4]}"#,
+            r#"{"name": "b.w", "shape": [4]},
+                {"name": "a.w", "shape": [2, 3]}"#,
+        );
+        assert!(load_from_str(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = fake_manifest().replace("\"version\": 1", "\"version\": 2");
+        assert!(load_from_str(&bad).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // When `make artifacts` has run, validate the real file too.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = ArtifactManifest::load(&dir).unwrap();
+            assert!(m.nmt.params.len() > 50);
+            assert!(m.nmt.total_params() > 10_000);
+            assert_eq!(m.quant_shape, vec![64, 64]);
+        }
+    }
+}

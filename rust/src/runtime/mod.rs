@@ -1,0 +1,25 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the
+//! request path.
+//!
+//! This is the only boundary between the rust coordinator and the
+//! XLA-compiled compute. The flow (see `/opt/xla-example/load_hlo`):
+//!
+//! ```text
+//! artifacts/manifest.json ──► ArtifactManifest (param order + shapes)
+//! artifacts/<name>.hlo.txt ─► HloModuleProto::from_text_file
+//!                             ─► XlaComputation ─► client.compile
+//!                             ─► PjRtLoadedExecutable  (cached)
+//! step: Vec<Literal> ───────► execute ─► tuple literal ─► Vec<Literal>
+//! ```
+//!
+//! HLO **text** is the interchange format — jax ≥ 0.5 serialized protos
+//! use 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (DESIGN.md §2).
+
+pub mod artifact;
+pub mod client;
+pub mod tensor;
+
+pub use artifact::{ArtifactManifest, ModelManifest, ParamSpec};
+pub use client::{Executable, Runtime};
+pub use tensor::HostTensor;

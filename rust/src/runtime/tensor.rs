@@ -1,0 +1,173 @@
+//! Host-side tensor: a shape + contiguous f32/i32 storage, with
+//! conversions to/from `xla::Literal`.
+//!
+//! The coordinator keeps all state (params, optimizer moments, batches)
+//! as [`HostTensor`]s; the runtime marshals them across the PJRT
+//! boundary. Row-major (C) layout throughout, matching XLA's default
+//! literal layout.
+
+use xla::{ArrayElement, Literal};
+
+use crate::{Error, Result};
+
+/// Element type tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// A host tensor (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::f32(vec![], vec![v])
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::i32(vec![], vec![v])
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        HostTensor::f32(shape.to_vec(), vec![0.0; shape.iter().product()])
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match &self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(Error::Shape("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(Error::Shape("expected f32 tensor".into())),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(Error::Shape("expected i32 tensor".into())),
+        }
+    }
+
+    /// Scalar extraction (any rank-0 or single-element tensor).
+    pub fn item_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            return Err(Error::Shape(format!("expected scalar, got {} elems", v.len())));
+        }
+        Ok(v[0])
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => Literal::vec1(v.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Convert from an XLA literal (copies).
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            t if t == f32::TY => Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?)),
+            t if t == i32::TY => Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?)),
+            other => Err(Error::Shape(format!("unsupported literal type {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_data_consistency() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), Dtype::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn mismatched_shape_panics() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(HostTensor::scalar_f32(2.5).item_f32().unwrap(), 2.5);
+        assert_eq!(HostTensor::scalar_i32(7).as_i32().unwrap(), &[7]);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = HostTensor::scalar_i32(1);
+        assert!(t.as_f32().is_err());
+        assert!(t.item_f32().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_and_scalar() {
+        let t = HostTensor::i32(vec![3], vec![1, 2, 3]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+        let s = HostTensor::scalar_f32(4.25);
+        let back = HostTensor::from_literal(&s.to_literal().unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+}

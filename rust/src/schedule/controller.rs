@@ -1,0 +1,268 @@
+//! The DSQ dynamic precision controller (the paper's §3 schedule).
+//!
+//! Policy, following the paper's Appendix B tuning and Hönig et al.'s
+//! monotone-increase result:
+//!
+//! * training starts at the most aggressive ladder level
+//!   (`[2,2,2,16]` BFP by default);
+//! * after each validation pass the controller checks for a plateau:
+//!   "several epochs of unchanged or increasing validation loss" — here,
+//!   `patience` consecutive validations with relative improvement below
+//!   `min_rel_improvement`;
+//! * on a plateau it advances one ladder level (never retreats — the
+//!   monotone property the tests assert);
+//! * `q3` stays ≥ 16 in every built-in ladder (Appendix C: 8-bit
+//!   gradient outputs diverge under fixed point).
+
+use super::{PrecisionConfig, QuantMode, Schedule};
+
+/// Controller hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct DsqControllerConfig {
+    /// Relative improvement below which a validation counts as "no better".
+    pub min_rel_improvement: f64,
+    /// Consecutive no-better validations that trigger a precision bump.
+    pub patience: usize,
+    /// The (monotone) precision ladder.
+    pub ladder: Vec<PrecisionConfig>,
+}
+
+impl DsqControllerConfig {
+    /// The paper's setup: start `[2,2,2,16]`, jump toward `[16,4,4,16]`
+    /// and beyond as validation stalls.
+    pub fn paper_default(mode: QuantMode) -> Self {
+        let l = |q0, q1, q2, q3| PrecisionConfig::new(mode, q0, q1, q2, q3);
+        DsqControllerConfig {
+            min_rel_improvement: 0.002,
+            patience: 2,
+            ladder: vec![
+                l(2.0, 2.0, 2.0, 16.0),
+                l(4.0, 2.0, 2.0, 16.0),
+                l(8.0, 4.0, 4.0, 16.0),
+                l(16.0, 4.0, 4.0, 16.0),
+                l(16.0, 8.0, 8.0, 16.0),
+                l(16.0, 16.0, 16.0, 16.0),
+            ],
+        }
+    }
+}
+
+/// Plateau-driven monotone precision controller.
+#[derive(Clone, Debug)]
+pub struct DsqController {
+    cfg: DsqControllerConfig,
+    level: usize,
+    best_loss: f64,
+    stale: usize,
+    /// (validation index, level after observation) transition log.
+    transitions: Vec<(usize, usize)>,
+    observed: usize,
+}
+
+impl DsqController {
+    pub fn new(cfg: DsqControllerConfig) -> Self {
+        assert!(!cfg.ladder.is_empty(), "ladder must be non-empty");
+        // The ladder must be monotone non-decreasing per component —
+        // guaranteed for built-ins, asserted for user-supplied ladders.
+        for w in cfg.ladder.windows(2) {
+            assert!(
+                w[1].at_least(&w[0]),
+                "ladder must be monotone: {} !>= {}",
+                w[1].notation(),
+                w[0].notation()
+            );
+        }
+        DsqController {
+            cfg,
+            level: 0,
+            best_loss: f64::INFINITY,
+            stale: 0,
+            transitions: Vec::new(),
+            observed: 0,
+        }
+    }
+
+    pub fn paper_default(mode: QuantMode) -> Self {
+        DsqController::new(DsqControllerConfig::paper_default(mode))
+    }
+
+    pub fn level(&self) -> usize {
+        self.level
+    }
+
+    pub fn at_top(&self) -> bool {
+        self.level + 1 == self.cfg.ladder.len()
+    }
+
+    /// Transition log: (validation index, new level).
+    pub fn transitions(&self) -> &[(usize, usize)] {
+        &self.transitions
+    }
+}
+
+impl Schedule for DsqController {
+    fn current(&self) -> PrecisionConfig {
+        self.cfg.ladder[self.level]
+    }
+
+    fn observe_validation(&mut self, val_loss: f64) {
+        self.observed += 1;
+        let improved = val_loss.is_finite()
+            && val_loss < self.best_loss * (1.0 - self.cfg.min_rel_improvement);
+        if improved {
+            self.best_loss = val_loss;
+            self.stale = 0;
+            return;
+        }
+        self.stale += 1;
+        if self.stale >= self.cfg.patience && !self.at_top() {
+            self.level += 1;
+            self.stale = 0;
+            // A precision change resets the plateau reference: the model
+            // should now be able to improve again.
+            self.best_loss = val_loss.min(self.best_loss);
+            self.transitions.push((self.observed, self.level));
+            crate::info!(
+                "DSQ controller: advancing to level {} {}",
+                self.level,
+                self.current().notation()
+            );
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "dsq level {}/{} {} {} (best val {:.4}, stale {})",
+            self.level,
+            self.cfg.ladder.len() - 1,
+            self.current().mode.name(),
+            self.current().notation(),
+            self.best_loss,
+            self.stale
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Pcg32;
+
+    fn ctl() -> DsqController {
+        DsqController::paper_default(QuantMode::Bfp)
+    }
+
+    #[test]
+    fn starts_most_aggressive() {
+        let c = ctl();
+        assert_eq!(c.current().notation(), "[2,2,2,16]");
+    }
+
+    #[test]
+    fn improving_loss_keeps_level() {
+        let mut c = ctl();
+        for i in 0..20 {
+            c.observe_validation(10.0 - i as f64 * 0.2);
+        }
+        assert_eq!(c.level(), 0);
+    }
+
+    #[test]
+    fn plateau_advances_one_level() {
+        let mut c = ctl();
+        c.observe_validation(5.0);
+        c.observe_validation(5.0); // stale 1
+        assert_eq!(c.level(), 0);
+        c.observe_validation(5.01); // stale 2 -> advance
+        assert_eq!(c.level(), 1);
+        assert_eq!(c.transitions(), &[(3, 1)]);
+    }
+
+    #[test]
+    fn q3_always_at_least_16() {
+        let c = DsqControllerConfig::paper_default(QuantMode::Bfp);
+        for l in &c.ladder {
+            assert!(l.q3 >= 16.0, "Appendix C: q3 must stay >= 16 ({})", l.notation());
+        }
+    }
+
+    #[test]
+    fn saturates_at_top() {
+        let mut c = ctl();
+        for _ in 0..100 {
+            c.observe_validation(5.0);
+        }
+        assert!(c.at_top());
+        assert_eq!(c.current().notation(), "[16,16,16,16]");
+    }
+
+    #[test]
+    fn nan_loss_counts_as_stale_not_improvement() {
+        let mut c = ctl();
+        c.observe_validation(f64::NAN);
+        c.observe_validation(f64::NAN);
+        assert_eq!(c.level(), 1, "NaN validations must push precision up");
+    }
+
+    #[test]
+    #[should_panic(expected = "monotone")]
+    fn non_monotone_ladder_rejected() {
+        let mode = QuantMode::Bfp;
+        DsqController::new(DsqControllerConfig {
+            min_rel_improvement: 0.01,
+            patience: 1,
+            ladder: vec![
+                PrecisionConfig::uniform(mode, 8.0),
+                PrecisionConfig::uniform(mode, 4.0),
+            ],
+        });
+    }
+
+    #[test]
+    fn monotone_under_arbitrary_losses_property() {
+        Prop::new("controller level is monotone non-decreasing").cases(60).run(
+            |rng: &mut Pcg32, size| {
+                (0..size * 3).map(|_| (rng.f64() * 10.0) - 1.0).collect::<Vec<f64>>()
+            },
+            |losses| {
+                let mut c = ctl();
+                let mut prev = c.level();
+                for &l in losses {
+                    c.observe_validation(l);
+                    if c.level() < prev {
+                        return Err(format!("level decreased: {} -> {}", prev, c.level()));
+                    }
+                    prev = c.level();
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn precision_config_monotone_along_run_property() {
+        Prop::new("emitted configs are component-wise monotone").cases(40).run(
+            |rng: &mut Pcg32, size| {
+                (0..size * 2).map(|_| rng.f64() * 5.0).collect::<Vec<f64>>()
+            },
+            |losses| {
+                let mut c = ctl();
+                let mut prev = c.current();
+                for &l in losses {
+                    c.observe_validation(l);
+                    let cur = c.current();
+                    if !cur.at_least(&prev) {
+                        return Err(format!(
+                            "config regressed: {} -> {}",
+                            prev.notation(),
+                            cur.notation()
+                        ));
+                    }
+                    prev = cur;
+                }
+                Ok(())
+            },
+        );
+    }
+}

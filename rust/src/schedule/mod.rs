@@ -1,0 +1,188 @@
+//! Precision configurations and schedules — the paper's §3 "time-adaptive
+//! principle".
+//!
+//! A [`PrecisionConfig`] is the `[q0, q1, q2, q3]` vector (plus quantizer
+//! mode) that parameterizes a training step at runtime. Schedules produce
+//! one config per step:
+//!
+//! * [`StaticSchedule`] — a fixed config for the whole run (the paper's
+//!   baseline and "Stashing" rows);
+//! * [`DsqController`] — the paper's contribution: start at the most
+//!   aggressive level (`[2,2,2,16]` BFP) and **monotonically** climb the
+//!   precision ladder whenever the validation loss plateaus (the paper
+//!   follows Hönig et al. in showing monotone-increase beats fancier
+//!   schedules). `q3 ≥ 16` is enforced by every built-in ladder level per
+//!   Appendix C (8-bit gradient outputs diverge).
+
+pub mod controller;
+
+pub use controller::{DsqController, DsqControllerConfig};
+
+/// Which quantizer the step uses (mirrors the artifact's runtime `mode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantMode {
+    /// No quantization (fp32 reference).
+    Fp32,
+    /// Dynamic per-tensor fixed point.
+    Fixed,
+    /// Block floating point (MSFP, box 16, 8-bit shared exponent).
+    Bfp,
+}
+
+impl QuantMode {
+    pub fn as_f32(self) -> f32 {
+        match self {
+            QuantMode::Fp32 => 0.0,
+            QuantMode::Fixed => 1.0,
+            QuantMode::Bfp => 2.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMode::Fp32 => "fp32",
+            QuantMode::Fixed => "fixed",
+            QuantMode::Bfp => "bfp",
+        }
+    }
+}
+
+/// A full precision configuration `[q0, q1, q2, q3]` + quantizer mode.
+///
+/// * `q0` — forward-GEMM operand width (arith density);
+/// * `q1` — the **stash** width (fwd→bwd DRAM traffic);
+/// * `q2` — first backward GEMM operand width;
+/// * `q3` — gradient-output width (DRAM + second backward GEMM).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrecisionConfig {
+    pub mode: QuantMode,
+    pub q0: f32,
+    pub q1: f32,
+    pub q2: f32,
+    pub q3: f32,
+}
+
+impl PrecisionConfig {
+    pub const fn new(mode: QuantMode, q0: f32, q1: f32, q2: f32, q3: f32) -> Self {
+        PrecisionConfig { mode, q0, q1, q2, q3 }
+    }
+
+    /// The fp32 reference config `[32,32,32,32]`.
+    pub const FP32: PrecisionConfig =
+        PrecisionConfig::new(QuantMode::Fp32, 32.0, 32.0, 32.0, 32.0);
+
+    /// Uniform width (the paper's `[b,b,b,b]` rows).
+    pub fn uniform(mode: QuantMode, bits: f32) -> Self {
+        PrecisionConfig::new(mode, bits, bits, bits, bits)
+    }
+
+    /// The paper's static stashing setup `[16, 4, 4, 16]`.
+    pub fn stashing(mode: QuantMode) -> Self {
+        PrecisionConfig::new(mode, 16.0, 4.0, 4.0, 16.0)
+    }
+
+    /// Runtime vector for the artifacts: `[mode, q0, q1, q2, q3]`.
+    pub fn as_qcfg(&self) -> [f32; 5] {
+        [self.mode.as_f32(), self.q0, self.q1, self.q2, self.q3]
+    }
+
+    /// `"[16,4,4,16]"` — the paper's notation.
+    pub fn notation(&self) -> String {
+        format!("[{},{},{},{}]", self.q0, self.q1, self.q2, self.q3)
+    }
+
+    /// Parse `"16,4,4,16"` or `"[16,4,4,16]"`.
+    pub fn parse(mode: QuantMode, s: &str) -> crate::Result<Self> {
+        let trimmed = s.trim().trim_start_matches('[').trim_end_matches(']');
+        let parts: Vec<f32> = trimmed
+            .split(',')
+            .map(|p| p.trim().parse::<f32>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| crate::Error::Config(format!("bad precision setup '{s}'")))?;
+        if parts.len() != 4 {
+            return Err(crate::Error::Config(format!("precision setup needs 4 entries: '{s}'")));
+        }
+        for &b in &parts {
+            if !(2.0..=32.0).contains(&b) || b.fract() != 0.0 {
+                return Err(crate::Error::Config(format!("bit width {b} out of range [2,32]")));
+            }
+        }
+        Ok(PrecisionConfig::new(mode, parts[0], parts[1], parts[2], parts[3]))
+    }
+
+    /// Component-wise ≥ (used to assert monotone schedules).
+    pub fn at_least(&self, other: &PrecisionConfig) -> bool {
+        self.q0 >= other.q0 && self.q1 >= other.q1 && self.q2 >= other.q2 && self.q3 >= other.q3
+    }
+}
+
+/// A precision schedule: one config per training step.
+pub trait Schedule {
+    /// Config to use for the upcoming step.
+    fn current(&self) -> PrecisionConfig;
+    /// Feed a validation result (loss); may advance the schedule.
+    fn observe_validation(&mut self, val_loss: f64);
+    /// Human-readable state for logs.
+    fn describe(&self) -> String;
+}
+
+/// Fixed precision for the whole run.
+#[derive(Clone, Debug)]
+pub struct StaticSchedule(pub PrecisionConfig);
+
+impl Schedule for StaticSchedule {
+    fn current(&self) -> PrecisionConfig {
+        self.0
+    }
+    fn observe_validation(&mut self, _val_loss: f64) {}
+    fn describe(&self) -> String {
+        format!("static {} {}", self.0.mode.name(), self.0.notation())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qcfg_vector_layout() {
+        let c = PrecisionConfig::stashing(QuantMode::Bfp);
+        assert_eq!(c.as_qcfg(), [2.0, 16.0, 4.0, 4.0, 16.0]);
+        assert_eq!(PrecisionConfig::FP32.as_qcfg(), [0.0, 32.0, 32.0, 32.0, 32.0]);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let c = PrecisionConfig::parse(QuantMode::Bfp, "[16,4,4,16]").unwrap();
+        assert_eq!(c, PrecisionConfig::stashing(QuantMode::Bfp));
+        assert_eq!(c.notation(), "[16,4,4,16]");
+        let c2 = PrecisionConfig::parse(QuantMode::Fixed, "8, 8, 8, 32").unwrap();
+        assert_eq!(c2.q3, 32.0);
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(PrecisionConfig::parse(QuantMode::Bfp, "16,4,4").is_err());
+        assert!(PrecisionConfig::parse(QuantMode::Bfp, "16,4,4,1").is_err());
+        assert!(PrecisionConfig::parse(QuantMode::Bfp, "16,4,x,16").is_err());
+        assert!(PrecisionConfig::parse(QuantMode::Bfp, "64,4,4,16").is_err());
+    }
+
+    #[test]
+    fn at_least_ordering() {
+        let lo = PrecisionConfig::uniform(QuantMode::Bfp, 4.0);
+        let hi = PrecisionConfig::uniform(QuantMode::Bfp, 16.0);
+        assert!(hi.at_least(&lo));
+        assert!(!lo.at_least(&hi));
+    }
+
+    #[test]
+    fn static_schedule_never_changes() {
+        let mut s = StaticSchedule(PrecisionConfig::stashing(QuantMode::Bfp));
+        let before = s.current();
+        for i in 0..10 {
+            s.observe_validation(10.0 - i as f64);
+        }
+        assert_eq!(s.current(), before);
+    }
+}

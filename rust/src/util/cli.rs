@@ -1,0 +1,243 @@
+//! Declarative command-line parsing (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, defaults,
+//! required flags, and auto-generated `--help` text. Subcommand dispatch
+//! lives in `main.rs`; each subcommand builds one [`ArgSpec`].
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+#[derive(Clone, Debug)]
+struct Flag {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    required: bool,
+    boolean: bool,
+}
+
+/// Flag schema + parser for one subcommand.
+#[derive(Clone, Debug, Default)]
+pub struct ArgSpec {
+    command: &'static str,
+    about: &'static str,
+    flags: Vec<Flag>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    /// Positional (non-flag) arguments, in order.
+    pub positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(command: &'static str, about: &'static str) -> Self {
+        ArgSpec { command, about, flags: Vec::new() }
+    }
+
+    /// Optional flag with a default value.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(Flag {
+            name,
+            help,
+            default: Some(default.to_string()),
+            required: false,
+            boolean: false,
+        });
+        self
+    }
+
+    /// Required flag.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, required: true, boolean: false });
+        self
+    }
+
+    /// Boolean flag (no value; present = true).
+    pub fn bool(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(Flag { name, help, default: None, required: false, boolean: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("dsq {} — {}\n\nflags:\n", self.command, self.about);
+        for f in &self.flags {
+            let kind = if f.boolean {
+                String::new()
+            } else if let Some(d) = &f.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", f.name, kind, f.help));
+        }
+        s
+    }
+
+    /// Parse a raw argument list (not including argv[0]/subcommand).
+    pub fn parse(&self, raw: &[String]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut bools: BTreeMap<String, bool> =
+            self.flags.iter().filter(|f| f.boolean).map(|f| (f.name.to_string(), false)).collect();
+        let mut positional = Vec::new();
+        let find = |name: &str| self.flags.iter().find(|f| f.name == name);
+
+        let mut i = 0;
+        while i < raw.len() {
+            let arg = &raw[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(Error::Config(self.usage()));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let flag = find(name)
+                    .ok_or_else(|| Error::Config(format!("unknown flag --{name}\n{}", self.usage())))?;
+                if flag.boolean {
+                    if inline.is_some() {
+                        return Err(Error::Config(format!("--{name} takes no value")));
+                    }
+                    bools.insert(name.to_string(), true);
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Config(format!("--{name} needs a value")))?
+                        }
+                    };
+                    values.insert(name.to_string(), val);
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+
+        for f in &self.flags {
+            if f.boolean {
+                continue;
+            }
+            if !values.contains_key(f.name) {
+                match (&f.default, f.required) {
+                    (Some(d), _) => {
+                        values.insert(f.name.to_string(), d.clone());
+                    }
+                    (None, true) => {
+                        return Err(Error::Config(format!(
+                            "missing required flag --{}\n{}",
+                            f.name,
+                            self.usage()
+                        )))
+                    }
+                    (None, false) => {}
+                }
+            }
+        }
+        Ok(Args { values, bools, positional })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name} must be an integer, got '{}'", self.get(name))))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name} must be an integer, got '{}'", self.get(name))))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{name} must be a number, got '{}'", self.get(name))))
+    }
+
+    pub fn get_f32(&self, name: &str) -> Result<f32> {
+        Ok(self.get_f64(name)? as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("train", "test")
+            .opt("steps", "100", "number of steps")
+            .opt("lr", "0.001", "learning rate")
+            .req("out", "output dir")
+            .bool("verbose", "chatty")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        spec().parse(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse(&["--out", "/tmp/x"]).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 100);
+        assert_eq!(a.get_f64("lr").unwrap(), 0.001);
+        assert_eq!(a.get("out"), "/tmp/x");
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn explicit_values_and_equals_form() {
+        let a = parse(&["--steps=7", "--out", "o", "--verbose", "--lr", "0.1"]).unwrap();
+        assert_eq!(a.get_usize("steps").unwrap(), 7);
+        assert_eq!(a.get_f64("lr").unwrap(), 0.1);
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_is_error() {
+        assert!(parse(&["--steps", "5"]).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(parse(&["--out", "o", "--nope", "1"]).is_err());
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = parse(&["pos1", "--out", "o", "pos2"]).unwrap();
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn bad_int_is_error() {
+        let a = parse(&["--steps", "abc", "--out", "o"]).unwrap();
+        assert!(a.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = parse(&["--help"]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--steps"));
+        assert!(msg.contains("learning rate"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Substrate utilities built in-tree (the deployment environment is
+//! offline, so the usual crates — serde, clap, rand, criterion, proptest —
+//! are replaced by small, tested, dependency-free implementations; see
+//! DESIGN.md §5).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,128 @@
+//! Hand-rolled property-testing harness (proptest is unavailable offline).
+//!
+//! A property is checked against `cases` generated inputs from a seeded
+//! [`Pcg32`]. On failure the harness retries the failing case with
+//! smaller "size" hints (simple input shrinking by regeneration) and
+//! panics with the seed + case index so the exact failure replays:
+//!
+//! ```text
+//! property 'batcher never exceeds max tokens' failed
+//!   seed=42 case=17 size=3   (re-run: Prop::replay(42, 17, 3, gen, check))
+//! ```
+
+use crate::util::rng::Pcg32;
+
+/// Property harness configuration.
+pub struct Prop {
+    pub name: &'static str,
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &'static str) -> Self {
+        Prop { name, cases: 100, seed: 0xD5A } // default seed is arbitrary, fixed
+    }
+
+    pub fn cases(mut self, n: u32) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    /// Run `check` on `cases` inputs from `gen`.
+    ///
+    /// `gen(rng, size)` should scale its output with `size` (1 ..= 100):
+    /// the harness sweeps sizes upward so small counterexamples surface
+    /// first, then — on failure — retries the same seed at smaller sizes
+    /// to report the smallest reproduction it can find.
+    pub fn run<T, G, C>(self, mut gen: G, mut check: C)
+    where
+        T: std::fmt::Debug,
+        G: FnMut(&mut Pcg32, u32) -> T,
+        C: FnMut(&T) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let size = 1 + (case * 100 / self.cases.max(1)).min(99);
+            let mut rng = Pcg32::new(self.seed ^ (case as u64) << 17);
+            let input = gen(&mut rng, size);
+            if let Err(msg) = check(&input) {
+                // Try to find a smaller failing size for the same case seed.
+                let mut smallest: Option<(u32, T, String)> = None;
+                for s in 1..size {
+                    let mut r2 = Pcg32::new(self.seed ^ (case as u64) << 17);
+                    let small = gen(&mut r2, s);
+                    if let Err(m2) = check(&small) {
+                        smallest = Some((s, small, m2));
+                        break;
+                    }
+                }
+                match smallest {
+                    Some((s, small, m2)) => panic!(
+                        "property '{}' failed: {m2}\n  seed={} case={case} size={s}\n  shrunk input: {small:?}",
+                        self.name, self.seed
+                    ),
+                    None => panic!(
+                        "property '{}' failed: {msg}\n  seed={} case={case} size={size}\n  input: {input:?}",
+                        self.name, self.seed
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// Generate a vec of `len` f32s with magnitudes spanning `2^±span`.
+pub fn gen_f32s(rng: &mut Pcg32, len: usize, span: f32) -> Vec<f32> {
+    (0..len)
+        .map(|_| {
+            let mag = (rng.f32() * 2.0 - 1.0) * span;
+            rng.normal() * mag.exp2()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        Prop::new("sum of two non-negatives is >= each").cases(50).run(
+            |rng, size| (rng.below(size) as u64, rng.below(size) as u64),
+            |&(a, b)| {
+                count += 1;
+                if a + b >= a && a + b >= b {
+                    Ok(())
+                } else {
+                    Err("overflow".into())
+                }
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        Prop::new("always fails").cases(5).run(
+            |rng, _| rng.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn gen_f32s_spans_magnitudes() {
+        let mut rng = Pcg32::new(1);
+        let xs = gen_f32s(&mut rng, 1000, 10.0);
+        assert_eq!(xs.len(), 1000);
+        let max = xs.iter().fold(0f32, |a, &x| a.max(x.abs()));
+        let minpos = xs.iter().filter(|x| **x != 0.0).fold(f32::MAX, |a, &x| a.min(x.abs()));
+        assert!(max / minpos > 100.0, "magnitude span too small: {max} / {minpos}");
+    }
+}

@@ -1,0 +1,115 @@
+//! Integration: the AOT artifacts load, compile and execute through the
+//! rust PJRT runtime, and their numerics match the rust mirrors.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise so unit
+//! CI without python still passes).
+
+use std::path::PathBuf;
+
+use dsq::quant;
+use dsq::runtime::{ArtifactManifest, HostTensor, Runtime};
+use dsq::util::rng::Pcg32;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn gen_values(rng: &mut Pcg32, n: usize, span: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * ((rng.f32() * 2.0 - 1.0) * span).exp2()).collect()
+}
+
+#[test]
+fn quant_bfp_artifact_matches_rust_mirror() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = ArtifactManifest::load(&dir).unwrap();
+    let rt = Runtime::global();
+    let exe = rt.load(&man.quant_path("quant_bfp").unwrap()).unwrap();
+    let (rows, cols) = (man.quant_shape[0], man.quant_shape[1]);
+    let mut rng = Pcg32::new(2023);
+    for &bits in &[2.0f32, 3.0, 4.0, 8.0, 12.0, 16.0, 24.0, 25.0] {
+        let x = gen_values(&mut rng, rows * cols, 10.0);
+        let outs = exe
+            .run(&[
+                HostTensor::f32(vec![rows, cols], x.clone()),
+                HostTensor::scalar_f32(bits),
+            ])
+            .unwrap();
+        assert_eq!(outs.len(), 1);
+        let got = outs[0].as_f32().unwrap();
+        let want = quant::bfp_quantize(&x, cols, bits);
+        assert_eq!(got, want.as_slice(), "bits={bits}: artifact != rust mirror");
+    }
+}
+
+#[test]
+fn quant_fixed_artifact_matches_rust_mirror() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = ArtifactManifest::load(&dir).unwrap();
+    let rt = Runtime::global();
+    let exe = rt.load(&man.quant_path("quant_fixed").unwrap()).unwrap();
+    let (rows, cols) = (man.quant_shape[0], man.quant_shape[1]);
+    let mut rng = Pcg32::new(77);
+    for &bits in &[4.0f32, 8.0, 16.0, 25.0] {
+        let x = gen_values(&mut rng, rows * cols, 8.0);
+        let outs = exe
+            .run(&[
+                HostTensor::f32(vec![rows, cols], x.clone()),
+                HostTensor::scalar_f32(bits),
+            ])
+            .unwrap();
+        let got = outs[0].as_f32().unwrap();
+        let want = quant::fixed_quantize(&x, bits);
+        assert_eq!(got, want.as_slice(), "bits={bits}");
+    }
+}
+
+#[test]
+fn quant_artifact_extreme_values() {
+    // Exercise the exponent-clamp and subnormal-step paths end to end.
+    let Some(dir) = artifacts_dir() else { return };
+    let man = ArtifactManifest::load(&dir).unwrap();
+    let exe = Runtime::global().load(&man.quant_path("quant_bfp").unwrap()).unwrap();
+    let (rows, cols) = (man.quant_shape[0], man.quant_shape[1]);
+    let mut x = vec![0.0f32; rows * cols];
+    // Huge box, tiny box, zero box, mixed-sign box.
+    x[0] = 3.0e38;
+    x[1] = -1.0e38;
+    x[16] = 1.0e-38;
+    x[17] = 3.0e-39;
+    x[48] = 1.0;
+    x[49] = -1.0;
+    for &bits in &[2.0f32, 4.0, 16.0] {
+        let outs = exe
+            .run(&[HostTensor::f32(vec![rows, cols], x.clone()), HostTensor::scalar_f32(bits)])
+            .unwrap();
+        let got = outs[0].as_f32().unwrap();
+        let want = quant::bfp_quantize(&x, cols, bits);
+        assert_eq!(got, want.as_slice(), "bits={bits}");
+    }
+}
+
+#[test]
+fn nmt_init_is_deterministic_and_matches_manifest() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = ArtifactManifest::load(&dir).unwrap();
+    let exe = Runtime::global().load(&man.model_path("nmt", "init").unwrap()).unwrap();
+    let p1 = exe.run(&[HostTensor::scalar_i32(0)]).unwrap();
+    let p2 = exe.run(&[HostTensor::scalar_i32(0)]).unwrap();
+    let p3 = exe.run(&[HostTensor::scalar_i32(1)]).unwrap();
+    assert_eq!(p1.len(), man.nmt.params.len());
+    for (i, spec) in man.nmt.params.iter().enumerate() {
+        assert_eq!(p1[i].shape, spec.shape, "param {} shape mismatch", spec.name);
+        assert_eq!(p1[i], p2[i], "init not deterministic for {}", spec.name);
+        let x = p1[i].as_f32().unwrap();
+        assert!(x.iter().all(|v| v.is_finite()), "non-finite init in {}", spec.name);
+    }
+    // A different seed must change at least the embeddings.
+    let emb_idx = man.nmt.params.iter().position(|p| p.name == "src_emb").unwrap();
+    assert_ne!(p1[emb_idx], p3[emb_idx]);
+}

@@ -1,0 +1,131 @@
+//! End-to-end coordinator tests: real (tiny-budget) training runs through
+//! the full L3 stack — synthetic corpus -> prefetch -> PJRT steps ->
+//! validation -> controller -> BLEU -> checkpoint.
+//!
+//! Budget note: PJRT compiles the train artifact once per process
+//! (~100 s); the runs themselves are small.
+
+use std::path::PathBuf;
+
+use dsq::coordinator::{Finetuner, FinetuneConfig, LrSchedule, Trainer, TrainerConfig};
+use dsq::data::Variant;
+use dsq::model::checkpoint;
+use dsq::runtime::ArtifactManifest;
+use dsq::schedule::{DsqController, PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn quick_cfg(dir: &PathBuf) -> TrainerConfig {
+    TrainerConfig {
+        epochs: 2,
+        batches_per_epoch: 8,
+        val_batches: 2,
+        bleu_batches: 2,
+        lr: LrSchedule::InverseSqrt { peak_lr: 3e-3, warmup_steps: 20 },
+        variant: Variant::Iwslt,
+        ..TrainerConfig::quick(dir.clone())
+    }
+}
+
+#[test]
+fn trainer_runs_and_improves_under_stashing_bfp() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut schedule: Box<dyn Schedule> =
+        Box::new(StaticSchedule(PrecisionConfig::stashing(QuantMode::Bfp)));
+    let mut trainer = Trainer::new(quick_cfg(&dir)).unwrap();
+    let report = trainer.run(schedule.as_mut()).unwrap();
+    assert_eq!(report.steps, 16);
+    assert!(!report.diverged);
+    assert!(report.final_val_loss.is_finite());
+    assert!(report.bleu.is_some());
+    // Training loss decreased within the tiny budget.
+    let first = report.loss_curve.first().unwrap().1;
+    let last = report.loss_curve.last().unwrap().1;
+    assert!(last < first, "loss did not move: {first} -> {last}");
+    // Trace accounted every step at the static config.
+    assert_eq!(report.trace.len(), 1);
+    assert_eq!(report.trace[0].1, 16);
+    assert_eq!(report.trace[0].0.notation(), "[16,4,4,16]");
+}
+
+#[test]
+fn dsq_controller_trace_feeds_cost_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut schedule: Box<dyn Schedule> =
+        Box::new(DsqController::paper_default(QuantMode::Bfp));
+    let mut trainer = Trainer::new(quick_cfg(&dir)).unwrap();
+    let report = trainer.run(schedule.as_mut()).unwrap();
+    let total: usize = report.trace.iter().map(|(_, n)| n).sum();
+    assert_eq!(total as u64, report.steps);
+    // Starting level must be the most aggressive.
+    assert_eq!(report.trace[0].0.notation(), "[2,2,2,16]");
+    // The cost trace evaluates on the paper workload.
+    let w = dsq::costmodel::TransformerWorkload::iwslt_6layer();
+    let (arith, dram) = report.cost_on(&w);
+    assert!(arith > 0.0 && arith < 0.12, "arith {arith}");
+    assert!(dram > 0.0 && dram < 0.6, "dram {dram}");
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ckpt = std::env::temp_dir().join(format!("dsq-e2e-ckpt-{}.bin", std::process::id()));
+    let mut cfg = quick_cfg(&dir);
+    cfg.epochs = 1;
+    cfg.batches_per_epoch = 4;
+    cfg.bleu_batches = 0;
+    cfg.checkpoint = Some(ckpt.clone());
+    let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(PrecisionConfig::FP32));
+    let mut trainer = Trainer::new(cfg.clone()).unwrap();
+    let r1 = trainer.run(schedule.as_mut()).unwrap();
+
+    // Resume: state (including Adam step) must round-trip.
+    let man = ArtifactManifest::load(&dir).unwrap();
+    let loaded = checkpoint::load_checkpoint(&ckpt, &man.nmt).unwrap();
+    assert_eq!(loaded.step, r1.steps);
+    assert_eq!(loaded.params.len(), man.nmt.params.len());
+
+    let mut cfg2 = cfg.clone();
+    cfg2.checkpoint = None;
+    cfg2.init_checkpoint = Some(ckpt.clone());
+    let mut trainer2 = Trainer::new(cfg2).unwrap();
+    let r2 = trainer2.run(schedule.as_mut()).unwrap();
+    assert_eq!(r2.steps, r1.steps + 4);
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn finetuner_runs_and_reports_accuracy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = FinetuneConfig {
+        epochs: 2,
+        batches_per_epoch: 8,
+        val_batches: 2,
+        nclasses: 3,
+        lr: LrSchedule::Polynomial { lr: 1e-3, warmup_steps: 4, total_steps: 500 },
+        ..FinetuneConfig::quick(dir.clone())
+    };
+    let mut schedule: Box<dyn Schedule> =
+        Box::new(StaticSchedule(PrecisionConfig::stashing(QuantMode::Bfp)));
+    let mut tuner = Finetuner::new(cfg).unwrap();
+    let report = tuner.run(schedule.as_mut()).unwrap();
+    assert_eq!(report.steps, 16);
+    assert!(!report.diverged);
+    assert!((0.0..=1.0).contains(&report.final_accuracy));
+    assert!(report.final_val_loss.is_finite());
+}
+
+#[test]
+fn finetune_rejects_too_many_classes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = FinetuneConfig { nclasses: 7, ..FinetuneConfig::quick(dir) };
+    assert!(Finetuner::new(cfg).is_err());
+}

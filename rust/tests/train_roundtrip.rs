@@ -1,0 +1,235 @@
+//! Integration: full training steps through the rust PJRT runtime.
+//!
+//! Exercises the whole request path the coordinator uses: init -> train
+//! steps (with runtime-dynamic precision) -> eval -> greedy decode, all
+//! from rust, no python.
+
+use std::path::PathBuf;
+
+use dsq::runtime::{ArtifactManifest, HostTensor, Runtime};
+use dsq::util::rng::Pcg32;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+struct NmtHarness {
+    man: ArtifactManifest,
+    params: Vec<HostTensor>,
+    m: Vec<HostTensor>,
+    v: Vec<HostTensor>,
+    step: f32,
+}
+
+impl NmtHarness {
+    fn new(dir: &PathBuf, seed: i32) -> Self {
+        let man = ArtifactManifest::load(dir).unwrap();
+        let rt = Runtime::global();
+        let init = rt.load(&man.model_path("nmt", "init").unwrap()).unwrap();
+        let params = init.run(&[HostTensor::scalar_i32(seed)]).unwrap();
+        let zeros: Vec<HostTensor> =
+            man.nmt.params.iter().map(|s| HostTensor::zeros(&s.shape)).collect();
+        NmtHarness { man, params, m: zeros.clone(), v: zeros, step: 0.0 }
+    }
+
+    fn batch(&self, rng: &mut Pcg32) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+        let b = self.man.nmt.cfg("batch").unwrap();
+        let s = self.man.nmt.cfg("src_len").unwrap();
+        let t = self.man.nmt.cfg("tgt_len").unwrap();
+        let vocab = self.man.nmt.cfg("vocab").unwrap() as u32;
+        // Copy task: tgt = src.
+        let mut src = vec![0i32; b * s];
+        for row in src.chunks_mut(s) {
+            let len = rng.range(s as u32 / 2, s as u32) as usize;
+            for tok in row.iter_mut().take(len) {
+                *tok = rng.range(3, vocab) as i32;
+            }
+        }
+        let mut tgt_in = vec![0i32; b * t];
+        let mut tgt_out = vec![0i32; b * t];
+        for i in 0..b {
+            tgt_in[i * t] = 1; // BOS
+            for j in 0..t - 1 {
+                tgt_in[i * t + j + 1] = src[i * s + j];
+            }
+            let n = t.min(s);
+            tgt_out[i * t..i * t + n].copy_from_slice(&src[i * s..i * s + n]);
+        }
+        (src, tgt_in, tgt_out)
+    }
+
+    fn train_step(&mut self, qcfg: [f32; 5], lr: f32, rng: &mut Pcg32) -> f32 {
+        let rt = Runtime::global();
+        let exe = rt.load(&self.man.model_path("nmt", "train_bfp").unwrap()).unwrap();
+        let b = self.man.nmt.cfg("batch").unwrap();
+        let s = self.man.nmt.cfg("src_len").unwrap();
+        let t = self.man.nmt.cfg("tgt_len").unwrap();
+        let (src, tgt_in, tgt_out) = self.batch(rng);
+        self.step += 1.0;
+        let mut inputs: Vec<HostTensor> = Vec::new();
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+        inputs.push(HostTensor::scalar_f32(self.step));
+        inputs.push(HostTensor::i32(vec![b, s], src));
+        inputs.push(HostTensor::i32(vec![b, t], tgt_in));
+        inputs.push(HostTensor::i32(vec![b, t], tgt_out));
+        inputs.push(HostTensor::f32(vec![5], qcfg.to_vec()));
+        inputs.push(HostTensor::scalar_f32(lr));
+        let outs = exe.run(&inputs).unwrap();
+        let n = self.man.nmt.params.len();
+        assert_eq!(outs.len(), 3 * n + 1);
+        self.params = outs[0..n].to_vec();
+        self.m = outs[n..2 * n].to_vec();
+        self.v = outs[2 * n..3 * n].to_vec();
+        outs[3 * n].item_f32().unwrap()
+    }
+}
+
+#[test]
+fn train_loss_decreases_fp32_and_dsq() {
+    let Some(dir) = artifacts_dir() else { return };
+    for (name, qcfg) in [
+        ("fp32", [0.0f32, 32.0, 32.0, 32.0, 32.0]),
+        ("dsq[2,2,2,16]", [2.0, 2.0, 2.0, 2.0, 16.0]),
+        ("stash-bfp[16,4,4,16]", [2.0, 16.0, 4.0, 4.0, 16.0]),
+    ] {
+        let mut h = NmtHarness::new(&dir, 0);
+        // One fixed batch pool of 2 batches: memorization = trainability.
+        let mut first = None;
+        let mut last = 0.0;
+        for i in 0..30 {
+            let mut brng = Pcg32::new(1000 + (i % 2) as u64);
+            let loss = h.train_step(qcfg, 3e-3, &mut brng);
+            assert!(loss.is_finite(), "{name}: non-finite loss at step {i}");
+            if first.is_none() {
+                first = Some(loss);
+            }
+            last = loss;
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first - 0.02,
+            "{name}: loss did not decrease ({first} -> {last})"
+        );
+        eprintln!("{name}: loss {first:.4} -> {last:.4} over 30 steps");
+    }
+}
+
+#[test]
+fn runtime_dynamic_precision_change_no_recompile() {
+    // The DSQ controller's core requirement: changing qcfg between steps
+    // works on the SAME executable.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut h = NmtHarness::new(&dir, 7);
+    let mut rng = Pcg32::new(9);
+    let schedule = [
+        [2.0f32, 2.0, 2.0, 2.0, 16.0],
+        [2.0, 4.0, 2.0, 2.0, 16.0],
+        [2.0, 16.0, 4.0, 4.0, 16.0],
+        [2.0, 16.0, 16.0, 16.0, 16.0],
+        [0.0, 32.0, 32.0, 32.0, 32.0],
+    ];
+    for q in schedule {
+        let loss = h.train_step(q, 1e-3, &mut rng);
+        assert!(loss.is_finite());
+    }
+}
+
+#[test]
+fn eval_and_decode_artifacts_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let h = NmtHarness::new(&dir, 3);
+    let rt = Runtime::global();
+    let mut rng = Pcg32::new(5);
+    let (src, tgt_in, tgt_out) = h.batch(&mut rng);
+    let b = h.man.nmt.cfg("batch").unwrap();
+    let s = h.man.nmt.cfg("src_len").unwrap();
+    let t = h.man.nmt.cfg("tgt_len").unwrap();
+
+    let eval = rt.load(&h.man.model_path("nmt", "eval").unwrap()).unwrap();
+    let mut inputs = h.params.clone();
+    inputs.push(HostTensor::i32(vec![b, s], src.clone()));
+    inputs.push(HostTensor::i32(vec![b, t], tgt_in));
+    inputs.push(HostTensor::i32(vec![b, t], tgt_out.clone()));
+    let outs = eval.run(&inputs).unwrap();
+    assert_eq!(outs.len(), 3);
+    let loss_sum = outs[0].item_f32().unwrap();
+    let ncorrect = outs[1].item_f32().unwrap();
+    let ntok = outs[2].item_f32().unwrap();
+    let expected_ntok = tgt_out.iter().filter(|&&x| x != 0).count() as f32;
+    assert_eq!(ntok, expected_ntok);
+    assert!(loss_sum.is_finite() && loss_sum > 0.0);
+    assert!((0.0..=ntok).contains(&ncorrect));
+
+    let decode = rt.load(&h.man.model_path("nmt", "decode").unwrap()).unwrap();
+    let mut inputs = h.params.clone();
+    inputs.push(HostTensor::i32(vec![b, s], src));
+    let outs = decode.run(&inputs).unwrap();
+    assert_eq!(outs.len(), 1);
+    assert_eq!(outs[0].shape, vec![b, t]);
+    let toks = outs[0].as_i32().unwrap();
+    let vocab = h.man.nmt.cfg("vocab").unwrap() as i32;
+    assert!(toks.iter().all(|&x| (0..vocab).contains(&x)));
+    for i in 0..b {
+        assert_eq!(toks[i * t], 1, "row {i} must start with BOS");
+    }
+}
+
+#[test]
+fn cls_train_and_eval_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = ArtifactManifest::load(&dir).unwrap();
+    let rt = Runtime::global();
+    let init = rt.load(&man.model_path("cls", "init").unwrap()).unwrap();
+    let params = init.run(&[HostTensor::scalar_i32(0)]).unwrap();
+    assert_eq!(params.len(), man.cls.params.len());
+
+    let b = man.cls.cfg("batch").unwrap();
+    let l = man.cls.cfg("seq_len").unwrap();
+    let ncls = man.cls.cfg("nclasses").unwrap() as i32;
+    let vocab = man.cls.cfg("vocab").unwrap() as u32;
+    let mut rng = Pcg32::new(1);
+    let mut toks = vec![0i32; b * l];
+    let mut labels = vec![0i32; b];
+    for i in 0..b {
+        labels[i] = rng.below(ncls as u32) as i32;
+        for j in 0..l {
+            toks[i * l + j] = rng.range(4, vocab) as i32;
+        }
+        for j in 0..(2 * labels[i] as usize + 1) {
+            toks[i * l + j] = 3;
+        }
+    }
+
+    let zeros: Vec<HostTensor> =
+        man.cls.params.iter().map(|s| HostTensor::zeros(&s.shape)).collect();
+    let train = rt.load(&man.model_path("cls", "train_bfp").unwrap()).unwrap();
+    let mut inputs: Vec<HostTensor> = params.clone();
+    inputs.extend(zeros.clone());
+    inputs.extend(zeros);
+    inputs.push(HostTensor::scalar_f32(1.0));
+    inputs.push(HostTensor::i32(vec![b, l], toks.clone()));
+    inputs.push(HostTensor::i32(vec![b], labels.clone()));
+    inputs.push(HostTensor::f32(vec![5], vec![2.0, 16.0, 4.0, 4.0, 16.0]));
+    inputs.push(HostTensor::scalar_f32(1e-3));
+    let outs = train.run(&inputs).unwrap();
+    let n = man.cls.params.len();
+    assert_eq!(outs.len(), 3 * n + 1);
+    let loss = outs[3 * n].item_f32().unwrap();
+    assert!(loss.is_finite() && loss > 0.0);
+
+    let eval = rt.load(&man.model_path("cls", "eval").unwrap()).unwrap();
+    let mut inputs = params;
+    inputs.push(HostTensor::i32(vec![b, l], toks));
+    inputs.push(HostTensor::i32(vec![b], labels));
+    let outs = eval.run(&inputs).unwrap();
+    assert_eq!(outs.len(), 3);
+    assert_eq!(outs[2].item_f32().unwrap(), b as f32);
+}
