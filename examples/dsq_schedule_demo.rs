@@ -8,11 +8,11 @@
 //! ```
 
 use dsq::costmodel::{self, TransformerWorkload};
-use dsq::schedule::{DsqController, PrecisionConfig, QuantMode, Schedule};
+use dsq::schedule::{DsqController, PrecisionConfig, Schedule};
 
 fn main() {
     let w = TransformerWorkload::iwslt_6layer();
-    let mut ctl = DsqController::paper_default(QuantMode::Bfp);
+    let mut ctl = DsqController::paper_default("bfp").unwrap();
     let mut trace: Vec<(PrecisionConfig, usize)> = Vec::new();
 
     // A plausible training trajectory: strong early progress, then each

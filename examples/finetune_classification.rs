@@ -9,7 +9,7 @@
 //! ```
 
 use dsq::coordinator::{Finetuner, FinetuneConfig, LrSchedule};
-use dsq::schedule::{DsqController, PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use dsq::schedule::{DsqController, PrecisionConfig, Schedule, StaticSchedule};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     dsq::util::logging::level_from_env();
@@ -53,7 +53,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             init_checkpoint: init,
         };
         let mut schedule: Box<dyn Schedule> =
-            Box::new(DsqController::paper_default(QuantMode::Bfp));
+            Box::new(DsqController::paper_default("bfp").unwrap());
         let report = Finetuner::new(cfg)?.run(schedule.as_mut())?;
         println!(
             "{name}: val {:.4}, acc {:.1}%, trace {:?}\n",

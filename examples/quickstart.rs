@@ -12,7 +12,7 @@
 use dsq::coordinator::{LrSchedule, Trainer, TrainerConfig};
 use dsq::costmodel::{self, TransformerWorkload};
 use dsq::data::Variant;
-use dsq::schedule::{PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use dsq::schedule::{FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     dsq::util::logging::level_from_env();
@@ -23,11 +23,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("precision configs and their hardware cost (paper-scale IWSLT, fixed32 = 1.00x):");
     let configs = [
         ("fp32", PrecisionConfig::FP32),
-        ("stashing BFP [16,4,4,16]", PrecisionConfig::stashing(QuantMode::Bfp)),
-        ("DSQ level 0 [2,2,2,16]", PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0)),
+        ("stashing BFP [16,4,4,16]", PrecisionConfig::stashing(FormatSpec::bfp(16))),
+        ("DSQ level 0 [2,2,2,16]", PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16])),
     ];
     for (name, p) in &configs {
-        let row = costmodel::normalized_row(&workload, name, p, p.mode != QuantMode::Fp32);
+        let row = costmodel::normalized_row(&workload, name, p, !p.is_fp32());
         println!("  {}", row.fmt_paper_style());
     }
 

@@ -15,7 +15,7 @@
 use dsq::coordinator::{LrSchedule, Trainer, TrainerConfig};
 use dsq::costmodel::TransformerWorkload;
 use dsq::data::Variant;
-use dsq::schedule::{DsqController, PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use dsq::schedule::{DsqController, FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     dsq::util::logging::level_from_env();
@@ -38,34 +38,39 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let workload = TransformerWorkload::iwslt_6layer();
 
     println!("== e2e: {} steps per run ==\n", epochs * bpe);
+    // Unscored (fp32 reference) costs render as "-", like the paper's tables.
+    let fmt_cost = |v: Option<f64>| v.map_or("-".to_string(), |x| format!("{x:.3}x"));
     let mut summary = Vec::new();
     let runs: Vec<(&str, Box<dyn Schedule>)> = vec![
         ("fp32", Box::new(StaticSchedule(PrecisionConfig::FP32))),
         (
             "stashing-bfp [16,4,4,16]",
-            Box::new(StaticSchedule(PrecisionConfig::stashing(QuantMode::Bfp))),
+            Box::new(StaticSchedule(PrecisionConfig::stashing(FormatSpec::bfp(16)))),
         ),
-        ("DSQ (dynamic)", Box::new(DsqController::paper_default(QuantMode::Bfp))),
+        ("DSQ (dynamic)", Box::new(DsqController::paper_default("bfp").unwrap())),
     ];
 
     for (name, mut schedule) in runs {
         println!("--- {name} ---");
         let mut trainer = Trainer::new(base.clone())?;
         let report = trainer.run(schedule.as_mut())?;
-        let (arith, dram) = report.cost_on(&workload);
+        // fp32 reference traces are unscored ("-" in the paper's tables).
+        let cost = report.cost_on(&workload);
         println!("loss curve (every {} steps):", bpe.max(1));
         for (step, loss) in report.loss_curve.iter().step_by(bpe.max(1)) {
             println!("  step {step:>5}: {loss:.4}");
         }
         println!("validation: {:?}", report.val_curve);
         println!(
-            "result: val {:.4} | token acc {:.1}% | BLEU {} | {:.1} steps/s | cost {arith:.3}x arith {dram:.3}x dram\n",
+            "result: val {:.4} | token acc {:.1}% | BLEU {} | {:.1} steps/s | cost {} arith {} dram\n",
             report.final_val_loss,
             report.final_token_acc * 100.0,
             report.bleu.map_or("-".into(), |b| format!("{b:.2}")),
             report.steps_per_s(),
+            fmt_cost(cost.map(|c| c.0)),
+            fmt_cost(cost.map(|c| c.1)),
         );
-        summary.push((name.to_string(), report, arith, dram));
+        summary.push((name.to_string(), report, cost));
     }
 
     println!("== summary ==");
@@ -73,25 +78,25 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "{:<26} {:>8} {:>9} {:>8} {:>9} {:>9}",
         "run", "val", "acc%", "BLEU", "arith", "dram"
     );
-    for (name, r, a, d) in &summary {
+    for (name, r, cost) in &summary {
         println!(
-            "{:<26} {:>8.4} {:>8.1}% {:>8} {:>8.3}x {:>8.3}x",
+            "{:<26} {:>8.4} {:>8.1}% {:>8} {:>9} {:>9}",
             name,
             r.final_val_loss,
             r.final_token_acc * 100.0,
             r.bleu.map_or("-".into(), |b| format!("{b:.2}")),
-            a,
-            d
+            fmt_cost(cost.map(|c| c.0)),
+            fmt_cost(cost.map(|c| c.1)),
         );
     }
     // Write the JSON record for EXPERIMENTS.md.
     std::fs::create_dir_all("results")?;
-    let json = dsq::util::json::Json::arr(summary.iter().map(|(name, r, a, d)| {
+    let json = dsq::util::json::Json::arr(summary.iter().map(|(name, r, cost)| {
         dsq::util::json::Json::obj(vec![
             ("run", dsq::util::json::Json::str(name)),
             ("report", r.to_json()),
-            ("arith_rel", dsq::util::json::Json::num(*a)),
-            ("dram_rel", dsq::util::json::Json::num(*d)),
+            ("arith_rel", cost.map_or(dsq::util::json::Json::Null, |c| dsq::util::json::Json::num(c.0))),
+            ("dram_rel", cost.map_or(dsq::util::json::Json::Null, |c| dsq::util::json::Json::num(c.1))),
         ])
     }));
     std::fs::write("results/e2e_train_translation.json", json.to_string_pretty())?;

@@ -13,9 +13,9 @@ the rust runtime can marshal literals positionally. All exported
 functions return tuples (``return_tuple=True``), unwrapped on the rust
 side via tuple decomposition.
 
-Shapes are baked at lowering; precision (``qcfg = [mode,q0,q1,q2,q3]``)
-and learning rate stay runtime scalars so the L3 dynamic controller never
-recompiles.
+Shapes are baked at lowering; precision (``qcfg`` — four per-slot
+``[mode, bits]`` pairs, see layers.py) and learning rate stay runtime
+inputs so the L3 dynamic controller never recompiles.
 
 Config via environment (defaults = the "small" testbed preset):
   DSQ_VOCAB, DSQ_DMODEL, DSQ_HEADS, DSQ_DFF, DSQ_ENC_LAYERS,
@@ -92,6 +92,11 @@ def _shape(s, dtype=F32):
 
 
 def export(fn, example_args, path: str) -> int:
+    # The per-quantizer train variants lower the SAME train_fn object
+    # under different layers._QUANTIZERS settings; jax's global trace
+    # cache keys on function identity and would silently reuse the
+    # previous variant's trace, emitting byte-identical artifacts.
+    jax.clear_caches()
     lowered = jax.jit(fn).lower(*example_args)
     text = to_hlo_text(lowered)
     with open(path, "w") as f:
@@ -142,7 +147,7 @@ def build_nmt_exports(cfg: M.Seq2SeqConfig):
     ps = [_shape(s) for s in shapes]
     B, S, T = cfg.batch, cfg.src_len, cfg.tgt_len
     scalar = _shape((), F32)
-    qcfg = _shape((5,), F32)
+    qcfg = _shape((8,), F32)
     train_args = (
         ps * 3
         + [scalar, _shape((B, S), I32), _shape((B, T), I32), _shape((B, T), I32), qcfg, scalar]
@@ -151,9 +156,11 @@ def build_nmt_exports(cfg: M.Seq2SeqConfig):
         "init": (init_fn, [_shape((), I32)]),
         # Per-quantizer train variants: identical signature, the variant
         # bakes which quantizer `mode >= 1` selects (compile-time split,
-        # see layers.set_quantizers).
+        # see layers.set_quantizers); "train_both" carries both quantizer
+        # subgraphs for heterogeneous per-slot configs.
         "train_bfp": (train_fn, train_args),
         "train_fixed": (train_fn, train_args),
+        "train_both": (train_fn, train_args),
         "eval": (eval_fn, ps + [_shape((B, S), I32), _shape((B, T), I32), _shape((B, T), I32)]),
         "decode": (decode_fn, ps + [_shape((B, S), I32)]),
     }
@@ -195,12 +202,13 @@ def build_cls_exports(cfg: M.ClassifierConfig):
     B, L = cfg.batch, cfg.seq_len
     scalar = _shape((), F32)
     train_args = (
-        ps * 3 + [scalar, _shape((B, L), I32), _shape((B,), I32), _shape((5,), F32), scalar]
+        ps * 3 + [scalar, _shape((B, L), I32), _shape((B,), I32), _shape((8,), F32), scalar]
     )
     exports = {
         "init": (init_fn, [_shape((), I32)]),
         "train_bfp": (train_fn, train_args),
         "train_fixed": (train_fn, train_args),
+        "train_both": (train_fn, train_args),
         "eval": (eval_fn, ps + [_shape((B, L), I32), _shape((B,), I32)]),
     }
     return exports, param_specs(p0)

@@ -15,14 +15,24 @@ implements exactly the paper's four quantization points:
 * ``q3`` — the outgoing gradient ``dx`` is quantized at ``q3`` before it
   is "written to DRAM" (returned), and the incoming ``dy`` is passed
   through the (idempotent) ``q3`` quantizer to model that it was fetched
-  from DRAM in ``q3`` form. The weight-gradient GEMM therefore runs at
-  ``q1 × q3`` — matching the cost model's charging.
+  from DRAM in ``q3`` form. The weight-gradient GEMM therefore runs
+  *numerically* on the q1 stash and the q3-form gradient; note the cost
+  model deliberately *charges* that GEMM at ``q1 × q0`` — the only
+  charging consistent with the paper's reported numbers (see the
+  documented ambiguity in rust/src/costmodel/training.rs).
 
-The precision vector ``qcfg = [mode, q0, q1, q2, q3]`` is a *runtime* f32
-array: mode 0 = fp32 (identity), 1 = dynamic fixed point, 2 = BFP. Bits
-≥ 25 short-circuit to identity, so ``[0,32,32,32,32]``-style configs cost
-nothing numerically. BFP boxes always lie along the contraction axis of
-the GEMM that consumes the tensor (MSFP layout).
+The precision vector ``qcfg = [m0,q0, m1,q1, m2,q2, m3,q3]`` is a
+*runtime* f32 array of four per-slot ``[mode, bits]`` pairs (one per
+quantization point q0..q3), mirroring the rust ``FormatSpec`` registry:
+mode 0 = fp32 (identity), 1 = dynamic fixed point, 2 = BFP, 3 = fixed
+point with stochastic rounding (the artifact applies the fixed grid with
+nearest rounding — the stochastic stream exists host-side in the rust
+mirrors; an artifact-side SR kernel is a ROADMAP open item). Per-slot
+modes make heterogeneous configs (e.g. a BFP stash with fixed gradient
+outputs) a runtime choice. Bits ≥ 25 short-circuit to identity, so
+fp32-style configs cost nothing numerically. BFP boxes always lie along
+the contraction axis of the GEMM that consumes the tensor (MSFP
+layout).
 
 Master weights and the optimizer state stay f32 (the paper quantizes
 GEMM operands and DRAM-resident intermediates, not the Adam state).
@@ -45,12 +55,13 @@ from .kernels.fixed import fixed_quantize
 _USE_PALLAS = os.environ.get("DSQ_NO_PALLAS", "0") != "1"
 
 # Which quantizer paths are compiled into the graph. "both" supports the
-# full runtime mode selector {0: fp32, 1: fixed, 2: bfp}; "bfp" / "fixed"
-# compile a single quantizer (mode >= 1 selects it), halving the number of
-# quantize subgraphs — XLA 0.5.1's CPU pipeline scales badly with the
-# subgraph count (~270 s vs ~100 s compile for the train step, DESIGN.md
-# §Perf), so aot.py exports per-quantizer *train* artifact variants and
-# the rust coordinator picks by schedule mode.
+# full runtime mode selector {0: fp32, 1: fixed, 2: bfp, 3: fixed-sr};
+# "bfp" / "fixed" compile a single quantizer (mode >= 1 selects it),
+# halving the number of quantize subgraphs — XLA 0.5.1's CPU pipeline
+# scales badly with the subgraph count (~270 s vs ~100 s compile for the
+# train step, DESIGN.md §Perf), so aot.py exports per-quantizer *train*
+# artifact variants (plus "train_both" for heterogeneous per-slot
+# configs) and the rust coordinator picks by the slot families.
 _QUANTIZERS = os.environ.get("DSQ_QUANTIZERS", "both")
 
 
@@ -71,14 +82,18 @@ def _fixed(x, bits):
 
 
 def quantize(x: jax.Array, mode: jax.Array, bits: jax.Array) -> jax.Array:
-    """Runtime-selected fake quantization; boxes along the last axis."""
+    """Runtime-selected fake quantization; boxes along the last axis.
+
+    Mode 3 (fixed-sr) shares the fixed-point grid: inside the artifact
+    it rounds to nearest (see the module docstring)."""
     if _QUANTIZERS == "bfp":
         return jnp.where(mode >= 1.0, _bfp(x, bits), x)
     if _QUANTIZERS == "fixed":
         return jnp.where(mode >= 1.0, _fixed(x, bits), x)
     qf = _fixed(x, bits)
     qb = _bfp(x, bits)
-    return jnp.where(mode == 1.0, qf, jnp.where(mode == 2.0, qb, x))
+    fixed_like = jnp.logical_or(mode == 1.0, mode == 3.0)
+    return jnp.where(fixed_like, qf, jnp.where(mode == 2.0, qb, x))
 
 
 def quantize_contract(x: jax.Array, mode: jax.Array, bits: jax.Array, axis: int) -> jax.Array:
@@ -95,32 +110,32 @@ def quantize_contract(x: jax.Array, mode: jax.Array, bits: jax.Array, axis: int)
 @jax.custom_vjp
 def dsq_dot(x: jax.Array, w: jax.Array, qcfg: jax.Array) -> jax.Array:
     """Quantized ``x @ w`` for a weight GEMM; x: (M, K), w: (K, N)."""
-    mode, q0 = qcfg[0], qcfg[1]
-    xq = quantize(x, mode, q0)  # boxes along K
-    wq = quantize_contract(w, mode, q0, 0)  # boxes along K
+    m0, q0 = qcfg[0], qcfg[1]
+    xq = quantize(x, m0, q0)  # boxes along K
+    wq = quantize_contract(w, m0, q0, 0)  # boxes along K
     return xq @ wq
 
 
 def _dsq_dot_fwd(x, w, qcfg):
-    mode, q0, q1 = qcfg[0], qcfg[1], qcfg[2]
-    xq = quantize(x, mode, q0)
-    wq = quantize_contract(w, mode, q0, 0)
+    m0, q0, m1, q1 = qcfg[0], qcfg[1], qcfg[2], qcfg[3]
+    xq = quantize(x, m0, q0)
+    wq = quantize_contract(w, m0, q0, 0)
     y = xq @ wq
     # THE stash: x survives to the backward pass only in q1 form.
-    xs = quantize(x, mode, q1)
+    xs = quantize(x, m1, q1)
     return y, (xs, w, qcfg)
 
 
 def _dsq_dot_bwd(res, dy):
     xs, w, qcfg = res
-    mode, q2, q3 = qcfg[0], qcfg[3], qcfg[4]
+    m2, q2, m3, q3 = qcfg[4], qcfg[5], qcfg[6], qcfg[7]
     # dy was written to DRAM at q3 by the consumer layer; model the fetch.
-    dy = quantize(dy, mode, q3)
+    dy = quantize(dy, m3, q3)
     # GEMM 2: dx = dy @ w^T, contraction over N -> boxes along N.
-    dyq = quantize(dy, mode, q2)
-    wq = quantize(w, mode, q2)  # boxes along N (w's last axis)
+    dyq = quantize(dy, m2, q2)
+    wq = quantize(w, m2, q2)  # boxes along N (w's last axis)
     dx = dyq @ wq.T
-    dx = quantize(dx, mode, q3)  # written back to DRAM at q3
+    dx = quantize(dx, m3, q3)  # written back to DRAM at q3
     # GEMM 3: dw = xs^T @ dy, runs on the q1 stash and the q3 gradient.
     dw = xs.T @ dy
     return dx, dw, jnp.zeros_like(qcfg)
@@ -139,33 +154,33 @@ def dsq_bmm(a: jax.Array, b: jax.Array, qcfg: jax.Array) -> jax.Array:
     a: (..., M, K), b: (..., K, N), identical leading dims. Both operands
     are activations, so BOTH are stashed at q1 for the backward pass.
     """
-    mode, q0 = qcfg[0], qcfg[1]
-    aq = quantize(a, mode, q0)
-    bq = quantize_contract(b, mode, q0, b.ndim - 2)
+    m0, q0 = qcfg[0], qcfg[1]
+    aq = quantize(a, m0, q0)
+    bq = quantize_contract(b, m0, q0, b.ndim - 2)
     return aq @ bq
 
 
 def _dsq_bmm_fwd(a, b, qcfg):
-    mode, q0, q1 = qcfg[0], qcfg[1], qcfg[2]
-    aq = quantize(a, mode, q0)
-    bq = quantize_contract(b, mode, q0, b.ndim - 2)
+    m0, q0, m1, q1 = qcfg[0], qcfg[1], qcfg[2], qcfg[3]
+    aq = quantize(a, m0, q0)
+    bq = quantize_contract(b, m0, q0, b.ndim - 2)
     y = aq @ bq
-    a_s = quantize(a, mode, q1)
-    b_s = quantize_contract(b, mode, q1, b.ndim - 2)
+    a_s = quantize(a, m1, q1)
+    b_s = quantize_contract(b, m1, q1, b.ndim - 2)
     return y, (a_s, b_s, qcfg)
 
 
 def _dsq_bmm_bwd(res, dy):
     a_s, b_s, qcfg = res
-    mode, q2, q3 = qcfg[0], qcfg[3], qcfg[4]
-    dy = quantize(dy, mode, q3)
-    dyq = quantize(dy, mode, q2)
+    m2, q2, m3, q3 = qcfg[4], qcfg[5], qcfg[6], qcfg[7]
+    dy = quantize(dy, m3, q3)
+    dyq = quantize(dy, m2, q2)
     # da = dy @ b^T (contraction over N): b_s is the q1 DRAM copy.
     da = dyq @ jnp.swapaxes(b_s, -1, -2)
-    da = quantize(da, mode, q3)
+    da = quantize(da, m3, q3)
     # db = a^T @ dy (contraction over M).
     db = jnp.swapaxes(a_s, -1, -2) @ dy
-    db = quantize_contract(db, mode, q3, db.ndim - 2)
+    db = quantize_contract(db, m3, q3, db.ndim - 2)
     return da, db, jnp.zeros_like(qcfg)
 
 

@@ -32,7 +32,7 @@ PAD, BOS, EOS = 0, 1, 2
 NEG_INF = -1e9
 LABEL_SMOOTHING = 0.1
 
-FP32_QCFG = (0.0, 32.0, 32.0, 32.0, 32.0)
+FP32_QCFG = (0.0, 32.0, 0.0, 32.0, 0.0, 32.0, 0.0, 32.0)
 
 
 @dataclass(frozen=True)

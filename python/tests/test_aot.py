@@ -49,7 +49,7 @@ def test_nmt_exports_shapes():
     cfg = M.Seq2SeqConfig(vocab=64, d_model=32, nheads=2, d_ff=64, enc_layers=1,
                           dec_layers=1, src_len=16, tgt_len=16, batch=4)
     exports, specs = aot.build_nmt_exports(cfg)
-    assert set(exports) == {"init", "train_bfp", "train_fixed", "eval", "decode"}
+    assert set(exports) == {"init", "train_bfp", "train_fixed", "train_both", "eval", "decode"}
     n = len(specs)
     fn, ex = exports["train_bfp"]
     # params*3 + step + src + tgt_in + tgt_out + qcfg + lr
@@ -104,7 +104,7 @@ def test_exported_train_step_runs_under_jax(tmp_path):
     rng = np.random.default_rng(0)
     src = rng.integers(3, 64, (4, 16)).astype(np.int32)
     tgt_in = np.concatenate([np.ones((4, 1), np.int32), src[:, :-1]], 1)
-    qcfg = jnp.array([2.0, 2.0, 2.0, 2.0, 16.0], jnp.float32)
+    qcfg = jnp.array([2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 16.0], jnp.float32)
     out = jax.jit(train_fn)(
         *flat, *zeros, *zeros, jnp.float32(1.0), src, tgt_in, src, qcfg, jnp.float32(1e-3)
     )

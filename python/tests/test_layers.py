@@ -23,7 +23,14 @@ def rand(shape, lo=-3, hi=3):
 
 
 def qcfg(mode, q0, q1, q2, q3):
-    return jnp.array([mode, q0, q1, q2, q3], jnp.float32)
+    """Uniform-mode config: four [mode, bits] slot pairs."""
+    return jnp.array([mode, q0, mode, q1, mode, q2, mode, q3], jnp.float32)
+
+
+def qcfg_slots(*slots):
+    """Heterogeneous config from four (mode, bits) pairs."""
+    flat = [v for pair in slots for v in pair]
+    return jnp.array(flat, jnp.float32)
 
 
 FP32 = qcfg(0, 32, 32, 32, 32)
@@ -118,7 +125,7 @@ def test_dot_qcfg_gets_zero_grad():
     x, w = rand((4, 16)), rand((16, 8))
     c = qcfg(2, 8, 4, 4, 16)
     g = jax.grad(lambda cc: jnp.sum(dsq_dot(x, w, cc)))(c)
-    np.testing.assert_array_equal(np.asarray(g), np.zeros(5, np.float32))
+    np.testing.assert_array_equal(np.asarray(g), np.zeros(8, np.float32))
 
 
 def test_dot_grad_error_grows_as_stash_shrinks():
@@ -172,7 +179,38 @@ def test_bmm_backward_points():
     np.testing.assert_allclose(np.asarray(db), np.asarray(db_want), rtol=1e-6, atol=1e-6)
 
 
-@pytest.mark.parametrize("mode", [0.0, 1.0, 2.0])
+def test_dot_heterogeneous_slot_modes():
+    """Per-slot modes: a BFP forward path with a fixed-point stash must
+    quantize each point with its own family."""
+    x, w = rand((8, 32)), rand((32, 16))
+    c = qcfg_slots((2, 16), (1, 4), (2, 4), (2, 16))  # bfp16,fixed4,bfp4,bfp16
+    r = rand((8, 16), -1, 1)
+
+    def f(x, w):
+        return jnp.sum(dsq_dot(x, w, c) * r)
+
+    dx, dw = jax.grad(f, argnums=(0, 1))(x, w)
+    # dw runs on the FIXED-quantized stash (slot 1, mode 1).
+    dy = ref.bfp_quantize_ref(r, 16.0)
+    xs = ref.fixed_quantize_ref(x, 4.0)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(xs.T @ dy), rtol=1e-6, atol=1e-6)
+    # dx path stays BFP (slots 2/3, mode 2).
+    dyq = ref.bfp_quantize_ref(ref.bfp_quantize_ref(r, 16.0), 4.0)
+    wq = ref.bfp_quantize_ref(w, 4.0)
+    dx_want = ref.bfp_quantize_ref(dyq @ wq.T, 16.0)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_want), rtol=1e-6, atol=1e-6)
+
+
+def test_mode3_fixed_sr_uses_fixed_grid_in_graph():
+    """Inside the artifact, mode 3 (fixed-sr) applies the fixed grid with
+    nearest rounding (the stochastic stream is host-side only)."""
+    x, w = rand((4, 16)), rand((16, 8))
+    got = np.asarray(dsq_dot(x, w, qcfg(3, 8, 8, 8, 16)))
+    want = np.asarray(dsq_dot(x, w, qcfg(1, 8, 8, 8, 16)))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("mode", [0.0, 1.0, 2.0, 3.0])
 def test_bmm_modes_finite(mode):
     a, b = rand((2, 8, 16)), rand((2, 16, 8))
     c = qcfg(mode, 8, 4, 4, 16)

@@ -28,7 +28,7 @@ CTINY = M.ClassifierConfig(
 )
 
 FP32 = jnp.asarray(M.FP32_QCFG, jnp.float32)
-DSQ_AGGR = jnp.array([2.0, 2.0, 2.0, 2.0, 16.0], jnp.float32)
+DSQ_AGGR = jnp.array([2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 16.0], jnp.float32)
 
 
 def make_batch(cfg, rng):
@@ -120,7 +120,7 @@ def test_dsq_aggressive_training_still_learns():
 
 def test_dsq_vs_fp32_losses_comparable():
     _, l_fp = _train(TINY, FP32, 40)
-    _, l_q = _train(TINY, jnp.array([2.0, 16.0, 4.0, 4.0, 16.0], jnp.float32), 40)
+    _, l_q = _train(TINY, jnp.array([2.0, 16.0, 2.0, 4.0, 2.0, 4.0, 2.0, 16.0], jnp.float32), 40)
     # Stashing(BFP) [16,4,4,16] tracks fp32 closely (paper Table 1).
     assert abs(l_q[-1] - l_fp[-1]) < 0.6
 
@@ -168,7 +168,7 @@ def test_classifier_trains():
     v = jax.tree_util.tree_map(jnp.zeros_like, p)
     rng = np.random.default_rng(0)
     fn = jax.jit(functools.partial(M.cls_train_step, cfg=CTINY))
-    stash = jnp.array([2.0, 16.0, 4.0, 4.0, 16.0], jnp.float32)  # Stashing(BFP)
+    stash = jnp.array([2.0, 16.0, 2.0, 4.0, 2.0, 4.0, 2.0, 16.0], jnp.float32)  # Stashing(BFP)
     batches = [make_cls_batch(CTINY, rng) for _ in range(4)]
     first = last = None
     for i in range(1, 81):

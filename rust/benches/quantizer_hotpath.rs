@@ -1,34 +1,38 @@
 //! Bench: the quantizer hot path (rust mirrors) across widths, shapes
-//! and formats — the L3-side microbenchmark backing §Perf.
+//! and every registered format — the L3-side microbenchmark backing
+//! §Perf.
 //!
 //! The production quantization happens inside the XLA artifact; these
 //! mirrors run in tests/cost analysis and must not be a bottleneck for
-//! large sweeps.
+//! large sweeps. The sweep enumerates `quant::FORMAT_REGISTRY`, so a
+//! newly registered format (e.g. the stochastic-rounding fixed point
+//! added with the registry) is tracked here automatically.
 
 use dsq::bench::{header, Bencher};
-use dsq::quant;
+use dsq::quant::registered_specs;
 use dsq::util::rng::Pcg32;
 
 fn main() {
-    header("Quantizer hot path (rust mirrors)");
+    header("Quantizer hot path (rust mirrors, all registered formats)");
     let mut rng = Pcg32::new(1);
     let sizes = [(1usize << 12, 128usize), (1 << 16, 256), (1 << 20, 512)];
+    let widths = [2u32, 4, 8, 16];
     let b = Bencher::default();
     for (n, inner) in sizes {
         let x: Vec<f32> = (0..n).map(|_| rng.normal() * (rng.f32() * 8.0 - 4.0).exp2()).collect();
-        for bits in [2.0f32, 4.0, 8.0, 16.0] {
-            let mut buf = x.clone();
-            let r = b.bench(&format!("bfp  n={n:>8} inner={inner:>4} m={bits}"), || {
+        let mut buf = x.clone();
+        // The width list stays below the >= 25-bit passthrough, so every
+        // swept spec (fp32 never instantiates at these widths) does real work.
+        for spec in registered_specs(&widths) {
+            let label = format!("{:<10} n={n:>8} inner={inner:>4}", spec.spec_string());
+            let r = b.bench(&label, || {
                 buf.copy_from_slice(&x);
-                quant::bfp_quantize_into(std::hint::black_box(&mut buf), inner, bits);
+                // Step-indexed entry point: the stochastic formats pay
+                // for their rounding stream here, which is exactly the
+                // per-step cost the trainer-side mirror would pay.
+                spec.quantize_into_step(std::hint::black_box(&mut buf), inner, 1);
             });
             println!("{}  ({:.0} Melem/s)", r.report(), r.throughput(n as f64) / 1e6);
         }
-        let mut buf = x.clone();
-        let r = b.bench(&format!("fixed n={n:>8} b=8"), || {
-            buf.copy_from_slice(&x);
-            quant::fixed_quantize_into(std::hint::black_box(&mut buf), 8.0);
-        });
-        println!("{}  ({:.0} Melem/s)", r.report(), r.throughput(n as f64) / 1e6);
     }
 }

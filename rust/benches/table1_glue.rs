@@ -8,7 +8,7 @@
 
 use dsq::bench::{header, Bencher};
 use dsq::costmodel::{self, tables, TransformerWorkload};
-use dsq::schedule::{PrecisionConfig, QuantMode};
+use dsq::schedule::{FormatSpec, PrecisionConfig};
 
 fn main() {
     header("Table 1 (GLUE MNLI/QNLI, RoBERTa-base) — cost columns");
@@ -21,9 +21,9 @@ fn main() {
     }
     // Fine-tuning trace (paper: DSQ = 0.043x / 0.26x): more time at the
     // higher rungs than the from-scratch run.
-    let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
-    let mid = PrecisionConfig::new(QuantMode::Bfp, 8.0, 4.0, 4.0, 16.0);
-    let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+    let lo = PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16]);
+    let mid = PrecisionConfig::of(FormatSpec::bfp(16), [8, 4, 4, 16]);
+    let hi = PrecisionConfig::stashing(FormatSpec::bfp(16));
     let dsq = tables::dsq_trace_row(&w, &[(lo, 70), (mid, 20), (hi, 10)]);
     println!(
         "{:<18} {:<16} {:>7.3}x {:>7.3}x   (paper 0.043x / 0.26x)",

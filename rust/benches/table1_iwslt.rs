@@ -8,7 +8,7 @@
 
 use dsq::bench::{header, Bencher};
 use dsq::costmodel::{self, tables, TransformerWorkload};
-use dsq::schedule::{PrecisionConfig, QuantMode};
+use dsq::schedule::{FormatSpec, PrecisionConfig};
 
 fn main() {
     header("Table 1 (IWSLT17 DE-EN, 6-layer transformer) — cost columns");
@@ -33,8 +33,8 @@ fn main() {
             paper.map_or("-".into(), |(_, _, _, d)| format!("{d:.2}x")),
         );
     }
-    let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
-    let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+    let lo = PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16]);
+    let hi = PrecisionConfig::stashing(FormatSpec::bfp(16));
     let dsq = tables::dsq_trace_row(&w, &[(lo, 96), (hi, 4)]);
     println!(
         "{:<18} {:<16} {:>8} {:>8}   {:>8} {:>8}",
@@ -48,7 +48,7 @@ fn main() {
     let f16 = costmodel::normalized_row(
         &w,
         "fixed16",
-        &PrecisionConfig::uniform(QuantMode::Fixed, 16.0),
+        &PrecisionConfig::uniform(FormatSpec::fixed(16)),
         true,
     );
     println!(

@@ -11,7 +11,7 @@ use dsq::bench::{header, Bencher};
 use dsq::costmodel::{self, TransformerWorkload};
 use dsq::experiments::table4::SWEEP;
 use dsq::quant;
-use dsq::schedule::{PrecisionConfig, QuantMode};
+use dsq::schedule::PrecisionConfig;
 use dsq::util::rng::Pcg32;
 
 fn main() {
@@ -28,7 +28,7 @@ fn main() {
         "precision", "arith", "dram", "q1 rel-err", "q0 rel-err", "paperΔ"
     );
     for (setup, paper_delta) in SWEEP {
-        let p = PrecisionConfig::parse(QuantMode::Bfp, setup).unwrap();
+        let p = PrecisionConfig::parse(&format!("bfp:{setup}")).unwrap();
         let row = costmodel::normalized_row(&w, "stash", &p, true);
         let err = |bits: f32| {
             let q = quant::bfp_quantize(&acts, 256, bits);
@@ -44,8 +44,8 @@ fn main() {
             setup,
             row.arith_rel.unwrap(),
             row.dram_rel.unwrap(),
-            err(p.q1),
-            err(p.q0),
+            err(p.stash().bits() as f32),
+            err(p.fwd().bits() as f32),
             paper_delta
         );
     }

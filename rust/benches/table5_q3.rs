@@ -9,7 +9,7 @@ use dsq::bench::{header, Bencher};
 use dsq::costmodel::{self, TransformerWorkload};
 use dsq::experiments::table5::SWEEP;
 use dsq::quant;
-use dsq::schedule::{PrecisionConfig, QuantMode};
+use dsq::schedule::PrecisionConfig;
 use dsq::util::rng::Pcg32;
 
 fn main() {
@@ -35,10 +35,10 @@ fn main() {
         "precision", "arith", "dram", "fixed rel-err", "bfp rel-err", "fixed zeroed %"
     );
     for (setup, _paper) in SWEEP {
-        let p = PrecisionConfig::parse(QuantMode::Fixed, setup).unwrap();
+        let p = PrecisionConfig::parse(&format!("fixed:{setup}")).unwrap();
         let row = costmodel::normalized_row(&w, "stash-fixed", &p, true);
-        let qf = quant::fixed_quantize(&grads, p.q3);
-        let qb = quant::bfp_quantize(&grads, 256, p.q3);
+        let qf = quant::fixed_quantize(&grads, p.grad().bits() as f32);
+        let qb = quant::bfp_quantize(&grads, 256, p.grad().bits() as f32);
         let rel = |q: &[f32]| {
             let (mut num, mut den) = (0f64, 0f64);
             for (a, b) in grads.iter().zip(q) {

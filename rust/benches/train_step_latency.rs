@@ -13,7 +13,7 @@ use std::path::PathBuf;
 use dsq::bench::{fmt_ns, header, Bencher};
 use dsq::coordinator::{LrSchedule, Trainer, TrainerConfig};
 use dsq::data::Variant;
-use dsq::schedule::{PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use dsq::schedule::{FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
 
 fn main() {
     let artifacts = PathBuf::from("artifacts");
@@ -25,10 +25,11 @@ fn main() {
 
     let configs = [
         ("fp32 [32,32,32,32]", PrecisionConfig::FP32),
-        ("bfp [16,16,16,16]", PrecisionConfig::uniform(QuantMode::Bfp, 16.0)),
-        ("bfp stash [16,4,4,16]", PrecisionConfig::stashing(QuantMode::Bfp)),
-        ("bfp dsq-lo [2,2,2,16]", PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0)),
-        ("fixed [16,16,16,16]", PrecisionConfig::uniform(QuantMode::Fixed, 16.0)),
+        ("bfp [16,16,16,16]", PrecisionConfig::uniform(FormatSpec::bfp(16))),
+        ("bfp stash [16,4,4,16]", PrecisionConfig::stashing(FormatSpec::bfp(16))),
+        ("bfp dsq-lo [2,2,2,16]", PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16])),
+        ("fixed [16,16,16,16]", PrecisionConfig::uniform(FormatSpec::fixed(16))),
+        ("fixed-sr [16,4,4,16]", PrecisionConfig::stashing(FormatSpec::fixed_sr(16))),
     ];
 
     for (name, p) in configs {

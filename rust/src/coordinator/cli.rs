@@ -1,20 +1,24 @@
 //! CLI dispatch for the `dsq` binary.
 //!
 //! ```text
-//! dsq train       --schedule dsq|fp32|<mode>:<q0,q1,q2,q3> ...
+//! dsq train       --schedule dsq|dsq-<family>|<config-spec> ...
 //! dsq finetune    --nclasses 2|3 --init-checkpoint ...
 //! dsq cost-table  --workload iwslt|wmt|roberta|testbed
 //! dsq roofline    --machine a100|edge
 //! dsq experiment  table1-iwslt|table1-glue|table4|table5|table6|figure1|all
+//! dsq formats     (registered number formats + spec grammar)
 //! dsq info        (artifact manifest summary)
 //! dsq version
 //! ```
+//!
+//! Config specs go through the format registry: `fp32`, `bfp8`,
+//! `bfp:16,4,4,16`, `bfp16,bfp4,bfp4,fixed16sr`, … (see `dsq formats`).
 
 use std::path::PathBuf;
 
 use crate::costmodel::{self, TransformerWorkload, WorkloadKind};
 use crate::data::Variant;
-use crate::schedule::{DsqController, PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use crate::schedule::{DsqController, FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
 use crate::util::cli::{ArgSpec, Args};
 use crate::{Error, Result};
 
@@ -34,6 +38,7 @@ pub fn dispatch(args: &[String]) -> i32 {
         "cost-table" => cmd_cost_table(rest),
         "roofline" => cmd_roofline(rest),
         "experiment" => cmd_experiment(rest),
+        "formats" => cmd_formats(),
         "info" => cmd_info(rest),
         "version" => {
             println!("dsq {} — Dynamic Stashing Quantization trainer", env!("CARGO_PKG_VERSION"));
@@ -67,27 +72,29 @@ subcommands:
   roofline     print Figure 1 (roofline placements)
   experiment   regenerate a paper table/figure (table1-iwslt, table1-glue,
                table4, table5, table6, figure1, all)
+  formats      list the registered number formats (the --schedule grammar)
   info         artifact manifest summary
   version      print version
 ";
 
-/// Parse `--schedule`: `dsq`, `fp32`, or `<mode>:<q0,q1,q2,q3>`
-/// (e.g. `bfp:16,4,4,16`, `fixed:8,8,8,16`).
+/// Parse `--schedule`. Every static form goes through the format
+/// registry ([`PrecisionConfig::parse`]), so a new registered format is
+/// immediately spellable here with no CLI change:
+///
+/// * `dsq` — the paper's dynamic controller over BFP;
+/// * `dsq-<family>` — the same ladder over any registered family
+///   (`dsq-fixed`, `dsq-fixedsr`, …);
+/// * a static config spec: `fp32`, one format for all slots (`bfp8`),
+///   one family with per-slot widths (`bfp:16,4,4,16`), or per-slot
+///   specs (`bfp16,bfp4,bfp4,fixed16sr`).
 pub fn parse_schedule(spec: &str) -> Result<Box<dyn Schedule>> {
     match spec {
-        "dsq" => Ok(Box::new(DsqController::paper_default(QuantMode::Bfp))),
-        "dsq-fixed" => Ok(Box::new(DsqController::paper_default(QuantMode::Fixed))),
-        "fp32" => Ok(Box::new(StaticSchedule(PrecisionConfig::FP32))),
+        "dsq" => Ok(Box::new(DsqController::paper_default("bfp")?)),
         other => {
-            let (mode_s, bits) = other
-                .split_once(':')
-                .ok_or_else(|| Error::Config(format!("bad --schedule '{other}'")))?;
-            let mode = match mode_s {
-                "bfp" => QuantMode::Bfp,
-                "fixed" => QuantMode::Fixed,
-                m => return Err(Error::Config(format!("unknown quantizer mode '{m}'"))),
-            };
-            Ok(Box::new(StaticSchedule(PrecisionConfig::parse(mode, bits)?)))
+            if let Some(family) = other.strip_prefix("dsq-") {
+                return Ok(Box::new(DsqController::paper_default(family)?));
+            }
+            Ok(Box::new(StaticSchedule(PrecisionConfig::parse(other)?)))
         }
     }
 }
@@ -97,7 +104,7 @@ fn common_train_flags(spec: ArgSpec) -> ArgSpec {
         .opt("seed", "0", "RNG seed for init + corpus")
         .opt("epochs", "4", "training epochs")
         .opt("batches-per-epoch", "50", "train batches per epoch")
-        .opt("schedule", "dsq", "dsq | fp32 | bfp:q0,q1,q2,q3 | fixed:q0,q1,q2,q3")
+        .opt("schedule", "dsq", "dsq | dsq-<family> | fp32 | <family>:q0,q1,q2,q3 | s0,s1,s2,s3")
         .opt("checkpoint", "", "save final checkpoint here")
         .opt("init-checkpoint", "", "initialize from this checkpoint")
         .bool("json", "print the full report as JSON")
@@ -127,7 +134,6 @@ fn cmd_train(raw: &[String]) -> Result<()> {
     let mut trainer = Trainer::new(cfg)?;
     let report = trainer.run(schedule.as_mut())?;
     let iwslt = TransformerWorkload::iwslt_6layer();
-    let (arith, dram) = report.cost_on(&iwslt);
     println!(
         "steps={} val_loss={:.4} token_acc={:.1}% bleu={} diverged={} ({:.2} steps/s)",
         report.steps,
@@ -137,9 +143,13 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         report.diverged,
         report.steps_per_s()
     );
-    println!(
-        "hardware cost of this schedule on paper-scale IWSLT: arith {arith:.3}x dram {dram:.3}x (vs fixed32)"
-    );
+    match report.cost_on(&iwslt) {
+        Some((arith, dram)) => println!(
+            "hardware cost of this schedule on paper-scale IWSLT: arith {arith:.3}x dram {dram:.3}x (vs fixed32)"
+        ),
+        // fp32 reference runs are unscored, exactly like the paper's "-" rows.
+        None => println!("hardware cost: - (fp32 reference is unscored)"),
+    }
     if a.get_bool("json") {
         println!("{}", report.to_json().to_string_pretty());
     }
@@ -219,8 +229,8 @@ fn cmd_cost_table(raw: &[String]) -> Result<()> {
         println!("{}", costmodel::normalized_row(&w, m, &p, score).fmt_paper_style());
     }
     // The canonical DSQ trace (mostly level-0 steps).
-    let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
-    let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+    let lo = PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16]);
+    let hi = PrecisionConfig::stashing(FormatSpec::bfp(16));
     println!("{}", costmodel::tables::dsq_trace_row(&w, &[(lo, 96), (hi, 4)]).fmt_paper_style());
     Ok(())
 }
@@ -262,6 +272,18 @@ fn cmd_experiment(raw: &[String]) -> Result<()> {
     crate::experiments::run(which, &opts)
 }
 
+fn cmd_formats() -> Result<()> {
+    println!("registered number formats ({}):", crate::quant::format::registered_summary());
+    for fam in crate::quant::format::FORMAT_REGISTRY {
+        println!("  {:<16} {}", fam.spelling(), fam.help);
+    }
+    println!(
+        "\nconfig spec forms: <spec> | <family>:q0,q1,q2,q3 | <spec>,<spec>,<spec>,<spec>\n\
+         schedules: dsq | dsq-<family> | any config spec (static)"
+    );
+    Ok(())
+}
+
 fn cmd_info(raw: &[String]) -> Result<()> {
     let spec = ArgSpec::new("info", "artifact manifest summary")
         .opt("artifacts", "artifacts", "artifact directory");
@@ -292,11 +314,26 @@ mod tests {
         assert!(parse_schedule("fp32").is_ok());
         let s = parse_schedule("bfp:16,4,4,16").unwrap();
         assert_eq!(s.current().notation(), "[16,4,4,16]");
-        assert_eq!(s.current().mode, QuantMode::Bfp);
+        assert_eq!(s.current().fwd(), FormatSpec::bfp(16));
         let s = parse_schedule("fixed:8,8,8,32").unwrap();
-        assert_eq!(s.current().mode, QuantMode::Fixed);
+        assert_eq!(s.current().grad(), FormatSpec::fixed(32));
         assert!(parse_schedule("nope").is_err());
         assert!(parse_schedule("bfp:1,2").is_err());
+    }
+
+    #[test]
+    fn parse_schedule_registry_formats() {
+        // Registered families are spellable with no CLI change: the SR
+        // format, per-slot heterogeneous configs, and dsq-<family>.
+        let s = parse_schedule("fixedsr:16,4,4,16").unwrap();
+        assert_eq!(s.current().stash(), FormatSpec::fixed_sr(4));
+        let s = parse_schedule("bfp16,bfp4,bfp4,fixed16sr").unwrap();
+        assert_eq!(s.current().grad(), FormatSpec::fixed_sr(16));
+        let s = parse_schedule("dsq-fixedsr").unwrap();
+        assert_eq!(s.current().notation(), "[2,2,2,16]");
+        assert_eq!(s.current().fwd(), FormatSpec::fixed_sr(2));
+        assert!(parse_schedule("dsq-fixed").is_ok());
+        assert!(parse_schedule("dsq-int8").is_err());
     }
 
     #[test]
@@ -311,6 +348,7 @@ mod tests {
     fn unknown_subcommand_exit_code() {
         assert_eq!(dispatch(&["bogus".to_string()]), 2);
         assert_eq!(dispatch(&["version".to_string()]), 0);
+        assert_eq!(dispatch(&["formats".to_string()]), 0);
         assert_eq!(dispatch(&[]), 0); // help
     }
 }

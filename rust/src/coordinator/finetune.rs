@@ -14,7 +14,7 @@ use crate::data::batcher::{assemble_cls, ClsBatch};
 use crate::metrics::LossTracker;
 use crate::model::{checkpoint, ModelState};
 use crate::runtime::{ArtifactManifest, HostTensor, Runtime};
-use crate::schedule::{PrecisionConfig, QuantMode, Schedule};
+use crate::schedule::{PrecisionConfig, Schedule};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use crate::{Error, Result};
@@ -80,7 +80,7 @@ impl FinetuneReport {
                 Json::arr(self.trace.iter().map(|(p, n)| {
                     Json::obj(vec![
                         ("precision", Json::str(&p.notation())),
-                        ("mode", Json::str(p.mode.name())),
+                        ("formats", Json::str(&p.spec_string())),
                         ("steps", Json::num(*n as f64)),
                     ])
                 })),
@@ -141,13 +141,6 @@ impl Finetuner {
         assemble_cls(&exs, self.seq_len)
     }
 
-    fn train_artifact_kind(mode: QuantMode) -> &'static str {
-        match mode {
-            QuantMode::Fixed => "train_fixed",
-            QuantMode::Bfp | QuantMode::Fp32 => "train_bfp",
-        }
-    }
-
     /// Mean loss + accuracy over batches.
     pub fn evaluate(&self, batches: &[ClsBatch]) -> Result<(f64, f64)> {
         let exe = Runtime::global().load(&self.man.model_path("cls", "eval")?)?;
@@ -184,7 +177,7 @@ impl Finetuner {
                 let batch = self.make_batch(&mut rng);
                 let pc = schedule.current();
                 let exe =
-                    rt.load(&self.man.model_path("cls", Self::train_artifact_kind(pc.mode))?)?;
+                    rt.load(&self.man.model_path("cls", super::train_artifact_kind(&pc))?)?;
                 let lr = self.cfg.lr.at(self.state.step + 1) as f32;
                 let mut inputs = Vec::with_capacity(3 * self.state.params.len() + 5);
                 inputs.extend(self.state.params.iter().cloned());
@@ -196,7 +189,7 @@ impl Finetuner {
                     batch.tokens.clone(),
                 ));
                 inputs.push(HostTensor::i32(vec![self.batch], batch.labels.clone()));
-                inputs.push(HostTensor::f32(vec![5], pc.as_qcfg().to_vec()));
+                inputs.push(HostTensor::f32(vec![8], pc.as_qcfg().to_vec()));
                 inputs.push(HostTensor::scalar_f32(lr));
                 let outs = exe.run(&inputs)?;
                 let loss = self.state.absorb_step_output(outs)? as f64;

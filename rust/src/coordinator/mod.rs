@@ -10,3 +10,47 @@ pub use cli::dispatch;
 pub use finetune::{FinetuneConfig, FinetuneReport, Finetuner};
 pub use lr::LrSchedule;
 pub use trainer::{TrainReport, Trainer, TrainerConfig};
+
+use crate::schedule::{FormatSpec, PrecisionConfig};
+
+/// Which train-artifact variant a precision config needs. The AOT
+/// pipeline exports per-quantizer variants (`aot.py`): `train_bfp` and
+/// `train_fixed` bake a single quantizer subgraph (XLA compile time
+/// scales badly with the subgraph count), `train_both` carries both for
+/// heterogeneous per-slot configs. The fp32 path (mode scalar 0) exists
+/// in every variant; stochastic-rounding fixed slots ride the fixed
+/// quantizer grid.
+pub fn train_artifact_kind(p: &PrecisionConfig) -> &'static str {
+    let (mut fixed, mut bfp) = (false, false);
+    for f in &p.slots {
+        // Exhaustive on purpose: a future format family must decide its
+        // artifact routing here explicitly (compiler error, not a
+        // silent fall-through to the BFP variant).
+        match f {
+            FormatSpec::Fixed { .. } => fixed = true,
+            FormatSpec::Bfp { .. } => bfp = true,
+            FormatSpec::Fp32 => {}
+        }
+    }
+    match (fixed, bfp) {
+        (true, true) => "train_both",
+        (true, false) => "train_fixed",
+        (false, _) => "train_bfp",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_kind_per_slot_families() {
+        let kind = |s: &str| train_artifact_kind(&PrecisionConfig::parse(s).unwrap());
+        assert_eq!(kind("fp32"), "train_bfp");
+        assert_eq!(kind("bfp:16,4,4,16"), "train_bfp");
+        assert_eq!(kind("fixed:8,8,8,16"), "train_fixed");
+        assert_eq!(kind("fixedsr:8,8,8,16"), "train_fixed");
+        assert_eq!(kind("bfp16,bfp4,bfp4,fixed16sr"), "train_both");
+        assert_eq!(kind("fp32,bfp4,bfp4,bfp16"), "train_bfp");
+    }
+}

@@ -21,7 +21,7 @@ use crate::data::{Batch, Batcher, TranslationConfig, TranslationTask, Variant};
 use crate::metrics::{bleu, LossTracker};
 use crate::model::{checkpoint, ModelState};
 use crate::runtime::{ArtifactManifest, HostTensor, Runtime};
-use crate::schedule::{PrecisionConfig, QuantMode, Schedule};
+use crate::schedule::{PrecisionConfig, Schedule};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -86,10 +86,12 @@ impl TrainReport {
     }
 
     /// Relative hardware cost of this run's schedule trace on a
-    /// paper-scale workload (the DSQ table columns).
-    pub fn cost_on(&self, w: &TransformerWorkload) -> (f64, f64) {
+    /// paper-scale workload (the DSQ table columns). `None` when the
+    /// trace is unscored — an fp32-only run (the paper leaves fp32 rows
+    /// as "-") or a run that took zero steps.
+    pub fn cost_on(&self, w: &TransformerWorkload) -> Option<(f64, f64)> {
         let row = costmodel::tables::dsq_trace_row(w, &self.trace);
-        (row.arith_rel.unwrap(), row.dram_rel.unwrap())
+        row.arith_rel.zip(row.dram_rel)
     }
 
     pub fn to_json(&self) -> Json {
@@ -110,7 +112,7 @@ impl TrainReport {
                 Json::arr(self.trace.iter().map(|(p, n)| {
                     Json::obj(vec![
                         ("precision", Json::str(&p.notation())),
-                        ("mode", Json::str(p.mode.name())),
+                        ("formats", Json::str(&p.spec_string())),
                         ("steps", Json::num(*n as f64)),
                     ])
                 })),
@@ -176,15 +178,7 @@ impl Trainer {
         &self.state
     }
 
-    fn train_artifact_kind(mode: QuantMode) -> &'static str {
-        match mode {
-            QuantMode::Fixed => "train_fixed",
-            // The fp32 path (mode scalar 0) exists in every variant.
-            QuantMode::Bfp | QuantMode::Fp32 => "train_bfp",
-        }
-    }
-
-    fn step_inputs(&self, batch: &Batch, qcfg: [f32; 5], lr: f32) -> Vec<HostTensor> {
+    fn step_inputs(&self, batch: &Batch, qcfg: [f32; 8], lr: f32) -> Vec<HostTensor> {
         let (b, s, t) = (self.batcher.batch, self.batcher.src_len, self.batcher.tgt_len);
         let mut inputs =
             Vec::with_capacity(3 * self.state.params.len() + 6);
@@ -195,7 +189,7 @@ impl Trainer {
         inputs.push(HostTensor::i32(vec![b, s], batch.src.clone()));
         inputs.push(HostTensor::i32(vec![b, t], batch.tgt_in.clone()));
         inputs.push(HostTensor::i32(vec![b, t], batch.tgt_out.clone()));
-        inputs.push(HostTensor::f32(vec![5], qcfg.to_vec()));
+        inputs.push(HostTensor::f32(vec![8], qcfg.to_vec()));
         inputs.push(HostTensor::scalar_f32(lr));
         inputs
     }
@@ -294,7 +288,7 @@ impl Trainer {
             for batch in rx.iter() {
                 let pc = schedule.current();
                 let exe =
-                    rt.load(&self.man.model_path("nmt", Self::train_artifact_kind(pc.mode))?)?;
+                    rt.load(&self.man.model_path("nmt", super::train_artifact_kind(&pc))?)?;
                 let lr = self.cfg.lr.at(self.state.step + 1) as f32;
                 let inputs = self.step_inputs(&batch, pc.as_qcfg(), lr);
                 let outs = exe.run(&inputs)?;

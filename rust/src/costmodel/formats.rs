@@ -1,4 +1,12 @@
-//! Number formats and their hardware costs.
+//! Hardware costs of the number formats — the cost-model half of
+//! [`FormatSpec`].
+//!
+//! The descriptor itself lives in [`crate::quant::format`]; this module
+//! holds the calibrated constants and implements
+//! [`FormatSpec::storage_bits`] / [`FormatSpec::mac_cost`] on it, so the
+//! tables, roofline and training cost paths read costs from the *same
+//! object the quantizers execute* — there is no parallel cost-only
+//! format enum to keep in sync.
 //!
 //! Cost conventions (normalization target: one int32 MAC ≡ 1.0, one
 //! 32-bit DRAM element ≡ 32 bits):
@@ -6,7 +14,9 @@
 //! * **fixed-point b-bit MAC**: `(b₁·b₂)/32²` — multiplier area/energy is
 //!   proportional to the product of operand widths (standard array
 //!   multiplier scaling; also what makes the paper's fixed-16 row exactly
-//!   0.25×).
+//!   0.25×). Stochastic-rounding fixed point shares the fixed-point MAC
+//!   and storage costs: the rounding happens once at quantization time,
+//!   not in the multiply-accumulate array.
 //! * **BFP m-bit MAC**: `A·(m₁·m₂)/32² + B·max(m₁,m₂)/32` — a mantissa
 //!   multiply plus the per-element alignment/normalization shifter that
 //!   scales linearly with width. Fitting the paper's BFP-32 (0.56×) and
@@ -19,8 +29,12 @@
 //!   bits/element (sign+mantissa `b`, amortized shared exponent 8/16 =
 //!   0.5, container padding — fitted: BFP-32 → 36/32 = 1.13×, BFP-16 →
 //!   20/32 = 0.63×, both matching the paper exactly).
+//!
+//! Widths ≥ 25 are numerically an identity, but the *hardware* cost
+//! still reflects the container (32-bit fixed / BFP-32): the paper's
+//! `[32,32,32,32]` rows are real 32-bit hardware paths.
 
-use crate::schedule::QuantMode;
+use crate::quant::format::{FormatSpec, Rounding};
 
 /// Fitted BFP MAC constants (DESIGN.md §6).
 pub const BFP_MAC_MUL: f64 = 0.40;
@@ -30,60 +44,47 @@ pub const FP32_MAC: f64 = 1.2;
 /// BFP per-element storage overhead in bits (exponent share + padding).
 pub const BFP_STORAGE_OVERHEAD_BITS: f64 = 4.0;
 
-/// A concrete number format for one tensor/operand.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum NumFormat {
-    /// IEEE-754 binary32.
-    Fp32,
-    /// Fixed point with `b` total bits (sign + magnitude/fraction).
-    Fixed(f64),
-    /// Block floating point with `m` mantissa bits (box 16, 8-bit
-    /// shared exponent).
-    Bfp(f64),
-}
-
-impl NumFormat {
-    /// Map a schedule (mode, bits) pair onto a format. Bits ≥ 25 mean
-    /// "effectively full precision" numerically, but the *hardware* cost
-    /// still reflects the container (32-bit fixed / BFP-32): the paper's
-    /// `[32,32,32,32]` rows are real 32-bit hardware paths.
-    pub fn from_qbits(mode: QuantMode, bits: f32) -> NumFormat {
-        match mode {
-            QuantMode::Fp32 => NumFormat::Fp32,
-            QuantMode::Fixed => NumFormat::Fixed(bits as f64),
-            QuantMode::Bfp => NumFormat::Bfp(bits as f64),
-        }
-    }
-
+impl FormatSpec {
     /// Storage bits per element in DRAM.
     pub fn storage_bits(&self) -> f64 {
         match *self {
-            NumFormat::Fp32 => 32.0,
-            NumFormat::Fixed(b) => b,
-            NumFormat::Bfp(m) => m + BFP_STORAGE_OVERHEAD_BITS,
+            FormatSpec::Fp32 => 32.0,
+            FormatSpec::Fixed { bits, .. } => bits as f64,
+            FormatSpec::Bfp { bits } => bits as f64 + BFP_STORAGE_OVERHEAD_BITS,
+        }
+    }
+
+    /// Relative cost of one MAC with `self` and `other` as operand
+    /// formats (int32 MAC ≡ 1.0). Symmetric in its arguments.
+    pub fn mac_cost(&self, other: &FormatSpec) -> f64 {
+        use FormatSpec::*;
+        match (*self, *other) {
+            (Fp32, _) | (_, Fp32) => FP32_MAC,
+            (Fixed { bits: b1, .. }, Fixed { bits: b2, .. }) => {
+                (b1 as f64 * b2 as f64) / 1024.0
+            }
+            (Bfp { bits: m1 }, Bfp { bits: m2 }) => {
+                let (m1, m2) = (m1 as f64, m2 as f64);
+                BFP_MAC_MUL * (m1 * m2) / 1024.0 + BFP_MAC_SHIFT * m1.max(m2) / 32.0
+            }
+            // Mixed fixed/BFP operands: treat the fixed side as a
+            // degenerate one-box BFP (same multiplier, shared alignment
+            // path).
+            (Fixed { bits: b1, .. }, Bfp { bits: m2 })
+            | (Bfp { bits: m2 }, Fixed { bits: b1, .. }) => {
+                let (b1, m2) = (b1 as f64, m2 as f64);
+                BFP_MAC_MUL * (b1 * m2) / 1024.0 + BFP_MAC_SHIFT * b1.max(m2) / 32.0
+            }
         }
     }
 
     pub fn is_bfp(&self) -> bool {
-        matches!(self, NumFormat::Bfp(_))
+        matches!(self, FormatSpec::Bfp { .. })
     }
-}
 
-/// Relative cost of one MAC with operand formats `a` and `b`
-/// (int32 MAC ≡ 1.0).
-pub fn mac_cost(a: NumFormat, b: NumFormat) -> f64 {
-    use NumFormat::*;
-    match (a, b) {
-        (Fp32, _) | (_, Fp32) => FP32_MAC,
-        (Fixed(b1), Fixed(b2)) => (b1 * b2) / 1024.0,
-        (Bfp(m1), Bfp(m2)) => {
-            BFP_MAC_MUL * (m1 * m2) / 1024.0 + BFP_MAC_SHIFT * m1.max(m2) / 32.0
-        }
-        // Mixed fixed/BFP operands: treat the fixed side as a degenerate
-        // one-box BFP (same multiplier, shared alignment path).
-        (Fixed(b1), Bfp(m2)) | (Bfp(m2), Fixed(b1)) => {
-            BFP_MAC_MUL * (b1 * m2) / 1024.0 + BFP_MAC_SHIFT * b1.max(m2) / 32.0
-        }
+    /// True for formats whose quantizer applies stochastic rounding.
+    pub fn is_stochastic(&self) -> bool {
+        matches!(self, FormatSpec::Fixed { rounding: Rounding::Stochastic, .. })
     }
 }
 
@@ -94,15 +95,16 @@ mod tests {
     #[test]
     fn fixed_mac_matches_paper_static_rows() {
         // fixed32 = 1.00x (the normalization anchor), fixed16 = 0.25x.
-        assert!((mac_cost(NumFormat::Fixed(32.0), NumFormat::Fixed(32.0)) - 1.0).abs() < 1e-12);
-        assert!((mac_cost(NumFormat::Fixed(16.0), NumFormat::Fixed(16.0)) - 0.25).abs() < 1e-12);
+        let f = |b| FormatSpec::fixed(b);
+        assert!((f(32).mac_cost(&f(32)) - 1.0).abs() < 1e-12);
+        assert!((f(16).mac_cost(&f(16)) - 0.25).abs() < 1e-12);
     }
 
     #[test]
     fn bfp_mac_matches_paper_static_rows() {
         // BFP32 = 0.56x, BFP16 = 0.18x (the two fitted anchors).
-        let c32 = mac_cost(NumFormat::Bfp(32.0), NumFormat::Bfp(32.0));
-        let c16 = mac_cost(NumFormat::Bfp(16.0), NumFormat::Bfp(16.0));
+        let c32 = FormatSpec::bfp(32).mac_cost(&FormatSpec::bfp(32));
+        let c16 = FormatSpec::bfp(16).mac_cost(&FormatSpec::bfp(16));
         assert!((c32 - 0.56).abs() < 0.005, "bfp32 {c32}");
         assert!((c16 - 0.18).abs() < 0.005, "bfp16 {c16}");
     }
@@ -111,42 +113,61 @@ mod tests {
     fn bfp_stash_prediction_near_paper() {
         // Prediction check (not fitted): mean of the three GEMMs of a
         // [16,4,4,16] BFP stashing step = 0.104 vs paper 0.10.
-        let f = |a, b| mac_cost(NumFormat::Bfp(a), NumFormat::Bfp(b));
-        let mean = (f(16.0, 16.0) + f(4.0, 4.0) + f(4.0, 16.0)) / 3.0;
+        let f = |a: u32, b: u32| FormatSpec::bfp(a).mac_cost(&FormatSpec::bfp(b));
+        let mean = (f(16, 16) + f(4, 4) + f(4, 16)) / 3.0;
         assert!((mean - 0.10).abs() < 0.01, "stash-bfp arith {mean}");
     }
 
     #[test]
     fn storage_matches_paper_dram_anchors() {
         // BFP32 -> 36/32 = 1.125 (paper 1.13), BFP16 -> 20/32 = 0.625 (0.63).
-        assert_eq!(NumFormat::Bfp(32.0).storage_bits() / 32.0, 1.125);
-        assert_eq!(NumFormat::Bfp(16.0).storage_bits() / 32.0, 0.625);
-        assert_eq!(NumFormat::Fixed(16.0).storage_bits() / 32.0, 0.5);
-        assert_eq!(NumFormat::Fp32.storage_bits(), 32.0);
+        assert_eq!(FormatSpec::bfp(32).storage_bits() / 32.0, 1.125);
+        assert_eq!(FormatSpec::bfp(16).storage_bits() / 32.0, 0.625);
+        assert_eq!(FormatSpec::fixed(16).storage_bits() / 32.0, 0.5);
+        assert_eq!(FormatSpec::Fp32.storage_bits(), 32.0);
+    }
+
+    #[test]
+    fn stochastic_rounding_costs_like_nearest() {
+        // SR changes the quantizer, not the MAC array or the container.
+        for b in [4u32, 8, 16] {
+            assert_eq!(
+                FormatSpec::fixed_sr(b).storage_bits(),
+                FormatSpec::fixed(b).storage_bits()
+            );
+            assert_eq!(
+                FormatSpec::fixed_sr(b).mac_cost(&FormatSpec::fixed_sr(b)),
+                FormatSpec::fixed(b).mac_cost(&FormatSpec::fixed(b))
+            );
+            assert_eq!(
+                FormatSpec::fixed_sr(b).mac_cost(&FormatSpec::bfp(16)),
+                FormatSpec::fixed(b).mac_cost(&FormatSpec::bfp(16))
+            );
+        }
     }
 
     #[test]
     fn mac_cost_monotone_in_bits() {
-        for b in [2.0, 4.0, 8.0, 16.0, 24.0] {
-            let big = b * 2.0;
+        for b in [2u32, 4, 8, 16] {
+            let big = b * 2;
             assert!(
-                mac_cost(NumFormat::Bfp(b), NumFormat::Bfp(b))
-                    < mac_cost(NumFormat::Bfp(big), NumFormat::Bfp(big))
+                FormatSpec::bfp(b).mac_cost(&FormatSpec::bfp(b))
+                    < FormatSpec::bfp(big).mac_cost(&FormatSpec::bfp(big))
             );
             assert!(
-                mac_cost(NumFormat::Fixed(b), NumFormat::Fixed(b))
-                    < mac_cost(NumFormat::Fixed(big), NumFormat::Fixed(big))
+                FormatSpec::fixed(b).mac_cost(&FormatSpec::fixed(b))
+                    < FormatSpec::fixed(big).mac_cost(&FormatSpec::fixed(big))
             );
         }
     }
 
     #[test]
     fn mixed_operand_cost_symmetric() {
-        let a = mac_cost(NumFormat::Bfp(4.0), NumFormat::Bfp(16.0));
-        let b = mac_cost(NumFormat::Bfp(16.0), NumFormat::Bfp(4.0));
+        let a = FormatSpec::bfp(4).mac_cost(&FormatSpec::bfp(16));
+        let b = FormatSpec::bfp(16).mac_cost(&FormatSpec::bfp(4));
         assert_eq!(a, b);
-        let c = mac_cost(NumFormat::Fixed(4.0), NumFormat::Bfp(16.0));
-        let d = mac_cost(NumFormat::Bfp(16.0), NumFormat::Fixed(4.0));
+        let c = FormatSpec::fixed(4).mac_cost(&FormatSpec::bfp(16));
+        let d = FormatSpec::bfp(16).mac_cost(&FormatSpec::fixed(4));
         assert_eq!(c, d);
     }
 }

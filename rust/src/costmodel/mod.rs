@@ -11,7 +11,9 @@
 //! DESIGN.md §6; per-cell fit: EXPERIMENTS.md.
 //!
 //! Layout:
-//! * [`formats`] — number formats and per-MAC / per-element-storage costs;
+//! * [`formats`] — the calibrated cost constants + the
+//!   `storage_bits`/`mac_cost` impls on [`crate::quant::FormatSpec`]
+//!   (one descriptor serves quantizers and cost model alike);
 //! * [`workload`] — transformer training workloads as GEMM lists
 //!   (paper-scale IWSLT/WMT 6-layer and RoBERTa-base, plus the local
 //!   testbed dims);
@@ -28,7 +30,6 @@ pub mod tables;
 pub mod training;
 pub mod workload;
 
-pub use formats::NumFormat;
 pub use roofline::{Machine, RooflinePoint};
 pub use tables::{normalized_row, CostRow};
 pub use training::{step_cost, StepCost};

@@ -90,7 +90,7 @@ mod tests {
     use super::*;
     use crate::costmodel::training::step_cost;
     use crate::costmodel::workload::TransformerWorkload;
-    use crate::schedule::{PrecisionConfig, QuantMode};
+    use crate::schedule::{FormatSpec, PrecisionConfig};
 
     #[test]
     fn balance_points() {
@@ -112,12 +112,14 @@ mod tests {
         // i.e. DSQ moves training toward (or past) the balance point.
         let w = TransformerWorkload::iwslt_6layer();
         let m = Machine::a100_like();
-        let p1 = place(&m, "fixed32", &step_cost(&w, &PrecisionConfig::uniform(QuantMode::Fixed, 32.0)));
-        let p2 = place(&m, "bfp16", &step_cost(&w, &PrecisionConfig::uniform(QuantMode::Bfp, 16.0)));
+        let p1 =
+            place(&m, "fixed32", &step_cost(&w, &PrecisionConfig::uniform(FormatSpec::fixed(32))));
+        let p2 =
+            place(&m, "bfp16", &step_cost(&w, &PrecisionConfig::uniform(FormatSpec::bfp(16))));
         let p3 = place(
             &m,
             "dsq[2,2,2,16]",
-            &step_cost(&w, &PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0)),
+            &step_cost(&w, &PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16])),
         );
         assert!(p1.intensity < p2.intensity, "{} < {}", p1.intensity, p2.intensity);
         assert!(p2.intensity < p3.intensity, "{} < {}", p2.intensity, p3.intensity);

@@ -3,15 +3,15 @@
 
 use super::training::{fixed32_reference, step_cost, StepCost};
 use super::workload::TransformerWorkload;
-use crate::schedule::{PrecisionConfig, QuantMode};
+use crate::schedule::{FormatSpec, PrecisionConfig};
 
 /// One table row: a method + its relative hardware costs.
 #[derive(Clone, Debug)]
 pub struct CostRow {
     pub method: String,
     pub precision: String,
-    /// Relative arithmetic cost (fixed32 = 1.0); None for the fp32 row
-    /// (the paper leaves it unscored, "-").
+    /// Relative arithmetic cost (fixed32 = 1.0); None for unscored rows
+    /// (the paper leaves fp32 rows as "-").
     pub arith_rel: Option<f64>,
     pub dram_rel: Option<f64>,
     /// Absolute per-step cost (for roofline / cumulative accounting).
@@ -55,22 +55,28 @@ pub fn normalized_row(
 
 /// Relative cost of a *schedule trace*: per-level step counts from a DSQ
 /// run, time-weighted (this is how the paper's DSQ rows are produced).
+///
+/// An empty trace, or one that only ever ran the fp32 reference config,
+/// is unscored (`arith_rel`/`dram_rel` = `None`) — the paper deliberately
+/// leaves fp32 out of the relative columns, and callers must not divide
+/// by a zero-step average.
 pub fn dsq_trace_row(
     w: &TransformerWorkload,
     trace: &[(PrecisionConfig, usize)],
 ) -> CostRow {
     let base = fixed32_reference(w);
     let total_steps: usize = trace.iter().map(|(_, n)| n).sum();
+    let scored = total_steps > 0 && trace.iter().any(|(p, n)| *n > 0 && !p.is_fp32());
     let mut acc = StepCost::default();
     for (p, n) in trace {
         acc.add(&step_cost(w, p).scale(*n as f64));
     }
     let avg = acc.scale(1.0 / total_steps.max(1) as f64);
     CostRow {
-        method: "DSQ (BFP)".to_string(),
+        method: "DSQ (dynamic)".to_string(),
         precision: "-".to_string(),
-        arith_rel: Some(avg.arith_macs / base.arith_macs),
-        dram_rel: Some(avg.dram_bits / base.dram_bits),
+        arith_rel: scored.then_some(avg.arith_macs / base.arith_macs),
+        dram_rel: scored.then_some(avg.dram_bits / base.dram_bits),
         step: avg,
     }
 }
@@ -80,12 +86,12 @@ pub fn dsq_trace_row(
 pub fn standard_methods() -> Vec<(&'static str, PrecisionConfig, bool)> {
     vec![
         ("Floating-point", PrecisionConfig::FP32, false),
-        ("Fixed-point", PrecisionConfig::uniform(QuantMode::Fixed, 32.0), true),
-        ("Fixed-point", PrecisionConfig::uniform(QuantMode::Fixed, 16.0), true),
-        ("Block FP", PrecisionConfig::uniform(QuantMode::Bfp, 32.0), true),
-        ("Block FP", PrecisionConfig::uniform(QuantMode::Bfp, 16.0), true),
-        ("Stashing (Fixed)", PrecisionConfig::stashing(QuantMode::Fixed), true),
-        ("Stashing (BFP)", PrecisionConfig::stashing(QuantMode::Bfp), true),
+        ("Fixed-point", PrecisionConfig::uniform(FormatSpec::fixed(32)), true),
+        ("Fixed-point", PrecisionConfig::uniform(FormatSpec::fixed(16)), true),
+        ("Block FP", PrecisionConfig::uniform(FormatSpec::bfp(32)), true),
+        ("Block FP", PrecisionConfig::uniform(FormatSpec::bfp(16)), true),
+        ("Stashing (Fixed)", PrecisionConfig::stashing(FormatSpec::fixed(16)), true),
+        ("Stashing (BFP)", PrecisionConfig::stashing(FormatSpec::bfp(16)), true),
     ]
 }
 
@@ -139,10 +145,33 @@ mod tests {
     }
 
     #[test]
+    fn fp32_trace_unscored() {
+        // A run that never left the fp32 reference config has no
+        // meaningful relative cost — the row must come back unscored
+        // instead of panicking downstream (TrainReport::cost_on).
+        let w = TransformerWorkload::iwslt_6layer();
+        let row = dsq_trace_row(&w, &[(PrecisionConfig::FP32, 100)]);
+        assert!(row.arith_rel.is_none());
+        assert!(row.dram_rel.is_none());
+        let empty = dsq_trace_row(&w, &[]);
+        assert!(empty.arith_rel.is_none());
+        // But a trace with any quantized steps is scored, even if it
+        // also contains fp32 steps.
+        let mixed = dsq_trace_row(
+            &w,
+            &[
+                (PrecisionConfig::FP32, 50),
+                (PrecisionConfig::stashing(FormatSpec::bfp(16)), 50),
+            ],
+        );
+        assert!(mixed.arith_rel.is_some());
+    }
+
+    #[test]
     fn dsq_trace_blends_levels() {
         let w = TransformerWorkload::iwslt_6layer();
-        let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
-        let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+        let lo = PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16]);
+        let hi = PrecisionConfig::stashing(FormatSpec::bfp(16));
         let all_lo = dsq_trace_row(&w, &[(lo, 100)]);
         let all_hi = dsq_trace_row(&w, &[(hi, 100)]);
         let mix = dsq_trace_row(&w, &[(lo, 96), (hi, 4)]);
@@ -159,13 +188,13 @@ mod tests {
         // vs 16-bit fixed point. Using the paper's own DSQ IWSLT row
         // (0.012 / 0.196): 0.25/0.012 = 20.8, 0.50/0.196 = 2.55.
         let w = TransformerWorkload::iwslt_6layer();
-        let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
-        let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+        let lo = PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16]);
+        let hi = PrecisionConfig::stashing(FormatSpec::bfp(16));
         let dsq = dsq_trace_row(&w, &[(lo, 96), (hi, 4)]);
         let f16 = normalized_row(
             &w,
             "Fixed-point",
-            &PrecisionConfig::uniform(QuantMode::Fixed, 16.0),
+            &PrecisionConfig::uniform(FormatSpec::fixed(16)),
             true,
         );
         let arith_ratio = f16.arith_rel.unwrap() / dsq.arith_rel.unwrap();
@@ -185,7 +214,7 @@ mod tests {
             let r = normalized_row(
                 &w,
                 "Fixed-point",
-                &PrecisionConfig::uniform(QuantMode::Fixed, 16.0),
+                &PrecisionConfig::uniform(FormatSpec::fixed(16)),
                 true,
             );
             assert!((r.arith_rel.unwrap() - 0.25).abs() < 1e-9);

@@ -42,9 +42,8 @@
 //! only `x_l`, `dx_{l+1}`, `dx_l` as DRAM-resident, which is what makes
 //! `q1`/`q3` the memory knobs).
 
-use super::formats::{mac_cost, NumFormat};
 use super::workload::{Gemm, GemmKind, TransformerWorkload};
-use crate::schedule::PrecisionConfig;
+use crate::schedule::{FormatSpec, PrecisionConfig};
 
 /// Cost of one training step, in absolute units.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
@@ -91,16 +90,15 @@ impl StepCost {
 }
 
 fn gemm_cost(g: &Gemm, p: &PrecisionConfig) -> StepCost {
-    let f0 = NumFormat::from_qbits(p.mode, p.q0);
-    let f1 = NumFormat::from_qbits(p.mode, p.q1);
-    let f2 = NumFormat::from_qbits(p.mode, p.q2);
-    let f3 = NumFormat::from_qbits(p.mode, p.q3);
+    // Per-slot formats straight off the config — the same FormatSpec
+    // objects the quantizers execute.
+    let [f0, f1, f2, f3] = p.slots;
 
     let macs = g.macs();
     // Three GEMMs per training step (fwd, bwd-input, bwd-weight); see the
     // module docs for why GEMM 3 is q1 × q0 (not q1 × q3).
     let arith =
-        macs * (mac_cost(f0, f0) + mac_cost(f2, f2) + mac_cost(f1, f0));
+        macs * (f0.mac_cost(&f0) + f2.mac_cost(&f2) + f1.mac_cost(&f0));
 
     let (b0, b1, b2, b3) =
         (f0.storage_bits(), f1.storage_bits(), f2.storage_bits(), f3.storage_bits());
@@ -148,16 +146,20 @@ pub fn step_cost(w: &TransformerWorkload, p: &PrecisionConfig) -> StepCost {
 
 /// Reference cost: 32-bit fixed point (the paper's 1.00× anchor).
 pub fn fixed32_reference(w: &TransformerWorkload) -> StepCost {
-    step_cost(w, &PrecisionConfig::uniform(crate::schedule::QuantMode::Fixed, 32.0))
+    step_cost(w, &PrecisionConfig::uniform(FormatSpec::fixed(32)))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::schedule::{PrecisionConfig, QuantMode};
+    use crate::schedule::{FormatSpec, PrecisionConfig};
 
     fn iwslt() -> TransformerWorkload {
         TransformerWorkload::iwslt_6layer()
+    }
+
+    fn bfp_of(q: [u32; 4]) -> PrecisionConfig {
+        PrecisionConfig::of(FormatSpec::bfp(16), q)
     }
 
     fn rel(p: PrecisionConfig) -> (f64, f64) {
@@ -170,7 +172,7 @@ mod tests {
     #[test]
     fn fixed16_matches_paper() {
         // Paper Table 1: fixed [16,16,16,16] = 0.25x arith, 0.50x DRAM.
-        let (a, d) = rel(PrecisionConfig::uniform(QuantMode::Fixed, 16.0));
+        let (a, d) = rel(PrecisionConfig::uniform(FormatSpec::fixed(16)));
         assert!((a - 0.25).abs() < 1e-9, "arith {a}");
         assert!((d - 0.50).abs() < 1e-9, "dram {d}");
     }
@@ -178,7 +180,7 @@ mod tests {
     #[test]
     fn bfp32_matches_paper() {
         // Paper: BFP [32,32,32,32] = 0.56x arith, 1.13x DRAM.
-        let (a, d) = rel(PrecisionConfig::uniform(QuantMode::Bfp, 32.0));
+        let (a, d) = rel(PrecisionConfig::uniform(FormatSpec::bfp(32)));
         assert!((a - 0.56).abs() < 0.01, "arith {a}");
         assert!((d - 1.13).abs() < 0.01, "dram {d}");
     }
@@ -186,7 +188,7 @@ mod tests {
     #[test]
     fn bfp16_matches_paper() {
         // Paper: BFP [16,16,16,16] = 0.18x arith, 0.63x DRAM.
-        let (a, d) = rel(PrecisionConfig::uniform(QuantMode::Bfp, 16.0));
+        let (a, d) = rel(PrecisionConfig::uniform(FormatSpec::bfp(16)));
         assert!((a - 0.18).abs() < 0.01, "arith {a}");
         assert!((d - 0.63).abs() < 0.01, "dram {d}");
     }
@@ -195,13 +197,37 @@ mod tests {
     fn stashing_rows_near_paper() {
         // Predictions (constants were fitted only on the uniform rows):
         // Stashing(BFP) [16,4,4,16]: paper 0.10x / 0.45x.
-        let (a, d) = rel(PrecisionConfig::stashing(QuantMode::Bfp));
+        let (a, d) = rel(PrecisionConfig::stashing(FormatSpec::bfp(16)));
         assert!((a - 0.10).abs() < 0.02, "bfp stash arith {a}");
         assert!((d - 0.45).abs() < 0.08, "bfp stash dram {d}");
         // Stashing(Fixed): paper 0.13x / 0.31x.
-        let (a, d) = rel(PrecisionConfig::stashing(QuantMode::Fixed));
+        let (a, d) = rel(PrecisionConfig::stashing(FormatSpec::fixed(16)));
         assert!((a - 0.13).abs() < 0.03, "fixed stash arith {a}");
         assert!((d - 0.31).abs() < 0.06, "fixed stash dram {d}");
+    }
+
+    #[test]
+    fn sr_fixed_costs_identical_to_nearest_fixed() {
+        // The SR format must slot into the cost model at exactly the
+        // fixed-point price (rounding is not a MAC-array property).
+        let a = rel(PrecisionConfig::stashing(FormatSpec::fixed(16)));
+        let b = rel(PrecisionConfig::stashing(FormatSpec::fixed_sr(16)));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn heterogeneous_slots_price_per_slot() {
+        // BFP compute path + fixed gradient outputs: the gradient DRAM
+        // term must drop by exactly the BFP container overhead (4 bits
+        // per element on both the dy flush and the dw/db writes).
+        let w = iwslt();
+        let all_bfp = step_cost(&w, &PrecisionConfig::parse("bfp:16,4,4,16").unwrap());
+        let het = step_cost(&w, &PrecisionConfig::parse("bfp16,bfp4,bfp4,fixed16").unwrap());
+        assert!(het.grad_bits < all_bfp.grad_bits, "fixed16 grad slot must be cheaper");
+        assert_eq!(het.stash_bits, all_bfp.stash_bits, "stash slot untouched");
+        assert_eq!(het.weight_bits, all_bfp.weight_bits, "weight slot untouched");
+        // And the arith side is unchanged: GEMM 3 runs at q1 x q0.
+        assert_eq!(het.arith_macs, all_bfp.arith_macs);
     }
 
     #[test]
@@ -211,8 +237,8 @@ mod tests {
         // the rest at the stash level:
         let w = iwslt();
         let base = fixed32_reference(&w);
-        let lo = step_cost(&w, &PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0));
-        let hi = step_cost(&w, &PrecisionConfig::stashing(QuantMode::Bfp));
+        let lo = step_cost(&w, &bfp_of([2, 2, 2, 16]));
+        let hi = step_cost(&w, &PrecisionConfig::stashing(FormatSpec::bfp(16)));
         let blend_arith = (0.96 * lo.arith_macs + 0.04 * hi.arith_macs) / base.arith_macs;
         assert!((blend_arith - 0.012).abs() < 0.006, "dsq arith {blend_arith}");
         let blend_dram = (0.96 * lo.dram_bits + 0.04 * hi.dram_bits) / base.dram_bits;
@@ -223,8 +249,8 @@ mod tests {
     #[test]
     fn stash_component_scales_with_q1_only() {
         let w = iwslt();
-        let a = step_cost(&w, &PrecisionConfig::new(QuantMode::Bfp, 16.0, 2.0, 4.0, 16.0));
-        let b = step_cost(&w, &PrecisionConfig::new(QuantMode::Bfp, 16.0, 16.0, 4.0, 16.0));
+        let a = step_cost(&w, &bfp_of([16, 2, 4, 16]));
+        let b = step_cost(&w, &bfp_of([16, 16, 4, 16]));
         assert!(a.stash_bits < b.stash_bits);
         assert_eq!(a.grad_bits, b.grad_bits);
         assert_eq!(a.weight_bits, b.weight_bits);
@@ -233,13 +259,12 @@ mod tests {
     #[test]
     fn cost_monotone_in_every_knob() {
         let w = iwslt();
-        let base = PrecisionConfig::new(QuantMode::Bfp, 8.0, 8.0, 8.0, 16.0);
-        let c0 = step_cost(&w, &base);
+        let c0 = step_cost(&w, &bfp_of([8, 8, 8, 16]));
         for (i, bumped) in [
-            PrecisionConfig::new(QuantMode::Bfp, 16.0, 8.0, 8.0, 16.0),
-            PrecisionConfig::new(QuantMode::Bfp, 8.0, 16.0, 8.0, 16.0),
-            PrecisionConfig::new(QuantMode::Bfp, 8.0, 8.0, 16.0, 16.0),
-            PrecisionConfig::new(QuantMode::Bfp, 8.0, 8.0, 8.0, 32.0),
+            bfp_of([16, 8, 8, 16]),
+            bfp_of([8, 16, 8, 16]),
+            bfp_of([8, 8, 16, 16]),
+            bfp_of([8, 8, 8, 32]),
         ]
         .iter()
         .enumerate()
@@ -253,14 +278,14 @@ mod tests {
     #[test]
     fn components_sum_to_total() {
         let w = iwslt();
-        let c = step_cost(&w, &PrecisionConfig::stashing(QuantMode::Bfp));
+        let c = step_cost(&w, &PrecisionConfig::stashing(FormatSpec::bfp(16)));
         assert!((c.stash_bits + c.grad_bits + c.weight_bits - c.dram_bits).abs() < 1.0);
     }
 
     #[test]
     fn raw_macs_independent_of_precision() {
         let w = iwslt();
-        let a = step_cost(&w, &PrecisionConfig::uniform(QuantMode::Bfp, 2.0));
+        let a = step_cost(&w, &PrecisionConfig::uniform(FormatSpec::bfp(2)));
         let b = step_cost(&w, &PrecisionConfig::FP32);
         assert_eq!(a.raw_macs, b.raw_macs);
         assert_eq!(a.raw_macs, 3.0 * w.total_macs());

@@ -2,7 +2,7 @@
 //! quantization, (3) DSQ, against the machine balance point.
 
 use crate::costmodel::{self, roofline, Machine, TransformerWorkload};
-use crate::schedule::{PrecisionConfig, QuantMode};
+use crate::schedule::{FormatSpec, PrecisionConfig};
 use crate::util::json::Json;
 use crate::Result;
 
@@ -12,10 +12,10 @@ use super::ExperimentOpts;
 pub fn figure_points(w: &TransformerWorkload, m: &Machine) -> Vec<roofline::RooflinePoint> {
     let configs: Vec<(&str, PrecisionConfig)> = vec![
         ("(1) fp32 (non-quantized)", PrecisionConfig::FP32),
-        ("fixed-point 32", PrecisionConfig::uniform(QuantMode::Fixed, 32.0)),
-        ("(2) static quant: BFP16", PrecisionConfig::uniform(QuantMode::Bfp, 16.0)),
-        ("static stashing [16,4,4,16]", PrecisionConfig::stashing(QuantMode::Bfp)),
-        ("(3) DSQ @ [2,2,2,16]", PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0)),
+        ("fixed-point 32", PrecisionConfig::uniform(FormatSpec::fixed(32))),
+        ("(2) static quant: BFP16", PrecisionConfig::uniform(FormatSpec::bfp(16))),
+        ("static stashing [16,4,4,16]", PrecisionConfig::stashing(FormatSpec::bfp(16))),
+        ("(3) DSQ @ [2,2,2,16]", PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16])),
     ];
     configs
         .into_iter()

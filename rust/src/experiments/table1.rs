@@ -24,7 +24,7 @@
 use crate::coordinator::{Finetuner, FinetuneConfig, Trainer, TrainerConfig};
 use crate::costmodel::{self, TransformerWorkload};
 use crate::data::Variant;
-use crate::schedule::{DsqController, PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use crate::schedule::{DsqController, FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
 use crate::util::json::Json;
 use crate::Result;
 
@@ -43,12 +43,12 @@ pub const PAPER_IWSLT_DELTAS: &[(&str, &str, f64)] = &[
 fn method_rows() -> Vec<(&'static str, Option<PrecisionConfig>)> {
     let mut rows: Vec<(&'static str, Option<PrecisionConfig>)> = vec![
         ("Floating-point", Some(PrecisionConfig::FP32)),
-        ("Fixed-point", Some(PrecisionConfig::uniform(QuantMode::Fixed, 32.0))),
-        ("Fixed-point", Some(PrecisionConfig::uniform(QuantMode::Fixed, 16.0))),
-        ("Block FP", Some(PrecisionConfig::uniform(QuantMode::Bfp, 32.0))),
-        ("Block FP", Some(PrecisionConfig::uniform(QuantMode::Bfp, 16.0))),
-        ("Stashing (Fixed)", Some(PrecisionConfig::stashing(QuantMode::Fixed))),
-        ("Stashing (BFP)", Some(PrecisionConfig::stashing(QuantMode::Bfp))),
+        ("Fixed-point", Some(PrecisionConfig::uniform(FormatSpec::fixed(32)))),
+        ("Fixed-point", Some(PrecisionConfig::uniform(FormatSpec::fixed(16)))),
+        ("Block FP", Some(PrecisionConfig::uniform(FormatSpec::bfp(32)))),
+        ("Block FP", Some(PrecisionConfig::uniform(FormatSpec::bfp(16)))),
+        ("Stashing (Fixed)", Some(PrecisionConfig::stashing(FormatSpec::fixed(16)))),
+        ("Stashing (BFP)", Some(PrecisionConfig::stashing(FormatSpec::bfp(16)))),
     ];
     rows.push(("DSQ (BFP)", None)); // dynamic controller
     rows
@@ -57,7 +57,7 @@ fn method_rows() -> Vec<(&'static str, Option<PrecisionConfig>)> {
 fn schedule_for(p: Option<PrecisionConfig>) -> Box<dyn Schedule> {
     match p {
         Some(cfg) => Box::new(StaticSchedule(cfg)),
-        None => Box::new(DsqController::paper_default(QuantMode::Bfp)),
+        None => Box::new(DsqController::paper_default("bfp").expect("built-in ladder")),
     }
 }
 
@@ -121,13 +121,13 @@ pub fn run_iwslt(opts: &ExperimentOpts) -> Result<()> {
         // Cost columns.
         let (arith, dram, precision) = match pcfg {
             Some(p) => {
-                let scored = p.mode != QuantMode::Fp32;
-                let row = costmodel::normalized_row(&workload, method, &p, scored);
+                let row = costmodel::normalized_row(&workload, method, &p, !p.is_fp32());
                 (row.arith_rel, row.dram_rel, p.notation())
             }
             None => (None, None, "-".to_string()), // filled from the trace below
         };
 
+        let is_fp32_row = pcfg.is_some_and(|p| p.is_fp32());
         let (metric, delta, diverged, trace_cost) = if opts.train {
             let cfg = TrainerConfig {
                 artifacts: opts.artifacts.clone(),
@@ -141,16 +141,16 @@ pub fn run_iwslt(opts: &ExperimentOpts) -> Result<()> {
             let mut trainer = Trainer::new(cfg)?;
             let report = trainer.run(schedule.as_mut())?;
             let bleu = report.bleu;
-            if pcfg.map(|p| p.mode) == Some(QuantMode::Fp32) {
+            if is_fp32_row {
                 fp32_bleu = bleu;
             }
             let delta = match (bleu, fp32_bleu) {
-                (Some(b), Some(f)) if pcfg.map(|p| p.mode) != Some(QuantMode::Fp32) => {
-                    Some(b - f)
-                }
+                (Some(b), Some(f)) if !is_fp32_row => Some(b - f),
                 _ => None,
             };
-            let tc = if pcfg.is_none() { Some(report.cost_on(&workload)) } else { None };
+            // cost_on is None for unscored (fp32-only) traces; the DSQ
+            // row always quantizes, so this passes its Some through.
+            let tc = if pcfg.is_none() { report.cost_on(&workload) } else { None };
             (bleu, delta, report.diverged, tc)
         } else {
             (None, None, false, None)
@@ -160,8 +160,8 @@ pub fn run_iwslt(opts: &ExperimentOpts) -> Result<()> {
             Some((a, d)) => (Some(a), Some(d)),
             None if pcfg.is_none() => {
                 // --no-train: report the canonical mostly-level-0 trace.
-                let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
-                let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+                let lo = PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16]);
+                let hi = PrecisionConfig::stashing(FormatSpec::bfp(16));
                 let r = costmodel::tables::dsq_trace_row(&workload, &[(lo, 96), (hi, 4)]);
                 (r.arith_rel, r.dram_rel)
             }
@@ -216,16 +216,15 @@ pub fn run_glue(opts: &ExperimentOpts) -> Result<()> {
         for (method, pcfg) in method_rows() {
             let (arith, dram, precision) = match pcfg {
                 Some(p) => {
-                    let scored = p.mode != QuantMode::Fp32;
-                    let row = costmodel::normalized_row(&workload, method, &p, scored);
+                    let row = costmodel::normalized_row(&workload, method, &p, !p.is_fp32());
                     (row.arith_rel, row.dram_rel, p.notation())
                 }
                 None => {
                     // Fine-tuning is shorter: the controller reaches the
                     // higher rungs sooner (paper MNLI/QNLI DSQ = 0.043x).
-                    let lo = PrecisionConfig::new(QuantMode::Bfp, 2.0, 2.0, 2.0, 16.0);
-                    let mid = PrecisionConfig::new(QuantMode::Bfp, 8.0, 4.0, 4.0, 16.0);
-                    let hi = PrecisionConfig::stashing(QuantMode::Bfp);
+                    let lo = PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16]);
+                    let mid = PrecisionConfig::of(FormatSpec::bfp(16), [8, 4, 4, 16]);
+                    let hi = PrecisionConfig::stashing(FormatSpec::bfp(16));
                     let r = costmodel::tables::dsq_trace_row(
                         &workload,
                         &[(lo, 70), (mid, 20), (hi, 10)],
@@ -234,6 +233,7 @@ pub fn run_glue(opts: &ExperimentOpts) -> Result<()> {
                 }
             };
 
+            let is_fp32_row = pcfg.is_some_and(|p| p.is_fp32());
             let (metric, delta, diverged, trace_cost) = if opts.train {
                 let cfg = FinetuneConfig {
                     artifacts: opts.artifacts.clone(),
@@ -247,18 +247,16 @@ pub fn run_glue(opts: &ExperimentOpts) -> Result<()> {
                 let mut tuner = Finetuner::new(cfg)?;
                 let report = tuner.run(schedule.as_mut())?;
                 let acc = Some(report.final_accuracy * 100.0);
-                if pcfg.map(|p| p.mode) == Some(QuantMode::Fp32) {
+                if is_fp32_row {
                     fp32_acc = acc;
                 }
                 let delta = match (acc, fp32_acc) {
-                    (Some(a), Some(f)) if pcfg.map(|p| p.mode) != Some(QuantMode::Fp32) => {
-                        Some(a - f)
-                    }
+                    (Some(a), Some(f)) if !is_fp32_row => Some(a - f),
                     _ => None,
                 };
                 let tc = if pcfg.is_none() {
                     let row = costmodel::tables::dsq_trace_row(&workload, &report.trace);
-                    Some((row.arith_rel.unwrap(), row.dram_rel.unwrap()))
+                    row.arith_rel.zip(row.dram_rel)
                 } else {
                     None
                 };

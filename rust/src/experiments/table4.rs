@@ -19,7 +19,7 @@
 
 use crate::coordinator::{Trainer, TrainerConfig};
 use crate::data::Variant;
-use crate::schedule::{PrecisionConfig, QuantMode, StaticSchedule, Schedule};
+use crate::schedule::{PrecisionConfig, Schedule, StaticSchedule};
 use crate::util::json::Json;
 use crate::Result;
 
@@ -55,7 +55,7 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
     ));
 
     for (setup, paper_delta) in SWEEP {
-        let p = PrecisionConfig::parse(QuantMode::Bfp, setup)?;
+        let p = PrecisionConfig::parse(&format!("bfp:{setup}"))?;
         let (bleu, delta) = if opts.train {
             let report = train_one(opts, p)?;
             let delta = match (report.bleu, fp32_bleu) {

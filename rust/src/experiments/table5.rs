@@ -16,7 +16,7 @@
 
 use crate::coordinator::{Trainer, TrainerConfig};
 use crate::data::Variant;
-use crate::schedule::{PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use crate::schedule::{PrecisionConfig, Schedule, StaticSchedule};
 use crate::util::json::Json;
 use crate::Result;
 
@@ -32,7 +32,7 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
     );
     let mut json_rows = Vec::new();
     for (setup, paper) in SWEEP {
-        let p = PrecisionConfig::parse(QuantMode::Fixed, setup)?;
+        let p = PrecisionConfig::parse(&format!("fixed:{setup}"))?;
         let (bleu, val, diverged) = if opts.train {
             let cfg = TrainerConfig {
                 artifacts: opts.artifacts.clone(),

@@ -6,7 +6,7 @@
 use crate::coordinator::{Trainer, TrainerConfig};
 use crate::costmodel::{self, TransformerWorkload};
 use crate::data::Variant;
-use crate::schedule::{PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use crate::schedule::{FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
 use crate::util::json::Json;
 use crate::Result;
 
@@ -26,12 +26,12 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
     let workload = TransformerWorkload::wmt_6layer();
     let methods: Vec<(&str, PrecisionConfig)> = vec![
         ("Floating-point", PrecisionConfig::FP32),
-        ("Fixed-point", PrecisionConfig::uniform(QuantMode::Fixed, 32.0)),
-        ("Fixed-point", PrecisionConfig::uniform(QuantMode::Fixed, 16.0)),
-        ("Block FP", PrecisionConfig::uniform(QuantMode::Bfp, 32.0)),
-        ("Block FP", PrecisionConfig::uniform(QuantMode::Bfp, 16.0)),
-        ("Stashing (Fixed)", PrecisionConfig::stashing(QuantMode::Fixed)),
-        ("Stashing (BFP)", PrecisionConfig::stashing(QuantMode::Bfp)),
+        ("Fixed-point", PrecisionConfig::uniform(FormatSpec::fixed(32))),
+        ("Fixed-point", PrecisionConfig::uniform(FormatSpec::fixed(16))),
+        ("Block FP", PrecisionConfig::uniform(FormatSpec::bfp(32))),
+        ("Block FP", PrecisionConfig::uniform(FormatSpec::bfp(16))),
+        ("Stashing (Fixed)", PrecisionConfig::stashing(FormatSpec::fixed(16))),
+        ("Stashing (BFP)", PrecisionConfig::stashing(FormatSpec::bfp(16))),
     ];
 
     let mut md = String::from(
@@ -42,8 +42,7 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
     let mut fp32_bleu: Option<f64> = None;
 
     for (method, p) in methods {
-        let scored = p.mode != QuantMode::Fp32;
-        let cost = costmodel::normalized_row(&workload, method, &p, scored);
+        let cost = costmodel::normalized_row(&workload, method, &p, !p.is_fp32());
         let (bleu, delta, diverged) = if opts.train {
             let cfg = TrainerConfig {
                 artifacts: opts.artifacts.clone(),
@@ -55,11 +54,11 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
             };
             let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(p));
             let report = Trainer::new(cfg)?.run(schedule.as_mut())?;
-            if p.mode == QuantMode::Fp32 {
+            if p.is_fp32() {
                 fp32_bleu = report.bleu;
             }
             let delta = match (report.bleu, fp32_bleu) {
-                (Some(b), Some(f)) if p.mode != QuantMode::Fp32 => Some(b - f),
+                (Some(b), Some(f)) if !p.is_fp32() => Some(b - f),
                 _ => None,
             };
             (report.bleu, delta, report.diverged)

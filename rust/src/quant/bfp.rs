@@ -7,7 +7,7 @@
 //! a box max). Per box: shared exponent from the box |max|, then sign +
 //! (m-1)-bit magnitude per element.
 
-use super::{floor_log2, ftz, pow2, BOX, EXP_MAX, EXP_MIN, PASSTHROUGH_BITS};
+use super::{ftz, quant_grid, BOX, PASSTHROUGH_BITS};
 
 /// Quantize `x` in place. `inner` is the length of the minor (last)
 /// axis; `x.len()` must be a multiple of it.
@@ -41,9 +41,7 @@ fn quantize_box(boxed: &mut [f32], m: f32) {
     // Hoist the box constants out of the element loop (§Perf: computing
     // step/maxmag per element cost ~2.4x throughput); the element rule
     // stays identical to quantize_with_exponent.
-    let e = floor_log2(amax).clamp(super::EXP_MIN, super::EXP_MAX);
-    let step = pow2((e - m as i32 + 2).clamp(super::EXP_MIN, super::EXP_MAX));
-    let maxmag = pow2(m as i32 - 1) - 1.0;
+    let (_, step, maxmag) = quant_grid(amax, m);
     for v in boxed.iter_mut() {
         *v = (ftz(*v) / step).round_ties_even().clamp(-maxmag, maxmag) * step;
     }
@@ -51,17 +49,21 @@ fn quantize_box(boxed: &mut [f32], m: f32) {
 
 /// Per-box statistics used by the cost model's error analysis and the
 /// ablation benches: (shared exponent, quantization step, max magnitude).
+///
+/// Must agree exactly with `quantize_box`: the box max is read through
+/// [`ftz`] (subnormal magnitudes are invisible to the kernels) and the
+/// step exponent is clamped to the normal range, or the reported
+/// (exponent, step) would disagree with the actual grid on
+/// subnormal-heavy boxes.
 pub fn bfp_dequantize_box_stats(boxed: &[f32], mbits: f32) -> (i32, f32, f32) {
-    let amax = boxed.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-    let e = floor_log2(amax).clamp(EXP_MIN, EXP_MAX);
-    let step = pow2(e - mbits as i32 + 2);
-    let maxmag = pow2(mbits as i32 - 1) - 1.0;
-    (e, step, maxmag)
+    let amax = boxed.iter().fold(0.0f32, |a, &v| a.max(ftz(v.abs())));
+    quant_grid(amax, mbits)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{floor_log2, EXP_MIN};
     use crate::util::prop::{gen_f32s, Prop};
     use crate::util::rng::Pcg32;
 
@@ -173,6 +175,32 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn box_stats_agree_with_quantizer_on_subnormal_boxes() {
+        // A box whose max is subnormal: quantize_box sees amax = 0 (FTZ)
+        // and zero-fills; the stats must report the same degenerate grid
+        // (e = EXP_MIN after clamping the -127 zero exponent).
+        let sub = f32::MIN_POSITIVE / 4.0;
+        let boxed = vec![sub; 16];
+        let (e, step, _) = bfp_dequantize_box_stats(&boxed, 4.0);
+        assert_eq!(e, EXP_MIN, "FTZ'd box max must read as zero");
+        let q = bfp_quantize(&boxed, 16, 4.0);
+        assert_eq!(q, vec![0.0; 16]);
+        // The reported step must itself be a normal f32 (clamped
+        // exponent), exactly like the step quantize_box divides by.
+        assert!(step >= f32::MIN_POSITIVE, "step {step} flushed under FTZ");
+        // And on a mixed normal/subnormal box, the stats must use the
+        // FTZ'd max: the subnormal entries cannot raise the exponent.
+        let mut mixed = vec![0.0f32; 16];
+        mixed[0] = 0.5;
+        mixed[1] = sub;
+        let (e2, step2, maxmag) = bfp_dequantize_box_stats(&mixed, 4.0);
+        assert_eq!(e2, floor_log2(0.5));
+        let q2 = bfp_quantize(&mixed, 16, 4.0);
+        // Reconstruct element 0 from the reported grid.
+        assert_eq!(q2[0], ((0.5 / step2).round_ties_even()).clamp(-maxmag, maxmag) * step2);
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! the weakness the paper's Stashing(Fixed) rows expose: a heavy-tailed
 //! tensor flushes most of its mass to zero at aggressive widths.
 
-use super::{floor_log2, ftz, PASSTHROUGH_BITS};
+use crate::util::rng::Pcg32;
+
+use super::{ftz, quant_grid, PASSTHROUGH_BITS};
 
 /// Quantize `x` in place with `bits` total mantissa width.
 pub fn fixed_quantize_into(x: &mut [f32], bits: f32) {
@@ -21,9 +23,7 @@ pub fn fixed_quantize_into(x: &mut [f32], bits: f32) {
     }
     // Hoist the per-tensor constants out of the element loop (§Perf);
     // identical element rule to quantize_with_exponent.
-    let e = floor_log2(amax).clamp(super::EXP_MIN, super::EXP_MAX);
-    let step = super::pow2((e - bits as i32 + 2).clamp(super::EXP_MIN, super::EXP_MAX));
-    let maxmag = super::pow2(bits as i32 - 1) - 1.0;
+    let (_, step, maxmag) = quant_grid(amax, bits);
     for v in x.iter_mut() {
         *v = (ftz(*v) / step).round_ties_even().clamp(-maxmag, maxmag) * step;
     }
@@ -33,6 +33,39 @@ pub fn fixed_quantize_into(x: &mut [f32], bits: f32) {
 pub fn fixed_quantize(x: &[f32], bits: f32) -> Vec<f32> {
     let mut out = x.to_vec();
     fixed_quantize_into(&mut out, bits);
+    out
+}
+
+/// Stochastic-rounding variant (the `fixed<b>sr` format): same grid as
+/// [`fixed_quantize_into`], but each value rounds up with probability
+/// equal to its fractional distance — unbiased, `E[q(x)] = x` for
+/// unclamped values. One uniform draw is consumed per element, so a
+/// given `rng` state quantizes a given buffer bit-identically; callers
+/// derive the stream from the step index
+/// ([`crate::quant::FormatSpec::quantize_into_step`]).
+pub fn fixed_quantize_sr_into(x: &mut [f32], bits: f32, rng: &mut Pcg32) {
+    if bits >= PASSTHROUGH_BITS {
+        return;
+    }
+    let amax = x.iter().fold(0.0f32, |a, &v| a.max(ftz(v.abs())));
+    if amax <= 0.0 {
+        x.fill(0.0);
+        return;
+    }
+    let (_, step, maxmag) = quant_grid(amax, bits);
+    for v in x.iter_mut() {
+        let t = ftz(*v) / step;
+        let lo = t.floor();
+        // `t - lo` in [0,1); draw exactly one uniform per element.
+        let mag = if t - lo > rng.f32() { lo + 1.0 } else { lo };
+        *v = mag.clamp(-maxmag, maxmag) * step;
+    }
+}
+
+/// Out-of-place stochastic-rounding variant.
+pub fn fixed_quantize_sr(x: &[f32], bits: f32, rng: &mut Pcg32) -> Vec<f32> {
+    let mut out = x.to_vec();
+    fixed_quantize_sr_into(&mut out, bits, rng);
     out
 }
 
@@ -110,6 +143,42 @@ mod tests {
                 }
             },
         );
+    }
+
+    #[test]
+    fn sr_lands_on_the_grid_within_one_step() {
+        Prop::new("stochastic rounding picks an adjacent grid point").cases(60).run(
+            |rng, size| {
+                (gen_f32s(rng, 8 * (1 + size as usize / 12), 6.0), 2.0 + rng.below(10) as f32)
+            },
+            |(x, b)| {
+                let mut rng = Pcg32::new(99);
+                let q = fixed_quantize_sr(x, *b, &mut rng);
+                let amax = x.iter().fold(0f32, |a, &v| a.max(v.abs()));
+                let e = crate::quant::floor_log2(amax).clamp(-126, 127);
+                let step = crate::quant::pow2((e - *b as i32 + 2).clamp(-126, 127));
+                let maxmag = crate::quant::pow2(*b as i32 - 1) - 1.0;
+                for (&xi, &qi) in x.iter().zip(&q) {
+                    let clamped = (xi / step).abs() > maxmag;
+                    if !clamped && (qi - xi).abs() >= step * (1.0 + 1e-6) {
+                        return Err(format!("|q-x|={} >= step={step}", (qi - xi).abs()));
+                    }
+                    let mag = qi / step;
+                    if (mag - mag.round()).abs() > mag.abs().max(1.0) * 1e-6 {
+                        return Err(format!("off-grid output {qi} (step {step})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sr_zero_and_passthrough() {
+        let mut rng = Pcg32::new(1);
+        assert_eq!(fixed_quantize_sr(&[0.0; 8], 8.0, &mut rng), vec![0.0; 8]);
+        let x = vec![1.5f32, -2e10, 3e-20];
+        assert_eq!(fixed_quantize_sr(&x, 25.0, &mut rng), x);
     }
 
     #[test]

@@ -1,14 +1,29 @@
-//! Rust mirrors of the L1 quantizer kernels.
+//! Number formats ([`FormatSpec`]) and the rust mirrors of the L1
+//! quantizer kernels that execute them.
 //!
-//! Semantics are bit-identical to `python/compile/kernels/ref.py` (and
-//! therefore to the Pallas kernels and the AOT artifacts — asserted by
-//! the `artifact_crosscheck` integration test):
+//! The public surface is [`format::FormatSpec`]: one descriptor per
+//! format that knows how to quantize a buffer
+//! ([`FormatSpec::quantize_into`]), what it costs
+//! (`storage_bits`/`mac_cost`, implemented beside the calibrated
+//! constants in [`crate::costmodel::formats`]), how the artifacts encode
+//! it (`slot_qcfg`), and its canonical spec string (`"bfp4"`,
+//! `"fixed16"`, `"fixed8sr"`, `"fp32"`). New formats register in
+//! [`format::FORMAT_REGISTRY`]; the raw kernels below are its execution
+//! arms.
+//!
+//! Kernel semantics are bit-identical to `python/compile/kernels/ref.py`
+//! (and therefore to the Pallas kernels and the AOT artifacts — asserted
+//! by the `artifact_roundtrip` integration test):
 //!
 //! * exponents come from the IEEE-754 bit pattern (`floor(log2|x|)` for
 //!   normals), never from `log2` — exact on both sides;
 //! * power-of-two scales are constructed exactly from bits ([`pow2`]);
 //! * rounding is round-half-to-even (`f32::round_ties_even`, matching
-//!   XLA's `round_nearest_even`);
+//!   XLA's `round_nearest_even`) — except the stochastic-rounding
+//!   formats, whose rounding stream exists only host-side: the artifact
+//!   applies the same grid with nearest rounding (mode 3 in
+//!   `python/compile/layers.py`), an artifact-side SR kernel is a
+//!   ROADMAP open item;
 //! * mantissa widths ≥ 25 are identity (wider than f32's significand).
 //!
 //! These mirrors serve three purposes: (1) cross-validating the AOT
@@ -18,9 +33,11 @@
 
 pub mod bfp;
 pub mod fixed;
+pub mod format;
 
 pub use bfp::{bfp_dequantize_box_stats, bfp_quantize, bfp_quantize_into};
-pub use fixed::{fixed_quantize, fixed_quantize_into};
+pub use fixed::{fixed_quantize, fixed_quantize_into, fixed_quantize_sr, fixed_quantize_sr_into};
+pub use format::{family, registered_specs, FormatFamily, FormatSpec, Rounding, FORMAT_REGISTRY};
 
 /// Bounding-box size (elements sharing one exponent), paper §4 / MSFP.
 pub const BOX: usize = 16;
@@ -62,6 +79,19 @@ pub fn ftz(x: f32) -> f32 {
     } else {
         x
     }
+}
+
+/// Shared quantization-grid derivation from a (FTZ'd) |max|:
+/// clamped exponent, clamped power-of-two step, max representable
+/// magnitude. Every fixed/BFP kernel and the box-stats reporter read
+/// their grid from here so the copies cannot drift (the exact drift
+/// `bfp_dequantize_box_stats` suffered before this helper existed).
+#[inline]
+pub fn quant_grid(amax: f32, bits: f32) -> (i32, f32, f32) {
+    let e = floor_log2(amax).clamp(EXP_MIN, EXP_MAX);
+    let step = pow2((e - bits as i32 + 2).clamp(EXP_MIN, EXP_MAX));
+    let maxmag = pow2(bits as i32 - 1) - 1.0;
+    (e, step, maxmag)
 }
 
 /// Quantize one value against shared exponent `e` with `m` mantissa bits

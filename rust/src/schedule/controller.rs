@@ -4,17 +4,36 @@
 //! monotone-increase result:
 //!
 //! * training starts at the most aggressive ladder level
-//!   (`[2,2,2,16]` BFP by default);
+//!   (`bfp:2,2,2,16` by default);
 //! * after each validation pass the controller checks for a plateau:
 //!   "several epochs of unchanged or increasing validation loss" — here,
 //!   `patience` consecutive validations with relative improvement below
 //!   `min_rel_improvement`;
 //! * on a plateau it advances one ladder level (never retreats — the
 //!   monotone property the tests assert);
-//! * `q3` stays ≥ 16 in every built-in ladder (Appendix C: 8-bit
-//!   gradient outputs diverge under fixed point).
+//! * the gradient slot stays ≥ 16 bits in every built-in ladder
+//!   (Appendix C: 8-bit gradient outputs diverge under fixed point).
+//!
+//! Ladders are built from [`PrecisionConfig`] spec strings
+//! ([`DsqControllerConfig::from_specs`]), so any registered format
+//! family — including heterogeneous per-slot configs — can drive the
+//! schedule: `DsqControllerConfig::paper_default("fixedsr")` instantiates
+//! the paper's ladder over stochastic-rounding fixed point.
 
-use super::{PrecisionConfig, QuantMode, Schedule};
+use super::{PrecisionConfig, Schedule};
+
+/// The paper's Appendix-B ladder widths, shared by every family.
+const PAPER_LADDER: &[[u32; 4]] = &[
+    [2, 2, 2, 16],
+    [4, 2, 2, 16],
+    [8, 4, 4, 16],
+    [16, 4, 4, 16],
+    [16, 8, 8, 16],
+    [16, 16, 16, 16],
+];
+
+/// Appendix-C floor for the gradient slot in built-in ladders.
+const GRAD_MIN_BITS: u32 = 16;
 
 /// Controller hyper-parameters.
 #[derive(Clone, Debug)]
@@ -28,22 +47,55 @@ pub struct DsqControllerConfig {
 }
 
 impl DsqControllerConfig {
-    /// The paper's setup: start `[2,2,2,16]`, jump toward `[16,4,4,16]`
-    /// and beyond as validation stalls.
-    pub fn paper_default(mode: QuantMode) -> Self {
-        let l = |q0, q1, q2, q3| PrecisionConfig::new(mode, q0, q1, q2, q3);
-        DsqControllerConfig {
-            min_rel_improvement: 0.002,
-            patience: 2,
-            ladder: vec![
-                l(2.0, 2.0, 2.0, 16.0),
-                l(4.0, 2.0, 2.0, 16.0),
-                l(8.0, 4.0, 4.0, 16.0),
-                l(16.0, 4.0, 4.0, 16.0),
-                l(16.0, 8.0, 8.0, 16.0),
-                l(16.0, 16.0, 16.0, 16.0),
-            ],
+    /// Build a controller config from one [`PrecisionConfig`] spec
+    /// string per ladder level. Validates that the ladder is non-empty,
+    /// component-wise monotone non-decreasing, and keeps the gradient
+    /// slot at ≥ 16 bits (Appendix C); violations are
+    /// [`crate::Error::Config`].
+    pub fn from_specs(
+        min_rel_improvement: f64,
+        patience: usize,
+        levels: &[&str],
+    ) -> crate::Result<Self> {
+        let ladder = levels
+            .iter()
+            .map(|s| PrecisionConfig::parse(s))
+            .collect::<crate::Result<Vec<_>>>()?;
+        if ladder.is_empty() {
+            return Err(crate::Error::Config("ladder must be non-empty".into()));
         }
+        for w in ladder.windows(2) {
+            if !w[1].at_least(&w[0]) {
+                return Err(crate::Error::Config(format!(
+                    "ladder must be monotone: {} !>= {}",
+                    w[1].notation(),
+                    w[0].notation()
+                )));
+            }
+        }
+        for l in &ladder {
+            if l.grad().bits() < GRAD_MIN_BITS {
+                return Err(crate::Error::Config(format!(
+                    "ladder level {} has a {}-bit gradient slot (Appendix C requires >= {})",
+                    l.spec_string(),
+                    l.grad().bits(),
+                    GRAD_MIN_BITS
+                )));
+            }
+        }
+        Ok(DsqControllerConfig { min_rel_improvement, patience, ladder })
+    }
+
+    /// The paper's setup for a format family (`"bfp"`, `"fixed"`,
+    /// `"fixedsr"`, …): start `[2,2,2,16]`, jump toward `[16,4,4,16]`
+    /// and beyond as validation stalls.
+    pub fn paper_default(family: &str) -> crate::Result<Self> {
+        let specs: Vec<String> = PAPER_LADDER
+            .iter()
+            .map(|[q0, q1, q2, q3]| format!("{family}:{q0},{q1},{q2},{q3}"))
+            .collect();
+        let refs: Vec<&str> = specs.iter().map(String::as_str).collect();
+        Self::from_specs(0.002, 2, &refs)
     }
 }
 
@@ -63,7 +115,8 @@ impl DsqController {
     pub fn new(cfg: DsqControllerConfig) -> Self {
         assert!(!cfg.ladder.is_empty(), "ladder must be non-empty");
         // The ladder must be monotone non-decreasing per component —
-        // guaranteed for built-ins, asserted for user-supplied ladders.
+        // guaranteed for `from_specs` ladders, asserted for hand-built
+        // ones.
         for w in cfg.ladder.windows(2) {
             assert!(
                 w[1].at_least(&w[0]),
@@ -82,8 +135,10 @@ impl DsqController {
         }
     }
 
-    pub fn paper_default(mode: QuantMode) -> Self {
-        DsqController::new(DsqControllerConfig::paper_default(mode))
+    /// The paper's controller over a format family; errors on an
+    /// unregistered family name.
+    pub fn paper_default(family: &str) -> crate::Result<Self> {
+        Ok(DsqController::new(DsqControllerConfig::paper_default(family)?))
     }
 
     pub fn level(&self) -> usize {
@@ -125,18 +180,17 @@ impl Schedule for DsqController {
             crate::info!(
                 "DSQ controller: advancing to level {} {}",
                 self.level,
-                self.current().notation()
+                self.current().spec_string()
             );
         }
     }
 
     fn describe(&self) -> String {
         format!(
-            "dsq level {}/{} {} {} (best val {:.4}, stale {})",
+            "dsq level {}/{} {} (best val {:.4}, stale {})",
             self.level,
             self.cfg.ladder.len() - 1,
-            self.current().mode.name(),
-            self.current().notation(),
+            self.current().spec_string(),
             self.best_loss,
             self.stale
         )
@@ -146,17 +200,30 @@ impl Schedule for DsqController {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::schedule::FormatSpec;
     use crate::util::prop::Prop;
     use crate::util::rng::Pcg32;
 
     fn ctl() -> DsqController {
-        DsqController::paper_default(QuantMode::Bfp)
+        DsqController::paper_default("bfp").unwrap()
     }
 
     #[test]
     fn starts_most_aggressive() {
         let c = ctl();
         assert_eq!(c.current().notation(), "[2,2,2,16]");
+        assert_eq!(c.current(), PrecisionConfig::parse("bfp:2,2,2,16").unwrap());
+    }
+
+    #[test]
+    fn paper_default_instantiates_any_registered_family() {
+        for fam in ["bfp", "fixed", "fixedsr"] {
+            let c = DsqController::paper_default(fam)
+                .unwrap_or_else(|e| panic!("{fam}: {e}"));
+            assert_eq!(c.current().notation(), "[2,2,2,16]");
+            assert_eq!(c.current().fwd().family_name(), fam);
+        }
+        assert!(DsqController::paper_default("int").is_err());
     }
 
     #[test]
@@ -180,11 +247,45 @@ mod tests {
     }
 
     #[test]
-    fn q3_always_at_least_16() {
-        let c = DsqControllerConfig::paper_default(QuantMode::Bfp);
-        for l in &c.ladder {
-            assert!(l.q3 >= 16.0, "Appendix C: q3 must stay >= 16 ({})", l.notation());
+    fn grad_slot_always_at_least_16() {
+        for fam in ["bfp", "fixed", "fixedsr"] {
+            let c = DsqControllerConfig::paper_default(fam).unwrap();
+            for l in &c.ladder {
+                assert!(
+                    l.grad().bits() >= 16,
+                    "Appendix C: grad slot must stay >= 16 ({})",
+                    l.spec_string()
+                );
+            }
         }
+    }
+
+    #[test]
+    fn from_specs_rejects_low_grad_slot() {
+        let r = DsqControllerConfig::from_specs(0.01, 1, &["fixed:8,8,8,8"]);
+        assert!(matches!(r, Err(crate::Error::Config(_))), "got {r:?}");
+    }
+
+    #[test]
+    fn from_specs_rejects_non_monotone() {
+        let r = DsqControllerConfig::from_specs(0.01, 1, &["bfp8", "bfp:4,4,4,16"]);
+        assert!(matches!(r, Err(crate::Error::Config(_))), "got {r:?}");
+    }
+
+    #[test]
+    fn from_specs_accepts_heterogeneous_ladder() {
+        // A BFP compute path whose gradient outputs are stochastic-
+        // rounding fixed point at every level — the registry makes this
+        // a two-line ladder instead of a cross-cutting rewrite.
+        let cfg = DsqControllerConfig::from_specs(
+            0.002,
+            2,
+            &["bfp2,bfp2,bfp2,fixed16sr", "bfp16,bfp4,bfp4,fixed16sr"],
+        )
+        .unwrap();
+        let c = DsqController::new(cfg);
+        assert_eq!(c.current().grad(), FormatSpec::fixed_sr(16));
+        assert_eq!(c.current().fwd(), FormatSpec::bfp(2));
     }
 
     #[test]
@@ -208,13 +309,12 @@ mod tests {
     #[test]
     #[should_panic(expected = "monotone")]
     fn non_monotone_ladder_rejected() {
-        let mode = QuantMode::Bfp;
         DsqController::new(DsqControllerConfig {
             min_rel_improvement: 0.01,
             patience: 1,
             ladder: vec![
-                PrecisionConfig::uniform(mode, 8.0),
-                PrecisionConfig::uniform(mode, 4.0),
+                PrecisionConfig::uniform(FormatSpec::bfp(8)),
+                PrecisionConfig::uniform(FormatSpec::bfp(4)),
             ],
         });
     }

@@ -1,118 +1,188 @@
 //! Precision configurations and schedules — the paper's §3 "time-adaptive
-//! principle".
+//! principle", built on the pluggable [`FormatSpec`] descriptor.
 //!
-//! A [`PrecisionConfig`] is the `[q0, q1, q2, q3]` vector (plus quantizer
-//! mode) that parameterizes a training step at runtime. Schedules produce
-//! one config per step:
+//! A [`PrecisionConfig`] assigns one [`FormatSpec`] to each of the four
+//! dataflow slots of a training step (paper Figure 2), so slots may use
+//! *heterogeneous* formats (e.g. a BFP stash with fixed-point gradient
+//! outputs). Schedules produce one config per step:
 //!
 //! * [`StaticSchedule`] — a fixed config for the whole run (the paper's
 //!   baseline and "Stashing" rows);
 //! * [`DsqController`] — the paper's contribution: start at the most
-//!   aggressive level (`[2,2,2,16]` BFP) and **monotonically** climb the
+//!   aggressive level (`bfp:2,2,2,16`) and **monotonically** climb the
 //!   precision ladder whenever the validation loss plateaus (the paper
 //!   follows Hönig et al. in showing monotone-increase beats fancier
-//!   schedules). `q3 ≥ 16` is enforced by every built-in ladder level per
-//!   Appendix C (8-bit gradient outputs diverge).
+//!   schedules). The gradient slot stays ≥ 16 bits in every built-in
+//!   ladder per Appendix C (8-bit gradient outputs diverge).
+//!
+//! Configs are spelled as spec strings and parsed through the format
+//! registry ([`PrecisionConfig::parse`]):
+//!
+//! * `"bfp8"` — one format, all four slots;
+//! * `"bfp:16,4,4,16"` — one family, per-slot widths (the paper's
+//!   `[16,4,4,16]` notation);
+//! * `"bfp16,bfp4,bfp4,fixed16sr"` — fully heterogeneous per-slot specs.
 
 pub mod controller;
 
 pub use controller::{DsqController, DsqControllerConfig};
 
-/// Which quantizer the step uses (mirrors the artifact's runtime `mode`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum QuantMode {
-    /// No quantization (fp32 reference).
-    Fp32,
-    /// Dynamic per-tensor fixed point.
-    Fixed,
-    /// Block floating point (MSFP, box 16, 8-bit shared exponent).
-    Bfp,
-}
+pub use crate::quant::format::{FormatSpec, Rounding};
 
-impl QuantMode {
-    pub fn as_f32(self) -> f32 {
-        match self {
-            QuantMode::Fp32 => 0.0,
-            QuantMode::Fixed => 1.0,
-            QuantMode::Bfp => 2.0,
-        }
-    }
-
-    pub fn name(self) -> &'static str {
-        match self {
-            QuantMode::Fp32 => "fp32",
-            QuantMode::Fixed => "fixed",
-            QuantMode::Bfp => "bfp",
-        }
-    }
-}
-
-/// A full precision configuration `[q0, q1, q2, q3]` + quantizer mode.
+/// A full precision configuration: one [`FormatSpec`] per dataflow slot.
 ///
-/// * `q0` — forward-GEMM operand width (arith density);
-/// * `q1` — the **stash** width (fwd→bwd DRAM traffic);
-/// * `q2` — first backward GEMM operand width;
-/// * `q3` — gradient-output width (DRAM + second backward GEMM).
-#[derive(Clone, Copy, Debug, PartialEq)]
+/// Slot meaning (paper Figure 2):
+/// * `slots[0]` (`q0`) — forward-GEMM operand format (arith density);
+/// * `slots[1]` (`q1`) — the **stash** format (fwd→bwd DRAM traffic);
+/// * `slots[2]` (`q2`) — first backward GEMM operand format;
+/// * `slots[3]` (`q3`) — gradient-output format (DRAM + second backward
+///   GEMM).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct PrecisionConfig {
-    pub mode: QuantMode,
-    pub q0: f32,
-    pub q1: f32,
-    pub q2: f32,
-    pub q3: f32,
+    pub slots: [FormatSpec; 4],
 }
 
 impl PrecisionConfig {
-    pub const fn new(mode: QuantMode, q0: f32, q1: f32, q2: f32, q3: f32) -> Self {
-        PrecisionConfig { mode, q0, q1, q2, q3 }
+    pub const fn new(slots: [FormatSpec; 4]) -> Self {
+        PrecisionConfig { slots }
     }
 
-    /// The fp32 reference config `[32,32,32,32]`.
-    pub const FP32: PrecisionConfig =
-        PrecisionConfig::new(QuantMode::Fp32, 32.0, 32.0, 32.0, 32.0);
+    /// The fp32 reference config.
+    pub const FP32: PrecisionConfig = PrecisionConfig { slots: [FormatSpec::Fp32; 4] };
 
-    /// Uniform width (the paper's `[b,b,b,b]` rows).
-    pub fn uniform(mode: QuantMode, bits: f32) -> Self {
-        PrecisionConfig::new(mode, bits, bits, bits, bits)
+    /// The same format in every slot (the paper's `[b,b,b,b]` rows).
+    pub fn uniform(f: FormatSpec) -> Self {
+        PrecisionConfig::new([f; 4])
     }
 
-    /// The paper's static stashing setup `[16, 4, 4, 16]`.
-    pub fn stashing(mode: QuantMode) -> Self {
-        PrecisionConfig::new(mode, 16.0, 4.0, 4.0, 16.0)
+    /// The paper's static stashing pattern `[16,4,4,16]`, instantiated
+    /// for `f`'s family.
+    pub fn stashing(f: FormatSpec) -> Self {
+        PrecisionConfig::new([f.with_bits(16), f.with_bits(4), f.with_bits(4), f.with_bits(16)])
     }
 
-    /// Runtime vector for the artifacts: `[mode, q0, q1, q2, q3]`.
-    pub fn as_qcfg(&self) -> [f32; 5] {
-        [self.mode.as_f32(), self.q0, self.q1, self.q2, self.q3]
+    /// `f`'s family at explicit per-slot widths (ladder levels etc.).
+    pub fn of(f: FormatSpec, q: [u32; 4]) -> Self {
+        PrecisionConfig::new([
+            f.with_bits(q[0]),
+            f.with_bits(q[1]),
+            f.with_bits(q[2]),
+            f.with_bits(q[3]),
+        ])
     }
 
-    /// `"[16,4,4,16]"` — the paper's notation.
+    /// Slot accessors by dataflow role.
+    pub fn fwd(&self) -> FormatSpec {
+        self.slots[0]
+    }
+    pub fn stash(&self) -> FormatSpec {
+        self.slots[1]
+    }
+    pub fn bwd(&self) -> FormatSpec {
+        self.slots[2]
+    }
+    pub fn grad(&self) -> FormatSpec {
+        self.slots[3]
+    }
+
+    /// Per-slot widths `[q0, q1, q2, q3]`.
+    pub fn bits(&self) -> [u32; 4] {
+        [
+            self.slots[0].bits(),
+            self.slots[1].bits(),
+            self.slots[2].bits(),
+            self.slots[3].bits(),
+        ]
+    }
+
+    /// True iff every slot is the fp32 identity (the paper leaves such
+    /// configs unscored in its cost tables).
+    pub fn is_fp32(&self) -> bool {
+        self.slots.iter().all(|f| *f == FormatSpec::Fp32)
+    }
+
+    /// Runtime vector for the artifacts: four `[mode, bits]` slot pairs,
+    /// `[m0,q0, m1,q1, m2,q2, m3,q3]` (see `python/compile/layers.py`).
+    pub fn as_qcfg(&self) -> [f32; 8] {
+        let mut out = [0f32; 8];
+        for (i, f) in self.slots.iter().enumerate() {
+            let [m, b] = f.slot_qcfg();
+            out[2 * i] = m;
+            out[2 * i + 1] = b;
+        }
+        out
+    }
+
+    /// `"[16,4,4,16]"` — the paper's width notation (format-blind).
     pub fn notation(&self) -> String {
-        format!("[{},{},{},{}]", self.q0, self.q1, self.q2, self.q3)
+        let [q0, q1, q2, q3] = self.bits();
+        format!("[{q0},{q1},{q2},{q3}]")
     }
 
-    /// Parse `"16,4,4,16"` or `"[16,4,4,16]"`.
-    pub fn parse(mode: QuantMode, s: &str) -> crate::Result<Self> {
-        let trimmed = s.trim().trim_start_matches('[').trim_end_matches(']');
-        let parts: Vec<f32> = trimmed
-            .split(',')
-            .map(|p| p.trim().parse::<f32>())
-            .collect::<std::result::Result<_, _>>()
-            .map_err(|_| crate::Error::Config(format!("bad precision setup '{s}'")))?;
-        if parts.len() != 4 {
-            return Err(crate::Error::Config(format!("precision setup needs 4 entries: '{s}'")));
+    /// Canonical spec string; round-trips through
+    /// [`PrecisionConfig::parse`]. Uniform configs print as one format
+    /// spec (`"bfp8"`), single-family configs in family form
+    /// (`"bfp:16,4,4,16"`), heterogeneous configs slot-by-slot
+    /// (`"bfp16,bfp4,bfp4,fixed16sr"`).
+    pub fn spec_string(&self) -> String {
+        let first = self.slots[0];
+        if self.slots.iter().all(|f| *f == first) {
+            return first.spec_string();
         }
-        for &b in &parts {
-            if !(2.0..=32.0).contains(&b) || b.fract() != 0.0 {
-                return Err(crate::Error::Config(format!("bit width {b} out of range [2,32]")));
+        if self.slots.iter().all(|f| f.family_name() == first.family_name()) {
+            let [q0, q1, q2, q3] = self.bits();
+            return format!("{}:{q0},{q1},{q2},{q3}", first.family_name());
+        }
+        self.slots.iter().map(|f| f.spec_string()).collect::<Vec<_>>().join(",")
+    }
+
+    /// Parse a config spec string (see [`PrecisionConfig::spec_string`]
+    /// for the three accepted shapes). Width lists may be bracketed
+    /// (`"bfp:[16,4,4,16]"`). Every error is [`crate::Error::Config`].
+    pub fn parse(s: &str) -> crate::Result<Self> {
+        let t = s.trim();
+        if let Some((fam_s, widths)) = t.split_once(':') {
+            let fam = crate::quant::format::family(fam_s).ok_or_else(|| {
+                crate::Error::Config(format!(
+                    "unknown format family '{fam_s}' in '{s}' (registered: {})",
+                    crate::quant::format::registered_summary()
+                ))
+            })?;
+            let widths = widths.trim().trim_start_matches('[').trim_end_matches(']');
+            let parts: Vec<&str> = widths.split(',').collect();
+            if parts.len() != 4 {
+                return Err(crate::Error::Config(format!(
+                    "precision setup needs 4 slot widths: '{s}'"
+                )));
             }
+            let mut slots = [FormatSpec::Fp32; 4];
+            for (slot, p) in slots.iter_mut().zip(&parts) {
+                let bits: u32 = p.trim().parse().map_err(|_| {
+                    crate::Error::Config(format!("bad slot width '{p}' in '{s}'"))
+                })?;
+                *slot = fam.instantiate(bits)?;
+            }
+            return Ok(PrecisionConfig::new(slots));
         }
-        Ok(PrecisionConfig::new(mode, parts[0], parts[1], parts[2], parts[3]))
+        if t.contains(',') {
+            let parts: Vec<&str> = t.split(',').collect();
+            if parts.len() != 4 {
+                return Err(crate::Error::Config(format!(
+                    "precision setup needs 4 slot specs: '{s}'"
+                )));
+            }
+            let mut slots = [FormatSpec::Fp32; 4];
+            for (slot, p) in slots.iter_mut().zip(&parts) {
+                *slot = FormatSpec::parse(p)?;
+            }
+            return Ok(PrecisionConfig::new(slots));
+        }
+        Ok(PrecisionConfig::uniform(FormatSpec::parse(t)?))
     }
 
-    /// Component-wise ≥ (used to assert monotone schedules).
+    /// Component-wise width ≥ (used to assert monotone schedules).
     pub fn at_least(&self, other: &PrecisionConfig) -> bool {
-        self.q0 >= other.q0 && self.q1 >= other.q1 && self.q2 >= other.q2 && self.q3 >= other.q3
+        self.bits().iter().zip(other.bits()).all(|(a, b)| *a >= b)
     }
 }
 
@@ -136,7 +206,7 @@ impl Schedule for StaticSchedule {
     }
     fn observe_validation(&mut self, _val_loss: f64) {}
     fn describe(&self) -> String {
-        format!("static {} {}", self.0.mode.name(), self.0.notation())
+        format!("static {} {}", self.0.spec_string(), self.0.notation())
     }
 }
 
@@ -146,39 +216,138 @@ mod tests {
 
     #[test]
     fn qcfg_vector_layout() {
-        let c = PrecisionConfig::stashing(QuantMode::Bfp);
-        assert_eq!(c.as_qcfg(), [2.0, 16.0, 4.0, 4.0, 16.0]);
-        assert_eq!(PrecisionConfig::FP32.as_qcfg(), [0.0, 32.0, 32.0, 32.0, 32.0]);
+        let c = PrecisionConfig::stashing(FormatSpec::bfp(16));
+        assert_eq!(c.as_qcfg(), [2.0, 16.0, 2.0, 4.0, 2.0, 4.0, 2.0, 16.0]);
+        assert_eq!(
+            PrecisionConfig::FP32.as_qcfg(),
+            [0.0, 32.0, 0.0, 32.0, 0.0, 32.0, 0.0, 32.0]
+        );
+        // Heterogeneous slots carry their own mode scalars.
+        let h = PrecisionConfig::new([
+            FormatSpec::bfp(16),
+            FormatSpec::bfp(4),
+            FormatSpec::fixed(4),
+            FormatSpec::fixed_sr(16),
+        ]);
+        assert_eq!(h.as_qcfg(), [2.0, 16.0, 2.0, 4.0, 1.0, 4.0, 3.0, 16.0]);
     }
 
     #[test]
-    fn parse_roundtrip() {
-        let c = PrecisionConfig::parse(QuantMode::Bfp, "[16,4,4,16]").unwrap();
-        assert_eq!(c, PrecisionConfig::stashing(QuantMode::Bfp));
+    fn parse_family_form() {
+        let c = PrecisionConfig::parse("bfp:[16,4,4,16]").unwrap();
+        assert_eq!(c, PrecisionConfig::stashing(FormatSpec::bfp(16)));
         assert_eq!(c.notation(), "[16,4,4,16]");
-        let c2 = PrecisionConfig::parse(QuantMode::Fixed, "8, 8, 8, 32").unwrap();
-        assert_eq!(c2.q3, 32.0);
+        let c2 = PrecisionConfig::parse("fixed: 8, 8, 8, 32").unwrap();
+        assert_eq!(c2.grad(), FormatSpec::fixed(32));
+        let c3 = PrecisionConfig::parse("fixedsr:16,4,4,16").unwrap();
+        assert_eq!(c3.stash(), FormatSpec::fixed_sr(4));
+    }
+
+    #[test]
+    fn parse_uniform_and_per_slot_forms() {
+        assert_eq!(PrecisionConfig::parse("fp32").unwrap(), PrecisionConfig::FP32);
+        assert_eq!(
+            PrecisionConfig::parse("bfp8").unwrap(),
+            PrecisionConfig::uniform(FormatSpec::bfp(8))
+        );
+        let h = PrecisionConfig::parse("bfp16,bfp4,bfp4,fixed16sr").unwrap();
+        assert_eq!(
+            h.slots,
+            [
+                FormatSpec::bfp(16),
+                FormatSpec::bfp(4),
+                FormatSpec::bfp(4),
+                FormatSpec::fixed_sr(16)
+            ]
+        );
     }
 
     #[test]
     fn parse_rejects_bad_input() {
-        assert!(PrecisionConfig::parse(QuantMode::Bfp, "16,4,4").is_err());
-        assert!(PrecisionConfig::parse(QuantMode::Bfp, "16,4,4,1").is_err());
-        assert!(PrecisionConfig::parse(QuantMode::Bfp, "16,4,x,16").is_err());
-        assert!(PrecisionConfig::parse(QuantMode::Bfp, "64,4,4,16").is_err());
+        for bad in [
+            "bfp:16,4,4",
+            "bfp:16,4,4,1",
+            "bfp:16,4,x,16",
+            "bfp:64,4,4,16",
+            "int8:8,8,8,16",
+            "bfp16,bfp4,bfp4",
+            "bfp16,bfp4,bfp4,nope16",
+            "",
+            "bfp",
+            "fixed0",
+        ] {
+            let r = PrecisionConfig::parse(bad);
+            assert!(
+                matches!(r, Err(crate::Error::Config(_))),
+                "'{bad}' should be Error::Config, got {r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn spec_string_roundtrip() {
+        let configs = [
+            PrecisionConfig::FP32,
+            PrecisionConfig::uniform(FormatSpec::bfp(8)),
+            PrecisionConfig::uniform(FormatSpec::fixed_sr(8)),
+            PrecisionConfig::stashing(FormatSpec::bfp(16)),
+            PrecisionConfig::stashing(FormatSpec::fixed(16)),
+            PrecisionConfig::new([
+                FormatSpec::bfp(16),
+                FormatSpec::bfp(4),
+                FormatSpec::fixed(4),
+                FormatSpec::fixed_sr(16),
+            ]),
+        ];
+        for c in configs {
+            let s = c.spec_string();
+            assert_eq!(PrecisionConfig::parse(&s).unwrap(), c, "round-trip of '{s}'");
+        }
+    }
+
+    #[test]
+    fn roundtrip_property_over_registry() {
+        use crate::util::prop::Prop;
+        Prop::new("random per-slot configs round-trip through spec strings").cases(80).run(
+            |rng, _| {
+                let pick = |rng: &mut crate::util::rng::Pcg32| {
+                    let fam = &crate::quant::format::FORMAT_REGISTRY
+                        [rng.below(crate::quant::format::FORMAT_REGISTRY.len() as u32) as usize];
+                    fam.instantiate(rng.range(fam.min_bits, fam.max_bits + 1)).unwrap()
+                };
+                PrecisionConfig::new([
+                    pick(&mut *rng),
+                    pick(&mut *rng),
+                    pick(&mut *rng),
+                    pick(&mut *rng),
+                ])
+            },
+            |c| {
+                let s = c.spec_string();
+                match PrecisionConfig::parse(&s) {
+                    Ok(back) if back == *c => Ok(()),
+                    Ok(back) => Err(format!("'{s}' reparsed as {back:?}")),
+                    Err(e) => Err(format!("'{s}' failed to parse: {e}")),
+                }
+            },
+        );
     }
 
     #[test]
     fn at_least_ordering() {
-        let lo = PrecisionConfig::uniform(QuantMode::Bfp, 4.0);
-        let hi = PrecisionConfig::uniform(QuantMode::Bfp, 16.0);
+        let lo = PrecisionConfig::uniform(FormatSpec::bfp(4));
+        let hi = PrecisionConfig::uniform(FormatSpec::bfp(16));
         assert!(hi.at_least(&lo));
         assert!(!lo.at_least(&hi));
+        // Width comparison is format-blind: a fixed16 grad slot still
+        // dominates a bfp4 one.
+        let het = PrecisionConfig::parse("bfp16,bfp4,bfp4,fixed16").unwrap();
+        assert!(het.at_least(&PrecisionConfig::parse("bfp:4,4,4,16").unwrap()));
     }
 
     #[test]
     fn static_schedule_never_changes() {
-        let mut s = StaticSchedule(PrecisionConfig::stashing(QuantMode::Bfp));
+        let mut s = StaticSchedule(PrecisionConfig::stashing(FormatSpec::bfp(16)));
         let before = s.current();
         for i in 0..10 {
             s.observe_validation(10.0 - i as f64);

@@ -11,7 +11,7 @@ use dsq::coordinator::{Finetuner, FinetuneConfig, LrSchedule, Trainer, TrainerCo
 use dsq::data::Variant;
 use dsq::model::checkpoint;
 use dsq::runtime::ArtifactManifest;
-use dsq::schedule::{DsqController, PrecisionConfig, QuantMode, Schedule, StaticSchedule};
+use dsq::schedule::{DsqController, FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -39,7 +39,7 @@ fn quick_cfg(dir: &PathBuf) -> TrainerConfig {
 fn trainer_runs_and_improves_under_stashing_bfp() {
     let Some(dir) = artifacts_dir() else { return };
     let mut schedule: Box<dyn Schedule> =
-        Box::new(StaticSchedule(PrecisionConfig::stashing(QuantMode::Bfp)));
+        Box::new(StaticSchedule(PrecisionConfig::stashing(FormatSpec::bfp(16))));
     let mut trainer = Trainer::new(quick_cfg(&dir)).unwrap();
     let report = trainer.run(schedule.as_mut()).unwrap();
     assert_eq!(report.steps, 16);
@@ -60,7 +60,7 @@ fn trainer_runs_and_improves_under_stashing_bfp() {
 fn dsq_controller_trace_feeds_cost_model() {
     let Some(dir) = artifacts_dir() else { return };
     let mut schedule: Box<dyn Schedule> =
-        Box::new(DsqController::paper_default(QuantMode::Bfp));
+        Box::new(DsqController::paper_default("bfp").unwrap());
     let mut trainer = Trainer::new(quick_cfg(&dir)).unwrap();
     let report = trainer.run(schedule.as_mut()).unwrap();
     let total: usize = report.trace.iter().map(|(_, n)| n).sum();
@@ -69,7 +69,7 @@ fn dsq_controller_trace_feeds_cost_model() {
     assert_eq!(report.trace[0].0.notation(), "[2,2,2,16]");
     // The cost trace evaluates on the paper workload.
     let w = dsq::costmodel::TransformerWorkload::iwslt_6layer();
-    let (arith, dram) = report.cost_on(&w);
+    let (arith, dram) = report.cost_on(&w).expect("dsq trace is scored");
     assert!(arith > 0.0 && arith < 0.12, "arith {arith}");
     assert!(dram > 0.0 && dram < 0.6, "dram {dram}");
 }
@@ -114,7 +114,7 @@ fn finetuner_runs_and_reports_accuracy() {
         ..FinetuneConfig::quick(dir.clone())
     };
     let mut schedule: Box<dyn Schedule> =
-        Box::new(StaticSchedule(PrecisionConfig::stashing(QuantMode::Bfp)));
+        Box::new(StaticSchedule(PrecisionConfig::stashing(FormatSpec::bfp(16))));
     let mut tuner = Finetuner::new(cfg).unwrap();
     let report = tuner.run(schedule.as_mut()).unwrap();
     assert_eq!(report.steps, 16);

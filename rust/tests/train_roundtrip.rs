@@ -64,7 +64,7 @@ impl NmtHarness {
         (src, tgt_in, tgt_out)
     }
 
-    fn train_step(&mut self, qcfg: [f32; 5], lr: f32, rng: &mut Pcg32) -> f32 {
+    fn train_step(&mut self, qcfg: [f32; 8], lr: f32, rng: &mut Pcg32) -> f32 {
         let rt = Runtime::global();
         let exe = rt.load(&self.man.model_path("nmt", "train_bfp").unwrap()).unwrap();
         let b = self.man.nmt.cfg("batch").unwrap();
@@ -80,7 +80,7 @@ impl NmtHarness {
         inputs.push(HostTensor::i32(vec![b, s], src));
         inputs.push(HostTensor::i32(vec![b, t], tgt_in));
         inputs.push(HostTensor::i32(vec![b, t], tgt_out));
-        inputs.push(HostTensor::f32(vec![5], qcfg.to_vec()));
+        inputs.push(HostTensor::f32(vec![8], qcfg.to_vec()));
         inputs.push(HostTensor::scalar_f32(lr));
         let outs = exe.run(&inputs).unwrap();
         let n = self.man.nmt.params.len();
@@ -96,9 +96,9 @@ impl NmtHarness {
 fn train_loss_decreases_fp32_and_dsq() {
     let Some(dir) = artifacts_dir() else { return };
     for (name, qcfg) in [
-        ("fp32", [0.0f32, 32.0, 32.0, 32.0, 32.0]),
-        ("dsq[2,2,2,16]", [2.0, 2.0, 2.0, 2.0, 16.0]),
-        ("stash-bfp[16,4,4,16]", [2.0, 16.0, 4.0, 4.0, 16.0]),
+        ("fp32", [0.0f32, 32.0, 0.0, 32.0, 0.0, 32.0, 0.0, 32.0]),
+        ("dsq[2,2,2,16]", [2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 16.0]),
+        ("stash-bfp[16,4,4,16]", [2.0, 16.0, 2.0, 4.0, 2.0, 4.0, 2.0, 16.0]),
     ] {
         let mut h = NmtHarness::new(&dir, 0);
         // One fixed batch pool of 2 batches: memorization = trainability.
@@ -130,11 +130,11 @@ fn runtime_dynamic_precision_change_no_recompile() {
     let mut h = NmtHarness::new(&dir, 7);
     let mut rng = Pcg32::new(9);
     let schedule = [
-        [2.0f32, 2.0, 2.0, 2.0, 16.0],
-        [2.0, 4.0, 2.0, 2.0, 16.0],
-        [2.0, 16.0, 4.0, 4.0, 16.0],
-        [2.0, 16.0, 16.0, 16.0, 16.0],
-        [0.0, 32.0, 32.0, 32.0, 32.0],
+        [2.0f32, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 16.0],
+        [2.0, 4.0, 2.0, 2.0, 2.0, 2.0, 2.0, 16.0],
+        [2.0, 16.0, 2.0, 4.0, 2.0, 4.0, 2.0, 16.0],
+        [2.0, 16.0, 2.0, 16.0, 2.0, 16.0, 2.0, 16.0],
+        [0.0, 32.0, 0.0, 32.0, 0.0, 32.0, 0.0, 32.0],
     ];
     for q in schedule {
         let loss = h.train_step(q, 1e-3, &mut rng);
@@ -217,7 +217,7 @@ fn cls_train_and_eval_run() {
     inputs.push(HostTensor::scalar_f32(1.0));
     inputs.push(HostTensor::i32(vec![b, l], toks.clone()));
     inputs.push(HostTensor::i32(vec![b], labels.clone()));
-    inputs.push(HostTensor::f32(vec![5], vec![2.0, 16.0, 4.0, 4.0, 16.0]));
+    inputs.push(HostTensor::f32(vec![8], vec![2.0, 16.0, 2.0, 4.0, 2.0, 4.0, 2.0, 16.0]));
     inputs.push(HostTensor::scalar_f32(1e-3));
     let outs = train.run(&inputs).unwrap();
     let n = man.cls.params.len();
