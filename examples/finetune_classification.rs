@@ -27,6 +27,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         val_batches: 3,
         checkpoint: Some(ckpt.clone()),
         init_checkpoint: None,
+        stash_format: None,
     };
     let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(PrecisionConfig::FP32));
     let report = Finetuner::new(pre_cfg)?.run(schedule.as_mut())?;
@@ -51,6 +52,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             val_batches: 3,
             checkpoint: None,
             init_checkpoint: init,
+            stash_format: None,
         };
         let mut schedule: Box<dyn Schedule> =
             Box::new(DsqController::paper_default("bfp").unwrap());

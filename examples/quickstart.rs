@@ -45,6 +45,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             checkpoint: None,
             init_checkpoint: None,
             prefetch: 2,
+            stash_format: None,
         };
         let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(*p));
         let mut trainer = Trainer::new(cfg)?;

@@ -34,6 +34,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         checkpoint: None,
         init_checkpoint: None,
         prefetch: 4,
+        stash_format: None,
     };
     let workload = TransformerWorkload::iwslt_6layer();
 

@@ -1,26 +1,52 @@
 //! Bench: the quantizer hot path (rust mirrors) across widths, shapes
-//! and every registered format — the L3-side microbenchmark backing
-//! §Perf.
+//! and every registered format — plus the packed codec's encode/decode
+//! path — the L3-side microbenchmark backing §Perf.
 //!
 //! The production quantization happens inside the XLA artifact; these
-//! mirrors run in tests/cost analysis and must not be a bottleneck for
+//! mirrors run in tests/cost analysis, and the codec runs on every
+//! stash/checkpoint round trip, so neither may be a bottleneck for
 //! large sweeps. The sweep enumerates `quant::FORMAT_REGISTRY`, so a
-//! newly registered format (e.g. the stochastic-rounding fixed point
-//! added with the registry) is tracked here automatically.
+//! newly registered format is tracked here automatically.
+//!
+//! `--smoke` (or `DSQ_BENCH_SMOKE=1`): a seconds-long CI profile that
+//! still executes every (format, size) cell and *asserts* the codec
+//! round-trip (`decode(encode(x)) == quantize(x)`) on each cell, so a
+//! codec regression fails the workflow rather than just skewing a
+//! number nobody reads.
 
 use dsq::bench::{header, Bencher};
-use dsq::quant::registered_specs;
+use dsq::quant::{registered_specs, same_f32, Codec};
 use dsq::util::rng::Pcg32;
 
 fn main() {
-    header("Quantizer hot path (rust mirrors, all registered formats)");
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("DSQ_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    header(if smoke {
+        "Quantizer + codec hot path (smoke profile)"
+    } else {
+        "Quantizer + codec hot path (rust mirrors, all registered formats)"
+    });
     let mut rng = Pcg32::new(1);
-    let sizes = [(1usize << 12, 128usize), (1 << 16, 256), (1 << 20, 512)];
+    let sizes: &[(usize, usize)] = if smoke {
+        &[(1 << 12, 128)]
+    } else {
+        &[(1 << 12, 128), (1 << 16, 256), (1 << 20, 512)]
+    };
     let widths = [2u32, 4, 8, 16];
-    let b = Bencher::default();
-    for (n, inner) in sizes {
+    let b = if smoke {
+        Bencher {
+            warmup: std::time::Duration::from_millis(10),
+            measure: std::time::Duration::from_millis(40),
+            min_iters: 3,
+            max_iters: 10_000,
+        }
+    } else {
+        Bencher::default()
+    };
+    for &(n, inner) in sizes {
         let x: Vec<f32> = (0..n).map(|_| rng.normal() * (rng.f32() * 8.0 - 4.0).exp2()).collect();
         let mut buf = x.clone();
+        let shape = [n / inner, inner];
         // The width list stays below the >= 25-bit passthrough, so every
         // swept spec (fp32 never instantiates at these widths) does real work.
         for spec in registered_specs(&widths) {
@@ -33,6 +59,35 @@ fn main() {
                 spec.quantize_into_step(std::hint::black_box(&mut buf), inner, 1);
             });
             println!("{}  ({:.0} Melem/s)", r.report(), r.throughput(n as f64) / 1e6);
+
+            // The codec path: encode (quantize + pack) and decode.
+            let packed = spec.encode_stream(&x, &shape, inner, 1, 0);
+            let re = b.bench(&format!("encode:{label}"), || {
+                std::hint::black_box(spec.encode_stream(
+                    std::hint::black_box(&x),
+                    &shape,
+                    inner,
+                    1,
+                    0,
+                ));
+            });
+            println!("{}  ({:.0} Melem/s)", re.report(), re.throughput(n as f64) / 1e6);
+            let rd = b.bench(&format!("decode:{label}"), || {
+                std::hint::black_box(std::hint::black_box(&packed).decode());
+            });
+            println!("{}  ({:.0} Melem/s)", rd.report(), rd.throughput(n as f64) / 1e6);
+
+            // Correctness gate (cheap next to the timing): the packed
+            // bytes must round-trip to the quantized grid exactly.
+            let got = packed.decode();
+            buf.copy_from_slice(&x);
+            spec.quantize_into_step(&mut buf, inner, 1);
+            for (i, (&g, &w)) in got.iter().zip(buf.iter()).enumerate() {
+                assert!(
+                    same_f32(g, w),
+                    "codec regression: {spec} elem {i}: decoded {g} != quantized {w}"
+                );
+            }
         }
     }
 }

@@ -47,6 +47,7 @@ fn main() {
             checkpoint: None,
             init_checkpoint: None,
             prefetch: 4,
+            stash_format: None,
         };
         let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(p));
         let mut trainer = Trainer::new(cfg).expect("trainer");

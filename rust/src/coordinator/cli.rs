@@ -107,7 +107,23 @@ fn common_train_flags(spec: ArgSpec) -> ArgSpec {
         .opt("schedule", "dsq", "dsq | dsq-<family> | fp32 | <family>:q0,q1,q2,q3 | s0,s1,s2,s3")
         .opt("checkpoint", "", "save final checkpoint here")
         .opt("init-checkpoint", "", "initialize from this checkpoint")
+        .opt(
+            "stash-state",
+            "",
+            "hold trainer state packed in this format between steps (e.g. bfp8); \
+             checkpoints then use the packed v2 layout",
+        )
         .bool("json", "print the full report as JSON")
+}
+
+/// Parse an optional `--stash-state` spec ("" = dense f32 state).
+fn opt_format(a: &Args, key: &str) -> Result<Option<FormatSpec>> {
+    let v = a.get(key);
+    if v.is_empty() {
+        Ok(None)
+    } else {
+        FormatSpec::parse(v).map(Some)
+    }
 }
 
 fn cmd_train(raw: &[String]) -> Result<()> {
@@ -129,6 +145,7 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         checkpoint: opt_path(&a, "checkpoint"),
         init_checkpoint: opt_path(&a, "init-checkpoint"),
         prefetch: 4,
+        stash_format: opt_format(&a, "stash-state")?,
     };
     let mut schedule = parse_schedule(a.get("schedule"))?;
     let mut trainer = Trainer::new(cfg)?;
@@ -172,6 +189,7 @@ fn cmd_finetune(raw: &[String]) -> Result<()> {
         val_batches: a.get_usize("val-batches")?,
         checkpoint: opt_path(&a, "checkpoint"),
         init_checkpoint: opt_path(&a, "init-checkpoint"),
+        stash_format: opt_format(&a, "stash-state")?,
     };
     let mut schedule = parse_schedule(a.get("schedule"))?;
     let mut tuner = Finetuner::new(cfg)?;
@@ -274,12 +292,25 @@ fn cmd_experiment(raw: &[String]) -> Result<()> {
 
 fn cmd_formats() -> Result<()> {
     println!("registered number formats ({}):", crate::quant::format::registered_summary());
+    println!("  {:<16} {:>13}  {:<9}  {}", "format", "packed B/elem", "at", "description");
     for fam in crate::quant::format::FORMAT_REGISTRY {
-        println!("  {:<16} {}", fam.spelling(), fam.help);
+        // Physical storage of the packed codec at a representative width
+        // (16 clamped into the family's range), on a 4096-elem tensor.
+        let spec = fam.instantiate(16.clamp(fam.min_bits, fam.max_bits))?;
+        let n = 4096;
+        let bytes_per_elem = spec.observed_bytes(n, n) as f64 / n as f64;
+        println!(
+            "  {:<16} {:>13.3}  {:<9}  {}",
+            fam.spelling(),
+            bytes_per_elem,
+            spec.spec_string(),
+            fam.help
+        );
     }
     println!(
         "\nconfig spec forms: <spec> | <family>:q0,q1,q2,q3 | <spec>,<spec>,<spec>,<spec>\n\
-         schedules: dsq | dsq-<family> | any config spec (static)"
+         schedules: dsq | dsq-<family> | any config spec (static)\n\
+         --stash-state <spec>: keep trainer state packed (sub-byte) between steps"
     );
     Ok(())
 }
@@ -334,6 +365,19 @@ mod tests {
         assert_eq!(s.current().fwd(), FormatSpec::fixed_sr(2));
         assert!(parse_schedule("dsq-fixed").is_ok());
         assert!(parse_schedule("dsq-int8").is_err());
+    }
+
+    #[test]
+    fn stash_state_flag_parses_through_the_registry() {
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec.parse(&["--stash-state".to_string(), "bfp8".to_string()]).unwrap();
+        assert_eq!(opt_format(&a, "stash-state").unwrap(), Some(FormatSpec::bfp(8)));
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec.parse(&[]).unwrap();
+        assert_eq!(opt_format(&a, "stash-state").unwrap(), None);
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec.parse(&["--stash-state".to_string(), "int8".to_string()]).unwrap();
+        assert!(opt_format(&a, "stash-state").is_err());
     }
 
     #[test]

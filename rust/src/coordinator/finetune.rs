@@ -14,7 +14,7 @@ use crate::data::batcher::{assemble_cls, ClsBatch};
 use crate::metrics::LossTracker;
 use crate::model::{checkpoint, ModelState};
 use crate::runtime::{ArtifactManifest, HostTensor, Runtime};
-use crate::schedule::{PrecisionConfig, Schedule};
+use crate::schedule::{FormatSpec, PrecisionConfig, Schedule};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use crate::{Error, Result};
@@ -35,6 +35,9 @@ pub struct FinetuneConfig {
     pub val_batches: usize,
     pub checkpoint: Option<PathBuf>,
     pub init_checkpoint: Option<PathBuf>,
+    /// Hold the tuner state physically packed in this format between
+    /// steps (see `TrainerConfig::stash_format`); `None` = dense f32.
+    pub stash_format: Option<FormatSpec>,
 }
 
 impl FinetuneConfig {
@@ -49,6 +52,7 @@ impl FinetuneConfig {
             val_batches: 4,
             checkpoint: None,
             init_checkpoint: None,
+            stash_format: None,
         }
     }
 }
@@ -121,10 +125,13 @@ impl Finetuner {
             seed: cfg.seed,
         });
         let rt = Runtime::global();
-        let state = match &cfg.init_checkpoint {
+        let mut state = match &cfg.init_checkpoint {
             Some(path) => checkpoint::load_checkpoint(path, &man.cls)?,
             None => ModelState::init(rt, &man, "cls", cfg.seed as i32)?,
         };
+        if let Some(spec) = &cfg.stash_format {
+            state.pack_state(spec)?;
+        }
         Ok(Finetuner { batch: b, seq_len: l, cfg, man, task, state })
     }
 
@@ -193,6 +200,10 @@ impl Finetuner {
                 inputs.push(HostTensor::scalar_f32(lr));
                 let outs = exe.run(&inputs)?;
                 let loss = self.state.absorb_step_output(outs)? as f64;
+                // Re-stash the resident state into packed storage.
+                if let Some(spec) = &self.cfg.stash_format {
+                    self.state.pack_state(spec)?;
+                }
                 tracker.record(self.state.step, loss);
                 match trace.last_mut() {
                     Some((last, n)) if *last == pc => *n += 1,

@@ -21,7 +21,7 @@ use crate::data::{Batch, Batcher, TranslationConfig, TranslationTask, Variant};
 use crate::metrics::{bleu, LossTracker};
 use crate::model::{checkpoint, ModelState};
 use crate::runtime::{ArtifactManifest, HostTensor, Runtime};
-use crate::schedule::{PrecisionConfig, Schedule};
+use crate::schedule::{FormatSpec, PrecisionConfig, Schedule};
 use crate::util::json::Json;
 use crate::{Error, Result};
 
@@ -44,6 +44,14 @@ pub struct TrainerConfig {
     pub init_checkpoint: Option<PathBuf>,
     /// Bounded prefetch depth for the batch generator thread.
     pub prefetch: usize,
+    /// Hold the trainer state (params + Adam moments) physically packed
+    /// in this format between steps, decoding only at the PJRT boundary
+    /// — the coordinator-side stash. Quantizes the resident state every
+    /// step (Direct-Quantized-Training style), so it changes numerics;
+    /// `None` (the default) keeps dense f32 state. Checkpoints written
+    /// from a packed state use the packed v2 format and shrink
+    /// accordingly.
+    pub stash_format: Option<FormatSpec>,
 }
 
 impl TrainerConfig {
@@ -60,6 +68,7 @@ impl TrainerConfig {
             checkpoint: None,
             init_checkpoint: None,
             prefetch: 4,
+            stash_format: None,
         }
     }
 }
@@ -163,10 +172,13 @@ impl Trainer {
             seed: cfg.seed,
         });
         let rt = Runtime::global();
-        let state = match &cfg.init_checkpoint {
+        let mut state = match &cfg.init_checkpoint {
             Some(path) => checkpoint::load_checkpoint(path, &man.nmt)?,
             None => ModelState::init(rt, &man, "nmt", cfg.seed as i32)?,
         };
+        if let Some(spec) = &cfg.stash_format {
+            state.pack_state(spec)?;
+        }
         Ok(Trainer { batcher: Batcher::new(b, s, t), cfg, man, task, state })
     }
 
@@ -293,6 +305,11 @@ impl Trainer {
                 let inputs = self.step_inputs(&batch, pc.as_qcfg(), lr);
                 let outs = exe.run(&inputs)?;
                 let loss = self.state.absorb_step_output(outs)? as f64;
+                // Re-stash: step outputs arrive dense from the artifact;
+                // the resident copy goes back to packed storage.
+                if let Some(spec) = &self.cfg.stash_format {
+                    self.state.pack_state(spec)?;
+                }
                 tracker.record(self.state.step, loss);
                 match trace.last_mut() {
                     Some((last, n)) if *last == pc => *n += 1,

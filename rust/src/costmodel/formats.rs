@@ -35,6 +35,7 @@
 //! `[32,32,32,32]` rows are real 32-bit hardware paths.
 
 use crate::quant::format::{FormatSpec, Rounding};
+use crate::quant::{Codec, BOX, EXP_BITS, PASSTHROUGH_BITS};
 
 /// Fitted BFP MAC constants (DESIGN.md §6).
 pub const BFP_MAC_MUL: f64 = 0.40;
@@ -75,6 +76,61 @@ impl FormatSpec {
                 let (b1, m2) = (b1 as f64, m2 as f64);
                 BFP_MAC_MUL * (b1 * m2) / 1024.0 + BFP_MAC_SHIFT * b1.max(m2) / 32.0
             }
+        }
+    }
+
+    /// Bytes the packed codec *actually* stores for `len` elements with
+    /// minor axis `inner` — the physical counterpart of
+    /// [`FormatSpec::storage_bits`], read straight from the codec's
+    /// layout function so the two cannot be computed from different
+    /// sources.
+    pub fn observed_bytes(&self, len: usize, inner: usize) -> usize {
+        self.packed_len(len, inner)
+    }
+
+    /// Audit the cost model against the codec: assert
+    /// `observed_bytes() ≈ storage_bits() * len / 8` within box-metadata
+    /// rounding. The legitimate gaps, and nothing else:
+    ///
+    /// * widths ≥ 25 quantize as identity, so the codec stores the raw
+    ///   32-bit container (the model's documented convention — "the
+    ///   hardware cost still reflects the container");
+    /// * fixed formats carry one grid byte + bitstream byte-alignment;
+    /// * BFP's modeled `+4` bits/elem is the *fitted* container overhead
+    ///   (amortized exponent + padding), while the codec stores the raw
+    ///   8-bit exponent byte + alignment per box — up to
+    ///   [`BFP_STORAGE_OVERHEAD_BITS`] per element plus 15 bits per box
+    ///   of divergence.
+    ///
+    /// Anything beyond the allowance is a drifted cost model (or a
+    /// broken codec) and returns `Err` with the numbers.
+    pub fn audit_storage(&self, len: usize, inner: usize) -> std::result::Result<(), String> {
+        let observed_bits = self.observed_bytes(len, inner) as f64 * 8.0;
+        // Identity widths (>= 25) store the raw 32-bit container.
+        let container_bits = if self.bits() as f32 >= PASSTHROUGH_BITS {
+            32.0f64.max(self.storage_bits())
+        } else {
+            self.storage_bits()
+        };
+        let modeled_bits = container_bits * len as f64;
+        let allowance = match *self {
+            FormatSpec::Fp32 => 0.0,
+            FormatSpec::Fixed { .. } => 8.0 + 7.0,
+            FormatSpec::Bfp { .. } => {
+                let rows = if inner > 0 { len / inner } else { 0 };
+                let boxes_per_row = inner.div_ceil(BOX);
+                let nboxes = (rows * boxes_per_row) as f64;
+                len as f64 * BFP_STORAGE_OVERHEAD_BITS + nboxes * (EXP_BITS as f64 + 7.0)
+            }
+        };
+        let gap = (observed_bits - modeled_bits).abs();
+        if gap <= allowance {
+            Ok(())
+        } else {
+            Err(format!(
+                "{self}: observed {observed_bits} bits vs modeled {modeled_bits} bits \
+                 for {len} elems (inner {inner}); gap {gap} > allowance {allowance}"
+            ))
         }
     }
 
@@ -159,6 +215,62 @@ mod tests {
                     < FormatSpec::fixed(big).mac_cost(&FormatSpec::fixed(big))
             );
         }
+    }
+
+    #[test]
+    fn storage_model_agrees_with_codec_for_every_registry_format() {
+        // The satellite contract: the cost model can no longer disagree
+        // with the bytes the codec actually stores, beyond box metadata.
+        for spec in crate::quant::registered_specs(&[2, 3, 4, 5, 6, 8, 12, 16, 20, 24, 32]) {
+            for (len, inner) in
+                [(4096usize, 4096usize), (4096, 128), (3 * 100, 100), (2 * 21, 21), (40, 1), (0, 1)]
+            {
+                spec.audit_storage(len, inner).unwrap_or_else(|e| {
+                    panic!("cost model disagrees with codec: {e}");
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn storage_audit_property_over_random_widths() {
+        use crate::util::prop::Prop;
+        Prop::new("storage_bits matches packed_len within box metadata").cases(80).run(
+            |rng, size| {
+                let fam = &crate::quant::FORMAT_REGISTRY
+                    [rng.below(crate::quant::FORMAT_REGISTRY.len() as u32) as usize];
+                let bits = rng.range(fam.min_bits, fam.max_bits + 1);
+                let inner = 1 + rng.below(4 * size + 16) as usize;
+                let rows = 1 + rng.below(8) as usize;
+                (fam.instantiate(bits).unwrap(), rows * inner, inner)
+            },
+            |(spec, len, inner)| spec.audit_storage(*len, *inner),
+        );
+    }
+
+    #[test]
+    fn observed_bytes_exact_anchors() {
+        // fp32 is byte-exact against the model.
+        assert_eq!(FormatSpec::Fp32.observed_bytes(1000, 1000), 4000);
+        // fixed-b: one grid byte + packed lanes.
+        assert_eq!(FormatSpec::fixed(4).observed_bytes(1000, 1000), 1 + 500);
+        assert_eq!(FormatSpec::fixed_sr(3).observed_bytes(8, 8), 1 + 3);
+        // bfp4 full boxes: 9 bytes per 16 elems = 4.5 bits/elem — the
+        // stash DRAM claim, physically.
+        assert_eq!(FormatSpec::bfp(4).observed_bytes(1600, 1600), 100 * 9);
+        let bits_per_elem = FormatSpec::bfp(4).observed_bytes(1600, 1600) as f64 * 8.0 / 1600.0;
+        assert!(bits_per_elem <= FormatSpec::bfp(4).storage_bits());
+        assert!(bits_per_elem < 4.6);
+    }
+
+    #[test]
+    fn storage_audit_catches_a_drifted_model() {
+        // Sanity for the audit itself: a format whose codec stored the
+        // dense container at a sub-byte width would be caught.
+        let gap = (FormatSpec::bfp(2).observed_bytes(4096, 4096) as f64 * 8.0
+            - 32.0 * 4096.0)
+            .abs();
+        assert!(gap > 4096.0 * 8.0, "a dense-container bfp2 must trip the allowance");
     }
 
     #[test]

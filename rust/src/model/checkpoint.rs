@@ -1,5 +1,7 @@
-//! Binary checkpoint format (no serde available; a simple, versioned,
-//! length-prefixed layout):
+//! Binary checkpoint formats (no serde available; simple, versioned,
+//! length-prefixed layouts):
+//!
+//! **v1 — dense f32** (`DSQCKPT1`, written when every tensor is dense):
 //!
 //! ```text
 //! magic   b"DSQCKPT1"
@@ -13,6 +15,17 @@
 //!     f32[...]  row-major data (little-endian)
 //! ```
 //!
+//! **v2 — packed** (`DSQCKPT2`, written when any tensor is packed): the
+//! same framing, but each tensor is a self-describing
+//! [`PackedTensor`] record (versioned header + sub-byte payload; layout
+//! pinned in `quant/packed.rs`). Dense f32 tensors in a mixed state are
+//! written as fp32 packed records (same bytes as v1 data). A bfp4
+//! checkpoint is ~4.5 bits/element — ~0.14x its fp32 equivalent on disk.
+//!
+//! `load_checkpoint` sniffs the magic and reads either version; v2
+//! tensors stay packed in memory (decoded lazily at the PJRT boundary),
+//! so load-then-save reproduces the file bit-for-bit.
+//!
 //! Checkpoints are validated against the artifact manifest on load, so a
 //! checkpoint from a different model config fails loudly instead of
 //! producing garbage.
@@ -21,10 +34,12 @@ use std::io::{Read, Write};
 use std::path::Path;
 
 use crate::model::ModelState;
-use crate::runtime::{HostTensor, ModelManifest};
+use crate::quant::{stash_stream, FormatSpec, PackedTensor};
+use crate::runtime::{HostTensor, ModelManifest, TensorData};
 use crate::{Error, Result};
 
 const MAGIC: &[u8; 8] = b"DSQCKPT1";
+const MAGIC_V2: &[u8; 8] = b"DSQCKPT2";
 
 /// A loaded checkpoint (pre-validation).
 #[derive(Debug)]
@@ -55,9 +70,24 @@ fn read_u64(r: &mut impl Read) -> Result<u64> {
     Ok(u64::from_le_bytes(b))
 }
 
-fn write_tensor(w: &mut impl Write, name: &str, t: &HostTensor) -> Result<()> {
+fn write_name(w: &mut impl Write, name: &str) -> Result<()> {
     write_u32(w, name.len() as u32)?;
     w.write_all(name.as_bytes())?;
+    Ok(())
+}
+
+fn read_name(r: &mut impl Read) -> Result<String> {
+    let name_len = read_u32(r)? as usize;
+    if name_len > 4096 {
+        return Err(Error::Manifest(format!("checkpoint name length {name_len} implausible")));
+    }
+    let mut name_bytes = vec![0u8; name_len];
+    r.read_exact(&mut name_bytes)?;
+    String::from_utf8(name_bytes).map_err(|_| Error::Manifest("checkpoint name not UTF-8".into()))
+}
+
+fn write_tensor(w: &mut impl Write, name: &str, t: &HostTensor) -> Result<()> {
+    write_name(w, name)?;
     write_u32(w, t.shape.len() as u32)?;
     for &d in &t.shape {
         write_u64(w, d as u64)?;
@@ -73,14 +103,7 @@ fn write_tensor(w: &mut impl Write, name: &str, t: &HostTensor) -> Result<()> {
 }
 
 fn read_tensor(r: &mut impl Read) -> Result<(String, HostTensor)> {
-    let name_len = read_u32(r)? as usize;
-    if name_len > 4096 {
-        return Err(Error::Manifest(format!("checkpoint name length {name_len} implausible")));
-    }
-    let mut name_bytes = vec![0u8; name_len];
-    r.read_exact(&mut name_bytes)?;
-    let name = String::from_utf8(name_bytes)
-        .map_err(|_| Error::Manifest("checkpoint name not UTF-8".into()))?;
+    let name = read_name(r)?;
     let ndims = read_u32(r)? as usize;
     if ndims > 16 {
         return Err(Error::Manifest(format!("checkpoint rank {ndims} implausible")));
@@ -97,8 +120,55 @@ fn read_tensor(r: &mut impl Read) -> Result<(String, HostTensor)> {
     Ok((name, HostTensor::f32(shape, data)))
 }
 
-/// Save a model state (names come from the manifest order).
-pub fn save_checkpoint(path: &Path, state: &ModelState, mm: &ModelManifest) -> Result<()> {
+/// How tensors are framed on disk.
+#[derive(Clone, Copy)]
+enum TensorFraming<'a> {
+    /// v1 dense f32 records.
+    Dense,
+    /// v2 packed records. `Some(spec)` additionally packs dense tensors
+    /// into `spec` on the fly — one tensor at a time, so a packed save
+    /// of a dense state never holds a second copy of the whole state.
+    Packed(Option<&'a FormatSpec>),
+}
+
+/// v2 tensor record: name + self-describing packed record.
+/// Already-packed tensors (in the target format, when one is given)
+/// write their payload untouched — bit-identity across save/load/save;
+/// dense tensors pack into `spec` (or ride as raw fp32 records).
+fn write_tensor_v2(
+    w: &mut impl Write,
+    name: &str,
+    t: &HostTensor,
+    spec: Option<&FormatSpec>,
+    step: u64,
+    stream: u64,
+) -> Result<()> {
+    write_name(w, name)?;
+    match (&t.data, spec) {
+        (TensorData::Packed(p), None) => p.write_into(w),
+        (TensorData::Packed(p), Some(s)) if p.spec() == *s => p.write_into(w),
+        _ => {
+            let s = spec.unwrap_or(&FormatSpec::Fp32);
+            match t.pack_stream(s, step, stream)?.data {
+                TensorData::Packed(p) => p.write_into(w),
+                _ => unreachable!("pack_stream() always yields packed data"),
+            }
+        }
+    }
+}
+
+fn read_tensor_v2(r: &mut impl Read) -> Result<(String, HostTensor)> {
+    let name = read_name(r)?;
+    let packed = PackedTensor::read_from(r)?;
+    Ok((name, HostTensor::packed(packed)))
+}
+
+fn save_with(
+    path: &Path,
+    state: &ModelState,
+    mm: &ModelManifest,
+    framing: TensorFraming<'_>,
+) -> Result<()> {
     ModelState::validate_against(&state.params, mm)?;
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
@@ -106,13 +176,28 @@ pub fn save_checkpoint(path: &Path, state: &ModelState, mm: &ModelManifest) -> R
     let tmp = path.with_extension("tmp");
     {
         let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
-        w.write_all(MAGIC)?;
+        w.write_all(match framing {
+            TensorFraming::Dense => MAGIC,
+            TensorFraming::Packed(_) => MAGIC_V2,
+        })?;
         write_u64(&mut w, state.step)?;
         write_u32(&mut w, 3)?;
-        for group in [&state.params, &state.m, &state.v] {
+        for (g, group) in [&state.params, &state.m, &state.v].into_iter().enumerate() {
             write_u32(&mut w, group.len() as u32)?;
-            for (t, spec) in group.iter().zip(&mm.params) {
-                write_tensor(&mut w, &spec.name, t)?;
+            for (i, (t, spec)) in group.iter().zip(&mm.params).enumerate() {
+                match framing {
+                    TensorFraming::Dense => write_tensor(&mut w, &spec.name, t)?,
+                    // Same (step, stream) scheme as ModelState::pack_state,
+                    // so on-the-fly packing writes the identical file.
+                    TensorFraming::Packed(ps) => write_tensor_v2(
+                        &mut w,
+                        &spec.name,
+                        t,
+                        ps,
+                        state.step,
+                        stash_stream(g, i),
+                    )?,
+                }
             }
         }
         w.flush()?;
@@ -121,14 +206,40 @@ pub fn save_checkpoint(path: &Path, state: &ModelState, mm: &ModelManifest) -> R
     Ok(())
 }
 
-/// Load and validate a checkpoint against the manifest.
+/// Save a model state (names come from the manifest order). Dense states
+/// write the v1 format; states holding packed tensors write v2, keeping
+/// each tensor's exact payload (so save(load(p)) == p byte-for-byte).
+pub fn save_checkpoint(path: &Path, state: &ModelState, mm: &ModelManifest) -> Result<()> {
+    let framing =
+        if state.is_packed() { TensorFraming::Packed(None) } else { TensorFraming::Dense };
+    save_with(path, state, mm, framing)
+}
+
+/// Save with every tensor packed into `spec` (quantizing dense tensors
+/// on the fly, one at a time; tensors already packed in `spec` keep
+/// their payload). This is how a low-bit checkpoint shrinks on disk
+/// without the trainer itself holding packed state — and without ever
+/// materializing a second copy of it.
+pub fn save_checkpoint_packed(
+    path: &Path,
+    state: &ModelState,
+    mm: &ModelManifest,
+    spec: &FormatSpec,
+) -> Result<()> {
+    save_with(path, state, mm, TensorFraming::Packed(Some(spec)))
+}
+
+/// Load and validate a checkpoint against the manifest. v2 tensors stay
+/// packed in memory; call [`ModelState::unpack_state`] to force dense.
 pub fn load_checkpoint(path: &Path, mm: &ModelManifest) -> Result<ModelState> {
     let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        return Err(Error::Manifest(format!("{path:?}: not a DSQ checkpoint")));
-    }
+    let packed = match &magic {
+        m if m == MAGIC => false,
+        m if m == MAGIC_V2 => true,
+        _ => return Err(Error::Manifest(format!("{path:?}: not a DSQ checkpoint"))),
+    };
     let step = read_u64(&mut r)?;
     let groups = read_u32(&mut r)?;
     if groups != 3 {
@@ -145,7 +256,8 @@ pub fn load_checkpoint(path: &Path, mm: &ModelManifest) -> Result<ModelState> {
         }
         let mut group = Vec::with_capacity(count);
         for spec in &mm.params {
-            let (name, t) = read_tensor(&mut r)?;
+            let (name, t) =
+                if packed { read_tensor_v2(&mut r)? } else { read_tensor(&mut r)? };
             if name != spec.name {
                 return Err(Error::Manifest(format!(
                     "checkpoint tensor '{name}' where manifest expects '{}' \
@@ -212,6 +324,56 @@ mod tests {
     }
 
     #[test]
+    fn dense_state_still_writes_v1_magic() {
+        // Bit-compat: a dense save must remain readable by (and byte-
+        // compatible with) the pre-packed format.
+        let path = tmpfile("v1magic.bin");
+        save_checkpoint(&path, &state(), &mm()).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], b"DSQCKPT1");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn packed_roundtrip_stays_packed() {
+        let path = tmpfile("packed-roundtrip.bin");
+        let spec = FormatSpec::bfp(4);
+        let mut st = state();
+        st.pack_state(&spec).unwrap();
+        save_checkpoint(&path, &st, &mm()).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], b"DSQCKPT2");
+        let back = load_checkpoint(&path, &mm()).unwrap();
+        assert!(back.is_packed());
+        assert_eq!(back.step, 42);
+        assert_eq!(back.params[0], st.params[0]);
+        assert_eq!(back.m[1], st.m[1]);
+        // Saving the loaded state reproduces the file byte-for-byte.
+        let path2 = tmpfile("packed-roundtrip2.bin");
+        save_checkpoint(&path2, &back, &mm()).unwrap();
+        assert_eq!(bytes, std::fs::read(&path2).unwrap());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn save_checkpoint_packed_quantizes_dense_state() {
+        let path = tmpfile("packed-fromdense.bin");
+        let spec = FormatSpec::fixed(8);
+        let st = state();
+        save_checkpoint_packed(&path, &st, &mm(), &spec).unwrap();
+        let back = load_checkpoint(&path, &mm()).unwrap();
+        let dense = {
+            let mut b = back.clone();
+            b.unpack_state();
+            b
+        };
+        let want = crate::quant::fixed_quantize(st.params[1].as_f32().unwrap(), 8.0);
+        assert_eq!(dense.params[1].as_f32().unwrap(), want.as_slice());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn rejects_wrong_manifest() {
         let path = tmpfile("wrongman.bin");
         save_checkpoint(&path, &state(), &mm()).unwrap();
@@ -219,6 +381,16 @@ mod tests {
         other.params[0].shape = vec![3, 2];
         assert!(load_checkpoint(&path, &other).is_err());
         other.params[0] = ParamSpec { name: "z.w".into(), shape: vec![2, 3] };
+        assert!(load_checkpoint(&path, &other).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_manifest_packed() {
+        let path = tmpfile("wrongman2.bin");
+        save_checkpoint_packed(&path, &state(), &mm(), &FormatSpec::bfp(4)).unwrap();
+        let mut other = mm();
+        other.params[0].shape = vec![3, 2];
         assert!(load_checkpoint(&path, &other).is_err());
         std::fs::remove_file(&path).ok();
     }

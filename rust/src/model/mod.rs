@@ -1,11 +1,19 @@
 //! Host-side model state: parameters + Adam moments as flat tensor
 //! lists (the artifact calling convention), plus a binary checkpoint
 //! format.
+//!
+//! State may be held *packed* ([`ModelState::pack_state`]): every tensor
+//! stashed in its format's physical bit layout between steps, decoded
+//! only at the PJRT boundary — the coordinator-side mirror of the
+//! paper's stashing dataflow (and of Direct Quantized Training's
+//! low-bit-resident weights). Packed state round-trips through v2
+//! checkpoints bit-identically.
 
 pub mod checkpoint;
 
-pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
+pub use checkpoint::{load_checkpoint, save_checkpoint, save_checkpoint_packed, Checkpoint};
 
+use crate::quant::{stash_stream, FormatSpec};
 use crate::runtime::{ArtifactManifest, HostTensor, ModelManifest, Runtime};
 use crate::{Error, Result};
 
@@ -30,8 +38,9 @@ impl ModelState {
             other => return Err(Error::Config(format!("unknown model '{other}'"))),
         };
         Self::validate_against(&params, mm)?;
-        let zeros: Vec<HostTensor> =
-            mm.params.iter().map(|s| HostTensor::zeros(&s.shape)).collect();
+        // Moments inherit each parameter's dtype: for a packed state the
+        // zeros are built directly in the bit layout, no encode pass.
+        let zeros: Vec<HostTensor> = params.iter().map(HostTensor::zeros_like).collect();
         Ok(ModelState { params, m: zeros.clone(), v: zeros, step: 0 })
     }
 
@@ -78,6 +87,47 @@ impl ModelState {
     /// Total parameter count.
     pub fn numel(&self) -> usize {
         self.params.iter().map(HostTensor::len).sum()
+    }
+
+    /// Stash the whole state in `spec`'s packed bit layout. Stochastic
+    /// formats draw their rounding stream from the current step and a
+    /// per-tensor [`stash_stream`] id, so a given (state, step) packs
+    /// bit-identically. Tensors already packed in `spec` are left
+    /// untouched (bit-identity across checkpoint reload).
+    pub fn pack_state(&mut self, spec: &FormatSpec) -> Result<()> {
+        let step = self.step;
+        for (g, group) in [&mut self.params, &mut self.m, &mut self.v].into_iter().enumerate() {
+            for (i, t) in group.iter_mut().enumerate() {
+                *t = t.pack_stream(spec, step, stash_stream(g, i))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode every packed tensor back to dense f32 (no-op when dense).
+    pub fn unpack_state(&mut self) {
+        for group in [&mut self.params, &mut self.m, &mut self.v] {
+            for t in group.iter_mut() {
+                *t = t.unpack();
+            }
+        }
+    }
+
+    /// True if any tensor is held in packed storage.
+    pub fn is_packed(&self) -> bool {
+        [&self.params, &self.m, &self.v]
+            .iter()
+            .any(|g| g.iter().any(|t| matches!(t.data, crate::runtime::TensorData::Packed(_))))
+    }
+
+    /// Bytes the state occupies at rest (packed tensors count their
+    /// payload — the number the DRAM-traffic claims are about).
+    pub fn storage_bytes(&self) -> usize {
+        [&self.params, &self.m, &self.v]
+            .iter()
+            .flat_map(|g| g.iter())
+            .map(HostTensor::storage_bytes)
+            .sum()
     }
 }
 
@@ -146,5 +196,55 @@ mod tests {
     #[test]
     fn numel() {
         assert_eq!(fake_state().numel(), 7);
+    }
+
+    #[test]
+    fn pack_state_roundtrips_and_shrinks() {
+        let spec = FormatSpec::bfp(4);
+        let mut st = ModelState {
+            params: vec![HostTensor::f32(vec![4, 16], (0..64).map(|x| x as f32 * 0.3).collect())],
+            m: vec![HostTensor::zeros(&[4, 16])],
+            v: vec![HostTensor::zeros(&[4, 16])],
+            step: 5,
+        };
+        let dense_bytes = st.storage_bytes();
+        assert!(!st.is_packed());
+        st.pack_state(&spec).unwrap();
+        assert!(st.is_packed());
+        assert!(
+            st.storage_bytes() * 4 < dense_bytes,
+            "bfp4 state must be sub-byte: {} vs {dense_bytes}",
+            st.storage_bytes()
+        );
+        // Packing a packed state is a no-op (bit-identity across reload).
+        let before = st.params[0].clone();
+        st.pack_state(&spec).unwrap();
+        assert_eq!(st.params[0], before);
+        // Decoding gives the quantized grid values.
+        st.unpack_state();
+        assert!(!st.is_packed());
+        let got = st.params[0].as_f32().unwrap().to_vec();
+        let want =
+            crate::quant::bfp_quantize(&(0..64).map(|x| x as f32 * 0.3).collect::<Vec<_>>(), 16, 4.0);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn absorb_then_repack_keeps_shapes_valid() {
+        let mm = fake_manifest_model();
+        let mut st = fake_state();
+        st.pack_state(&FormatSpec::fixed(8)).unwrap();
+        ModelState::validate_against(&st.params, &mm).unwrap();
+        // Step outputs arrive dense from the artifact and repack cleanly.
+        let mut outs = Vec::new();
+        for v in [1.0f32, 2.0, 3.0] {
+            outs.push(HostTensor::f32(vec![2, 2], vec![v; 4]));
+            outs.push(HostTensor::f32(vec![3], vec![v; 3]));
+        }
+        outs.push(HostTensor::scalar_f32(0.5));
+        st.absorb_step_output(outs).unwrap();
+        st.pack_state(&FormatSpec::fixed(8)).unwrap();
+        assert!(st.is_packed());
+        ModelState::validate_against(&st.params, &mm).unwrap();
     }
 }

@@ -9,7 +9,11 @@
 //! it (`slot_qcfg`), and its canonical spec string (`"bfp4"`,
 //! `"fixed16"`, `"fixed8sr"`, `"fp32"`). New formats register in
 //! [`format::FORMAT_REGISTRY`]; the raw kernels below are its execution
-//! arms.
+//! arms. The [`packed`] module adds the physical side of the surface:
+//! [`packed::Codec`] encodes a tensor into the format's true bit layout
+//! (`decode(encode(x)) == quantize(x)`, bit-exact), which is what the
+//! runtime's `TensorData::Packed` arm, the v2 checkpoints, and the cost
+//! model's `observed_bytes()` audit all carry.
 //!
 //! Kernel semantics are bit-identical to `python/compile/kernels/ref.py`
 //! (and therefore to the Pallas kernels and the AOT artifacts — asserted
@@ -34,10 +38,12 @@
 pub mod bfp;
 pub mod fixed;
 pub mod format;
+pub mod packed;
 
 pub use bfp::{bfp_dequantize_box_stats, bfp_quantize, bfp_quantize_into};
 pub use fixed::{fixed_quantize, fixed_quantize_into, fixed_quantize_sr, fixed_quantize_sr_into};
 pub use format::{family, registered_specs, FormatFamily, FormatSpec, Rounding, FORMAT_REGISTRY};
+pub use packed::{same_f32, stash_stream, Codec, PackedTensor, PACKED_VERSION};
 
 /// Bounding-box size (elements sharing one exponent), paper §4 / MSFP.
 pub const BOX: usize = 16;

@@ -1,0 +1,825 @@
+//! `PackedTensor` — the physical byte layout of every registered
+//! [`FormatSpec`], making stash storage real instead of priced-only.
+//!
+//! Until this module existed, `FormatSpec::storage_bits()` *priced*
+//! 4-bit DRAM traffic while every stashed tensor remained a dense
+//! `Vec<f32>`. The [`Codec`] trait closes that gap: `encode` packs a
+//! tensor into the format's true bit layout and [`PackedTensor::decode`]
+//! recovers f32 — with the invariant (property-tested in this module)
+//!
+//! ```text
+//! decode(encode(x)) == quantize(x)      // per f32 ==; NaN ≡ NaN
+//! ```
+//!
+//! so a packed stash is indistinguishable from a fake-quantized dense
+//! one, except it actually occupies `storage_bits()`-scale bytes. Two
+//! deliberate non-bit-exactnesses, both invisible to `==`: NaN payloads
+//! canonicalize to one sentinel NaN, and a quantized `-0.0` decodes as
+//! `+0.0` (the integer lane has a single zero).
+//!
+//! ## Payload layouts (pinned by the golden-bytes tests)
+//!
+//! * **fp32** — raw little-endian f32, 4 bytes/element.
+//! * **fixed / fixedsr, width < 25** — one grid byte (biased shared
+//!   exponent `e + 127`; `0` marks the all-zero tensor), then
+//!   two's-complement mantissa lanes of `bits` each, packed LSB-first in
+//!   row-major element order. The lane value `-2^(bits-1)` (unused by
+//!   the quantizer, which clamps to `±(2^(bits-1)-1)`) is the NaN
+//!   sentinel.
+//! * **bfp, width < 25** — per box of [`BOX`] elements (boxes never span
+//!   rows of `inner`, the last box of a row may be short): one biased
+//!   shared-exponent byte (`0` = zero box), then that box's mantissa
+//!   lanes, byte-aligned per box so a future mmap'd stash spill can seek
+//!   to any box.
+//! * **width ≥ 25** ([`PASSTHROUGH_BITS`]) — the quantizer is an exact
+//!   identity on f32, so the payload is the raw 32-bit container (a
+//!   sub-32-bit lane could not round-trip arbitrary f32).
+//!
+//! The serialized record ([`PackedTensor::write_into`]) prefixes the
+//! payload with a versioned self-describing header:
+//!
+//! ```text
+//! u8   PACKED_VERSION (1)
+//! u8   family tag (0 fp32, 1 fixed, 2 fixedsr, 3 bfp)
+//! u8   bit width
+//! u8   flags (0; reserved)
+//! u32  inner (minor-axis length, LE)
+//! u32  ndims, then u64 dims... (LE)
+//! u64  payload byte length (LE)
+//! ...  payload
+//! ```
+//!
+//! Checkpoints (`model/checkpoint.rs` v2) and the runtime's
+//! `TensorData::Packed` arm both carry this record, so the on-disk and
+//! in-memory forms are the same bytes.
+
+use std::io::{Read, Write};
+
+use crate::{Error, Result};
+
+use super::format::{FormatSpec, Rounding};
+use super::{ftz, quant_grid, BOX, EXP_MAX, EXP_MIN, PASSTHROUGH_BITS};
+
+/// Version byte of the packed record header.
+pub const PACKED_VERSION: u8 = 1;
+
+/// A tensor stored in its format's physical bit layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedTensor {
+    spec: FormatSpec,
+    shape: Vec<usize>,
+    /// Minor-axis length the box-based formats quantized against.
+    inner: usize,
+    payload: Vec<u8>,
+}
+
+/// The encode half of the codec, implemented on [`FormatSpec`] so the
+/// same descriptor that quantizes and prices a format also packs it.
+pub trait Codec {
+    /// Pack `x` (row-major, `shape`-shaped, minor axis `inner`) into the
+    /// format's bit layout. Stochastic formats use the `(step, stream)`
+    /// rounding stream — the same parameters
+    /// [`FormatSpec::quantize_into_stream`] takes, so
+    /// `encode_stream(x, ...).decode()` reproduces that exact call.
+    fn encode_stream(
+        &self,
+        x: &[f32],
+        shape: &[usize],
+        inner: usize,
+        step: u64,
+        stream: u64,
+    ) -> PackedTensor;
+
+    /// [`Codec::encode_stream`] at the step-0 stream (matching
+    /// [`FormatSpec::quantize_into`]).
+    fn encode(&self, x: &[f32], shape: &[usize], inner: usize) -> PackedTensor {
+        self.encode_stream(x, shape, inner, 0, 0)
+    }
+
+    /// Exact payload size in bytes for a tensor of `len` elements with
+    /// minor axis `inner` — a pure layout function of the format, never
+    /// of the data (so the cost model can audit it; see
+    /// `FormatSpec::observed_bytes`).
+    fn packed_len(&self, len: usize, inner: usize) -> usize;
+}
+
+/// True when the format's quantizer is an exact identity on f32 and the
+/// payload must therefore be the raw 32-bit container.
+fn is_passthrough(spec: &FormatSpec) -> bool {
+    matches!(*spec, FormatSpec::Fp32) || spec.bits() as f32 >= PASSTHROUGH_BITS
+}
+
+/// Mantissa lane width in bits (only meaningful for non-passthrough).
+fn lane_bits(spec: &FormatSpec) -> u32 {
+    spec.bits()
+}
+
+/// NaN sentinel for a `bits`-wide two's-complement lane: the one value
+/// (`-2^(bits-1)`) the quantizer's `±(2^(bits-1)-1)` clamp never emits.
+fn nan_sentinel(bits: u32) -> u32 {
+    1u32 << (bits - 1)
+}
+
+// ---------------------------------------------------------------------
+// Bit-stream helpers (LSB-first, little-endian byte order).
+
+struct BitWriter<'a> {
+    out: &'a mut Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitWriter<'a> {
+    fn new(out: &'a mut Vec<u8>) -> Self {
+        BitWriter { out, acc: 0, nbits: 0 }
+    }
+
+    /// Append the low `width` bits of `value` (width <= 24).
+    fn push(&mut self, value: u32, width: u32) {
+        self.acc |= ((value as u64) & ((1u64 << width) - 1)) << self.nbits;
+        self.nbits += width;
+        while self.nbits >= 8 {
+            self.out.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Pad the tail to a byte boundary with zero bits.
+    fn align(&mut self) {
+        if self.nbits > 0 {
+            self.out.push(self.acc as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+    }
+}
+
+struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    fn take(&mut self, width: u32) -> u32 {
+        while self.nbits < width {
+            self.acc |= (self.buf[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        let v = (self.acc & ((1u64 << width) - 1)) as u32;
+        self.acc >>= width;
+        self.nbits -= width;
+        v
+    }
+
+    /// Drop any buffered sub-byte tail (the writer's `align` padding).
+    fn align(&mut self) {
+        self.acc = 0;
+        self.nbits = 0;
+    }
+}
+
+/// Sign-extend a `bits`-wide two's-complement lane to i32.
+fn sign_extend(raw: u32, bits: u32) -> i32 {
+    let sign = 1u32 << (bits - 1);
+    (raw ^ sign).wrapping_sub(sign) as i32
+}
+
+/// One quantized value -> lane (integer magnitude on the `step` grid, or
+/// the NaN sentinel). `q / step` is exact: q was produced as
+/// `mag * step` with `|mag| <= 2^23` and a power-of-two step.
+fn lane_of(q: f32, step: f32, bits: u32) -> u32 {
+    if q.is_nan() {
+        nan_sentinel(bits)
+    } else {
+        (q / step) as i32 as u32
+    }
+}
+
+/// Lane -> f32 on the `step` grid.
+fn value_of(raw: u32, step: f32, bits: u32) -> f32 {
+    if raw == nan_sentinel(bits) {
+        f32::NAN
+    } else {
+        sign_extend(raw, bits) as f32 * step
+    }
+}
+
+/// Biased shared-exponent byte: 0 marks a zero tensor/box, else
+/// `e + 127` for the clamped exponent `e` in `[EXP_MIN, EXP_MAX]`.
+fn exp_byte(amax: f32, bits: u32) -> u8 {
+    if amax <= 0.0 {
+        0
+    } else {
+        let (e, _, _) = quant_grid(amax, bits as f32);
+        (e + 127) as u8
+    }
+}
+
+/// Recover the grid step from a biased exponent byte (byte != 0).
+fn step_of_exp_byte(b: u8, bits: u32) -> f32 {
+    let e = b as i32 - 127;
+    super::pow2((e - bits as i32 + 2).clamp(EXP_MIN, EXP_MAX))
+}
+
+fn raw_f32_bytes(x: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(x.len() * 4);
+    for &v in x {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+impl Codec for FormatSpec {
+    fn encode_stream(
+        &self,
+        x: &[f32],
+        shape: &[usize],
+        inner: usize,
+        step: u64,
+        stream: u64,
+    ) -> PackedTensor {
+        assert_eq!(shape.iter().product::<usize>(), x.len(), "shape/data mismatch");
+        assert!(
+            inner > 0 && x.len() % inner == 0,
+            "len {} not a multiple of inner {inner}",
+            x.len()
+        );
+        let payload = if is_passthrough(self) {
+            raw_f32_bytes(x)
+        } else {
+            // Quantize through the format's own kernel, then recover the
+            // integer magnitudes exactly (q = mag * step with a
+            // power-of-two step). Duplicating the element rule here
+            // would invite drift; dividing cannot.
+            let mut q = x.to_vec();
+            self.quantize_into_stream(&mut q, inner, step, stream);
+            let bits = lane_bits(self);
+            let mut out = Vec::with_capacity(self.packed_len(x.len(), inner));
+            match *self {
+                FormatSpec::Fixed { .. } => {
+                    let amax = x.iter().fold(0.0f32, |a, &v| a.max(ftz(v.abs())));
+                    let eb = exp_byte(amax, bits);
+                    out.push(eb);
+                    let gstep = if eb == 0 { 1.0 } else { step_of_exp_byte(eb, bits) };
+                    let mut w = BitWriter::new(&mut out);
+                    for &qi in &q {
+                        w.push(lane_of(qi, gstep, bits), bits);
+                    }
+                    w.align();
+                }
+                FormatSpec::Bfp { .. } => {
+                    for (row, qrow) in x.chunks(inner).zip(q.chunks(inner)) {
+                        for (boxed, qboxed) in row.chunks(BOX).zip(qrow.chunks(BOX)) {
+                            let amax =
+                                boxed.iter().fold(0.0f32, |a, &v| a.max(ftz(v.abs())));
+                            let eb = exp_byte(amax, bits);
+                            out.push(eb);
+                            let gstep =
+                                if eb == 0 { 1.0 } else { step_of_exp_byte(eb, bits) };
+                            let mut w = BitWriter::new(&mut out);
+                            for &qi in qboxed {
+                                w.push(lane_of(qi, gstep, bits), bits);
+                            }
+                            w.align();
+                        }
+                    }
+                }
+                FormatSpec::Fp32 => unreachable!("fp32 is passthrough"),
+            }
+            out
+        };
+        debug_assert_eq!(payload.len(), self.packed_len(x.len(), inner));
+        PackedTensor { spec: *self, shape: shape.to_vec(), inner, payload }
+    }
+
+    fn packed_len(&self, len: usize, inner: usize) -> usize {
+        assert!(inner > 0 && len % inner == 0, "len {len} not a multiple of inner {inner}");
+        if is_passthrough(self) {
+            return 4 * len;
+        }
+        let bits = lane_bits(self) as usize;
+        match *self {
+            FormatSpec::Fixed { .. } => 1 + (bits * len).div_ceil(8),
+            FormatSpec::Bfp { .. } => {
+                let rows = len / inner;
+                let full = inner / BOX;
+                let rem = inner % BOX;
+                let per_row = full * (1 + (bits * BOX).div_ceil(8))
+                    + if rem > 0 { 1 + (bits * rem).div_ceil(8) } else { 0 };
+                rows * per_row
+            }
+            FormatSpec::Fp32 => unreachable!("fp32 is passthrough"),
+        }
+    }
+}
+
+impl PackedTensor {
+    pub fn spec(&self) -> FormatSpec {
+        self.spec
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn inner(&self) -> usize {
+        self.inner
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The packed payload (no header).
+    pub fn payload(&self) -> &[u8] {
+        &self.payload
+    }
+
+    /// Payload size in bytes — the physical counterpart of
+    /// `storage_bits() * len / 8`.
+    pub fn packed_len(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// On-disk record size: header + payload.
+    pub fn record_len(&self) -> usize {
+        8 + 4 + 8 * self.shape.len() + 8 + self.payload.len()
+    }
+
+    /// All-zero packed tensor, built directly in the bit layout (no
+    /// quantize/encode round trip): every layout zero-fills to the zero
+    /// tensor (grid marker 0, zero lanes, zero f32 words).
+    pub fn zeros(spec: FormatSpec, shape: &[usize], inner: usize) -> PackedTensor {
+        let len = shape.iter().product();
+        PackedTensor {
+            spec,
+            shape: shape.to_vec(),
+            inner,
+            payload: vec![0u8; spec.packed_len(len, inner)],
+        }
+    }
+
+    /// Unpack to dense f32 — `==` to `spec.quantize(...)` of the tensor
+    /// that was encoded (NaN payloads canonicalized, `-0.0` decodes as
+    /// `+0.0`; see the module docs).
+    pub fn decode(&self) -> Vec<f32> {
+        let len = self.len();
+        if is_passthrough(&self.spec) {
+            return self
+                .payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+        }
+        let bits = lane_bits(&self.spec);
+        let mut out = Vec::with_capacity(len);
+        match self.spec {
+            FormatSpec::Fixed { .. } => {
+                let eb = self.payload[0];
+                let mut r = BitReader::new(&self.payload[1..]);
+                if eb == 0 {
+                    out.resize(len, 0.0);
+                } else {
+                    let step = step_of_exp_byte(eb, bits);
+                    for _ in 0..len {
+                        out.push(value_of(r.take(bits), step, bits));
+                    }
+                }
+            }
+            FormatSpec::Bfp { .. } => {
+                let mut pos = 0usize;
+                let rows = len / self.inner;
+                for _ in 0..rows {
+                    let mut left = self.inner;
+                    while left > 0 {
+                        let blen = left.min(BOX);
+                        let eb = self.payload[pos];
+                        pos += 1;
+                        let lane_bytes = (bits as usize * blen).div_ceil(8);
+                        let mut r = BitReader::new(&self.payload[pos..pos + lane_bytes]);
+                        if eb == 0 {
+                            out.resize(out.len() + blen, 0.0);
+                        } else {
+                            let step = step_of_exp_byte(eb, bits);
+                            for _ in 0..blen {
+                                out.push(value_of(r.take(bits), step, bits));
+                            }
+                        }
+                        r.align();
+                        pos += lane_bytes;
+                        left -= blen;
+                    }
+                }
+            }
+            FormatSpec::Fp32 => unreachable!("fp32 is passthrough"),
+        }
+        out
+    }
+
+    /// Serialize the versioned record (header layout in the module docs).
+    pub fn write_into(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&[PACKED_VERSION, codec_tag(&self.spec), self.spec.bits() as u8, 0])?;
+        w.write_all(&(self.inner as u32).to_le_bytes())?;
+        w.write_all(&(self.shape.len() as u32).to_le_bytes())?;
+        for &d in &self.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        w.write_all(&(self.payload.len() as u64).to_le_bytes())?;
+        w.write_all(&self.payload)?;
+        Ok(())
+    }
+
+    /// Deserialize + validate a record written by [`Self::write_into`].
+    pub fn read_from(r: &mut impl Read) -> Result<PackedTensor> {
+        let mut head = [0u8; 4];
+        r.read_exact(&mut head)?;
+        let [version, tag, bits, flags] = head;
+        if version != PACKED_VERSION {
+            return Err(Error::Manifest(format!(
+                "packed tensor version {version}, expected {PACKED_VERSION}"
+            )));
+        }
+        if flags != 0 {
+            return Err(Error::Manifest(format!("unknown packed-tensor flags {flags:#x}")));
+        }
+        let spec = spec_from_tag(tag, bits as u32)?;
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let inner = u32::from_le_bytes(b4) as usize;
+        r.read_exact(&mut b4)?;
+        let ndims = u32::from_le_bytes(b4) as usize;
+        if ndims > 16 {
+            return Err(Error::Manifest(format!("packed tensor rank {ndims} implausible")));
+        }
+        let mut shape = Vec::with_capacity(ndims);
+        let mut b8 = [0u8; 8];
+        for _ in 0..ndims {
+            r.read_exact(&mut b8)?;
+            shape.push(u64::from_le_bytes(b8) as usize);
+        }
+        let len: usize = shape.iter().product();
+        if inner == 0 || len % inner != 0 {
+            return Err(Error::Manifest(format!(
+                "packed tensor len {len} not a multiple of inner {inner}"
+            )));
+        }
+        r.read_exact(&mut b8)?;
+        let plen = u64::from_le_bytes(b8) as usize;
+        if plen != spec.packed_len(len, inner) {
+            return Err(Error::Manifest(format!(
+                "packed payload {plen} B, {spec} layout needs {} B for {len} elems",
+                spec.packed_len(len, inner)
+            )));
+        }
+        let mut payload = vec![0u8; plen];
+        r.read_exact(&mut payload)?;
+        Ok(PackedTensor { spec, shape, inner, payload })
+    }
+}
+
+/// Family tag byte of the record header.
+fn codec_tag(spec: &FormatSpec) -> u8 {
+    match *spec {
+        FormatSpec::Fp32 => 0,
+        FormatSpec::Fixed { rounding: Rounding::Nearest, .. } => 1,
+        FormatSpec::Fixed { rounding: Rounding::Stochastic, .. } => 2,
+        FormatSpec::Bfp { .. } => 3,
+    }
+}
+
+fn spec_from_tag(tag: u8, bits: u32) -> Result<FormatSpec> {
+    let bad = |msg: String| Error::Manifest(msg);
+    match tag {
+        0 if bits == 32 => Ok(FormatSpec::Fp32),
+        0 => Err(bad(format!("fp32 packed record with width {bits}"))),
+        1 | 2 | 3 if !(2..=32).contains(&bits) => {
+            Err(bad(format!("packed width {bits} out of [2,32]")))
+        }
+        1 => Ok(FormatSpec::Fixed { bits, rounding: Rounding::Nearest }),
+        2 => Ok(FormatSpec::Fixed { bits, rounding: Rounding::Stochastic }),
+        3 => Ok(FormatSpec::Bfp { bits }),
+        other => Err(bad(format!("unknown packed family tag {other}"))),
+    }
+}
+
+/// Deterministic per-tensor SR stream id used by the state-stash layers
+/// (checkpoints, coordinator): group index in the high word, tensor
+/// index in the low, so every tensor of a model state decorrelates.
+pub fn stash_stream(group: usize, index: usize) -> u64 {
+    ((group as u64) << 32) | index as u64
+}
+
+/// `a == b` with NaN ≡ NaN (the codec canonicalizes NaN payloads, and
+/// `quantize` propagates them — both are "the same quantized NaN").
+/// `==` already identifies `-0.0` with `+0.0`, the codec's other
+/// canonicalization.
+pub fn same_f32(a: f32, b: f32) -> bool {
+    a == b || (a.is_nan() && b.is_nan())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{registered_specs, FORMAT_REGISTRY};
+    use crate::util::prop::{gen_f32s, Prop};
+    use crate::util::rng::Pcg32;
+
+    /// Round-trip check: decode(encode(x)) must be exactly quantize(x)
+    /// under the same rounding stream.
+    fn assert_roundtrip(spec: &FormatSpec, x: &[f32], shape: &[usize], inner: usize) {
+        for (step, stream) in [(0u64, 0u64), (7, 3)] {
+            let packed = spec.encode_stream(x, shape, inner, step, stream);
+            assert_eq!(packed.packed_len(), spec.packed_len(x.len(), inner), "{spec}");
+            let got = packed.decode();
+            let mut want = x.to_vec();
+            spec.quantize_into_stream(&mut want, inner, step, stream);
+            assert_eq!(got.len(), want.len());
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    same_f32(g, w),
+                    "{spec} (step {step}, stream {stream}): elem {i}: decoded {g}, quantized {w} (x={})",
+                    x[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_known_fixed4() {
+        // amax 4.0 -> e = 2, step = 1, mags [4, 1, -2, 0].
+        let x = vec![4.0f32, 1.3, -2.5, 0.4];
+        let p = FormatSpec::fixed(4).encode(&x, &[4], 4);
+        assert_eq!(p.decode(), vec![4.0, 1.0, -2.0, 0.0]);
+        assert_eq!(p.payload(), &[0x81, 0x14, 0x0E]);
+    }
+
+    #[test]
+    fn roundtrip_known_bfp4() {
+        let mut x = vec![0.0f32; 16];
+        x[..4].copy_from_slice(&[1.0, 0.3, -0.6, 0.125]);
+        let p = FormatSpec::bfp(4).encode(&x, &[16], 16);
+        let q = p.decode();
+        assert_eq!(&q[..4], &[1.0, 0.25, -0.5, 0.0]);
+        // exp byte 0x7F (e = 0), lanes [4, 1, -2, 0, 0, ...].
+        assert_eq!(p.payload(), &[0x7F, 0x14, 0x0E, 0, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn roundtrip_property_every_registered_format() {
+        Prop::new("decode(encode(x)) == quantize(x) for every registered format")
+            .cases(120)
+            .run(
+                |rng, size| {
+                    let fam = &FORMAT_REGISTRY[rng.below(FORMAT_REGISTRY.len() as u32) as usize];
+                    let bits = rng.range(fam.min_bits, fam.max_bits + 1);
+                    let spec = fam.instantiate(bits).unwrap();
+                    // Random rank-2 shape; inner is the minor axis, often
+                    // not a multiple of the BFP box.
+                    let rows = 1 + rng.below(3) as usize;
+                    let inner = 1 + rng.below(3 * size + 40) as usize;
+                    let mut x = gen_f32s(rng, rows * inner, 9.0);
+                    // Sprinkle the special values the kernels must agree on.
+                    for _ in 0..rng.below(4) {
+                        let i = rng.below(x.len() as u32) as usize;
+                        x[i] = *rng.choice(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0]);
+                    }
+                    (spec, x, rows, inner)
+                },
+                |(spec, x, rows, inner)| {
+                    let shape = [*rows, *inner];
+                    let packed = spec.encode(x, &shape, *inner);
+                    let got = packed.decode();
+                    let want = spec.quantize(x, *inner);
+                    for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                        if !same_f32(g, w) {
+                            return Err(format!(
+                                "{spec}: elem {i}: decoded {g}, quantized {w} (x={})",
+                                x[i]
+                            ));
+                        }
+                    }
+                    Ok(())
+                },
+            );
+    }
+
+    #[test]
+    fn roundtrip_empty_scalar_and_trailing_lanes() {
+        for spec in registered_specs(&[2, 3, 4, 8, 16, 24, 32]) {
+            // Empty tensor (shape with a zero dim).
+            assert_roundtrip(&spec, &[], &[0, 5], 5);
+            assert_roundtrip(&spec, &[], &[0], 1);
+            // Scalar.
+            assert_roundtrip(&spec, &[2.75], &[], 1);
+            // Minor axis not a multiple of the box (short trailing box),
+            // and lane counts not a multiple of 8 bits.
+            let mut rng = Pcg32::new(42);
+            let x = gen_f32s(&mut rng, 3 * 21, 6.0);
+            assert_roundtrip(&spec, &x, &[3, 21], 21);
+            let y = gen_f32s(&mut rng, 7, 4.0);
+            assert_roundtrip(&spec, &y, &[7], 7);
+        }
+    }
+
+    #[test]
+    fn roundtrip_nan_inf_and_zero_tensors() {
+        for spec in registered_specs(&[2, 4, 8, 16, 32]) {
+            let x = vec![
+                f32::NAN,
+                f32::INFINITY,
+                f32::NEG_INFINITY,
+                0.0,
+                -0.0,
+                1.5,
+                -3.25,
+                f32::MIN_POSITIVE / 2.0,
+            ];
+            assert_roundtrip(&spec, &x, &[8], 8);
+            // All-zero and all-NaN tensors (the quantizers zero-fill when
+            // the FTZ'd |max| is zero).
+            assert_roundtrip(&spec, &[0.0; 20], &[20], 20);
+            assert_roundtrip(&spec, &[f32::NAN; 20], &[20], 20);
+            // Extreme magnitudes: near f32::MAX the grid clamps, near the
+            // subnormal range FTZ zeroes.
+            assert_roundtrip(&spec, &[f32::MAX, -f32::MAX, 1e-38, -1e-44], &[4], 4);
+        }
+    }
+
+    #[test]
+    fn negative_zero_canonicalizes_to_positive() {
+        // Pinned behavior: the integer lane has one zero, so a quantized
+        // -0.0 (which the kernels preserve) decodes as +0.0. Equal under
+        // ==, different bit pattern — documented in the module docs.
+        let x = vec![-0.0f32, -0.1, 8.0];
+        let q = FormatSpec::fixed(4).quantize(&x, 3);
+        assert!(q[0].is_sign_negative(), "kernel keeps -0.0");
+        let d = FormatSpec::fixed(4).encode(&x, &[3], 3).decode();
+        assert_eq!(d, q, "== equality must hold");
+        assert!(!d[0].is_sign_negative(), "codec canonicalizes the zero sign");
+    }
+
+    #[test]
+    fn sr_payload_follows_the_stream() {
+        let mut rng = Pcg32::new(3);
+        let x = gen_f32s(&mut rng, 64, 5.0);
+        let sr = FormatSpec::fixed_sr(5);
+        let a = sr.encode_stream(&x, &[64], 64, 1, 0);
+        let b = sr.encode_stream(&x, &[64], 64, 1, 0);
+        assert_eq!(a, b, "same (step, stream) must pack bit-identically");
+        let c = sr.encode_stream(&x, &[64], 64, 2, 0);
+        assert_ne!(a.payload(), c.payload(), "different steps must repack differently");
+    }
+
+    #[test]
+    fn encode_is_stable_on_quantized_input() {
+        // encode(quantize(x)) == encode(x): repacking an already-packed
+        // tensor cannot drift (checkpoint save-load-save bit-identity).
+        Prop::new("encode is idempotent through quantize").cases(60).run(
+            |rng, size| {
+                let spec = *rng.choice(&[
+                    FormatSpec::bfp(4),
+                    FormatSpec::bfp(7),
+                    FormatSpec::fixed(3),
+                    FormatSpec::fixed(8),
+                    FormatSpec::fixed_sr(6),
+                ]);
+                (spec, gen_f32s(rng, 16 * (1 + size as usize / 20), 8.0))
+            },
+            |(spec, x)| {
+                let inner = x.len();
+                let once = spec.encode(x, &[inner], inner);
+                let again = spec.encode(&once.decode(), &[inner], inner);
+                if once == again {
+                    Ok(())
+                } else {
+                    Err("re-encoding the decoded tensor changed the payload".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn zeros_matches_encoded_zero_tensor() {
+        for spec in registered_specs(&[2, 4, 8, 16, 32]) {
+            let z = PackedTensor::zeros(spec, &[3, 21], 21);
+            let e = spec.encode(&[0.0; 63], &[3, 21], 21);
+            assert_eq!(z, e, "{spec}: zeros() must equal encode(0s) bit-for-bit");
+            assert!(z.decode().iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn serialized_record_roundtrips() {
+        let mut rng = Pcg32::new(9);
+        for spec in registered_specs(&[2, 4, 8, 16, 32]) {
+            let x = gen_f32s(&mut rng, 2 * 37, 6.0);
+            let p = spec.encode(&x, &[2, 37], 37);
+            let mut buf = Vec::new();
+            p.write_into(&mut buf).unwrap();
+            assert_eq!(buf.len(), p.record_len(), "{spec}");
+            let back = PackedTensor::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(p, back, "{spec}");
+        }
+    }
+
+    #[test]
+    fn serialized_record_golden_bytes() {
+        // Pins the header layout: version 1, tag, bits, flags, inner,
+        // dims, payload length, payload. Any byte change here is an
+        // on-disk format break and needs a version bump.
+        let x = vec![4.0f32, 1.3, -2.5, 0.4];
+        let p = FormatSpec::fixed(4).encode(&x, &[2, 2], 2);
+        let mut buf = Vec::new();
+        p.write_into(&mut buf).unwrap();
+        assert_eq!(
+            buf,
+            vec![
+                1, 1, 4, 0, // version, fixed tag, 4 bits, flags
+                2, 0, 0, 0, // inner = 2
+                2, 0, 0, 0, // ndims = 2
+                2, 0, 0, 0, 0, 0, 0, 0, // dim 0
+                2, 0, 0, 0, 0, 0, 0, 0, // dim 1
+                3, 0, 0, 0, 0, 0, 0, 0, // payload length
+                0x81, 0x14, 0x0E, // e=2 biased, lanes [4, 1], [-2, 0]
+            ]
+        );
+        // And the SR/bfp/fp32 family tags are pinned too.
+        let tag = |spec: FormatSpec| {
+            let mut b = Vec::new();
+            spec.encode(&[1.0], &[1], 1).write_into(&mut b).unwrap();
+            (b[1], b[2])
+        };
+        assert_eq!(tag(FormatSpec::Fp32), (0, 32));
+        assert_eq!(tag(FormatSpec::fixed(7)), (1, 7));
+        assert_eq!(tag(FormatSpec::fixed_sr(7)), (2, 7));
+        assert_eq!(tag(FormatSpec::bfp(7)), (3, 7));
+    }
+
+    #[test]
+    fn read_rejects_corrupt_records() {
+        let p = FormatSpec::bfp(4).encode(&[1.0; 16], &[16], 16);
+        let mut good = Vec::new();
+        p.write_into(&mut good).unwrap();
+
+        let mut wrong_version = good.clone();
+        wrong_version[0] = 9;
+        assert!(PackedTensor::read_from(&mut wrong_version.as_slice()).is_err());
+
+        let mut wrong_tag = good.clone();
+        wrong_tag[1] = 7;
+        assert!(PackedTensor::read_from(&mut wrong_tag.as_slice()).is_err());
+
+        let mut wrong_bits = good.clone();
+        wrong_bits[2] = 1;
+        assert!(PackedTensor::read_from(&mut wrong_bits.as_slice()).is_err());
+
+        let mut wrong_len = good.clone();
+        wrong_len[24] = 99; // payload-length field
+        assert!(PackedTensor::read_from(&mut wrong_len.as_slice()).is_err());
+
+        let mut truncated = good.clone();
+        truncated.truncate(good.len() - 2);
+        assert!(PackedTensor::read_from(&mut truncated.as_slice()).is_err());
+
+        assert!(PackedTensor::read_from(&mut &b"garbage"[..]).is_err());
+    }
+
+    #[test]
+    fn passthrough_widths_store_the_raw_container() {
+        // Widths >= 25 quantize as identity; the payload must be the raw
+        // f32 container or arbitrary values could not round-trip.
+        let x = vec![1.5f32, -2e10, 3e-20, f32::NAN];
+        for spec in [FormatSpec::fixed(25), FormatSpec::fixed(30), FormatSpec::bfp(32)] {
+            let p = spec.encode(&x, &[4], 4);
+            assert_eq!(p.packed_len(), 16, "{spec}");
+            let q = p.decode();
+            assert_eq!(&q[..3], &x[..3]);
+            assert!(q[3].is_nan());
+        }
+    }
+
+    #[test]
+    fn packed_len_is_sub_byte_for_low_widths() {
+        // The headline claim made physical: a bfp4 stash of 1600 elems
+        // is 4.5 bits/elem, not 32.
+        let spec = FormatSpec::bfp(4);
+        let len = 1600;
+        assert_eq!(spec.packed_len(len, len), (len / 16) * 9);
+        let bits_per_elem = spec.packed_len(len, len) as f64 * 8.0 / len as f64;
+        assert!(bits_per_elem < 4.6, "bfp4 stores {bits_per_elem} bits/elem");
+        assert_eq!(FormatSpec::fixed(2).packed_len(1000, 1000), 1 + 250);
+    }
+}

@@ -22,4 +22,4 @@ pub mod tensor;
 
 pub use artifact::{ArtifactManifest, ModelManifest, ParamSpec};
 pub use client::{Executable, Runtime};
-pub use tensor::HostTensor;
+pub use tensor::{Dtype, HostTensor, TensorData};

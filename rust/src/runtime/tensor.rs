@@ -1,13 +1,21 @@
-//! Host-side tensor: a shape + contiguous f32/i32 storage, with
-//! conversions to/from `xla::Literal`.
+//! Host-side tensor: a shape + contiguous f32/i32 storage — or a
+//! [`PackedTensor`] in a sub-byte format — with conversions to/from
+//! `xla::Literal`.
 //!
 //! The coordinator keeps all state (params, optimizer moments, batches)
 //! as [`HostTensor`]s; the runtime marshals them across the PJRT
 //! boundary. Row-major (C) layout throughout, matching XLA's default
 //! literal layout.
+//!
+//! The `Packed` arm is how the stash actually occupies
+//! `storage_bits()`-scale memory between uses: a packed tensor stays in
+//! its format's bit layout until a use-site needs f32 — [`HostTensor::to_literal`]
+//! decodes on the way into PJRT, so coordinator code handles packed and
+//! dense tensors uniformly.
 
 use xla::{ArrayElement, Literal};
 
+use crate::quant::{Codec, FormatSpec, PackedTensor};
 use crate::{Error, Result};
 
 /// Element type tag.
@@ -15,6 +23,8 @@ use crate::{Error, Result};
 pub enum Dtype {
     F32,
     I32,
+    /// Sub-byte packed storage in the given format (decodes to f32).
+    Packed(FormatSpec),
 }
 
 /// A host tensor (row-major).
@@ -28,6 +38,15 @@ pub struct HostTensor {
 pub enum TensorData {
     F32(Vec<f32>),
     I32(Vec<i32>),
+    /// Physically packed storage (`quant::packed`); `shape` mirrors the
+    /// packed record's shape.
+    Packed(PackedTensor),
+}
+
+/// Minor-axis length the box-based formats quantize against: the last
+/// dimension, or 1 for scalars / zero-sized axes.
+fn minor_axis(shape: &[usize]) -> usize {
+    shape.last().copied().filter(|&d| d > 0).unwrap_or(1)
 }
 
 impl HostTensor {
@@ -41,6 +60,11 @@ impl HostTensor {
         HostTensor { shape, data: TensorData::I32(data) }
     }
 
+    /// Wrap an already-packed tensor (shape comes from the record).
+    pub fn packed(p: PackedTensor) -> Self {
+        HostTensor { shape: p.shape().to_vec(), data: TensorData::Packed(p) }
+    }
+
     pub fn scalar_f32(v: f32) -> Self {
         HostTensor::f32(vec![], vec![v])
     }
@@ -50,13 +74,38 @@ impl HostTensor {
     }
 
     pub fn zeros(shape: &[usize]) -> Self {
-        HostTensor::f32(shape.to_vec(), vec![0.0; shape.iter().product()])
+        HostTensor::zeros_dtype(shape, Dtype::F32)
+    }
+
+    /// Dtype-aware zeros: packed dtypes build the all-zero payload
+    /// directly in the bit layout — no f32 alloc, no encode pass.
+    pub fn zeros_dtype(shape: &[usize], dtype: Dtype) -> Self {
+        match dtype {
+            Dtype::F32 => HostTensor {
+                shape: shape.to_vec(),
+                data: TensorData::F32(vec![0.0; shape.iter().product()]),
+            },
+            Dtype::I32 => HostTensor {
+                shape: shape.to_vec(),
+                data: TensorData::I32(vec![0; shape.iter().product()]),
+            },
+            Dtype::Packed(spec) => {
+                HostTensor::packed(PackedTensor::zeros(spec, shape, minor_axis(shape)))
+            }
+        }
+    }
+
+    /// Zeros with this tensor's shape *and* dtype (a packed reference
+    /// yields packed zeros in the same format, built directly).
+    pub fn zeros_like(&self) -> Self {
+        HostTensor::zeros_dtype(&self.shape, self.dtype())
     }
 
     pub fn len(&self) -> usize {
         match &self.data {
             TensorData::F32(v) => v.len(),
             TensorData::I32(v) => v.len(),
+            TensorData::Packed(p) => p.len(),
         }
     }
 
@@ -68,12 +117,64 @@ impl HostTensor {
         match &self.data {
             TensorData::F32(_) => Dtype::F32,
             TensorData::I32(_) => Dtype::I32,
+            TensorData::Packed(p) => Dtype::Packed(p.spec()),
+        }
+    }
+
+    /// Bytes this tensor occupies at rest (packed tensors report their
+    /// payload, which is what the stash-traffic claims are about).
+    pub fn storage_bytes(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len() * 4,
+            TensorData::I32(v) => v.len() * 4,
+            TensorData::Packed(p) => p.packed_len(),
+        }
+    }
+
+    /// Quantize-and-pack into `spec`'s bit layout (stochastic formats use
+    /// the `(step, stream)` rounding stream). A tensor already packed in
+    /// `spec` is returned as-is — re-encoding is a no-op by the codec's
+    /// idempotence, so skipping it preserves bit-identity cheaply.
+    pub fn pack_stream(&self, spec: &FormatSpec, step: u64, stream: u64) -> Result<HostTensor> {
+        match &self.data {
+            TensorData::F32(v) => Ok(HostTensor::packed(spec.encode_stream(
+                v,
+                &self.shape,
+                minor_axis(&self.shape),
+                step,
+                stream,
+            ))),
+            TensorData::Packed(p) if p.spec() == *spec => Ok(self.clone()),
+            TensorData::Packed(p) => Ok(HostTensor::packed(spec.encode_stream(
+                &p.decode(),
+                &self.shape,
+                minor_axis(&self.shape),
+                step,
+                stream,
+            ))),
+            TensorData::I32(_) => Err(Error::Shape("cannot pack an i32 tensor".into())),
+        }
+    }
+
+    /// [`HostTensor::pack_stream`] at the step-0 stream.
+    pub fn pack(&self, spec: &FormatSpec) -> Result<HostTensor> {
+        self.pack_stream(spec, 0, 0)
+    }
+
+    /// Decode to dense f32 (identity for dense tensors).
+    pub fn unpack(&self) -> HostTensor {
+        match &self.data {
+            TensorData::Packed(p) => HostTensor::f32(self.shape.clone(), p.decode()),
+            _ => self.clone(),
         }
     }
 
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             TensorData::F32(v) => Ok(v),
+            TensorData::Packed(_) => {
+                Err(Error::Shape("packed tensor: unpack() before borrowing f32".into()))
+            }
             _ => Err(Error::Shape("expected f32 tensor".into())),
         }
     }
@@ -81,6 +182,9 @@ impl HostTensor {
     pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
         match &mut self.data {
             TensorData::F32(v) => Ok(v),
+            TensorData::Packed(_) => {
+                Err(Error::Shape("packed tensor: unpack() before borrowing f32".into()))
+            }
             _ => Err(Error::Shape("expected f32 tensor".into())),
         }
     }
@@ -101,12 +205,14 @@ impl HostTensor {
         Ok(v[0])
     }
 
-    /// Convert to an XLA literal (copies).
+    /// Convert to an XLA literal (copies). Packed tensors decode here —
+    /// the use-site boundary where sub-byte storage becomes f32 compute.
     pub fn to_literal(&self) -> Result<Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
             TensorData::F32(v) => Literal::vec1(v.as_slice()),
             TensorData::I32(v) => Literal::vec1(v.as_slice()),
+            TensorData::Packed(p) => Literal::vec1(p.decode().as_slice()),
         };
         Ok(lit.reshape(&dims)?)
     }
@@ -169,5 +275,62 @@ mod tests {
         let s = HostTensor::scalar_f32(4.25);
         let back = HostTensor::from_literal(&s.to_literal().unwrap()).unwrap();
         assert_eq!(s, back);
+    }
+
+    #[test]
+    fn pack_unpack_is_quantize() {
+        let spec = FormatSpec::bfp(4);
+        let x: Vec<f32> = (0..48).map(|i| (i as f32 - 24.0) * 0.37).collect();
+        let t = HostTensor::f32(vec![3, 16], x.clone());
+        let p = t.pack(&spec).unwrap();
+        assert_eq!(p.dtype(), Dtype::Packed(spec));
+        assert_eq!(p.shape, t.shape);
+        assert_eq!(p.len(), 48);
+        assert!(p.storage_bytes() < t.storage_bytes() / 4, "bfp4 must pack sub-byte");
+        let back = p.unpack();
+        assert_eq!(back.as_f32().unwrap(), crate::quant::bfp_quantize(&x, 16, 4.0).as_slice());
+        // Packing an already-packed tensor in the same format is identity.
+        assert_eq!(p.pack(&spec).unwrap(), p);
+        // Repacking into another format goes through decode.
+        let wider = p.pack(&FormatSpec::bfp(16)).unwrap();
+        assert_eq!(wider.dtype(), Dtype::Packed(FormatSpec::bfp(16)));
+    }
+
+    #[test]
+    fn packed_borrow_and_item_error() {
+        let t = HostTensor::f32(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let p = t.pack(&FormatSpec::fixed(8)).unwrap();
+        assert!(p.as_f32().is_err());
+        assert!(p.item_f32().is_err());
+        assert!(p.as_i32().is_err());
+        assert!(HostTensor::scalar_i32(3).pack(&FormatSpec::fixed(8)).is_err());
+    }
+
+    #[test]
+    fn zeros_like_preserves_dtype_without_reencode() {
+        let d = HostTensor::zeros(&[2, 5]);
+        assert_eq!(d.zeros_like().dtype(), Dtype::F32);
+        let i = HostTensor::scalar_i32(3);
+        assert_eq!(i.zeros_like().dtype(), Dtype::I32);
+        let spec = FormatSpec::bfp(4);
+        let p = HostTensor::f32(vec![2, 20], vec![1.0; 40]).pack(&spec).unwrap();
+        let z = p.zeros_like();
+        assert_eq!(z.dtype(), Dtype::Packed(spec));
+        assert_eq!(z.shape, vec![2, 20]);
+        // Identical to the encode path, but built directly.
+        let via_encode = HostTensor::f32(vec![2, 20], vec![0.0; 40]).pack(&spec).unwrap();
+        assert_eq!(z, via_encode);
+    }
+
+    #[test]
+    fn packed_literal_decodes_at_use_site() {
+        let x: Vec<f32> = (0..32).map(|i| (i as f32).sin() * 3.0).collect();
+        let t = HostTensor::f32(vec![2, 16], x.clone());
+        let p = t.pack(&FormatSpec::bfp(8)).unwrap();
+        let lit = p.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        // The literal sees the decoded (quantized) values as plain f32.
+        assert_eq!(back.dtype(), Dtype::F32);
+        assert_eq!(back.as_f32().unwrap(), crate::quant::bfp_quantize(&x, 16, 8.0).as_slice());
     }
 }

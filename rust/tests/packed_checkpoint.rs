@@ -1,0 +1,207 @@
+//! Integration: packed (v2) checkpoints round-trip trainer state
+//! bit-identically, shrink on disk by the format's true storage ratio,
+//! and the on-disk layout is pinned by golden bytes.
+//!
+//! Runs without artifacts: the checkpoint path is pure host-side code
+//! (manifest + state are synthesized, as the unit tests do).
+
+use dsq::model::{load_checkpoint, save_checkpoint, save_checkpoint_packed, ModelState};
+use dsq::quant::{same_f32, Codec, FormatSpec};
+use dsq::runtime::{HostTensor, ModelManifest, ParamSpec};
+use dsq::util::prop::gen_f32s;
+use dsq::util::rng::Pcg32;
+
+fn manifest() -> ModelManifest {
+    ModelManifest {
+        config: Default::default(),
+        params: vec![
+            ParamSpec { name: "dec.proj.w".into(), shape: vec![64, 64] },
+            ParamSpec { name: "enc.emb.w".into(), shape: vec![128, 32] },
+            ParamSpec { name: "enc.ln.b".into(), shape: vec![96] },
+        ],
+        artifacts: Default::default(),
+    }
+}
+
+/// A deterministic "trained" state: wide-magnitude params, nonzero
+/// moments, nonzero step.
+fn state(seed: u64) -> ModelState {
+    let mm = manifest();
+    let mut rng = Pcg32::new(seed);
+    let mut tensors = |scale: f32| -> Vec<HostTensor> {
+        mm.params
+            .iter()
+            .map(|s| {
+                let x: Vec<f32> =
+                    gen_f32s(&mut rng, s.numel(), 8.0).iter().map(|v| v * scale).collect();
+                HostTensor::f32(s.shape.clone(), x)
+            })
+            .collect()
+    };
+    let params = tensors(1.0);
+    let m = tensors(0.01);
+    let v = tensors(0.0001);
+    ModelState { params, m, v, step: 1234 }
+}
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("dsq-packed-ckpt-{}-{name}", std::process::id()))
+}
+
+#[test]
+fn packed_checkpoint_resumes_bit_identically() {
+    let mm = manifest();
+    for spec in [FormatSpec::bfp(4), FormatSpec::bfp(16), FormatSpec::fixed(8), FormatSpec::fixed_sr(6)]
+    {
+        let st = state(7);
+        let path = tmpfile(&format!("resume-{spec}.bin"));
+        save_checkpoint_packed(&path, &st, &mm, &spec).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        // Reload: state comes back packed, step intact, and the decoded
+        // values are exactly the quantized grid values of the original.
+        let resumed = load_checkpoint(&path, &mm).unwrap();
+        assert_eq!(resumed.step, 1234);
+        assert!(resumed.is_packed());
+        let mut dense = resumed.clone();
+        dense.unpack_state();
+        for (orig, got) in st.params.iter().zip(&dense.params) {
+            let inner = *orig.shape.last().unwrap();
+            let want = spec
+                .encode_stream(orig.as_f32().unwrap(), &orig.shape, inner, st.step, 0)
+                .decode();
+            // SR streams are per-tensor; compare against the packed
+            // record itself for an exact statement below instead.
+            if !spec.is_stochastic() {
+                assert_eq!(got.as_f32().unwrap().len(), want.len());
+                for (&g, &w) in got.as_f32().unwrap().iter().zip(&want) {
+                    assert!(same_f32(g, w), "{spec}: decoded {g} != quantized {w}");
+                }
+            }
+        }
+
+        // Save the resumed state again: the file must be byte-identical
+        // (no decode-reencode drift anywhere in the path).
+        let path2 = tmpfile(&format!("resume2-{spec}.bin"));
+        save_checkpoint(&path2, &resumed, &mm).unwrap();
+        assert_eq!(bytes, std::fs::read(&path2).unwrap(), "{spec}: resave drifted");
+
+        // And a third generation through save_checkpoint_packed (the
+        // already-packed fast path) is also identical.
+        let path3 = tmpfile(&format!("resume3-{spec}.bin"));
+        save_checkpoint_packed(&path3, &resumed, &mm, &spec).unwrap();
+        assert_eq!(bytes, std::fs::read(&path3).unwrap(), "{spec}: repack drifted");
+
+        for p in [&path, &path2, &path3] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}
+
+#[test]
+fn bfp4_checkpoint_is_under_0p15x_of_fp32() {
+    let mm = manifest();
+    let st = state(11);
+    let dense_path = tmpfile("size-fp32.bin");
+    let packed_path = tmpfile("size-bfp4.bin");
+    save_checkpoint(&dense_path, &st, &mm).unwrap();
+    save_checkpoint_packed(&packed_path, &st, &mm, &FormatSpec::bfp(4)).unwrap();
+    let dense = std::fs::metadata(&dense_path).unwrap().len() as f64;
+    let packed = std::fs::metadata(&packed_path).unwrap().len() as f64;
+    assert!(
+        packed <= 0.15 * dense,
+        "bfp4 checkpoint is {packed} B vs fp32 {dense} B ({:.3}x, want <= 0.15x)",
+        packed / dense
+    );
+    std::fs::remove_file(&dense_path).ok();
+    std::fs::remove_file(&packed_path).ok();
+}
+
+#[test]
+fn dense_and_packed_checkpoints_coexist() {
+    // A dense save stays v1 (readable by older code paths); packing the
+    // same state produces v2; both load back through the same entry.
+    let mm = manifest();
+    let st = state(3);
+    let v1 = tmpfile("coexist-v1.bin");
+    let v2 = tmpfile("coexist-v2.bin");
+    save_checkpoint(&v1, &st, &mm).unwrap();
+    save_checkpoint_packed(&v2, &st, &mm, &FormatSpec::fixed(16)).unwrap();
+    assert_eq!(&std::fs::read(&v1).unwrap()[..8], b"DSQCKPT1");
+    assert_eq!(&std::fs::read(&v2).unwrap()[..8], b"DSQCKPT2");
+    let a = load_checkpoint(&v1, &mm).unwrap();
+    let b = load_checkpoint(&v2, &mm).unwrap();
+    assert!(!a.is_packed());
+    assert!(b.is_packed());
+    assert_eq!(a.step, b.step);
+    std::fs::remove_file(&v1).ok();
+    std::fs::remove_file(&v2).ok();
+}
+
+#[test]
+fn checkpoint_v2_golden_preamble() {
+    // Pin the v2 framing: magic, step, group count, first group's tensor
+    // count, then the first tensor record (name + versioned packed
+    // header). A change here is an on-disk format break.
+    let mm = manifest();
+    let st = state(5);
+    let path = tmpfile("golden-v2.bin");
+    save_checkpoint_packed(&path, &st, &mm, &FormatSpec::bfp(4)).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    let mut want: Vec<u8> = Vec::new();
+    want.extend_from_slice(b"DSQCKPT2");
+    want.extend_from_slice(&1234u64.to_le_bytes()); // adam step
+    want.extend_from_slice(&3u32.to_le_bytes()); // group count
+    want.extend_from_slice(&3u32.to_le_bytes()); // tensors in group 0
+    want.extend_from_slice(&10u32.to_le_bytes()); // name length
+    want.extend_from_slice(b"dec.proj.w");
+    // Packed record header: version 1, bfp tag 3, 4 bits, flags 0,
+    // inner 64, ndims 2, dims 64 x 64, payload length 64/16*9*64.
+    want.extend_from_slice(&[1, 3, 4, 0]);
+    want.extend_from_slice(&64u32.to_le_bytes());
+    want.extend_from_slice(&2u32.to_le_bytes());
+    want.extend_from_slice(&64u64.to_le_bytes());
+    want.extend_from_slice(&64u64.to_le_bytes());
+    want.extend_from_slice(&(4 * 9 * 64u64).to_le_bytes());
+    assert_eq!(&bytes[..want.len()], &want[..], "v2 checkpoint preamble drifted");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn packed_state_numerics_survive_a_simulated_resume() {
+    // The trainer-side contract without PJRT: absorb a fake step output
+    // into a packed-state model, checkpoint, reload, and verify the
+    // resident packed payloads are identical to pre-save.
+    let mm = manifest();
+    let spec = FormatSpec::bfp(8);
+    let mut st = state(13);
+    st.pack_state(&spec).unwrap();
+
+    // Fake train-step output (dense, as PJRT returns it).
+    let mut rng = Pcg32::new(99);
+    let mut outs: Vec<HostTensor> = Vec::new();
+    for scale in [1.0f32, 0.01, 0.0001] {
+        for s in &mm.params {
+            let x: Vec<f32> =
+                gen_f32s(&mut rng, s.numel(), 6.0).iter().map(|v| v * scale).collect();
+            outs.push(HostTensor::f32(s.shape.clone(), x));
+        }
+    }
+    outs.push(HostTensor::scalar_f32(0.75));
+    let loss = st.absorb_step_output(outs).unwrap();
+    assert_eq!(loss, 0.75);
+    st.pack_state(&spec).unwrap();
+    assert!(st.is_packed());
+
+    let path = tmpfile("simulated-resume.bin");
+    save_checkpoint(&path, &st, &mm).unwrap();
+    let resumed = load_checkpoint(&path, &mm).unwrap();
+    assert_eq!(resumed.step, st.step);
+    for (a, b) in st.params.iter().zip(&resumed.params) {
+        assert_eq!(a, b, "packed param drifted across the checkpoint");
+    }
+    for (a, b) in st.v.iter().zip(&resumed.v) {
+        assert_eq!(a, b, "packed moment drifted across the checkpoint");
+    }
+    std::fs::remove_file(&path).ok();
+}
