@@ -18,7 +18,6 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // Phase 1: "pre-training" — task instance seed 100, fp32.
     println!("== phase 1: pretrain encoder (task seed 100, fp32) ==");
     let pre_cfg = FinetuneConfig {
-        artifacts: "artifacts".into(),
         seed: 100,
         epochs: 3,
         batches_per_epoch: 25,
@@ -26,15 +25,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         nclasses: 3,
         val_batches: 3,
         checkpoint: Some(ckpt.clone()),
-        init_checkpoint: None,
-        stash_format: None,
+        ..FinetuneConfig::quick("artifacts".into())
     };
     let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(PrecisionConfig::FP32));
     let report = Finetuner::new(pre_cfg)?.run(schedule.as_mut())?;
     println!(
         "pretrained: val {:.4}, acc {:.1}%\n",
         report.final_val_loss,
-        report.final_accuracy * 100.0
+        report.accuracy().unwrap_or(f64::NAN) * 100.0
     );
 
     // Phase 2: fine-tune on a new task instance (seed 200) under DSQ vs
@@ -43,16 +41,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     {
         println!("== phase 2 ({name}, task seed 200, DSQ schedule) ==");
         let cfg = FinetuneConfig {
-            artifacts: "artifacts".into(),
             seed: 200,
             epochs: 3,
             batches_per_epoch: 25,
             lr: LrSchedule::Polynomial { lr: 5e-4, warmup_steps: 10, total_steps: 2000 },
             nclasses: 3,
             val_batches: 3,
-            checkpoint: None,
             init_checkpoint: init,
-            stash_format: None,
+            ..FinetuneConfig::quick("artifacts".into())
         };
         let mut schedule: Box<dyn Schedule> =
             Box::new(DsqController::paper_default("bfp").unwrap());
@@ -60,7 +56,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         println!(
             "{name}: val {:.4}, acc {:.1}%, trace {:?}\n",
             report.final_val_loss,
-            report.final_accuracy * 100.0,
+            report.accuracy().unwrap_or(f64::NAN) * 100.0,
             report
                 .trace
                 .iter()

@@ -34,18 +34,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("\ntraining 2 epochs x 6 batches under each config (same seed):");
     for (name, p) in &configs {
         let cfg = TrainerConfig {
-            artifacts: artifacts.clone().into(),
-            seed: 0,
             epochs: 2,
             batches_per_epoch: 6,
             lr: LrSchedule::InverseSqrt { peak_lr: 3e-3, warmup_steps: 20 },
             variant: Variant::Iwslt,
             val_batches: 2,
             bleu_batches: 0,
-            checkpoint: None,
-            init_checkpoint: None,
             prefetch: 2,
-            stash_format: None,
+            ..TrainerConfig::quick(artifacts.clone().into())
         };
         let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(*p));
         let mut trainer = Trainer::new(cfg)?;

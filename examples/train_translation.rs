@@ -23,18 +23,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let (epochs, bpe) = if quick { (3, 30) } else { (8, 60) };
 
     let base = TrainerConfig {
-        artifacts: "artifacts".into(),
-        seed: 0,
         epochs,
         batches_per_epoch: bpe,
         lr: LrSchedule::InverseSqrt { peak_lr: 3e-3, warmup_steps: 60 },
         variant: Variant::Iwslt,
         val_batches: 4,
         bleu_batches: 6,
-        checkpoint: None,
-        init_checkpoint: None,
-        prefetch: 4,
-        stash_format: None,
+        ..TrainerConfig::quick("artifacts".into())
     };
     let workload = TransformerWorkload::iwslt_6layer();
 
@@ -65,8 +60,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         println!(
             "result: val {:.4} | token acc {:.1}% | BLEU {} | {:.1} steps/s | cost {} arith {} dram\n",
             report.final_val_loss,
-            report.final_token_acc * 100.0,
-            report.bleu.map_or("-".into(), |b| format!("{b:.2}")),
+            report.final_eval_acc * 100.0,
+            report.bleu().map_or("-".into(), |b| format!("{b:.2}")),
             report.steps_per_s(),
             fmt_cost(cost.map(|c| c.0)),
             fmt_cost(cost.map(|c| c.1)),
@@ -84,8 +79,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             "{:<26} {:>8.4} {:>8.1}% {:>8} {:>9} {:>9}",
             name,
             r.final_val_loss,
-            r.final_token_acc * 100.0,
-            r.bleu.map_or("-".into(), |b| format!("{b:.2}")),
+            r.final_eval_acc * 100.0,
+            r.bleu().map_or("-".into(), |b| format!("{b:.2}")),
             fmt_cost(cost.map(|c| c.0)),
             fmt_cost(cost.map(|c| c.1)),
         );

@@ -1,9 +1,18 @@
 //! Bench: end-to-end train-step latency through PJRT (the L3 request
-//! path) at each precision config, plus eval and decode latency.
+//! path) at each precision config, plus the executable-dispatch
+//! before/after comparison for the Session engine's memoized cache.
 //!
 //! This is the real-hardware half of §Perf: what one coordinator step
 //! costs on this testbed, and how the runtime overhead (literal
-//! marshalling) compares to the XLA compute.
+//! marshalling, executable lookup) compares to the XLA compute.
+//!
+//! **Executable dispatch**: before the Session engine, both training
+//! loops resolved the step executable on *every step* via
+//! `manifest lookup -> PathBuf join -> global runtime mutex -> hash
+//! probe` (`rt.load(man.model_path(...))`). The Session routes steps
+//! through a per-run `ExeCache` that resolves each `(model, kind)` once
+//! and then serves a local `HashMap` hit. Both paths are timed below so
+//! the win is recorded, not assumed.
 //!
 //! Requires `make artifacts`. The artifact compile (~2 min) happens once
 //! at startup and is excluded from the timings.
@@ -11,8 +20,9 @@
 use std::path::PathBuf;
 
 use dsq::bench::{fmt_ns, header, Bencher};
-use dsq::coordinator::{LrSchedule, Trainer, TrainerConfig};
+use dsq::coordinator::{ExeCache, LrSchedule, Trainer, TrainerConfig};
 use dsq::data::Variant;
+use dsq::runtime::Runtime;
 use dsq::schedule::{FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
 
 fn main() {
@@ -34,24 +44,19 @@ fn main() {
 
     for (name, p) in configs {
         // One epoch of a few steps under a static schedule, timed from
-        // the report (the trainer itself is the measured path).
+        // the report (the Session engine itself is the measured path).
         let cfg = TrainerConfig {
-            artifacts: artifacts.clone(),
-            seed: 0,
             epochs: 1,
             batches_per_epoch: 20,
             lr: LrSchedule::Constant { lr: 1e-3 },
             variant: Variant::Iwslt,
             val_batches: 1,
             bleu_batches: 0,
-            checkpoint: None,
-            init_checkpoint: None,
-            prefetch: 4,
-            stash_format: None,
+            ..TrainerConfig::quick(artifacts.clone())
         };
         let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(p));
         let mut trainer = Trainer::new(cfg).expect("trainer");
-        // Warm the executable cache (compile) outside the timing.
+        // Warm the runtime's compile cache outside the timing.
         let report = trainer.run(schedule.as_mut()).expect("run");
         // First run includes compile; run a second trainer for steady state.
         let cfg2 = TrainerConfig {
@@ -71,11 +76,29 @@ fn main() {
         );
     }
 
-    // Literal marshalling overhead: build the input vec without executing.
+    // Executable dispatch: the legacy per-step path vs the Session's
+    // memoized cache (both hot — compile cost excluded by the warmup).
     let b = Bencher::default();
     let man = dsq::runtime::ArtifactManifest::load(&artifacts).unwrap();
+    let rt = Runtime::global();
+    let legacy = b.bench("dispatch: rt.load(model_path) per step (before)", || {
+        std::hint::black_box(rt.load(&man.model_path("nmt", "train_bfp").unwrap()).unwrap());
+    });
+    let mut cache = ExeCache::new(&man, "nmt").unwrap();
+    let cached = b.bench("dispatch: ExeCache::get per step (after)", || {
+        std::hint::black_box(cache.get("train_bfp").unwrap());
+    });
+    println!("\n{}", legacy.report());
+    println!("{}", cached.report());
+    println!(
+        "memoized dispatch saves {} per step ({:.1}x)",
+        fmt_ns(legacy.mean_ns - cached.mean_ns),
+        legacy.mean_ns / cached.mean_ns.max(1e-9)
+    );
+
+    // Literal marshalling overhead: build the input vec without executing.
     let state =
-        dsq::model::ModelState::init(dsq::runtime::Runtime::global(), &man, "nmt", 0).unwrap();
+        dsq::model::ModelState::init(rt, &man, "nmt", 0).unwrap();
     let r = b.bench("host->literal conversion of full param set", || {
         for t in &state.params {
             std::hint::black_box(t.to_literal().unwrap());

@@ -75,6 +75,13 @@ subcommands:
   formats      list the registered number formats (the --schedule grammar)
   info         artifact manifest summary
   version      print version
+
+train and finetune share one task-agnostic Session engine: bounded
+batch prefetch (--prefetch), validation per epoch or every N steps
+(--val-every), mid-run checkpoints (--checkpoint-every), and resumable
+schedule state — a checkpoint saved mid-DSQ-ladder resumes at the saved
+controller level via --init-checkpoint. Both print the time-weighted
+hardware cost of the run's schedule (IWSLT / RoBERTa-base scale).
 ";
 
 /// Parse `--schedule`. Every static form goes through the format
@@ -105,8 +112,22 @@ fn common_train_flags(spec: ArgSpec) -> ArgSpec {
         .opt("epochs", "4", "training epochs")
         .opt("batches-per-epoch", "50", "train batches per epoch")
         .opt("schedule", "dsq", "dsq | dsq-<family> | fp32 | <family>:q0,q1,q2,q3 | s0,s1,s2,s3")
-        .opt("checkpoint", "", "save final checkpoint here")
-        .opt("init-checkpoint", "", "initialize from this checkpoint")
+        .opt("prefetch", "4", "bounded prefetch depth for the batch generator thread (>= 1)")
+        .opt("val-every", "0", "also validate every N steps (0 = per-epoch only)")
+        .opt(
+            "checkpoint",
+            "",
+            "save checkpoint here (with resumable schedule state; a resumed \
+             run continues the DSQ ladder at the saved level)",
+        )
+        .opt(
+            "checkpoint-every",
+            "0",
+            "save --checkpoint every N steps mid-run (0 = final only); mid-run \
+             saves are crash-salvage — resuming starts a fresh run from the \
+             saved state and ladder level",
+        )
+        .opt("init-checkpoint", "", "initialize (and resume schedule state) from this checkpoint")
         .opt(
             "stash-state",
             "",
@@ -114,6 +135,15 @@ fn common_train_flags(spec: ArgSpec) -> ArgSpec {
              checkpoints then use the packed v2 layout",
         )
         .bool("json", "print the full report as JSON")
+}
+
+/// Parse `--prefetch`, rejecting 0 (the generator channel needs a slot).
+fn parse_prefetch(a: &Args) -> Result<usize> {
+    let p = a.get_usize("prefetch")?;
+    if p == 0 {
+        return Err(Error::Config("--prefetch must be >= 1".into()));
+    }
+    Ok(p)
 }
 
 /// Parse an optional `--stash-state` spec ("" = dense f32 state).
@@ -141,36 +171,43 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         lr: LrSchedule::parse(a.get("lr"))?,
         variant: parse_variant(a.get("variant"))?,
         val_batches: a.get_usize("val-batches")?,
+        val_every_steps: a.get_usize("val-every")?,
         bleu_batches: a.get_usize("bleu-batches")?,
         checkpoint: opt_path(&a, "checkpoint"),
+        checkpoint_every_steps: a.get_usize("checkpoint-every")?,
         init_checkpoint: opt_path(&a, "init-checkpoint"),
-        prefetch: 4,
+        prefetch: parse_prefetch(&a)?,
         stash_format: opt_format(&a, "stash-state")?,
     };
     let mut schedule = parse_schedule(a.get("schedule"))?;
     let mut trainer = Trainer::new(cfg)?;
     let report = trainer.run(schedule.as_mut())?;
-    let iwslt = TransformerWorkload::iwslt_6layer();
     println!(
         "steps={} val_loss={:.4} token_acc={:.1}% bleu={} diverged={} ({:.2} steps/s)",
         report.steps,
         report.final_val_loss,
-        report.final_token_acc * 100.0,
-        report.bleu.map_or("-".into(), |b| format!("{b:.2}")),
+        report.final_eval_acc * 100.0,
+        report.bleu().map_or("-".into(), |b| format!("{b:.2}")),
         report.diverged,
         report.steps_per_s()
     );
-    match report.cost_on(&iwslt) {
-        Some((arith, dram)) => println!(
-            "hardware cost of this schedule on paper-scale IWSLT: arith {arith:.3}x dram {dram:.3}x (vs fixed32)"
-        ),
-        // fp32 reference runs are unscored, exactly like the paper's "-" rows.
-        None => println!("hardware cost: - (fp32 reference is unscored)"),
-    }
+    print_cost_line(&report, &TransformerWorkload::iwslt_6layer(), "IWSLT");
     if a.get_bool("json") {
         println!("{}", report.to_json().to_string_pretty());
     }
     Ok(())
+}
+
+/// The hardware-cost line after a run: the time-weighted relative cost
+/// of the schedule trace on a paper-scale workload; fp32 reference runs
+/// stay unscored, exactly like the paper's "-" rows.
+fn print_cost_line(report: &crate::coordinator::RunReport, w: &TransformerWorkload, name: &str) {
+    match report.cost_on(w) {
+        Some((arith, dram)) => println!(
+            "hardware cost of this schedule on paper-scale {name}: arith {arith:.3}x dram {dram:.3}x (vs fixed32)"
+        ),
+        None => println!("hardware cost: - (fp32 reference is unscored)"),
+    }
 }
 
 fn cmd_finetune(raw: &[String]) -> Result<()> {
@@ -187,20 +224,27 @@ fn cmd_finetune(raw: &[String]) -> Result<()> {
         lr: LrSchedule::parse(a.get("lr"))?,
         nclasses: a.get_usize("nclasses")?,
         val_batches: a.get_usize("val-batches")?,
+        val_every_steps: a.get_usize("val-every")?,
         checkpoint: opt_path(&a, "checkpoint"),
+        checkpoint_every_steps: a.get_usize("checkpoint-every")?,
         init_checkpoint: opt_path(&a, "init-checkpoint"),
+        prefetch: parse_prefetch(&a)?,
         stash_format: opt_format(&a, "stash-state")?,
     };
     let mut schedule = parse_schedule(a.get("schedule"))?;
     let mut tuner = Finetuner::new(cfg)?;
     let report = tuner.run(schedule.as_mut())?;
     println!(
-        "steps={} val_loss={:.4} accuracy={:.1}% diverged={}",
+        "steps={} val_loss={:.4} accuracy={:.1}% diverged={} ({:.2} steps/s)",
         report.steps,
         report.final_val_loss,
-        report.final_accuracy * 100.0,
-        report.diverged
+        report.accuracy().unwrap_or(f64::NAN) * 100.0,
+        report.diverged,
+        report.steps_per_s()
     );
+    // The paper scores GLUE fine-tuning on RoBERTa-base (Table 1's
+    // MNLI/QNLI columns) — same line `dsq train` prints for IWSLT.
+    print_cost_line(&report, &TransformerWorkload::roberta_base(), "RoBERTa-base");
     if a.get_bool("json") {
         println!("{}", report.to_json().to_string_pretty());
     }
@@ -378,6 +422,27 @@ mod tests {
         let spec = common_train_flags(ArgSpec::new("t", "test"));
         let a = spec.parse(&["--stash-state".to_string(), "int8".to_string()]).unwrap();
         assert!(opt_format(&a, "stash-state").is_err());
+    }
+
+    #[test]
+    fn prefetch_flag_defaults_and_validates() {
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec.parse(&[]).unwrap();
+        assert_eq!(parse_prefetch(&a).unwrap(), 4);
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec.parse(&["--prefetch".to_string(), "9".to_string()]).unwrap();
+        assert_eq!(parse_prefetch(&a).unwrap(), 9);
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec.parse(&["--prefetch".to_string(), "0".to_string()]).unwrap();
+        assert!(matches!(parse_prefetch(&a), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn cadence_flags_default_to_zero() {
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec.parse(&[]).unwrap();
+        assert_eq!(a.get_usize("val-every").unwrap(), 0);
+        assert_eq!(a.get_usize("checkpoint-every").unwrap(), 0);
     }
 
     #[test]

@@ -1,25 +1,24 @@
-//! Fine-tuning coordinator for the classifier (the paper's GLUE setup).
+//! Fine-tuning adapter: [`Finetuner`] maps the CLI-level
+//! [`FinetuneConfig`] onto the generic [`Session`] engine with a
+//! [`ClsTask`] (synthetic entailment corpus, accuracy headline metric).
 //!
-//! Mirrors [`super::trainer`] for the encoder-classifier artifacts. The
-//! "pre-train then fine-tune" paradigm is reproduced by initializing
-//! from a checkpoint of a *previous* run on a different task instance
-//! (`--init-checkpoint`), exactly how the paper fine-tunes RoBERTa-base
-//! with DSQ precision schedules.
+//! The "pre-train then fine-tune" paradigm is reproduced by
+//! initializing from a checkpoint of a *previous* run on a different
+//! task instance (`--init-checkpoint`), exactly how the paper
+//! fine-tunes RoBERTa-base with DSQ precision schedules. Everything
+//! else — including the prefetch generator thread the fine-tuner
+//! historically lacked — comes from [`super::session`].
 
 use std::path::PathBuf;
-use std::time::Instant;
 
 use crate::data::classify::{ClassifyConfig, ClassifyTask};
-use crate::data::batcher::{assemble_cls, ClsBatch};
-use crate::metrics::LossTracker;
-use crate::model::{checkpoint, ModelState};
-use crate::runtime::{ArtifactManifest, HostTensor, Runtime};
-use crate::schedule::{FormatSpec, PrecisionConfig, Schedule};
-use crate::util::json::Json;
-use crate::util::rng::Pcg32;
+use crate::model::ModelState;
+use crate::runtime::ArtifactManifest;
+use crate::schedule::{FormatSpec, Schedule};
 use crate::{Error, Result};
 
 use super::lr::LrSchedule;
+use super::session::{ClsTask, RunReport, Session, SessionConfig};
 
 /// Fine-tune configuration.
 #[derive(Clone, Debug)]
@@ -33,10 +32,18 @@ pub struct FinetuneConfig {
     /// `nclasses` (labels above the artifact head size are impossible).
     pub nclasses: usize,
     pub val_batches: usize,
+    /// Also validate every N steps (0 = per-epoch only).
+    pub val_every_steps: usize,
     pub checkpoint: Option<PathBuf>,
+    /// Save `checkpoint` every N steps mid-run (0 = final save only;
+    /// crash-salvage semantics — see
+    /// [`SessionConfig::checkpoint_every_steps`]).
+    pub checkpoint_every_steps: usize,
     pub init_checkpoint: Option<PathBuf>,
-    /// Hold the tuner state physically packed in this format between
-    /// steps (see `TrainerConfig::stash_format`); `None` = dense f32.
+    /// Bounded prefetch depth for the batch generator thread (≥ 1).
+    pub prefetch: usize,
+    /// Hold the tuner state packed in this format between steps (see
+    /// [`SessionConfig::stash_format`]); `None` = dense f32.
     pub stash_format: Option<FormatSpec>,
 }
 
@@ -50,57 +57,37 @@ impl FinetuneConfig {
             lr: LrSchedule::Polynomial { lr: 1e-3, warmup_steps: 10, total_steps: 2000 },
             nclasses: 3,
             val_batches: 4,
+            val_every_steps: 0,
             checkpoint: None,
+            checkpoint_every_steps: 0,
             init_checkpoint: None,
+            prefetch: 4,
             stash_format: None,
+        }
+    }
+
+    fn session_config(&self) -> SessionConfig {
+        SessionConfig {
+            artifacts: self.artifacts.clone(),
+            seed: self.seed,
+            epochs: self.epochs,
+            batches_per_epoch: self.batches_per_epoch,
+            lr: self.lr.clone(),
+            val_batches: self.val_batches,
+            val_every_steps: self.val_every_steps,
+            checkpoint: self.checkpoint.clone(),
+            init_checkpoint: self.init_checkpoint.clone(),
+            checkpoint_every_steps: self.checkpoint_every_steps,
+            prefetch: self.prefetch,
+            stash_format: self.stash_format,
         }
     }
 }
 
-/// Result of a fine-tuning run.
-#[derive(Clone, Debug)]
-pub struct FinetuneReport {
-    pub steps: u64,
-    pub final_val_loss: f64,
-    pub final_accuracy: f64,
-    pub diverged: bool,
-    pub trace: Vec<(PrecisionConfig, usize)>,
-    pub val_curve: Vec<(u64, f64)>,
-    pub schedule_desc: String,
-    pub wall_s: f64,
-}
-
-impl FinetuneReport {
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("steps", Json::num(self.steps as f64)),
-            ("final_val_loss", Json::num(self.final_val_loss)),
-            ("final_accuracy", Json::num(self.final_accuracy)),
-            ("diverged", Json::Bool(self.diverged)),
-            ("schedule", Json::str(&self.schedule_desc)),
-            ("wall_s", Json::num(self.wall_s)),
-            (
-                "trace",
-                Json::arr(self.trace.iter().map(|(p, n)| {
-                    Json::obj(vec![
-                        ("precision", Json::str(&p.notation())),
-                        ("formats", Json::str(&p.spec_string())),
-                        ("steps", Json::num(*n as f64)),
-                    ])
-                })),
-            ),
-        ])
-    }
-}
-
-/// The classifier fine-tuner.
+/// The classifier fine-tuner: a [`Session`] over [`ClsTask`].
 pub struct Finetuner {
     pub cfg: FinetuneConfig,
-    man: ArtifactManifest,
-    task: ClassifyTask,
-    state: ModelState,
-    batch: usize,
-    seq_len: usize,
+    session: Session<ClsTask>,
 }
 
 impl Finetuner {
@@ -118,127 +105,36 @@ impl Finetuner {
                 cfg.nclasses
             )));
         }
-        let task = ClassifyTask::new(ClassifyConfig {
-            vocab: v as i32,
+        let task = ClsTask {
+            task: ClassifyTask::new(ClassifyConfig {
+                vocab: v as i32,
+                seq_len: l,
+                nclasses: cfg.nclasses,
+                seed: cfg.seed,
+            }),
+            batch: b,
             seq_len: l,
-            nclasses: cfg.nclasses,
             seed: cfg.seed,
-        });
-        let rt = Runtime::global();
-        let mut state = match &cfg.init_checkpoint {
-            Some(path) => checkpoint::load_checkpoint(path, &man.cls)?,
-            None => ModelState::init(rt, &man, "cls", cfg.seed as i32)?,
         };
-        if let Some(spec) = &cfg.stash_format {
-            state.pack_state(spec)?;
-        }
-        Ok(Finetuner { batch: b, seq_len: l, cfg, man, task, state })
-    }
-
-    pub fn state(&self) -> &ModelState {
-        &self.state
+        let session = Session::new(cfg.session_config(), task, man)?;
+        Ok(Finetuner { cfg, session })
     }
 
     pub fn manifest(&self) -> &ArtifactManifest {
-        &self.man
+        self.session.manifest()
     }
 
-    fn make_batch(&self, rng: &mut Pcg32) -> ClsBatch {
-        let exs: Vec<_> = (0..self.batch).map(|_| self.task.sample(rng)).collect();
-        assemble_cls(&exs, self.seq_len)
+    pub fn state(&self) -> &ModelState {
+        self.session.state()
     }
 
-    /// Mean loss + accuracy over batches.
-    pub fn evaluate(&self, batches: &[ClsBatch]) -> Result<(f64, f64)> {
-        let exe = Runtime::global().load(&self.man.model_path("cls", "eval")?)?;
-        let (mut loss_sum, mut ncorrect, mut total) = (0f64, 0f64, 0f64);
-        for batch in batches {
-            let mut inputs = self.state.params.clone();
-            inputs.push(HostTensor::i32(vec![self.batch, self.seq_len], batch.tokens.clone()));
-            inputs.push(HostTensor::i32(vec![self.batch], batch.labels.clone()));
-            let outs = exe.run(&inputs)?;
-            loss_sum += outs[0].item_f32()? as f64;
-            ncorrect += outs[1].item_f32()? as f64;
-            total += outs[2].item_f32()? as f64;
-        }
-        Ok((loss_sum / batches.len().max(1) as f64, ncorrect / total.max(1.0)))
+    /// The underlying engine (e.g. for [`Session::evaluate`]).
+    pub fn session(&mut self) -> &mut Session<ClsTask> {
+        &mut self.session
     }
 
     /// Run fine-tuning under `schedule`.
-    pub fn run(&mut self, schedule: &mut dyn Schedule) -> Result<FinetuneReport> {
-        let rt = Runtime::global();
-        let start = Instant::now();
-        let mut tracker = LossTracker::new();
-        let mut trace: Vec<(PrecisionConfig, usize)> = Vec::new();
-        let mut val_curve = Vec::new();
-        let mut diverged = false;
-
-        let mut vrng = self.task.split_rng("valid");
-        let val_set: Vec<ClsBatch> =
-            (0..self.cfg.val_batches).map(|_| self.make_batch(&mut vrng)).collect();
-
-        'epochs: for epoch in 0..self.cfg.epochs {
-            let mut rng =
-                Pcg32::new(self.cfg.seed ^ ((epoch as u64 + 1) << 32) ^ 0xF17E);
-            for _ in 0..self.cfg.batches_per_epoch {
-                let batch = self.make_batch(&mut rng);
-                let pc = schedule.current();
-                let exe =
-                    rt.load(&self.man.model_path("cls", super::train_artifact_kind(&pc))?)?;
-                let lr = self.cfg.lr.at(self.state.step + 1) as f32;
-                let mut inputs = Vec::with_capacity(3 * self.state.params.len() + 5);
-                inputs.extend(self.state.params.iter().cloned());
-                inputs.extend(self.state.m.iter().cloned());
-                inputs.extend(self.state.v.iter().cloned());
-                inputs.push(HostTensor::scalar_f32((self.state.step + 1) as f32));
-                inputs.push(HostTensor::i32(
-                    vec![self.batch, self.seq_len],
-                    batch.tokens.clone(),
-                ));
-                inputs.push(HostTensor::i32(vec![self.batch], batch.labels.clone()));
-                inputs.push(HostTensor::f32(vec![8], pc.as_qcfg().to_vec()));
-                inputs.push(HostTensor::scalar_f32(lr));
-                let outs = exe.run(&inputs)?;
-                let loss = self.state.absorb_step_output(outs)? as f64;
-                // Re-stash the resident state into packed storage.
-                if let Some(spec) = &self.cfg.stash_format {
-                    self.state.pack_state(spec)?;
-                }
-                tracker.record(self.state.step, loss);
-                match trace.last_mut() {
-                    Some((last, n)) if *last == pc => *n += 1,
-                    _ => trace.push((pc, 1)),
-                }
-                if tracker.diverged() {
-                    diverged = true;
-                    crate::warn!("fine-tuning diverged at step {}", self.state.step);
-                    break 'epochs;
-                }
-            }
-            let (val_loss, val_acc) = self.evaluate(&val_set)?;
-            val_curve.push((self.state.step, val_loss));
-            schedule.observe_validation(val_loss);
-            crate::info!(
-                "epoch {epoch}: val {val_loss:.4} acc {:.1}% | {}",
-                val_acc * 100.0,
-                schedule.describe()
-            );
-        }
-
-        let (final_val_loss, final_accuracy) = self.evaluate(&val_set)?;
-        if let Some(path) = &self.cfg.checkpoint {
-            checkpoint::save_checkpoint(path, &self.state, &self.man.cls)?;
-            crate::info!("checkpoint saved to {path:?}");
-        }
-        Ok(FinetuneReport {
-            steps: self.state.step,
-            final_val_loss,
-            final_accuracy,
-            diverged,
-            trace,
-            val_curve,
-            schedule_desc: schedule.describe(),
-            wall_s: start.elapsed().as_secs_f64(),
-        })
+    pub fn run(&mut self, schedule: &mut dyn Schedule) -> Result<RunReport> {
+        self.session.run(schedule)
     }
 }

@@ -1,15 +1,40 @@
-//! L3 coordinator: training loops, the DSQ dynamic precision controller
-//! glue, checkpoints, and the CLI surface.
+//! L3 coordinator: the task-agnostic [`Session`] training engine, its
+//! task adapters, the DSQ dynamic precision controller glue,
+//! checkpoints, and the CLI surface.
+//!
+//! Architecture: one [`session::Session`] loop owns everything every
+//! workload shares — bounded-prefetch batch production, per-step
+//! artifact dispatch through a memoized executable cache
+//! ([`session::ExeCache`]), precision-trace accumulation, divergence
+//! abort, stash repacking, validation cadence (per-epoch or every N
+//! steps), and mid-run/final checkpointing with resumable schedule
+//! state. Per-workload behavior lives behind the [`session::Task`]
+//! trait ([`session::NmtTask`] for translation, [`session::ClsTask`]
+//! for classification); [`Trainer`] and [`Finetuner`] are thin
+//! CLI-level adapters that build a `Session` from their configs. Both
+//! produce one [`RunReport`] whose headline metric is tagged
+//! ([`TaskMetric::Bleu`] / [`TaskMetric::Accuracy`]) and which scores
+//! its schedule trace on any paper-scale workload via
+//! [`RunReport::cost_on`].
+//!
+//! Adding a workload (SASQ-style calibrated activations, an FP8-LM
+//! float recipe, …) is one new `Task` impl — batch supply, step/eval
+//! input assembly, eval normalization, headline metric — not another
+//! copy of the loop.
 
 pub mod cli;
 pub mod finetune;
 pub mod lr;
+pub mod session;
 pub mod trainer;
 
 pub use cli::dispatch;
-pub use finetune::{FinetuneConfig, FinetuneReport, Finetuner};
+pub use finetune::{FinetuneConfig, Finetuner};
 pub use lr::LrSchedule;
-pub use trainer::{TrainReport, Trainer, TrainerConfig};
+pub use session::{
+    ClsTask, ExeCache, NmtTask, RunReport, Session, SessionConfig, Task, TaskMetric,
+};
+pub use trainer::{Trainer, TrainerConfig};
 
 use crate::schedule::{FormatSpec, PrecisionConfig};
 

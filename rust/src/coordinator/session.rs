@@ -1,0 +1,952 @@
+//! The task-agnostic training engine: one `Session` loop for every
+//! workload, with per-task behavior factored into the [`Task`] trait.
+//!
+//! The paper evaluates a single algorithm (the DSQ precision schedule)
+//! across trained-from-scratch translation and fine-tuned
+//! classification; this module is the one implementation of that loop.
+//! A [`Session`] owns everything the tasks share:
+//!
+//! * bounded-prefetch batch production (a generator thread per epoch
+//!   feeding a `sync_channel`, so corpus synthesis never blocks steps);
+//! * per-step artifact dispatch through a memoized [`ExeCache`] — each
+//!   `(model, artifact-kind)` executable is resolved once per run
+//!   instead of once per step;
+//! * the precision-trace accumulator that feeds the cost model;
+//! * divergence detection and abort (Table 5's "Failed" rows);
+//! * stash repacking (`--stash-state`: step outputs arrive dense and go
+//!   back to packed storage every step);
+//! * validation cadence — per-epoch always, plus every
+//!   `val_every_steps` when set — feeding the schedule's plateau
+//!   detector;
+//! * checkpointing, mid-run (`checkpoint_every_steps`) and final, with
+//!   the schedule's resumable [`ScheduleState`] in the trailer so a
+//!   resumed run continues the DSQ ladder at the saved level.
+//!
+//! A [`Task`] supplies what differs: batch synthesis, step/eval input
+//! assembly, eval-output normalization, and the headline metric
+//! ([`TaskMetric::Bleu`] via greedy decode, [`TaskMetric::Accuracy`]
+//! from the final eval). [`NmtTask`] and [`ClsTask`] adapt the
+//! synthetic translation and classification corpora; a new workload
+//! (calibrated SASQ-style activations, FP8 float formats, …) is one
+//! more `Task` impl — not a third copy of the loop.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::costmodel::{self, TransformerWorkload};
+use crate::data::batcher::{assemble_cls, Batcher, ClsBatch};
+use crate::data::{Batch, ClassifyTask, TranslationTask};
+use crate::metrics::{bleu, LossTracker};
+use crate::model::{checkpoint, ModelState};
+use crate::runtime::{ArtifactManifest, Executable, HostTensor, Runtime};
+use crate::schedule::{FormatSpec, PrecisionConfig, Schedule, ScheduleState};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::{Error, Result};
+
+use super::lr::LrSchedule;
+
+/// Task-agnostic session knobs (each task adapter maps its CLI-level
+/// config onto this).
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub artifacts: PathBuf,
+    pub seed: u64,
+    pub epochs: usize,
+    pub batches_per_epoch: usize,
+    pub lr: LrSchedule,
+    /// Validation batches (fixed set, disjoint stream).
+    pub val_batches: usize,
+    /// Also validate (and feed the controller) every N steps
+    /// (0 = per-epoch only).
+    pub val_every_steps: usize,
+    pub checkpoint: Option<PathBuf>,
+    pub init_checkpoint: Option<PathBuf>,
+    /// Save `checkpoint` every N steps mid-run (0 = final save only).
+    /// Mid-run checkpoints are crash-salvage: resuming one starts a
+    /// *fresh* run from the saved params/Adam step/ladder level — the
+    /// epoch loop restarts, so the resumed run re-draws its own epoch
+    /// batch streams rather than continuing the interrupted epoch
+    /// mid-stream (vary `seed` on resume to avoid re-seeing data).
+    pub checkpoint_every_steps: usize,
+    /// Bounded prefetch depth for the batch generator thread (≥ 1).
+    pub prefetch: usize,
+    /// Hold the resident state (params + Adam moments) physically packed
+    /// in this format between steps, decoding only at the PJRT boundary
+    /// — the coordinator-side stash. Quantizes the resident state every
+    /// step (Direct-Quantized-Training style), so it changes numerics;
+    /// `None` (the default) keeps dense f32 state. Checkpoints written
+    /// from a packed state use the packed v2 format and shrink
+    /// accordingly.
+    pub stash_format: Option<FormatSpec>,
+}
+
+/// One workload plugged into the [`Session`] engine.
+pub trait Task {
+    /// Batch type handed from the generator thread to the step loop.
+    type Batch: Send + 'static;
+
+    /// Manifest model key ("nmt" / "cls").
+    fn model(&self) -> &'static str;
+
+    /// Short run label for logs.
+    fn describe(&self) -> &'static str;
+
+    /// Build this epoch's batch producer. The closure runs on the
+    /// generator thread (corpus synthesis happens off the step loop);
+    /// it yields the epoch's batches in order, then `None`.
+    fn batch_producer(
+        &self,
+        epoch: usize,
+        nbatches: usize,
+    ) -> Box<dyn FnMut() -> Option<Self::Batch> + Send>;
+
+    /// The fixed validation set (identical every validation pass).
+    fn val_batches(&self, n: usize) -> Vec<Self::Batch>;
+
+    /// Append the batch tensors of a train step (called after the state
+    /// tensors and the Adam-step scalar, before qcfg + lr).
+    fn push_step_inputs(&self, batch: &Self::Batch, inputs: &mut Vec<HostTensor>);
+
+    /// Append the batch tensors of an eval call (after the params).
+    fn push_eval_inputs(&self, batch: &Self::Batch, inputs: &mut Vec<HostTensor>);
+
+    /// Normalize one eval output tuple to `(loss_sum, ncorrect, n)`,
+    /// where `n` counts the task's evaluation units (non-pad target
+    /// tokens for translation, examples for classification) and
+    /// `loss_sum` is the loss summed over those units — so
+    /// `Σ loss_sum / Σ n` is the per-unit mean regardless of how loss
+    /// mass is distributed across batches.
+    fn eval_terms(&self, outs: &[HostTensor]) -> Result<(f64, f64, f64)>;
+
+    /// The task's headline metric for the report.
+    fn final_metric(
+        &self,
+        state: &ModelState,
+        exes: &mut ExeCache,
+        final_eval_acc: f64,
+        diverged: bool,
+    ) -> Result<Option<TaskMetric>>;
+}
+
+/// Per-run memoized executable cache for one model's artifacts.
+///
+/// The global [`Runtime`] already caches *compilation* by path, but the
+/// per-step path (`manifest lookup -> PathBuf join -> global mutex ->
+/// hash probe -> Arc clone`) used to run on every single step in both
+/// training loops. This cache resolves each artifact kind exactly once
+/// per run and afterwards serves a plain `HashMap` hit with no path
+/// materialization or global locking (`benches/train_step_latency.rs`
+/// records the per-step win).
+pub struct ExeCache {
+    dir: PathBuf,
+    artifacts: BTreeMap<String, String>,
+    cache: HashMap<String, Arc<Executable>>,
+}
+
+impl ExeCache {
+    /// Build over one model family's manifest entries.
+    pub fn new(man: &ArtifactManifest, model: &str) -> Result<Self> {
+        let mm = man.model(model)?;
+        Ok(ExeCache {
+            dir: man.dir.clone(),
+            artifacts: mm.artifacts.clone(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// The executable for an artifact kind ("train_bfp", "eval", …),
+    /// loaded at most once per run.
+    pub fn get(&mut self, kind: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.get(kind) {
+            return Ok(e.clone());
+        }
+        let file = self
+            .artifacts
+            .get(kind)
+            .ok_or_else(|| Error::Manifest(format!("no '{kind}' artifact")))?;
+        let exe = Runtime::global().load(&self.dir.join(file))?;
+        self.cache.insert(kind.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Distinct artifact kinds resolved so far.
+    pub fn loaded(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// The task's headline quality metric, tagged by kind.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TaskMetric {
+    /// Corpus BLEU from greedy decode (translation).
+    Bleu(f64),
+    /// Fraction correct on the validation set (classification).
+    Accuracy(f64),
+}
+
+impl TaskMetric {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TaskMetric::Bleu(_) => "bleu",
+            TaskMetric::Accuracy(_) => "accuracy",
+        }
+    }
+
+    pub fn value(&self) -> f64 {
+        match *self {
+            TaskMetric::Bleu(v) | TaskMetric::Accuracy(v) => v,
+        }
+    }
+}
+
+/// Result of one session run (both tasks).
+///
+/// **Loss convention:** `final_val_loss` (and every `val_curve` entry)
+/// is the mean loss *per evaluation unit*, where a unit is a non-pad
+/// target token for translation and an example for classification.
+/// Batch contributions are weighted by the eval artifact's returned
+/// count (`outs[2]`), so the number is comparable across partial
+/// batches and between the two tasks' conventions.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    pub steps: u64,
+    pub final_val_loss: f64,
+    pub best_val_loss: f64,
+    /// Fraction correct in the final validation pass (token-level for
+    /// translation, example-level for classification).
+    pub final_eval_acc: f64,
+    /// Headline task metric (`None` e.g. for a diverged or
+    /// decode-skipped translation run).
+    pub metric: Option<TaskMetric>,
+    pub diverged: bool,
+    pub trace: Vec<(PrecisionConfig, usize)>,
+    pub loss_curve: Vec<(u64, f64)>,
+    pub val_curve: Vec<(u64, f64)>,
+    pub schedule_desc: String,
+    pub wall_s: f64,
+}
+
+impl RunReport {
+    pub fn steps_per_s(&self) -> f64 {
+        self.steps as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// BLEU, when this was a translation run that decoded.
+    pub fn bleu(&self) -> Option<f64> {
+        match self.metric {
+            Some(TaskMetric::Bleu(b)) => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Accuracy, when this was a classification run.
+    pub fn accuracy(&self) -> Option<f64> {
+        match self.metric {
+            Some(TaskMetric::Accuracy(a)) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Relative hardware cost of this run's schedule trace on a
+    /// paper-scale workload (the DSQ table columns). `None` when the
+    /// trace is unscored — an fp32-only run (the paper leaves fp32 rows
+    /// as "-") or a run that took zero steps.
+    pub fn cost_on(&self, w: &TransformerWorkload) -> Option<(f64, f64)> {
+        let row = costmodel::tables::dsq_trace_row(w, &self.trace);
+        row.arith_rel.zip(row.dram_rel)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("steps", Json::num(self.steps as f64)),
+            ("final_val_loss", Json::num(self.final_val_loss)),
+            ("best_val_loss", Json::num(self.best_val_loss)),
+            ("final_eval_acc", Json::num(self.final_eval_acc)),
+            (
+                "metric",
+                self.metric.map_or(Json::Null, |m| {
+                    Json::obj(vec![
+                        ("kind", Json::str(m.kind())),
+                        ("value", Json::num(m.value())),
+                    ])
+                }),
+            ),
+            ("diverged", Json::Bool(self.diverged)),
+            ("schedule", Json::str(&self.schedule_desc)),
+            ("wall_s", Json::num(self.wall_s)),
+            (
+                "trace",
+                Json::arr(self.trace.iter().map(|(p, n)| {
+                    Json::obj(vec![
+                        ("precision", Json::str(&p.notation())),
+                        ("formats", Json::str(&p.spec_string())),
+                        ("steps", Json::num(*n as f64)),
+                    ])
+                })),
+            ),
+            (
+                "loss_curve",
+                Json::arr(
+                    self.loss_curve
+                        .iter()
+                        .map(|&(s, l)| Json::arr([Json::num(s as f64), Json::num(l)])),
+                ),
+            ),
+            (
+                "val_curve",
+                Json::arr(
+                    self.val_curve
+                        .iter()
+                        .map(|&(s, l)| Json::arr([Json::num(s as f64), Json::num(l)])),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The generic training/fine-tuning engine. `Trainer` and `Finetuner`
+/// are thin task adapters over this.
+pub struct Session<T: Task> {
+    cfg: SessionConfig,
+    task: T,
+    man: ArtifactManifest,
+    state: ModelState,
+    exes: ExeCache,
+    model: &'static str,
+    /// Schedule state recovered from `init_checkpoint`, applied to the
+    /// schedule at the start of [`Session::run`].
+    restored_schedule: Option<ScheduleState>,
+}
+
+impl<T: Task> Session<T> {
+    /// Initialize model state (from the init artifact or a checkpoint —
+    /// the latter also recovering any resumable schedule state) and the
+    /// per-run executable cache.
+    pub fn new(cfg: SessionConfig, task: T, man: ArtifactManifest) -> Result<Self> {
+        if cfg.prefetch == 0 {
+            return Err(Error::Config("prefetch depth must be >= 1".into()));
+        }
+        if cfg.checkpoint_every_steps > 0 && cfg.checkpoint.is_none() {
+            return Err(Error::Config(
+                "checkpoint-every requires a checkpoint path (mid-run saves \
+                 would silently go nowhere)"
+                    .into(),
+            ));
+        }
+        let model = task.model();
+        let mm = man.model(model)?;
+        let (mut state, restored_schedule) = match &cfg.init_checkpoint {
+            Some(path) => checkpoint::load_checkpoint_full(path, mm)?,
+            None => (ModelState::init(Runtime::global(), &man, model, cfg.seed as i32)?, None),
+        };
+        if let Some(spec) = &cfg.stash_format {
+            state.pack_state(spec)?;
+        }
+        let exes = ExeCache::new(&man, model)?;
+        Ok(Session { cfg, task, man, state, exes, model, restored_schedule })
+    }
+
+    pub fn cfg(&self) -> &SessionConfig {
+        &self.cfg
+    }
+
+    pub fn task(&self) -> &T {
+        &self.task
+    }
+
+    pub fn state(&self) -> &ModelState {
+        &self.state
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.man
+    }
+
+    /// Distinct executables resolved so far this run.
+    pub fn executables_loaded(&self) -> usize {
+        self.exes.loaded()
+    }
+
+    /// Mean per-unit loss + accuracy over batches (see [`RunReport`]
+    /// for the unit convention).
+    pub fn evaluate(&mut self, batches: &[T::Batch]) -> Result<(f64, f64)> {
+        let exe = self.exes.get("eval")?;
+        let (mut loss_sum, mut ncorrect, mut total) = (0f64, 0f64, 0f64);
+        for batch in batches {
+            let mut inputs = self.state.params.clone();
+            self.task.push_eval_inputs(batch, &mut inputs);
+            let outs = exe.run(&inputs)?;
+            let (l, c, n) = self.task.eval_terms(&outs)?;
+            loss_sum += l;
+            ncorrect += c;
+            total += n;
+        }
+        Ok((loss_sum / total.max(1.0), ncorrect / total.max(1.0)))
+    }
+
+    fn validate(
+        &mut self,
+        schedule: &mut dyn Schedule,
+        val_set: &[T::Batch],
+        val_curve: &mut Vec<(u64, f64)>,
+    ) -> Result<(f64, f64)> {
+        let (val_loss, val_acc) = self.evaluate(val_set)?;
+        val_curve.push((self.state.step, val_loss));
+        schedule.observe_validation(val_loss);
+        Ok((val_loss, val_acc))
+    }
+
+    /// Save `cfg.checkpoint` (no-op when unset) with the schedule's
+    /// resumable state in the trailer.
+    fn save_checkpoint(&self, schedule: &dyn Schedule) -> Result<()> {
+        let Some(path) = &self.cfg.checkpoint else { return Ok(()) };
+        let mm = self.man.model(self.model)?;
+        checkpoint::save_checkpoint_full(path, &self.state, mm, schedule.snapshot().as_ref())?;
+        crate::info!("checkpoint saved to {path:?}");
+        Ok(())
+    }
+
+    /// Run the full loop under `schedule`.
+    pub fn run(&mut self, schedule: &mut dyn Schedule) -> Result<RunReport> {
+        if let Some(s) = self.restored_schedule.take() {
+            schedule.restore(&s);
+            crate::info!("schedule state resumed from checkpoint: {}", schedule.describe());
+        }
+        let start = Instant::now();
+        let mut tracker = LossTracker::new();
+        let mut trace: Vec<(PrecisionConfig, usize)> = Vec::new();
+        let mut val_curve: Vec<(u64, f64)> = Vec::new();
+        let val_set = self.task.val_batches(self.cfg.val_batches);
+        let mut diverged = false;
+        // Most recent validation as (step, loss, acc): dedupes the
+        // epoch-boundary pass when `val_every_steps` lands on it (double-
+        // observing one loss would spuriously advance the ladder) and
+        // lets the final report reuse it instead of re-running eval.
+        let mut last_val: Option<(u64, f64, f64)> = None;
+
+        crate::info!(
+            "{}: {} params, {} epochs x {} batches, schedule {}",
+            self.task.describe(),
+            self.state.numel(),
+            self.cfg.epochs,
+            self.cfg.batches_per_epoch,
+            schedule.describe()
+        );
+
+        'epochs: for epoch in 0..self.cfg.epochs {
+            // Batch generator thread (bounded prefetch).
+            let mut produce = self.task.batch_producer(epoch, self.cfg.batches_per_epoch);
+            let (tx, rx) = mpsc::sync_channel::<T::Batch>(self.cfg.prefetch);
+            let producer = std::thread::spawn(move || {
+                while let Some(batch) = produce() {
+                    if tx.send(batch).is_err() {
+                        return; // consumer gone (divergence abort)
+                    }
+                }
+            });
+
+            for batch in rx.iter() {
+                let pc = schedule.current();
+                let exe = self.exes.get(super::train_artifact_kind(&pc))?;
+                let lr = self.cfg.lr.at(self.state.step + 1) as f32;
+                let mut inputs = Vec::with_capacity(3 * self.state.params.len() + 6);
+                inputs.extend(self.state.params.iter().cloned());
+                inputs.extend(self.state.m.iter().cloned());
+                inputs.extend(self.state.v.iter().cloned());
+                inputs.push(HostTensor::scalar_f32((self.state.step + 1) as f32));
+                self.task.push_step_inputs(&batch, &mut inputs);
+                inputs.push(HostTensor::f32(vec![8], pc.as_qcfg().to_vec()));
+                inputs.push(HostTensor::scalar_f32(lr));
+                let outs = exe.run(&inputs)?;
+                let loss = self.state.absorb_step_output(outs)? as f64;
+                // Re-stash: step outputs arrive dense from the artifact;
+                // the resident copy goes back to packed storage.
+                if let Some(spec) = &self.cfg.stash_format {
+                    self.state.pack_state(spec)?;
+                }
+                tracker.record(self.state.step, loss);
+                match trace.last_mut() {
+                    Some((last, n)) if *last == pc => *n += 1,
+                    _ => trace.push((pc, 1)),
+                }
+                if tracker.diverged() {
+                    diverged = true;
+                    crate::warn!("{} diverged at step {}", self.task.describe(), self.state.step);
+                    drop(rx);
+                    break 'epochs;
+                }
+                if self.cfg.val_every_steps > 0
+                    && self.state.step % self.cfg.val_every_steps as u64 == 0
+                {
+                    let (val_loss, val_acc) =
+                        self.validate(schedule, &val_set, &mut val_curve)?;
+                    last_val = Some((self.state.step, val_loss, val_acc));
+                    crate::info!(
+                        "step {}: val {val_loss:.4} acc {:.1}% | {}",
+                        self.state.step,
+                        val_acc * 100.0,
+                        schedule.describe()
+                    );
+                }
+                if self.cfg.checkpoint_every_steps > 0
+                    && self.state.step % self.cfg.checkpoint_every_steps as u64 == 0
+                {
+                    self.save_checkpoint(schedule)?;
+                }
+            }
+            producer.join().map_err(|_| Error::Config("batch producer panicked".into()))?;
+
+            // Per-epoch validation — unless the step cadence already
+            // validated at exactly this step.
+            if !last_val.is_some_and(|(s, _, _)| s == self.state.step) {
+                let (val_loss, val_acc) = self.validate(schedule, &val_set, &mut val_curve)?;
+                last_val = Some((self.state.step, val_loss, val_acc));
+                crate::info!(
+                    "epoch {epoch}: train {:.4} | val {val_loss:.4} acc {:.1}% | {}",
+                    tracker.window_mean(self.cfg.batches_per_epoch).unwrap_or(f64::NAN),
+                    val_acc * 100.0,
+                    schedule.describe()
+                );
+            }
+        }
+
+        // Eval is deterministic and the state hasn't changed since the
+        // last validation pass, so reuse it; re-run only when the run
+        // broke off mid-epoch (divergence) or never validated.
+        let (final_val_loss, final_eval_acc) = match last_val {
+            Some((s, l, a)) if s == self.state.step => (l, a),
+            _ => self.evaluate(&val_set)?,
+        };
+        let metric =
+            self.task.final_metric(&self.state, &mut self.exes, final_eval_acc, diverged)?;
+        // Never overwrite the checkpoint with diverged (NaN/blown-up)
+        // state — a crash-salvage file from `checkpoint_every_steps`
+        // holding the last good params is worth keeping.
+        if diverged {
+            if self.cfg.checkpoint.is_some() {
+                crate::warn!("skipping final checkpoint: state diverged");
+            }
+        } else {
+            self.save_checkpoint(schedule)?;
+        }
+        Ok(RunReport {
+            steps: self.state.step,
+            final_val_loss,
+            best_val_loss: val_curve
+                .iter()
+                .map(|&(_, l)| l)
+                .fold(final_val_loss, f64::min),
+            final_eval_acc,
+            metric,
+            diverged,
+            trace,
+            loss_curve: tracker.history().to_vec(),
+            val_curve,
+            schedule_desc: schedule.describe(),
+            wall_s: start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+/// Translation task adapter ([`TranslationTask`] + fixed-shape
+/// [`Batcher`]): the trained-from-scratch seq2seq workload, with greedy
+/// BLEU as the headline metric.
+pub struct NmtTask {
+    pub task: TranslationTask,
+    pub batcher: Batcher,
+    pub seed: u64,
+    /// Test batches for the BLEU decode (0 = skip).
+    pub bleu_batches: usize,
+}
+
+impl Task for NmtTask {
+    type Batch = Batch;
+
+    fn model(&self) -> &'static str {
+        "nmt"
+    }
+
+    fn describe(&self) -> &'static str {
+        "translation training"
+    }
+
+    fn batch_producer(
+        &self,
+        epoch: usize,
+        nbatches: usize,
+    ) -> Box<dyn FnMut() -> Option<Batch> + Send> {
+        let task = self.task.clone();
+        let batcher = self.batcher.clone();
+        let epoch_seed = self.seed ^ ((epoch as u64 + 1) << 32);
+        // The pool is synthesized lazily on the generator thread, then
+        // drained batch by batch through the bounded channel.
+        let mut queue: Option<std::vec::IntoIter<Batch>> = None;
+        Box::new(move || {
+            queue
+                .get_or_insert_with(|| {
+                    let mut rng = Pcg32::new(epoch_seed);
+                    let mut pool: Vec<_> = (0..nbatches * batcher.batch)
+                        .map(|_| task.sample_pair(&mut rng))
+                        .collect();
+                    batcher.epoch(&mut pool, &mut rng).into_iter()
+                })
+                .next()
+        })
+    }
+
+    fn val_batches(&self, n: usize) -> Vec<Batch> {
+        let mut rng = self.task.split_rng("valid");
+        (0..n)
+            .map(|_| {
+                let pairs: Vec<_> =
+                    (0..self.batcher.batch).map(|_| self.task.sample_pair(&mut rng)).collect();
+                self.batcher.assemble(&pairs)
+            })
+            .collect()
+    }
+
+    fn push_step_inputs(&self, batch: &Batch, inputs: &mut Vec<HostTensor>) {
+        let (b, s, t) = (self.batcher.batch, self.batcher.src_len, self.batcher.tgt_len);
+        inputs.push(HostTensor::i32(vec![b, s], batch.src.clone()));
+        inputs.push(HostTensor::i32(vec![b, t], batch.tgt_in.clone()));
+        inputs.push(HostTensor::i32(vec![b, t], batch.tgt_out.clone()));
+    }
+
+    fn push_eval_inputs(&self, batch: &Batch, inputs: &mut Vec<HostTensor>) {
+        self.push_step_inputs(batch, inputs);
+    }
+
+    /// The nmt eval artifact returns `(loss_sum, ncorrect, ntok)` — the
+    /// loss is already summed over non-pad target tokens.
+    fn eval_terms(&self, outs: &[HostTensor]) -> Result<(f64, f64, f64)> {
+        Ok((
+            outs[0].item_f32()? as f64,
+            outs[1].item_f32()? as f64,
+            outs[2].item_f32()? as f64,
+        ))
+    }
+
+    /// Greedy-decode BLEU on the test stream (skipped for diverged runs
+    /// — there is nothing meaningful to decode).
+    fn final_metric(
+        &self,
+        state: &ModelState,
+        exes: &mut ExeCache,
+        _final_eval_acc: f64,
+        diverged: bool,
+    ) -> Result<Option<TaskMetric>> {
+        if self.bleu_batches == 0 || diverged {
+            return Ok(None);
+        }
+        let exe = exes.get("decode")?;
+        let (b, s, t) = (self.batcher.batch, self.batcher.src_len, self.batcher.tgt_len);
+        let mut rng = self.task.split_rng("test");
+        let mut pairs = Vec::new();
+        for _ in 0..self.bleu_batches {
+            let batch_pairs: Vec<_> = (0..b).map(|_| self.task.sample_pair(&mut rng)).collect();
+            let batch = self.batcher.assemble(&batch_pairs);
+            let mut inputs = state.params.clone();
+            inputs.push(HostTensor::i32(vec![b, s], batch.src.clone()));
+            let outs = exe.run(&inputs)?;
+            let toks = outs[0].as_i32()?;
+            for (i, p) in batch_pairs.iter().enumerate() {
+                let hyp = bleu::sentence_tokens(&toks[i * t..(i + 1) * t]);
+                let reference = bleu::sentence_tokens(&p.tgt);
+                pairs.push((hyp, reference));
+            }
+        }
+        Ok(Some(TaskMetric::Bleu(bleu::corpus_bleu(&pairs).bleu)))
+    }
+}
+
+/// Classification task adapter ([`ClassifyTask`]): the fine-tuned
+/// GLUE-style workload, with validation accuracy as the headline
+/// metric.
+pub struct ClsTask {
+    pub task: ClassifyTask,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+}
+
+impl ClsTask {
+    fn make_batch(&self, rng: &mut Pcg32) -> ClsBatch {
+        make_cls_batch(&self.task, self.batch, self.seq_len, rng)
+    }
+}
+
+fn make_cls_batch(
+    task: &ClassifyTask,
+    batch: usize,
+    seq_len: usize,
+    rng: &mut Pcg32,
+) -> ClsBatch {
+    let exs: Vec<_> = (0..batch).map(|_| task.sample(rng)).collect();
+    assemble_cls(&exs, seq_len)
+}
+
+impl Task for ClsTask {
+    type Batch = ClsBatch;
+
+    fn model(&self) -> &'static str {
+        "cls"
+    }
+
+    fn describe(&self) -> &'static str {
+        "classification fine-tuning"
+    }
+
+    fn batch_producer(
+        &self,
+        epoch: usize,
+        nbatches: usize,
+    ) -> Box<dyn FnMut() -> Option<ClsBatch> + Send> {
+        let task = self.task.clone();
+        let (b, l) = (self.batch, self.seq_len);
+        let mut rng = Pcg32::new(self.seed ^ ((epoch as u64 + 1) << 32) ^ 0xF17E);
+        let mut left = nbatches;
+        Box::new(move || {
+            if left == 0 {
+                return None;
+            }
+            left -= 1;
+            Some(make_cls_batch(&task, b, l, &mut rng))
+        })
+    }
+
+    fn val_batches(&self, n: usize) -> Vec<ClsBatch> {
+        let mut rng = self.task.split_rng("valid");
+        (0..n).map(|_| self.make_batch(&mut rng)).collect()
+    }
+
+    fn push_step_inputs(&self, batch: &ClsBatch, inputs: &mut Vec<HostTensor>) {
+        inputs.push(HostTensor::i32(vec![self.batch, self.seq_len], batch.tokens.clone()));
+        inputs.push(HostTensor::i32(vec![self.batch], batch.labels.clone()));
+    }
+
+    fn push_eval_inputs(&self, batch: &ClsBatch, inputs: &mut Vec<HostTensor>) {
+        self.push_step_inputs(batch, inputs);
+    }
+
+    /// The cls eval artifact returns `(mean_loss, ncorrect, n)` — the
+    /// loss is the *batch mean*, so it is re-weighted by the returned
+    /// example count to make `Σ loss_sum / Σ n` a per-example mean
+    /// (comparable with the trainer's per-token convention).
+    fn eval_terms(&self, outs: &[HostTensor]) -> Result<(f64, f64, f64)> {
+        let n = outs[2].item_f32()? as f64;
+        Ok((outs[0].item_f32()? as f64 * n, outs[1].item_f32()? as f64, n))
+    }
+
+    fn final_metric(
+        &self,
+        _state: &ModelState,
+        _exes: &mut ExeCache,
+        final_eval_acc: f64,
+        _diverged: bool,
+    ) -> Result<Option<TaskMetric>> {
+        Ok(Some(TaskMetric::Accuracy(final_eval_acc)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{ClassifyConfig, TranslationConfig, Variant};
+
+    fn nmt_task() -> NmtTask {
+        NmtTask {
+            task: TranslationTask::new(TranslationConfig {
+                vocab: 256,
+                src_len: 24,
+                tgt_len: 24,
+                variant: Variant::Iwslt,
+                seed: 7,
+            }),
+            batcher: Batcher::new(16, 24, 24),
+            seed: 7,
+            bleu_batches: 0,
+        }
+    }
+
+    fn cls_task() -> ClsTask {
+        ClsTask {
+            task: ClassifyTask::new(ClassifyConfig {
+                vocab: 256,
+                seq_len: 48,
+                nclasses: 3,
+                seed: 7,
+            }),
+            batch: 16,
+            seq_len: 48,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn nmt_producer_yields_exactly_nbatches_then_none() {
+        let t = nmt_task();
+        let mut produce = t.batch_producer(0, 5);
+        let mut got = 0;
+        while let Some(b) = produce() {
+            assert_eq!(b.src.len(), 16 * 24);
+            got += 1;
+        }
+        assert_eq!(got, 5);
+        assert!(produce().is_none(), "stays exhausted");
+    }
+
+    #[test]
+    fn nmt_producer_is_deterministic_per_epoch_and_differs_across_epochs() {
+        let t = nmt_task();
+        let (mut a, mut b, mut c) =
+            (t.batch_producer(0, 2), t.batch_producer(0, 2), t.batch_producer(1, 2));
+        let (x, y, z) = (a().unwrap(), b().unwrap(), c().unwrap());
+        assert_eq!(x, y, "same epoch seed, same stream");
+        assert_ne!(x, z, "different epoch, different stream");
+    }
+
+    #[test]
+    fn cls_producer_yields_exactly_nbatches_then_none() {
+        let t = cls_task();
+        let mut produce = t.batch_producer(3, 4);
+        let mut got = 0;
+        while let Some(b) = produce() {
+            assert_eq!(b.tokens.len(), 16 * 48);
+            got += 1;
+        }
+        assert_eq!(got, 4);
+        assert!(produce().is_none());
+    }
+
+    #[test]
+    fn val_batches_are_fixed_across_calls() {
+        let t = cls_task();
+        assert_eq!(t.val_batches(3), t.val_batches(3));
+        let n = nmt_task();
+        assert_eq!(n.val_batches(2), n.val_batches(2));
+    }
+
+    #[test]
+    fn step_inputs_have_expected_arity_and_shapes() {
+        let t = nmt_task();
+        let mut produce = t.batch_producer(0, 1);
+        let batch = produce().unwrap();
+        let mut inputs = Vec::new();
+        t.push_step_inputs(&batch, &mut inputs);
+        assert_eq!(inputs.len(), 3);
+        assert_eq!(inputs[0].shape, vec![16, 24]);
+
+        let c = cls_task();
+        let mut produce = c.batch_producer(0, 1);
+        let batch = produce().unwrap();
+        let mut inputs = Vec::new();
+        c.push_step_inputs(&batch, &mut inputs);
+        assert_eq!(inputs.len(), 2);
+        assert_eq!(inputs[0].shape, vec![16, 48]);
+        assert_eq!(inputs[1].shape, vec![16]);
+    }
+
+    #[test]
+    fn eval_terms_normalize_per_unit() {
+        // nmt: already a sum over ntok.
+        let t = nmt_task();
+        let outs = vec![
+            HostTensor::scalar_f32(12.0),
+            HostTensor::scalar_f32(30.0),
+            HostTensor::scalar_f32(40.0),
+        ];
+        assert_eq!(t.eval_terms(&outs).unwrap(), (12.0, 30.0, 40.0));
+        // cls: batch-mean loss is re-weighted by the example count, so
+        // two batches of different sizes average per example.
+        let c = cls_task();
+        let outs = vec![
+            HostTensor::scalar_f32(0.5),
+            HostTensor::scalar_f32(10.0),
+            HostTensor::scalar_f32(16.0),
+        ];
+        assert_eq!(c.eval_terms(&outs).unwrap(), (8.0, 10.0, 16.0));
+    }
+
+    #[test]
+    fn new_rejects_bad_config_before_touching_the_runtime() {
+        let empty = crate::runtime::ModelManifest {
+            config: Default::default(),
+            params: vec![],
+            artifacts: Default::default(),
+        };
+        let man = ArtifactManifest {
+            dir: "/nonexistent".into(),
+            nmt: empty.clone(),
+            cls: empty,
+            quant_artifacts: Default::default(),
+            quant_shape: vec![],
+        };
+        let cfg = SessionConfig {
+            artifacts: "/nonexistent".into(),
+            seed: 0,
+            epochs: 1,
+            batches_per_epoch: 1,
+            lr: LrSchedule::Constant { lr: 1e-3 },
+            val_batches: 1,
+            val_every_steps: 0,
+            checkpoint: None,
+            init_checkpoint: None,
+            checkpoint_every_steps: 0,
+            prefetch: 0,
+            stash_format: None,
+        };
+        // prefetch 0 is rejected up front (no PJRT involved).
+        let r = Session::new(cfg.clone(), nmt_task(), man.clone());
+        assert!(matches!(r, Err(Error::Config(_))));
+        // checkpoint-every without a checkpoint path would silently
+        // save nothing mid-run — rejected up front too.
+        let cfg = SessionConfig { prefetch: 4, checkpoint_every_steps: 5, ..cfg };
+        let r = Session::new(cfg, nmt_task(), man);
+        assert!(matches!(r, Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn task_metric_accessors() {
+        let b = TaskMetric::Bleu(31.5);
+        assert_eq!(b.kind(), "bleu");
+        assert_eq!(b.value(), 31.5);
+        let a = TaskMetric::Accuracy(0.75);
+        assert_eq!(a.kind(), "accuracy");
+        assert_eq!(a.value(), 0.75);
+    }
+
+    #[test]
+    fn run_report_metric_helpers_and_json() {
+        let mk = |metric| RunReport {
+            steps: 4,
+            final_val_loss: 1.0,
+            best_val_loss: 0.9,
+            final_eval_acc: 0.5,
+            metric,
+            diverged: false,
+            trace: vec![(PrecisionConfig::FP32, 4)],
+            loss_curve: vec![(1, 2.0)],
+            val_curve: vec![(4, 1.0)],
+            schedule_desc: "static fp32".into(),
+            wall_s: 2.0,
+        };
+        let r = mk(Some(TaskMetric::Bleu(20.0)));
+        assert_eq!(r.bleu(), Some(20.0));
+        assert_eq!(r.accuracy(), None);
+        assert_eq!(r.steps_per_s(), 2.0);
+        let s = r.to_json().to_string_pretty();
+        assert!(s.contains("\"kind\""), "{s}");
+        assert!(s.contains("bleu"), "{s}");
+        let r = mk(Some(TaskMetric::Accuracy(0.8)));
+        assert_eq!(r.accuracy(), Some(0.8));
+        assert_eq!(r.bleu(), None);
+        let r = mk(None);
+        assert!(r.to_json().to_string_pretty().contains("null"));
+        // fp32-only traces stay unscored, like the paper's "-" rows.
+        assert!(r.cost_on(&TransformerWorkload::iwslt_6layer()).is_none());
+    }
+}

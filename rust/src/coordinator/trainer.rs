@@ -1,31 +1,19 @@
-//! The seq2seq training coordinator: the L3 loop that drives the AOT
-//! train/eval/decode artifacts with a precision schedule.
-//!
-//! Responsibilities per run:
-//! * corpus synthesis + prefetch (generator thread + bounded channel);
-//! * step execution through PJRT, tracking the training loss;
-//! * per-epoch validation (fixed batches from the disjoint `valid`
-//!   stream) feeding the schedule's plateau detector;
-//! * cost accounting: a `(PrecisionConfig, steps)` trace that the cost
-//!   model turns into the paper's time-weighted DSQ rows;
-//! * divergence detection (Table 5's "Failed" entries);
-//! * BLEU via greedy decode against the synthetic references;
-//! * checkpointing.
+//! Seq2seq training adapter: [`Trainer`] maps the CLI-level
+//! [`TrainerConfig`] onto the generic [`Session`] engine with an
+//! [`NmtTask`] (synthetic translation corpus, BLEU headline metric).
+//! The loop itself — prefetch, step dispatch, trace, divergence,
+//! validation, checkpointing — lives in [`super::session`].
 
 use std::path::PathBuf;
-use std::sync::mpsc;
-use std::time::Instant;
 
-use crate::costmodel::{self, TransformerWorkload};
-use crate::data::{Batch, Batcher, TranslationConfig, TranslationTask, Variant};
-use crate::metrics::{bleu, LossTracker};
-use crate::model::{checkpoint, ModelState};
-use crate::runtime::{ArtifactManifest, HostTensor, Runtime};
-use crate::schedule::{FormatSpec, PrecisionConfig, Schedule};
-use crate::util::json::Json;
-use crate::{Error, Result};
+use crate::data::{Batcher, TranslationConfig, TranslationTask, Variant};
+use crate::model::ModelState;
+use crate::runtime::ArtifactManifest;
+use crate::schedule::{FormatSpec, Schedule};
+use crate::Result;
 
 use super::lr::LrSchedule;
+use super::session::{NmtTask, RunReport, Session, SessionConfig};
 
 /// Trainer configuration (CLI-level knobs).
 #[derive(Clone, Debug)]
@@ -36,21 +24,22 @@ pub struct TrainerConfig {
     pub batches_per_epoch: usize,
     pub lr: LrSchedule,
     pub variant: Variant,
-    /// Validation batches per epoch (fixed set, disjoint stream).
+    /// Validation batches per pass (fixed set, disjoint stream).
     pub val_batches: usize,
+    /// Also validate every N steps (0 = per-epoch only).
+    pub val_every_steps: usize,
     /// Test batches for BLEU after training (0 = skip decode).
     pub bleu_batches: usize,
     pub checkpoint: Option<PathBuf>,
+    /// Save `checkpoint` every N steps mid-run (0 = final save only;
+    /// crash-salvage semantics — see
+    /// [`SessionConfig::checkpoint_every_steps`]).
+    pub checkpoint_every_steps: usize,
     pub init_checkpoint: Option<PathBuf>,
-    /// Bounded prefetch depth for the batch generator thread.
+    /// Bounded prefetch depth for the batch generator thread (≥ 1).
     pub prefetch: usize,
-    /// Hold the trainer state (params + Adam moments) physically packed
-    /// in this format between steps, decoding only at the PJRT boundary
-    /// — the coordinator-side stash. Quantizes the resident state every
-    /// step (Direct-Quantized-Training style), so it changes numerics;
-    /// `None` (the default) keeps dense f32 state. Checkpoints written
-    /// from a packed state use the packed v2 format and shrink
-    /// accordingly.
+    /// Hold the trainer state packed in this format between steps (see
+    /// [`SessionConfig::stash_format`]); `None` = dense f32.
     pub stash_format: Option<FormatSpec>,
 }
 
@@ -64,95 +53,38 @@ impl TrainerConfig {
             lr: LrSchedule::InverseSqrt { peak_lr: 3e-3, warmup_steps: 40 },
             variant: Variant::Iwslt,
             val_batches: 4,
+            val_every_steps: 0,
             bleu_batches: 4,
             checkpoint: None,
+            checkpoint_every_steps: 0,
             init_checkpoint: None,
             prefetch: 4,
             stash_format: None,
         }
     }
-}
 
-/// Result of a training run.
-#[derive(Clone, Debug)]
-pub struct TrainReport {
-    pub steps: u64,
-    pub final_val_loss: f64,
-    pub best_val_loss: f64,
-    pub final_token_acc: f64,
-    pub bleu: Option<f64>,
-    pub diverged: bool,
-    pub trace: Vec<(PrecisionConfig, usize)>,
-    pub loss_curve: Vec<(u64, f64)>,
-    pub val_curve: Vec<(u64, f64)>,
-    pub schedule_desc: String,
-    pub wall_s: f64,
-}
-
-impl TrainReport {
-    pub fn steps_per_s(&self) -> f64 {
-        self.steps as f64 / self.wall_s.max(1e-9)
-    }
-
-    /// Relative hardware cost of this run's schedule trace on a
-    /// paper-scale workload (the DSQ table columns). `None` when the
-    /// trace is unscored — an fp32-only run (the paper leaves fp32 rows
-    /// as "-") or a run that took zero steps.
-    pub fn cost_on(&self, w: &TransformerWorkload) -> Option<(f64, f64)> {
-        let row = costmodel::tables::dsq_trace_row(w, &self.trace);
-        row.arith_rel.zip(row.dram_rel)
-    }
-
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("steps", Json::num(self.steps as f64)),
-            ("final_val_loss", Json::num(self.final_val_loss)),
-            ("best_val_loss", Json::num(self.best_val_loss)),
-            ("final_token_acc", Json::num(self.final_token_acc)),
-            (
-                "bleu",
-                self.bleu.map_or(Json::Null, Json::num),
-            ),
-            ("diverged", Json::Bool(self.diverged)),
-            ("schedule", Json::str(&self.schedule_desc)),
-            ("wall_s", Json::num(self.wall_s)),
-            (
-                "trace",
-                Json::arr(self.trace.iter().map(|(p, n)| {
-                    Json::obj(vec![
-                        ("precision", Json::str(&p.notation())),
-                        ("formats", Json::str(&p.spec_string())),
-                        ("steps", Json::num(*n as f64)),
-                    ])
-                })),
-            ),
-            (
-                "loss_curve",
-                Json::arr(
-                    self.loss_curve
-                        .iter()
-                        .map(|&(s, l)| Json::arr([Json::num(s as f64), Json::num(l)])),
-                ),
-            ),
-            (
-                "val_curve",
-                Json::arr(
-                    self.val_curve
-                        .iter()
-                        .map(|&(s, l)| Json::arr([Json::num(s as f64), Json::num(l)])),
-                ),
-            ),
-        ])
+    fn session_config(&self) -> SessionConfig {
+        SessionConfig {
+            artifacts: self.artifacts.clone(),
+            seed: self.seed,
+            epochs: self.epochs,
+            batches_per_epoch: self.batches_per_epoch,
+            lr: self.lr.clone(),
+            val_batches: self.val_batches,
+            val_every_steps: self.val_every_steps,
+            checkpoint: self.checkpoint.clone(),
+            init_checkpoint: self.init_checkpoint.clone(),
+            checkpoint_every_steps: self.checkpoint_every_steps,
+            prefetch: self.prefetch,
+            stash_format: self.stash_format,
+        }
     }
 }
 
-/// The seq2seq trainer.
+/// The seq2seq trainer: a [`Session`] over [`NmtTask`].
 pub struct Trainer {
     pub cfg: TrainerConfig,
-    man: ArtifactManifest,
-    task: TranslationTask,
-    batcher: Batcher,
-    state: ModelState,
+    session: Session<NmtTask>,
 }
 
 impl Trainer {
@@ -164,202 +96,37 @@ impl Trainer {
             man.nmt.cfg("tgt_len")?,
             man.nmt.cfg("vocab")?,
         );
-        let task = TranslationTask::new(TranslationConfig {
-            vocab: v as i32,
-            src_len: s,
-            tgt_len: t,
-            variant: cfg.variant,
+        let task = NmtTask {
+            task: TranslationTask::new(TranslationConfig {
+                vocab: v as i32,
+                src_len: s,
+                tgt_len: t,
+                variant: cfg.variant,
+                seed: cfg.seed,
+            }),
+            batcher: Batcher::new(b, s, t),
             seed: cfg.seed,
-        });
-        let rt = Runtime::global();
-        let mut state = match &cfg.init_checkpoint {
-            Some(path) => checkpoint::load_checkpoint(path, &man.nmt)?,
-            None => ModelState::init(rt, &man, "nmt", cfg.seed as i32)?,
+            bleu_batches: cfg.bleu_batches,
         };
-        if let Some(spec) = &cfg.stash_format {
-            state.pack_state(spec)?;
-        }
-        Ok(Trainer { batcher: Batcher::new(b, s, t), cfg, man, task, state })
+        let session = Session::new(cfg.session_config(), task, man)?;
+        Ok(Trainer { cfg, session })
     }
 
     pub fn manifest(&self) -> &ArtifactManifest {
-        &self.man
+        self.session.manifest()
     }
 
     pub fn state(&self) -> &ModelState {
-        &self.state
+        self.session.state()
     }
 
-    fn step_inputs(&self, batch: &Batch, qcfg: [f32; 8], lr: f32) -> Vec<HostTensor> {
-        let (b, s, t) = (self.batcher.batch, self.batcher.src_len, self.batcher.tgt_len);
-        let mut inputs =
-            Vec::with_capacity(3 * self.state.params.len() + 6);
-        inputs.extend(self.state.params.iter().cloned());
-        inputs.extend(self.state.m.iter().cloned());
-        inputs.extend(self.state.v.iter().cloned());
-        inputs.push(HostTensor::scalar_f32((self.state.step + 1) as f32));
-        inputs.push(HostTensor::i32(vec![b, s], batch.src.clone()));
-        inputs.push(HostTensor::i32(vec![b, t], batch.tgt_in.clone()));
-        inputs.push(HostTensor::i32(vec![b, t], batch.tgt_out.clone()));
-        inputs.push(HostTensor::f32(vec![8], qcfg.to_vec()));
-        inputs.push(HostTensor::scalar_f32(lr));
-        inputs
-    }
-
-    /// Fixed validation batches (same every epoch).
-    fn val_batches(&self) -> Vec<Batch> {
-        let mut rng = self.task.split_rng("valid");
-        (0..self.cfg.val_batches)
-            .map(|_| {
-                let pairs: Vec<_> =
-                    (0..self.batcher.batch).map(|_| self.task.sample_pair(&mut rng)).collect();
-                self.batcher.assemble(&pairs)
-            })
-            .collect()
-    }
-
-    /// Evaluate mean per-token loss + token accuracy on batches.
-    pub fn evaluate(&self, batches: &[Batch]) -> Result<(f64, f64)> {
-        let rt = Runtime::global();
-        let exe = rt.load(&self.man.model_path("nmt", "eval")?)?;
-        let (b, s, t) = (self.batcher.batch, self.batcher.src_len, self.batcher.tgt_len);
-        let (mut loss_sum, mut ncorrect, mut ntok) = (0f64, 0f64, 0f64);
-        for batch in batches {
-            let mut inputs = self.state.params.clone();
-            inputs.push(HostTensor::i32(vec![b, s], batch.src.clone()));
-            inputs.push(HostTensor::i32(vec![b, t], batch.tgt_in.clone()));
-            inputs.push(HostTensor::i32(vec![b, t], batch.tgt_out.clone()));
-            let outs = exe.run(&inputs)?;
-            loss_sum += outs[0].item_f32()? as f64;
-            ncorrect += outs[1].item_f32()? as f64;
-            ntok += outs[2].item_f32()? as f64;
-        }
-        Ok((loss_sum / ntok.max(1.0), ncorrect / ntok.max(1.0)))
-    }
-
-    /// Greedy-decode BLEU on the test stream.
-    pub fn bleu(&self, nbatches: usize) -> Result<bleu::BleuScore> {
-        let rt = Runtime::global();
-        let exe = rt.load(&self.man.model_path("nmt", "decode")?)?;
-        let (b, s, t) = (self.batcher.batch, self.batcher.src_len, self.batcher.tgt_len);
-        let mut rng = self.task.split_rng("test");
-        let mut pairs = Vec::new();
-        for _ in 0..nbatches {
-            let batch_pairs: Vec<_> =
-                (0..b).map(|_| self.task.sample_pair(&mut rng)).collect();
-            let batch = self.batcher.assemble(&batch_pairs);
-            let mut inputs = self.state.params.clone();
-            inputs.push(HostTensor::i32(vec![b, s], batch.src.clone()));
-            let outs = exe.run(&inputs)?;
-            let toks = outs[0].as_i32()?;
-            for (i, p) in batch_pairs.iter().enumerate() {
-                let hyp = bleu::sentence_tokens(&toks[i * t..(i + 1) * t]);
-                let reference = bleu::sentence_tokens(&p.tgt);
-                pairs.push((hyp, reference));
-            }
-        }
-        Ok(bleu::corpus_bleu(&pairs))
+    /// The underlying engine (e.g. for [`Session::evaluate`]).
+    pub fn session(&mut self) -> &mut Session<NmtTask> {
+        &mut self.session
     }
 
     /// Run the full training loop under `schedule`.
-    pub fn run(&mut self, schedule: &mut dyn Schedule) -> Result<TrainReport> {
-        let rt = Runtime::global();
-        let start = Instant::now();
-        let mut tracker = LossTracker::new();
-        let mut trace: Vec<(PrecisionConfig, usize)> = Vec::new();
-        let mut val_curve = Vec::new();
-        let val_set = self.val_batches();
-        let mut diverged = false;
-
-        crate::info!(
-            "training: {} params, {} epochs x {} batches, schedule {}",
-            self.state.numel(),
-            self.cfg.epochs,
-            self.cfg.batches_per_epoch,
-            schedule.describe()
-        );
-
-        'epochs: for epoch in 0..self.cfg.epochs {
-            // Batch generator thread (bounded prefetch).
-            let task = self.task.clone();
-            let batcher = self.batcher.clone();
-            let nbatches = self.cfg.batches_per_epoch;
-            let epoch_seed = self.cfg.seed ^ ((epoch as u64 + 1) << 32);
-            let (tx, rx) = mpsc::sync_channel::<Batch>(self.cfg.prefetch);
-            let producer = std::thread::spawn(move || {
-                let mut rng = crate::util::rng::Pcg32::new(epoch_seed);
-                let mut pool: Vec<_> =
-                    (0..nbatches * batcher.batch).map(|_| task.sample_pair(&mut rng)).collect();
-                for batch in batcher.epoch(&mut pool, &mut rng) {
-                    if tx.send(batch).is_err() {
-                        return; // consumer gone (divergence abort)
-                    }
-                }
-            });
-
-            for batch in rx.iter() {
-                let pc = schedule.current();
-                let exe =
-                    rt.load(&self.man.model_path("nmt", super::train_artifact_kind(&pc))?)?;
-                let lr = self.cfg.lr.at(self.state.step + 1) as f32;
-                let inputs = self.step_inputs(&batch, pc.as_qcfg(), lr);
-                let outs = exe.run(&inputs)?;
-                let loss = self.state.absorb_step_output(outs)? as f64;
-                // Re-stash: step outputs arrive dense from the artifact;
-                // the resident copy goes back to packed storage.
-                if let Some(spec) = &self.cfg.stash_format {
-                    self.state.pack_state(spec)?;
-                }
-                tracker.record(self.state.step, loss);
-                match trace.last_mut() {
-                    Some((last, n)) if *last == pc => *n += 1,
-                    _ => trace.push((pc, 1)),
-                }
-                if tracker.diverged() {
-                    diverged = true;
-                    crate::warn!("training diverged at step {}", self.state.step);
-                    drop(rx);
-                    break 'epochs;
-                }
-            }
-            producer.join().map_err(|_| Error::Config("batch producer panicked".into()))?;
-
-            let (val_loss, val_acc) = self.evaluate(&val_set)?;
-            val_curve.push((self.state.step, val_loss));
-            schedule.observe_validation(val_loss);
-            crate::info!(
-                "epoch {epoch}: train {:.4} | val {val_loss:.4} acc {:.1}% | {}",
-                tracker.window_mean(self.cfg.batches_per_epoch).unwrap_or(f64::NAN),
-                val_acc * 100.0,
-                schedule.describe()
-            );
-        }
-
-        let (final_val_loss, final_token_acc) = self.evaluate(&val_set)?;
-        let bleu_score = if self.cfg.bleu_batches > 0 && !diverged {
-            Some(self.bleu(self.cfg.bleu_batches)?.bleu)
-        } else {
-            None
-        };
-        if let Some(path) = &self.cfg.checkpoint {
-            checkpoint::save_checkpoint(path, &self.state, &self.man.nmt)?;
-            crate::info!("checkpoint saved to {path:?}");
-        }
-        Ok(TrainReport {
-            steps: self.state.step,
-            final_val_loss,
-            best_val_loss: val_curve
-                .iter()
-                .map(|&(_, l)| l)
-                .fold(final_val_loss, f64::min),
-            final_token_acc,
-            bleu: bleu_score,
-            diverged,
-            trace,
-            loss_curve: tracker.history().to_vec(),
-            val_curve,
-            schedule_desc: schedule.describe(),
-            wall_s: start.elapsed().as_secs_f64(),
-        })
+    pub fn run(&mut self, schedule: &mut dyn Schedule) -> Result<RunReport> {
+        self.session.run(schedule)
     }
 }

@@ -148,7 +148,7 @@ mod tests {
     fn fp32_trace_unscored() {
         // A run that never left the fp32 reference config has no
         // meaningful relative cost — the row must come back unscored
-        // instead of panicking downstream (TrainReport::cost_on).
+        // instead of panicking downstream (RunReport::cost_on).
         let w = TransformerWorkload::iwslt_6layer();
         let row = dsq_trace_row(&w, &[(PrecisionConfig::FP32, 100)]);
         assert!(row.arith_rel.is_none());

@@ -140,7 +140,7 @@ pub fn run_iwslt(opts: &ExperimentOpts) -> Result<()> {
             let mut schedule = schedule_for(pcfg);
             let mut trainer = Trainer::new(cfg)?;
             let report = trainer.run(schedule.as_mut())?;
-            let bleu = report.bleu;
+            let bleu = report.bleu();
             if is_fp32_row {
                 fp32_bleu = bleu;
             }
@@ -246,7 +246,7 @@ pub fn run_glue(opts: &ExperimentOpts) -> Result<()> {
                 let mut schedule = schedule_for(pcfg);
                 let mut tuner = Finetuner::new(cfg)?;
                 let report = tuner.run(schedule.as_mut())?;
-                let acc = Some(report.final_accuracy * 100.0);
+                let acc = report.accuracy().map(|a| a * 100.0);
                 if is_fp32_row {
                     fp32_acc = acc;
                 }

@@ -45,7 +45,7 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
     // fp32 baseline first.
     let fp32_bleu = if opts.train {
         let report = train_one(opts, PrecisionConfig::FP32)?;
-        report.bleu
+        report.bleu()
     } else {
         None
     };
@@ -58,11 +58,11 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
         let p = PrecisionConfig::parse(&format!("bfp:{setup}"))?;
         let (bleu, delta) = if opts.train {
             let report = train_one(opts, p)?;
-            let delta = match (report.bleu, fp32_bleu) {
+            let delta = match (report.bleu(), fp32_bleu) {
                 (Some(b), Some(f)) => Some(b - f),
                 _ => None,
             };
-            (report.bleu, delta)
+            (report.bleu(), delta)
         } else {
             (None, None)
         };
@@ -86,7 +86,7 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
 fn train_one(
     opts: &ExperimentOpts,
     p: PrecisionConfig,
-) -> Result<crate::coordinator::TrainReport> {
+) -> Result<crate::coordinator::RunReport> {
     let cfg = TrainerConfig {
         artifacts: opts.artifacts.clone(),
         seed: 0,

@@ -44,7 +44,7 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
             };
             let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(p));
             let report = Trainer::new(cfg)?.run(schedule.as_mut())?;
-            (report.bleu, Some(report.final_val_loss), report.diverged)
+            (report.bleu(), Some(report.final_val_loss), report.diverged)
         } else {
             (None, None, false)
         };

@@ -55,13 +55,13 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
             let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(p));
             let report = Trainer::new(cfg)?.run(schedule.as_mut())?;
             if p.is_fp32() {
-                fp32_bleu = report.bleu;
+                fp32_bleu = report.bleu();
             }
-            let delta = match (report.bleu, fp32_bleu) {
+            let delta = match (report.bleu(), fp32_bleu) {
                 (Some(b), Some(f)) if !p.is_fp32() => Some(b - f),
                 _ => None,
             };
-            (report.bleu, delta, report.diverged)
+            (report.bleu(), delta, report.diverged)
         } else {
             (None, None, false)
         };

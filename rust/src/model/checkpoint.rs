@@ -26,6 +26,14 @@
 //! tensors stay packed in memory (decoded lazily at the PJRT boundary),
 //! so load-then-save reproduces the file bit-for-bit.
 //!
+//! **Schedule-state trailer** (optional, both versions): after the
+//! tensor groups a checkpoint may carry a `DSQSCHD1` record —
+//! `u32 level, u32 stale, u32 observed, f64 best_loss` — the resumable
+//! [`ScheduleState`] of the precision controller. A resumed run restores
+//! it so the DSQ ladder continues where it stopped instead of silently
+//! restarting at `[2,2,2,16]`. Files without the trailer (all pre-trailer
+//! checkpoints, and runs under stateless schedules) load as `None`.
+//!
 //! Checkpoints are validated against the artifact manifest on load, so a
 //! checkpoint from a different model config fails loudly instead of
 //! producing garbage.
@@ -36,10 +44,13 @@ use std::path::Path;
 use crate::model::ModelState;
 use crate::quant::{stash_stream, FormatSpec, PackedTensor};
 use crate::runtime::{HostTensor, ModelManifest, TensorData};
+use crate::schedule::ScheduleState;
 use crate::{Error, Result};
 
 const MAGIC: &[u8; 8] = b"DSQCKPT1";
 const MAGIC_V2: &[u8; 8] = b"DSQCKPT2";
+/// Optional schedule-state trailer magic (after the tensor groups).
+const SCHED_MAGIC: &[u8; 8] = b"DSQSCHD1";
 
 /// A loaded checkpoint (pre-validation).
 #[derive(Debug)]
@@ -163,11 +174,48 @@ fn read_tensor_v2(r: &mut impl Read) -> Result<(String, HostTensor)> {
     Ok((name, HostTensor::packed(packed)))
 }
 
+fn write_schedule_trailer(w: &mut impl Write, s: &ScheduleState) -> Result<()> {
+    w.write_all(SCHED_MAGIC)?;
+    write_u32(w, s.level)?;
+    write_u32(w, s.stale)?;
+    write_u32(w, s.observed)?;
+    write_u64(w, s.best_loss.to_bits())?;
+    Ok(())
+}
+
+/// Read the optional trailer. Clean EOF right after the tensor groups
+/// means "no trailer" (every pre-trailer checkpoint); anything else —
+/// including a *truncated* magic — is corruption and fails loudly.
+fn read_schedule_trailer(r: &mut impl Read) -> Result<Option<ScheduleState>> {
+    let mut magic = [0u8; 8];
+    let mut got = 0;
+    while got < magic.len() {
+        match r.read(&mut magic[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    if got == 0 {
+        return Ok(None);
+    }
+    if got < magic.len() || &magic != SCHED_MAGIC {
+        return Err(Error::Manifest("unrecognized checkpoint trailer".into()));
+    }
+    let level = read_u32(r)?;
+    let stale = read_u32(r)?;
+    let observed = read_u32(r)?;
+    let best_loss = f64::from_bits(read_u64(r)?);
+    Ok(Some(ScheduleState { level, stale, observed, best_loss }))
+}
+
 fn save_with(
     path: &Path,
     state: &ModelState,
     mm: &ModelManifest,
     framing: TensorFraming<'_>,
+    schedule: Option<&ScheduleState>,
 ) -> Result<()> {
     ModelState::validate_against(&state.params, mm)?;
     if let Some(parent) = path.parent() {
@@ -200,6 +248,9 @@ fn save_with(
                 }
             }
         }
+        if let Some(s) = schedule {
+            write_schedule_trailer(&mut w, s)?;
+        }
         w.flush()?;
     }
     std::fs::rename(&tmp, path)?; // atomic-ish publish
@@ -210,9 +261,21 @@ fn save_with(
 /// write the v1 format; states holding packed tensors write v2, keeping
 /// each tensor's exact payload (so save(load(p)) == p byte-for-byte).
 pub fn save_checkpoint(path: &Path, state: &ModelState, mm: &ModelManifest) -> Result<()> {
+    save_checkpoint_full(path, state, mm, None)
+}
+
+/// [`save_checkpoint`] plus an optional resumable [`ScheduleState`]
+/// trailer (the Session engine passes the schedule's snapshot here so a
+/// mid-ladder checkpoint resumes at the saved controller level).
+pub fn save_checkpoint_full(
+    path: &Path,
+    state: &ModelState,
+    mm: &ModelManifest,
+    schedule: Option<&ScheduleState>,
+) -> Result<()> {
     let framing =
         if state.is_packed() { TensorFraming::Packed(None) } else { TensorFraming::Dense };
-    save_with(path, state, mm, framing)
+    save_with(path, state, mm, framing, schedule)
 }
 
 /// Save with every tensor packed into `spec` (quantizing dense tensors
@@ -226,12 +289,23 @@ pub fn save_checkpoint_packed(
     mm: &ModelManifest,
     spec: &FormatSpec,
 ) -> Result<()> {
-    save_with(path, state, mm, TensorFraming::Packed(Some(spec)))
+    save_with(path, state, mm, TensorFraming::Packed(Some(spec)), None)
 }
 
-/// Load and validate a checkpoint against the manifest. v2 tensors stay
-/// packed in memory; call [`ModelState::unpack_state`] to force dense.
+/// Load and validate a checkpoint against the manifest, dropping any
+/// schedule trailer. v2 tensors stay packed in memory; call
+/// [`ModelState::unpack_state`] to force dense.
 pub fn load_checkpoint(path: &Path, mm: &ModelManifest) -> Result<ModelState> {
+    load_checkpoint_full(path, mm).map(|(state, _)| state)
+}
+
+/// Load a checkpoint plus its resumable [`ScheduleState`] (if the file
+/// carries the trailer; pre-trailer files and stateless-schedule runs
+/// yield `None`).
+pub fn load_checkpoint_full(
+    path: &Path,
+    mm: &ModelManifest,
+) -> Result<(ModelState, Option<ScheduleState>)> {
     let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
@@ -275,10 +349,11 @@ pub fn load_checkpoint(path: &Path, mm: &ModelManifest) -> Result<ModelState> {
         }
         all.push(group);
     }
+    let schedule = read_schedule_trailer(&mut r)?;
     let v = all.pop().unwrap();
     let m = all.pop().unwrap();
     let params = all.pop().unwrap();
-    Ok(ModelState { params, m, v, step })
+    Ok((ModelState { params, m, v, step }, schedule))
 }
 
 #[cfg(test)]
@@ -370,6 +445,80 @@ mod tests {
         };
         let want = crate::quant::fixed_quantize(st.params[1].as_f32().unwrap(), 8.0);
         assert_eq!(dense.params[1].as_f32().unwrap(), want.as_slice());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn schedule_trailer_roundtrips() {
+        let path = tmpfile("sched-trailer.bin");
+        let sched = ScheduleState { level: 3, stale: 1, observed: 9, best_loss: 4.625 };
+        save_checkpoint_full(&path, &state(), &mm(), Some(&sched)).unwrap();
+        let (back, got) = load_checkpoint_full(&path, &mm()).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(got, Some(sched));
+        // The compat loader still reads the tensors and drops the trailer.
+        assert_eq!(load_checkpoint(&path, &mm()).unwrap().params[0], state().params[0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn schedule_trailer_preserves_infinite_best_loss() {
+        // A controller that never saw a finite validation snapshots
+        // best_loss = +inf; the bit-exact f64 framing keeps it.
+        let path = tmpfile("sched-inf.bin");
+        let sched =
+            ScheduleState { level: 0, stale: 0, observed: 0, best_loss: f64::INFINITY };
+        save_checkpoint_full(&path, &state(), &mm(), Some(&sched)).unwrap();
+        let (_, got) = load_checkpoint_full(&path, &mm()).unwrap();
+        assert_eq!(got, Some(sched));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn no_trailer_loads_as_none() {
+        let path = tmpfile("sched-none.bin");
+        save_checkpoint(&path, &state(), &mm()).unwrap();
+        let (_, got) = load_checkpoint_full(&path, &mm()).unwrap();
+        assert_eq!(got, None);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn schedule_trailer_on_packed_checkpoint() {
+        let path = tmpfile("sched-packed.bin");
+        let mut st = state();
+        st.pack_state(&FormatSpec::bfp(4)).unwrap();
+        let sched = ScheduleState { level: 2, stale: 0, observed: 4, best_loss: 1.5 };
+        save_checkpoint_full(&path, &st, &mm(), Some(&sched)).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], b"DSQCKPT2");
+        let (back, got) = load_checkpoint_full(&path, &mm()).unwrap();
+        assert!(back.is_packed());
+        assert_eq!(got, Some(sched));
+        // Resaving with the restored trailer reproduces the file exactly.
+        let path2 = tmpfile("sched-packed2.bin");
+        save_checkpoint_full(&path2, &back, &mm(), got.as_ref()).unwrap();
+        assert_eq!(bytes, std::fs::read(&path2).unwrap());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn garbage_trailer_is_rejected() {
+        let path = tmpfile("sched-garbage.bin");
+        save_checkpoint(&path, &state(), &mm()).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // Wrong magic.
+        let mut bytes = clean.clone();
+        bytes.extend_from_slice(b"NOTSCHEDxxxxxxxxxxxx");
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_checkpoint_full(&path, &mm()).is_err());
+        // Truncated magic (1-7 trailing bytes) must also fail loudly,
+        // not silently resume with a fresh schedule.
+        let mut bytes = clean;
+        bytes.extend_from_slice(&b"DSQSCHD1"[..3]);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_checkpoint_full(&path, &mm()).is_err());
         std::fs::remove_file(&path).ok();
     }
 

@@ -11,7 +11,10 @@
 
 pub mod checkpoint;
 
-pub use checkpoint::{load_checkpoint, save_checkpoint, save_checkpoint_packed, Checkpoint};
+pub use checkpoint::{
+    load_checkpoint, load_checkpoint_full, save_checkpoint, save_checkpoint_full,
+    save_checkpoint_packed, Checkpoint,
+};
 
 use crate::quant::{stash_stream, FormatSpec};
 use crate::runtime::{ArtifactManifest, HostTensor, ModelManifest, Runtime};

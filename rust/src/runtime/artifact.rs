@@ -156,14 +156,18 @@ impl ArtifactManifest {
         })
     }
 
+    /// The manifest entry for a model family ("nmt" / "cls").
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        match name {
+            "nmt" => Ok(&self.nmt),
+            "cls" => Ok(&self.cls),
+            other => Err(Error::Manifest(format!("unknown model '{other}'"))),
+        }
+    }
+
     /// Absolute path of a model artifact.
     pub fn model_path(&self, model: &str, kind: &str) -> Result<PathBuf> {
-        let m = match model {
-            "nmt" => &self.nmt,
-            "cls" => &self.cls,
-            other => return Err(Error::Manifest(format!("unknown model '{other}'"))),
-        };
-        Ok(self.dir.join(m.artifact_file(kind)?))
+        Ok(self.dir.join(self.model(model)?.artifact_file(kind)?))
     }
 
     /// Absolute path of a quantizer probe artifact ("quant_bfp"/"quant_fixed").

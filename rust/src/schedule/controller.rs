@@ -20,7 +20,7 @@
 //! schedule: `DsqControllerConfig::paper_default("fixedsr")` instantiates
 //! the paper's ladder over stochastic-rounding fixed point.
 
-use super::{PrecisionConfig, Schedule};
+use super::{PrecisionConfig, Schedule, ScheduleState};
 
 /// The paper's Appendix-B ladder widths, shared by every family.
 const PAPER_LADDER: &[[u32; 4]] = &[
@@ -195,6 +195,27 @@ impl Schedule for DsqController {
             self.stale
         )
     }
+
+    fn snapshot(&self) -> Option<ScheduleState> {
+        Some(ScheduleState {
+            level: self.level as u32,
+            stale: self.stale as u32,
+            observed: self.observed as u32,
+            best_loss: self.best_loss,
+        })
+    }
+
+    /// Resume the ladder: the level is clamped to this controller's
+    /// ladder (a checkpoint from a longer ladder resumes at the top) and
+    /// the plateau reference (best loss + stale count) carries over, so
+    /// the monotone-increase property holds across the save/load
+    /// boundary.
+    fn restore(&mut self, s: &ScheduleState) {
+        self.level = (s.level as usize).min(self.cfg.ladder.len() - 1);
+        self.stale = s.stale as usize;
+        self.observed = s.observed as usize;
+        self.best_loss = s.best_loss;
+    }
 }
 
 #[cfg(test)]
@@ -317,6 +338,51 @@ mod tests {
                 PrecisionConfig::uniform(FormatSpec::bfp(4)),
             ],
         });
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let mut c = ctl();
+        for _ in 0..5 {
+            c.observe_validation(5.0); // improve once, then 2x2 stale -> level 2
+        }
+        assert_eq!(c.level(), 2);
+        let snap = c.snapshot().unwrap();
+        assert_eq!(snap.level, 2);
+        assert_eq!(snap.best_loss, 5.0);
+
+        let mut fresh = ctl();
+        assert_eq!(fresh.level(), 0);
+        fresh.restore(&snap);
+        assert_eq!(fresh.level(), 2);
+        assert_eq!(fresh.current(), c.current());
+        assert_eq!(fresh.describe(), c.describe());
+        // The plateau reference carried over: one more stale pair bumps
+        // the restored controller exactly like the original.
+        fresh.observe_validation(5.0);
+        fresh.observe_validation(5.0);
+        assert_eq!(fresh.level(), 3);
+    }
+
+    #[test]
+    fn restore_clamps_level_to_ladder() {
+        let cfg =
+            DsqControllerConfig::from_specs(0.01, 1, &["bfp:2,2,2,16", "bfp:8,8,8,16"]).unwrap();
+        let mut c = DsqController::new(cfg);
+        c.restore(&ScheduleState { level: 99, stale: 0, observed: 7, best_loss: 1.0 });
+        assert_eq!(c.level(), 1);
+        assert!(c.at_top());
+    }
+
+    #[test]
+    fn static_schedule_has_no_snapshot() {
+        use crate::schedule::StaticSchedule;
+        let mut s = StaticSchedule(PrecisionConfig::uniform(FormatSpec::bfp(8)));
+        assert!(Schedule::snapshot(&s).is_none());
+        // Restore is a no-op.
+        let snap = ScheduleState { level: 3, stale: 1, observed: 2, best_loss: 0.5 };
+        Schedule::restore(&mut s, &snap);
+        assert_eq!(s.current(), PrecisionConfig::uniform(FormatSpec::bfp(8)));
     }
 
     #[test]

@@ -186,6 +186,21 @@ impl PrecisionConfig {
     }
 }
 
+/// Resumable schedule state, persisted in checkpoint trailers so a
+/// resumed run continues the precision ladder where it left off instead
+/// of silently restarting at the most aggressive level.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScheduleState {
+    /// Current ladder level.
+    pub level: u32,
+    /// Consecutive no-better validations toward the next bump.
+    pub stale: u32,
+    /// Validations observed so far.
+    pub observed: u32,
+    /// Best validation loss seen (the plateau reference).
+    pub best_loss: f64,
+}
+
 /// A precision schedule: one config per training step.
 pub trait Schedule {
     /// Config to use for the upcoming step.
@@ -194,6 +209,12 @@ pub trait Schedule {
     fn observe_validation(&mut self, val_loss: f64);
     /// Human-readable state for logs.
     fn describe(&self) -> String;
+    /// Resumable state for checkpoints (`None` for stateless schedules).
+    fn snapshot(&self) -> Option<ScheduleState> {
+        None
+    }
+    /// Restore from a checkpoint snapshot (no-op for stateless schedules).
+    fn restore(&mut self, _state: &ScheduleState) {}
 }
 
 /// Fixed precision for the whole run.

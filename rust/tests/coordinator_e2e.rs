@@ -1,11 +1,12 @@
 //! End-to-end coordinator tests: real (tiny-budget) training runs through
 //! the full L3 stack — synthetic corpus -> prefetch -> PJRT steps ->
-//! validation -> controller -> BLEU -> checkpoint.
+//! validation -> controller -> BLEU -> checkpoint — all driven by the
+//! task-agnostic Session engine.
 //!
 //! Budget note: PJRT compiles the train artifact once per process
 //! (~100 s); the runs themselves are small.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use dsq::coordinator::{Finetuner, FinetuneConfig, LrSchedule, Trainer, TrainerConfig};
 use dsq::data::Variant;
@@ -23,7 +24,7 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
-fn quick_cfg(dir: &PathBuf) -> TrainerConfig {
+fn quick_cfg(dir: &Path) -> TrainerConfig {
     TrainerConfig {
         epochs: 2,
         batches_per_epoch: 8,
@@ -31,7 +32,7 @@ fn quick_cfg(dir: &PathBuf) -> TrainerConfig {
         bleu_batches: 2,
         lr: LrSchedule::InverseSqrt { peak_lr: 3e-3, warmup_steps: 20 },
         variant: Variant::Iwslt,
-        ..TrainerConfig::quick(dir.clone())
+        ..TrainerConfig::quick(dir.to_path_buf())
     }
 }
 
@@ -45,7 +46,8 @@ fn trainer_runs_and_improves_under_stashing_bfp() {
     assert_eq!(report.steps, 16);
     assert!(!report.diverged);
     assert!(report.final_val_loss.is_finite());
-    assert!(report.bleu.is_some());
+    assert!(report.bleu().is_some());
+    assert!(report.accuracy().is_none(), "translation reports BLEU, not accuracy");
     // Training loss decreased within the tiny budget.
     let first = report.loss_curve.first().unwrap().1;
     let last = report.loss_curve.last().unwrap().1;
@@ -54,6 +56,10 @@ fn trainer_runs_and_improves_under_stashing_bfp() {
     assert_eq!(report.trace.len(), 1);
     assert_eq!(report.trace[0].1, 16);
     assert_eq!(report.trace[0].0.notation(), "[16,4,4,16]");
+    // Memoized dispatch: one static config resolves exactly three
+    // distinct executables for the whole run (train kind, eval, decode)
+    // — not one load per step.
+    assert_eq!(trainer.session().executables_loaded(), 3);
 }
 
 #[test]
@@ -87,11 +93,13 @@ fn checkpoint_roundtrip_through_trainer() {
     let mut trainer = Trainer::new(cfg.clone()).unwrap();
     let r1 = trainer.run(schedule.as_mut()).unwrap();
 
-    // Resume: state (including Adam step) must round-trip.
+    // Resume: state (including Adam step) must round-trip. A static
+    // schedule has no resumable state, so the trailer is absent.
     let man = ArtifactManifest::load(&dir).unwrap();
-    let loaded = checkpoint::load_checkpoint(&ckpt, &man.nmt).unwrap();
+    let (loaded, sched) = checkpoint::load_checkpoint_full(&ckpt, &man.nmt).unwrap();
     assert_eq!(loaded.step, r1.steps);
     assert_eq!(loaded.params.len(), man.nmt.params.len());
+    assert_eq!(sched, None);
 
     let mut cfg2 = cfg.clone();
     cfg2.checkpoint = None;
@@ -119,8 +127,12 @@ fn finetuner_runs_and_reports_accuracy() {
     let report = tuner.run(schedule.as_mut()).unwrap();
     assert_eq!(report.steps, 16);
     assert!(!report.diverged);
-    assert!((0.0..=1.0).contains(&report.final_accuracy));
+    let acc = report.accuracy().expect("classification reports accuracy");
+    assert!((0.0..=1.0).contains(&acc));
+    assert!(report.bleu().is_none(), "classification reports accuracy, not BLEU");
     assert!(report.final_val_loss.is_finite());
+    // One train kind + eval; no decode artifact for the classifier.
+    assert_eq!(tuner.session().executables_loaded(), 2);
 }
 
 #[test]

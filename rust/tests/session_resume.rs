@@ -1,0 +1,178 @@
+//! Schedule-state resume: a checkpoint written mid-DSQ-ladder must
+//! restore the controller at the saved level/stale count, not silently
+//! restart at `[2,2,2,16]`.
+//!
+//! The trailer round-trip and controller restore are covered without
+//! PJRT (fake manifest); the full Session resume runs when `make
+//! artifacts` has been done (same gating as `coordinator_e2e`).
+
+use std::path::PathBuf;
+
+use dsq::coordinator::{LrSchedule, Trainer, TrainerConfig};
+use dsq::data::Variant;
+use dsq::model::{checkpoint, ModelState};
+use dsq::runtime::{HostTensor, ModelManifest, ParamSpec};
+use dsq::schedule::{DsqController, DsqControllerConfig, Schedule, ScheduleState};
+
+fn fake_mm() -> ModelManifest {
+    ModelManifest {
+        config: Default::default(),
+        params: vec![
+            ParamSpec { name: "a.w".into(), shape: vec![2, 3] },
+            ParamSpec { name: "b.b".into(), shape: vec![4] },
+        ],
+        artifacts: Default::default(),
+    }
+}
+
+fn fake_state() -> ModelState {
+    let p = vec![
+        HostTensor::f32(vec![2, 3], (0..6).map(|x| x as f32).collect()),
+        HostTensor::f32(vec![4], vec![-1.0, 0.5, 2.0, 3.5]),
+    ];
+    let m = vec![HostTensor::zeros(&[2, 3]), HostTensor::zeros(&[4])];
+    ModelState { params: p, m: m.clone(), v: m, step: 7 }
+}
+
+fn tmpfile(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dsq-resume-{}-{name}", std::process::id()))
+}
+
+/// Push a fresh paper-default controller to `level` with flat losses.
+fn advance_to_level(ctl: &mut DsqController, level: usize) {
+    ctl.observe_validation(5.0); // establishes best_loss
+    while ctl.level() < level {
+        ctl.observe_validation(5.0);
+    }
+    assert_eq!(ctl.level(), level);
+}
+
+#[test]
+fn controller_snapshot_rides_checkpoint_trailer() {
+    let mut ctl = DsqController::paper_default("bfp").unwrap();
+    advance_to_level(&mut ctl, 2);
+    let snap = ctl.snapshot().unwrap();
+    assert_eq!(snap.level, 2);
+
+    let path = tmpfile("trailer.bin");
+    checkpoint::save_checkpoint_full(&path, &fake_state(), &fake_mm(), Some(&snap)).unwrap();
+    let (state, restored) = checkpoint::load_checkpoint_full(&path, &fake_mm()).unwrap();
+    assert_eq!(state.step, 7);
+    let restored = restored.expect("trailer present");
+    assert_eq!(restored, snap);
+
+    // A fresh controller restored from the trailer continues the ladder
+    // at level 2 — not at [2,2,2,16].
+    let mut resumed = DsqController::paper_default("bfp").unwrap();
+    assert_eq!(resumed.current().notation(), "[2,2,2,16]");
+    resumed.restore(&restored);
+    assert_eq!(resumed.level(), 2);
+    assert_eq!(resumed.current(), ctl.current());
+    assert_eq!(resumed.describe(), ctl.describe());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn stale_count_survives_resume() {
+    // Half-way toward a bump (stale 1 of patience 2): after resume, ONE
+    // more flat validation must advance the level — the plateau counter
+    // carried over.
+    let mut ctl = DsqController::paper_default("bfp").unwrap();
+    ctl.observe_validation(5.0);
+    ctl.observe_validation(5.0); // stale 1
+    assert_eq!(ctl.level(), 0);
+    let snap = ctl.snapshot().unwrap();
+    assert_eq!(snap.stale, 1);
+
+    let path = tmpfile("stale.bin");
+    checkpoint::save_checkpoint_full(&path, &fake_state(), &fake_mm(), Some(&snap)).unwrap();
+    let (_, restored) = checkpoint::load_checkpoint_full(&path, &fake_mm()).unwrap();
+    let mut resumed = DsqController::paper_default("bfp").unwrap();
+    resumed.restore(&restored.unwrap());
+    resumed.observe_validation(5.0); // stale 2 -> bump
+    assert_eq!(resumed.level(), 1);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn pre_trailer_checkpoints_resume_with_fresh_schedule() {
+    let path = tmpfile("legacy.bin");
+    checkpoint::save_checkpoint(&path, &fake_state(), &fake_mm()).unwrap();
+    let (_, restored) = checkpoint::load_checkpoint_full(&path, &fake_mm()).unwrap();
+    assert_eq!(restored, None, "no trailer = fresh schedule");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn restore_is_safe_across_ladder_lengths() {
+    // A snapshot from a longer ladder clamps to the shorter one's top.
+    let snap = ScheduleState { level: 5, stale: 0, observed: 12, best_loss: 2.0 };
+    let cfg =
+        DsqControllerConfig::from_specs(0.002, 2, &["bfp:2,2,2,16", "bfp:16,4,4,16"]).unwrap();
+    let mut short = DsqController::new(cfg);
+    short.restore(&snap);
+    assert_eq!(short.level(), 1);
+    assert!(short.at_top());
+}
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn session_resumes_mid_ladder_e2e() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ckpt = std::env::temp_dir().join(format!("dsq-resume-e2e-{}.bin", std::process::id()));
+    let cfg = TrainerConfig {
+        epochs: 2,
+        batches_per_epoch: 4,
+        val_batches: 2,
+        bleu_batches: 0,
+        lr: LrSchedule::InverseSqrt { peak_lr: 3e-3, warmup_steps: 20 },
+        variant: Variant::Iwslt,
+        checkpoint: Some(ckpt.clone()),
+        ..TrainerConfig::quick(dir.clone())
+    };
+
+    // Run 1 under a controller already mid-ladder (level 2).
+    let mut ctl1 = DsqController::paper_default("bfp").unwrap();
+    advance_to_level(&mut ctl1, 2);
+    let mut trainer1 = Trainer::new(cfg.clone()).unwrap();
+    let r1 = trainer1.run(&mut ctl1).unwrap();
+    let saved_level = ctl1.level(); // >= 2, monotone
+    assert!(saved_level >= 2);
+    assert_eq!(r1.trace[0].0, ctl1_ladder_config(2));
+
+    // Run 2: a FRESH controller plus --init-checkpoint must resume at
+    // the saved level — its very first step runs at that config, not at
+    // the ladder bottom.
+    let cfg2 = TrainerConfig {
+        checkpoint: None,
+        init_checkpoint: Some(ckpt.clone()),
+        ..cfg
+    };
+    let mut ctl2 = DsqController::paper_default("bfp").unwrap();
+    assert_eq!(ctl2.level(), 0);
+    let mut trainer2 = Trainer::new(cfg2).unwrap();
+    let r2 = trainer2.run(&mut ctl2).unwrap();
+    assert_eq!(r2.steps, r1.steps + 8);
+    assert!(ctl2.level() >= saved_level, "ladder went backwards across resume");
+    assert_eq!(
+        r2.trace[0].0,
+        ctl1_ladder_config(saved_level),
+        "first resumed step must run at the saved ladder level"
+    );
+    assert_ne!(r2.trace[0].0.notation(), "[2,2,2,16]");
+    std::fs::remove_file(&ckpt).ok();
+}
+
+/// The paper-default bfp ladder config at `level`.
+fn ctl1_ladder_config(level: usize) -> dsq::schedule::PrecisionConfig {
+    DsqControllerConfig::paper_default("bfp").unwrap().ladder[level]
+}

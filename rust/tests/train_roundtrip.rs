@@ -4,7 +4,7 @@
 //! steps (with runtime-dynamic precision) -> eval -> greedy decode, all
 //! from rust, no python.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use dsq::runtime::{ArtifactManifest, HostTensor, Runtime};
 use dsq::util::rng::Pcg32;
@@ -28,7 +28,7 @@ struct NmtHarness {
 }
 
 impl NmtHarness {
-    fn new(dir: &PathBuf, seed: i32) -> Self {
+    fn new(dir: &Path, seed: i32) -> Self {
         let man = ArtifactManifest::load(dir).unwrap();
         let rt = Runtime::global();
         let init = rt.load(&man.model_path("nmt", "init").unwrap()).unwrap();
