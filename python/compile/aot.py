@@ -38,6 +38,7 @@ from . import layers
 from . import model as M
 from .kernels.bfp import bfp_quantize
 from .kernels.fixed import fixed_quantize
+from .kernels.floatq import float_quantize
 
 F32 = jnp.float32
 I32 = jnp.int32
@@ -155,11 +156,14 @@ def build_nmt_exports(cfg: M.Seq2SeqConfig):
     exports = {
         "init": (init_fn, [_shape((), I32)]),
         # Per-quantizer train variants: identical signature, the variant
-        # bakes which quantizer `mode >= 1` selects (compile-time split,
-        # see layers.set_quantizers); "train_both" carries both quantizer
-        # subgraphs for heterogeneous per-slot configs.
+        # bakes which quantizer family its exact mode match selects
+        # (compile-time split, see layers.set_quantizers); "train_both"
+        # carries every quantizer subgraph for heterogeneous per-slot
+        # configs — the rust coordinator routes cross-family configs
+        # there (runtime/artifact.rs::train_variant_for).
         "train_bfp": (train_fn, train_args),
         "train_fixed": (train_fn, train_args),
+        "train_float": (train_fn, train_args),
         "train_both": (train_fn, train_args),
         "eval": (eval_fn, ps + [_shape((B, S), I32), _shape((B, T), I32), _shape((B, T), I32)]),
         "decode": (decode_fn, ps + [_shape((B, S), I32)]),
@@ -208,6 +212,7 @@ def build_cls_exports(cfg: M.ClassifierConfig):
         "init": (init_fn, [_shape((), I32)]),
         "train_bfp": (train_fn, train_args),
         "train_fixed": (train_fn, train_args),
+        "train_float": (train_fn, train_args),
         "train_both": (train_fn, train_args),
         "eval": (eval_fn, ps + [_shape((B, L), I32), _shape((B,), I32)]),
     }
@@ -219,7 +224,14 @@ QUANT_SHAPE = (64, 64)
 
 def build_quant_exports():
     """Standalone quantizer artifacts — the rust mirrors cross-check
-    against these (integration tests) and they double as runtime probes."""
+    against these (integration tests) and they double as runtime probes.
+
+    The ``quant_select_*`` probes export ``layers.quantize`` itself under
+    each per-variant compile (mode + bits as runtime inputs): they pin
+    the variant dispatch contract — a single-family variant quantizes
+    ONLY its exact modes and is the identity elsewhere (the artifact-side
+    half of the cross-family dispatch bugfix; ``artifact_roundtrip.rs``
+    asserts it end to end)."""
 
     def bfp_fn(x, bits):
         return (bfp_quantize(x, bits),)
@@ -227,8 +239,23 @@ def build_quant_exports():
     def fixed_fn(x, bits):
         return (fixed_quantize(x, bits),)
 
+    def float_fn(x, code):
+        return (float_quantize(x, code),)
+
+    def select_fn(x, mode, bits):
+        return (layers.quantize(x, mode, bits),)
+
     args = [_shape(QUANT_SHAPE), _shape((), F32)]
-    return {"quant_bfp": (bfp_fn, args), "quant_fixed": (fixed_fn, args)}
+    sel_args = [_shape(QUANT_SHAPE), _shape((), F32), _shape((), F32)]
+    return {
+        "quant_bfp": (bfp_fn, args),
+        "quant_fixed": (fixed_fn, args),
+        "quant_float": (float_fn, args),
+        "quant_select_bfp": (select_fn, sel_args),
+        "quant_select_fixed": (select_fn, sel_args),
+        "quant_select_float": (select_fn, sel_args),
+        "quant_select_both": (select_fn, sel_args),
+    }
 
 
 # ------------------------------------------------------------------- main
@@ -298,11 +325,14 @@ def main() -> None:
     for name, fn, ex in jobs:
         if only and name not in only:
             continue
-        # Train variants bake a single quantizer path (compile-time split).
+        # Train (and select-probe) variants bake a single quantizer path
+        # (compile-time split).
         if name.endswith("_bfp"):
             layers.set_quantizers("bfp")
         elif name.endswith("_fixed"):
             layers.set_quantizers("fixed")
+        elif name.endswith("_float"):
+            layers.set_quantizers("float")
         else:
             layers.set_quantizers("both")
         path = os.path.join(outdir, f"{name}.hlo.txt")

@@ -1,0 +1,78 @@
+"""Pallas kernel: low-bit float (``e<E>m<M>``) fake quantization.
+
+The float family (FP8 E4M3/E5M2, bf16 = e8m7, fp16 = e5m10) quantizes
+every element against its own exponent — no reduction at all — so the
+kernel is a pure elementwise map: decode the packed ``100*E + M`` grid
+code, clip the element exponent to the format range, round the
+significand half-to-even on the power-of-two step, saturate. Tensors
+too large for the single-block budget fall back to the jnp oracle
+(same numerics, XLA-fused), mirroring fixed.py.
+
+Semantics identical to ``ref.float_quantize_ref``; pytest asserts
+bit-equality.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EXP_MAX, EXP_MIN, exact_pow2, float_quantize_ref
+
+# Single-block budget: input + output f32 tiles (see bfp.py for rationale).
+_SINGLE_BLOCK_LIMIT = (4 * 1024 * 1024) // (4 * 2)
+
+
+def _float_kernel(c_ref, x_ref, o_ref):
+    x = x_ref[...]
+    # Explicit input FTZ, matching ref.float_quantize_ref / rust ftz()
+    # (exact zeros excluded so -0.0 keeps its sign).
+    ftz_mask = jnp.logical_and(x != 0.0, jnp.abs(x) < jnp.float32(2.0**-126))
+    x = jnp.where(ftz_mask, jnp.float32(0.0), x)
+    code = c_ref[0, 0]
+    ebits = jnp.floor(code / 100.0)
+    m = code - ebits * 100.0
+    bias = exact_pow2(ebits - 1.0) - 1.0
+    e_min = 1.0 - bias
+    e_max = bias
+    maxval = exact_pow2(e_max) * (2.0 - exact_pow2(-m))
+    xbits = jax.lax.bitcast_convert_type(x, jnp.int32)
+    e = (((xbits >> 23) & 0xFF) - 127).astype(jnp.float32)
+    e = jnp.clip(e, e_min, e_max)
+    # exact_pow2 + clamp to the normal range (XLA exp2 inexact; FTZ).
+    step = exact_pow2(jnp.clip(e - m, EXP_MIN, EXP_MAX))
+    mag = jnp.round(x / step)
+    o_ref[...] = jnp.clip(mag * step, -maxval, maxval)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _float_quantize_2d(x: jax.Array, code: jax.Array, interpret: bool = True) -> jax.Array:
+    rows, cols = x.shape
+    c2d = code.reshape(1, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        _float_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, cols), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(c2d, x)
+
+
+def float_quantize(x: jax.Array, code, interpret: bool = True) -> jax.Array:
+    """``e<E>m<M>`` float fake quantization (any shape); ``code`` packs
+    the grid parameters as ``100*E + M`` (``ref.float_code``)."""
+    x = jnp.asarray(x, jnp.float32)
+    c = jnp.asarray(code, jnp.float32)
+    if x.size > _SINGLE_BLOCK_LIMIT or x.ndim == 0:
+        return float_quantize_ref(x, c)
+    n = x.shape[-1]
+    flat = x.reshape(-1, n)
+    q = _float_quantize_2d(flat, c, interpret=interpret)
+    return q.reshape(x.shape)

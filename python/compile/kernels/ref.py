@@ -136,12 +136,63 @@ def fixed_quantize_ref(x: jax.Array, bits) -> jax.Array:
     return jnp.where(b >= PASSTHROUGH_BITS, x, q)
 
 
+def float_code(exp_bits: int, man_bits: int) -> float:
+    """Pack a float format's grid parameters into the qcfg width field
+    (``100*E + M`` — the encoding ``FormatSpec::qcfg_bits`` emits)."""
+    return float(100 * exp_bits + man_bits)
+
+
+def float_quantize_ref(x: jax.Array, code) -> jax.Array:
+    """Low-bit float fake quantization (``e<E>m<M>``: FP8 E4M3/E5M2,
+    bf16 = e8m7, fp16 = e5m10) — per-element exponents, no reduction.
+
+    ``code`` packs the grid as ``100*E + M`` (see :func:`float_code`).
+    IEEE-style grid with bias ``2^(E-1) - 1``: subnormal support below
+    the minimum normal binade, saturating overflow at
+    ``2^e_max * (2 - 2^-M)`` (±inf saturate too; NaN propagates). The
+    step exponent is clamped to the normal-f32 range like everywhere
+    else (XLA FTZ would flush a subnormal step), which for wide-exponent
+    formats (e8m7) bottoms the grid out on a 2^-126 step; f32-subnormal
+    *inputs* are flushed to zero explicitly (not just via XLA's FTZ
+    flag — at E=8 the per-element exponent is sensitive enough that the
+    mirror contract must not depend on a platform setting). Mirrors
+    ``rust/src/quant/float.rs`` op for op.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    # Explicit FTZ on inputs (rust ftz()): exact zeros are excluded so
+    # -0.0 keeps its sign like the rust mirror; |NaN| < c is False, so
+    # NaN rides through. (For flushed *subnormal* inputs the sign of the
+    # resulting zero is not part of the contract: XLA's FTZ flag may
+    # rewrite the input to a signed zero before this mask sees it, and
+    # f32 == — the asserted mirror relation — cannot observe it.)
+    ftz_mask = jnp.logical_and(x != 0.0, jnp.abs(x) < jnp.float32(2.0**-126))
+    x = jnp.where(ftz_mask, jnp.float32(0.0), x)
+    code = jnp.asarray(code, jnp.float32)
+    ebits = jnp.floor(code / 100.0)
+    m = code - ebits * 100.0
+    bias = exact_pow2(ebits - 1.0) - 1.0
+    e_min = 1.0 - bias
+    e_max = bias
+    maxval = exact_pow2(e_max) * (2.0 - exact_pow2(-m))
+    e = jnp.clip(floor_log2(jnp.abs(x)), e_min, e_max)
+    step = exact_pow2(jnp.clip(e - m, EXP_MIN, EXP_MAX))
+    mag = jnp.round(x / step)
+    return jnp.clip(mag * step, -maxval, maxval)
+
+
 def select_quantize_ref(x: jax.Array, mode, bits) -> jax.Array:
-    """mode: 0 = identity (fp32), 1 = dynamic fixed point, 2 = BFP."""
+    """mode: 0 = identity (fp32), 1 = dynamic fixed point, 2 = BFP,
+    3 = fixed-sr (fixed grid, nearest), 4 = float, 5 = float-sr (float
+    grid, nearest)."""
     mode = jnp.asarray(mode, jnp.float32)
     qf = fixed_quantize_ref(x, bits)
     qb = bfp_quantize_ref(x, bits)
-    return jnp.where(mode == 1.0, qf, jnp.where(mode == 2.0, qb, x))
+    qe = float_quantize_ref(x, bits)
+    fixed_like = jnp.logical_or(mode == 1.0, mode == 3.0)
+    float_like = jnp.logical_or(mode == 4.0, mode == 5.0)
+    return jnp.where(
+        fixed_like, qf, jnp.where(mode == 2.0, qb, jnp.where(float_like, qe, x))
+    )
 
 
 def qgemm_ref(x: jax.Array, w: jax.Array, mode, bx, bw) -> jax.Array:

@@ -25,14 +25,17 @@ The precision vector ``qcfg = [m0,q0, m1,q1, m2,q2, m3,q3]`` is a
 *runtime* f32 array of four per-slot ``[mode, bits]`` pairs (one per
 quantization point q0..q3), mirroring the rust ``FormatSpec`` registry:
 mode 0 = fp32 (identity), 1 = dynamic fixed point, 2 = BFP, 3 = fixed
-point with stochastic rounding (the artifact applies the fixed grid with
-nearest rounding — the stochastic stream exists host-side in the rust
-mirrors; an artifact-side SR kernel is a ROADMAP open item). Per-slot
-modes make heterogeneous configs (e.g. a BFP stash with fixed gradient
-outputs) a runtime choice. Bits ≥ 25 short-circuit to identity, so
-fp32-style configs cost nothing numerically. BFP boxes always lie along
-the contraction axis of the GEMM that consumes the tensor (MSFP
-layout).
+point with stochastic rounding, 4 = low-bit float (``e<E>m<M>``: FP8
+E4M3/E5M2, bf16, fp16 — the ``bits`` field packs both grid parameters
+as ``100*E + M``), 5 = float with stochastic rounding. The stochastic
+modes (3, 5) apply their family's grid with nearest rounding inside the
+artifact — the stochastic stream exists host-side in the rust mirrors;
+an artifact-side SR kernel is a ROADMAP open item. Per-slot modes make
+heterogeneous configs (e.g. a BFP stash with fixed gradient outputs) a
+runtime choice. Bits ≥ 25 short-circuit to identity for the integer
+families, so fp32-style configs cost nothing numerically. BFP boxes
+always lie along the contraction axis of the GEMM that consumes the
+tensor (MSFP layout).
 
 Master weights and the optimizer state stay f32 (the paper quantizes
 GEMM operands and DRAM-resident intermediates, not the Adam state).
@@ -48,6 +51,7 @@ import jax.numpy as jnp
 from .kernels import ref
 from .kernels.bfp import bfp_quantize
 from .kernels.fixed import fixed_quantize
+from .kernels.floatq import float_quantize
 
 # Pallas kernels are the default quantizer implementation (they lower into
 # the AOT HLO); DSQ_NO_PALLAS=1 switches to the jnp oracle (bit-identical,
@@ -55,21 +59,34 @@ from .kernels.fixed import fixed_quantize
 _USE_PALLAS = os.environ.get("DSQ_NO_PALLAS", "0") != "1"
 
 # Which quantizer paths are compiled into the graph. "both" supports the
-# full runtime mode selector {0: fp32, 1: fixed, 2: bfp, 3: fixed-sr};
-# "bfp" / "fixed" compile a single quantizer (mode >= 1 selects it),
-# halving the number of quantize subgraphs — XLA 0.5.1's CPU pipeline
-# scales badly with the subgraph count (~270 s vs ~100 s compile for the
-# train step, DESIGN.md §Perf), so aot.py exports per-quantizer *train*
-# artifact variants (plus "train_both" for heterogeneous per-slot
-# configs) and the rust coordinator picks by the slot families.
+# full runtime mode selector {0: fp32, 1: fixed, 2: bfp, 3: fixed-sr,
+# 4: float, 5: float-sr}; "bfp" / "fixed" / "float" compile a single
+# quantizer, cutting the number of quantize subgraphs — XLA 0.5.1's CPU
+# pipeline scales badly with the subgraph count (~270 s vs ~100 s
+# compile for the train step, DESIGN.md §Perf) — so aot.py exports
+# per-quantizer *train* artifact variants (plus "train_both" for
+# heterogeneous per-slot configs) and the rust coordinator picks by the
+# slot families (runtime/artifact.rs::train_variant_for).
+#
+# Single-family variants apply their quantizer ONLY on an exact mode
+# match and are the identity on every other mode. They used to dispatch
+# `mode >= 1.0` into their own family, which silently quantized foreign
+# slots with the wrong kernel (e.g. a fixed16sr grad slot run through
+# the "bfp" variant came out BFP-quantized); the rust guard routes any
+# cross-family config to train_both, and the exact match here makes a
+# mis-routed config an obvious no-quantization instead of a silent
+# wrong-grid one.
 _QUANTIZERS = os.environ.get("DSQ_QUANTIZERS", "both")
+
+_VARIANTS = ("both", "bfp", "fixed", "float")
 
 
 def set_quantizers(which: str) -> None:
     """Select which quantizer paths future traces compile ("both"/"bfp"/
-    "fixed"). Used by aot.py to emit per-variant train artifacts."""
+    "fixed"/"float"). Used by aot.py to emit per-variant train
+    artifacts."""
     global _QUANTIZERS
-    assert which in ("both", "bfp", "fixed"), which
+    assert which in _VARIANTS, which
     _QUANTIZERS = which
 
 
@@ -81,19 +98,39 @@ def _fixed(x, bits):
     return fixed_quantize(x, bits) if _USE_PALLAS else ref.fixed_quantize_ref(x, bits)
 
 
+def _float(x, bits):
+    return float_quantize(x, bits) if _USE_PALLAS else ref.float_quantize_ref(x, bits)
+
+
+def _fixed_like(mode):
+    return jnp.logical_or(mode == 1.0, mode == 3.0)
+
+
+def _float_like(mode):
+    return jnp.logical_or(mode == 4.0, mode == 5.0)
+
+
 def quantize(x: jax.Array, mode: jax.Array, bits: jax.Array) -> jax.Array:
     """Runtime-selected fake quantization; boxes along the last axis.
 
-    Mode 3 (fixed-sr) shares the fixed-point grid: inside the artifact
-    it rounds to nearest (see the module docstring)."""
+    The stochastic modes (3 fixed-sr, 5 float-sr) share their family's
+    grid: inside the artifact they round to nearest (see the module
+    docstring). Single-quantizer variants match their modes exactly and
+    are the identity otherwise — never another family's kernel."""
     if _QUANTIZERS == "bfp":
-        return jnp.where(mode >= 1.0, _bfp(x, bits), x)
+        return jnp.where(mode == 2.0, _bfp(x, bits), x)
     if _QUANTIZERS == "fixed":
-        return jnp.where(mode >= 1.0, _fixed(x, bits), x)
+        return jnp.where(_fixed_like(mode), _fixed(x, bits), x)
+    if _QUANTIZERS == "float":
+        return jnp.where(_float_like(mode), _float(x, bits), x)
     qf = _fixed(x, bits)
     qb = _bfp(x, bits)
-    fixed_like = jnp.logical_or(mode == 1.0, mode == 3.0)
-    return jnp.where(fixed_like, qf, jnp.where(mode == 2.0, qb, x))
+    qe = _float(x, bits)
+    return jnp.where(
+        _fixed_like(mode),
+        qf,
+        jnp.where(mode == 2.0, qb, jnp.where(_float_like(mode), qe, x)),
+    )
 
 
 def quantize_contract(x: jax.Array, mode: jax.Array, bits: jax.Array, axis: int) -> jax.Array:

@@ -49,7 +49,9 @@ def test_nmt_exports_shapes():
     cfg = M.Seq2SeqConfig(vocab=64, d_model=32, nheads=2, d_ff=64, enc_layers=1,
                           dec_layers=1, src_len=16, tgt_len=16, batch=4)
     exports, specs = aot.build_nmt_exports(cfg)
-    assert set(exports) == {"init", "train_bfp", "train_fixed", "train_both", "eval", "decode"}
+    assert set(exports) == {
+        "init", "train_bfp", "train_fixed", "train_float", "train_both", "eval", "decode",
+    }
     n = len(specs)
     fn, ex = exports["train_bfp"]
     # params*3 + step + src + tgt_in + tgt_out + qcfg + lr
@@ -88,6 +90,14 @@ def test_aot_main_writes_manifest(tmp_path):
     names = [p["name"] for p in man["models"]["nmt"]["params"]]
     assert names == sorted(names)
     assert os.path.exists(os.path.join(out, "quant_bfp.hlo.txt"))
+    # The float + select-dispatch probes are registered in the manifest
+    # even when not exported in this --only run.
+    quant = man["quant"]["artifacts"]
+    for probe in ("quant_float", "quant_select_bfp", "quant_select_fixed",
+                  "quant_select_float", "quant_select_both"):
+        assert probe in quant, probe
+    assert "train_float" in man["models"]["nmt"]["artifacts"]
+    assert "train_float" in man["models"]["cls"]["artifacts"]
 
 
 @pytest.mark.slow

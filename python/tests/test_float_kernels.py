@@ -1,0 +1,126 @@
+"""L1 correctness for the float family (mode 4/5): pallas kernel vs the
+jnp oracle, plus grid semantics pinned against numpy's own float16 /
+ml_dtypes' bfloat16 rounding where the formats coincide.
+
+Deliberately hypothesis-free (unlike test_kernels.py) so the float
+coverage runs in minimal environments too.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.floatq import float_quantize
+
+RNG = np.random.default_rng(2024)
+
+E4M3 = ref.float_code(4, 3)
+E5M2 = ref.float_code(5, 2)
+FP16 = ref.float_code(5, 10)
+BF16 = ref.float_code(8, 7)
+
+
+def rand(shape, scale_lo=-8, scale_hi=8):
+    return (
+        RNG.standard_normal(shape) * np.exp(RNG.uniform(scale_lo, scale_hi, shape))
+    ).astype(np.float32)
+
+
+@pytest.mark.parametrize("shape", [(1, 16), (4, 16), (3, 24), (8, 128), (2, 3, 40), (7,), (5, 1)])
+@pytest.mark.parametrize("code", [E4M3, E5M2, FP16, BF16, ref.float_code(3, 4)])
+def test_float_matches_ref(shape, code):
+    x = rand(shape)
+    got = np.asarray(float_quantize(x, code))
+    want = np.asarray(ref.float_quantize_ref(x, code))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_float_code_packing():
+    assert E4M3 == 403.0
+    assert E5M2 == 502.0
+    assert FP16 == 510.0
+    assert BF16 == 807.0
+
+
+def test_e4m3_known_values():
+    # bias 7: max = 240, min subnormal 2^-9; round-half-to-even.
+    x = np.array([1.0, 1.3, 1.0625, 240.0, 300.0, -1e9, 2.0**-9, 2.0**-10, 0.0],
+                 np.float32)
+    q = np.asarray(ref.float_quantize_ref(x, E4M3))
+    np.testing.assert_array_equal(
+        q,
+        np.array([1.0, 1.25, 1.0, 240.0, 240.0, -240.0, 2.0**-9, 0.0, 0.0], np.float32),
+    )
+
+
+def test_e5m2_saturation_and_subnormals():
+    x = np.array([57344.0, 1e9, -1e9, 3.0, 2.0**-16], np.float32)
+    q = np.asarray(ref.float_quantize_ref(x, E5M2))
+    np.testing.assert_array_equal(
+        q, np.array([57344.0, 57344.0, -57344.0, 3.0, 2.0**-16], np.float32)
+    )
+
+
+def test_e5m10_matches_numpy_float16_rounding():
+    # e5m10 is IEEE binary16 with saturation instead of inf: inside the
+    # finite range (away from the inf-rounding boundary) our grid must
+    # agree with numpy's float16 cast exactly, subnormals included.
+    x = rand((512,), -10, 4)
+    x = np.clip(x, -60000.0, 60000.0).astype(np.float32)
+    got = np.asarray(ref.float_quantize_ref(x, FP16))
+    want = x.astype(np.float16).astype(np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_e8m7_matches_bfloat16_on_normals():
+    # bf16 = e8m7 on the normal range (our grid deviates only in the
+    # f32-subnormal-step regime below ~2^-119).
+    x = rand((512,), -6, 6)
+    got = np.asarray(ref.float_quantize_ref(x, BF16))
+    want = np.asarray(jnp.asarray(x, jnp.bfloat16).astype(jnp.float32))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_float_idempotent():
+    x = rand((8, 64))
+    for code in [E4M3, E5M2, FP16, BF16]:
+        q1 = np.asarray(float_quantize(x, code))
+        q2 = np.asarray(float_quantize(q1, code))
+        np.testing.assert_array_equal(q1, q2)
+
+
+def test_float_error_monotone_in_mantissa_bits():
+    x = rand((4, 64), -3, 3)
+    errs = []
+    for m in range(1, 11):
+        q = np.asarray(ref.float_quantize_ref(x, ref.float_code(5, m)))
+        errs.append(np.abs(q - x).sum())
+    for a, b in zip(errs, errs[1:]):
+        assert b <= a * 1.0000001 + 1e-12, errs
+
+
+def test_float_nan_inf_semantics():
+    x = np.array([np.nan, np.inf, -np.inf, 0.0, 1.0], np.float32)
+    q = np.asarray(ref.float_quantize_ref(x, E4M3))
+    assert np.isnan(q[0])
+    assert q[1] == 240.0 and q[2] == -240.0, "±inf saturate"
+    assert q[3] == 0.0 and q[4] == 1.0
+    # All-NaN tensors stay NaN (no amax reduction to poison).
+    q = np.asarray(ref.float_quantize_ref(np.full((8,), np.nan, np.float32), E5M2))
+    assert np.isnan(q).all()
+
+
+def test_select_quantize_ref_modes():
+    x = rand((4, 32))
+    np.testing.assert_array_equal(
+        np.asarray(ref.select_quantize_ref(x, 4.0, E4M3)),
+        np.asarray(ref.float_quantize_ref(x, E4M3)),
+    )
+    # Mode 5 (float-sr) shares the float grid with nearest rounding.
+    np.testing.assert_array_equal(
+        np.asarray(ref.select_quantize_ref(x, 5.0, E4M3)),
+        np.asarray(ref.float_quantize_ref(x, E4M3)),
+    )
+    np.testing.assert_array_equal(np.asarray(ref.select_quantize_ref(x, 0.0, E4M3)), x)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from compile.kernels import ref
 from compile.kernels.bfp import bfp_quantize, pick_block_rows
 from compile.kernels.fixed import fixed_quantize
+from compile.kernels.floatq import float_quantize
 from compile.kernels.qgemm import bfp_qgemm
 
 RNG = np.random.default_rng(2023)
@@ -170,6 +171,49 @@ def test_fixed_hypothesis_sweep(rows, cols, bits, seed):
     got = np.asarray(fixed_quantize(x, bits))
     want = np.asarray(ref.fixed_quantize_ref(x, bits))
     np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------- float
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.integers(1, 24),
+    cols=st.integers(1, 80),
+    code=st.sampled_from([403.0, 502.0, 510.0, 807.0, 304.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_float_hypothesis_sweep(rows, cols, code, seed):
+    r = np.random.default_rng(seed)
+    x = (r.standard_normal((rows, cols)) * np.exp(r.uniform(-20, 20, (rows, cols)))).astype(
+        np.float32
+    )
+    got = np.asarray(float_quantize(x, code))
+    want = np.asarray(ref.float_quantize_ref(x, code))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    vals=st.lists(
+        st.floats(
+            min_value=float(np.float32(-1e30)),
+            max_value=float(np.float32(1e30)),
+            allow_nan=False,
+            allow_infinity=False,
+            width=32,
+        ),
+        min_size=1,
+        max_size=48,
+    ),
+    code=st.sampled_from([403.0, 502.0, 510.0]),
+)
+def test_float_hypothesis_adversarial_values(vals, code):
+    x = np.asarray(vals, np.float32).reshape(1, -1)
+    got = np.asarray(float_quantize(x, code))
+    want = np.asarray(ref.float_quantize_ref(x, code))
+    np.testing.assert_array_equal(got, want)
+    assert np.isfinite(got).all()  # saturation: finite in, finite out
 
 
 # ---------------------------------------------------------------- select

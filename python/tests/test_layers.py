@@ -12,8 +12,9 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from compile import layers
 from compile.kernels import ref
-from compile.layers import dsq_bmm, dsq_dot, quantize_contract
+from compile.layers import dsq_bmm, dsq_dot, quantize, quantize_contract
 
 RNG = np.random.default_rng(7)
 
@@ -216,3 +217,124 @@ def test_bmm_modes_finite(mode):
     c = qcfg(mode, 8, 4, 4, 16)
     y = np.asarray(dsq_bmm(a, b, c))
     assert np.isfinite(y).all()
+
+
+# ------------------------------------------------------- float (mode 4/5)
+
+E4M3 = ref.float_code(4, 3)
+E5M2 = ref.float_code(5, 2)
+
+
+def test_dot_float_mode():
+    """Mode 4 runs the e<E>m<M> float grid at each quantization point."""
+    x, w = rand((4, 16)), rand((16, 8))
+    c = qcfg(4, E4M3, E4M3, E4M3, E5M2)
+    got = np.asarray(dsq_dot(x, w, c))
+    xq = ref.float_quantize_ref(x, E4M3)
+    wq = ref.float_quantize_ref(w, E4M3)  # per-element: no box axis
+    np.testing.assert_allclose(got, np.asarray(xq @ wq), rtol=1e-6, atol=1e-6)
+
+
+def test_dot_float_backward_points():
+    """FP8-LM slot assignment: E4M3 stash, E5M2 gradient traffic."""
+    x, w = rand((8, 32), -2, 2), rand((32, 16), -2, 2)
+    c = qcfg_slots((4, E4M3), (4, E4M3), (4, E4M3), (4, E5M2))
+    r = rand((8, 16), -1, 1)
+
+    def f(x, w):
+        return jnp.sum(dsq_dot(x, w, c) * r)
+
+    dx, dw = jax.grad(f, argnums=(0, 1))(x, w)
+    dy = ref.float_quantize_ref(r, E5M2)  # fetched from DRAM at q3
+    dyq = ref.float_quantize_ref(dy, E4M3)
+    wq = ref.float_quantize_ref(w, E4M3)
+    dx_want = ref.float_quantize_ref(dyq @ wq.T, E5M2)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_want), rtol=1e-6, atol=1e-6)
+    xs = ref.float_quantize_ref(x, E4M3)  # the stash
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(xs.T @ dy), rtol=1e-6, atol=1e-6)
+
+
+def test_mode5_float_sr_uses_float_grid_in_graph():
+    """Inside the artifact, mode 5 (float-sr) applies the float grid with
+    nearest rounding (the stochastic stream is host-side only)."""
+    x, w = rand((4, 16)), rand((16, 8))
+    got = np.asarray(dsq_dot(x, w, qcfg(5, E4M3, E4M3, E4M3, E5M2)))
+    want = np.asarray(dsq_dot(x, w, qcfg(4, E4M3, E4M3, E4M3, E5M2)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_float_heterogeneous_with_integer_families():
+    """A float fwd path with a BFP stash: each slot keeps its own family."""
+    x, w = rand((8, 32)), rand((32, 16))
+    c = qcfg_slots((4, E4M3), (2, 4), (4, E4M3), (4, E5M2))
+    r = rand((8, 16), -1, 1)
+    dx, dw = jax.grad(lambda x, w: jnp.sum(dsq_dot(x, w, c) * r), argnums=(0, 1))(x, w)
+    dy = ref.float_quantize_ref(r, E5M2)
+    xs = ref.bfp_quantize_ref(x, 4.0)  # slot 1 is bfp4
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(xs.T @ dy), rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------- single-family variant dispatch
+
+@pytest.fixture
+def restore_quantizers():
+    yield
+    layers.set_quantizers("both")
+
+
+def test_single_family_variants_match_modes_exactly(restore_quantizers):
+    """The dispatch bugfix: a single-quantizer variant applies its kernel
+    only on an exact mode match and is the identity otherwise. The old
+    `mode >= 1` dispatch quantized foreign slots with the wrong kernel
+    (e.g. a fixed16sr slot through the "bfp" variant came out BFP)."""
+    x = jnp.asarray(rand((4, 32)))
+    bits = jnp.float32(8.0)
+
+    layers.set_quantizers("bfp")
+    np.testing.assert_array_equal(
+        np.asarray(quantize(x, jnp.float32(2.0), bits)),
+        np.asarray(ref.bfp_quantize_ref(x, bits)),
+    )
+    # The regression: fixed/fixed-sr/float modes must NOT bfp-quantize.
+    for mode in (1.0, 3.0, 4.0, 5.0):
+        np.testing.assert_array_equal(
+            np.asarray(quantize(x, jnp.float32(mode), bits)), np.asarray(x), err_msg=f"mode {mode}"
+        )
+
+    layers.set_quantizers("fixed")
+    for mode in (1.0, 3.0):
+        np.testing.assert_array_equal(
+            np.asarray(quantize(x, jnp.float32(mode), bits)),
+            np.asarray(ref.fixed_quantize_ref(x, bits)),
+        )
+    for mode in (0.0, 2.0, 4.0):
+        np.testing.assert_array_equal(
+            np.asarray(quantize(x, jnp.float32(mode), bits)), np.asarray(x), err_msg=f"mode {mode}"
+        )
+
+    layers.set_quantizers("float")
+    for mode in (4.0, 5.0):
+        np.testing.assert_array_equal(
+            np.asarray(quantize(x, jnp.float32(mode), jnp.float32(E4M3))),
+            np.asarray(ref.float_quantize_ref(x, E4M3)),
+        )
+    for mode in (1.0, 2.0, 3.0):
+        np.testing.assert_array_equal(
+            np.asarray(quantize(x, jnp.float32(mode), bits)), np.asarray(x), err_msg=f"mode {mode}"
+        )
+
+
+def test_both_variant_dispatches_every_family(restore_quantizers):
+    layers.set_quantizers("both")
+    x = jnp.asarray(rand((4, 32)))
+    cases = [
+        (0.0, 32.0, np.asarray(x)),
+        (1.0, 8.0, np.asarray(ref.fixed_quantize_ref(x, 8.0))),
+        (2.0, 8.0, np.asarray(ref.bfp_quantize_ref(x, 8.0))),
+        (3.0, 8.0, np.asarray(ref.fixed_quantize_ref(x, 8.0))),
+        (4.0, E4M3, np.asarray(ref.float_quantize_ref(x, E4M3))),
+        (5.0, E5M2, np.asarray(ref.float_quantize_ref(x, E5M2))),
+    ]
+    for mode, bits, want in cases:
+        got = np.asarray(quantize(x, jnp.float32(mode), jnp.float32(bits)))
+        np.testing.assert_array_equal(got, want, err_msg=f"mode {mode}")

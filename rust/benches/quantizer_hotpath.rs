@@ -9,13 +9,15 @@
 //! newly registered format is tracked here automatically.
 //!
 //! `--smoke` (or `DSQ_BENCH_SMOKE=1`): a seconds-long CI profile that
-//! still executes every (format, size) cell and *asserts* the codec
-//! round-trip (`decode(encode(x)) == quantize(x)`) on each cell, so a
-//! codec regression fails the workflow rather than just skewing a
-//! number nobody reads.
+//! still executes every (format, size) cell — including the FP8 pair
+//! from the registry plus the generic-grammar float formats (SR fp8,
+//! fp16, bf16) — and *asserts* the codec round-trip
+//! (`decode(encode(x)) == quantize(x)`) on each cell, so a codec
+//! regression fails the workflow rather than just skewing a number
+//! nobody reads.
 
 use dsq::bench::{header, Bencher};
-use dsq::quant::{registered_specs, same_f32, Codec};
+use dsq::quant::{registered_specs, same_f32, Codec, FormatSpec};
 use dsq::util::rng::Pcg32;
 
 fn main() {
@@ -48,8 +50,15 @@ fn main() {
         let mut buf = x.clone();
         let shape = [n / inner, inner];
         // The width list stays below the >= 25-bit passthrough, so every
-        // swept spec (fp32 never instantiates at these widths) does real work.
-        for spec in registered_specs(&widths) {
+        // swept spec (fp32 never instantiates at these widths) does real
+        // work. The registry contributes fp8e4m3/fp8e5m2 at width 8; the
+        // generic-grammar float formats (SR fp8, fp16, bf16) are added
+        // explicitly since they have no registry width row.
+        let mut specs = registered_specs(&widths);
+        for extra in ["e4m3sr", "e5m10", "e8m7"] {
+            specs.push(FormatSpec::parse(extra).unwrap());
+        }
+        for spec in specs {
             let label = format!("{:<10} n={n:>8} inner={inner:>4}", spec.spec_string());
             let r = b.bench(&label, || {
                 buf.copy_from_slice(&x);

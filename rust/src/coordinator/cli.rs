@@ -82,6 +82,12 @@ batch prefetch (--prefetch), validation per epoch or every N steps
 schedule state — a checkpoint saved mid-DSQ-ladder resumes at the saved
 controller level via --init-checkpoint. Both print the time-weighted
 hardware cost of the run's schedule (IWSLT / RoBERTa-base scale).
+
+--schedule accepts dsq (the paper's BFP ladder), dsq-<family>
+(dsq-fixed, dsq-fixedsr), dsq-fp8 (FP8-LM-style floats: E4M3
+fwd/stash/bwd, E5M2 gradients), or any static config spec — see `dsq
+formats` for the registered formats, including the FP8 pair and the
+generic e<E>m<M>[sr] float spelling (e8m7 = bf16, e5m10 = fp16).
 ";
 
 /// Parse `--schedule`. Every static form goes through the format
@@ -89,14 +95,18 @@ hardware cost of the run's schedule (IWSLT / RoBERTa-base scale).
 /// immediately spellable here with no CLI change:
 ///
 /// * `dsq` — the paper's dynamic controller over BFP;
-/// * `dsq-<family>` — the same ladder over any registered family
-///   (`dsq-fixed`, `dsq-fixedsr`, …);
-/// * a static config spec: `fp32`, one format for all slots (`bfp8`),
-///   one family with per-slot widths (`bfp:16,4,4,16`), or per-slot
-///   specs (`bfp16,bfp4,bfp4,fixed16sr`).
+/// * `dsq-fp8` — the FP8-LM-style float ladder (E4M3 compute/stash,
+///   E5M2 gradients, widening through fp16 on plateaus);
+/// * `dsq-<family>` — the paper's ladder over any registered
+///   width-parameterized family (`dsq-fixed`, `dsq-fixedsr`, …);
+/// * a static config spec: `fp32`, one format for all slots (`bfp8`,
+///   `fp8e4m3`), one family with per-slot widths (`bfp:16,4,4,16`), or
+///   per-slot specs (`bfp16,bfp4,bfp4,fixed16sr`,
+///   `fp8e4m3,fp8e4m3,fp8e4m3,fp8e5m2`).
 pub fn parse_schedule(spec: &str) -> Result<Box<dyn Schedule>> {
     match spec {
         "dsq" => Ok(Box::new(DsqController::paper_default("bfp")?)),
+        "dsq-fp8" => Ok(Box::new(DsqController::fp8_default()?)),
         other => {
             if let Some(family) = other.strip_prefix("dsq-") {
                 return Ok(Box::new(DsqController::paper_default(family)?));
@@ -111,7 +121,11 @@ fn common_train_flags(spec: ArgSpec) -> ArgSpec {
         .opt("seed", "0", "RNG seed for init + corpus")
         .opt("epochs", "4", "training epochs")
         .opt("batches-per-epoch", "50", "train batches per epoch")
-        .opt("schedule", "dsq", "dsq | dsq-<family> | fp32 | <family>:q0,q1,q2,q3 | s0,s1,s2,s3")
+        .opt(
+            "schedule",
+            "dsq",
+            "dsq | dsq-<family> | dsq-fp8 | fp32 | <family>:q0,q1,q2,q3 | s0,s1,s2,s3",
+        )
         .opt("prefetch", "4", "bounded prefetch depth for the batch generator thread (>= 1)")
         .opt("val-every", "0", "also validate every N steps (0 = per-epoch only)")
         .opt(
@@ -352,8 +366,9 @@ fn cmd_formats() -> Result<()> {
         );
     }
     println!(
-        "\nconfig spec forms: <spec> | <family>:q0,q1,q2,q3 | <spec>,<spec>,<spec>,<spec>\n\
-         schedules: dsq | dsq-<family> | any config spec (static)\n\
+        "\ngeneric float spelling: e<E>m<M>[sr] (e4m3, e5m2, e8m7 = bf16, e5m10 = fp16)\n\
+         config spec forms: <spec> | <family>:q0,q1,q2,q3 | <spec>,<spec>,<spec>,<spec>\n\
+         schedules: dsq | dsq-<family> | dsq-fp8 | any config spec (static)\n\
          --stash-state <spec>: keep trainer state packed (sub-byte) between steps"
     );
     Ok(())
@@ -409,6 +424,22 @@ mod tests {
         assert_eq!(s.current().fwd(), FormatSpec::fixed_sr(2));
         assert!(parse_schedule("dsq-fixed").is_ok());
         assert!(parse_schedule("dsq-int8").is_err());
+    }
+
+    #[test]
+    fn parse_schedule_fp8_forms() {
+        // The dynamic FP8 ladder.
+        let s = parse_schedule("dsq-fp8").unwrap();
+        assert_eq!(s.current().notation(), "[8,8,8,8]");
+        assert_eq!(s.current().fwd(), FormatSpec::fp8e4m3());
+        assert_eq!(s.current().grad(), FormatSpec::fp8e5m2());
+        // Static float configs through the registry + generic grammar.
+        let s = parse_schedule("fp8e4m3,fp8e4m3,fp8e4m3,fp8e5m2").unwrap();
+        assert_eq!(s.current().grad(), FormatSpec::fp8e5m2());
+        let s = parse_schedule("e8m7").unwrap();
+        assert_eq!(s.current().fwd(), FormatSpec::float(8, 7));
+        // "dsq-e4m3" is not a width-parameterized family ladder.
+        assert!(parse_schedule("dsq-e4m3").is_err());
     }
 
     #[test]

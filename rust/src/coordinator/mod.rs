@@ -36,32 +36,15 @@ pub use session::{
 };
 pub use trainer::{Trainer, TrainerConfig};
 
-use crate::schedule::{FormatSpec, PrecisionConfig};
+use crate::schedule::PrecisionConfig;
 
-/// Which train-artifact variant a precision config needs. The AOT
-/// pipeline exports per-quantizer variants (`aot.py`): `train_bfp` and
-/// `train_fixed` bake a single quantizer subgraph (XLA compile time
-/// scales badly with the subgraph count), `train_both` carries both for
-/// heterogeneous per-slot configs. The fp32 path (mode scalar 0) exists
-/// in every variant; stochastic-rounding fixed slots ride the fixed
-/// quantizer grid.
+/// Which train-artifact variant a precision config needs — delegated to
+/// the artifact-side guard ([`crate::runtime::train_variant_for`]),
+/// which owns the per-variant dispatch contract (single-family variants
+/// apply their quantizer only on an exact mode match; cross-family
+/// configs must run `train_both`).
 pub fn train_artifact_kind(p: &PrecisionConfig) -> &'static str {
-    let (mut fixed, mut bfp) = (false, false);
-    for f in &p.slots {
-        // Exhaustive on purpose: a future format family must decide its
-        // artifact routing here explicitly (compiler error, not a
-        // silent fall-through to the BFP variant).
-        match f {
-            FormatSpec::Fixed { .. } => fixed = true,
-            FormatSpec::Bfp { .. } => bfp = true,
-            FormatSpec::Fp32 => {}
-        }
-    }
-    match (fixed, bfp) {
-        (true, true) => "train_both",
-        (true, false) => "train_fixed",
-        (false, _) => "train_bfp",
-    }
+    crate::runtime::train_variant_for(p)
 }
 
 #[cfg(test)]
@@ -77,5 +60,7 @@ mod tests {
         assert_eq!(kind("fixedsr:8,8,8,16"), "train_fixed");
         assert_eq!(kind("bfp16,bfp4,bfp4,fixed16sr"), "train_both");
         assert_eq!(kind("fp32,bfp4,bfp4,bfp16"), "train_bfp");
+        assert_eq!(kind("fp8e4m3,fp8e4m3,fp8e4m3,fp8e5m2"), "train_float");
+        assert_eq!(kind("e4m3,bfp4,bfp4,fixed16sr"), "train_both");
     }
 }

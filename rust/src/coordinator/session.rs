@@ -173,6 +173,19 @@ impl ExeCache {
         Ok(exe)
     }
 
+    /// Resolve the train executable for a precision config through the
+    /// artifact-side dispatch guard ([`crate::runtime::train_kind_for`]):
+    /// the preferred single-family variant when this model's manifest
+    /// carries it, else a `train_both` that genuinely covers the config
+    /// — so a cross-family config can never run through a variant that
+    /// would skip (or, historically, wrong-kernel) its foreign slots,
+    /// and a float config against pre-float artifacts fails loudly
+    /// instead of silently training unquantized.
+    pub fn get_train(&mut self, p: &PrecisionConfig) -> Result<Arc<Executable>> {
+        let kind = crate::runtime::train_kind_for(&self.artifacts, p)?;
+        self.get(kind)
+    }
+
     /// Distinct artifact kinds resolved so far.
     pub fn loaded(&self) -> usize {
         self.cache.len()
@@ -451,7 +464,7 @@ impl<T: Task> Session<T> {
 
             for batch in rx.iter() {
                 let pc = schedule.current();
-                let exe = self.exes.get(super::train_artifact_kind(&pc))?;
+                let exe = self.exes.get_train(&pc)?;
                 let lr = self.cfg.lr.at(self.state.step + 1) as f32;
                 let mut inputs = Vec::with_capacity(3 * self.state.params.len() + 6);
                 inputs.extend(self.state.params.iter().cloned());

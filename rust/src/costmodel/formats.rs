@@ -25,10 +25,21 @@
 //! * **fp32 MAC**: 1.2 (aligner + normalizer over int32; the paper
 //!   normalizes to fixed-32 and leaves fp32 rows unscored — we do the
 //!   same in tables, this constant only feeds the roofline).
+//! * **float `e<E>m<M>` MAC**: a significand multiply + per-element
+//!   exponent add/align — `A·(p₁·p₂)/32² + B·max(p₁,p₂)/32 +
+//!   C·max(E₁,E₂)/8` with `p = M + 1` (the implicit-bit significand;
+//!   the sign is an XOR, excluded like everywhere else). `A`/`B` are
+//!   the BFP multiplier/shifter constants (same datapath elements); `C`
+//!   prices the per-MAC exponent adder against the 8-bit reference.
+//!   e4m3×e4m3 comes out at 0.051×, e5m2×e5m2 at 0.050× — the ~1/20 of
+//!   int32 that FP8 hardware surveys report.
 //! * **storage**: fixed-b = `b` bits/element; BFP-b = `b + 4`
 //!   bits/element (sign+mantissa `b`, amortized shared exponent 8/16 =
 //!   0.5, container padding — fitted: BFP-32 → 36/32 = 1.13×, BFP-16 →
-//!   20/32 = 0.63×, both matching the paper exactly).
+//!   20/32 = 0.63×, both matching the paper exactly); float = the
+//!   container `1 + E + M` (every element carries its own exponent, so
+//!   there is no amortized-metadata term — the codec stores exactly
+//!   this, byte-per-element at the FP8 widths).
 //!
 //! Widths ≥ 25 are numerically an identity, but the *hardware* cost
 //! still reflects the container (32-bit fixed / BFP-32): the paper's
@@ -44,6 +55,12 @@ pub const BFP_MAC_SHIFT: f64 = 0.16;
 pub const FP32_MAC: f64 = 1.2;
 /// BFP per-element storage overhead in bits (exponent share + padding).
 pub const BFP_STORAGE_OVERHEAD_BITS: f64 = 4.0;
+/// Float-family MAC constants: significand multiply reuses the BFP
+/// multiplier scaling, alignment reuses the BFP shifter, and the
+/// per-element exponent adder is priced against the 8-bit reference.
+pub const FLOAT_MAC_MUL: f64 = BFP_MAC_MUL;
+pub const FLOAT_MAC_ALIGN: f64 = BFP_MAC_SHIFT;
+pub const FLOAT_MAC_EXP: f64 = 0.05;
 
 impl FormatSpec {
     /// Storage bits per element in DRAM.
@@ -52,6 +69,9 @@ impl FormatSpec {
             FormatSpec::Fp32 => 32.0,
             FormatSpec::Fixed { bits, .. } => bits as f64,
             FormatSpec::Bfp { bits } => bits as f64 + BFP_STORAGE_OVERHEAD_BITS,
+            // The container is the whole story: the per-element exponent
+            // lives inside the lane, no amortized metadata.
+            FormatSpec::Float { .. } => self.bits() as f64,
         }
     }
 
@@ -59,6 +79,10 @@ impl FormatSpec {
     /// formats (int32 MAC ≡ 1.0). Symmetric in its arguments.
     pub fn mac_cost(&self, other: &FormatSpec) -> f64 {
         use FormatSpec::*;
+        // Float significand width: mantissa + implicit bit.
+        fn p(man_bits: u32) -> f64 {
+            (man_bits + 1) as f64
+        }
         match (*self, *other) {
             (Fp32, _) | (_, Fp32) => FP32_MAC,
             (Fixed { bits: b1, .. }, Fixed { bits: b2, .. }) => {
@@ -75,6 +99,26 @@ impl FormatSpec {
             | (Bfp { bits: m2 }, Fixed { bits: b1, .. }) => {
                 let (b1, m2) = (b1 as f64, m2 as f64);
                 BFP_MAC_MUL * (b1 * m2) / 1024.0 + BFP_MAC_SHIFT * b1.max(m2) / 32.0
+            }
+            // Float × float: significand multiply + align + exponent add.
+            (
+                Float { exp_bits: e1, man_bits: m1, .. },
+                Float { exp_bits: e2, man_bits: m2, .. },
+            ) => {
+                let (p1, p2) = (p(m1), p(m2));
+                FLOAT_MAC_MUL * (p1 * p2) / 1024.0
+                    + FLOAT_MAC_ALIGN * p1.max(p2) / 32.0
+                    + FLOAT_MAC_EXP * e1.max(e2) as f64 / 8.0
+            }
+            // Float × fixed/BFP: the integer side feeds its full lane
+            // width into the shared multiplier/aligner; the exponent
+            // path runs at the float side's width (the integer operand's
+            // shared exponent rides the same adder, as in the BFP unit).
+            (Float { exp_bits, man_bits, .. }, o) | (o, Float { exp_bits, man_bits, .. }) => {
+                let (p1, p2) = (p(man_bits), o.bits() as f64);
+                FLOAT_MAC_MUL * (p1 * p2) / 1024.0
+                    + FLOAT_MAC_ALIGN * p1.max(p2) / 32.0
+                    + FLOAT_MAC_EXP * exp_bits as f64 / 8.0
             }
         }
     }
@@ -100,14 +144,20 @@ impl FormatSpec {
     ///   (amortized exponent + padding), while the codec stores the raw
     ///   8-bit exponent byte + alignment per box — up to
     ///   [`BFP_STORAGE_OVERHEAD_BITS`] per element plus 15 bits per box
-    ///   of divergence.
+    ///   of divergence, counted over the **boxes the codec actually
+    ///   packs** (ragged tensors pack `len % inner` trailing elements as
+    ///   a short row with its own boxes);
+    /// * float formats carry only the trailing byte-alignment of the
+    ///   lane stream.
     ///
     /// Anything beyond the allowance is a drifted cost model (or a
     /// broken codec) and returns `Err` with the numbers.
     pub fn audit_storage(&self, len: usize, inner: usize) -> std::result::Result<(), String> {
         let observed_bits = self.observed_bytes(len, inner) as f64 * 8.0;
         // Identity widths (>= 25) store the raw 32-bit container.
-        let container_bits = if self.bits() as f32 >= PASSTHROUGH_BITS {
+        let container_bits = if !matches!(self, FormatSpec::Float { .. })
+            && self.bits() as f32 >= PASSTHROUGH_BITS
+        {
             32.0f64.max(self.storage_bits())
         } else {
             self.storage_bits()
@@ -116,10 +166,15 @@ impl FormatSpec {
         let allowance = match *self {
             FormatSpec::Fp32 => 0.0,
             FormatSpec::Fixed { .. } => 8.0 + 7.0,
+            FormatSpec::Float { .. } => 7.0,
             FormatSpec::Bfp { .. } => {
-                let rows = if inner > 0 { len / inner } else { 0 };
-                let boxes_per_row = inner.div_ceil(BOX);
-                let nboxes = (rows * boxes_per_row) as f64;
+                // The row/box count the codec packs: full rows of
+                // `inner`, plus the ragged trailing row's boxes (the
+                // old `len / inner` truncation undercounted those and
+                // mis-flagged ragged tensors).
+                let full_rows = len / inner;
+                let tail = len % inner;
+                let nboxes = (full_rows * inner.div_ceil(BOX) + tail.div_ceil(BOX)) as f64;
                 len as f64 * BFP_STORAGE_OVERHEAD_BITS + nboxes * (EXP_BITS as f64 + 7.0)
             }
         };
@@ -138,9 +193,17 @@ impl FormatSpec {
         matches!(self, FormatSpec::Bfp { .. })
     }
 
+    pub fn is_float(&self) -> bool {
+        matches!(self, FormatSpec::Float { .. })
+    }
+
     /// True for formats whose quantizer applies stochastic rounding.
     pub fn is_stochastic(&self) -> bool {
-        matches!(self, FormatSpec::Fixed { rounding: Rounding::Stochastic, .. })
+        matches!(
+            self,
+            FormatSpec::Fixed { rounding: Rounding::Stochastic, .. }
+                | FormatSpec::Float { rounding: Rounding::Stochastic, .. }
+        )
     }
 }
 
@@ -184,6 +247,49 @@ mod tests {
     }
 
     #[test]
+    fn float_mac_and_storage_anchors() {
+        let e4m3 = FormatSpec::fp8e4m3();
+        let e5m2 = FormatSpec::fp8e5m2();
+        // FP8 MACs land at ~1/20 of int32 (0.051 / 0.050).
+        assert!((e4m3.mac_cost(&e4m3) - 0.051).abs() < 5e-4, "{}", e4m3.mac_cost(&e4m3));
+        assert!((e5m2.mac_cost(&e5m2) - 0.050).abs() < 5e-4, "{}", e5m2.mac_cost(&e5m2));
+        // Storage is the raw container: 8 bits for fp8, 16 for fp16/bf16.
+        assert_eq!(e4m3.storage_bits(), 8.0);
+        assert_eq!(e5m2.storage_bits(), 8.0);
+        assert_eq!(FormatSpec::float(5, 10).storage_bits(), 16.0);
+        assert_eq!(FormatSpec::float(8, 7).storage_bits(), 16.0);
+        // The packed codec stores exactly one byte per fp8 element.
+        assert_eq!(e4m3.observed_bytes(1000, 1000), 1000);
+        assert_eq!(FormatSpec::float(5, 10).observed_bytes(1000, 1000), 2000);
+        // Monotone in mantissa bits at fixed exponent width.
+        let c = |m| {
+            let f = FormatSpec::float(5, m);
+            f.mac_cost(&f)
+        };
+        assert!(c(2) < c(5) && c(5) < c(10));
+        // Mixed float x bfp / float x fixed is symmetric and finite.
+        let m1 = e4m3.mac_cost(&FormatSpec::bfp(16));
+        let m2 = FormatSpec::bfp(16).mac_cost(&e4m3);
+        assert_eq!(m1, m2);
+        assert!(m1 > 0.0 && m1 < 1.0);
+        assert_eq!(
+            e5m2.mac_cost(&FormatSpec::fixed(16)),
+            FormatSpec::fixed(16).mac_cost(&e5m2)
+        );
+        // fp32 operands dominate as usual.
+        assert_eq!(e4m3.mac_cost(&FormatSpec::Fp32), FP32_MAC);
+    }
+
+    #[test]
+    fn float_sr_costs_like_nearest() {
+        let (n, s) = (FormatSpec::fp8e4m3(), FormatSpec::float_sr(4, 3));
+        assert_eq!(n.storage_bits(), s.storage_bits());
+        assert_eq!(n.mac_cost(&n), s.mac_cost(&s));
+        assert!(s.is_stochastic() && !n.is_stochastic());
+        assert!(s.is_float() && n.is_float() && !FormatSpec::bfp(4).is_float());
+    }
+
+    #[test]
     fn stochastic_rounding_costs_like_nearest() {
         // SR changes the quantizer, not the MAC array or the container.
         for b in [4u32, 8, 16] {
@@ -220,11 +326,22 @@ mod tests {
     #[test]
     fn storage_model_agrees_with_codec_for_every_registry_format() {
         // The satellite contract: the cost model can no longer disagree
-        // with the bytes the codec actually stores, beyond box metadata.
+        // with the bytes the codec actually stores, beyond box metadata
+        // — including on ragged tensors (len % inner != 0).
         for spec in crate::quant::registered_specs(&[2, 3, 4, 5, 6, 8, 12, 16, 20, 24, 32]) {
-            for (len, inner) in
-                [(4096usize, 4096usize), (4096, 128), (3 * 100, 100), (2 * 21, 21), (40, 1), (0, 1)]
-            {
+            for (len, inner) in [
+                (4096usize, 4096usize),
+                (4096, 128),
+                (3 * 100, 100),
+                (2 * 21, 21),
+                (40, 1),
+                (0, 1),
+                // Ragged: short trailing rows of every flavor.
+                (4096 + 57, 128),
+                (5, 24),
+                (2 * 21 + 1, 21),
+                (100, 48),
+            ] {
                 spec.audit_storage(len, inner).unwrap_or_else(|e| {
                     panic!("cost model disagrees with codec: {e}");
                 });
@@ -241,11 +358,26 @@ mod tests {
                     [rng.below(crate::quant::FORMAT_REGISTRY.len() as u32) as usize];
                 let bits = rng.range(fam.min_bits, fam.max_bits + 1);
                 let inner = 1 + rng.below(4 * size + 16) as usize;
-                let rows = 1 + rng.below(8) as usize;
-                (fam.instantiate(bits).unwrap(), rows * inner, inner)
+                let rows = rng.below(8) as usize;
+                // Ragged shapes included: a trailing partial row of any
+                // length the codec can pack.
+                let tail = rng.below(inner as u32) as usize;
+                (fam.instantiate(bits).unwrap(), rows * inner + tail, inner)
             },
             |(spec, len, inner)| spec.audit_storage(*len, *inner),
         );
+    }
+
+    #[test]
+    fn audit_storage_accepts_ragged_bfp_regression() {
+        // The exact shape class the truncating `len / inner` undercounted:
+        // a ragged tensor whose tail adds boxes beyond rows * boxes_per_row.
+        let spec = FormatSpec::bfp(2);
+        // 3 full rows of 33 (3 boxes each) + a 31-elem tail (2 boxes).
+        spec.audit_storage(3 * 33 + 31, 33).unwrap();
+        // Tail-only tensor (the old count said zero boxes).
+        spec.audit_storage(31, 33).unwrap();
+        assert_eq!(spec.observed_bytes(31, 33), 2 + 4 + 4);
     }
 
     #[test]

@@ -1,18 +1,27 @@
 //! Block-Floating-Point (MSFP) fake quantization — rust mirror of
 //! `python/compile/kernels/bfp.py`.
 //!
-//! A tensor is viewed as rows of `inner` contiguous elements; each row is
-//! split into boxes of [`BOX`] (16) elements (the last box may be short —
+//! A tensor is viewed as rows of `inner` contiguous elements (the last
+//! row may be ragged — shorter than `inner`); each row is split into
+//! boxes of [`BOX`] (16) elements (the last box of a row may be short —
 //! identical to the kernel's zero-padding because pad zeros never change
 //! a box max). Per box: shared exponent from the box |max|, then sign +
 //! (m-1)-bit magnitude per element.
+//!
+//! Non-finite semantics are the per-box analogue of the fixed kernel's
+//! (see `fixed.rs` / the `quant` module docs): the box exponent comes
+//! from the finite FTZ'd box max, NaN propagates — even out of an
+//! all-NaN box, whose other mass flushes to zero — and ±inf clamp to
+//! the box max magnitude.
 
+use super::fixed::fill_zero_grid;
 use super::{ftz, quant_grid, BOX, PASSTHROUGH_BITS};
 
 /// Quantize `x` in place. `inner` is the length of the minor (last)
-/// axis; `x.len()` must be a multiple of it.
+/// axis; a trailing partial row (`x.len() % inner != 0`) is quantized
+/// as its own (ragged) row.
 pub fn bfp_quantize_into(x: &mut [f32], inner: usize, mbits: f32) {
-    assert!(inner > 0 && x.len() % inner == 0, "len {} not a multiple of inner {inner}", x.len());
+    assert!(inner > 0, "inner must be >= 1");
     if mbits >= PASSTHROUGH_BITS {
         return;
     }
@@ -35,7 +44,8 @@ fn quantize_box(boxed: &mut [f32], m: f32) {
     // FTZ to match the XLA artifacts (subnormals read as zero there).
     let amax = boxed.iter().fold(0.0f32, |a, &v| a.max(ftz(v.abs())));
     if amax <= 0.0 {
-        boxed.fill(0.0);
+        // Degenerate grid: zeros/subnormals flush, NaN propagates.
+        fill_zero_grid(boxed);
         return;
     }
     // Hoist the box constants out of the element loop (§Perf: computing
@@ -201,6 +211,38 @@ mod tests {
         let q2 = bfp_quantize(&mixed, 16, 4.0);
         // Reconstruct element 0 from the reported grid.
         assert_eq!(q2[0], ((0.5 / step2).round_ties_even()).clamp(-maxmag, maxmag) * step2);
+    }
+
+    #[test]
+    fn ragged_trailing_row_quantizes_as_its_own_row() {
+        // len not a multiple of inner: the tail is a short row whose
+        // boxes restart (they never continue the previous row's box).
+        let mut rng = Pcg32::new(21);
+        let x = gen_f32s(&mut rng, 2 * 24 + 10, 6.0);
+        let q = bfp_quantize(&x, 24, 4.0);
+        // Rows 0/1 match quantizing them alone; the 10-elem tail too.
+        assert_eq!(&q[..48], bfp_quantize(&x[..48], 24, 4.0).as_slice());
+        assert_eq!(&q[48..], bfp_quantize(&x[48..], 10, 4.0).as_slice());
+    }
+
+    #[test]
+    fn nan_box_semantics_pinned() {
+        // An all-NaN box keeps its NaNs; its neighbors are unaffected.
+        let mut x = vec![1.0f32; 32];
+        x[..16].fill(f32::NAN);
+        let q = bfp_quantize(&x, 32, 4.0);
+        assert!(q[..16].iter().all(|v| v.is_nan()), "all-NaN box must stay NaN");
+        assert_eq!(&q[16..], &[1.0; 16]);
+        // NaN mixed into a live box rides through; ±inf clamp per box.
+        let mut y = vec![0.5f32; 16];
+        y[0] = f32::NAN;
+        y[1] = f32::INFINITY;
+        let q = bfp_quantize(&y, 16, 4.0);
+        assert!(q[0].is_nan());
+        assert!(q[1].is_finite() && q[1] > 0.0, "inf clamps to the box max: {}", q[1]);
+        // Like any huge outlier, inf blows up the box exponent and the
+        // finite tail flushes — the heavy-tail failure mode, not a bug.
+        assert_eq!(q[2], 0.0);
     }
 
     #[test]

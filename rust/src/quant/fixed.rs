@@ -5,10 +5,29 @@
 //! per-element rule is identical to BFP's. Its global scaling is exactly
 //! the weakness the paper's Stashing(Fixed) rows expose: a heavy-tailed
 //! tensor flushes most of its mass to zero at aggressive widths.
+//!
+//! Non-finite semantics (pinned by tests, shared with BFP and the float
+//! kernel; see the `quant` module docs): the shared exponent comes from
+//! the **finite** FTZ'd `|max|` (rust's `f32::max` skips NaN operands,
+//! ±inf dominates and clamps the exponent to 127), NaN elements
+//! propagate as NaN — including through the degenerate zero-`amax` grid,
+//! where everything else flushes to zero — and ±inf clamp to the grid's
+//! max magnitude like any oversized value.
 
 use crate::util::rng::Pcg32;
 
 use super::{ftz, quant_grid, PASSTHROUGH_BITS};
+
+/// Fill the degenerate-grid result for a tensor whose FTZ'd |max| is
+/// zero: all-zero / all-subnormal mass flushes to 0, NaN still
+/// propagates (the packed codec round-trips it via its lane sentinel —
+/// flushing it here would make `decode(encode(x)) != quantize(x)`).
+#[inline]
+pub(super) fn fill_zero_grid(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = if v.is_nan() { f32::NAN } else { 0.0 };
+    }
+}
 
 /// Quantize `x` in place with `bits` total mantissa width.
 pub fn fixed_quantize_into(x: &mut [f32], bits: f32) {
@@ -18,7 +37,7 @@ pub fn fixed_quantize_into(x: &mut [f32], bits: f32) {
     // FTZ to match the XLA artifacts (subnormals read as zero there).
     let amax = x.iter().fold(0.0f32, |a, &v| a.max(ftz(v.abs())));
     if amax <= 0.0 {
-        x.fill(0.0);
+        fill_zero_grid(x);
         return;
     }
     // Hoist the per-tensor constants out of the element loop (§Perf);
@@ -49,7 +68,7 @@ pub fn fixed_quantize_sr_into(x: &mut [f32], bits: f32, rng: &mut Pcg32) {
     }
     let amax = x.iter().fold(0.0f32, |a, &v| a.max(ftz(v.abs())));
     if amax <= 0.0 {
-        x.fill(0.0);
+        fill_zero_grid(x);
         return;
     }
     let (_, step, maxmag) = quant_grid(amax, bits);
@@ -171,6 +190,34 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn nan_inf_semantics_pinned() {
+        // NaN propagates elementwise — including through the degenerate
+        // zero-amax grid — and ±inf clamp like oversized finite values.
+        let q = fixed_quantize(&[f32::NAN; 6], 8.0);
+        assert!(q.iter().all(|v| v.is_nan()), "all-NaN tensor must stay NaN: {q:?}");
+        // All-subnormal tensors still flush (FTZ semantics).
+        let sub = f32::MIN_POSITIVE / 4.0;
+        assert_eq!(fixed_quantize(&[sub; 6], 8.0), vec![0.0; 6]);
+        // Mixed NaN + subnormal: NaN survives, subnormals flush.
+        let q = fixed_quantize(&[f32::NAN, sub, 0.0], 8.0);
+        assert!(q[0].is_nan());
+        assert_eq!(&q[1..], &[0.0, 0.0]);
+        // Mixed NaN + normal values: the grid comes from the finite max.
+        let q = fixed_quantize(&[f32::NAN, 4.0, 1.3], 4.0);
+        assert!(q[0].is_nan());
+        assert_eq!(&q[1..], &[4.0, 1.0]);
+        // ±inf dominates the (clamped) exponent and saturates.
+        let q = fixed_quantize(&[f32::INFINITY, f32::NEG_INFINITY, 1.0], 4.0);
+        assert!(q[0].is_finite() && q[0] > 0.0, "inf must clamp to the grid max: {}", q[0]);
+        assert_eq!(q[1], -q[0]);
+        // The SR variant shares the semantics.
+        let mut rng = Pcg32::new(2);
+        let q = fixed_quantize_sr(&[f32::NAN, sub], 8.0, &mut rng);
+        assert!(q[0].is_nan());
+        assert_eq!(q[1], 0.0);
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! Low-bit float fake quantization (the `e<E>m<M>` family: FP8
+//! E4M3/E5M2, and bf16/fp16 as `e8m7`/`e5m10`) — rust mirror of
+//! `python/compile/kernels/floatq.py` / `ref.float_quantize_ref`.
+//!
+//! Unlike the fixed/BFP kernels there is **no shared exponent and no
+//! tensor-wide reduction**: every element carries its own exponent, so
+//! quantization is embarrassingly parallel and — crucially — the
+//! NaN/±inf semantics need no `amax` special-casing.
+//!
+//! ## Grid definition (IEEE-754 style, bias `2^(E-1) - 1`)
+//!
+//! For `E` exponent bits and `M` mantissa bits (total width `1 + E + M`):
+//!
+//! * normal range: exponents `e ∈ [e_min, e_max]` with
+//!   `e_min = 1 - bias`, `e_max = bias`; within binade `e` the step is
+//!   `2^(e - M)`;
+//! * **subnormal support**: `|x| < 2^e_min` quantizes on the uniform
+//!   grid `k · 2^(e_min - M)` (for `e5m10` this reproduces IEEE fp16
+//!   subnormals exactly);
+//! * **saturating overflow**: values beyond
+//!   `max = 2^e_max · (2 - 2^-M)` — including ±inf — clamp to `±max`
+//!   (OCP-FP8-style saturation; there is no inf encoding);
+//! * **NaN propagates** as NaN (the packed codec reserves the all-ones
+//!   exponent field for it);
+//! * rounding is round-half-to-even, or unbiased stochastic rounding in
+//!   the `sr` variant (one uniform draw per element, same [`Pcg32`]
+//!   stream discipline as `fixed<b>sr`).
+//!
+//! One deliberate FTZ deviation, shared with the fixed/BFP kernels: the
+//! step exponent is clamped to the normal-f32 range (`e - M ≥ -126`),
+//! because XLA CPU runs with FTZ and a subnormal step would flush to
+//! zero inside the artifact. Formats whose ideal grid dips below that
+//! (only wide-exponent ones like `e8m7`) bottom out on a `2^-126` step;
+//! f32-subnormal *inputs* read as zero ([`ftz`]), as everywhere else.
+
+use crate::util::rng::Pcg32;
+
+use super::{floor_log2, ftz, pow2, EXP_MAX, EXP_MIN};
+
+/// Legal exponent-width range for the float family.
+pub const FLOAT_EXP_RANGE: (u32, u32) = (2, 8);
+/// Legal mantissa-width range for the float family. Capped at 10 (fp16's
+/// mantissa): wider low-bit floats are not a hardware point of interest
+/// below fp32, and the cap keeps every float format well clear of the
+/// ≥ 25-bit identity-passthrough regime.
+pub const FLOAT_MAN_RANGE: (u32, u32) = (1, 10);
+
+/// Derived grid parameters of an `e<E>m<M>` format.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FloatGrid {
+    /// Minimum normal exponent `1 - bias`.
+    pub e_min: i32,
+    /// Maximum normal exponent `bias` (the top field is reserved for NaN).
+    pub e_max: i32,
+    /// Mantissa bits.
+    pub man: i32,
+    /// Largest finite value `2^e_max · (2 - 2^-M)`; quantization
+    /// saturates here.
+    pub max: f32,
+}
+
+/// Grid parameters for `E` exponent / `M` mantissa bits.
+pub fn float_grid(exp_bits: u32, man_bits: u32) -> FloatGrid {
+    debug_assert!(
+        (FLOAT_EXP_RANGE.0..=FLOAT_EXP_RANGE.1).contains(&exp_bits),
+        "exp width {exp_bits} out of {FLOAT_EXP_RANGE:?}"
+    );
+    debug_assert!(
+        (FLOAT_MAN_RANGE.0..=FLOAT_MAN_RANGE.1).contains(&man_bits),
+        "man width {man_bits} out of {FLOAT_MAN_RANGE:?}"
+    );
+    let bias = (1i32 << (exp_bits - 1)) - 1;
+    let man = man_bits as i32;
+    FloatGrid {
+        e_min: 1 - bias,
+        e_max: bias,
+        man,
+        max: pow2(bias) * (2.0 - pow2(-man)),
+    }
+}
+
+/// Quantize one value to the grid with round-half-to-even. Mirrors
+/// `ref.float_quantize_ref` op for op (exponent clip, clamped
+/// power-of-two step, round, saturate).
+#[inline]
+fn quantize_elem(v: f32, g: &FloatGrid) -> f32 {
+    let x = ftz(v);
+    if x.is_nan() {
+        return f32::NAN;
+    }
+    let e = floor_log2(x).clamp(g.e_min, g.e_max);
+    let step = pow2((e - g.man).clamp(EXP_MIN, EXP_MAX));
+    let mag = (x / step).round_ties_even();
+    (mag * step).clamp(-g.max, g.max)
+}
+
+/// Quantize `x` in place to the `e<exp_bits>m<man_bits>` grid.
+pub fn float_quantize_into(x: &mut [f32], exp_bits: u32, man_bits: u32) {
+    let g = float_grid(exp_bits, man_bits);
+    for v in x.iter_mut() {
+        *v = quantize_elem(*v, &g);
+    }
+}
+
+/// Out-of-place variant.
+pub fn float_quantize(x: &[f32], exp_bits: u32, man_bits: u32) -> Vec<f32> {
+    let mut out = x.to_vec();
+    float_quantize_into(&mut out, exp_bits, man_bits);
+    out
+}
+
+/// Stochastic-rounding variant (the `e<E>m<M>sr` spelling): same grid,
+/// but each value rounds up with probability equal to its fractional
+/// distance — unbiased for unsaturated values. Exactly one uniform draw
+/// is consumed per element (NaNs included), so a given `rng` state
+/// quantizes a given buffer bit-identically; callers derive the stream
+/// from the step index ([`crate::quant::FormatSpec::quantize_into_step`]).
+pub fn float_quantize_sr_into(x: &mut [f32], exp_bits: u32, man_bits: u32, rng: &mut Pcg32) {
+    let g = float_grid(exp_bits, man_bits);
+    for v in x.iter_mut() {
+        let u = rng.f32();
+        let xi = ftz(*v);
+        if xi.is_nan() {
+            *v = f32::NAN;
+            continue;
+        }
+        let e = floor_log2(xi).clamp(g.e_min, g.e_max);
+        let step = pow2((e - g.man).clamp(EXP_MIN, EXP_MAX));
+        let t = xi / step;
+        let lo = t.floor();
+        // `t - lo` in [0,1); both candidate points lie on the grid (the
+        // upper one may be the next binade's first point, which the
+        // wider step there also represents exactly).
+        let mag = if t - lo > u { lo + 1.0 } else { lo };
+        *v = (mag * step).clamp(-g.max, g.max);
+    }
+}
+
+/// Out-of-place stochastic-rounding variant.
+pub fn float_quantize_sr(x: &[f32], exp_bits: u32, man_bits: u32, rng: &mut Pcg32) -> Vec<f32> {
+    let mut out = x.to_vec();
+    float_quantize_sr_into(&mut out, exp_bits, man_bits, rng);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{gen_f32s, Prop};
+    use crate::util::rng::Pcg32;
+
+    fn q_e4m3(x: f32) -> f32 {
+        float_quantize(&[x], 4, 3)[0]
+    }
+
+    #[test]
+    fn e4m3_known_values() {
+        // bias 7: e_max 7, max = 128 * 1.875 = 240; e_min -6, min
+        // subnormal 2^-9.
+        let g = float_grid(4, 3);
+        assert_eq!(g.max, 240.0);
+        assert_eq!(g.e_min, -6);
+        assert_eq!(q_e4m3(1.0), 1.0);
+        assert_eq!(q_e4m3(240.0), 240.0);
+        assert_eq!(q_e4m3(300.0), 240.0, "saturating overflow");
+        assert_eq!(q_e4m3(-1e30), -240.0);
+        assert_eq!(q_e4m3(f32::INFINITY), 240.0, "inf saturates");
+        assert_eq!(q_e4m3(f32::NEG_INFINITY), -240.0);
+        assert!(q_e4m3(f32::NAN).is_nan(), "NaN propagates");
+        // Binade [1, 2): step 1/8; 1.3 is 10.4 eighths, rounds to 10.
+        assert_eq!(q_e4m3(1.3), 1.25);
+        // Ties to even: 1.0625 is exactly between 1.0 and 1.125 -> 1.0.
+        assert_eq!(q_e4m3(1.0625), 1.0);
+        assert_eq!(q_e4m3(1.1875), 1.25, "1.1875 ties up to even 1.25");
+        // Subnormal grid: step 2^-9; 2^-9 is the smallest nonzero value.
+        assert_eq!(q_e4m3(pow2(-9)), pow2(-9));
+        assert_eq!(q_e4m3(pow2(-10)), 0.0, "half the min subnormal ties to even 0");
+        assert_eq!(q_e4m3(1.6 * pow2(-10)), pow2(-9));
+        // f32 subnormal inputs are FTZ'd.
+        assert_eq!(q_e4m3(f32::MIN_POSITIVE / 2.0), 0.0);
+    }
+
+    #[test]
+    fn e5m2_known_values() {
+        // bias 15: max = 2^15 * 1.75 = 57344; e_min -14.
+        let g = float_grid(5, 2);
+        assert_eq!(g.max, 57344.0);
+        assert_eq!(g.e_min, -14);
+        let q = |x| float_quantize(&[x], 5, 2)[0];
+        assert_eq!(q(57344.0), 57344.0);
+        assert_eq!(q(1e9), 57344.0);
+        assert_eq!(q(3.0), 3.0); // 1.5 * 2 is representable at m=2
+        assert_eq!(q(pow2(-16)), pow2(-16)); // subnormal: step 2^-16
+    }
+
+    #[test]
+    fn e5m10_matches_ieee_fp16_grid() {
+        // e5m10 is IEEE binary16 (with saturation instead of inf): max
+        // 65504, subnormal step 2^-24, round-half-even.
+        let q = |x| float_quantize(&[x], 5, 10)[0];
+        assert_eq!(q(65504.0), 65504.0);
+        assert_eq!(q(65503.0), 65504.0);
+        assert_eq!(q(1e9), 65504.0, "saturates instead of inf");
+        assert_eq!(q(1.0 + pow2(-11)), 1.0, "halfway ties to even");
+        assert_eq!(q(1.0 + 3.0 * pow2(-11)), 1.0 + pow2(-9), "1025.5 ties up to even 1026");
+        assert_eq!(q(pow2(-24)), pow2(-24), "smallest fp16 subnormal");
+        assert_eq!(q(pow2(-25)), 0.0, "below: ties to even zero");
+        // 2^-14 is the smallest normal; just below it the subnormal grid
+        // still resolves 10 bits.
+        assert_eq!(q(pow2(-14) - pow2(-24)), pow2(-14) - pow2(-24));
+    }
+
+    #[test]
+    fn e8m7_bottoms_out_on_the_ftz_step() {
+        // bf16's ideal bottom step 2^(-126-7) is f32-subnormal; the grid
+        // clamps it to 2^-126 (the documented FTZ deviation), so tiny
+        // normals survive but with reduced resolution.
+        let q = |x: f32| float_quantize(&[x], 8, 7)[0];
+        assert_eq!(q(1.5), 1.5);
+        assert_eq!(q(pow2(-126)), pow2(-126));
+        // 1.25 * 2^-125 = 2.5 * 2^-126: not an integer multiple of the
+        // clamped 2^-126 step, so it rounds (ties to even 2).
+        assert_eq!(q(1.25 * pow2(-125)), pow2(-125));
+        let v = 3.0 * pow2(-126);
+        assert_eq!(q(v), v, "integer multiples of 2^-126 are on the clamped grid");
+    }
+
+    #[test]
+    fn idempotent_property() {
+        Prop::new("float quantization is idempotent").cases(60).run(
+            |rng, size| {
+                let fmts = [(4u32, 3u32), (5, 2), (5, 10), (8, 7), (3, 4)];
+                (
+                    gen_f32s(rng, 8 * (1 + size as usize / 12), 14.0),
+                    fmts[rng.below(fmts.len() as u32) as usize],
+                )
+            },
+            |(x, (e, m))| {
+                let q1 = float_quantize(x, *e, *m);
+                let q2 = float_quantize(&q1, *e, *m);
+                if q1 == q2 {
+                    Ok(())
+                } else {
+                    Err("q(q(x)) != q(x)".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn error_monotone_in_mantissa_bits_property() {
+        // At fixed exponent width, more mantissa bits never increase the
+        // error: each grid is a refinement of the previous (plus a higher
+        // saturation point).
+        Prop::new("float error monotone non-increasing in man bits").cases(40).run(
+            |rng, size| (gen_f32s(rng, 8 * (1 + size as usize / 20), 6.0), 2 + rng.below(7)),
+            |(x, e)| {
+                let err = |m: u32| {
+                    float_quantize(x, *e, m)
+                        .iter()
+                        .zip(x.iter())
+                        .map(|(q, x)| ((q - x) as f64).abs())
+                        .sum::<f64>()
+                };
+                let errs: Vec<f64> = (1..=10).map(err).collect();
+                for w in errs.windows(2) {
+                    if w[1] > w[0] * 1.0000001 + 1e-12 {
+                        return Err(format!("error increased with man bits: {errs:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sr_lands_on_adjacent_grid_points() {
+        let mut rng = Pcg32::new(7);
+        for (e, m) in [(4u32, 3u32), (5, 2)] {
+            let x = gen_f32s(&mut rng, 512, 5.0);
+            let q = float_quantize_sr(&x, e, m, &mut Pcg32::new(3));
+            let g = float_grid(e, m);
+            for (&xi, &qi) in x.iter().zip(&q) {
+                if xi.abs() >= g.max {
+                    assert_eq!(qi.abs(), g.max, "saturated value must clamp");
+                    continue;
+                }
+                // |q - x| < one step of x's binade.
+                let eexp = floor_log2(xi).clamp(g.e_min, g.e_max);
+                let step = pow2((eexp - g.man).clamp(EXP_MIN, EXP_MAX));
+                assert!(
+                    (qi - xi).abs() < step * (1.0 + 1e-6),
+                    "e{e}m{m}: |{qi} - {xi}| >= step {step}"
+                );
+                // And the output is a fixed point of nearest quantization
+                // (i.e. on the grid).
+                assert_eq!(float_quantize(&[qi], e, m)[0], qi, "off-grid SR output");
+            }
+        }
+    }
+
+    #[test]
+    fn sr_unbiased_at_fp8_property() {
+        // E[q_sr(x)] = x for unsaturated values, at both fp8 formats.
+        Prop::new("float stochastic rounding is unbiased at e4m3/e5m2").cases(10).run(
+            |rng, _| {
+                let fmts = [(4u32, 3u32), (5, 2)];
+                (gen_f32s(rng, 48, 3.0), fmts[rng.below(2) as usize])
+            },
+            |(x, (e, m))| {
+                let g = float_grid(*e, *m);
+                let trials = 600u64;
+                let mut mean = vec![0f64; x.len()];
+                for t in 0..trials {
+                    let q = float_quantize_sr(x, *e, *m, &mut Pcg32::new(0xF10A7 + t));
+                    for (acc, &qi) in mean.iter_mut().zip(&q) {
+                        *acc += qi as f64 / trials as f64;
+                    }
+                }
+                for (&xi, &mi) in x.iter().zip(&mean) {
+                    if xi.abs() >= g.max || xi == 0.0 {
+                        continue; // saturation is biased by design
+                    }
+                    let eexp = floor_log2(xi).clamp(g.e_min, g.e_max);
+                    let step = pow2((eexp - g.man).clamp(EXP_MIN, EXP_MAX)) as f64;
+                    // 4-sigma Bernoulli bound on a `step` grid.
+                    let tol = 4.0 * step / (trials as f64).sqrt() + 1e-12;
+                    if (mi - xi as f64).abs() > tol {
+                        return Err(format!("e{e}m{m} biased: x={xi} mean={mi} tol={tol}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn sr_deterministic_in_rng_state_and_draws_per_element() {
+        let x = vec![1.3f32, f32::NAN, 0.7, -2.2];
+        let a = float_quantize_sr(&x, 4, 3, &mut Pcg32::new(5));
+        let b = float_quantize_sr(&x, 4, 3, &mut Pcg32::new(5));
+        assert_eq!(a.len(), b.len());
+        for (va, vb) in a.iter().zip(&b) {
+            assert!(crate::quant::same_f32(*va, *vb));
+        }
+        // NaN elements still consume a draw: the tail elements after the
+        // NaN must match the nearest-path RNG alignment.
+        let mut rng1 = Pcg32::new(9);
+        let _ = float_quantize_sr(&x, 4, 3, &mut rng1);
+        let mut rng2 = Pcg32::new(9);
+        for _ in 0..4 {
+            rng2.f32();
+        }
+        assert_eq!(rng1.f32(), rng2.f32(), "one uniform per element, NaNs included");
+    }
+
+    #[test]
+    fn nan_inf_semantics_pinned() {
+        // No tensor-wide amax: an all-NaN tensor stays all-NaN (contrast
+        // with fixed/BFP's zero-grid early-out, which preserves NaN but
+        // flushes everything else), and ±inf saturate per element.
+        let x = vec![f32::NAN; 8];
+        assert!(float_quantize(&x, 5, 2).iter().all(|v| v.is_nan()));
+        let y = vec![f32::INFINITY, f32::NEG_INFINITY, f32::NAN, 0.0, -0.0, 1.0];
+        let q = float_quantize(&y, 4, 3);
+        assert_eq!(q[0], 240.0);
+        assert_eq!(q[1], -240.0);
+        assert!(q[2].is_nan());
+        assert_eq!(q[3], 0.0);
+        assert_eq!(q[4], 0.0);
+        assert!(q[4].is_sign_negative(), "-0.0 is preserved (invisible to ==)");
+        assert_eq!(q[5], 1.0);
+    }
+
+    #[test]
+    fn sign_preserved() {
+        let mut rng = Pcg32::new(3);
+        let x = gen_f32s(&mut rng, 256, 10.0);
+        let q = float_quantize(&x, 5, 2);
+        for (&xi, &qi) in x.iter().zip(&q) {
+            assert!(qi == 0.0 || qi.signum() == xi.signum(), "sign flip: {xi} -> {qi}");
+        }
+    }
+}

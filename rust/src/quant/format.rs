@@ -14,17 +14,27 @@
 //!   ([`FormatSpec::slot_qcfg`]);
 //! * **how it is spelled** — [`FormatSpec::spec_string`] /
 //!   [`FormatSpec::parse`] round-trip the canonical spec strings
-//!   (`"bfp4"`, `"fixed16"`, `"fixed8sr"`, `"fp32"`).
+//!   (`"bfp4"`, `"fixed16"`, `"fixed8sr"`, `"fp32"`, `"e4m3"`).
 //!
 //! Formats are registered in [`FORMAT_REGISTRY`]: a [`FormatFamily`] per
 //! spelling (keyword + optional rounding suffix) with its legal width
 //! range and constructor. The parser, the CLI `--schedule` grammar, and
 //! the benches all enumerate the registry, so adding a format is one
 //! registry entry + one quantizer arm — no per-layer string matching.
+//!
+//! The float family ([`FormatSpec::Float`], kernel in
+//! [`crate::quant::float`]) registers its two FP8 members (`fp8e4m3`,
+//! `fp8e5m2`) as rows and additionally accepts the generic
+//! `e<E>m<M>[sr]` spelling, so bf16 (`e8m7`), fp16 (`e5m10`) and
+//! stochastic-rounding variants fall out of the same grammar with no
+//! extra rows.
 
 use crate::util::rng::Pcg32;
 use crate::{Error, Result};
 
+use super::float::{
+    float_quantize_into, float_quantize_sr_into, FLOAT_EXP_RANGE, FLOAT_MAN_RANGE,
+};
 use super::{bfp_quantize_into, fixed_quantize_into, fixed_quantize_sr_into};
 
 /// Rounding rule a format applies when it snaps a value to its grid.
@@ -50,6 +60,11 @@ pub enum FormatSpec {
     /// Block floating point with `bits` mantissa width (box 16, 8-bit
     /// shared exponent — MSFP).
     Bfp { bits: u32 },
+    /// Low-bit float with a per-element exponent (`e<E>m<M>`): FP8
+    /// E4M3/E5M2, bf16 (`e8m7`), fp16 (`e5m10`), … Total width is
+    /// `1 + exp_bits + man_bits`. IEEE-style grid with subnormal support
+    /// and saturating overflow — see [`crate::quant::float`].
+    Float { exp_bits: u32, man_bits: u32, rounding: Rounding },
 }
 
 /// Salt for the stochastic-rounding stream; mixed with the step index so
@@ -74,20 +89,60 @@ impl FormatSpec {
         FormatSpec::Bfp { bits }
     }
 
-    /// Total/mantissa width in bits (32 for fp32).
+    pub fn float(exp_bits: u32, man_bits: u32) -> FormatSpec {
+        Self::float_checked(exp_bits, man_bits, Rounding::Nearest).unwrap()
+    }
+
+    pub fn float_sr(exp_bits: u32, man_bits: u32) -> FormatSpec {
+        Self::float_checked(exp_bits, man_bits, Rounding::Stochastic).unwrap()
+    }
+
+    /// FP8 E4M3 (range-light forward/stash tensors).
+    pub fn fp8e4m3() -> FormatSpec {
+        Self::float(4, 3)
+    }
+
+    /// FP8 E5M2 (the wide-range gradient format).
+    pub fn fp8e5m2() -> FormatSpec {
+        Self::float(5, 2)
+    }
+
+    /// Range-checked float constructor (the parser's entry point).
+    pub fn float_checked(exp_bits: u32, man_bits: u32, rounding: Rounding) -> Result<FormatSpec> {
+        if !(FLOAT_EXP_RANGE.0..=FLOAT_EXP_RANGE.1).contains(&exp_bits) {
+            return Err(Error::Config(format!(
+                "float exponent width {exp_bits} out of [{},{}]",
+                FLOAT_EXP_RANGE.0, FLOAT_EXP_RANGE.1
+            )));
+        }
+        if !(FLOAT_MAN_RANGE.0..=FLOAT_MAN_RANGE.1).contains(&man_bits) {
+            return Err(Error::Config(format!(
+                "float mantissa width {man_bits} out of [{},{}]",
+                FLOAT_MAN_RANGE.0, FLOAT_MAN_RANGE.1
+            )));
+        }
+        Ok(FormatSpec::Float { exp_bits, man_bits, rounding })
+    }
+
+    /// Total/mantissa width in bits (32 for fp32; `1 + E + M` for the
+    /// float family).
     pub fn bits(&self) -> u32 {
         match *self {
             FormatSpec::Fp32 => 32,
             FormatSpec::Fixed { bits, .. } | FormatSpec::Bfp { bits } => bits,
+            FormatSpec::Float { exp_bits, man_bits, .. } => 1 + exp_bits + man_bits,
         }
     }
 
-    /// Same family, different width (fp32 has no width knob and is
-    /// returned unchanged). Used to instantiate ladders and the
-    /// `[16,4,4,16]` stashing pattern for any family.
+    /// Same family, different width (fp32 and the float formats have no
+    /// single width knob — a float format *is* its `(E, M)` pair — and
+    /// are returned unchanged). Used to instantiate ladders and the
+    /// `[16,4,4,16]` stashing pattern for the width-parameterized
+    /// families.
     pub fn with_bits(&self, bits: u32) -> FormatSpec {
         match *self {
             FormatSpec::Fp32 => FormatSpec::Fp32,
+            FormatSpec::Float { .. } => *self,
             FormatSpec::Fixed { rounding, .. } => {
                 assert!((2..=32).contains(&bits), "fixed width {bits} out of [2,32]");
                 FormatSpec::Fixed { bits, rounding }
@@ -101,52 +156,85 @@ impl FormatSpec {
 
     /// The artifact runtime's mode selector for this format
     /// (`python/compile/layers.py::quantize`): 0 = fp32 identity,
-    /// 1 = fixed nearest, 2 = BFP, 3 = fixed stochastic (the artifact
-    /// applies the fixed grid; the stochastic stream runs host-side in
-    /// the mirrors — see the `quant` module docs).
+    /// 1 = fixed nearest, 2 = BFP, 3 = fixed stochastic, 4 = float
+    /// nearest, 5 = float stochastic. The stochastic modes (3, 5) apply
+    /// their family's grid with nearest rounding inside the artifact —
+    /// the stochastic stream runs host-side in the mirrors (see the
+    /// `quant` module docs).
     pub fn mode_scalar(&self) -> f32 {
         match *self {
             FormatSpec::Fp32 => 0.0,
             FormatSpec::Fixed { rounding: Rounding::Nearest, .. } => 1.0,
             FormatSpec::Bfp { .. } => 2.0,
             FormatSpec::Fixed { rounding: Rounding::Stochastic, .. } => 3.0,
+            FormatSpec::Float { rounding: Rounding::Nearest, .. } => 4.0,
+            FormatSpec::Float { rounding: Rounding::Stochastic, .. } => 5.0,
+        }
+    }
+
+    /// The width field of one qcfg slot: the plain bit width for the
+    /// integer families, and `100·E + M` for float formats (two grid
+    /// parameters in one runtime scalar — decoded by
+    /// `python/compile/kernels/ref.py::float_quantize_ref`).
+    pub fn qcfg_bits(&self) -> f32 {
+        match *self {
+            FormatSpec::Float { exp_bits, man_bits, .. } => (100 * exp_bits + man_bits) as f32,
+            _ => self.bits() as f32,
         }
     }
 
     /// One qcfg slot: `[mode, bits]` (the runtime precision vector is
     /// four of these concatenated — [`crate::schedule::PrecisionConfig::as_qcfg`]).
     pub fn slot_qcfg(&self) -> [f32; 2] {
-        [self.mode_scalar(), self.bits() as f32]
+        [self.mode_scalar(), self.qcfg_bits()]
     }
 
-    /// Registry family this spec belongs to ("fp", "fixed", "fixedsr",
-    /// "bfp") — the spelling without the width digits.
-    pub fn family_name(&self) -> &'static str {
+    /// Registry family this spec belongs to — the spelling without the
+    /// width digits ("fp", "fixed", "fixedsr", "bfp"). Float formats
+    /// have no width knob, so each `(E, M, rounding)` is its own family
+    /// ("e4m3", "e5m2sr", …).
+    pub fn family_name(&self) -> String {
         match *self {
-            FormatSpec::Fp32 => "fp",
-            FormatSpec::Fixed { rounding: Rounding::Nearest, .. } => "fixed",
-            FormatSpec::Fixed { rounding: Rounding::Stochastic, .. } => "fixedsr",
-            FormatSpec::Bfp { .. } => "bfp",
+            FormatSpec::Fp32 => "fp".to_string(),
+            FormatSpec::Fixed { rounding: Rounding::Nearest, .. } => "fixed".to_string(),
+            FormatSpec::Fixed { rounding: Rounding::Stochastic, .. } => "fixedsr".to_string(),
+            FormatSpec::Bfp { .. } => "bfp".to_string(),
+            FormatSpec::Float { .. } => self.spec_string(),
         }
     }
 
     /// Canonical spec string: `"fp32"`, `"fixed16"`, `"fixed8sr"`,
-    /// `"bfp4"`. Round-trips through [`FormatSpec::parse`].
+    /// `"bfp4"`, `"e4m3"`, `"e5m2sr"`. Round-trips through
+    /// [`FormatSpec::parse`] (the registry spellings `fp8e4m3` /
+    /// `fp8e5m2` parse to the same specs the generic `e<E>m<M>` form
+    /// canonicalizes to).
     pub fn spec_string(&self) -> String {
         match *self {
             FormatSpec::Fp32 => "fp32".to_string(),
             FormatSpec::Fixed { bits, rounding: Rounding::Nearest } => format!("fixed{bits}"),
             FormatSpec::Fixed { bits, rounding: Rounding::Stochastic } => format!("fixed{bits}sr"),
             FormatSpec::Bfp { bits } => format!("bfp{bits}"),
+            FormatSpec::Float { exp_bits, man_bits, rounding } => {
+                let sr = if rounding == Rounding::Stochastic { "sr" } else { "" };
+                format!("e{exp_bits}m{man_bits}{sr}")
+            }
         }
     }
 
-    /// Parse a spec string via the registry. Grammar:
-    /// `<keyword><width><suffix?>` — e.g. `"bfp4"`, `"fixed16"`,
-    /// `"fixed8sr"`, `"fp32"`. Case-insensitive; malformed or
-    /// out-of-range specs are [`Error::Config`].
+    /// Parse a spec string. Grammar:
+    ///
+    /// * registry spellings `<keyword><width><suffix?>` — `"bfp4"`,
+    ///   `"fixed16"`, `"fixed8sr"`, `"fp32"`, `"fp8e4m3"`;
+    /// * the generic float spelling `e<E>m<M>[sr]` — `"e4m3"`,
+    ///   `"e5m10"` (fp16), `"e8m7"` (bf16), `"e4m3sr"`.
+    ///
+    /// Case-insensitive; malformed or out-of-range specs are
+    /// [`Error::Config`].
     pub fn parse(s: &str) -> Result<FormatSpec> {
         let t = s.trim().to_ascii_lowercase();
+        if let Some(parsed) = parse_float_spec(&t) {
+            return parsed;
+        }
         let keyword_end = t.find(|c: char| c.is_ascii_digit()).unwrap_or(t.len());
         let (keyword, rest) = t.split_at(keyword_end);
         let digits_end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
@@ -188,6 +276,14 @@ impl FormatSpec {
     /// layer id, …) so each gets a decorrelated rounding stream while
     /// staying deterministic in `(step, stream)`.
     pub fn quantize_into_stream(&self, x: &mut [f32], inner: usize, step: u64, stream: u64) {
+        let sr_rng = |width_salt: u64| {
+            Pcg32::new(
+                SR_STREAM_SALT
+                    ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ stream.wrapping_mul(0xD1B5_4A32_D192_ED03)
+                    ^ width_salt,
+            )
+        };
         match *self {
             FormatSpec::Fp32 => {}
             FormatSpec::Bfp { bits } => bfp_quantize_into(x, inner, bits as f32),
@@ -195,13 +291,14 @@ impl FormatSpec {
                 fixed_quantize_into(x, bits as f32)
             }
             FormatSpec::Fixed { bits, rounding: Rounding::Stochastic } => {
-                let mut rng = Pcg32::new(
-                    SR_STREAM_SALT
-                        ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
-                        ^ stream.wrapping_mul(0xD1B5_4A32_D192_ED03)
-                        ^ bits as u64,
-                );
-                fixed_quantize_sr_into(x, bits as f32, &mut rng)
+                fixed_quantize_sr_into(x, bits as f32, &mut sr_rng(bits as u64))
+            }
+            FormatSpec::Float { exp_bits, man_bits, rounding: Rounding::Nearest } => {
+                float_quantize_into(x, exp_bits, man_bits)
+            }
+            FormatSpec::Float { exp_bits, man_bits, rounding: Rounding::Stochastic } => {
+                let salt = (100 * exp_bits + man_bits) as u64;
+                float_quantize_sr_into(x, exp_bits, man_bits, &mut sr_rng(salt))
             }
         }
     }
@@ -282,6 +379,51 @@ fn make_bfp(bits: u32) -> FormatSpec {
     FormatSpec::Bfp { bits }
 }
 
+fn make_fp8e4m3(_bits: u32) -> FormatSpec {
+    FormatSpec::Float { exp_bits: 4, man_bits: 3, rounding: Rounding::Nearest }
+}
+
+fn make_fp8e5m2(_bits: u32) -> FormatSpec {
+    FormatSpec::Float { exp_bits: 5, man_bits: 2, rounding: Rounding::Nearest }
+}
+
+/// Parse the generic float spelling `e<E>m<M>[sr]`. Returns `None` when
+/// `t` does not have that shape at all (so the registry grammar gets its
+/// turn), and `Some(Err(..))` when it does but the widths are out of
+/// range or the suffix is unknown.
+fn parse_float_spec(t: &str) -> Option<Result<FormatSpec>> {
+    let rest = t.strip_prefix('e')?;
+    let mpos = rest.find('m')?;
+    let (e_digits, m_and_rest) = rest.split_at(mpos);
+    let m_rest = &m_and_rest[1..];
+    let m_end = m_rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(m_rest.len());
+    let (m_digits, suffix) = m_rest.split_at(m_end);
+    if e_digits.is_empty()
+        || m_digits.is_empty()
+        || !e_digits.chars().all(|c| c.is_ascii_digit())
+    {
+        return None;
+    }
+    let rounding = match suffix {
+        "" => Rounding::Nearest,
+        "sr" => Rounding::Stochastic,
+        _ => {
+            return Some(Err(Error::Config(format!(
+                "bad float format suffix '{suffix}' in '{t}' (grammar: e<E>m<M>[sr])"
+            ))))
+        }
+    };
+    let exp_bits: u32 = match e_digits.parse() {
+        Ok(v) => v,
+        Err(_) => return Some(Err(Error::Config(format!("bad exponent width in '{t}'")))),
+    };
+    let man_bits: u32 = match m_digits.parse() {
+        Ok(v) => v,
+        Err(_) => return Some(Err(Error::Config(format!("bad mantissa width in '{t}'")))),
+    };
+    Some(FormatSpec::float_checked(exp_bits, man_bits, rounding))
+}
+
 /// Every format the system knows. The parser, the `--schedule` grammar,
 /// the hot-path bench sweep, and the docs all read this table.
 pub const FORMAT_REGISTRY: &[FormatFamily] = &[
@@ -317,6 +459,22 @@ pub const FORMAT_REGISTRY: &[FormatFamily] = &[
         make: make_bfp,
         help: "block floating point (MSFP: box 16, 8-bit shared exponent)",
     },
+    FormatFamily {
+        keyword: "fp",
+        suffix: "e4m3",
+        min_bits: 8,
+        max_bits: 8,
+        make: make_fp8e4m3,
+        help: "FP8 E4M3 (per-element exponent; forward/stash slots a la FP8-LM)",
+    },
+    FormatFamily {
+        keyword: "fp",
+        suffix: "e5m2",
+        min_bits: 8,
+        max_bits: 8,
+        make: make_fp8e5m2,
+        help: "FP8 E5M2 (wide-range FP8; the float-form gradient format)",
+    },
 ];
 
 /// Look up a family by `(keyword, suffix)` pair.
@@ -331,10 +489,16 @@ pub fn family(name: &str) -> Option<&'static FormatFamily> {
     FORMAT_REGISTRY.iter().find(|f| f.name() == n)
 }
 
-/// `"fp32 | fixed<2-32> | fixed<2-32>sr | bfp<2-32>"` — for error
-/// messages and `--help`.
+/// `"fp32 | fixed<2-32> | … | fp8e4m3 | fp8e5m2 | e<2-8>m<1-10>[sr]"` —
+/// for error messages and `--help`. The trailing entry is the generic
+/// float grammar ([`parse_float_spec`]), which is not a registry row.
 pub fn registered_summary() -> String {
-    FORMAT_REGISTRY.iter().map(FormatFamily::spelling).collect::<Vec<_>>().join(" | ")
+    let mut parts: Vec<String> = FORMAT_REGISTRY.iter().map(FormatFamily::spelling).collect();
+    parts.push(format!(
+        "e<{}-{}>m<{}-{}>[sr]",
+        FLOAT_EXP_RANGE.0, FLOAT_EXP_RANGE.1, FLOAT_MAN_RANGE.0, FLOAT_MAN_RANGE.1
+    ));
+    parts.join(" | ")
 }
 
 /// One representative spec per registered family at each width in
@@ -369,10 +533,31 @@ mod tests {
     }
 
     #[test]
+    fn parse_float_specs() {
+        // Registry rows and the generic grammar meet in the same specs.
+        assert_eq!(FormatSpec::parse("fp8e4m3").unwrap(), FormatSpec::fp8e4m3());
+        assert_eq!(FormatSpec::parse("fp8e5m2").unwrap(), FormatSpec::fp8e5m2());
+        assert_eq!(FormatSpec::parse("e4m3").unwrap(), FormatSpec::fp8e4m3());
+        assert_eq!(FormatSpec::parse("e5m2").unwrap(), FormatSpec::fp8e5m2());
+        // bf16 / fp16 fall out of the generic spelling for free.
+        assert_eq!(FormatSpec::parse("e8m7").unwrap(), FormatSpec::float(8, 7));
+        assert_eq!(FormatSpec::parse("e5m10").unwrap(), FormatSpec::float(5, 10));
+        assert_eq!(FormatSpec::parse("E4M3SR").unwrap(), FormatSpec::float_sr(4, 3));
+        assert_eq!(FormatSpec::parse("e4m3").unwrap().bits(), 8);
+        assert_eq!(FormatSpec::parse("e5m10").unwrap().bits(), 16);
+        // Canonical spelling is the generic one.
+        assert_eq!(FormatSpec::fp8e4m3().spec_string(), "e4m3");
+        assert_eq!(FormatSpec::float_sr(5, 2).spec_string(), "e5m2sr");
+    }
+
+    #[test]
     fn parse_rejects_malformed() {
         for bad in [
             "", "bfp", "fixed", "fixedsr", "bfp0", "bfp1", "bfp33", "fixed64", "fp16", "fp",
             "int8", "bfp4x", "bfp4.5", "srfixed8", "fixed8rs", "8bfp",
+            // Float grammar: widths out of range, bad suffixes, half-specs.
+            "e1m3", "e9m3", "e4m0", "e4m11", "e4m3rs", "e4m3x", "e4m", "em3", "e4",
+            "fp8e4m4", "fp9e4m3",
         ] {
             let err = FormatSpec::parse(bad);
             assert!(
@@ -419,6 +604,14 @@ mod tests {
         assert_eq!(FormatSpec::Fp32.quantize(&x, 64), x);
         assert_eq!(FormatSpec::bfp(4).quantize(&x, 64), bfp_quantize(&x, 64, 4.0));
         assert_eq!(FormatSpec::fixed(8).quantize(&x, 64), fixed_quantize(&x, 8.0));
+        assert_eq!(
+            FormatSpec::fp8e4m3().quantize(&x, 64),
+            crate::quant::float_quantize(&x, 4, 3)
+        );
+        assert_eq!(
+            FormatSpec::float(5, 10).quantize(&x, 64),
+            crate::quant::float_quantize(&x, 5, 10)
+        );
     }
 
     #[test]
@@ -497,6 +690,11 @@ mod tests {
         assert_eq!(FormatSpec::fixed(16).slot_qcfg(), [1.0, 16.0]);
         assert_eq!(FormatSpec::bfp(4).slot_qcfg(), [2.0, 4.0]);
         assert_eq!(FormatSpec::fixed_sr(8).slot_qcfg(), [3.0, 8.0]);
+        // Float slots pack (E, M) into the width field as 100·E + M.
+        assert_eq!(FormatSpec::fp8e4m3().slot_qcfg(), [4.0, 403.0]);
+        assert_eq!(FormatSpec::fp8e5m2().slot_qcfg(), [4.0, 502.0]);
+        assert_eq!(FormatSpec::float(5, 10).slot_qcfg(), [4.0, 510.0]);
+        assert_eq!(FormatSpec::float_sr(4, 3).slot_qcfg(), [5.0, 403.0]);
     }
 
     #[test]
@@ -504,6 +702,26 @@ mod tests {
         assert_eq!(FormatSpec::bfp(16).with_bits(4), FormatSpec::bfp(4));
         assert_eq!(FormatSpec::fixed_sr(16).with_bits(8), FormatSpec::fixed_sr(8));
         assert_eq!(FormatSpec::Fp32.with_bits(4), FormatSpec::Fp32);
+        // Float formats have no width knob: the (E, M) pair is the format.
+        assert_eq!(FormatSpec::fp8e4m3().with_bits(16), FormatSpec::fp8e4m3());
+    }
+
+    #[test]
+    fn float_sr_streams_deterministic_and_decorrelated() {
+        let mut rng = Pcg32::new(4);
+        let x = gen_f32s(&mut rng, 256, 4.0);
+        let sr = FormatSpec::float_sr(4, 3);
+        let mut a = x.clone();
+        let mut b = x.clone();
+        sr.quantize_into_step(&mut a, 256, 7);
+        sr.quantize_into_step(&mut b, 256, 7);
+        assert_eq!(a, b, "same step must requantize bit-identically");
+        let mut c = x.clone();
+        sr.quantize_into_step(&mut c, 256, 8);
+        assert_ne!(a, c, "different steps must use different rounding streams");
+        let mut d = x.clone();
+        sr.quantize_into_stream(&mut d, 256, 7, 1);
+        assert_ne!(a, d, "different streams must decorrelate within a step");
     }
 
     #[test]

@@ -25,10 +25,29 @@
 //! * rounding is round-half-to-even (`f32::round_ties_even`, matching
 //!   XLA's `round_nearest_even`) — except the stochastic-rounding
 //!   formats, whose rounding stream exists only host-side: the artifact
-//!   applies the same grid with nearest rounding (mode 3 in
+//!   applies the same grid with nearest rounding (modes 3 and 5 in
 //!   `python/compile/layers.py`), an artifact-side SR kernel is a
 //!   ROADMAP open item;
-//! * mantissa widths ≥ 25 are identity (wider than f32's significand).
+//! * mantissa widths ≥ 25 are identity (wider than f32's significand)
+//!   for the shared-exponent families; the [`float`] family
+//!   (`e<E>m<M>`, FP8/bf16/fp16) caps its mantissa at 10 bits and is
+//!   never an identity (±inf saturate to the format max).
+//!
+//! ## Non-finite semantics (host-side kernels, pinned by tests)
+//!
+//! These mirrors define NaN/±inf behavior **elementwise**: NaN in
+//! propagates NaN out (never silently flushed — the all-NaN tensor whose
+//! FTZ'd `amax` is zero keeps its NaNs while everything else in the
+//! degenerate grid flushes to zero), and ±inf behave like huge finite
+//! values (they clamp to the grid's max magnitude — or the float
+//! family's saturation point). The packed codec agrees bit-for-bit
+//! (NaN rides the lane sentinel / reserved exponent field). The python
+//! reference kernels share these semantics only for the per-element
+//! float family; the `amax`-reduction families differ on non-finite
+//! *inputs* inside XLA (a NaN amax poisons `jnp.max` where the rust fold
+//! skips it) — the artifact contract covers finite tensors, which is
+//! what training traffic is (divergence aborts before NaNs reach a
+//! quantizer).
 //!
 //! These mirrors serve three purposes: (1) cross-validating the AOT
 //! artifacts from the rust side, (2) the cost model's error-analysis
@@ -37,11 +56,16 @@
 
 pub mod bfp;
 pub mod fixed;
+pub mod float;
 pub mod format;
 pub mod packed;
 
 pub use bfp::{bfp_dequantize_box_stats, bfp_quantize, bfp_quantize_into};
 pub use fixed::{fixed_quantize, fixed_quantize_into, fixed_quantize_sr, fixed_quantize_sr_into};
+pub use float::{
+    float_grid, float_quantize, float_quantize_into, float_quantize_sr, float_quantize_sr_into,
+    FloatGrid,
+};
 pub use format::{family, registered_specs, FormatFamily, FormatSpec, Rounding, FORMAT_REGISTRY};
 pub use packed::{same_f32, stash_stream, Codec, PackedTensor, PACKED_VERSION};
 

@@ -14,34 +14,47 @@
 //! so a packed stash is indistinguishable from a fake-quantized dense
 //! one, except it actually occupies `storage_bits()`-scale bytes. Two
 //! deliberate non-bit-exactnesses, both invisible to `==`: NaN payloads
-//! canonicalize to one sentinel NaN, and a quantized `-0.0` decodes as
-//! `+0.0` (the integer lane has a single zero).
+//! canonicalize to one sentinel NaN, and — in the integer-lane families,
+//! whose lane has a single zero — a quantized `-0.0` decodes as `+0.0`
+//! (the float family's sign-magnitude lane preserves it).
+//!
+//! Tensors may be **ragged**: `len % inner != 0` means the last row is
+//! short, and the box-based layouts pack that trailing partial row as a
+//! row of its own (exactly how `bfp_quantize_into` grids it).
 //!
 //! ## Payload layouts (pinned by the golden-bytes tests)
 //!
 //! * **fp32** — raw little-endian f32, 4 bytes/element.
 //! * **fixed / fixedsr, width < 25** — one grid byte (biased shared
-//!   exponent `e + 127`; `0` marks the all-zero tensor), then
-//!   two's-complement mantissa lanes of `bits` each, packed LSB-first in
-//!   row-major element order. The lane value `-2^(bits-1)` (unused by
-//!   the quantizer, which clamps to `±(2^(bits-1)-1)`) is the NaN
-//!   sentinel.
+//!   exponent `e + 127`; `0` marks the degenerate zero-`amax` grid),
+//!   then two's-complement mantissa lanes of `bits` each, packed
+//!   LSB-first in row-major element order. The lane value `-2^(bits-1)`
+//!   (unused by the quantizer, which clamps to `±(2^(bits-1)-1)`) is the
+//!   NaN sentinel — written and decoded in the grid-byte-0 layout too,
+//!   so an all-NaN tensor round-trips.
 //! * **bfp, width < 25** — per box of [`BOX`] elements (boxes never span
 //!   rows of `inner`, the last box of a row may be short): one biased
-//!   shared-exponent byte (`0` = zero box), then that box's mantissa
-//!   lanes, byte-aligned per box so a future mmap'd stash spill can seek
-//!   to any box.
+//!   shared-exponent byte (`0` = degenerate box), then that box's
+//!   mantissa lanes, byte-aligned per box so a future mmap'd stash spill
+//!   can seek to any box.
+//! * **float (`e<E>m<M>`)** — per element, a `(1 + E + M)`-bit IEEE-754
+//!   style lane (sign, biased exponent field, mantissa; field 0 is the
+//!   subnormal/flush grid, the all-ones field is NaN — saturation means
+//!   no inf encoding), packed LSB-first with a byte-aligned tail. No
+//!   grid byte: the exponents live in the lanes. At the FP8 widths this
+//!   is exactly the byte-per-element container.
 //! * **width ≥ 25** ([`PASSTHROUGH_BITS`]) — the quantizer is an exact
 //!   identity on f32, so the payload is the raw 32-bit container (a
-//!   sub-32-bit lane could not round-trip arbitrary f32).
+//!   sub-32-bit lane could not round-trip arbitrary f32). Never applies
+//!   to the float family (mantissas cap at 10 bits).
 //!
 //! The serialized record ([`PackedTensor::write_into`]) prefixes the
 //! payload with a versioned self-describing header:
 //!
 //! ```text
 //! u8   PACKED_VERSION (1)
-//! u8   family tag (0 fp32, 1 fixed, 2 fixedsr, 3 bfp)
-//! u8   bit width
+//! u8   family tag (0 fp32, 1 fixed, 2 fixedsr, 3 bfp, 4 float, 5 floatsr)
+//! u8   width byte: bit width; for float tags, (exp_bits << 4) | man_bits
 //! u8   flags (0; reserved)
 //! u32  inner (minor-axis length, LE)
 //! u32  ndims, then u64 dims... (LE)
@@ -57,8 +70,9 @@ use std::io::{Read, Write};
 
 use crate::{Error, Result};
 
+use super::float::{float_grid, FLOAT_EXP_RANGE, FLOAT_MAN_RANGE};
 use super::format::{FormatSpec, Rounding};
-use super::{ftz, quant_grid, BOX, EXP_MAX, EXP_MIN, PASSTHROUGH_BITS};
+use super::{floor_log2, ftz, pow2, quant_grid, BOX, EXP_MAX, EXP_MIN, PASSTHROUGH_BITS};
 
 /// Version byte of the packed record header.
 pub const PACKED_VERSION: u8 = 1;
@@ -104,9 +118,14 @@ pub trait Codec {
 }
 
 /// True when the format's quantizer is an exact identity on f32 and the
-/// payload must therefore be the raw 32-bit container.
+/// payload must therefore be the raw 32-bit container. Float formats are
+/// never an identity (±inf saturate), so they always use real lanes.
 fn is_passthrough(spec: &FormatSpec) -> bool {
-    matches!(*spec, FormatSpec::Fp32) || spec.bits() as f32 >= PASSTHROUGH_BITS
+    match *spec {
+        FormatSpec::Fp32 => true,
+        FormatSpec::Float { .. } => false,
+        _ => spec.bits() as f32 >= PASSTHROUGH_BITS,
+    }
 }
 
 /// Mantissa lane width in bits (only meaningful for non-passthrough).
@@ -212,6 +231,59 @@ fn value_of(raw: u32, step: f32, bits: u32) -> f32 {
     }
 }
 
+/// One quantized float-family value -> `(1 + E + M)`-bit lane: sign,
+/// biased exponent field, mantissa. Field 0 is the subnormal/flush grid
+/// (step `2^max(e_min - M, -126)` — the FTZ-clamped bottom step, which
+/// for narrow-exponent formats is exactly the IEEE subnormal grid);
+/// the all-ones field is NaN. `q` must be on the grid (a
+/// `float_quantize` output), so every division below is exact.
+fn float_lane(q: f32, exp_bits: u32, man_bits: u32) -> u32 {
+    let g = float_grid(exp_bits, man_bits);
+    let m = man_bits;
+    let nan_field = (1u32 << exp_bits) - 1;
+    if q.is_nan() {
+        // Canonical NaN lane: all-ones exponent, all-ones mantissa.
+        return (nan_field << m) | ((1 << m) - 1);
+    }
+    let sign = (q.is_sign_negative() as u32) << (exp_bits + m);
+    let a = q.abs();
+    if a == 0.0 {
+        return sign;
+    }
+    let bias = g.e_max; // bias == e_max for the IEEE-style layout
+    // Everything below the unclamped-grid floor lives on the flush grid
+    // (exponent field 0); e_floor == e_min whenever FTZ never clamps.
+    let e_floor = g.e_min.max(EXP_MIN + g.man);
+    let e = floor_log2(a);
+    if e < e_floor {
+        let flush_step = pow2((g.e_min - g.man).clamp(EXP_MIN, EXP_MAX));
+        return sign | (a / flush_step) as u32;
+    }
+    let field = (e + bias) as u32;
+    let step = pow2((e - g.man).clamp(EXP_MIN, EXP_MAX));
+    let frac = (a / step) as u32 - (1u32 << m);
+    sign | (field << m) | frac
+}
+
+/// Float-family lane -> f32.
+fn float_value(raw: u32, exp_bits: u32, man_bits: u32) -> f32 {
+    let g = float_grid(exp_bits, man_bits);
+    let m = man_bits;
+    let field = (raw >> m) & ((1 << exp_bits) - 1);
+    let man = raw & ((1 << m) - 1);
+    if field == (1 << exp_bits) - 1 {
+        return f32::NAN;
+    }
+    let sign = if (raw >> (exp_bits + m)) & 1 == 1 { -1.0f32 } else { 1.0 };
+    if field == 0 {
+        let flush_step = pow2((g.e_min - g.man).clamp(EXP_MIN, EXP_MAX));
+        return sign * man as f32 * flush_step;
+    }
+    let e = field as i32 - g.e_max; // subtract the bias
+    let step = pow2((e - g.man).clamp(EXP_MIN, EXP_MAX));
+    sign * ((1u32 << m) + man) as f32 * step
+}
+
 /// Biased shared-exponent byte: 0 marks a zero tensor/box, else
 /// `e + 127` for the clamped exponent `e` in `[EXP_MIN, EXP_MAX]`.
 fn exp_byte(amax: f32, bits: u32) -> u8 {
@@ -247,11 +319,7 @@ impl Codec for FormatSpec {
         stream: u64,
     ) -> PackedTensor {
         assert_eq!(shape.iter().product::<usize>(), x.len(), "shape/data mismatch");
-        assert!(
-            inner > 0 && x.len() % inner == 0,
-            "len {} not a multiple of inner {inner}",
-            x.len()
-        );
+        assert!(inner > 0, "inner must be >= 1");
         let payload = if is_passthrough(self) {
             raw_f32_bytes(x)
         } else {
@@ -276,6 +344,8 @@ impl Codec for FormatSpec {
                     w.align();
                 }
                 FormatSpec::Bfp { .. } => {
+                    // chunks() yields the ragged trailing row/box shorts
+                    // exactly as the quantizer grids them.
                     for (row, qrow) in x.chunks(inner).zip(q.chunks(inner)) {
                         for (boxed, qboxed) in row.chunks(BOX).zip(qrow.chunks(BOX)) {
                             let amax =
@@ -292,6 +362,13 @@ impl Codec for FormatSpec {
                         }
                     }
                 }
+                FormatSpec::Float { exp_bits, man_bits, .. } => {
+                    let mut w = BitWriter::new(&mut out);
+                    for &qi in &q {
+                        w.push(float_lane(qi, exp_bits, man_bits), bits);
+                    }
+                    w.align();
+                }
                 FormatSpec::Fp32 => unreachable!("fp32 is passthrough"),
             }
             out
@@ -301,7 +378,7 @@ impl Codec for FormatSpec {
     }
 
     fn packed_len(&self, len: usize, inner: usize) -> usize {
-        assert!(inner > 0 && len % inner == 0, "len {len} not a multiple of inner {inner}");
+        assert!(inner > 0, "inner must be >= 1");
         if is_passthrough(self) {
             return 4 * len;
         }
@@ -309,13 +386,19 @@ impl Codec for FormatSpec {
         match *self {
             FormatSpec::Fixed { .. } => 1 + (bits * len).div_ceil(8),
             FormatSpec::Bfp { .. } => {
-                let rows = len / inner;
-                let full = inner / BOX;
-                let rem = inner % BOX;
-                let per_row = full * (1 + (bits * BOX).div_ceil(8))
-                    + if rem > 0 { 1 + (bits * rem).div_ceil(8) } else { 0 };
-                rows * per_row
+                // Bytes of one row of `r` elements: an exponent byte +
+                // byte-aligned lanes per (possibly short) box.
+                let row_bytes = |r: usize| {
+                    let full = r / BOX;
+                    let rem = r % BOX;
+                    full * (1 + (bits * BOX).div_ceil(8))
+                        + if rem > 0 { 1 + (bits * rem).div_ceil(8) } else { 0 }
+                };
+                // Ragged tensors: `len % inner` trailing elements form a
+                // short final row of their own (row_bytes(0) == 0).
+                (len / inner) * row_bytes(inner) + row_bytes(len % inner)
             }
+            FormatSpec::Float { .. } => (bits * len).div_ceil(8),
             FormatSpec::Fp32 => unreachable!("fp32 is passthrough"),
         }
     }
@@ -390,38 +473,42 @@ impl PackedTensor {
             FormatSpec::Fixed { .. } => {
                 let eb = self.payload[0];
                 let mut r = BitReader::new(&self.payload[1..]);
-                if eb == 0 {
-                    out.resize(len, 0.0);
-                } else {
-                    let step = step_of_exp_byte(eb, bits);
-                    for _ in 0..len {
-                        out.push(value_of(r.take(bits), step, bits));
-                    }
+                // Grid byte 0 is the degenerate zero-amax grid: every
+                // live lane is 0, but the NaN sentinel must still read
+                // out (an all-NaN tensor quantizes to all-NaN). The
+                // nominal step 1.0 matches the encoder's.
+                let step = if eb == 0 { 1.0 } else { step_of_exp_byte(eb, bits) };
+                for _ in 0..len {
+                    out.push(value_of(r.take(bits), step, bits));
                 }
             }
             FormatSpec::Bfp { .. } => {
                 let mut pos = 0usize;
-                let rows = len / self.inner;
-                for _ in 0..rows {
-                    let mut left = self.inner;
+                let mut done = 0usize;
+                while done < len {
+                    // Ragged tensors: the final row may be short.
+                    let mut left = self.inner.min(len - done);
+                    done += left;
                     while left > 0 {
                         let blen = left.min(BOX);
                         let eb = self.payload[pos];
                         pos += 1;
                         let lane_bytes = (bits as usize * blen).div_ceil(8);
                         let mut r = BitReader::new(&self.payload[pos..pos + lane_bytes]);
-                        if eb == 0 {
-                            out.resize(out.len() + blen, 0.0);
-                        } else {
-                            let step = step_of_exp_byte(eb, bits);
-                            for _ in 0..blen {
-                                out.push(value_of(r.take(bits), step, bits));
-                            }
+                        let step = if eb == 0 { 1.0 } else { step_of_exp_byte(eb, bits) };
+                        for _ in 0..blen {
+                            out.push(value_of(r.take(bits), step, bits));
                         }
                         r.align();
                         pos += lane_bytes;
                         left -= blen;
                     }
+                }
+            }
+            FormatSpec::Float { exp_bits, man_bits, .. } => {
+                let mut r = BitReader::new(&self.payload);
+                for _ in 0..len {
+                    out.push(float_value(r.take(bits), exp_bits, man_bits));
                 }
             }
             FormatSpec::Fp32 => unreachable!("fp32 is passthrough"),
@@ -431,7 +518,7 @@ impl PackedTensor {
 
     /// Serialize the versioned record (header layout in the module docs).
     pub fn write_into(&self, w: &mut impl Write) -> Result<()> {
-        w.write_all(&[PACKED_VERSION, codec_tag(&self.spec), self.spec.bits() as u8, 0])?;
+        w.write_all(&[PACKED_VERSION, codec_tag(&self.spec), width_byte(&self.spec), 0])?;
         w.write_all(&(self.inner as u32).to_le_bytes())?;
         w.write_all(&(self.shape.len() as u32).to_le_bytes())?;
         for &d in &self.shape {
@@ -471,10 +558,8 @@ impl PackedTensor {
             shape.push(u64::from_le_bytes(b8) as usize);
         }
         let len: usize = shape.iter().product();
-        if inner == 0 || len % inner != 0 {
-            return Err(Error::Manifest(format!(
-                "packed tensor len {len} not a multiple of inner {inner}"
-            )));
+        if inner == 0 {
+            return Err(Error::Manifest("packed tensor inner axis must be >= 1".into()));
         }
         r.read_exact(&mut b8)?;
         let plen = u64::from_le_bytes(b8) as usize;
@@ -497,11 +582,32 @@ fn codec_tag(spec: &FormatSpec) -> u8 {
         FormatSpec::Fixed { rounding: Rounding::Nearest, .. } => 1,
         FormatSpec::Fixed { rounding: Rounding::Stochastic, .. } => 2,
         FormatSpec::Bfp { .. } => 3,
+        FormatSpec::Float { rounding: Rounding::Nearest, .. } => 4,
+        FormatSpec::Float { rounding: Rounding::Stochastic, .. } => 5,
+    }
+}
+
+/// Width byte of the record header: the plain bit width, except the
+/// float tags, which need both grid parameters: `(exp_bits << 4) |
+/// man_bits` (exp ≤ 8 and man ≤ 10 each fit a nibble).
+fn width_byte(spec: &FormatSpec) -> u8 {
+    match *spec {
+        FormatSpec::Float { exp_bits, man_bits, .. } => ((exp_bits << 4) | man_bits) as u8,
+        _ => spec.bits() as u8,
     }
 }
 
 fn spec_from_tag(tag: u8, bits: u32) -> Result<FormatSpec> {
     let bad = |msg: String| Error::Manifest(msg);
+    let float_of = |rounding| {
+        let (exp_bits, man_bits) = (bits >> 4, bits & 0xF);
+        if !(FLOAT_EXP_RANGE.0..=FLOAT_EXP_RANGE.1).contains(&exp_bits)
+            || !(FLOAT_MAN_RANGE.0..=FLOAT_MAN_RANGE.1).contains(&man_bits)
+        {
+            return Err(bad(format!("packed float widths e{exp_bits}m{man_bits} out of range")));
+        }
+        Ok(FormatSpec::Float { exp_bits, man_bits, rounding })
+    };
     match tag {
         0 if bits == 32 => Ok(FormatSpec::Fp32),
         0 => Err(bad(format!("fp32 packed record with width {bits}"))),
@@ -511,6 +617,8 @@ fn spec_from_tag(tag: u8, bits: u32) -> Result<FormatSpec> {
         1 => Ok(FormatSpec::Fixed { bits, rounding: Rounding::Nearest }),
         2 => Ok(FormatSpec::Fixed { bits, rounding: Rounding::Stochastic }),
         3 => Ok(FormatSpec::Bfp { bits }),
+        4 => float_of(Rounding::Nearest),
+        5 => float_of(Rounding::Stochastic),
         other => Err(bad(format!("unknown packed family tag {other}"))),
     }
 }
@@ -575,6 +683,95 @@ mod tests {
         assert_eq!(&q[..4], &[1.0, 0.25, -0.5, 0.0]);
         // exp byte 0x7F (e = 0), lanes [4, 1, -2, 0, 0, ...].
         assert_eq!(p.payload(), &[0x7F, 0x14, 0x0E, 0, 0, 0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn roundtrip_known_fp8() {
+        // e4m3 lanes: sign | (e + 7) << 3 | frac; byte-per-element.
+        let x = vec![1.0f32, -1.5, f32::NAN, 0.0];
+        let p = FormatSpec::fp8e4m3().encode(&x, &[4], 4);
+        assert_eq!(p.packed_len(), 4, "fp8 is one byte per element");
+        assert_eq!(p.payload(), &[0x38, 0xBC, 0x7F, 0x00]);
+        let d = p.decode();
+        assert_eq!(d[0], 1.0);
+        assert_eq!(d[1], -1.5);
+        assert!(d[2].is_nan());
+        assert_eq!(d[3], 0.0);
+        // Saturation and subnormals round-trip too.
+        let y = vec![1e9f32, -0.001, crate::quant::pow2(-9)];
+        let p = FormatSpec::fp8e4m3().encode(&y, &[3], 3);
+        let d = p.decode();
+        assert_eq!(d[0], 240.0);
+        assert_eq!(d[2], crate::quant::pow2(-9), "min subnormal uses exponent field 0");
+    }
+
+    #[test]
+    fn roundtrip_float_formats_including_wide_exponent() {
+        let mut rng = Pcg32::new(31);
+        for spec in [
+            FormatSpec::fp8e4m3(),
+            FormatSpec::fp8e5m2(),
+            FormatSpec::float_sr(4, 3),
+            FormatSpec::float(5, 10), // fp16
+            FormatSpec::float(8, 7),  // bf16 — exercises the FTZ-clamped flush grid
+        ] {
+            let mut x = gen_f32s(&mut rng, 3 * 21, 18.0);
+            x[0] = f32::NAN;
+            x[1] = f32::INFINITY;
+            x[2] = -0.0;
+            x[3] = crate::quant::pow2(-126) * 3.0; // deep in bf16's flush grid
+            assert_roundtrip(&spec, &x, &[3, 21], 21);
+        }
+    }
+
+    #[test]
+    fn roundtrip_ragged_tensors() {
+        // len % inner != 0: the trailing partial row packs as a short row.
+        let mut rng = Pcg32::new(17);
+        for spec in registered_specs(&[2, 3, 4, 8, 16, 24, 32]) {
+            let x = gen_f32s(&mut rng, 2 * 24 + 10, 6.0);
+            assert_roundtrip(&spec, &x, &[58], 24);
+            let y = gen_f32s(&mut rng, 5, 4.0);
+            assert_roundtrip(&spec, &y, &[5], 3);
+        }
+    }
+
+    #[test]
+    fn ragged_roundtrip_property() {
+        Prop::new("ragged decode(encode(x)) == quantize(x)").cases(80).run(
+            |rng, size| {
+                let fam = &FORMAT_REGISTRY[rng.below(FORMAT_REGISTRY.len() as u32) as usize];
+                let bits = rng.range(fam.min_bits, fam.max_bits + 1);
+                let spec = fam.instantiate(bits).unwrap();
+                let inner = 1 + rng.below(40) as usize;
+                let rows = rng.below(3) as usize;
+                let tail = rng.below(inner as u32) as usize;
+                let x = gen_f32s(rng, rows * inner + tail, 4.0 + (size as f32) / 10.0);
+                (spec, x, inner)
+            },
+            |(spec, x, inner)| {
+                let shape = [x.len()];
+                let packed = spec.encode(x, &shape, *inner);
+                if packed.packed_len() != spec.packed_len(x.len(), *inner) {
+                    return Err(format!(
+                        "{spec}: payload {} != packed_len {}",
+                        packed.packed_len(),
+                        spec.packed_len(x.len(), *inner)
+                    ));
+                }
+                let got = packed.decode();
+                let want = spec.quantize(x, *inner);
+                for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                    if !same_f32(g, w) {
+                        return Err(format!(
+                            "{spec}: elem {i}: decoded {g}, quantized {w} (x={})",
+                            x[i]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]
@@ -648,8 +845,9 @@ mod tests {
                 f32::MIN_POSITIVE / 2.0,
             ];
             assert_roundtrip(&spec, &x, &[8], 8);
-            // All-zero and all-NaN tensors (the quantizers zero-fill when
-            // the FTZ'd |max| is zero).
+            // All-zero and all-NaN tensors (when the FTZ'd |max| is zero
+            // the quantizers zero-fill everything except NaN, which
+            // propagates — and must therefore survive the codec too).
             assert_roundtrip(&spec, &[0.0; 20], &[20], 20);
             assert_roundtrip(&spec, &[f32::NAN; 20], &[20], 20);
             // Extreme magnitudes: near f32::MAX the grid clamps, near the
@@ -766,6 +964,44 @@ mod tests {
         assert_eq!(tag(FormatSpec::fixed(7)), (1, 7));
         assert_eq!(tag(FormatSpec::fixed_sr(7)), (2, 7));
         assert_eq!(tag(FormatSpec::bfp(7)), (3, 7));
+        // Float tags carry (exp << 4) | man in the width byte.
+        assert_eq!(tag(FormatSpec::fp8e4m3()), (4, 0x43));
+        assert_eq!(tag(FormatSpec::fp8e5m2()), (4, 0x52));
+        assert_eq!(tag(FormatSpec::float_sr(4, 3)), (5, 0x43));
+        assert_eq!(tag(FormatSpec::float(5, 10)), (4, 0x5A));
+    }
+
+    #[test]
+    fn read_rejects_bad_float_widths() {
+        let p = FormatSpec::fp8e4m3().encode(&[1.0; 4], &[4], 4);
+        let mut buf = Vec::new();
+        p.write_into(&mut buf).unwrap();
+        let mut bad = buf.clone();
+        bad[2] = 0x10; // e1m0: both widths out of range
+        assert!(PackedTensor::read_from(&mut bad.as_slice()).is_err());
+        let mut bad = buf.clone();
+        bad[2] = 0x9F; // e9m15
+        assert!(PackedTensor::read_from(&mut bad.as_slice()).is_err());
+        let back = PackedTensor::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, p);
+    }
+
+    #[test]
+    fn all_nan_tensor_roundtrips_through_the_zero_grid() {
+        // The degenerate grid (exp byte 0) still carries NaN sentinels:
+        // quantize keeps NaN, so decode must too.
+        for spec in [FormatSpec::fixed(4), FormatSpec::fixed_sr(6), FormatSpec::bfp(4)] {
+            let x = vec![f32::NAN; 20];
+            let p = spec.encode(&x, &[20], 20);
+            let d = p.decode();
+            assert!(d.iter().all(|v| v.is_nan()), "{spec}: {d:?}");
+            // Mixed NaN/zero in a zero-amax tensor.
+            let y = vec![f32::NAN, 0.0, -0.0, f32::NAN];
+            let d = spec.encode(&y, &[4], 4).decode();
+            assert!(d[0].is_nan() && d[3].is_nan());
+            assert_eq!(d[1], 0.0);
+            assert_eq!(d[2], 0.0);
+        }
     }
 
     #[test]

@@ -9,8 +9,84 @@
 
 use std::path::{Path, PathBuf};
 
+use crate::schedule::{FormatSpec, PrecisionConfig};
 use crate::util::json::{self, Json};
 use crate::{Error, Result};
+
+/// Which train-artifact variant a precision config needs — the
+/// artifact-side dispatch guard. The AOT pipeline (`aot.py`) exports
+/// per-quantizer variants: `train_bfp` / `train_fixed` / `train_float`
+/// bake a single quantizer subgraph (XLA compile time scales badly with
+/// the subgraph count) and apply it **only on an exact mode match**
+/// (identity on foreign modes), while `train_both` carries every
+/// quantizer for heterogeneous per-slot configs. A cross-family config
+/// therefore MUST route to `train_both`: a single-family variant would
+/// silently leave the foreign slots unquantized (and before the exact-
+/// match fix in `layers.py::quantize`, quantized them with the wrong
+/// kernel). The fp32 mode (0) is the identity in every variant;
+/// stochastic slots ride their family's grid.
+pub fn train_variant_for(p: &PrecisionConfig) -> &'static str {
+    let (mut fixed, mut bfp, mut float) = (false, false, false);
+    for f in &p.slots {
+        // Exhaustive on purpose: a future format family must decide its
+        // artifact routing here explicitly (compiler error, not a
+        // silent fall-through to some single-family variant).
+        match f {
+            FormatSpec::Fixed { .. } => fixed = true,
+            FormatSpec::Bfp { .. } => bfp = true,
+            FormatSpec::Float { .. } => float = true,
+            FormatSpec::Fp32 => {}
+        }
+    }
+    match (fixed, bfp, float) {
+        (true, false, false) => "train_fixed",
+        (false, false, true) => "train_float",
+        // All-fp32 configs ride the (always-exported) BFP variant.
+        (false, _, false) => "train_bfp",
+        _ => "train_both",
+    }
+}
+
+/// Resolve the train-artifact kind for `p` against the artifact kinds a
+/// manifest actually carries — THE shared implementation behind both
+/// `ModelManifest::train_artifact_for` and the session's `ExeCache`
+/// (one copy, so the two cannot drift). Policy:
+///
+/// * the preferred single-family variant when present;
+/// * else `train_both` — but only when that fallback genuinely covers
+///   the config: a manifest without a `train_float` entry predates the
+///   float family, so its `train_both` has no mode-4/5 arm and would
+///   silently train a float config **unquantized** (while the report
+///   scored it as FP8). That case fails loudly instead;
+/// * a manifest with neither variant nor `train_both` fails loudly.
+pub fn train_kind_for(
+    artifacts: &std::collections::BTreeMap<String, String>,
+    p: &PrecisionConfig,
+) -> Result<&'static str> {
+    // Float-era check FIRST: it must also catch cross-family float
+    // configs whose preferred variant is train_both itself (a stale
+    // manifest can carry a train_both that predates modes 4/5).
+    if p.slots.iter().any(|f| f.is_float()) && !artifacts.contains_key("train_float") {
+        return Err(Error::Manifest(format!(
+            "config {} needs the float quantizer, but these artifacts predate it \
+             (no 'train_float' entry — their train_both has no mode-4/5 arm, so the run \
+             would silently not quantize); rerun `make artifacts`",
+            p.spec_string()
+        )));
+    }
+    let kind = train_variant_for(p);
+    if artifacts.contains_key(kind) {
+        return Ok(kind);
+    }
+    if artifacts.contains_key("train_both") {
+        Ok("train_both")
+    } else {
+        Err(Error::Manifest(format!(
+            "no '{kind}' (or fallback 'train_both') artifact for config {}",
+            p.spec_string()
+        )))
+    }
+}
 
 /// One parameter tensor's name + shape.
 #[derive(Clone, Debug, PartialEq)]
@@ -53,6 +129,14 @@ impl ModelManifest {
             .get(kind)
             .map(|s| s.as_str())
             .ok_or_else(|| Error::Manifest(format!("no '{kind}' artifact")))
+    }
+
+    /// The train artifact for a precision config ([`train_kind_for`]'s
+    /// policy): the preferred single-family variant when the manifest
+    /// has it, else a `train_both` that genuinely covers the config.
+    /// Anything else errs — never a silently mis-dispatching fallback.
+    pub fn train_artifact_for(&self, p: &PrecisionConfig) -> Result<&str> {
+        self.artifact_file(train_kind_for(&self.artifacts, p)?)
     }
 }
 
@@ -225,6 +309,71 @@ mod tests {
         assert!(m.quant_path("quant_bfp").unwrap().ends_with("quant_bfp.hlo.txt"));
         assert!(m.model_path("nmt", "decode").is_err());
         assert!(m.model_path("xxx", "train").is_err());
+    }
+
+    #[test]
+    fn train_variant_routing_guards_cross_family_configs() {
+        let v = |s: &str| train_variant_for(&PrecisionConfig::parse(s).unwrap());
+        // Single-family configs take their baked variant.
+        assert_eq!(v("bfp:16,4,4,16"), "train_bfp");
+        assert_eq!(v("fixed:8,8,8,16"), "train_fixed");
+        assert_eq!(v("fixedsr:16,4,4,16"), "train_fixed");
+        assert_eq!(v("fp8e4m3,fp8e4m3,fp8e4m3,fp8e5m2"), "train_float");
+        assert_eq!(v("e4m3,e4m3sr,e5m10,e5m2"), "train_float");
+        assert_eq!(v("fp32"), "train_bfp");
+        // The regression class: ANY cross-family mix must go to
+        // train_both — a single-family variant is the identity on
+        // foreign modes (and used to wrong-kernel them).
+        assert_eq!(v("bfp16,bfp4,bfp4,fixed16sr"), "train_both");
+        assert_eq!(v("fixed16,bfp4,bfp4,fixed16"), "train_both");
+        assert_eq!(v("e4m3,bfp4,bfp4,e5m2"), "train_both");
+        assert_eq!(v("fixed16,fixed4,fixed4,e5m2"), "train_both");
+        assert_eq!(v("fp32,bfp4,e4m3,fp32"), "train_both");
+    }
+
+    #[test]
+    fn manifest_train_artifact_for_prefers_variant_and_falls_back() {
+        let mut artifacts = std::collections::BTreeMap::new();
+        artifacts.insert("train_bfp".to_string(), "m_train_bfp.hlo.txt".to_string());
+        artifacts.insert("train_both".to_string(), "m_train_both.hlo.txt".to_string());
+        let stale = ModelManifest { config: Default::default(), params: vec![], artifacts };
+        let p = |s: &str| PrecisionConfig::parse(s).unwrap();
+        // Preferred single-family variant when present.
+        assert_eq!(stale.train_artifact_for(&p("bfp8")).unwrap(), "m_train_bfp.hlo.txt");
+        // Integer-family configs fall back to train_both safely (every
+        // train_both generation carries modes 0-3).
+        assert_eq!(
+            stale.train_artifact_for(&p("bfp16,bfp4,bfp4,fixed16sr")).unwrap(),
+            "m_train_both.hlo.txt"
+        );
+        assert_eq!(
+            stale.train_artifact_for(&p("fixed:8,8,8,16")).unwrap(),
+            "m_train_both.hlo.txt"
+        );
+        // A float config against artifacts that predate the float family
+        // (no train_float entry anywhere) must fail LOUDLY: the stale
+        // train_both has no mode-4/5 arm, so falling back would silently
+        // train unquantized while the report scored the trace as FP8.
+        let err = stale.train_artifact_for(&p("e4m3")).unwrap_err();
+        assert!(err.to_string().contains("train_float"), "{err}");
+        assert!(stale.train_artifact_for(&p("e4m3,bfp4,bfp4,e5m2")).is_err());
+        // With a float-aware artifact set, float configs resolve: the
+        // variant directly, and cross-family mixes through train_both.
+        let mut artifacts = stale.artifacts.clone();
+        artifacts.insert("train_float".to_string(), "m_train_float.hlo.txt".to_string());
+        let fresh = ModelManifest { config: Default::default(), params: vec![], artifacts };
+        assert_eq!(fresh.train_artifact_for(&p("e4m3")).unwrap(), "m_train_float.hlo.txt");
+        assert_eq!(
+            fresh.train_artifact_for(&p("e4m3,bfp4,bfp4,e5m2")).unwrap(),
+            "m_train_both.hlo.txt"
+        );
+        // Neither variant nor train_both: loud error.
+        let empty = ModelManifest {
+            config: Default::default(),
+            params: vec![],
+            artifacts: Default::default(),
+        };
+        assert!(empty.train_artifact_for(&p("bfp8")).is_err());
     }
 
     #[test]

@@ -20,6 +20,8 @@ pub mod artifact;
 pub mod client;
 pub mod tensor;
 
-pub use artifact::{ArtifactManifest, ModelManifest, ParamSpec};
+pub use artifact::{
+    train_kind_for, train_variant_for, ArtifactManifest, ModelManifest, ParamSpec,
+};
 pub use client::{Executable, Runtime};
 pub use tensor::{Dtype, HostTensor, TensorData};

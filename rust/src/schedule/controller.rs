@@ -18,9 +18,12 @@
 //! ([`DsqControllerConfig::from_specs`]), so any registered format
 //! family — including heterogeneous per-slot configs — can drive the
 //! schedule: `DsqControllerConfig::paper_default("fixedsr")` instantiates
-//! the paper's ladder over stochastic-rounding fixed point.
+//! the paper's ladder over stochastic-rounding fixed point, and
+//! [`DsqControllerConfig::fp8_default`] ships an FP8-LM-style float
+//! ladder (E4M3 compute/stash slots, E5M2 gradients — `dsq-fp8` on the
+//! CLI).
 
-use super::{PrecisionConfig, Schedule, ScheduleState};
+use super::{FormatSpec, PrecisionConfig, Schedule, ScheduleState};
 
 /// The paper's Appendix-B ladder widths, shared by every family.
 const PAPER_LADDER: &[[u32; 4]] = &[
@@ -32,8 +35,38 @@ const PAPER_LADDER: &[[u32; 4]] = &[
     [16, 16, 16, 16],
 ];
 
+/// The `dsq-fp8` ladder: start all-FP8 (E4M3 fwd/stash/bwd, E5M2 grad —
+/// FP8-LM's slot assignment), widen the compute path through fp16
+/// (`e5m10`) as validation stalls, and only at the top level widen the
+/// gradient slot too (E5M2 → E5M10 keeps the 5-bit exponent, so range
+/// never shrinks — the monotone-in-width ladder property in float form).
+const FP8_LADDER: &[&str] = &[
+    "fp8e4m3,fp8e4m3,fp8e4m3,fp8e5m2",
+    "e5m10,fp8e4m3,fp8e4m3,fp8e5m2",
+    "e5m10,e5m10,e5m10,fp8e5m2",
+    "e5m10,e5m10,e5m10,e5m10",
+];
+
 /// Appendix-C floor for the gradient slot in built-in ladders.
 const GRAD_MIN_BITS: u32 = 16;
+/// The float-form of the Appendix-C rule: "grad stays wide" is about
+/// *range*, and an FP8 gradient slot is legal iff it carries at least
+/// E5M2's 5 exponent bits (Lang et al. 2024 / FP8-LM: E5M2 for grads,
+/// E4M3 diverges).
+const GRAD_MIN_FLOAT_EXP: u32 = 5;
+
+/// Is `f` wide enough for the gradient-output slot of a built-in ladder?
+/// Integer families need ≥ 16 total bits (Appendix C: 8-bit gradient
+/// outputs diverge); float formats satisfy the range form instead — ≥
+/// [`GRAD_MIN_FLOAT_EXP`] exponent bits. (A width-only escape hatch for
+/// floats would be dead code: with mantissas capped at 10 bits, any
+/// ≥ 16-bit float already has ≥ 5 exponent bits.)
+fn grad_slot_ok(f: &FormatSpec) -> bool {
+    match f {
+        FormatSpec::Float { exp_bits, .. } => *exp_bits >= GRAD_MIN_FLOAT_EXP,
+        _ => f.bits() >= GRAD_MIN_BITS,
+    }
+}
 
 /// Controller hyper-parameters.
 #[derive(Clone, Debug)]
@@ -74,12 +107,13 @@ impl DsqControllerConfig {
             }
         }
         for l in &ladder {
-            if l.grad().bits() < GRAD_MIN_BITS {
+            if !grad_slot_ok(&l.grad()) {
                 return Err(crate::Error::Config(format!(
-                    "ladder level {} has a {}-bit gradient slot (Appendix C requires >= {})",
+                    "ladder level {} has a too-narrow gradient slot {} (Appendix C requires \
+                     >= {GRAD_MIN_BITS} bits, or a float format with >= {GRAD_MIN_FLOAT_EXP} \
+                     exponent bits)",
                     l.spec_string(),
-                    l.grad().bits(),
-                    GRAD_MIN_BITS
+                    l.grad().spec_string(),
                 )));
             }
         }
@@ -96,6 +130,12 @@ impl DsqControllerConfig {
             .collect();
         let refs: Vec<&str> = specs.iter().map(String::as_str).collect();
         Self::from_specs(0.002, 2, &refs)
+    }
+
+    /// The FP8-LM-style float ladder (`dsq-fp8`): [`FP8_LADDER`] under
+    /// the paper's plateau hyper-parameters.
+    pub fn fp8_default() -> crate::Result<Self> {
+        Self::from_specs(0.002, 2, FP8_LADDER)
     }
 }
 
@@ -139,6 +179,11 @@ impl DsqController {
     /// unregistered family name.
     pub fn paper_default(family: &str) -> crate::Result<Self> {
         Ok(DsqController::new(DsqControllerConfig::paper_default(family)?))
+    }
+
+    /// The FP8 float-format controller (`--schedule dsq-fp8`).
+    pub fn fp8_default() -> crate::Result<Self> {
+        Ok(DsqController::new(DsqControllerConfig::fp8_default()?))
     }
 
     pub fn level(&self) -> usize {
@@ -285,6 +330,43 @@ mod tests {
     fn from_specs_rejects_low_grad_slot() {
         let r = DsqControllerConfig::from_specs(0.01, 1, &["fixed:8,8,8,8"]);
         assert!(matches!(r, Err(crate::Error::Config(_))), "got {r:?}");
+    }
+
+    #[test]
+    fn fp8_ladder_starts_all_fp8_and_climbs_to_fp16() {
+        let mut c = DsqController::fp8_default().unwrap();
+        assert_eq!(c.current().notation(), "[8,8,8,8]");
+        assert_eq!(c.current().fwd(), FormatSpec::fp8e4m3());
+        assert_eq!(c.current().stash(), FormatSpec::fp8e4m3());
+        assert_eq!(c.current().grad(), FormatSpec::fp8e5m2(), "grad slot is the E5M2 format");
+        for _ in 0..100 {
+            c.observe_validation(5.0);
+        }
+        assert!(c.at_top());
+        assert_eq!(c.current(), PrecisionConfig::uniform(FormatSpec::float(5, 10)));
+        // Monotone in width at every transition (checked by new(), but
+        // pin the notation path here too).
+        assert_eq!(c.current().notation(), "[16,16,16,16]");
+    }
+
+    #[test]
+    fn float_grad_rule_is_about_range_not_width() {
+        // E5M2 (8 bits, 5-bit exponent) is a legal grad slot...
+        let ok = DsqControllerConfig::from_specs(
+            0.01,
+            1,
+            &["fp8e4m3,fp8e4m3,fp8e4m3,fp8e5m2"],
+        );
+        assert!(ok.is_ok(), "{ok:?}");
+        // ...but E4M3 (same width, 4-bit exponent) is not — the float
+        // form of Appendix C's "8-bit gradient outputs diverge".
+        let r = DsqControllerConfig::from_specs(0.01, 1, &["fp8e4m3,fp8e4m3,fp8e4m3,fp8e4m3"]);
+        assert!(matches!(r, Err(crate::Error::Config(_))), "got {r:?}");
+        // Wide floats pass through the same range rule (e8m7 = bf16 has
+        // 8 exponent bits; no ≥16-bit float with < 5 exists, since
+        // mantissas cap at 10).
+        let ok = DsqControllerConfig::from_specs(0.01, 1, &["e8m7,e8m7,e8m7,e8m7"]);
+        assert!(ok.is_ok(), "{ok:?}");
     }
 
     #[test]

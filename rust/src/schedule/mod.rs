@@ -21,7 +21,10 @@
 //! * `"bfp8"` — one format, all four slots;
 //! * `"bfp:16,4,4,16"` — one family, per-slot widths (the paper's
 //!   `[16,4,4,16]` notation);
-//! * `"bfp16,bfp4,bfp4,fixed16sr"` — fully heterogeneous per-slot specs.
+//! * `"bfp16,bfp4,bfp4,fixed16sr"` — fully heterogeneous per-slot specs;
+//! * `"fp8e4m3,fp8e4m3,fp8e4m3,fp8e5m2"` — the FP8-LM float slot
+//!   assignment (float formats have no width knob, so they only appear
+//!   in uniform or per-slot form — `dsq-fp8` ships the ladder).
 
 pub mod controller;
 
@@ -251,6 +254,10 @@ mod tests {
             FormatSpec::fixed_sr(16),
         ]);
         assert_eq!(h.as_qcfg(), [2.0, 16.0, 2.0, 4.0, 1.0, 4.0, 3.0, 16.0]);
+        // Float slots use mode 4/5 with the packed 100·E + M width field.
+        let f = PrecisionConfig::parse("fp8e4m3,fp8e4m3,e4m3sr,fp8e5m2").unwrap();
+        assert_eq!(f.as_qcfg(), [4.0, 403.0, 4.0, 403.0, 5.0, 403.0, 4.0, 502.0]);
+        assert_eq!(f.notation(), "[8,8,8,8]", "notation stays the total width");
     }
 
     #[test]
@@ -319,6 +326,12 @@ mod tests {
                 FormatSpec::fixed(4),
                 FormatSpec::fixed_sr(16),
             ]),
+            // Float slots: uniform, heterogeneous-within-float, and
+            // float mixed with the integer families.
+            PrecisionConfig::uniform(FormatSpec::fp8e4m3()),
+            PrecisionConfig::parse("fp8e4m3,fp8e4m3,fp8e4m3,fp8e5m2").unwrap(),
+            PrecisionConfig::parse("e5m10,e4m3,e4m3sr,e5m2").unwrap(),
+            PrecisionConfig::parse("bfp16,e4m3,bfp4,fixed16sr").unwrap(),
         ];
         for c in configs {
             let s = c.spec_string();

@@ -95,6 +95,91 @@ fn quant_artifact_extreme_values() {
 }
 
 #[test]
+fn quant_float_artifact_matches_rust_mirror() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = ArtifactManifest::load(&dir).unwrap();
+    let Ok(path) = man.quant_path("quant_float") else {
+        eprintln!("skipping: artifacts predate the float formats (rerun `make artifacts`)");
+        return;
+    };
+    let exe = Runtime::global().load(&path).unwrap();
+    let (rows, cols) = (man.quant_shape[0], man.quant_shape[1]);
+    let mut rng = Pcg32::new(404);
+    // codes 100*E + M: e4m3, e5m2, fp16, bf16, and an odd one.
+    for &(e, m) in &[(4u32, 3u32), (5, 2), (5, 10), (8, 7), (3, 4)] {
+        let x = gen_values(&mut rng, rows * cols, 12.0);
+        let code = (100 * e + m) as f32;
+        let outs = exe
+            .run(&[HostTensor::f32(vec![rows, cols], x.clone()), HostTensor::scalar_f32(code)])
+            .unwrap();
+        let got = outs[0].as_f32().unwrap();
+        let want = quant::float_quantize(&x, e, m);
+        assert_eq!(got, want.as_slice(), "e{e}m{m}: artifact != rust mirror");
+    }
+}
+
+/// The artifact-side dispatch contract (the headline bugfix): a
+/// single-quantizer variant applies its kernel ONLY on an exact mode
+/// match and is the identity on every other family's mode — it must
+/// never run a foreign slot through its own grid.
+#[test]
+fn select_probe_variants_dispatch_on_exact_mode_match() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = ArtifactManifest::load(&dir).unwrap();
+    let Ok(path_fixed) = man.quant_path("quant_select_fixed") else {
+        eprintln!("skipping: artifacts predate the select probes (rerun `make artifacts`)");
+        return;
+    };
+    let (rows, cols) = (man.quant_shape[0], man.quant_shape[1]);
+    let mut rng = Pcg32::new(7);
+    let x = gen_values(&mut rng, rows * cols, 6.0);
+    let run = |path: &std::path::Path, mode: f32, bits: f32| -> Vec<f32> {
+        let exe = Runtime::global().load(path).unwrap();
+        let outs = exe
+            .run(&[
+                HostTensor::f32(vec![rows, cols], x.clone()),
+                HostTensor::scalar_f32(mode),
+                HostTensor::scalar_f32(bits),
+            ])
+            .unwrap();
+        outs[0].as_f32().unwrap().to_vec()
+    };
+    let fixed8 = quant::fixed_quantize(&x, 8.0);
+    let bfp8 = quant::bfp_quantize(&x, cols, 8.0);
+    let e4m3 = quant::float_quantize(&x, 4, 3);
+
+    // "fixed" variant: modes 1/3 quantize, modes 2/4 are identity (the
+    // old `mode >= 1` dispatch returned fixed8 for ALL of these).
+    assert_eq!(run(&path_fixed, 1.0, 8.0), fixed8);
+    assert_eq!(run(&path_fixed, 3.0, 8.0), fixed8);
+    assert_eq!(run(&path_fixed, 2.0, 8.0), x, "bfp mode through the fixed variant");
+    assert_eq!(run(&path_fixed, 4.0, 403.0), x, "float mode through the fixed variant");
+    assert_eq!(run(&path_fixed, 0.0, 32.0), x);
+
+    // "bfp" variant: only mode 2 quantizes.
+    let path_bfp = man.quant_path("quant_select_bfp").unwrap();
+    assert_eq!(run(&path_bfp, 2.0, 8.0), bfp8);
+    assert_eq!(run(&path_bfp, 1.0, 8.0), x, "fixed mode through the bfp variant");
+    assert_eq!(run(&path_bfp, 3.0, 8.0), x, "fixed-sr mode through the bfp variant");
+    assert_eq!(run(&path_bfp, 4.0, 403.0), x);
+
+    // "float" variant: modes 4/5 quantize.
+    let path_float = man.quant_path("quant_select_float").unwrap();
+    assert_eq!(run(&path_float, 4.0, 403.0), e4m3);
+    assert_eq!(run(&path_float, 5.0, 403.0), e4m3, "artifact-side SR rounds to nearest");
+    assert_eq!(run(&path_float, 2.0, 8.0), x);
+    assert_eq!(run(&path_float, 1.0, 8.0), x);
+
+    // "both" carries every family at its own mode.
+    let path_both = man.quant_path("quant_select_both").unwrap();
+    assert_eq!(run(&path_both, 1.0, 8.0), fixed8);
+    assert_eq!(run(&path_both, 2.0, 8.0), bfp8);
+    assert_eq!(run(&path_both, 3.0, 8.0), fixed8);
+    assert_eq!(run(&path_both, 4.0, 403.0), e4m3);
+    assert_eq!(run(&path_both, 0.0, 32.0), x);
+}
+
+#[test]
 fn nmt_init_is_deterministic_and_matches_manifest() {
     let Some(dir) = artifacts_dir() else { return };
     let man = ArtifactManifest::load(&dir).unwrap();

@@ -81,6 +81,33 @@ fn dsq_controller_trace_feeds_cost_model() {
 }
 
 #[test]
+fn fp8_schedule_trains_end_to_end() {
+    let Some(dir) = artifacts_dir() else { return };
+    let man = ArtifactManifest::load(&dir).unwrap();
+    if man.nmt.artifact_file("train_float").is_err() {
+        eprintln!("skipping: artifacts predate the float formats (rerun `make artifacts`)");
+        return;
+    }
+    // The dsq-fp8 ladder: E4M3 fwd/stash/bwd with an E5M2 grad slot,
+    // driven through the float train variant by the dispatch guard.
+    let mut schedule: Box<dyn Schedule> = Box::new(DsqController::fp8_default().unwrap());
+    let mut trainer = Trainer::new(quick_cfg(&dir)).unwrap();
+    let report = trainer.run(schedule.as_mut()).unwrap();
+    assert_eq!(report.steps, 16);
+    assert!(!report.diverged, "fp8 run diverged");
+    assert!(report.final_val_loss.is_finite());
+    assert_eq!(report.trace[0].0.notation(), "[8,8,8,8]");
+    assert_eq!(report.trace[0].0.grad(), FormatSpec::fp8e5m2());
+    let total: usize = report.trace.iter().map(|(_, n)| n).sum();
+    assert_eq!(total as u64, report.steps);
+    // The float trace is scored by the cost model (FP8 MACs ~0.05x).
+    let w = dsq::costmodel::TransformerWorkload::iwslt_6layer();
+    let (arith, dram) = report.cost_on(&w).expect("fp8 trace is scored");
+    assert!(arith > 0.0 && arith < 0.25, "arith {arith}");
+    assert!(dram > 0.0 && dram < 0.75, "dram {dram}");
+}
+
+#[test]
 fn checkpoint_roundtrip_through_trainer() {
     let Some(dir) = artifacts_dir() else { return };
     let ckpt = std::env::temp_dir().join(format!("dsq-e2e-ckpt-{}.bin", std::process::id()));
