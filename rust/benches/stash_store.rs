@@ -1,0 +1,134 @@
+//! Bench: the tiered stash store — per-step latency and traffic of the
+//! resident tier vs the all-spill tier, across the registry formats.
+//!
+//! One "step" is the store's real per-step work: take a dense state
+//! (as `absorb_step_output` leaves it), stash it (pack + budget
+//! enforcement + index write), then fetch it back for dispatch — so
+//! the spilled profile pays the encode, the segment write, *and* the
+//! readback, exactly like a budget-0 training run. The dense clone
+//! that resets the state each iteration is included in both profiles,
+//! so the resident/spilled delta is pure tier cost.
+//!
+//! `--smoke` (or `DSQ_BENCH_SMOKE=1`): a seconds-long CI profile that
+//! still executes every (format, budget) cell and *asserts* on each
+//! cell that the traffic meter agrees with the cost model within
+//! box-metadata slack and that spill readback reproduced the resident
+//! bytes — a stash-store regression fails the workflow, not just a
+//! number. CI runs both budget extremes by construction: every cell
+//! pair is one all-resident run and one all-spill run.
+
+use dsq::bench::{header, Bencher};
+use dsq::model::ModelState;
+use dsq::quant::registered_specs;
+use dsq::runtime::HostTensor;
+use dsq::stash::{StashBudget, StashStore};
+use dsq::util::rng::Pcg32;
+
+fn make_state(rng: &mut Pcg32, scale: usize) -> ModelState {
+    // A transformer-ish mix: square weights, a ragged projection, a bias.
+    let mk = |rows: usize, cols: usize, rng: &mut Pcg32| {
+        let data: Vec<f32> =
+            (0..rows * cols).map(|_| rng.normal() * (rng.f32() * 6.0 - 3.0).exp2()).collect();
+        if rows == 1 {
+            HostTensor::f32(vec![cols], data)
+        } else {
+            HostTensor::f32(vec![rows, cols], data)
+        }
+    };
+    let params = vec![
+        mk(scale, scale, rng),
+        mk(scale, scale + 5, rng), // minor axis not a box multiple
+        mk(1, scale, rng),
+    ];
+    let zeros: Vec<HostTensor> = params.iter().map(HostTensor::zeros_like).collect();
+    ModelState { params, m: zeros.clone(), v: zeros, step: 1 }
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("DSQ_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    header(if smoke {
+        "Stash store: resident vs spilled step (smoke profile)"
+    } else {
+        "Stash store: resident vs spilled step latency + traffic"
+    });
+    let b = if smoke {
+        Bencher {
+            warmup: std::time::Duration::from_millis(10),
+            measure: std::time::Duration::from_millis(40),
+            min_iters: 2,
+            max_iters: 1_000,
+        }
+    } else {
+        Bencher::default()
+    };
+    let scale = if smoke { 48 } else { 128 };
+    let mut rng = Pcg32::new(7);
+
+    let widths = [2u32, 4, 8, 16];
+    let specs = registered_specs(&widths);
+    for spec in specs {
+        let dense = make_state(&mut rng, scale);
+        let elems: usize = dense.params.iter().map(HostTensor::len).sum::<usize>() * 3;
+        for (tier, budget) in
+            [("resident", StashBudget::Unlimited), ("spilled", StashBudget::Bytes(0))]
+        {
+            // One instrumented cycle first: exact per-step traffic for
+            // the report, and the smoke-mode correctness gates.
+            let t = {
+                let mut probe = StashStore::ephemeral(spec, budget).expect("store");
+                let mut st = dense.clone();
+                probe.stash_state(&mut st).expect("stash");
+                probe.fetch_state(&mut st).expect("fetch");
+                probe.note_dispatch_read(&st);
+                probe.traffic_report()
+            };
+            if smoke {
+                // Correctness gates (the reason CI runs this in smoke
+                // mode): meter-vs-model agreement on every cell, and
+                // real spill traffic on the budget-0 cells.
+                assert!(
+                    t.agrees(),
+                    "{spec} {tier}: observed {} bits vs modeled {} bits (allowance {})",
+                    t.meter.observed_stash_bits(),
+                    t.meter.modeled_stash_bits,
+                    t.allowance_bits
+                );
+                match budget {
+                    StashBudget::Bytes(0) => {
+                        assert!(
+                            t.meter.spill_write_bytes > 0,
+                            "{spec}: budget 0 must produce spill traffic"
+                        );
+                        assert_eq!(
+                            t.meter.spill_read_bytes, t.meter.spill_write_bytes,
+                            "{spec}: every spilled record reads back exactly once per step"
+                        );
+                    }
+                    _ => assert!(
+                        !t.meter.spilled(),
+                        "{spec}: unlimited budget must never spill"
+                    ),
+                }
+            }
+            // Then the timed loop: the store's full per-step cycle from
+            // the dense post-absorb form.
+            let mut store = StashStore::ephemeral(spec, budget).expect("store");
+            let mut state = dense.clone();
+            let r = b.bench(&format!("{spec:<8} {tier} step ({elems} elems)"), || {
+                state = dense.clone();
+                store.stash_state(&mut state).expect("stash");
+                store.fetch_state(&mut state).expect("fetch");
+                store.note_dispatch_read(&state);
+            });
+            println!("{}", r.report());
+            println!(
+                "    traffic/step: stash W {:.1} KiB R {:.1} KiB, spill W {:.1} KiB R {:.1} KiB",
+                t.meter.stash_write_bytes as f64 / 1024.0,
+                t.meter.stash_read_bytes as f64 / 1024.0,
+                t.meter.spill_write_bytes as f64 / 1024.0,
+                t.meter.spill_read_bytes as f64 / 1024.0,
+            );
+        }
+    }
+}

@@ -19,7 +19,9 @@ use std::path::PathBuf;
 use crate::costmodel::{self, TransformerWorkload, WorkloadKind};
 use crate::data::Variant;
 use crate::schedule::{DsqController, FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
+use crate::stash::{self, StashBudget};
 use crate::util::cli::{ArgSpec, Args};
+use crate::util::json::Json;
 use crate::{Error, Result};
 
 use super::finetune::{FinetuneConfig, Finetuner};
@@ -39,6 +41,7 @@ pub fn dispatch(args: &[String]) -> i32 {
         "roofline" => cmd_roofline(rest),
         "experiment" => cmd_experiment(rest),
         "formats" => cmd_formats(),
+        "stash" => cmd_stash(rest),
         "info" => cmd_info(rest),
         "version" => {
             println!("dsq {} — Dynamic Stashing Quantization trainer", env!("CARGO_PKG_VERSION"));
@@ -73,6 +76,7 @@ subcommands:
   experiment   regenerate a paper table/figure (table1-iwslt, table1-glue,
                table4, table5, table6, figure1, all)
   formats      list the registered number formats (the --schedule grammar)
+  stash        inspect a stash-store run dir (per-slot residency + traffic)
   info         artifact manifest summary
   version      print version
 
@@ -82,6 +86,14 @@ batch prefetch (--prefetch), validation per epoch or every N steps
 schedule state — a checkpoint saved mid-DSQ-ladder resumes at the saved
 controller level via --init-checkpoint. Both print the time-weighted
 hardware cost of the run's schedule (IWSLT / RoBERTa-base scale).
+
+--stash-state <spec> holds the run's state physically packed in a tiered
+stash store between steps; --stash-budget <bytes|64k|4m|1g|unlimited>
+caps its resident bytes (the overflow spills to an on-disk segment and
+is prefetched back before dispatch — numerics are unchanged, only
+residency). Stashed runs print measured stash/spill traffic with a
+modeled-vs-observed DRAM comparison; --stash-dir keeps the store's
+segment + index on disk for `dsq stash <dir>`.
 
 --schedule accepts dsq (the paper's BFP ladder), dsq-<family>
 (dsq-fixed, dsq-fixedsr), dsq-fp8 (FP8-LM-style floats: E4M3
@@ -148,6 +160,19 @@ fn common_train_flags(spec: ArgSpec) -> ArgSpec {
             "hold trainer state packed in this format between steps (e.g. bfp8); \
              checkpoints then use the packed v2 layout",
         )
+        .opt(
+            "stash-budget",
+            "",
+            "resident byte budget for the packed stash (e.g. 64k, 4m, 0 = spill \
+             everything); overflow spills to disk and prefetches back — requires \
+             --stash-state",
+        )
+        .opt(
+            "stash-dir",
+            "",
+            "directory for the stash store's spill segment + stash.json index \
+             (inspect with `dsq stash <dir>`; default: a per-run temp dir)",
+        )
         .bool("json", "print the full report as JSON")
 }
 
@@ -160,13 +185,32 @@ fn parse_prefetch(a: &Args) -> Result<usize> {
     Ok(p)
 }
 
-/// Parse an optional `--stash-state` spec ("" = dense f32 state).
+/// Parse an optional `--stash-state` spec ("" = dense f32 state). A bad
+/// spec names the flag and the offending token, and the underlying
+/// parser lists every registered format — no bare parse failures.
 fn opt_format(a: &Args, key: &str) -> Result<Option<FormatSpec>> {
     let v = a.get(key);
     if v.is_empty() {
         Ok(None)
     } else {
-        FormatSpec::parse(v).map(Some)
+        FormatSpec::parse(v).map(Some).map_err(|e| match e {
+            Error::Config(msg) => Error::Config(format!("--{key}: {msg}")),
+            other => other,
+        })
+    }
+}
+
+/// Parse `--stash-budget` ("" = unlimited). Errors name the flag, the
+/// offending token, and the accepted grammar.
+fn opt_budget(a: &Args, key: &str) -> Result<StashBudget> {
+    let v = a.get(key);
+    if v.is_empty() {
+        Ok(StashBudget::Unlimited)
+    } else {
+        StashBudget::parse(v).map_err(|e| match e {
+            Error::Config(msg) => Error::Config(format!("--{key}: {msg}")),
+            other => other,
+        })
     }
 }
 
@@ -192,6 +236,8 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         init_checkpoint: opt_path(&a, "init-checkpoint"),
         prefetch: parse_prefetch(&a)?,
         stash_format: opt_format(&a, "stash-state")?,
+        stash_budget: opt_budget(&a, "stash-budget")?,
+        stash_dir: opt_path(&a, "stash-dir"),
     };
     let mut schedule = parse_schedule(a.get("schedule"))?;
     let mut trainer = Trainer::new(cfg)?;
@@ -206,6 +252,7 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         report.steps_per_s()
     );
     print_cost_line(&report, &TransformerWorkload::iwslt_6layer(), "IWSLT");
+    print_stash_line(&report);
     if a.get_bool("json") {
         println!("{}", report.to_json().to_string_pretty());
     }
@@ -221,6 +268,15 @@ fn print_cost_line(report: &crate::coordinator::RunReport, w: &TransformerWorklo
             "hardware cost of this schedule on paper-scale {name}: arith {arith:.3}x dram {dram:.3}x (vs fixed32)"
         ),
         None => println!("hardware cost: - (fp32 reference is unscored)"),
+    }
+}
+
+/// The measured-traffic line after a stashed run: modeled vs observed
+/// stash DRAM plus spill/checkpoint byte counts (absent for dense-state
+/// runs, which have no stash store to meter).
+fn print_stash_line(report: &crate::coordinator::RunReport) {
+    if let Some(st) = &report.stash {
+        println!("{}", st.summary());
     }
 }
 
@@ -244,6 +300,8 @@ fn cmd_finetune(raw: &[String]) -> Result<()> {
         init_checkpoint: opt_path(&a, "init-checkpoint"),
         prefetch: parse_prefetch(&a)?,
         stash_format: opt_format(&a, "stash-state")?,
+        stash_budget: opt_budget(&a, "stash-budget")?,
+        stash_dir: opt_path(&a, "stash-dir"),
     };
     let mut schedule = parse_schedule(a.get("schedule"))?;
     let mut tuner = Finetuner::new(cfg)?;
@@ -259,6 +317,7 @@ fn cmd_finetune(raw: &[String]) -> Result<()> {
     // The paper scores GLUE fine-tuning on RoBERTa-base (Table 1's
     // MNLI/QNLI columns) — same line `dsq train` prints for IWSLT.
     print_cost_line(&report, &TransformerWorkload::roberta_base(), "RoBERTa-base");
+    print_stash_line(&report);
     if a.get_bool("json") {
         println!("{}", report.to_json().to_string_pretty());
     }
@@ -323,6 +382,7 @@ fn cmd_roofline(raw: &[String]) -> Result<()> {
     };
     let w = parse_workload(a.get("workload"))?;
     crate::experiments::figure1::print_roofline(&machine, &w);
+    crate::experiments::figure1::print_stash_traffic(&w);
     Ok(())
 }
 
@@ -369,8 +429,65 @@ fn cmd_formats() -> Result<()> {
         "\ngeneric float spelling: e<E>m<M>[sr] (e4m3, e5m2, e8m7 = bf16, e5m10 = fp16)\n\
          config spec forms: <spec> | <family>:q0,q1,q2,q3 | <spec>,<spec>,<spec>,<spec>\n\
          schedules: dsq | dsq-<family> | dsq-fp8 | any config spec (static)\n\
-         --stash-state <spec>: keep trainer state packed (sub-byte) between steps"
+         --stash-state <spec>: keep trainer state packed (sub-byte) between steps\n\
+         --stash-budget <{}>: cap resident stash bytes (overflow spills to disk)",
+        stash::BUDGET_GRAMMAR
     );
+    Ok(())
+}
+
+/// `dsq stash <run-dir>`: print the stash store's index — per-slot
+/// resident/spilled bytes, last touch, and the traffic meter — for a
+/// run that kept its store on disk (`--stash-dir`).
+fn cmd_stash(raw: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("stash", "inspect a stash-store run directory");
+    let a = spec.parse(raw)?;
+    let dir = a.positional.first().ok_or_else(|| {
+        Error::Config("stash run directory required (the --stash-dir of a run)".into())
+    })?;
+    let idx_path = PathBuf::from(dir).join("stash.json");
+    let idx = crate::util::json::parse_file(&idx_path).map_err(|e| {
+        Error::Config(format!("{idx_path:?}: not a stash index ({e})"))
+    })?;
+    let get_str = |k: &str| idx.path(k).and_then(Json::as_str).unwrap_or("?").to_string();
+    let get_num = |k: &str| idx.path(k).and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "stash store at {dir}: format {}, budget {}, step {}",
+        get_str("spec"),
+        get_str("budget"),
+        get_num("step"),
+    );
+    println!(
+        "resident {} | spilled {}",
+        stash::fmt_bytes(get_num("resident_bytes") as u64),
+        stash::fmt_bytes(get_num("spilled_bytes") as u64),
+    );
+    println!("{:<28} {:>10} {:>12} {:>12}", "slot", "tier", "bytes", "last touch");
+    for slot in idx.path("slots").and_then(Json::as_arr).unwrap_or(&[]) {
+        println!(
+            "{:<28} {:>10} {:>12} {:>12}",
+            slot.path("slot").and_then(Json::as_str).unwrap_or("?"),
+            slot.path("tier").and_then(Json::as_str).unwrap_or("?"),
+            stash::fmt_bytes(slot.path("bytes").and_then(Json::as_f64).unwrap_or(0.0) as u64),
+            slot.path("last_touch").and_then(Json::as_f64).unwrap_or(0.0),
+        );
+    }
+    if let Some(t) = idx.path("traffic") {
+        let tb = |k: &str| t.path(k).and_then(Json::as_f64).unwrap_or(0.0);
+        println!(
+            "traffic: stash wrote {} read {} | spill wrote {} read {} | checkpoints {}",
+            stash::fmt_bytes(tb("stash_write_bytes") as u64),
+            stash::fmt_bytes(tb("stash_read_bytes") as u64),
+            stash::fmt_bytes(tb("spill_write_bytes") as u64),
+            stash::fmt_bytes(tb("spill_read_bytes") as u64),
+            stash::fmt_bytes(tb("checkpoint_bytes") as u64),
+        );
+        println!(
+            "DRAM stash bits: modeled {:.3} Mbit observed {:.3} Mbit",
+            tb("modeled_stash_bits") / 1e6,
+            tb("observed_stash_bits") / 1e6,
+        );
+    }
     Ok(())
 }
 
@@ -453,6 +570,72 @@ mod tests {
         let spec = common_train_flags(ArgSpec::new("t", "test"));
         let a = spec.parse(&["--stash-state".to_string(), "int8".to_string()]).unwrap();
         assert!(opt_format(&a, "stash-state").is_err());
+    }
+
+    #[test]
+    fn stash_flag_errors_name_the_flag_token_and_valid_formats() {
+        // The satellite contract: --stash-state / --stash-budget parse
+        // failures must name the offending token and list what is
+        // valid, not fail bare.
+        let parse_with = |flag: &str, val: &str| {
+            let spec = common_train_flags(ArgSpec::new("t", "test"));
+            spec.parse(&[format!("--{flag}"), val.to_string()]).unwrap()
+        };
+        let a = parse_with("stash-state", "int8");
+        match opt_format(&a, "stash-state").err() {
+            Some(Error::Config(msg)) => {
+                assert!(msg.contains("--stash-state"), "names the flag: {msg}");
+                assert!(msg.contains("'int8'"), "names the token: {msg}");
+                assert!(msg.contains("registered:"), "lists valid formats: {msg}");
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        let a = parse_with("stash-state", "bfp64");
+        match opt_format(&a, "stash-state").err() {
+            Some(Error::Config(msg)) => {
+                assert!(msg.contains("--stash-state") && msg.contains("64"), "{msg}");
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        let a = parse_with("stash-budget", "64x");
+        match opt_budget(&a, "stash-budget").err() {
+            Some(Error::Config(msg)) => {
+                assert!(msg.contains("--stash-budget"), "names the flag: {msg}");
+                assert!(msg.contains("'x'"), "names the bad suffix: {msg}");
+                assert!(msg.contains(stash::BUDGET_GRAMMAR), "lists the grammar: {msg}");
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stash_budget_and_dir_flags_parse() {
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec.parse(&[]).unwrap();
+        assert_eq!(opt_budget(&a, "stash-budget").unwrap(), StashBudget::Unlimited);
+        assert_eq!(opt_path(&a, "stash-dir"), None);
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec
+            .parse(&[
+                "--stash-budget".to_string(),
+                "64k".to_string(),
+                "--stash-dir".to_string(),
+                "/tmp/run1".to_string(),
+            ])
+            .unwrap();
+        assert_eq!(opt_budget(&a, "stash-budget").unwrap(), StashBudget::Bytes(64 << 10));
+        assert_eq!(opt_path(&a, "stash-dir"), Some(PathBuf::from("/tmp/run1")));
+    }
+
+    #[test]
+    fn stash_subcommand_dispatches_and_requires_a_dir() {
+        // Missing dir and bogus dir both exit 2 (config error), like
+        // every other CLI misuse.
+        assert_eq!(dispatch(&["stash".to_string()]), 2);
+        assert_eq!(
+            dispatch(&["stash".to_string(), "/nonexistent-run-dir".to_string()]),
+            2
+        );
     }
 
     #[test]

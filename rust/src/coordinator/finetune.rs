@@ -15,6 +15,7 @@ use crate::data::classify::{ClassifyConfig, ClassifyTask};
 use crate::model::ModelState;
 use crate::runtime::ArtifactManifest;
 use crate::schedule::{FormatSpec, Schedule};
+use crate::stash::StashBudget;
 use crate::{Error, Result};
 
 use super::lr::LrSchedule;
@@ -45,6 +46,12 @@ pub struct FinetuneConfig {
     /// Hold the tuner state packed in this format between steps (see
     /// [`SessionConfig::stash_format`]); `None` = dense f32.
     pub stash_format: Option<FormatSpec>,
+    /// Resident byte budget for the packed stash (see
+    /// [`SessionConfig::stash_budget`]).
+    pub stash_budget: StashBudget,
+    /// Spill-segment / index directory (see
+    /// [`SessionConfig::stash_dir`]); `None` = per-run temp dir.
+    pub stash_dir: Option<PathBuf>,
 }
 
 impl FinetuneConfig {
@@ -63,6 +70,8 @@ impl FinetuneConfig {
             init_checkpoint: None,
             prefetch: 4,
             stash_format: None,
+            stash_budget: StashBudget::Unlimited,
+            stash_dir: None,
         }
     }
 
@@ -80,6 +89,8 @@ impl FinetuneConfig {
             checkpoint_every_steps: self.checkpoint_every_steps,
             prefetch: self.prefetch,
             stash_format: self.stash_format,
+            stash_budget: self.stash_budget,
+            stash_dir: self.stash_dir.clone(),
         }
     }
 }

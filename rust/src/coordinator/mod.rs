@@ -6,7 +6,10 @@
 //! workload shares — bounded-prefetch batch production, per-step
 //! artifact dispatch through a memoized executable cache
 //! ([`session::ExeCache`]), precision-trace accumulation, divergence
-//! abort, stash repacking, validation cadence (per-epoch or every N
+//! abort, the stash-store hand-off (`--stash-state` packs the state
+//! into a budgeted [`crate::stash::StashStore`]; `--stash-budget`
+//! overflow spills to disk and prefetches back, with byte-accurate
+//! traffic on the report), validation cadence (per-epoch or every N
 //! steps), and mid-run/final checkpointing with resumable schedule
 //! state. Per-workload behavior lives behind the [`session::Task`]
 //! trait ([`session::NmtTask`] for translation, [`session::ClsTask`]

@@ -13,8 +13,11 @@
 //!   instead of once per step;
 //! * the precision-trace accumulator that feeds the cost model;
 //! * divergence detection and abort (Table 5's "Failed" rows);
-//! * stash repacking (`--stash-state`: step outputs arrive dense and go
-//!   back to packed storage every step);
+//! * the stash-store hand-off (`--stash-state`): step outputs arrive
+//!   dense and go back to the [`StashStore`]'s packed resident tier
+//!   every step, the `--stash-budget` overflow spills to its segment
+//!   file, the prefetcher pulls it back before the next dispatch, and
+//!   every byte lands on the run's [`StashTraffic`] report;
 //! * validation cadence — per-epoch always, plus every
 //!   `val_every_steps` when set — feeding the schedule's plateau
 //!   detector;
@@ -43,6 +46,7 @@ use crate::metrics::{bleu, LossTracker};
 use crate::model::{checkpoint, ModelState};
 use crate::runtime::{ArtifactManifest, Executable, HostTensor, Runtime};
 use crate::schedule::{FormatSpec, PrecisionConfig, Schedule, ScheduleState};
+use crate::stash::{StashBudget, StashStore, StashStoreConfig, StashTraffic};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use crate::{Error, Result};
@@ -76,12 +80,23 @@ pub struct SessionConfig {
     pub prefetch: usize,
     /// Hold the resident state (params + Adam moments) physically packed
     /// in this format between steps, decoding only at the PJRT boundary
-    /// — the coordinator-side stash. Quantizes the resident state every
-    /// step (Direct-Quantized-Training style), so it changes numerics;
+    /// — the coordinator-side stash, owned by a [`StashStore`].
+    /// Quantizes the resident state every step
+    /// (Direct-Quantized-Training style), so it changes numerics;
     /// `None` (the default) keeps dense f32 state. Checkpoints written
     /// from a packed state use the packed v2 format and shrink
     /// accordingly.
     pub stash_format: Option<FormatSpec>,
+    /// Resident byte budget for the stash store (`--stash-budget`):
+    /// packed state beyond it spills coldest-first to the store's
+    /// segment file and is prefetched back before the next dispatch.
+    /// Purely a residency policy — a budgeted run's numerics are
+    /// bit-identical to the unbudgeted run's. Requires `stash_format`.
+    pub stash_budget: StashBudget,
+    /// Directory for the stash store's spill segment + `stash.json`
+    /// index (`--stash-dir`; what `dsq stash <dir>` inspects). `None`
+    /// uses a per-run temp directory that is removed when the run ends.
+    pub stash_dir: Option<PathBuf>,
 }
 
 /// One workload plugged into the [`Session`] engine.
@@ -241,6 +256,10 @@ pub struct RunReport {
     pub val_curve: Vec<(u64, f64)>,
     pub schedule_desc: String,
     pub wall_s: f64,
+    /// Measured stash traffic (`--stash-state` runs): byte-accurate
+    /// stash/spill/checkpoint counters plus the modeled-vs-observed
+    /// DRAM comparison. `None` for dense-state runs.
+    pub stash: Option<StashTraffic>,
 }
 
 impl RunReport {
@@ -317,6 +336,7 @@ impl RunReport {
                         .map(|&(s, l)| Json::arr([Json::num(s as f64), Json::num(l)])),
                 ),
             ),
+            ("stash", self.stash.as_ref().map_or(Json::Null, StashTraffic::to_json)),
         ])
     }
 }
@@ -330,6 +350,9 @@ pub struct Session<T: Task> {
     state: ModelState,
     exes: ExeCache,
     model: &'static str,
+    /// The tiered stash store owning the packed state between steps
+    /// (`--stash-state`); `None` for dense-state runs.
+    stash: Option<StashStore>,
     /// Schedule state recovered from `init_checkpoint`, applied to the
     /// schedule at the start of [`Session::run`].
     restored_schedule: Option<ScheduleState>,
@@ -350,17 +373,51 @@ impl<T: Task> Session<T> {
                     .into(),
             ));
         }
+        if cfg.stash_format.is_none() && cfg.stash_budget != StashBudget::Unlimited {
+            return Err(Error::Config(
+                "--stash-budget requires --stash-state <spec> (there is no packed \
+                 stash to budget)"
+                    .into(),
+            ));
+        }
+        if cfg.stash_format.is_none() && cfg.stash_dir.is_some() {
+            return Err(Error::Config(
+                "--stash-dir requires --stash-state <spec> (there is no stash store \
+                 to put there)"
+                    .into(),
+            ));
+        }
         let model = task.model();
         let mm = man.model(model)?;
         let (mut state, restored_schedule) = match &cfg.init_checkpoint {
             Some(path) => checkpoint::load_checkpoint_full(path, mm)?,
             None => (ModelState::init(Runtime::global(), &man, model, cfg.seed as i32)?, None),
         };
-        if let Some(spec) = &cfg.stash_format {
-            state.pack_state(spec)?;
+        let mut stash = match &cfg.stash_format {
+            Some(spec) => {
+                let mut store = match &cfg.stash_dir {
+                    Some(dir) => StashStore::new(StashStoreConfig {
+                        spec: *spec,
+                        budget: cfg.stash_budget,
+                        dir: dir.clone(),
+                    })?,
+                    None => StashStore::ephemeral(*spec, cfg.stash_budget)?,
+                };
+                let names: Vec<&str> = mm.params.iter().map(|p| p.name.as_str()).collect();
+                store.set_param_names(&names);
+                Some(store)
+            }
+            None => None,
+        };
+        if let Some(store) = &mut stash {
+            store.stash_state(&mut state)?;
+            // If the budget spilled any of the initial state, start
+            // reading it back now so the first dispatch doesn't block
+            // on a cold read.
+            store.start_prefetch(&state);
         }
         let exes = ExeCache::new(&man, model)?;
-        Ok(Session { cfg, task, man, state, exes, model, restored_schedule })
+        Ok(Session { cfg, task, man, state, exes, model, stash, restored_schedule })
     }
 
     pub fn cfg(&self) -> &SessionConfig {
@@ -384,9 +441,19 @@ impl<T: Task> Session<T> {
         self.exes.loaded()
     }
 
+    /// The stash store's traffic report, when this run stashes state.
+    pub fn stash_traffic(&self) -> Option<StashTraffic> {
+        self.stash.as_ref().map(StashStore::traffic_report)
+    }
+
     /// Mean per-unit loss + accuracy over batches (see [`RunReport`]
     /// for the unit convention).
     pub fn evaluate(&mut self, batches: &[T::Batch]) -> Result<(f64, f64)> {
+        // Eval reads the params: spilled slots must come back first
+        // (budgeted runs may have spilled them after the last step).
+        if let Some(store) = &mut self.stash {
+            store.fetch_state(&mut self.state)?;
+        }
         let exe = self.exes.get("eval")?;
         let (mut loss_sum, mut ncorrect, mut total) = (0f64, 0f64, 0f64);
         for batch in batches {
@@ -414,11 +481,16 @@ impl<T: Task> Session<T> {
     }
 
     /// Save `cfg.checkpoint` (no-op when unset) with the schedule's
-    /// resumable state in the trailer.
-    fn save_checkpoint(&self, schedule: &dyn Schedule) -> Result<()> {
-        let Some(path) = &self.cfg.checkpoint else { return Ok(()) };
+    /// resumable state in the trailer. Spilled slots stream their
+    /// records from the spill segment without rehydrating; the bytes
+    /// written land on the traffic meter.
+    fn save_checkpoint(&mut self, schedule: &dyn Schedule) -> Result<()> {
+        let Some(path) = self.cfg.checkpoint.clone() else { return Ok(()) };
         let mm = self.man.model(self.model)?;
-        checkpoint::save_checkpoint_full(path, &self.state, mm, schedule.snapshot().as_ref())?;
+        checkpoint::save_checkpoint_full(&path, &self.state, mm, schedule.snapshot().as_ref())?;
+        if let Some(store) = &mut self.stash {
+            store.note_checkpoint_bytes(std::fs::metadata(&path)?.len());
+        }
         crate::info!("checkpoint saved to {path:?}");
         Ok(())
     }
@@ -465,6 +537,14 @@ impl<T: Task> Session<T> {
             for batch in rx.iter() {
                 let pc = schedule.current();
                 let exe = self.exes.get_train(&pc)?;
+                // Materialize the stash before dispatch: the readback
+                // prefetcher started after the previous step has been
+                // pulling spilled slots back while we waited on the
+                // batch channel, so this drains it rather than reading
+                // cold.
+                if let Some(store) = &mut self.stash {
+                    store.fetch_state(&mut self.state)?;
+                }
                 let lr = self.cfg.lr.at(self.state.step + 1) as f32;
                 let mut inputs = Vec::with_capacity(3 * self.state.params.len() + 6);
                 inputs.extend(self.state.params.iter().cloned());
@@ -474,12 +554,21 @@ impl<T: Task> Session<T> {
                 self.task.push_step_inputs(&batch, &mut inputs);
                 inputs.push(HostTensor::f32(vec![8], pc.as_qcfg().to_vec()));
                 inputs.push(HostTensor::scalar_f32(lr));
+                if let Some(store) = &mut self.stash {
+                    // The packed state is about to decode into PJRT —
+                    // the stash *read* of the write/read cycle.
+                    store.note_dispatch_read(&self.state);
+                }
                 let outs = exe.run(&inputs)?;
                 let loss = self.state.absorb_step_output(outs)? as f64;
                 // Re-stash: step outputs arrive dense from the artifact;
-                // the resident copy goes back to packed storage.
-                if let Some(spec) = &self.cfg.stash_format {
-                    self.state.pack_state(spec)?;
+                // the resident copy goes back to packed storage (the
+                // stash *write*), the budget spills the overflow, and
+                // the prefetcher starts reading it back in the
+                // background.
+                if let Some(store) = &mut self.stash {
+                    store.stash_state(&mut self.state)?;
+                    store.start_prefetch(&self.state);
                 }
                 tracker.record(self.state.step, loss);
                 match trace.last_mut() {
@@ -534,6 +623,11 @@ impl<T: Task> Session<T> {
             Some((s, l, a)) if s == self.state.step => (l, a),
             _ => self.evaluate(&val_set)?,
         };
+        // The headline metric (BLEU decode) reads the params directly;
+        // bring any slots the budget spilled after the last step back.
+        if let Some(store) = &mut self.stash {
+            store.fetch_state(&mut self.state)?;
+        }
         let metric =
             self.task.final_metric(&self.state, &mut self.exes, final_eval_acc, diverged)?;
         // Never overwrite the checkpoint with diverged (NaN/blown-up)
@@ -561,6 +655,7 @@ impl<T: Task> Session<T> {
             val_curve,
             schedule_desc: schedule.describe(),
             wall_s: start.elapsed().as_secs_f64(),
+            stash: self.stash_traffic(),
         })
     }
 }
@@ -911,15 +1006,37 @@ mod tests {
             checkpoint_every_steps: 0,
             prefetch: 0,
             stash_format: None,
+            stash_budget: StashBudget::Unlimited,
+            stash_dir: None,
         };
         // prefetch 0 is rejected up front (no PJRT involved).
         let r = Session::new(cfg.clone(), nmt_task(), man.clone());
         assert!(matches!(r, Err(Error::Config(_))));
         // checkpoint-every without a checkpoint path would silently
         // save nothing mid-run — rejected up front too.
-        let cfg = SessionConfig { prefetch: 4, checkpoint_every_steps: 5, ..cfg };
-        let r = Session::new(cfg, nmt_task(), man);
+        let cfg2 = SessionConfig { prefetch: 4, checkpoint_every_steps: 5, ..cfg.clone() };
+        let r = Session::new(cfg2, nmt_task(), man.clone());
         assert!(matches!(r, Err(Error::Config(_))));
+        // A budget without a stash format has nothing to budget.
+        let cfg3 = SessionConfig {
+            prefetch: 4,
+            stash_budget: StashBudget::Bytes(1024),
+            ..cfg.clone()
+        };
+        match Session::new(cfg3, nmt_task(), man.clone()).err() {
+            Some(Error::Config(msg)) => {
+                assert!(msg.contains("--stash-state"), "{msg}");
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // Likewise a stash dir without a stash store to put there.
+        let cfg4 = SessionConfig { prefetch: 4, stash_dir: Some("/tmp/x".into()), ..cfg };
+        match Session::new(cfg4, nmt_task(), man).err() {
+            Some(Error::Config(msg)) => {
+                assert!(msg.contains("--stash-state"), "{msg}");
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
     }
 
     #[test]
@@ -946,6 +1063,7 @@ mod tests {
             val_curve: vec![(4, 1.0)],
             schedule_desc: "static fp32".into(),
             wall_s: 2.0,
+            stash: None,
         };
         let r = mk(Some(TaskMetric::Bleu(20.0)));
         assert_eq!(r.bleu(), Some(20.0));

@@ -10,6 +10,7 @@ use crate::data::{Batcher, TranslationConfig, TranslationTask, Variant};
 use crate::model::ModelState;
 use crate::runtime::ArtifactManifest;
 use crate::schedule::{FormatSpec, Schedule};
+use crate::stash::StashBudget;
 use crate::Result;
 
 use super::lr::LrSchedule;
@@ -41,6 +42,12 @@ pub struct TrainerConfig {
     /// Hold the trainer state packed in this format between steps (see
     /// [`SessionConfig::stash_format`]); `None` = dense f32.
     pub stash_format: Option<FormatSpec>,
+    /// Resident byte budget for the packed stash (see
+    /// [`SessionConfig::stash_budget`]).
+    pub stash_budget: StashBudget,
+    /// Spill-segment / index directory (see
+    /// [`SessionConfig::stash_dir`]); `None` = per-run temp dir.
+    pub stash_dir: Option<PathBuf>,
 }
 
 impl TrainerConfig {
@@ -60,6 +67,8 @@ impl TrainerConfig {
             init_checkpoint: None,
             prefetch: 4,
             stash_format: None,
+            stash_budget: StashBudget::Unlimited,
+            stash_dir: None,
         }
     }
 
@@ -77,6 +86,8 @@ impl TrainerConfig {
             checkpoint_every_steps: self.checkpoint_every_steps,
             prefetch: self.prefetch,
             stash_format: self.stash_format,
+            stash_budget: self.stash_budget,
+            stash_dir: self.stash_dir.clone(),
         }
     }
 }

@@ -154,30 +154,8 @@ impl FormatSpec {
     /// broken codec) and returns `Err` with the numbers.
     pub fn audit_storage(&self, len: usize, inner: usize) -> std::result::Result<(), String> {
         let observed_bits = self.observed_bytes(len, inner) as f64 * 8.0;
-        // Identity widths (>= 25) store the raw 32-bit container.
-        let container_bits = if !matches!(self, FormatSpec::Float { .. })
-            && self.bits() as f32 >= PASSTHROUGH_BITS
-        {
-            32.0f64.max(self.storage_bits())
-        } else {
-            self.storage_bits()
-        };
-        let modeled_bits = container_bits * len as f64;
-        let allowance = match *self {
-            FormatSpec::Fp32 => 0.0,
-            FormatSpec::Fixed { .. } => 8.0 + 7.0,
-            FormatSpec::Float { .. } => 7.0,
-            FormatSpec::Bfp { .. } => {
-                // The row/box count the codec packs: full rows of
-                // `inner`, plus the ragged trailing row's boxes (the
-                // old `len / inner` truncation undercounted those and
-                // mis-flagged ragged tensors).
-                let full_rows = len / inner;
-                let tail = len % inner;
-                let nboxes = (full_rows * inner.div_ceil(BOX) + tail.div_ceil(BOX)) as f64;
-                len as f64 * BFP_STORAGE_OVERHEAD_BITS + nboxes * (EXP_BITS as f64 + 7.0)
-            }
-        };
+        let modeled_bits = self.container_bits() * len as f64;
+        let allowance = self.storage_allowance_bits(len, inner);
         let gap = (observed_bits - modeled_bits).abs();
         if gap <= allowance {
             Ok(())
@@ -187,6 +165,51 @@ impl FormatSpec {
                  for {len} elems (inner {inner}); gap {gap} > allowance {allowance}"
             ))
         }
+    }
+
+    /// Storage bits per element the *container* occupies — what a
+    /// modeled-vs-observed comparison should charge. Equal to
+    /// [`FormatSpec::storage_bits`] except at the identity widths
+    /// (≥ 25, non-float), where the codec stores the raw 32-bit
+    /// container even though narrower bits are priced.
+    pub fn container_bits(&self) -> f64 {
+        if !matches!(self, FormatSpec::Float { .. }) && self.bits() as f32 >= PASSTHROUGH_BITS {
+            32.0f64.max(self.storage_bits())
+        } else {
+            self.storage_bits()
+        }
+    }
+
+    /// The legitimate modeled-vs-observed slack (in bits) for a tensor
+    /// of `len` elements with minor axis `inner` — grid bytes,
+    /// bitstream byte-alignment, and BFP's fitted-vs-raw exponent
+    /// metadata, counted over the boxes the codec actually packs
+    /// (ragged tensors pack `len % inner` trailing elements as a short
+    /// row with its own boxes). [`FormatSpec::audit_storage`] and the
+    /// stash store's [`crate::stash::TrafficMeter`] both grant exactly
+    /// this.
+    pub fn storage_allowance_bits(&self, len: usize, inner: usize) -> f64 {
+        match *self {
+            FormatSpec::Fp32 => 0.0,
+            FormatSpec::Fixed { .. } => 8.0 + 7.0,
+            FormatSpec::Float { .. } => 7.0,
+            FormatSpec::Bfp { .. } => {
+                let full_rows = len / inner;
+                let tail = len % inner;
+                let nboxes = (full_rows * inner.div_ceil(BOX) + tail.div_ceil(BOX)) as f64;
+                len as f64 * BFP_STORAGE_OVERHEAD_BITS + nboxes * (EXP_BITS as f64 + 7.0)
+            }
+        }
+    }
+
+    /// The traffic-side sibling of [`FormatSpec::audit_storage`]: one
+    /// synthetic step through a [`crate::stash::StashStore`] must
+    /// report stash bytes equal to the codec's `packed_len()` exactly,
+    /// and agree with the modeled `container_bits()` within box
+    /// metadata — pinning the meter against the codec the way storage
+    /// bits already are.
+    pub fn observed_traffic(&self) -> std::result::Result<(), String> {
+        crate::stash::audit_observed_traffic(self)
     }
 
     pub fn is_bfp(&self) -> bool {
@@ -366,6 +389,29 @@ mod tests {
             },
             |(spec, len, inner)| spec.audit_storage(*len, *inner),
         );
+    }
+
+    #[test]
+    fn observed_traffic_pins_the_meter_for_every_registry_format() {
+        // The satellite contract: a synthetic step through the stash
+        // store reports exactly the bytes the codec packs, and the
+        // modeled bits agree within the same allowance audit_storage
+        // grants. (The stash module runs the same audit; this placement
+        // keeps the two sibling assertions next to each other.)
+        for spec in crate::quant::registered_specs(&[2, 4, 8, 16, 32]) {
+            spec.observed_traffic()
+                .unwrap_or_else(|e| panic!("traffic meter disagrees with codec: {e}"));
+        }
+    }
+
+    #[test]
+    fn container_bits_matches_the_audit_convention() {
+        assert_eq!(FormatSpec::Fp32.container_bits(), 32.0);
+        assert_eq!(FormatSpec::fixed(8).container_bits(), 8.0);
+        // Identity widths store the raw 32-bit container.
+        assert_eq!(FormatSpec::fixed(25).container_bits(), 32.0);
+        assert_eq!(FormatSpec::bfp(32).container_bits(), 36.0);
+        assert_eq!(FormatSpec::fp8e4m3().container_bits(), 8.0);
     }
 
     #[test]

@@ -32,5 +32,5 @@ pub mod workload;
 
 pub use roofline::{Machine, RooflinePoint};
 pub use tables::{normalized_row, CostRow};
-pub use training::{step_cost, StepCost};
+pub use training::{observed_stash_bytes, step_cost, StepCost};
 pub use workload::{Gemm, GemmKind, TransformerWorkload, WorkloadKind};

@@ -149,6 +149,46 @@ pub fn fixed32_reference(w: &TransformerWorkload) -> StepCost {
     step_cost(w, &PrecisionConfig::uniform(FormatSpec::fixed(32)))
 }
 
+/// The *measured* counterpart of [`StepCost::stash_bits`]: the bytes
+/// the packed codec actually stores for one step's stashed operands
+/// (write + read), priced by `FormatSpec::observed_bytes` — the same
+/// layout function the stash store meters — instead of the modeled
+/// `storage_bits()`. Each stashed operand is a `(rows, k)` matrix with
+/// the GEMM's contraction axis as its minor dimension, which is what
+/// the box-based formats grid against.
+pub fn observed_stash_bytes(w: &TransformerWorkload, p: &PrecisionConfig) -> f64 {
+    let q1 = p.stash();
+    let mut bytes = 0.0f64;
+    for g in &w.gemms {
+        let n = g.count as f64;
+        // Write + read of the q1 stash copy.
+        let lhs = 2.0 * q1.observed_bytes(g.m * g.k, g.k) as f64;
+        bytes += n * lhs;
+        if g.kind == GemmKind::Activation {
+            let rhs = 2.0 * q1.observed_bytes(g.k * g.n, g.n) as f64;
+            bytes += n * rhs;
+        }
+    }
+    bytes
+}
+
+/// Box-metadata slack for [`observed_stash_bytes`] vs
+/// [`StepCost::stash_bits`]: the per-tensor allowance
+/// `FormatSpec::storage_allowance_bits` grants, summed over the same
+/// stashed operands.
+pub fn observed_stash_allowance_bits(w: &TransformerWorkload, p: &PrecisionConfig) -> f64 {
+    let q1 = p.stash();
+    let mut bits = 0.0f64;
+    for g in &w.gemms {
+        let n = g.count as f64;
+        bits += n * 2.0 * q1.storage_allowance_bits(g.m * g.k, g.k);
+        if g.kind == GemmKind::Activation {
+            bits += n * 2.0 * q1.storage_allowance_bits(g.k * g.n, g.n);
+        }
+    }
+    bits
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,6 +320,39 @@ mod tests {
         let w = iwslt();
         let c = step_cost(&w, &PrecisionConfig::stashing(FormatSpec::bfp(16)));
         assert!((c.stash_bits + c.grad_bits + c.weight_bits - c.dram_bits).abs() < 1.0);
+    }
+
+    #[test]
+    fn observed_stash_bytes_agrees_with_the_modeled_stash_component() {
+        // The measured column: the codec-observed stash traffic of a
+        // paper-scale step must agree with the model's stash_bits within
+        // box-metadata slack, for every stash format the tables use.
+        let w = iwslt();
+        for p in [
+            PrecisionConfig::stashing(FormatSpec::bfp(16)),      // q1 = bfp4
+            bfp_of([2, 2, 2, 16]),                               // q1 = bfp2
+            PrecisionConfig::uniform(FormatSpec::bfp(16)),       // q1 = bfp16
+            PrecisionConfig::uniform(FormatSpec::bfp(32)),       // q1 = bfp32 (container)
+            PrecisionConfig::stashing(FormatSpec::fixed(16)),    // q1 = fixed4
+            PrecisionConfig::uniform(FormatSpec::fixed(32)),     // q1 = fixed32
+            PrecisionConfig::FP32,                               // q1 = fp32 (exact)
+            PrecisionConfig::uniform(FormatSpec::fp8e4m3()),     // q1 = e4m3
+        ] {
+            let modeled = step_cost(&w, &p).stash_bits;
+            let observed = 8.0 * observed_stash_bytes(&w, &p);
+            let allowance = observed_stash_allowance_bits(&w, &p);
+            let gap = (observed - modeled).abs();
+            assert!(
+                gap <= allowance,
+                "{}: observed {observed} bits vs modeled {modeled} bits; \
+                 gap {gap} > allowance {allowance}",
+                p.spec_string()
+            );
+            assert!(observed > 0.0 || p.stash() == FormatSpec::Fp32 || modeled == 0.0);
+        }
+        // fp32 stash is byte-exact: no grid metadata at all.
+        let p = PrecisionConfig::FP32;
+        assert_eq!(8.0 * observed_stash_bytes(&w, &p), step_cost(&w, &p).stash_bits);
     }
 
     #[test]

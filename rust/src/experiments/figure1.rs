@@ -8,18 +8,38 @@ use crate::Result;
 
 use super::ExperimentOpts;
 
-/// The three points of the paper's Figure 1 + extras.
-pub fn figure_points(w: &TransformerWorkload, m: &Machine) -> Vec<roofline::RooflinePoint> {
-    let configs: Vec<(&str, PrecisionConfig)> = vec![
+/// The figure's config set (label, precision config).
+fn figure_configs() -> Vec<(&'static str, PrecisionConfig)> {
+    vec![
         ("(1) fp32 (non-quantized)", PrecisionConfig::FP32),
         ("fixed-point 32", PrecisionConfig::uniform(FormatSpec::fixed(32))),
         ("(2) static quant: BFP16", PrecisionConfig::uniform(FormatSpec::bfp(16))),
         ("static stashing [16,4,4,16]", PrecisionConfig::stashing(FormatSpec::bfp(16))),
         ("(3) DSQ @ [2,2,2,16]", PrecisionConfig::of(FormatSpec::bfp(16), [2, 2, 2, 16])),
-    ];
-    configs
+    ]
+}
+
+/// The three points of the paper's Figure 1 + extras.
+pub fn figure_points(w: &TransformerWorkload, m: &Machine) -> Vec<roofline::RooflinePoint> {
+    figure_configs()
         .into_iter()
         .map(|(label, p)| roofline::place(m, label, &costmodel::step_cost(w, &p)))
+        .collect()
+}
+
+/// The measured column: per-config stash traffic of one step — the
+/// modeled `stash_bits` (storage_bits) next to the codec-observed bits
+/// (`observed_stash_bytes`, the same layout function the stash store
+/// meters) — so the figure's DRAM story is a measured quantity, not
+/// only a spreadsheet one.
+pub fn stash_traffic_rows(w: &TransformerWorkload) -> Vec<(&'static str, f64, f64)> {
+    figure_configs()
+        .into_iter()
+        .map(|(label, p)| {
+            let modeled = costmodel::step_cost(w, &p).stash_bits;
+            let observed = 8.0 * costmodel::training::observed_stash_bytes(w, &p);
+            (label, modeled, observed)
+        })
         .collect()
 }
 
@@ -45,6 +65,16 @@ pub fn print_roofline(m: &Machine, w: &TransformerWorkload) {
             p.peak_fraction * 100.0,
             if p.memory_bound { "memory" } else { "compute" }
         );
+    }
+}
+
+/// Print the measured column (machine-independent — it depends only on
+/// the workload).
+pub fn print_stash_traffic(w: &TransformerWorkload) {
+    println!("\nstash traffic per step (modeled storage_bits vs codec-observed):");
+    println!("{:<32} {:>16} {:>16}", "config", "modeled (Mbit)", "observed (Mbit)");
+    for (label, modeled, observed) in stash_traffic_rows(w) {
+        println!("{label:<32} {:>16.2} {:>16.2}", modeled / 1e6, observed / 1e6);
     }
 }
 
@@ -97,7 +127,29 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
             ),
         ]));
     }
-    super::write_report(&opts.out, "figure1", &md, &Json::arr(json_machines))
+    // The measured column once, machine-independent.
+    print_stash_traffic(&w);
+    md.push_str(
+        "## Stash traffic per step (measured)\n\n\
+         | config | modeled Mbit | observed Mbit |\n|---|---|---|\n",
+    );
+    for (label, modeled, observed) in stash_traffic_rows(&w) {
+        md.push_str(&format!("| {label} | {:.2} | {:.2} |\n", modeled / 1e6, observed / 1e6));
+    }
+    let json = Json::obj(vec![
+        ("machines", Json::arr(json_machines)),
+        (
+            "stash_traffic",
+            Json::arr(stash_traffic_rows(&w).into_iter().map(|(label, modeled, observed)| {
+                Json::obj(vec![
+                    ("config", Json::str(label)),
+                    ("modeled_bits", Json::num(modeled)),
+                    ("observed_bits", Json::num(observed)),
+                ])
+            })),
+        ),
+    ]);
+    super::write_report(&opts.out, "figure1", &md, &json)
 }
 
 #[cfg(test)]
@@ -112,5 +164,29 @@ mod tests {
         // Intensity must increase monotonically from (1) to (3).
         let i: Vec<f64> = pts.iter().map(|p| p.intensity).collect();
         assert!(i[0] < i[2] && i[2] < i[4], "{i:?}");
+    }
+
+    #[test]
+    fn measured_stash_column_agrees_with_the_model_within_box_metadata() {
+        let w = TransformerWorkload::iwslt_6layer();
+        let rows = stash_traffic_rows(&w);
+        assert_eq!(rows.len(), 5);
+        for (label, modeled, observed) in &rows {
+            let p = figure_configs()
+                .into_iter()
+                .find(|(l, _)| l == label)
+                .map(|(_, p)| p)
+                .unwrap();
+            let allowance =
+                crate::costmodel::training::observed_stash_allowance_bits(&w, &p);
+            assert!(
+                (observed - modeled).abs() <= allowance,
+                "{label}: observed {observed} vs modeled {modeled} (allowance {allowance})"
+            );
+            assert!(*observed > 0.0, "{label} must measure real bytes");
+        }
+        // The DSQ point stashes at bfp2 — its measured traffic must be
+        // far below the fp32 point's.
+        assert!(rows[4].2 < rows[0].2 / 8.0, "{rows:?}");
     }
 }

@@ -38,55 +38,66 @@ pub const SWEEP: &[(&str, f64)] = &[
 pub fn run(opts: &ExperimentOpts) -> Result<()> {
     let mut md = String::from(
         "# Table 4: stash precision sweep (Stashing BFP, synthetic IWSLT-style task)\n\n\
-         | precision | BLEU | Δ vs fp32 | paper Δ |\n|---|---|---|---|\n",
+         The measured column is the codec-observed bytes one stash round\n\
+         trip of the final model state takes at the row's q1 format —\n\
+         one synthetic step through the stash store, not a modeled\n\
+         number.\n\n\
+         | precision | BLEU | Δ vs fp32 | paper Δ | stash state (measured) |\n\
+         |---|---|---|---|---|\n",
     );
     let mut json_rows = Vec::new();
 
     // fp32 baseline first.
-    let fp32_bleu = if opts.train {
-        let report = train_one(opts, PrecisionConfig::FP32)?;
-        report.bleu()
+    let (fp32_bleu, fp32_measured) = if opts.train {
+        train_one(opts, PrecisionConfig::FP32)?
     } else {
-        None
+        (None, None)
     };
     md.push_str(&format!(
-        "| fp32 [32,32,32,32] | {} | - | - |\n",
-        fp32_bleu.map_or("-".into(), |b| format!("{b:.2}"))
+        "| fp32 [32,32,32,32] | {} | - | - | {} |\n",
+        fp32_bleu.map_or("-".into(), |b| format!("{b:.2}")),
+        fp32_measured.map_or("-".into(), crate::stash::fmt_bytes),
     ));
 
     for (setup, paper_delta) in SWEEP {
         let p = PrecisionConfig::parse(&format!("bfp:{setup}"))?;
-        let (bleu, delta) = if opts.train {
-            let report = train_one(opts, p)?;
-            let delta = match (report.bleu(), fp32_bleu) {
+        let (bleu, delta, measured) = if opts.train {
+            let (bleu, measured) = train_one(opts, p)?;
+            let delta = match (bleu, fp32_bleu) {
                 (Some(b), Some(f)) => Some(b - f),
                 _ => None,
             };
-            (report.bleu(), delta)
+            (bleu, delta, measured)
         } else {
-            (None, None)
+            (None, None, None)
         };
         md.push_str(&format!(
-            "| {} | {} | {} | {paper_delta:+.2} |\n",
+            "| {} | {} | {} | {paper_delta:+.2} | {} |\n",
             setup,
             bleu.map_or("-".into(), |b| format!("{b:.2}")),
             delta.map_or("-".into(), |d| format!("{d:+.2}")),
+            measured.map_or("-".into(), crate::stash::fmt_bytes),
         ));
         json_rows.push(Json::obj(vec![
             ("precision", Json::str(setup)),
             ("bleu", bleu.map_or(Json::Null, Json::num)),
             ("delta", delta.map_or(Json::Null, Json::num)),
             ("paper_delta", Json::num(*paper_delta)),
+            (
+                "measured_stash_bytes",
+                measured.map_or(Json::Null, |b| Json::num(b as f64)),
+            ),
         ]));
     }
     println!("{md}");
     super::write_report(&opts.out, "table4", &md, &Json::arr(json_rows))
 }
 
-fn train_one(
-    opts: &ExperimentOpts,
-    p: PrecisionConfig,
-) -> Result<crate::coordinator::RunReport> {
+/// One sweep row: BLEU from the run, plus the measured stash bytes of
+/// one state round trip through the stash store at the row's q1 format
+/// (pure measurement on the final state — the run's numerics are
+/// untouched).
+fn train_one(opts: &ExperimentOpts, p: PrecisionConfig) -> Result<(Option<f64>, Option<u64>)> {
     let cfg = TrainerConfig {
         artifacts: opts.artifacts.clone(),
         seed: 0,
@@ -96,5 +107,8 @@ fn train_one(
         ..TrainerConfig::quick(opts.artifacts.clone())
     };
     let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(p));
-    Trainer::new(cfg)?.run(schedule.as_mut())
+    let mut trainer = Trainer::new(cfg)?;
+    let report = trainer.run(schedule.as_mut())?;
+    let traffic = crate::stash::measure_state_traffic(trainer.state(), &p.stash())?;
+    Ok((report.bleu(), Some(traffic.meter.stash_write_bytes)))
 }

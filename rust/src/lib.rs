@@ -33,6 +33,7 @@ pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod schedule;
+pub mod stash;
 pub mod util;
 
 /// Crate-wide error type.

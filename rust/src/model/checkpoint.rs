@@ -146,6 +146,11 @@ enum TensorFraming<'a> {
 /// Already-packed tensors (in the target format, when one is given)
 /// write their payload untouched — bit-identity across save/load/save;
 /// dense tensors pack into `spec` (or ride as raw fp32 records).
+/// *Spilled* tensors (stash-store disk tier) stream their record bytes
+/// straight from the spill segment — the segment stores the exact
+/// [`crate::quant::PackedTensor::write_into`] record, so a checkpoint
+/// of a spilled state is byte-identical to one of the resident state
+/// without rehydrating any payload into DRAM.
 fn write_tensor_v2(
     w: &mut impl Write,
     name: &str,
@@ -158,6 +163,17 @@ fn write_tensor_v2(
     match (&t.data, spec) {
         (TensorData::Packed(p), None) => p.write_into(w),
         (TensorData::Packed(p), Some(s)) if p.spec() == *s => p.write_into(w),
+        (TensorData::Spilled(h), None) => {
+            w.write_all(&h.read_record()?)?;
+            Ok(())
+        }
+        (TensorData::Spilled(h), Some(s)) if h.spec == *s => {
+            w.write_all(&h.read_record()?)?;
+            Ok(())
+        }
+        (TensorData::Spilled(_), Some(_)) => Err(Error::Config(
+            "cannot repack a spilled tensor into another format: fetch it first".into(),
+        )),
         _ => {
             let s = spec.unwrap_or(&FormatSpec::Fp32);
             match t.pack_stream(s, step, stream)?.data {
@@ -221,7 +237,17 @@ fn save_with(
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let tmp = path.with_extension("tmp");
+    // Torn-write protection: the full file is staged next to the target
+    // (same filesystem, so the rename is atomic), fsync'd, then
+    // published. A crash mid-save — or mid-spill while a stash store is
+    // streaming records into the save — leaves at worst a stale `.tmp`
+    // beside an intact previous checkpoint, never a truncated
+    // `DSQCKPT2`. The suffix is appended (not substituted) so two
+    // checkpoints differing only in extension cannot share a stage file.
+    let tmp = match path.file_name() {
+        Some(name) => path.with_file_name(format!("{}.tmp", name.to_string_lossy())),
+        None => path.with_extension("tmp"),
+    };
     {
         let mut w = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
         w.write_all(match framing {
@@ -252,8 +278,11 @@ fn save_with(
             write_schedule_trailer(&mut w, s)?;
         }
         w.flush()?;
+        // Durability before visibility: the bytes must be on disk
+        // before the rename makes them the checkpoint.
+        w.get_ref().sync_all()?;
     }
-    std::fs::rename(&tmp, path)?; // atomic-ish publish
+    std::fs::rename(&tmp, path)?; // atomic publish
     Ok(())
 }
 
@@ -520,6 +549,84 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         assert!(load_checkpoint_full(&path, &mm()).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_write_cannot_corrupt_the_published_checkpoint() {
+        // Regression for the crash-mid-save story: the stage file is
+        // `<full name>.tmp` (appended, not substituted), garbage left by
+        // an interrupted save never shadows the real file, and a
+        // truncated checkpoint fails loudly instead of loading partial
+        // state.
+        let path = tmpfile("torn.bin");
+        let mut st = state();
+        st.pack_state(&FormatSpec::bfp(4)).unwrap();
+        save_checkpoint(&path, &st, &mm()).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // The stage path appends ".tmp" to the whole file name.
+        let stage = path.with_file_name(format!(
+            "{}.tmp",
+            path.file_name().unwrap().to_string_lossy()
+        ));
+        assert!(!stage.exists(), "a completed save leaves no stage file");
+
+        // Simulate a crash mid-save: a half-written stage file appears.
+        std::fs::write(&stage, &good[..good.len() / 2]).unwrap();
+        // The published checkpoint is untouched and still loads.
+        let back = load_checkpoint(&path, &mm()).unwrap();
+        assert_eq!(back.step, 42);
+        // The next save overwrites the stale stage and republishes.
+        save_checkpoint(&path, &st, &mm()).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), good, "resave is bit-identical");
+        assert!(!stage.exists());
+
+        // A genuinely torn file (truncated DSQCKPT2) must fail loudly,
+        // at every truncation point — header, mid-record, mid-trailer.
+        for cut in [4, 9, good.len() / 3, good.len() - 1] {
+            std::fs::write(&path, &good[..cut]).unwrap();
+            assert!(
+                load_checkpoint(&path, &mm()).is_err(),
+                "truncation at {cut}/{} bytes must not load",
+                good.len()
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn spilled_state_checkpoint_streams_records_bit_identically() {
+        use crate::stash::{StashBudget, StashStore};
+        // A fully spilled state must write the same checkpoint bytes as
+        // the resident packed state — records stream from the segment
+        // file without rehydration.
+        let spec = FormatSpec::bfp(4);
+        let mut resident = state();
+        resident.pack_state(&spec).unwrap();
+        let p1 = tmpfile("spill-resident.bin");
+        save_checkpoint(&p1, &resident, &mm()).unwrap();
+
+        let mut spilled = state();
+        let mut store = StashStore::ephemeral(spec, StashBudget::Bytes(0)).unwrap();
+        store.stash_state(&mut spilled).unwrap();
+        assert!(spilled.is_spilled() && spilled.is_packed());
+        assert_eq!(
+            spilled.storage_bytes(),
+            0,
+            "a fully spilled state occupies no DRAM"
+        );
+        let p2 = tmpfile("spill-streamed.bin");
+        save_checkpoint(&p2, &spilled, &mm()).unwrap();
+        assert_eq!(
+            std::fs::read(&p1).unwrap(),
+            std::fs::read(&p2).unwrap(),
+            "streamed and resident checkpoints must be byte-identical"
+        );
+        // And the streamed checkpoint loads back to the resident form.
+        let back = load_checkpoint(&p2, &mm()).unwrap();
+        assert_eq!(back.params, resident.params);
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
     }
 
     #[test]

@@ -116,11 +116,21 @@ impl ModelState {
         }
     }
 
-    /// True if any tensor is held in packed storage.
+    /// True if any tensor is held in packed storage — resident or
+    /// spilled (both write the v2 checkpoint framing).
     pub fn is_packed(&self) -> bool {
-        [&self.params, &self.m, &self.v]
-            .iter()
-            .any(|g| g.iter().any(|t| matches!(t.data, crate::runtime::TensorData::Packed(_))))
+        use crate::runtime::TensorData;
+        [&self.params, &self.m, &self.v].iter().any(|g| {
+            g.iter()
+                .any(|t| matches!(t.data, TensorData::Packed(_) | TensorData::Spilled(_)))
+        })
+    }
+
+    /// True if any tensor's payload is currently in a spill segment.
+    pub fn is_spilled(&self) -> bool {
+        [&self.params, &self.m, &self.v].iter().any(|g| {
+            g.iter().any(|t| matches!(t.data, crate::runtime::TensorData::Spilled(_)))
+        })
     }
 
     /// Bytes the state occupies at rest (packed tensors count their

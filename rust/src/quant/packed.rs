@@ -35,8 +35,8 @@
 //! * **bfp, width < 25** — per box of [`BOX`] elements (boxes never span
 //!   rows of `inner`, the last box of a row may be short): one biased
 //!   shared-exponent byte (`0` = degenerate box), then that box's
-//!   mantissa lanes, byte-aligned per box so a future mmap'd stash spill
-//!   can seek to any box.
+//!   mantissa lanes, byte-aligned per box so the stash store's spill
+//!   tier ([`crate::stash`]) can seek to any box of a spilled record.
 //! * **float (`e<E>m<M>`)** — per element, a `(1 + E + M)`-bit IEEE-754
 //!   style lane (sign, biased exponent field, mantissa; field 0 is the
 //!   subnormal/flush grid, the all-ones field is NaN — saturation means

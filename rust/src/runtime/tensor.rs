@@ -16,6 +16,7 @@
 use xla::{ArrayElement, Literal};
 
 use crate::quant::{Codec, FormatSpec, PackedTensor};
+use crate::stash::SpillHandle;
 use crate::{Error, Result};
 
 /// Element type tag.
@@ -41,6 +42,13 @@ pub enum TensorData {
     /// Physically packed storage (`quant::packed`); `shape` mirrors the
     /// packed record's shape.
     Packed(PackedTensor),
+    /// A packed tensor whose payload currently lives in a stash-store
+    /// spill segment on disk ([`crate::stash`]). The tensor keeps its
+    /// shape/format identity (manifest validation still works) but has
+    /// no local payload: any attempt to read it without fetching it
+    /// back through the owning `StashStore` errors loudly. Checkpoints
+    /// stream the record straight from the segment file.
+    Spilled(SpillHandle),
 }
 
 /// Minor-axis length the box-based formats quantize against: the last
@@ -63,6 +71,12 @@ impl HostTensor {
     /// Wrap an already-packed tensor (shape comes from the record).
     pub fn packed(p: PackedTensor) -> Self {
         HostTensor { shape: p.shape().to_vec(), data: TensorData::Packed(p) }
+    }
+
+    /// A spilled tensor: shape stays host-side, the payload lives in
+    /// the handle's spill segment (see [`crate::stash`]).
+    pub fn spilled(shape: Vec<usize>, h: SpillHandle) -> Self {
+        HostTensor { shape, data: TensorData::Spilled(h) }
     }
 
     pub fn scalar_f32(v: f32) -> Self {
@@ -106,6 +120,7 @@ impl HostTensor {
             TensorData::F32(v) => v.len(),
             TensorData::I32(v) => v.len(),
             TensorData::Packed(p) => p.len(),
+            TensorData::Spilled(_) => self.shape.iter().product(),
         }
     }
 
@@ -118,16 +133,21 @@ impl HostTensor {
             TensorData::F32(_) => Dtype::F32,
             TensorData::I32(_) => Dtype::I32,
             TensorData::Packed(p) => Dtype::Packed(p.spec()),
+            // A spilled tensor is logically packed in its format; only
+            // its residence differs.
+            TensorData::Spilled(h) => Dtype::Packed(h.spec),
         }
     }
 
-    /// Bytes this tensor occupies at rest (packed tensors report their
-    /// payload, which is what the stash-traffic claims are about).
+    /// Bytes this tensor occupies at rest *in host memory* (packed
+    /// tensors report their payload — what the stash-traffic claims are
+    /// about; spilled tensors occupy disk, not DRAM, and report 0).
     pub fn storage_bytes(&self) -> usize {
         match &self.data {
             TensorData::F32(v) => v.len() * 4,
             TensorData::I32(v) => v.len() * 4,
             TensorData::Packed(p) => p.packed_len(),
+            TensorData::Spilled(_) => 0,
         }
     }
 
@@ -152,6 +172,9 @@ impl HostTensor {
                 step,
                 stream,
             ))),
+            TensorData::Spilled(_) => Err(Error::Shape(
+                "cannot repack a spilled tensor: fetch it via the stash store first".into(),
+            )),
             TensorData::I32(_) => Err(Error::Shape("cannot pack an i32 tensor".into())),
         }
     }
@@ -161,7 +184,9 @@ impl HostTensor {
         self.pack_stream(spec, 0, 0)
     }
 
-    /// Decode to dense f32 (identity for dense tensors).
+    /// Decode to dense f32 (identity for dense tensors; a spilled
+    /// tensor has no local payload and is returned unchanged — fetch it
+    /// through the stash store first).
     pub fn unpack(&self) -> HostTensor {
         match &self.data {
             TensorData::Packed(p) => HostTensor::f32(self.shape.clone(), p.decode()),
@@ -175,6 +200,10 @@ impl HostTensor {
             TensorData::Packed(_) => {
                 Err(Error::Shape("packed tensor: unpack() before borrowing f32".into()))
             }
+            TensorData::Spilled(h) => Err(Error::Shape(format!(
+                "tensor is spilled to {:?}: fetch it via the stash store first",
+                h.path
+            ))),
             _ => Err(Error::Shape("expected f32 tensor".into())),
         }
     }
@@ -185,6 +214,10 @@ impl HostTensor {
             TensorData::Packed(_) => {
                 Err(Error::Shape("packed tensor: unpack() before borrowing f32".into()))
             }
+            TensorData::Spilled(h) => Err(Error::Shape(format!(
+                "tensor is spilled to {:?}: fetch it via the stash store first",
+                h.path
+            ))),
             _ => Err(Error::Shape("expected f32 tensor".into())),
         }
     }
@@ -213,6 +246,12 @@ impl HostTensor {
             TensorData::F32(v) => Literal::vec1(v.as_slice()),
             TensorData::I32(v) => Literal::vec1(v.as_slice()),
             TensorData::Packed(p) => Literal::vec1(p.decode().as_slice()),
+            TensorData::Spilled(h) => {
+                return Err(Error::Shape(format!(
+                    "tensor is spilled to {:?}: fetch it via the stash store before dispatch",
+                    h.path
+                )))
+            }
         };
         Ok(lit.reshape(&dims)?)
     }
@@ -320,6 +359,30 @@ mod tests {
         // Identical to the encode path, but built directly.
         let via_encode = HostTensor::f32(vec![2, 20], vec![0.0; 40]).pack(&spec).unwrap();
         assert_eq!(z, via_encode);
+    }
+
+    #[test]
+    fn spilled_tensor_keeps_identity_but_refuses_reads() {
+        let h = SpillHandle {
+            path: std::sync::Arc::new("/nonexistent/stash.seg".into()),
+            offset: 0,
+            record_len: 40,
+            payload_len: 4,
+            spec: FormatSpec::bfp(4),
+        };
+        let t = HostTensor::spilled(vec![2, 3], h);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.dtype(), Dtype::Packed(FormatSpec::bfp(4)));
+        assert_eq!(t.storage_bytes(), 0, "spilled payload is on disk, not in DRAM");
+        assert!(t.as_f32().is_err());
+        assert!(t.item_f32().is_err());
+        assert!(t.to_literal().is_err(), "the PJRT boundary must not page-fault silently");
+        assert!(t.pack(&FormatSpec::bfp(4)).is_err());
+        assert_eq!(t.unpack(), t, "unpack cannot materialize a spilled payload");
+        // zeros_like of a spilled tensor builds resident packed zeros.
+        let z = t.zeros_like();
+        assert_eq!(z.dtype(), Dtype::Packed(FormatSpec::bfp(4)));
+        assert!(z.storage_bytes() > 0);
     }
 
     #[test]

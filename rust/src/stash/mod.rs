@@ -1,0 +1,1142 @@
+//! The tiered stash store: every packed tensor the coordinator holds
+//! between the step that produces it and the step that consumes it is
+//! *owned* here — budgeted, spillable, and byte-accurately metered.
+//!
+//! PR 2's codec made stash bytes physically real; this module makes
+//! them *accountable*. A [`StashStore`] manages the model state's
+//! packed tensors across two tiers:
+//!
+//! * **resident** — [`PackedTensor`] payloads in host memory (the
+//!   DRAM-scale bytes the paper's 2.55× claim is about);
+//! * **spill** — a per-run segment file under the store's directory,
+//!   one seekable [`PackedTensor::write_into`] record per tensor (the
+//!   v2 packed-record layout, so every record — and through BFP's
+//!   per-box byte alignment, every box — stays independently
+//!   addressable). Spilling moves bytes out of DRAM without touching
+//!   their values: spill→readback is the identity on the payload.
+//!
+//! A byte budget ([`StashBudget`], CLI `--stash-budget`) caps the
+//! resident tier: when packed bytes exceed it, the coldest slots (LRU
+//! by the step of last touch, ties broken by slot order) spill to the
+//! segment file. Before the next dispatch a readback prefetcher
+//! ([`StashStore::start_prefetch`]) pulls spilled records back on a
+//! background thread — overlapping disk reads with the batch-generator
+//! wait, so the PJRT boundary never blocks on a cold read. The budget
+//! is a *residency* policy, never a numerics policy: a budgeted run's
+//! loss trajectory is bit-identical to the unbudgeted run's
+//! (property-tested in `tests/stash_spill.rs`, e2e-tested in
+//! `tests/coordinator_e2e.rs`).
+//!
+//! Every byte crossing a tier is counted by the [`TrafficMeter`]:
+//! stash writes/reads (packed payload bytes entering/leaving the
+//! resident tier around a step), spill writes/readbacks (full record
+//! bytes to/from disk), and checkpoint I/O. Alongside the observed
+//! bytes the meter accumulates the *modeled* bits
+//! (`FormatSpec::container_bits() × elements`, the cost model's number
+//! for the same events) plus the box-metadata allowance, so every run
+//! can print — and the tests can assert — modeled-vs-observed DRAM
+//! agreement the same way `audit_storage` pins `storage_bits()`
+//! against `packed_len()`.
+//!
+//! The spill tier uses plain positioned file I/O rather than a literal
+//! `mmap(2)` (a real mapping needs a platform crate this build
+//! intentionally avoids); the segment layout is mmap-ready — fixed
+//! offsets, self-describing records — so swapping the read path for a
+//! mapping is a local change. Checkpoints stream spilled records
+//! straight from the segment file ([`SpillHandle::read_record`])
+//! without rehydrating them into DRAM.
+//!
+//! The store also writes a small JSON index (`stash.json`) into its
+//! directory after every stash pass — per-slot tier/bytes/last-touch
+//! plus the meter — which is what the `dsq stash <dir>` inspector
+//! prints.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::model::ModelState;
+use crate::quant::{stash_stream, FormatSpec, PackedTensor};
+use crate::runtime::{HostTensor, TensorData};
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// Grammar of `--stash-budget` values, quoted by every parse error.
+pub const BUDGET_GRAMMAR: &str = "<bytes> | <n>k[i]b | <n>m[i]b | <n>g[i]b | unlimited";
+
+/// Resident-tier byte budget for a [`StashStore`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StashBudget {
+    /// No cap: everything stays resident (the spill tier never engages).
+    #[default]
+    Unlimited,
+    /// Cap resident packed bytes; the overflow spills coldest-first.
+    /// `Bytes(0)` spills every slot every step.
+    Bytes(u64),
+}
+
+impl StashBudget {
+    /// Parse a budget spec: a raw byte count (`"65536"`, `"0"`), a
+    /// suffixed size (`"256k"`, `"4mb"`, `"1gib"` — 1024-based), or
+    /// `"unlimited"`/`"none"`. Errors name the offending token and
+    /// quote the [`BUDGET_GRAMMAR`].
+    pub fn parse(s: &str) -> Result<StashBudget> {
+        let t = s.trim().to_ascii_lowercase();
+        if t.is_empty() {
+            return Err(Error::Config(format!(
+                "empty stash budget (expected: {BUDGET_GRAMMAR})"
+            )));
+        }
+        if matches!(t.as_str(), "unlimited" | "none" | "inf") {
+            return Ok(StashBudget::Unlimited);
+        }
+        let digits_end = t.find(|c: char| !c.is_ascii_digit()).unwrap_or(t.len());
+        let (digits, suffix) = t.split_at(digits_end);
+        if digits.is_empty() {
+            return Err(Error::Config(format!(
+                "bad stash budget '{s}': '{t}' does not start with a byte count \
+                 (expected: {BUDGET_GRAMMAR})"
+            )));
+        }
+        let n: u64 = digits.parse().map_err(|_| {
+            Error::Config(format!(
+                "bad stash budget '{s}': byte count '{digits}' does not fit u64 \
+                 (expected: {BUDGET_GRAMMAR})"
+            ))
+        })?;
+        let mult: u64 = match suffix {
+            "" | "b" => 1,
+            "k" | "kb" | "kib" => 1 << 10,
+            "m" | "mb" | "mib" => 1 << 20,
+            "g" | "gb" | "gib" => 1 << 30,
+            other => {
+                return Err(Error::Config(format!(
+                    "bad stash budget '{s}': unknown size suffix '{other}' \
+                     (expected: {BUDGET_GRAMMAR})"
+                )))
+            }
+        };
+        let bytes = n.checked_mul(mult).ok_or_else(|| {
+            Error::Config(format!(
+                "bad stash budget '{s}': {n}{suffix} overflows u64 bytes"
+            ))
+        })?;
+        Ok(StashBudget::Bytes(bytes))
+    }
+
+    /// True when `bytes` fits under the budget.
+    pub fn allows(&self, bytes: u64) -> bool {
+        match *self {
+            StashBudget::Unlimited => true,
+            StashBudget::Bytes(b) => bytes <= b,
+        }
+    }
+}
+
+impl std::fmt::Display for StashBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            StashBudget::Unlimited => f.write_str("unlimited"),
+            StashBudget::Bytes(b) => f.write_str(&fmt_bytes(b)),
+        }
+    }
+}
+
+/// Humanized byte count (1024-based).
+pub fn fmt_bytes(b: u64) -> String {
+    const K: f64 = 1024.0;
+    let bf = b as f64;
+    if bf >= K * K * K {
+        format!("{:.2} GiB", bf / (K * K * K))
+    } else if bf >= K * K {
+        format!("{:.2} MiB", bf / (K * K))
+    } else if bf >= K {
+        format!("{:.2} KiB", bf / K)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Byte-accurate traffic counters for one store (all monotone).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TrafficMeter {
+    /// Packed payload bytes written into the resident tier (the stash
+    /// write of each step: dense step outputs re-encoded to packed).
+    pub stash_write_bytes: u64,
+    /// Packed payload bytes read out of the resident tier for dispatch
+    /// (the stash read: decode at the PJRT boundary).
+    pub stash_read_bytes: u64,
+    /// Record bytes appended to the spill segment file.
+    pub spill_write_bytes: u64,
+    /// Record bytes read back from the spill segment file.
+    pub spill_read_bytes: u64,
+    /// Checkpoint bytes written through/around the store.
+    pub checkpoint_bytes: u64,
+    /// The cost model's counterpart of the stash write+read events:
+    /// `container_bits() × elements` summed over the same tensors the
+    /// observed counters saw.
+    pub modeled_stash_bits: f64,
+}
+
+impl TrafficMeter {
+    /// Observed DRAM-scale stash traffic in bits (write + read).
+    pub fn observed_stash_bits(&self) -> f64 {
+        (self.stash_write_bytes + self.stash_read_bytes) as f64 * 8.0
+    }
+
+    /// True when the spill tier carried any traffic.
+    pub fn spilled(&self) -> bool {
+        self.spill_write_bytes > 0 || self.spill_read_bytes > 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("stash_write_bytes", Json::num(self.stash_write_bytes as f64)),
+            ("stash_read_bytes", Json::num(self.stash_read_bytes as f64)),
+            ("spill_write_bytes", Json::num(self.spill_write_bytes as f64)),
+            ("spill_read_bytes", Json::num(self.spill_read_bytes as f64)),
+            ("checkpoint_bytes", Json::num(self.checkpoint_bytes as f64)),
+            ("modeled_stash_bits", Json::num(self.modeled_stash_bits)),
+            ("observed_stash_bits", Json::num(self.observed_stash_bits())),
+        ])
+    }
+}
+
+/// A run's stash-traffic report: the meter plus everything needed to
+/// judge modeled-vs-observed agreement. Carried on `RunReport::stash`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StashTraffic {
+    pub spec: FormatSpec,
+    pub budget: StashBudget,
+    pub meter: TrafficMeter,
+    /// Box-metadata slack accumulated over the metered events (the same
+    /// per-tensor allowance `FormatSpec::audit_storage` grants).
+    pub allowance_bits: f64,
+}
+
+impl StashTraffic {
+    /// Modeled-vs-observed gap in bits.
+    pub fn gap_bits(&self) -> f64 {
+        (self.meter.observed_stash_bits() - self.meter.modeled_stash_bits).abs()
+    }
+
+    /// True when the observed stash bytes agree with the cost model
+    /// within box-metadata slack — the run-level `audit_storage`.
+    pub fn agrees(&self) -> bool {
+        self.gap_bits() <= self.allowance_bits
+    }
+
+    /// The modeled-vs-observed line every stashed run prints.
+    pub fn summary(&self) -> String {
+        let m = &self.meter;
+        let modeled = m.modeled_stash_bits;
+        let observed = m.observed_stash_bits();
+        let gap_pct = if modeled > 0.0 { self.gap_bits() / modeled * 100.0 } else { 0.0 };
+        format!(
+            "stash ({}, budget {}): DRAM modeled {:.3} Mbit observed {:.3} Mbit \
+             (gap {:.2}%); spill wrote {} read {}; checkpoints {}",
+            self.spec,
+            self.budget,
+            modeled / 1e6,
+            observed / 1e6,
+            gap_pct,
+            fmt_bytes(m.spill_write_bytes),
+            fmt_bytes(m.spill_read_bytes),
+            fmt_bytes(m.checkpoint_bytes),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("spec", Json::str(&self.spec.spec_string())),
+            ("budget", Json::str(&self.budget.to_string())),
+            ("traffic", self.meter.to_json()),
+            ("allowance_bits", Json::num(self.allowance_bits)),
+            ("agrees", Json::Bool(self.agrees())),
+        ])
+    }
+}
+
+/// Handle to a spilled tensor's record inside a segment file. Lives in
+/// `TensorData::Spilled`, so a spilled slot keeps its shape/spec
+/// identity (and validates against the manifest) while its payload is
+/// on disk. Reading it back requires either the owning [`StashStore`]
+/// (metered) or, for checkpoint streaming, [`SpillHandle::read_record`]
+/// directly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpillHandle {
+    /// Segment file holding the record.
+    pub path: Arc<PathBuf>,
+    /// Byte offset of the record inside the segment.
+    pub offset: u64,
+    /// Full record length (header + payload).
+    pub record_len: usize,
+    /// Payload bytes (what the resident tier would occupy).
+    pub payload_len: usize,
+    /// Format the payload is packed in.
+    pub spec: FormatSpec,
+}
+
+impl SpillHandle {
+    /// Raw record bytes — exactly what [`PackedTensor::write_into`]
+    /// produced, so checkpoints can stream a spilled tensor to disk
+    /// byte-for-byte without rehydrating it.
+    pub fn read_record(&self) -> Result<Vec<u8>> {
+        let mut f = File::open(self.path.as_path())?;
+        f.seek(SeekFrom::Start(self.offset))?;
+        let mut buf = vec![0u8; self.record_len];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Read and decode the record back into a [`PackedTensor`]
+    /// (validated by the record reader).
+    pub fn read_tensor(&self) -> Result<PackedTensor> {
+        PackedTensor::read_from(&mut self.read_record()?.as_slice())
+    }
+}
+
+/// Append-only segment file of packed-tensor records.
+struct SpillFile {
+    path: Arc<PathBuf>,
+    file: File,
+    cursor: u64,
+}
+
+impl SpillFile {
+    fn create(path: PathBuf) -> Result<SpillFile> {
+        let file =
+            OpenOptions::new().read(true).write(true).create(true).truncate(true).open(&path)?;
+        Ok(SpillFile { path: Arc::new(path), file, cursor: 0 })
+    }
+
+    /// Append one record; returns the handle addressing it.
+    fn append(&mut self, p: &PackedTensor) -> Result<SpillHandle> {
+        let mut buf = Vec::with_capacity(p.record_len());
+        p.write_into(&mut buf)?;
+        self.file.seek(SeekFrom::Start(self.cursor))?;
+        self.file.write_all(&buf)?;
+        let h = SpillHandle {
+            path: self.path.clone(),
+            offset: self.cursor,
+            record_len: buf.len(),
+            payload_len: p.packed_len(),
+            spec: p.spec(),
+        };
+        self.cursor += buf.len() as u64;
+        Ok(h)
+    }
+
+    /// Rewind the write cursor. Only legal when no live handle
+    /// references the file (the store checks) — keeps an all-spill run's
+    /// segment at one step's working set instead of growing per step.
+    fn rewind(&mut self) {
+        self.cursor = 0;
+    }
+}
+
+/// Per-slot bookkeeping (tensors themselves live in the `ModelState`).
+struct SlotMeta {
+    label: String,
+    /// Step of last touch (the LRU key).
+    last_touch: u64,
+}
+
+/// Store configuration.
+#[derive(Clone, Debug)]
+pub struct StashStoreConfig {
+    /// Format every stashed tensor is packed in.
+    pub spec: FormatSpec,
+    /// Resident-tier byte cap.
+    pub budget: StashBudget,
+    /// Run directory for the spill segment + `stash.json` index.
+    pub dir: PathBuf,
+}
+
+/// Sequence counter for default (per-run temp) store directories.
+static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// What the readback prefetcher thread returns: (slot id, tensor)
+/// pairs, or an error string (errors cross the thread as strings so
+/// the handle type stays `Send` without constraining `Error`).
+type PrefetchResult = std::result::Result<Vec<(usize, PackedTensor)>, String>;
+
+/// The tiered stash store (see the module docs).
+pub struct StashStore {
+    spec: FormatSpec,
+    budget: StashBudget,
+    dir: PathBuf,
+    /// True when `dir` is a generated temp dir the store may delete.
+    ephemeral: bool,
+    spill: Option<SpillFile>,
+    meter: TrafficMeter,
+    allowance_bits: f64,
+    slots: Vec<SlotMeta>,
+    /// In-flight readback.
+    prefetch: Option<JoinHandle<PrefetchResult>>,
+}
+
+const INDEX_FILE: &str = "stash.json";
+const SEGMENT_FILE: &str = "stash.seg";
+
+fn slot_count(state: &ModelState) -> usize {
+    3 * state.params.len()
+}
+
+fn group_of(state: &ModelState, g: usize) -> &[HostTensor] {
+    match g {
+        0 => &state.params,
+        1 => &state.m,
+        _ => &state.v,
+    }
+}
+
+fn tensor_of(state: &ModelState, n: usize, id: usize) -> &HostTensor {
+    let (g, i) = (id / n, id % n);
+    &group_of(state, g)[i]
+}
+
+fn tensor_mut(state: &mut ModelState, n: usize, id: usize) -> &mut HostTensor {
+    let (g, i) = (id / n, id % n);
+    match g {
+        0 => &mut state.params[i],
+        1 => &mut state.m[i],
+        _ => &mut state.v[i],
+    }
+}
+
+impl StashStore {
+    pub fn new(cfg: StashStoreConfig) -> Result<StashStore> {
+        Self::with_ephemeral(cfg, false)
+    }
+
+    fn with_ephemeral(cfg: StashStoreConfig, ephemeral: bool) -> Result<StashStore> {
+        std::fs::create_dir_all(&cfg.dir)?;
+        Ok(StashStore {
+            spec: cfg.spec,
+            budget: cfg.budget,
+            dir: cfg.dir,
+            ephemeral,
+            spill: None,
+            meter: TrafficMeter::default(),
+            allowance_bits: 0.0,
+            slots: Vec::new(),
+            prefetch: None,
+        })
+    }
+
+    /// A store in a fresh per-run temp directory (removed on drop).
+    pub fn ephemeral(spec: FormatSpec, budget: StashBudget) -> Result<StashStore> {
+        let dir = std::env::temp_dir().join(format!(
+            "dsq-stash-{}-{}",
+            std::process::id(),
+            STORE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        Self::with_ephemeral(StashStoreConfig { spec, budget, dir }, true)
+    }
+
+    pub fn spec(&self) -> FormatSpec {
+        self.spec
+    }
+
+    pub fn budget(&self) -> StashBudget {
+        self.budget
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Snapshot of the traffic counters.
+    pub fn traffic(&self) -> TrafficMeter {
+        self.meter
+    }
+
+    /// The run-level traffic report (for `RunReport::stash`).
+    pub fn traffic_report(&self) -> StashTraffic {
+        StashTraffic {
+            spec: self.spec,
+            budget: self.budget,
+            meter: self.meter,
+            allowance_bits: self.allowance_bits,
+        }
+    }
+
+    /// Human labels for the slot table (`params/<name>` etc.); sized
+    /// lazily from the first state otherwise.
+    pub fn set_param_names(&mut self, names: &[&str]) {
+        self.slots = ["params", "m", "v"]
+            .iter()
+            .flat_map(|g| {
+                names.iter().map(move |n| SlotMeta { label: format!("{g}/{n}"), last_touch: 0 })
+            })
+            .collect();
+    }
+
+    fn ensure_slots(&mut self, state: &ModelState) {
+        let want = slot_count(state);
+        if self.slots.len() != want {
+            self.slots = (0..want)
+                .map(|id| {
+                    let (g, i) = (id / state.params.len(), id % state.params.len());
+                    SlotMeta {
+                        label: format!("{}/{}", ["params", "m", "v"][g], i),
+                        last_touch: 0,
+                    }
+                })
+                .collect();
+        }
+    }
+
+    /// Count one packed tensor crossing the resident tier, in both
+    /// currencies: observed payload bytes and modeled container bits
+    /// (plus the audit allowance for the gap between them).
+    fn note_event(&mut self, p: &PackedTensor, write: bool) {
+        let bytes = p.packed_len() as u64;
+        if write {
+            self.meter.stash_write_bytes += bytes;
+        } else {
+            self.meter.stash_read_bytes += bytes;
+        }
+        self.meter.modeled_stash_bits += self.spec.container_bits() * p.len() as f64;
+        self.allowance_bits += self.spec.storage_allowance_bits(p.len(), p.inner());
+    }
+
+    /// Stash the state after a step: pack every dense tensor into the
+    /// store's format (metering the writes), touch the LRU clock, then
+    /// enforce the budget by spilling the coldest resident slots. The
+    /// `(step, stream)` scheme matches `ModelState::pack_state`, so a
+    /// store-managed state packs bit-identically to the pre-store path.
+    pub fn stash_state(&mut self, state: &mut ModelState) -> Result<()> {
+        self.ensure_slots(state);
+        self.join_prefetch()?; // a stale prefetch must not race the spill file
+        let step = state.step;
+        let n = state.params.len();
+        // If nothing currently lives in the segment file, every record
+        // in it is garbage from overwritten steps — reuse the space.
+        let any_spilled = (0..slot_count(state))
+            .any(|id| matches!(tensor_of(state, n, id).data, TensorData::Spilled(_)));
+        if !any_spilled {
+            if let Some(f) = &mut self.spill {
+                f.rewind();
+            }
+        }
+        for g in 0..3 {
+            for i in 0..n {
+                let id = g * n + i;
+                // Dense tensors (and tensors packed in a foreign format)
+                // get re-encoded into the store's format — a stash
+                // write. Slots already at rest in the store's format
+                // (resident or spilled) cross no tier.
+                let needs_pack = match &tensor_of(state, n, id).data {
+                    TensorData::F32(_) => true,
+                    TensorData::Packed(p) => p.spec() != self.spec,
+                    // A spilled slot in the store's format is at rest; a
+                    // foreign-format handle cannot be repacked from disk
+                    // — fail loudly like every other un-fetched read.
+                    TensorData::Spilled(h) if h.spec == self.spec => false,
+                    TensorData::Spilled(h) => {
+                        return Err(Error::Shape(format!(
+                            "slot is spilled in {} but this store packs {}: fetch it \
+                             before re-stashing",
+                            h.spec, self.spec
+                        )))
+                    }
+                    TensorData::I32(_) => {
+                        return Err(Error::Shape(
+                            "stash store cannot hold an i32 tensor".into(),
+                        ))
+                    }
+                };
+                if needs_pack {
+                    let t = tensor_mut(state, n, id);
+                    let packed = t.pack_stream(&self.spec, step, stash_stream(g, i))?;
+                    if let TensorData::Packed(p) = &packed.data {
+                        self.note_event(p, true);
+                    }
+                    *t = packed;
+                }
+                self.slots[id].last_touch = step;
+            }
+        }
+        self.enforce_budget(state)?;
+        self.write_index(state)?;
+        Ok(())
+    }
+
+    /// Resident packed payload bytes of the state.
+    pub fn resident_bytes(state: &ModelState) -> u64 {
+        (0..3)
+            .flat_map(|g| group_of(state, g))
+            .map(|t| match &t.data {
+                TensorData::Packed(p) => p.packed_len() as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Spilled payload bytes (on disk) of the state.
+    pub fn spilled_bytes(state: &ModelState) -> u64 {
+        (0..3)
+            .flat_map(|g| group_of(state, g))
+            .map(|t| match &t.data {
+                TensorData::Spilled(h) => h.payload_len as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Spill coldest-first until the resident tier fits the budget.
+    fn enforce_budget(&mut self, state: &mut ModelState) -> Result<()> {
+        let StashBudget::Bytes(budget) = self.budget else { return Ok(()) };
+        let n = state.params.len();
+        while Self::resident_bytes(state) > budget {
+            // Coldest resident slot: min (last_touch, id).
+            let victim = (0..slot_count(state))
+                .filter(|&id| matches!(tensor_of(state, n, id).data, TensorData::Packed(_)))
+                .min_by_key(|&id| (self.slots[id].last_touch, id));
+            let Some(id) = victim else { break };
+            if self.spill.is_none() {
+                self.spill = Some(SpillFile::create(self.dir.join(SEGMENT_FILE))?);
+            }
+            let file = self.spill.as_mut().expect("just created");
+            let t = tensor_mut(state, n, id);
+            let TensorData::Packed(p) = &t.data else { unreachable!("victim is resident") };
+            let handle = file.append(p)?;
+            self.meter.spill_write_bytes += handle.record_len as u64;
+            let shape = t.shape.clone();
+            *t = HostTensor::spilled(shape, handle);
+        }
+        Ok(())
+    }
+
+    /// Bring every spilled slot back to the resident tier (draining the
+    /// prefetch thread first, falling back to synchronous reads), so the
+    /// next dispatch sees a fully materialized state. Metered as spill
+    /// readback; values are bit-identical to what was spilled.
+    pub fn fetch_state(&mut self, state: &mut ModelState) -> Result<()> {
+        let mut ready: HashMap<usize, PackedTensor> = HashMap::new();
+        if let Some(h) = self.prefetch.take() {
+            let got = h
+                .join()
+                .map_err(|_| Error::Config("stash prefetch thread panicked".into()))?
+                .map_err(Error::Config)?;
+            ready.extend(got);
+        }
+        let n = state.params.len();
+        for id in 0..slot_count(state) {
+            let t = tensor_mut(state, n, id);
+            let TensorData::Spilled(h) = &t.data else { continue };
+            let record_len = h.record_len as u64;
+            let p = match ready.remove(&id) {
+                Some(p) => p,
+                None => h.read_tensor()?,
+            };
+            self.meter.spill_read_bytes += record_len;
+            *t = HostTensor::packed(p);
+        }
+        Ok(())
+    }
+
+    /// Meter the packed bytes about to cross the PJRT boundary as step
+    /// inputs (the stash *read* of the write/read cycle). Call after
+    /// [`StashStore::fetch_state`], before dispatch.
+    pub fn note_dispatch_read(&mut self, state: &ModelState) {
+        for g in 0..3 {
+            for t in group_of(state, g) {
+                if let TensorData::Packed(p) = &t.data {
+                    self.note_event(p, false);
+                }
+            }
+        }
+    }
+
+    /// Account checkpoint bytes written for this run.
+    pub fn note_checkpoint_bytes(&mut self, bytes: u64) {
+        self.meter.checkpoint_bytes += bytes;
+    }
+
+    /// Kick off the readback prefetcher for the state's spilled slots
+    /// on a background thread (no-op when nothing is spilled). The next
+    /// [`StashStore::fetch_state`] drains it, so the disk reads overlap
+    /// the batch-generator wait instead of stalling dispatch.
+    pub fn start_prefetch(&mut self, state: &ModelState) {
+        if self.prefetch.is_some() {
+            return; // previous prefetch not yet drained
+        }
+        let n = state.params.len();
+        let handles: Vec<(usize, SpillHandle)> = (0..slot_count(state))
+            .filter_map(|id| {
+                let (g, i) = (id / n, id % n);
+                match &group_of(state, g)[i].data {
+                    TensorData::Spilled(h) => Some((id, h.clone())),
+                    _ => None,
+                }
+            })
+            .collect();
+        if handles.is_empty() {
+            return;
+        }
+        self.prefetch = Some(std::thread::spawn(move || {
+            handles
+                .into_iter()
+                .map(|(id, h)| h.read_tensor().map(|p| (id, p)).map_err(|e| e.to_string()))
+                .collect()
+        }));
+    }
+
+    fn join_prefetch(&mut self) -> Result<()> {
+        if let Some(h) = self.prefetch.take() {
+            h.join()
+                .map_err(|_| Error::Config("stash prefetch thread panicked".into()))?
+                .map_err(Error::Config)?;
+        }
+        Ok(())
+    }
+
+    /// Write the `stash.json` index: per-slot residency + the meter —
+    /// what `dsq stash <dir>` prints.
+    fn write_index(&self, state: &ModelState) -> Result<()> {
+        let n = state.params.len();
+        let slots = (0..slot_count(state)).map(|id| {
+            let (g, i) = (id / n, id % n);
+            let t = &group_of(state, g)[i];
+            let (tier, bytes) = match &t.data {
+                TensorData::Packed(p) => ("resident", p.packed_len()),
+                TensorData::Spilled(h) => ("spilled", h.payload_len),
+                TensorData::F32(v) => ("dense", v.len() * 4),
+                TensorData::I32(v) => ("dense", v.len() * 4),
+            };
+            Json::obj(vec![
+                ("slot", Json::str(&self.slots[id].label)),
+                (
+                    "shape",
+                    Json::arr(t.shape.iter().map(|&d| Json::num(d as f64))),
+                ),
+                ("tier", Json::str(tier)),
+                ("bytes", Json::num(bytes as f64)),
+                ("last_touch", Json::num(self.slots[id].last_touch as f64)),
+            ])
+        });
+        let idx = Json::obj(vec![
+            ("spec", Json::str(&self.spec.spec_string())),
+            ("budget", Json::str(&self.budget.to_string())),
+            ("step", Json::num(state.step as f64)),
+            ("resident_bytes", Json::num(Self::resident_bytes(state) as f64)),
+            ("spilled_bytes", Json::num(Self::spilled_bytes(state) as f64)),
+            ("slots", Json::arr(slots)),
+            ("traffic", self.meter.to_json()),
+        ]);
+        std::fs::write(self.dir.join(INDEX_FILE), idx.to_string_pretty())?;
+        Ok(())
+    }
+}
+
+impl Drop for StashStore {
+    fn drop(&mut self) {
+        if let Some(h) = self.prefetch.take() {
+            h.join().ok();
+        }
+        if self.ephemeral {
+            std::fs::remove_dir_all(&self.dir).ok();
+        }
+    }
+}
+
+/// One synthetic stash round trip of `state` (a clone; the input is
+/// untouched) through a fresh ephemeral store: pack + dispatch-read at
+/// `spec`, returning the measured traffic. This is the "measured
+/// column" the experiments report next to the modeled numbers.
+pub fn measure_state_traffic(state: &ModelState, spec: &FormatSpec) -> Result<StashTraffic> {
+    if state.is_spilled() {
+        // unpack_state cannot materialize spilled payloads, so the
+        // measurement would silently see no bytes — refuse instead.
+        return Err(Error::Config(
+            "cannot measure a spilled state: fetch it through its stash store first".into(),
+        ));
+    }
+    let mut st = state.clone();
+    let mut store = StashStore::ephemeral(*spec, StashBudget::Unlimited)?;
+    // Force a real write even if the state is already packed in `spec`.
+    st.unpack_state();
+    store.stash_state(&mut st)?;
+    store.note_dispatch_read(&st);
+    Ok(store.traffic_report())
+}
+
+/// The `audit_storage` sibling for traffic: one synthetic step through
+/// the store must report stash bytes equal to the codec's
+/// `packed_len()` exactly, and agree with the cost model's
+/// `container_bits()` within box-metadata slack. Shapes include a
+/// ragged minor axis so the short-trailing-box paths are pinned too.
+pub fn audit_observed_traffic(spec: &FormatSpec) -> std::result::Result<(), String> {
+    let mk = |shape: &[usize], fill: f32| {
+        let len: usize = shape.iter().product();
+        HostTensor::f32(shape.to_vec(), (0..len).map(|i| (i as f32 - 7.0) * fill).collect())
+    };
+    // A ragged (21-wide) matrix, a vector, and a scalar.
+    let params = vec![mk(&[3, 21], 0.37), mk(&[5], 1.25), HostTensor::f32(vec![], vec![2.5])];
+    let zeros: Vec<HostTensor> = params.iter().map(HostTensor::zeros_like).collect();
+    let mut state = ModelState { params, m: zeros.clone(), v: zeros, step: 1 };
+    let expected: u64 = state
+        .params
+        .iter()
+        .map(|t| {
+            let inner = t.shape.last().copied().filter(|&d| d > 0).unwrap_or(1);
+            3 * spec.observed_bytes(t.len(), inner) as u64 // params + m + v
+        })
+        .sum();
+    let mut store =
+        StashStore::ephemeral(*spec, StashBudget::Unlimited).map_err(|e| e.to_string())?;
+    store.stash_state(&mut state).map_err(|e| e.to_string())?;
+    store.note_dispatch_read(&state);
+    let t = store.traffic_report();
+    if t.meter.stash_write_bytes != expected {
+        return Err(format!(
+            "{spec}: store reported {} stash-write bytes, codec packs {expected}",
+            t.meter.stash_write_bytes
+        ));
+    }
+    if t.meter.stash_read_bytes != expected {
+        return Err(format!(
+            "{spec}: store reported {} stash-read bytes, codec packs {expected}",
+            t.meter.stash_read_bytes
+        ));
+    }
+    if !t.agrees() {
+        return Err(format!(
+            "{spec}: observed {} bits vs modeled {} bits; gap {} > allowance {}",
+            t.meter.observed_stash_bits(),
+            t.meter.modeled_stash_bits,
+            t.gap_bits(),
+            t.allowance_bits
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::registered_specs;
+
+    fn state_of(tensors: Vec<HostTensor>) -> ModelState {
+        let zeros: Vec<HostTensor> = tensors.iter().map(HostTensor::zeros_like).collect();
+        ModelState { params: tensors, m: zeros.clone(), v: zeros, step: 1 }
+    }
+
+    fn demo_state() -> ModelState {
+        state_of(vec![
+            HostTensor::f32(vec![4, 16], (0..64).map(|x| x as f32 * 0.3 - 9.0).collect()),
+            HostTensor::f32(vec![2, 21], (0..42).map(|x| (x as f32).sin() * 3.0).collect()),
+        ])
+    }
+
+    #[test]
+    fn budget_parse_accepts_the_grammar() {
+        assert_eq!(StashBudget::parse("unlimited").unwrap(), StashBudget::Unlimited);
+        assert_eq!(StashBudget::parse("none").unwrap(), StashBudget::Unlimited);
+        assert_eq!(StashBudget::parse("0").unwrap(), StashBudget::Bytes(0));
+        assert_eq!(StashBudget::parse("65536").unwrap(), StashBudget::Bytes(65536));
+        assert_eq!(StashBudget::parse("64k").unwrap(), StashBudget::Bytes(64 << 10));
+        assert_eq!(StashBudget::parse("64kb").unwrap(), StashBudget::Bytes(64 << 10));
+        assert_eq!(StashBudget::parse("4MiB").unwrap(), StashBudget::Bytes(4 << 20));
+        assert_eq!(StashBudget::parse(" 2g ").unwrap(), StashBudget::Bytes(2 << 30));
+        assert_eq!(StashBudget::parse("100b").unwrap(), StashBudget::Bytes(100));
+    }
+
+    #[test]
+    fn budget_parse_errors_name_the_token_and_the_grammar() {
+        // The satellite contract: a bad spec must say *which token* broke
+        // and list the valid forms, not fail bare.
+        let err = |s: &str| match StashBudget::parse(s) {
+            Err(Error::Config(m)) => m,
+            other => panic!("'{s}' should be Error::Config, got {other:?}"),
+        };
+        let m = err("64x");
+        assert!(m.contains("'x'"), "names the bad suffix: {m}");
+        assert!(m.contains(BUDGET_GRAMMAR), "lists the grammar: {m}");
+        let m = err("lots");
+        assert!(m.contains("lots") && m.contains(BUDGET_GRAMMAR), "{m}");
+        let m = err("");
+        assert!(m.contains("empty") && m.contains(BUDGET_GRAMMAR), "{m}");
+        let m = err("99999999999999999999999b");
+        assert!(m.contains("u64"), "names the overflow: {m}");
+        let m = err("k");
+        assert!(m.contains("byte count"), "{m}");
+        // Multiplied overflow is caught too.
+        assert!(StashBudget::parse("99999999999g").is_err());
+    }
+
+    #[test]
+    fn budget_display_and_allows() {
+        assert_eq!(StashBudget::Unlimited.to_string(), "unlimited");
+        assert_eq!(StashBudget::Bytes(512).to_string(), "512 B");
+        assert_eq!(StashBudget::Bytes(4 << 20).to_string(), "4.00 MiB");
+        assert!(StashBudget::Unlimited.allows(u64::MAX));
+        assert!(StashBudget::Bytes(10).allows(10));
+        assert!(!StashBudget::Bytes(10).allows(11));
+    }
+
+    #[test]
+    fn unbudgeted_store_keeps_everything_resident() {
+        let mut st = demo_state();
+        let mut store = StashStore::ephemeral(FormatSpec::bfp(4), StashBudget::Unlimited).unwrap();
+        store.stash_state(&mut st).unwrap();
+        assert!(st.is_packed());
+        assert_eq!(StashStore::spilled_bytes(&st), 0);
+        assert!(!store.traffic().spilled());
+        assert!(store.traffic().stash_write_bytes > 0);
+        // And the index exists for the inspector.
+        assert!(store.dir().join("stash.json").exists());
+        // Unbudgeted runs agree with the cost model within box metadata.
+        store.note_dispatch_read(&st);
+        assert!(store.traffic_report().agrees(), "{:?}", store.traffic_report());
+    }
+
+    #[test]
+    fn zero_budget_spills_every_slot_and_readback_is_bit_identical() {
+        let mut st = demo_state();
+        let spec = FormatSpec::bfp(4);
+        // Reference: what the pre-store pack path produces.
+        let mut want = demo_state();
+        want.pack_state(&spec).unwrap();
+
+        let mut store = StashStore::ephemeral(spec, StashBudget::Bytes(0)).unwrap();
+        store.stash_state(&mut st).unwrap();
+        assert_eq!(StashStore::resident_bytes(&st), 0, "budget 0 must spill everything");
+        assert!(StashStore::spilled_bytes(&st) > 0);
+        assert!(store.traffic().spill_write_bytes > 0);
+        assert!(st.params.iter().all(|t| matches!(t.data, TensorData::Spilled(_))));
+
+        store.fetch_state(&mut st).unwrap();
+        assert!(store.traffic().spill_read_bytes > 0);
+        assert_eq!(
+            store.traffic().spill_read_bytes,
+            store.traffic().spill_write_bytes,
+            "every spilled record read back exactly once"
+        );
+        for (a, b) in st.params.iter().zip(&want.params) {
+            assert_eq!(a, b, "spill -> readback must be bit-identical to pack_state");
+        }
+        for (a, b) in st.v.iter().zip(&want.v) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn partial_budget_spills_coldest_first_and_respects_the_cap() {
+        let mut st = demo_state();
+        let spec = FormatSpec::fixed(8);
+        // Budget sized to hold some but not all of the six slots.
+        let mut probe = demo_state();
+        probe.pack_state(&spec).unwrap();
+        let total = StashStore::resident_bytes(&probe);
+        let budget = total / 2;
+        let mut store = StashStore::ephemeral(spec, StashBudget::Bytes(budget)).unwrap();
+        store.stash_state(&mut st).unwrap();
+        assert!(StashStore::resident_bytes(&st) <= budget);
+        assert!(StashStore::spilled_bytes(&st) > 0);
+        // All slots share last_touch (whole-state stash), so the tie
+        // break is slot order: params spill before v.
+        assert!(
+            matches!(st.params[0].data, TensorData::Spilled(_)),
+            "lowest slot id spills first on an LRU tie"
+        );
+        assert!(
+            matches!(st.v.last().unwrap().data, TensorData::Packed(_)),
+            "highest slot id stays resident"
+        );
+    }
+
+    #[test]
+    fn lru_spills_the_coldest_slot() {
+        let mut st = demo_state();
+        let spec = FormatSpec::fixed(8);
+        let mut store = StashStore::ephemeral(spec, StashBudget::Unlimited).unwrap();
+        store.stash_state(&mut st).unwrap();
+        // Warm every slot except params[0] at a later step.
+        st.step = 5;
+        for s in store.slots.iter_mut().skip(1) {
+            s.last_touch = 5;
+        }
+        // Now force a one-victim budget pass.
+        store.budget = StashBudget::Bytes(StashStore::resident_bytes(&st) - 1);
+        store.enforce_budget(&mut st).unwrap();
+        assert!(
+            matches!(st.params[0].data, TensorData::Spilled(_)),
+            "the stale slot is the victim"
+        );
+        assert_eq!(
+            st.params.iter().chain(&st.m).chain(&st.v).filter(|t| matches!(
+                t.data,
+                TensorData::Spilled(_)
+            ))
+            .count(),
+            1
+        );
+    }
+
+    #[test]
+    fn segment_file_does_not_grow_across_steps() {
+        // An all-spill loop rewrites the whole working set each step;
+        // the rewind keeps the segment at one step's size.
+        let spec = FormatSpec::bfp(8);
+        let mut store = StashStore::ephemeral(spec, StashBudget::Bytes(0)).unwrap();
+        let mut sizes = Vec::new();
+        for step in 1..=3u64 {
+            let mut st = demo_state();
+            st.step = step;
+            store.stash_state(&mut st).unwrap();
+            store.fetch_state(&mut st).unwrap();
+            // Dense overwrite (as absorb_step_output would do).
+            st.unpack_state();
+            store.stash_state(&mut st).unwrap();
+            sizes.push(std::fs::metadata(store.dir().join("stash.seg")).unwrap().len());
+        }
+        assert_eq!(sizes[0], sizes[1]);
+        assert_eq!(sizes[1], sizes[2]);
+    }
+
+    #[test]
+    fn prefetch_overlaps_and_matches_sync_readback() {
+        let spec = FormatSpec::fixed_sr(6);
+        let mut a = demo_state();
+        let mut b = demo_state();
+        let mut store_a = StashStore::ephemeral(spec, StashBudget::Bytes(0)).unwrap();
+        let mut store_b = StashStore::ephemeral(spec, StashBudget::Bytes(0)).unwrap();
+        store_a.stash_state(&mut a).unwrap();
+        store_b.stash_state(&mut b).unwrap();
+        store_a.start_prefetch(&a); // background readback
+        store_a.fetch_state(&mut a).unwrap(); // drains the thread
+        store_b.fetch_state(&mut b).unwrap(); // pure sync path
+        assert_eq!(a.params, b.params, "prefetched and sync readback agree");
+        assert_eq!(a.m, b.m);
+        assert_eq!(
+            store_a.traffic().spill_read_bytes,
+            store_b.traffic().spill_read_bytes
+        );
+    }
+
+    #[test]
+    fn spilled_checkpoint_handle_streams_the_exact_record() {
+        let spec = FormatSpec::bfp(4);
+        let mut st = demo_state();
+        let mut store = StashStore::ephemeral(spec, StashBudget::Bytes(0)).unwrap();
+        // What the record must look like.
+        let want = {
+            let t = &demo_state().params[0];
+            let p = t.pack_stream(&spec, 1, stash_stream(0, 0)).unwrap();
+            let TensorData::Packed(p) = p.data else { unreachable!() };
+            let mut buf = Vec::new();
+            p.write_into(&mut buf).unwrap();
+            buf
+        };
+        store.stash_state(&mut st).unwrap();
+        let TensorData::Spilled(h) = &st.params[0].data else {
+            panic!("params[0] should be spilled")
+        };
+        assert_eq!(h.read_record().unwrap(), want, "streamed record is byte-exact");
+        assert_eq!(h.payload_len, h.record_len - (8 + 4 + 8 * 2 + 8));
+    }
+
+    #[test]
+    fn empty_and_scalar_tensors_round_trip_through_the_spill_tier() {
+        let spec = FormatSpec::fixed(4);
+        let mut st = state_of(vec![
+            HostTensor::f32(vec![0, 5], vec![]),
+            HostTensor::f32(vec![], vec![2.75]),
+        ]);
+        let mut want = state_of(vec![
+            HostTensor::f32(vec![0, 5], vec![]),
+            HostTensor::f32(vec![], vec![2.75]),
+        ]);
+        want.pack_state(&spec).unwrap();
+        let mut store = StashStore::ephemeral(spec, StashBudget::Bytes(0)).unwrap();
+        store.stash_state(&mut st).unwrap();
+        store.fetch_state(&mut st).unwrap();
+        assert_eq!(st.params, want.params);
+    }
+
+    #[test]
+    fn audit_observed_traffic_every_registered_format() {
+        // Satellite: the meter is pinned against the codec the way
+        // storage bits already are.
+        for spec in registered_specs(&[2, 3, 4, 8, 16, 24, 32]) {
+            audit_observed_traffic(&spec)
+                .unwrap_or_else(|e| panic!("traffic meter disagrees with codec: {e}"));
+        }
+    }
+
+    #[test]
+    fn measure_state_traffic_reports_codec_bytes() {
+        let st = demo_state();
+        let t = measure_state_traffic(&st, &FormatSpec::bfp(4)).unwrap();
+        // 3 groups x (64-elem exact-box tensor + ragged 2x21 tensor).
+        let expect = 3 * (FormatSpec::bfp(4).observed_bytes(64, 16)
+            + FormatSpec::bfp(4).observed_bytes(42, 21)) as u64;
+        assert_eq!(t.meter.stash_write_bytes, expect);
+        assert_eq!(t.meter.stash_read_bytes, expect);
+        assert!(t.agrees());
+        assert!(!t.meter.spilled());
+    }
+
+    #[test]
+    fn traffic_report_json_and_summary() {
+        let mut st = demo_state();
+        let mut store = StashStore::ephemeral(FormatSpec::bfp(8), StashBudget::Bytes(0)).unwrap();
+        store.stash_state(&mut st).unwrap();
+        store.fetch_state(&mut st).unwrap();
+        store.note_dispatch_read(&st);
+        store.note_checkpoint_bytes(123);
+        let r = store.traffic_report();
+        let s = r.summary();
+        assert!(s.contains("modeled") && s.contains("observed"), "{s}");
+        assert!(s.contains("spill wrote"), "{s}");
+        let j = r.to_json().to_string_pretty();
+        assert!(j.contains("spill_write_bytes"), "{j}");
+        assert!(j.contains("agrees"), "{j}");
+        assert_eq!(r.meter.checkpoint_bytes, 123);
+    }
+
+    #[test]
+    fn ephemeral_dir_is_removed_on_drop() {
+        let dir;
+        {
+            let mut st = demo_state();
+            let mut store =
+                StashStore::ephemeral(FormatSpec::fixed(8), StashBudget::Bytes(0)).unwrap();
+            store.stash_state(&mut st).unwrap();
+            dir = store.dir().to_path_buf();
+            assert!(dir.exists());
+        }
+        assert!(!dir.exists(), "ephemeral store must clean up {dir:?}");
+    }
+
+    #[test]
+    fn named_dir_survives_for_the_inspector() {
+        let dir = std::env::temp_dir().join(format!("dsq-stash-test-{}", std::process::id()));
+        {
+            let mut st = demo_state();
+            let mut store = StashStore::new(StashStoreConfig {
+                spec: FormatSpec::bfp(4),
+                budget: StashBudget::Bytes(0),
+                dir: dir.clone(),
+            })
+            .unwrap();
+            store.set_param_names(&["w", "b"]);
+            store.stash_state(&mut st).unwrap();
+        }
+        let idx = crate::util::json::parse_file(&dir.join("stash.json")).unwrap();
+        assert_eq!(idx.path("spec").and_then(Json::as_str), Some("bfp4"));
+        let slots = idx.path("slots").and_then(Json::as_arr).unwrap();
+        assert_eq!(slots.len(), 6);
+        assert_eq!(slots[0].path("slot").and_then(Json::as_str), Some("params/w"));
+        assert_eq!(slots[0].path("tier").and_then(Json::as_str), Some("spilled"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

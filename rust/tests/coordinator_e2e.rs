@@ -13,6 +13,7 @@ use dsq::data::Variant;
 use dsq::model::checkpoint;
 use dsq::runtime::ArtifactManifest;
 use dsq::schedule::{DsqController, FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
+use dsq::stash::StashBudget;
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -135,6 +136,81 @@ fn checkpoint_roundtrip_through_trainer() {
     let r2 = trainer2.run(schedule.as_mut()).unwrap();
     assert_eq!(r2.steps, r1.steps + 4);
     std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn budgeted_stash_spill_matches_unbudgeted_run_exactly() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Acceptance criterion: a --stash-budget smaller than the resident
+    // working set completes with a bit-identical loss trajectory to the
+    // unbudgeted run, reports spill traffic > 0, and the unbudgeted
+    // case's modeled-vs-observed DRAM comparison agrees within
+    // box-metadata slack.
+    let mut cfg = quick_cfg(&dir);
+    cfg.epochs = 1;
+    cfg.batches_per_epoch = 4;
+    cfg.bleu_batches = 0;
+    cfg.stash_format = Some(FormatSpec::bfp(8));
+    let mut schedule: Box<dyn Schedule> =
+        Box::new(StaticSchedule(PrecisionConfig::stashing(FormatSpec::bfp(16))));
+
+    let mut unbudgeted = Trainer::new(cfg.clone()).unwrap();
+    let r1 = unbudgeted.run(schedule.as_mut()).unwrap();
+    let t1 = r1.stash.as_ref().expect("stashed run carries traffic");
+    assert!(!t1.meter.spilled(), "unlimited budget must not spill");
+    assert!(t1.meter.stash_write_bytes > 0 && t1.meter.stash_read_bytes > 0);
+    assert!(
+        t1.agrees(),
+        "modeled {} vs observed {} bits (allowance {})",
+        t1.meter.modeled_stash_bits,
+        t1.meter.observed_stash_bits(),
+        t1.allowance_bits
+    );
+
+    // Budget 0: every slot spills to disk every step.
+    let stash_dir = std::env::temp_dir().join(format!("dsq-e2e-stash-{}", std::process::id()));
+    let mut cfg2 = cfg.clone();
+    cfg2.stash_budget = StashBudget::Bytes(0);
+    cfg2.stash_dir = Some(stash_dir.clone());
+    let mut budgeted = Trainer::new(cfg2).unwrap();
+    let r2 = budgeted.run(schedule.as_mut()).unwrap();
+    let t2 = r2.stash.as_ref().unwrap();
+    assert!(t2.meter.spill_write_bytes > 0, "a sub-working-set budget must spill");
+    assert!(t2.meter.spill_read_bytes > 0, "spilled slots must read back");
+
+    // Residency is not numerics: trajectories match exactly, step by step.
+    assert_eq!(r1.loss_curve, r2.loss_curve, "budget changed the loss trajectory");
+    assert_eq!(r1.final_val_loss, r2.final_val_loss);
+    assert_eq!(r1.final_eval_acc, r2.final_eval_acc);
+
+    // The on-disk index is inspectable (`dsq stash <dir>`).
+    assert!(stash_dir.join("stash.json").exists());
+    assert!(stash_dir.join("stash.seg").exists());
+    std::fs::remove_dir_all(&stash_dir).ok();
+}
+
+#[test]
+fn budgeted_stash_finetune_matches_unbudgeted_run_exactly() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Same acceptance criterion on the classification task.
+    let mk = |budget| FinetuneConfig {
+        epochs: 1,
+        batches_per_epoch: 4,
+        val_batches: 2,
+        nclasses: 3,
+        lr: LrSchedule::Polynomial { lr: 1e-3, warmup_steps: 4, total_steps: 500 },
+        stash_format: Some(FormatSpec::fixed(8)),
+        stash_budget: budget,
+        ..FinetuneConfig::quick(dir.clone())
+    };
+    let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(PrecisionConfig::FP32));
+    let r1 = Finetuner::new(mk(StashBudget::Unlimited)).unwrap().run(schedule.as_mut()).unwrap();
+    let r2 = Finetuner::new(mk(StashBudget::Bytes(0))).unwrap().run(schedule.as_mut()).unwrap();
+    let (t1, t2) = (r1.stash.as_ref().unwrap(), r2.stash.as_ref().unwrap());
+    assert!(!t1.meter.spilled() && t2.meter.spilled());
+    assert!(t1.agrees(), "unbudgeted finetune modeled-vs-observed must agree");
+    assert_eq!(r1.loss_curve, r2.loss_curve);
+    assert_eq!(r1.accuracy(), r2.accuracy());
 }
 
 #[test]

@@ -1,0 +1,244 @@
+//! Spill-tier correctness suite for the tiered stash store
+//! (`dsq::stash`), PJRT-free: property tests that spill → readback is
+//! bit-identical to `encode(quantize(x))` across ragged shapes,
+//! NaN/±inf payloads, and empty tensors — at both budget extremes
+//! (0 = all-spill, unlimited = all-resident) — plus traffic-meter
+//! agreement and checkpoint streaming through a spilled state.
+//!
+//! CI runs this file as its own job (`cargo test -q --test
+//! stash_spill`) next to the stash-store smoke bench.
+
+use dsq::model::ModelState;
+use dsq::quant::{same_f32, Codec, FormatSpec, PackedTensor, FORMAT_REGISTRY};
+use dsq::runtime::{HostTensor, TensorData};
+use dsq::stash::{StashBudget, StashStore};
+use dsq::util::prop::{gen_f32s, Prop};
+
+fn state_of(tensors: Vec<HostTensor>, step: u64) -> ModelState {
+    let zeros: Vec<HostTensor> = tensors.iter().map(HostTensor::zeros_like).collect();
+    ModelState { params: tensors, m: zeros.clone(), v: zeros, step }
+}
+
+/// Stash `state` through a store at `budget`, force readback, and
+/// return the packed params.
+fn roundtrip(state: &mut ModelState, spec: FormatSpec, budget: StashBudget) -> Vec<PackedTensor> {
+    let mut store = StashStore::ephemeral(spec, budget).unwrap();
+    store.stash_state(state).unwrap();
+    if budget == StashBudget::Bytes(0) {
+        assert_eq!(
+            StashStore::resident_bytes(state),
+            0,
+            "budget 0 must leave nothing resident"
+        );
+        assert!(
+            store.traffic().spill_write_bytes > 0
+                || state.params.iter().all(HostTensor::is_empty)
+        );
+    } else {
+        assert!(!store.traffic().spilled(), "unlimited budget must never spill");
+    }
+    store.fetch_state(state).unwrap();
+    state
+        .params
+        .iter()
+        .map(|t| match &t.data {
+            TensorData::Packed(p) => p.clone(),
+            other => panic!("expected packed after fetch, got {other:?}"),
+        })
+        .collect()
+}
+
+#[test]
+fn spill_readback_is_encode_of_quantize_property() {
+    // The satellite property: across every registered family, random
+    // (possibly ragged) shapes, and NaN/±inf payloads, the payload that
+    // comes back from the spill tier is bit-identical to
+    // encode(quantize(x)) — i.e. to what the resident tier holds.
+    Prop::new("spill -> readback == encode(quantize(x))").cases(60).run(
+        |rng, size| {
+            let fam = &FORMAT_REGISTRY[rng.below(FORMAT_REGISTRY.len() as u32) as usize];
+            let bits = rng.range(fam.min_bits, fam.max_bits + 1);
+            let spec = fam.instantiate(bits).unwrap();
+            let inner = 1 + rng.below(40) as usize;
+            let rows = rng.below(4) as usize;
+            let tail = rng.below(inner as u32) as usize; // ragged trailing row
+            let mut x = gen_f32s(rng, rows * inner + tail, 4.0 + size as f32 / 8.0);
+            for _ in 0..rng.below(4) {
+                if x.is_empty() {
+                    break;
+                }
+                let i = rng.below(x.len() as u32) as usize;
+                x[i] = *rng.choice(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0]);
+            }
+            let step = rng.below(100) as u64;
+            (spec, x, inner, step)
+        },
+        |(spec, x, inner, step)| {
+            let shape = vec![x.len()];
+            // What the resident tier would hold: the codec's packing of
+            // the quantized tensor, at the state-stash (step, stream).
+            let want = spec.encode_stream(x, &shape, *inner, *step, dsq::quant::stash_stream(0, 0));
+            let t = HostTensor { shape, data: TensorData::F32(x.clone()) };
+            // inner is the minor axis: reshape so the store packs against it.
+            let t = if x.len() % *inner == 0 && !x.is_empty() {
+                HostTensor::f32(vec![x.len() / *inner, *inner], x.clone())
+            } else {
+                t
+            };
+            let mut state = state_of(vec![t], *step);
+            let got = roundtrip(&mut state, *spec, StashBudget::Bytes(0));
+            let back = &got[0];
+            // Compare decoded values under NaN-aware equality; the
+            // payload bytes must match exactly when shapes align.
+            let dec = back.decode();
+            let mut qwant = x.clone();
+            let use_inner =
+                if x.len() % *inner == 0 && !x.is_empty() { *inner } else { x.len().max(1) };
+            spec.quantize_into_stream(&mut qwant, use_inner, *step, dsq::quant::stash_stream(0, 0));
+            if dec.len() != qwant.len() {
+                return Err(format!("{spec}: length {} != {}", dec.len(), qwant.len()));
+            }
+            for (i, (&g, &w)) in dec.iter().zip(&qwant).enumerate() {
+                if !same_f32(g, w) {
+                    return Err(format!(
+                        "{spec}: elem {i}: readback {g} != quantized {w} (x={})",
+                        x[i]
+                    ));
+                }
+            }
+            // When the reshape kept the original minor axis, the raw
+            // payload must also be byte-identical to encode().
+            if x.len() % *inner == 0 && !x.is_empty() && back.payload() != want.payload() {
+                return Err(format!("{spec}: payload bytes differ after spill readback"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn budget_extremes_agree_bit_for_bit() {
+    // The same state through budget-0 and unlimited stores must end up
+    // identical — residency is not numerics.
+    for spec in [
+        FormatSpec::bfp(4),
+        FormatSpec::fixed_sr(6),
+        FormatSpec::fp8e4m3(),
+        FormatSpec::Fp32,
+    ] {
+        let mk = || {
+            state_of(
+                vec![
+                    HostTensor::f32(vec![4, 16], (0..64).map(|x| x as f32 * 0.31 - 9.0).collect()),
+                    HostTensor::f32(vec![2, 21], (0..42).map(|x| (x as f32).cos() * 2.0).collect()),
+                ],
+                7,
+            )
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let pa = roundtrip(&mut a, spec, StashBudget::Bytes(0));
+        let pb = roundtrip(&mut b, spec, StashBudget::Unlimited);
+        assert_eq!(pa, pb, "{spec}: spilled and resident tiers must hold the same bytes");
+    }
+}
+
+#[test]
+fn nan_inf_and_empty_tensors_survive_the_spill_tier() {
+    for spec in [FormatSpec::bfp(4), FormatSpec::fixed(5), FormatSpec::fp8e5m2()] {
+        let mut state = state_of(
+            vec![
+                HostTensor::f32(
+                    vec![8],
+                    vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0, 1.5, -3.25, 2e9],
+                ),
+                HostTensor::f32(vec![0, 4], vec![]),
+                HostTensor::f32(vec![20], vec![f32::NAN; 20]),
+            ],
+            3,
+        );
+        let got = roundtrip(&mut state, spec, StashBudget::Bytes(0));
+        let dec = got[0].decode();
+        assert!(dec[0].is_nan(), "{spec}: NaN must survive spill");
+        assert!(dec[1].is_finite() || dec[1].is_infinite());
+        assert_eq!(got[1].len(), 0, "{spec}: empty tensor round-trips");
+        assert!(got[2].decode().iter().all(|v| v.is_nan()), "{spec}: all-NaN tensor");
+    }
+}
+
+#[test]
+fn meter_agrees_with_the_model_at_both_budget_extremes() {
+    for budget in [StashBudget::Bytes(0), StashBudget::Unlimited] {
+        let mut state = state_of(
+            vec![HostTensor::f32(vec![6, 32], (0..192).map(|x| x as f32 * 0.13).collect())],
+            1,
+        );
+        let mut store = StashStore::ephemeral(FormatSpec::bfp(4), budget).unwrap();
+        store.stash_state(&mut state).unwrap();
+        store.fetch_state(&mut state).unwrap();
+        store.note_dispatch_read(&state);
+        let r = store.traffic_report();
+        assert!(
+            r.agrees(),
+            "budget {budget}: observed {} vs modeled {} (allowance {})",
+            r.meter.observed_stash_bits(),
+            r.meter.modeled_stash_bits,
+            r.allowance_bits
+        );
+        match budget {
+            StashBudget::Bytes(0) => assert!(r.meter.spilled(), "budget 0 must spill"),
+            _ => assert!(!r.meter.spilled(), "unlimited must not spill"),
+        }
+    }
+}
+
+#[test]
+fn spilled_state_checkpoints_match_resident_checkpoints() {
+    use dsq::model::checkpoint::{load_checkpoint, save_checkpoint};
+    use dsq::runtime::{ModelManifest, ParamSpec};
+
+    let mm = ModelManifest {
+        config: Default::default(),
+        params: vec![
+            ParamSpec { name: "enc.w".into(), shape: vec![4, 16] },
+            ParamSpec { name: "dec.w".into(), shape: vec![2, 21] },
+        ],
+        artifacts: Default::default(),
+    };
+    let mk = || {
+        state_of(
+            vec![
+                HostTensor::f32(vec![4, 16], (0..64).map(|x| x as f32 * 0.5 - 16.0).collect()),
+                HostTensor::f32(vec![2, 21], (0..42).map(|x| x as f32 * -0.25).collect()),
+            ],
+            11,
+        )
+    };
+    let spec = FormatSpec::bfp(4);
+    let tmp = |n: &str| {
+        std::env::temp_dir().join(format!("dsq-spilltest-{}-{n}", std::process::id()))
+    };
+
+    // Resident reference.
+    let mut resident = mk();
+    resident.pack_state(&spec).unwrap();
+    let p1 = tmp("resident.bin");
+    save_checkpoint(&p1, &resident, &mm).unwrap();
+
+    // Fully spilled state streams its records.
+    let mut spilled = mk();
+    let mut store = StashStore::ephemeral(spec, StashBudget::Bytes(0)).unwrap();
+    store.stash_state(&mut spilled).unwrap();
+    assert!(spilled.is_spilled());
+    let p2 = tmp("spilled.bin");
+    save_checkpoint(&p2, &spilled, &mm).unwrap();
+
+    assert_eq!(
+        std::fs::read(&p1).unwrap(),
+        std::fs::read(&p2).unwrap(),
+        "spilled checkpoint must be byte-identical to the resident one"
+    );
+    let back = load_checkpoint(&p2, &mm).unwrap();
+    assert_eq!(back.params, resident.params);
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
+}
