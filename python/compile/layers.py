@@ -58,6 +58,29 @@ from .kernels.floatq import float_quantize
 # used to A/B compile times and for fast python-side tests).
 _USE_PALLAS = os.environ.get("DSQ_NO_PALLAS", "0") != "1"
 
+# The qcfg mode table — the python half of the cross-language contract.
+# These constants mirror ``FormatSpec::mode_scalar`` in
+# rust/src/quant/format.rs one-for-one, and `dsq lint` (rule
+# ``qcfg_sync``) diffs the two tables on every build, so skewing one
+# side is a build failure instead of a silent wrong-kernel dispatch
+# (the PR-4 bug class). All dispatch below goes through these names;
+# raw ``mode == <number>`` literals are themselves a lint finding.
+MODE_FP32 = 0.0
+MODE_FIXED = 1.0
+MODE_BFP = 2.0
+MODE_FIXED_SR = 3.0
+MODE_FLOAT = 4.0
+MODE_FLOAT_SR = 5.0
+
+MODES = {
+    "fp32": MODE_FP32,
+    "fixed": MODE_FIXED,
+    "bfp": MODE_BFP,
+    "fixedsr": MODE_FIXED_SR,
+    "float": MODE_FLOAT,
+    "floatsr": MODE_FLOAT_SR,
+}
+
 # Which quantizer paths are compiled into the graph. "both" supports the
 # full runtime mode selector {0: fp32, 1: fixed, 2: bfp, 3: fixed-sr,
 # 4: float, 5: float-sr}; "bfp" / "fixed" / "float" compile a single
@@ -103,11 +126,11 @@ def _float(x, bits):
 
 
 def _fixed_like(mode):
-    return jnp.logical_or(mode == 1.0, mode == 3.0)
+    return jnp.logical_or(mode == MODE_FIXED, mode == MODE_FIXED_SR)
 
 
 def _float_like(mode):
-    return jnp.logical_or(mode == 4.0, mode == 5.0)
+    return jnp.logical_or(mode == MODE_FLOAT, mode == MODE_FLOAT_SR)
 
 
 def quantize(x: jax.Array, mode: jax.Array, bits: jax.Array) -> jax.Array:
@@ -118,7 +141,7 @@ def quantize(x: jax.Array, mode: jax.Array, bits: jax.Array) -> jax.Array:
     docstring). Single-quantizer variants match their modes exactly and
     are the identity otherwise — never another family's kernel."""
     if _QUANTIZERS == "bfp":
-        return jnp.where(mode == 2.0, _bfp(x, bits), x)
+        return jnp.where(mode == MODE_BFP, _bfp(x, bits), x)
     if _QUANTIZERS == "fixed":
         return jnp.where(_fixed_like(mode), _fixed(x, bits), x)
     if _QUANTIZERS == "float":
@@ -129,7 +152,7 @@ def quantize(x: jax.Array, mode: jax.Array, bits: jax.Array) -> jax.Array:
     return jnp.where(
         _fixed_like(mode),
         qf,
-        jnp.where(mode == 2.0, qb, jnp.where(_float_like(mode), qe, x)),
+        jnp.where(mode == MODE_BFP, qb, jnp.where(_float_like(mode), qe, x)),
     )
 
 

@@ -338,3 +338,34 @@ def test_both_variant_dispatches_every_family(restore_quantizers):
     for mode, bits, want in cases:
         got = np.asarray(quantize(x, jnp.float32(mode), jnp.float32(bits)))
         np.testing.assert_array_equal(got, want, err_msg=f"mode {mode}")
+
+
+def test_mode_table_drives_dispatch(restore_quantizers):
+    """The MODE_* / MODES table in layers.py is the runtime dispatch
+    contract (`dsq lint` diffs it against FormatSpec::mode_scalar): each
+    named family's scalar must route to that family's kernel, and a
+    scalar outside the table must be the identity."""
+    layers.set_quantizers("both")
+    x = jnp.asarray(rand((4, 32)))
+    bits = {"fp32": 32.0, "fixed": 8.0, "bfp": 8.0, "fixedsr": 8.0,
+            "float": E4M3, "floatsr": E5M2}
+    want = {
+        "fp32": lambda b: np.asarray(x),
+        "fixed": lambda b: np.asarray(ref.fixed_quantize_ref(x, b)),
+        "fixedsr": lambda b: np.asarray(ref.fixed_quantize_ref(x, b)),
+        "bfp": lambda b: np.asarray(ref.bfp_quantize_ref(x, b)),
+        "float": lambda b: np.asarray(ref.float_quantize_ref(x, b)),
+        "floatsr": lambda b: np.asarray(ref.float_quantize_ref(x, b)),
+    }
+    assert set(layers.MODES) == set(want), "MODES families drifted from this test"
+    for family, mode in layers.MODES.items():
+        got = np.asarray(quantize(x, jnp.float32(mode), jnp.float32(bits[family])))
+        np.testing.assert_array_equal(got, want[family](bits[family]), err_msg=family)
+    # Scalars outside the table: identity, never a foreign kernel.
+    for mode in (-1.0, 2.5, 7.0):
+        assert mode not in layers.MODES.values()
+        np.testing.assert_array_equal(
+            np.asarray(quantize(x, jnp.float32(mode), jnp.float32(8.0))),
+            np.asarray(x),
+            err_msg=f"mode {mode}",
+        )

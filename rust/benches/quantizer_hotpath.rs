@@ -16,7 +16,7 @@
 //! regression fails the workflow rather than just skewing a number
 //! nobody reads.
 
-use dsq::bench::{header, Bencher};
+use dsq::bench::{header, Bencher, JsonReport};
 use dsq::quant::{registered_specs, same_f32, Codec, FormatSpec};
 use dsq::util::rng::Pcg32;
 
@@ -28,6 +28,9 @@ fn main() {
     } else {
         "Quantizer + codec hot path (rust mirrors, all registered formats)"
     });
+    // Machine-readable trajectory (ROADMAP 3b): every run leaves
+    // BENCH_quantizer.json at the repo root.
+    let mut json = JsonReport::new("quantizer", if smoke { "smoke" } else { "full" });
     let mut rng = Pcg32::new(1);
     let sizes: &[(usize, usize)] = if smoke {
         &[(1 << 12, 128)]
@@ -68,6 +71,7 @@ fn main() {
                 spec.quantize_into_step(std::hint::black_box(&mut buf), inner, 1);
             });
             println!("{}  ({:.0} Melem/s)", r.report(), r.throughput(n as f64) / 1e6);
+            json.push(&r, Some(n as f64));
 
             // The codec path: encode (quantize + pack) and decode.
             let packed = spec.encode_stream(&x, &shape, inner, 1, 0);
@@ -81,10 +85,12 @@ fn main() {
                 ));
             });
             println!("{}  ({:.0} Melem/s)", re.report(), re.throughput(n as f64) / 1e6);
+            json.push(&re, Some(n as f64));
             let rd = b.bench(&format!("decode:{label}"), || {
                 std::hint::black_box(std::hint::black_box(&packed).decode());
             });
             println!("{}  ({:.0} Melem/s)", rd.report(), rd.throughput(n as f64) / 1e6);
+            json.push(&rd, Some(n as f64));
 
             // Correctness gate (cheap next to the timing): the packed
             // bytes must round-trip to the quantized grid exactly.
@@ -98,5 +104,9 @@ fn main() {
                 );
             }
         }
+    }
+    match json.write() {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
     }
 }

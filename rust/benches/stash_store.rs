@@ -17,7 +17,7 @@
 //! number. CI runs both budget extremes by construction: every cell
 //! pair is one all-resident run and one all-spill run.
 
-use dsq::bench::{header, Bencher};
+use dsq::bench::{header, Bencher, JsonReport};
 use dsq::model::ModelState;
 use dsq::quant::registered_specs;
 use dsq::runtime::HostTensor;
@@ -62,6 +62,9 @@ fn main() {
     } else {
         Bencher::default()
     };
+    // Machine-readable trajectory (ROADMAP 3b): every run leaves
+    // BENCH_stash.json at the repo root.
+    let mut json = JsonReport::new("stash", if smoke { "smoke" } else { "full" });
     let scale = if smoke { 48 } else { 128 };
     let mut rng = Pcg32::new(7);
 
@@ -122,6 +125,7 @@ fn main() {
                 store.note_dispatch_read(&state);
             });
             println!("{}", r.report());
+            json.push(&r, Some(elems as f64));
             println!(
                 "    traffic/step: stash W {:.1} KiB R {:.1} KiB, spill W {:.1} KiB R {:.1} KiB",
                 t.meter.stash_write_bytes as f64 / 1024.0,
@@ -130,5 +134,9 @@ fn main() {
                 t.meter.spill_read_bytes as f64 / 1024.0,
             );
         }
+    }
+    match json.write() {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
     }
 }

@@ -1,0 +1,296 @@
+//! Rule `registry_coverage`: every `FORMAT_REGISTRY` row has all of its
+//! arms.
+//!
+//! ROADMAP promises "adding a format is one registry row + one
+//! quantizer arm + a cost calibration" — this rule is what makes that
+//! promise checkable. For each registered family the following must
+//! exist, or the build fails:
+//!
+//! 1. a quantizer arm in `FormatSpec::quantize_into_stream`
+//!    (`quant/format.rs`);
+//! 2. a `codec_tag` arm in `quant/packed.rs`, and the inverse
+//!    `spec_from_tag` arm for that tag number;
+//! 3. cost-model arms in `costmodel/formats.rs` (`storage_bits` and
+//!    `mac_cost`);
+//! 4. a registry-driven bench sweep: the hot-path benches enumerate
+//!    `registered_specs(…)` so new rows are benchmarked automatically;
+//! 5. a registry-driven `dsq formats` CLI table (`cmd_formats` iterates
+//!    `FORMAT_REGISTRY`).
+//!
+//! The checks are deliberately *structural* (token scans over match
+//! bodies), so deleting an arm — the drift the rule exists for — is a
+//! lint failure naming the exact function it vanished from.
+
+use super::source::SourceFile;
+use super::{Finding, Tree, RULE_COVERAGE};
+
+/// One parsed `FormatFamily { … }` registry row.
+pub struct RegistryRow {
+    pub keyword: String,
+    pub suffix: String,
+    /// Line of the row's `FormatFamily {` opener in `quant/format.rs`.
+    pub line: usize,
+}
+
+impl RegistryRow {
+    pub fn name(&self) -> String {
+        format!("{}{}", self.keyword, self.suffix)
+    }
+
+    /// Which `FormatSpec` enum variant (and rounding, when the arm
+    /// matches on it) this row instantiates. `None` for a spelling the
+    /// linter does not know — itself a finding: a new family must be
+    /// taught to the coverage map when it is registered.
+    pub fn variant(&self) -> Option<(&'static str, Option<&'static str>)> {
+        match (self.keyword.as_str(), self.suffix.as_str()) {
+            ("fp", "") => Some(("Fp32", None)),
+            ("fixed", "") => Some(("Fixed", Some("Nearest"))),
+            ("fixed", "sr") => Some(("Fixed", Some("Stochastic"))),
+            ("bfp", "") => Some(("Bfp", None)),
+            ("fp", s) if s.starts_with('e') && s.ends_with("sr") => {
+                Some(("Float", Some("Stochastic")))
+            }
+            ("fp", s) if s.starts_with('e') => Some(("Float", Some("Nearest"))),
+            _ => None,
+        }
+    }
+}
+
+/// Parse the `FORMAT_REGISTRY` table out of `quant/format.rs`.
+///
+/// The registry is a *bracket*-delimited array (`&[FormatFamily { … },
+/// …];`), so brace-matched [`SourceFile::item_body`] would stop at the
+/// first row's closing `}` — the table is instead scanned from its
+/// header line to the `];` terminator.
+pub fn parse_registry(format_rs: &SourceFile) -> Vec<RegistryRow> {
+    let Some(start) =
+        format_rs.lines.iter().position(|l| l.code.contains("pub const FORMAT_REGISTRY"))
+    else {
+        return Vec::new();
+    };
+    let end = format_rs.lines[start..]
+        .iter()
+        .position(|l| l.code.trim_end().ends_with("];"))
+        .map_or(format_rs.lines.len() - 1, |off| start + off);
+    let body = &format_rs.lines[start..=end];
+    let mut rows = Vec::new();
+    let mut cur: Option<RegistryRow> = None;
+    let field = |code: &str, name: &str| -> Option<String> {
+        let rest = code.trim_start().strip_prefix(name)?.trim_start().strip_prefix(':')?;
+        let a = rest.find('"')? + 1;
+        let b = a + rest[a..].find('"')?;
+        Some(rest[a..b].to_string())
+    };
+    for l in body {
+        if l.code.contains("FormatFamily {") {
+            if let Some(row) = cur.take() {
+                rows.push(row);
+            }
+            cur = Some(RegistryRow { keyword: String::new(), suffix: String::new(), line: l.number });
+        }
+        if let Some(row) = cur.as_mut() {
+            // Field values live in string literals, so read the raw text.
+            if let Some(v) = field(&l.text, "keyword") {
+                row.keyword = v;
+            }
+            if let Some(v) = field(&l.text, "suffix") {
+                row.suffix = v;
+            }
+        }
+    }
+    rows.extend(cur);
+    rows
+}
+
+/// Does `body` mention `variant` at all? Looser than [`has_arm`]: the
+/// cost model's `mac_cost` imports `FormatSpec::*` and matches on tuple
+/// patterns (`(Fp32, _)`, `(Fixed { bits: b1, .. }, …)`), so the check
+/// accepts the bare variant name in pattern position.
+fn has_mention(body: &[super::source::Line], variant: &str) -> bool {
+    let pats = [
+        format!("FormatSpec::{variant}"),
+        format!("{variant} {{"),
+        format!("({variant},"),
+        format!(" {variant})"),
+        format!("({variant})"),
+    ];
+    body.iter().any(|l| pats.iter().any(|p| l.code.contains(p.as_str())))
+}
+
+/// Does `body` contain a match arm for `variant` (+ `rounding`)?
+fn has_arm(body: &[super::source::Line], variant: &str, rounding: Option<&str>) -> bool {
+    let vpat = format!("FormatSpec::{variant}");
+    body.iter().any(|l| {
+        l.code.contains(&vpat)
+            && l.code.contains("=>")
+            && match rounding {
+                // `Fixed { bits, .. }` arms cover both roundings; an arm
+                // naming the other rounding explicitly does not.
+                Some(r) => {
+                    l.code.contains(&format!("Rounding::{r}"))
+                        || !l.code.contains("Rounding::")
+                }
+                None => true,
+            }
+    })
+}
+
+pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
+    let format_rs = tree.file("rust/src/quant/format.rs");
+    let packed_rs = tree.file("rust/src/quant/packed.rs");
+    let cost_rs = tree.file("rust/src/costmodel/formats.rs");
+    let cli_rs = tree.file("rust/src/coordinator/cli.rs");
+
+    let rows = parse_registry(format_rs);
+    if rows.is_empty() {
+        findings.push(Finding::new(
+            RULE_COVERAGE,
+            &format_rs.rel,
+            format_rs.item_line("FORMAT_REGISTRY"),
+            "FORMAT_REGISTRY not found (or empty) — the registry is the linter's ground truth",
+        ));
+        return;
+    }
+
+    // Duplicate rows: two families with the same spelling shadow each
+    // other in the parser's lookup.
+    for (i, a) in rows.iter().enumerate() {
+        if rows[..i].iter().any(|b| b.name() == a.name()) {
+            findings.push(Finding::new(
+                RULE_COVERAGE,
+                &format_rs.rel,
+                a.line,
+                format!("registry family '{}' is registered twice", a.name()),
+            ));
+        }
+    }
+
+    let quantizer = format_rs.item_body("pub fn quantize_into_stream");
+    let codec_tag = packed_rs.item_body("fn codec_tag");
+    let spec_from_tag = packed_rs.item_body("fn spec_from_tag");
+    let storage = cost_rs.item_body("pub fn storage_bits");
+    let mac = cost_rs.item_body("pub fn mac_cost");
+
+    for row in &rows {
+        let Some((variant, rounding)) = row.variant() else {
+            findings.push(Finding::new(
+                RULE_COVERAGE,
+                &format_rs.rel,
+                row.line,
+                format!(
+                    "registry family '{}' is unknown to the coverage map — teach \
+                     analysis/coverage.rs::RegistryRow::variant about it",
+                    row.name()
+                ),
+            ));
+            continue;
+        };
+        let mut need = |ok: bool, file: &SourceFile, what: &str, header: &str| {
+            if !ok {
+                findings.push(Finding::new(
+                    RULE_COVERAGE,
+                    &file.rel,
+                    file.item_line(header),
+                    format!(
+                        "registry format '{}' ({}:{}) has no {what} arm for FormatSpec::{variant}",
+                        row.name(),
+                        format_rs.rel,
+                        row.line,
+                    ),
+                ));
+            }
+        };
+        need(
+            quantizer.is_some_and(|b| has_arm(b, variant, rounding)),
+            format_rs,
+            "quantizer",
+            "pub fn quantize_into_stream",
+        );
+        need(
+            codec_tag.is_some_and(|b| has_arm(b, variant, rounding)),
+            packed_rs,
+            "codec_tag",
+            "fn codec_tag",
+        );
+        // The cost model matches on the variant shape only (`Fixed {
+        // bits, .. }` prices both roundings, `mac_cost` imports
+        // FormatSpec::*) — mention-level, rounding-agnostic checks.
+        need(
+            storage.is_some_and(|b| has_mention(b, variant)),
+            cost_rs,
+            "storage_bits",
+            "pub fn storage_bits",
+        );
+        need(mac.is_some_and(|b| has_mention(b, variant)), cost_rs, "mac_cost", "pub fn mac_cost");
+    }
+
+    // spec_from_tag must invert every tag codec_tag can emit.
+    if let Some(body) = codec_tag {
+        let tags: Vec<(usize, String)> = body
+            .iter()
+            .filter(|l| l.code.contains("=>"))
+            .filter_map(|l| {
+                let rhs = l.code.split("=>").nth(1)?.trim().trim_end_matches(',').trim();
+                rhs.parse::<u8>().ok().map(|t| (l.number, t.to_string()))
+            })
+            .collect();
+        match spec_from_tag {
+            Some(inv) => {
+                for (line, tag) in &tags {
+                    let covered = inv.iter().any(|l| {
+                        l.code.contains("=>")
+                            && l.code
+                                .split("=>")
+                                .next()
+                                .is_some_and(|lhs| lhs.split('|').any(|p| {
+                                    p.trim().split_whitespace().next() == Some(tag.as_str())
+                                }))
+                    });
+                    if !covered {
+                        findings.push(Finding::new(
+                            RULE_COVERAGE,
+                            &packed_rs.rel,
+                            packed_rs.item_line("fn spec_from_tag"),
+                            format!(
+                                "codec tag {tag} (emitted at {}:{line}) has no spec_from_tag \
+                                 arm — records in that format cannot be read back",
+                                packed_rs.rel
+                            ),
+                        ));
+                    }
+                }
+            }
+            None => findings.push(Finding::new(
+                RULE_COVERAGE,
+                &packed_rs.rel,
+                1,
+                "fn spec_from_tag not found in quant/packed.rs",
+            )),
+        }
+    }
+
+    // Registry-driven sweeps: the benches and the CLI table must
+    // enumerate the registry, not a hand-kept list.
+    for bench in ["rust/benches/quantizer_hotpath.rs", "rust/benches/stash_store.rs"] {
+        let f = tree.file(bench);
+        if !f.code_lines().any(|l| l.code.contains("registered_specs(")) {
+            findings.push(Finding::new(
+                RULE_COVERAGE,
+                &f.rel,
+                1,
+                "bench does not sweep registered_specs(…) — newly registered formats \
+                 would silently go unbenchmarked",
+            ));
+        }
+    }
+    let formats_body = cli_rs.item_body("fn cmd_formats");
+    if !formats_body.is_some_and(|b| b.iter().any(|l| l.code.contains("FORMAT_REGISTRY"))) {
+        findings.push(Finding::new(
+            RULE_COVERAGE,
+            &cli_rs.rel,
+            cli_rs.item_line("fn cmd_formats"),
+            "`dsq formats` does not iterate FORMAT_REGISTRY — the CLI table would \
+             miss newly registered formats",
+        ));
+    }
+}

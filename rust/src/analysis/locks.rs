@@ -1,0 +1,129 @@
+//! Rule `lock_discipline`: consistent mutex acquisition order in the
+//! stash store.
+//!
+//! The stash store pairs an LRU/budget path with a background readback
+//! prefetcher; the moment those two share mutexes, an inconsistent
+//! acquisition order is a deadlock waiting for load. This rule scans
+//! the stash (and Session) modules for `.lock()` acquisitions, records
+//! the order in which each function takes distinct locks, and flags any
+//! pair of locks acquired in *both* orders somewhere in the scanned
+//! modules.
+//!
+//! The analysis is lexical and conservative: within one function, lock
+//! A "precedes" lock B if A's `.lock()` call appears on an earlier (or
+//! the same) line — guard drops are not tracked, so a function that
+//! releases A before taking B still contributes an A→B edge. Today the
+//! store is single-threaded-with-a-join-handle and holds **zero**
+//! mutexes, so the rule is load-bearing for the first PR that adds one;
+//! a deliberate, commented opposite-order pair can be escaped with
+//! `// dsq-lint: allow(lock_discipline, <reason>)`.
+
+use std::collections::BTreeMap;
+
+use super::{Finding, Tree, RULE_LOCKS};
+
+/// Modules the order graph is built over.
+const SCOPES: &[&str] = &["rust/src/stash/", "rust/src/coordinator/session.rs"];
+
+/// One lock-acquisition site.
+#[derive(Clone)]
+struct Acq {
+    lock: String,
+    file: String,
+    func: String,
+    line: usize,
+}
+
+/// Receiver of a `.lock()` call: the dotted ident chain before it,
+/// without a leading `self.` (so `self.index.lock()` and
+/// `store.index.lock()` name the same lock field).
+fn receiver(code: &str, at: usize) -> Option<String> {
+    let head = &code[..at];
+    let start = head
+        .rfind(|c: char| !(c.is_ascii_alphanumeric() || c == '_' || c == '.'))
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let chain = head[start..].trim_matches('.');
+    if chain.is_empty() {
+        return None;
+    }
+    let tail: Vec<&str> = chain.split('.').filter(|s| *s != "self").collect();
+    // The lock is named by the field, not the path to it.
+    tail.last().map(|s| s.to_string())
+}
+
+pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
+    // Per-function ordered acquisitions.
+    let mut funcs: Vec<Vec<Acq>> = Vec::new();
+    for f in tree.rust_files() {
+        if !SCOPES.iter().any(|p| f.rel.starts_with(p)) {
+            continue;
+        }
+        let mut cur: Option<(String, Vec<Acq>)> = None;
+        for l in f.code_lines() {
+            if let Some(at) = l.code.find("fn ") {
+                let name: String = l.code[at + 3..]
+                    .chars()
+                    .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                    .collect();
+                if !name.is_empty() && l.code.contains('(') {
+                    if let Some((_, acqs)) = cur.take() {
+                        funcs.push(acqs);
+                    }
+                    cur = Some((name, Vec::new()));
+                }
+            }
+            let mut rest = l.code.as_str();
+            let mut off = 0;
+            while let Some(at) = rest.find(".lock()") {
+                if let (Some((func, acqs)), Some(lock)) =
+                    (cur.as_mut(), receiver(&l.code, off + at))
+                {
+                    acqs.push(Acq {
+                        lock,
+                        file: f.rel.clone(),
+                        func: func.clone(),
+                        line: l.number,
+                    });
+                }
+                off += at + ".lock()".len();
+                rest = &rest[at + ".lock()".len()..];
+            }
+        }
+        if let Some((_, acqs)) = cur.take() {
+            funcs.push(acqs);
+        }
+    }
+
+    // Order edges: (a, b) -> first site where a was taken before b.
+    let mut edges: BTreeMap<(String, String), (Acq, Acq)> = BTreeMap::new();
+    for acqs in &funcs {
+        for (i, a) in acqs.iter().enumerate() {
+            for b in &acqs[i + 1..] {
+                if a.lock != b.lock {
+                    edges
+                        .entry((a.lock.clone(), b.lock.clone()))
+                        .or_insert_with(|| (a.clone(), b.clone()));
+                }
+            }
+        }
+    }
+    for ((a, b), (sa, sb)) in &edges {
+        if a < b {
+            if let Some((ra, rb)) = edges.get(&(b.clone(), a.clone())) {
+                findings.push(Finding::new(
+                    RULE_LOCKS,
+                    &sa.file,
+                    sa.line,
+                    format!(
+                        "locks '{a}' and '{b}' are acquired in both orders: \
+                         {}::{} takes {a} then {b} ({}:{} → {}:{}), but {}::{} takes \
+                         {b} then {a} ({}:{} → {}:{}) — pick one global order",
+                        sa.file, sa.func, sa.file, sa.line, sb.file, sb.line, //
+                        ra.file, ra.func, ra.file, ra.line, rb.file, rb.line,
+                    ),
+                ));
+            }
+        }
+    }
+}

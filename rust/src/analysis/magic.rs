@@ -1,0 +1,154 @@
+//! Rule `magic_constants`: on-disk magic bytes defined once, pinned by
+//! tests.
+//!
+//! The binary formats are guarded by 8-byte magics (`DSQCKPT1`,
+//! `DSQCKPT2`, `DSQSCHD1`) plus the packed-record `PACKED_VERSION`
+//! byte. Each must be:
+//!
+//! * **defined exactly once** (a second `const` binding — or two
+//!   different consts bound to the same literal, e.g. a trailer magic
+//!   accidentally reusing a checkpoint magic — makes the reader/writer
+//!   pair ambiguous);
+//! * **pinned by a golden-byte test**: some `#[cfg(test)]` line (or a
+//!   `rust/tests/` file) must reference the literal, so changing the
+//!   on-disk format without updating the compatibility tests is a lint
+//!   failure, not a silent format break.
+
+use super::{Finding, Tree, RULE_MAGIC};
+
+/// Extract every `b"DSQ…"` 8-byte magic literal on a line.
+fn magics_on(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(at) = rest.find("b\"DSQ") {
+        let lit = &rest[at + 2..];
+        if let Some(end) = lit.find('"') {
+            let m = &lit[..end];
+            if m.len() == 8 && m.bytes().all(|b| b.is_ascii_uppercase() || b.is_ascii_digit()) {
+                out.push(m.to_string());
+            }
+            rest = &rest[at + 2 + end..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+struct Site {
+    file: String,
+    line: usize,
+    is_def: bool,
+    is_test: bool,
+}
+
+pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
+    let mut sites: std::collections::BTreeMap<String, Vec<Site>> = Default::default();
+    for f in tree.rust_files() {
+        let file_is_test = f.rel.starts_with("rust/tests/");
+        for l in &f.lines {
+            for m in magics_on(&l.text) {
+                sites.entry(m).or_default().push(Site {
+                    file: f.rel.clone(),
+                    line: l.number,
+                    is_def: l.code.contains("const") && l.code.contains('='),
+                    is_test: file_is_test || l.in_test,
+                });
+            }
+        }
+    }
+
+    for (magic, sites) in &sites {
+        let defs: Vec<&Site> = sites.iter().filter(|s| s.is_def).collect();
+        match defs.len() {
+            0 => {
+                // Referenced but never bound to a const: the literal is
+                // floating free of a single source of truth.
+                let s = &sites[0];
+                findings.push(Finding::new(
+                    RULE_MAGIC,
+                    &s.file,
+                    s.line,
+                    format!("magic b\"{magic}\" is used but never defined as a const"),
+                ));
+            }
+            1 => {}
+            _ => {
+                for dup in &defs[1..] {
+                    findings.push(Finding::new(
+                        RULE_MAGIC,
+                        &dup.file,
+                        dup.line,
+                        format!(
+                            "magic b\"{magic}\" defined more than once (first at {}:{}) — \
+                             two formats would share an on-disk signature",
+                            defs[0].file, defs[0].line
+                        ),
+                    ));
+                }
+            }
+        }
+        if !defs.is_empty() && !sites.iter().any(|s| s.is_test) {
+            let d = defs[0];
+            findings.push(Finding::new(
+                RULE_MAGIC,
+                &d.file,
+                d.line,
+                format!(
+                    "magic b\"{magic}\" has no golden-byte test reference — the on-disk \
+                     format could change without any compatibility test noticing"
+                ),
+            ));
+        }
+    }
+
+    // PACKED_VERSION: the packed-record header's version byte.
+    let mut version_defs: Vec<(String, usize)> = Vec::new();
+    let mut version_tested = false;
+    for f in tree.rust_files() {
+        let file_is_test = f.rel.starts_with("rust/tests/");
+        for l in &f.lines {
+            if !l.code.contains("PACKED_VERSION") {
+                continue;
+            }
+            if l.code.contains("const PACKED_VERSION") {
+                version_defs.push((f.rel.clone(), l.number));
+            }
+            if file_is_test || l.in_test {
+                version_tested = true;
+            }
+        }
+    }
+    match version_defs.as_slice() {
+        [] => findings.push(Finding::new(
+            RULE_MAGIC,
+            "rust/src/quant/packed.rs",
+            1,
+            "const PACKED_VERSION not found — the packed-record header has no version \
+             source of truth",
+        )),
+        [_] => {}
+        [first, rest @ ..] => {
+            for (file, line) in rest {
+                findings.push(Finding::new(
+                    RULE_MAGIC,
+                    file,
+                    *line,
+                    format!(
+                        "PACKED_VERSION defined more than once (first at {}:{})",
+                        first.0, first.1
+                    ),
+                ));
+            }
+        }
+    }
+    if !version_defs.is_empty() && !version_tested {
+        let (file, line) = &version_defs[0];
+        findings.push(Finding::new(
+            RULE_MAGIC,
+            file,
+            *line,
+            "PACKED_VERSION has no golden-byte test reference",
+        ));
+    }
+}

@@ -1,0 +1,266 @@
+//! `dsq lint` — a repo-specific static analysis pass that turns
+//! cross-layer drift into a build failure.
+//!
+//! The DSQ system keeps one contract in several places at once: the
+//! format registry (`quant/format.rs`) must agree with the packed codec
+//! (`quant/packed.rs`), the cost model (`costmodel/formats.rs`), the
+//! benches, the CLI, the python mode-dispatch tables
+//! (`python/compile/layers.py`) and the artifact variant lists
+//! (`aot.py`, `runtime/artifact.rs`); the binary formats hang off magic
+//! constants; and the per-step hot path must not panic. No unit test in
+//! any single layer can see two layers drift apart — PR 4's
+//! wrong-kernel dispatch bug was exactly that. This module parses the
+//! source tree (lightweight line/token scanning, no syn/AST) and checks
+//! the invariants directly:
+//!
+//! | rule               | invariant                                           |
+//! |--------------------|-----------------------------------------------------|
+//! | `registry_coverage`| every registry row has quantizer/codec/cost/bench/CLI arms ([`coverage`]) |
+//! | `qcfg_sync`        | rust↔python mode tables, 100·E+M packing, variant lists agree ([`qcfg`]) |
+//! | `magic_constants`  | on-disk magics defined once + pinned by golden tests ([`magic`]) |
+//! | `panic_hygiene`    | no `unwrap`/`expect`/`panic!` on the hot path ([`panics`]) |
+//! | `lock_discipline`  | stash/prefetcher mutexes acquired in one global order ([`locks`]) |
+//!
+//! Escapes: `// dsq-lint: allow(<rule>, <reason>)` on the finding's
+//! line or the line above suppresses it; the reason is mandatory and
+//! the rule name must be real, so a typo'd escape is itself a finding.
+//!
+//! Run as `dsq lint [--root <dir>]` (exit 0 clean, 1 on findings) —
+//! wired into CI next to build/test/clippy — or in-process via
+//! [`run_lint`], which is how the drift-injection fixture tests prove
+//! each rule actually fires (`rust/tests/lint_drift.rs`).
+
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+pub mod coverage;
+pub mod locks;
+pub mod magic;
+pub mod panics;
+pub mod qcfg;
+pub mod source;
+
+use source::SourceFile;
+
+pub const RULE_COVERAGE: &str = "registry_coverage";
+pub const RULE_QCFG: &str = "qcfg_sync";
+pub const RULE_MAGIC: &str = "magic_constants";
+pub const RULE_PANIC: &str = "panic_hygiene";
+pub const RULE_LOCKS: &str = "lock_discipline";
+pub const RULE_ESCAPE: &str = "lint_escape";
+
+pub const RULES: &[&str] =
+    &[RULE_COVERAGE, RULE_QCFG, RULE_MAGIC, RULE_PANIC, RULE_LOCKS, RULE_ESCAPE];
+
+/// One lint violation, locatable as `file:line`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(
+        rule: &'static str,
+        file: impl Into<String>,
+        line: usize,
+        message: impl Into<String>,
+    ) -> Finding {
+        Finding { rule, file: file.into(), line, message: message.into() }
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "lint[{}] {}:{}: {}", self.rule, self.file, self.line, self.message)
+    }
+}
+
+/// The lint's view of the repo: the cross-layer contract files plus
+/// every `.rs` file under `rust/` (for the magic scan and the scoped
+/// hot-path rules).
+pub struct Tree {
+    files: Vec<SourceFile>,
+}
+
+/// Files the rules parse structurally; `run_lint` fails loudly if one
+/// is missing rather than skipping the invariants it carries.
+const REQUIRED: &[&str] = &[
+    "rust/src/quant/format.rs",
+    "rust/src/quant/packed.rs",
+    "rust/src/costmodel/formats.rs",
+    "rust/src/model/checkpoint.rs",
+    "rust/src/coordinator/cli.rs",
+    "rust/src/coordinator/session.rs",
+    "rust/src/runtime/artifact.rs",
+    "rust/benches/quantizer_hotpath.rs",
+    "rust/benches/stash_store.rs",
+    "python/compile/layers.py",
+    "python/compile/aot.py",
+    "python/compile/kernels/ref.py",
+];
+
+impl Tree {
+    /// Load the tree rooted at `root` (the directory holding `rust/`
+    /// and `python/`).
+    pub fn load(root: &Path) -> Result<Tree> {
+        let mut files = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for rel in REQUIRED {
+            let path = root.join(rel);
+            let content = std::fs::read_to_string(&path).map_err(|e| {
+                Error::Config(format!("dsq lint: cannot read required input {rel}: {e}"))
+            })?;
+            files.push(SourceFile::parse(rel, &content));
+            seen.insert(rel.to_string());
+        }
+        // Everything else under rust/: the magic scan is tree-wide, and
+        // the scoped rules (stash/, hot paths) pick by path prefix.
+        for dir in ["rust/src", "rust/tests", "rust/benches"] {
+            for (rel, content) in read_rs_tree(&root.join(dir), dir)? {
+                if seen.insert(rel.clone()) {
+                    files.push(SourceFile::parse(&rel, &content));
+                }
+            }
+        }
+        Ok(Tree { files })
+    }
+
+    /// The file at repo-relative path `rel` (must be in [`REQUIRED`]).
+    pub fn file(&self, rel: &str) -> &SourceFile {
+        self.files
+            .iter()
+            .find(|f| f.rel == rel)
+            .unwrap_or_else(|| panic!("lint input {rel} not loaded"))
+    }
+
+    /// Every loaded rust file.
+    pub fn rust_files(&self) -> impl Iterator<Item = &SourceFile> {
+        self.files.iter().filter(|f| f.rel.ends_with(".rs"))
+    }
+}
+
+/// Recursively collect `.rs` files under `dir` as (repo-relative path,
+/// content), deterministic order.
+fn read_rs_tree(dir: &Path, rel: &str) -> Result<Vec<(String, String)>> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return Ok(out); // a fixture tree may omit whole directories
+    };
+    let mut entries: Vec<_> = entries.filter_map(|e| e.ok()).collect();
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let name = e.file_name().to_string_lossy().into_owned();
+        let sub = format!("{rel}/{name}");
+        let path = e.path();
+        if path.is_dir() {
+            out.extend(read_rs_tree(&path, &sub)?);
+        } else if name.ends_with(".rs") {
+            let content = std::fs::read_to_string(&path)
+                .map_err(|e| Error::Config(format!("dsq lint: cannot read {sub}: {e}")))?;
+            out.push((sub, content));
+        }
+    }
+    Ok(out)
+}
+
+/// Lint report: surviving findings plus the rule count that ran.
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub rules_run: usize,
+}
+
+/// Run every rule over the tree at `root`, apply `dsq-lint: allow`
+/// escapes, and return the surviving findings sorted by location.
+pub fn run_lint(root: &Path) -> Result<Report> {
+    let tree = Tree::load(root)?;
+    let mut findings = Vec::new();
+    coverage::check(&tree, &mut findings);
+    qcfg::check(&tree, &mut findings);
+    magic::check(&tree, &mut findings);
+    panics::check(&tree, &mut findings);
+    locks::check(&tree, &mut findings);
+
+    // Apply escapes: an allow(rule, reason) on the finding's line or
+    // the line above suppresses it.
+    findings.retain(|fd| {
+        let Some(file) = tree.files.iter().find(|f| f.rel == fd.file) else { return true };
+        !allowed_at(file, fd.rule, fd.line)
+    });
+
+    // Malformed escapes are findings of their own: a typo'd rule name
+    // or an empty reason silently suppresses nothing forever.
+    for f in &tree.files {
+        for l in &f.lines {
+            if let Some((rule, reason)) = &l.allow {
+                if !RULES.contains(&rule.as_str()) {
+                    findings.push(Finding::new(
+                        RULE_ESCAPE,
+                        &f.rel,
+                        l.number,
+                        format!("allow({rule}, …) names an unknown rule (known: {RULES:?})"),
+                    ));
+                } else if reason.is_empty() {
+                    findings.push(Finding::new(
+                        RULE_ESCAPE,
+                        &f.rel,
+                        l.number,
+                        format!("allow({rule}) without a reason — say why the site is safe"),
+                    ));
+                }
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(Report { findings, rules_run: RULES.len() - 1 })
+}
+
+fn allowed_at(file: &SourceFile, rule: &str, line: usize) -> bool {
+    let has = |n: usize| {
+        n >= 1
+            && file
+                .lines
+                .get(n - 1)
+                .and_then(|l| l.allow.as_ref())
+                .is_some_and(|(r, why)| r == rule && !why.is_empty())
+    };
+    has(line) || has(line.saturating_sub(1))
+}
+
+/// Locate the repo root (the directory holding `rust/src/quant/format.rs`)
+/// by walking up from `start`. This is how `dsq lint` finds its inputs
+/// when invoked from the repo root, from `rust/`, or from a subdir.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start.to_path_buf());
+    while let Some(d) = dir {
+        if d.join("rust/src/quant/format.rs").is_file() {
+            return Some(d);
+        }
+        dir = d.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_root_walks_up() {
+        let here = std::env::current_dir().unwrap();
+        if let Some(root) = find_root(&here) {
+            assert!(root.join("rust/src/quant/format.rs").is_file());
+            assert_eq!(find_root(&root.join("rust/src")), Some(root));
+        }
+    }
+
+    #[test]
+    fn finding_display_is_clickable() {
+        let f = Finding::new(RULE_QCFG, "a/b.rs", 7, "drift");
+        assert_eq!(f.to_string(), "lint[qcfg_sync] a/b.rs:7: drift");
+    }
+}

@@ -1,0 +1,56 @@
+//! Rule `panic_hygiene`: no silent aborts on the training hot path.
+//!
+//! The stash store, the Session engine, and the packed codec run on
+//! every training step; a panic there tears down a run (and any future
+//! daemon serving many runs) instead of surfacing a contextual
+//! [`crate::Error`]. This rule denies `unwrap()` / `expect(…)` /
+//! `panic!` / `unreachable!` / `todo!` / `unimplemented!` in the
+//! hot-path modules outside `#[cfg(test)]`.
+//!
+//! Provably-infallible sites carry an escape:
+//!
+//! ```text
+//! // dsq-lint: allow(panic_hygiene, <why this cannot fire>)
+//! ```
+//!
+//! on the same or the preceding line. The reason is mandatory — an
+//! empty one is itself a finding — so every surviving panic documents
+//! its impossibility argument at the site.
+
+use super::{Finding, Tree, RULE_PANIC};
+
+/// Modules on the per-step hot path.
+pub const HOT_PATHS: &[&str] = &[
+    "rust/src/stash/",
+    "rust/src/coordinator/session.rs",
+    "rust/src/quant/packed.rs",
+];
+
+/// Panic-class tokens (searched in comment/string-stripped code).
+const DENIED: &[&str] =
+    &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+
+pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
+    for f in tree.rust_files() {
+        if !HOT_PATHS.iter().any(|p| f.rel.starts_with(p)) {
+            continue;
+        }
+        for l in f.code_lines() {
+            for tok in DENIED {
+                if l.code.contains(tok) {
+                    findings.push(Finding::new(
+                        RULE_PANIC,
+                        &f.rel,
+                        l.number,
+                        format!(
+                            "`{}` on the hot path — return a contextual crate::Error, or \
+                             annotate with `// dsq-lint: allow(panic_hygiene, <reason>)` \
+                             if provably infallible",
+                            tok.trim_start_matches('.')
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}

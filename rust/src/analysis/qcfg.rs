@@ -1,0 +1,301 @@
+//! Rule `qcfg_sync`: the cross-language `(mode, bits)` contract.
+//!
+//! The qcfg vector is the one value that crosses the rust/python
+//! boundary at runtime: `FormatSpec::mode_scalar` (rust) encodes a
+//! format family as a float mode, and `layers.py::quantize` (python,
+//! baked into the AOT artifact) dispatches on that same float. PR 4's
+//! costliest bug was exactly these two tables drifting apart — no unit
+//! test on either side could see it. This rule diffs them on every
+//! build:
+//!
+//! * the arms of `FormatSpec::mode_scalar` vs the `MODE_*` constants in
+//!   `python/compile/layers.py` (the greppable python mode table);
+//! * the python dispatch helpers must *use* the `MODE_*` constants —
+//!   a raw `mode == 2.0` literal would let the table rot silently;
+//! * the float-width packing (`100·E + M`) spelled identically in
+//!   `FormatSpec::qcfg_bits` and `kernels/ref.py::float_code`;
+//! * the artifact variant lists: `layers.py::_VARIANTS`, the
+//!   `train_<v>`/`quant_select_<v>` export keys and `endswith("_<v>")`
+//!   dispatch in `aot.py`, and the `"train_<v>"` routing literals in
+//!   `runtime/artifact.rs::train_variant_for`;
+//! * every registry family must map to a python variant family that is
+//!   actually in `_VARIANTS`.
+
+use std::collections::BTreeMap;
+
+use super::coverage::parse_registry;
+use super::source::SourceFile;
+use super::{Finding, Tree, RULE_QCFG};
+
+/// Family keys shared by both language's mode tables.
+const FAMILIES: &[&str] = &["fp32", "fixed", "bfp", "fixedsr", "float", "floatsr"];
+
+/// Parse `fn mode_scalar`'s arms into family → (mode, line).
+fn rust_modes(format_rs: &SourceFile) -> BTreeMap<String, (f64, usize)> {
+    let mut out = BTreeMap::new();
+    let Some(body) = format_rs.item_body("pub fn mode_scalar") else {
+        return out;
+    };
+    for l in body {
+        let Some((lhs, rhs)) = l.code.split_once("=>") else { continue };
+        let Ok(mode) = rhs.trim().trim_end_matches(',').parse::<f64>() else { continue };
+        let family = if lhs.contains("Fp32") {
+            "fp32"
+        } else if lhs.contains("Fixed") && lhs.contains("Stochastic") {
+            "fixedsr"
+        } else if lhs.contains("Fixed") {
+            "fixed"
+        } else if lhs.contains("Bfp") {
+            "bfp"
+        } else if lhs.contains("Float") && lhs.contains("Stochastic") {
+            "floatsr"
+        } else if lhs.contains("Float") {
+            "float"
+        } else {
+            continue;
+        };
+        out.insert(family.to_string(), (mode, l.number));
+    }
+    out
+}
+
+/// Parse the `MODE_<FAMILY> = <float>` constants out of `layers.py`.
+fn python_modes(layers_py: &SourceFile) -> BTreeMap<String, (f64, usize)> {
+    let mut out = BTreeMap::new();
+    for l in &layers_py.lines {
+        let t = l.text.trim();
+        let Some(rest) = t.strip_prefix("MODE_") else { continue };
+        let Some((name, value)) = rest.split_once('=') else { continue };
+        let Ok(mode) = value.trim().parse::<f64>() else { continue };
+        let family = name.trim().to_ascii_lowercase().replace('_', "");
+        out.insert(family, (mode, l.number));
+    }
+    out
+}
+
+/// Parse `_VARIANTS = ("both", "bfp", …)` from `layers.py`.
+fn python_variants(layers_py: &SourceFile) -> (Vec<String>, usize) {
+    for l in &layers_py.lines {
+        if let Some(rest) = l.text.trim().strip_prefix("_VARIANTS") {
+            let names = rest
+                .split('"')
+                .skip(1)
+                .step_by(2)
+                .map(str::to_string)
+                .collect();
+            return (names, l.number);
+        }
+    }
+    (Vec::new(), 1)
+}
+
+pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
+    let format_rs = tree.file("rust/src/quant/format.rs");
+    let layers_py = tree.file("python/compile/layers.py");
+    let aot_py = tree.file("python/compile/aot.py");
+    let ref_py = tree.file("python/compile/kernels/ref.py");
+    let artifact_rs = tree.file("rust/src/runtime/artifact.rs");
+
+    // ----- mode table diff ------------------------------------------------
+    let rust = rust_modes(format_rs);
+    let python = python_modes(layers_py);
+    for &family in FAMILIES {
+        match (rust.get(family), python.get(family)) {
+            (Some(&(rm, rl)), Some(&(pm, pl))) => {
+                if rm != pm {
+                    findings.push(Finding::new(
+                        RULE_QCFG,
+                        &layers_py.rel,
+                        pl,
+                        format!(
+                            "mode constant drift for family '{family}': python MODE table \
+                             says {pm} but FormatSpec::mode_scalar ({}:{rl}) says {rm} — \
+                             the artifact would dispatch this family to the wrong kernel",
+                            format_rs.rel
+                        ),
+                    ));
+                }
+            }
+            (Some(&(_, rl)), None) => findings.push(Finding::new(
+                RULE_QCFG,
+                &layers_py.rel,
+                1,
+                format!(
+                    "family '{family}' has a rust mode ({}:{rl}) but no MODE_* constant \
+                     in layers.py's mode table",
+                    format_rs.rel
+                ),
+            )),
+            (None, Some(&(_, pl))) => findings.push(Finding::new(
+                RULE_QCFG,
+                &layers_py.rel,
+                pl,
+                format!("python MODE constant for '{family}' has no FormatSpec::mode_scalar arm"),
+            )),
+            (None, None) => findings.push(Finding::new(
+                RULE_QCFG,
+                &format_rs.rel,
+                format_rs.item_line("pub fn mode_scalar"),
+                format!("family '{family}' missing from both mode tables"),
+            )),
+        }
+    }
+    // Modes must be distinct on each side (two families sharing a mode
+    // scalar would alias in the artifact).
+    for (side, table) in [("rust", &rust), ("python", &python)] {
+        let mut seen: BTreeMap<u64, &str> = BTreeMap::new();
+        for (family, &(mode, line)) in table {
+            if let Some(prev) = seen.insert(mode.to_bits(), family) {
+                let (file, line) = if side == "rust" {
+                    (&format_rs.rel, line)
+                } else {
+                    (&layers_py.rel, line)
+                };
+                findings.push(Finding::new(
+                    RULE_QCFG,
+                    file,
+                    line,
+                    format!("{side} mode table: families '{prev}' and '{family}' share mode {mode}"),
+                ));
+            }
+        }
+    }
+
+    // The python dispatch helpers must consume the table, not literals.
+    for helper in ["def _fixed_like", "def _float_like", "def quantize("] {
+        if let Some(body) = layers_py.item_py_body(helper) {
+            for l in body {
+                let code = l.text.split('#').next().unwrap_or("");
+                if let Some(at) = code.find("mode ==") {
+                    let rhs = code[at + "mode ==".len()..].trim_start();
+                    if rhs.starts_with(|c: char| c.is_ascii_digit()) {
+                        findings.push(Finding::new(
+                            RULE_QCFG,
+                            &layers_py.rel,
+                            l.number,
+                            "mode dispatch compares against a raw literal — use the MODE_* \
+                             table so `dsq lint` can diff it against FormatSpec::mode_scalar",
+                        ));
+                    }
+                }
+            }
+        } else {
+            findings.push(Finding::new(
+                RULE_QCFG,
+                &layers_py.rel,
+                1,
+                format!("dispatch helper `{helper}` not found in layers.py"),
+            ));
+        }
+    }
+
+    // ----- float width packing (100·E + M) --------------------------------
+    const PACKING: &str = "100 * exp_bits + man_bits";
+    for (f, ctx) in [(format_rs, "FormatSpec::qcfg_bits"), (ref_py, "float_code")] {
+        if !f.lines.iter().any(|l| l.text.contains(PACKING)) {
+            findings.push(Finding::new(
+                RULE_QCFG,
+                &f.rel,
+                1,
+                format!(
+                    "float qcfg width packing `{PACKING}` not spelled in {ctx} — the two \
+                     sides of the 100·E+M convention must stay literally greppable"
+                ),
+            ));
+        }
+    }
+
+    // ----- artifact variant lists -----------------------------------------
+    let (variants, vline) = python_variants(layers_py);
+    if variants.is_empty() {
+        findings.push(Finding::new(
+            RULE_QCFG,
+            &layers_py.rel,
+            vline,
+            "_VARIANTS tuple not found in layers.py",
+        ));
+        return;
+    }
+    let aot_text = |pat: &str| aot_py.lines.iter().any(|l| l.text.contains(pat));
+    for v in &variants {
+        for key in [format!("\"train_{v}\""), format!("\"quant_select_{v}\"")] {
+            if !aot_text(&key) {
+                findings.push(Finding::new(
+                    RULE_QCFG,
+                    &aot_py.rel,
+                    1,
+                    format!(
+                        "variant '{v}' ({}:{vline}) has no {key} export in aot.py",
+                        layers_py.rel
+                    ),
+                ));
+            }
+        }
+        // "both" is the suffix-dispatch fallback; the single-family
+        // variants each need an endswith arm.
+        if v != "both" && !aot_text(&format!("endswith(\"_{v}\")")) {
+            findings.push(Finding::new(
+                RULE_QCFG,
+                &aot_py.rel,
+                1,
+                format!("aot.py main() has no endswith(\"_{v}\") dispatch for variant '{v}'"),
+            ));
+        }
+        // The rust router must be able to pick the variant.
+        if !artifact_rs
+            .code_lines()
+            .any(|l| l.text.contains(&format!("\"train_{v}\"")))
+        {
+            findings.push(Finding::new(
+                RULE_QCFG,
+                &artifact_rs.rel,
+                artifact_rs.item_line("pub fn train_variant_for"),
+                format!("runtime/artifact.rs never routes to \"train_{v}\" (variant '{v}')"),
+            ));
+        }
+    }
+    // Reverse direction: every set_quantizers("X") literal in aot.py
+    // must name a registered variant.
+    for l in &aot_py.lines {
+        if let Some(at) = l.text.find("set_quantizers(\"") {
+            let rest = &l.text[at + "set_quantizers(\"".len()..];
+            if let Some(end) = rest.find('"') {
+                let v = &rest[..end];
+                if !variants.iter().any(|x| x == v) {
+                    findings.push(Finding::new(
+                        RULE_QCFG,
+                        &aot_py.rel,
+                        l.number,
+                        format!("set_quantizers(\"{v}\") names a variant not in _VARIANTS"),
+                    ));
+                }
+            }
+        }
+    }
+    // Every registry family must land in a compiled variant.
+    for row in parse_registry(format_rs) {
+        let needed = match (row.keyword.as_str(), row.suffix.as_str()) {
+            ("fp", "") => None, // identity in every variant
+            ("fixed", _) => Some("fixed"),
+            ("bfp", _) => Some("bfp"),
+            ("fp", s) if s.starts_with('e') => Some("float"),
+            _ => None, // unknown families are registry_coverage findings
+        };
+        if let Some(v) = needed {
+            if !variants.iter().any(|x| x == v) {
+                findings.push(Finding::new(
+                    RULE_QCFG,
+                    &layers_py.rel,
+                    vline,
+                    format!(
+                        "registry family '{}' ({}:{}) needs python variant '{v}', which is \
+                         not in _VARIANTS",
+                        row.name(),
+                        format_rs.rel,
+                        row.line
+                    ),
+                ));
+            }
+        }
+    }
+}

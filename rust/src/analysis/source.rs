@@ -1,0 +1,297 @@
+//! Lexical substrate of `dsq lint`: files as annotated line streams.
+//!
+//! The linter never builds an AST — every rule works on lines that have
+//! been pre-annotated with the three facts the rules need:
+//!
+//! * `code`: the line with string literals blanked and `//` comments
+//!   stripped, so token scans (`.unwrap()`, `=>`, `.lock()`) cannot
+//!   match inside strings or prose;
+//! * `in_test`: whether the line sits inside a `#[cfg(test)]` item
+//!   (tracked by brace depth), so hot-path rules skip test code;
+//! * `allow`: a parsed `// dsq-lint: allow(<rule>, <reason>)` escape,
+//!   which suppresses findings of `<rule>` on the same and the next
+//!   line.
+//!
+//! Known lexical limits (documented, not bugs): block comments
+//! (`/* */`) are not tracked — the tree is rustfmt'd and uses line
+//! comments throughout — and raw strings are treated as plain strings.
+
+/// One annotated source line.
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// Raw text (used by the magic-byte scan, which must see literals).
+    pub text: String,
+    /// Text with string/char literals blanked and `//` comments cut.
+    pub code: String,
+    /// Inside a `#[cfg(test)]` item.
+    pub in_test: bool,
+    /// `dsq-lint: allow(<rule>, <reason>)` directive on this line.
+    pub allow: Option<(String, String)>,
+}
+
+/// One loaded file: repo-relative path + annotated lines.
+pub struct SourceFile {
+    /// Repo-relative path, forward slashes.
+    pub rel: String,
+    pub lines: Vec<Line>,
+}
+
+/// Blank string/char literal contents and strip `//` comments so token
+/// scans see only code. Handles `"…"` (with escapes), `b"…"`, and
+/// character literals (`'x'`, `'\n'`) without tripping on lifetimes.
+fn strip_to_code(text: &str) -> String {
+    let bytes = text.as_bytes();
+    let mut out = String::with_capacity(text.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        let c = bytes[i] as char;
+        match c {
+            '/' if i + 1 < bytes.len() && bytes[i + 1] == b'/' => break,
+            '"' => {
+                out.push('"');
+                i += 1;
+                while i < bytes.len() {
+                    match bytes[i] {
+                        b'\\' => {
+                            out.push(' ');
+                            if i + 1 < bytes.len() {
+                                out.push(' ');
+                            }
+                            i += 2;
+                        }
+                        b'"' => {
+                            out.push('"');
+                            i += 1;
+                            break;
+                        }
+                        _ => {
+                            out.push(' ');
+                            i += 1;
+                        }
+                    }
+                }
+            }
+            '\'' => {
+                // Char literal iff it closes within a few bytes
+                // (`'x'`, `'\n'`, `'\u{7f}'`); otherwise a lifetime.
+                let close = (i + 1..bytes.len().min(i + 12)).find(|&j| {
+                    bytes[j] == b'\'' && !(j == i + 1) && bytes[j - 1] != b'\\'
+                });
+                match close {
+                    Some(j) if bytes[i + 1] == b'\\' || j == i + 2 => {
+                        for _ in i..=j {
+                            out.push(' ');
+                        }
+                        i = j + 1;
+                    }
+                    _ => {
+                        out.push('\'');
+                        i += 1;
+                    }
+                }
+            }
+            _ => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Parse a `dsq-lint: allow(<rule>, <reason>)` directive from raw
+/// text. The rule must be a bare `snake_case` identifier — so prose
+/// *describing* the directive syntax with `<rule>`-style placeholders
+/// (this module's docs, for one) never registers as an escape.
+fn parse_allow(text: &str) -> Option<(String, String)> {
+    let at = text.find("dsq-lint: allow(")?;
+    let inner = &text[at + "dsq-lint: allow(".len()..];
+    let close = inner.rfind(')')?;
+    let inner = &inner[..close];
+    let (rule, reason) = match inner.split_once(',') {
+        Some((r, why)) => (r.trim().to_string(), why.trim().to_string()),
+        None => (inner.trim().to_string(), String::new()),
+    };
+    if rule.is_empty() || !rule.chars().all(|c| c.is_ascii_lowercase() || c == '_') {
+        return None;
+    }
+    Some((rule, reason))
+}
+
+impl SourceFile {
+    /// Annotate `content` as the file at `rel` (repo-relative path).
+    pub fn parse(rel: &str, content: &str) -> SourceFile {
+        let mut lines = Vec::new();
+        let mut depth: i64 = 0;
+        // `Some(d)` while inside a #[cfg(test)] item that opened at
+        // brace depth `d`; `Pending` between the attribute and its item
+        // body.
+        let mut test_at: Option<i64> = None;
+        let mut test_pending = false;
+        let mut test_pending_since: i64 = 0;
+        for (idx, raw) in content.lines().enumerate() {
+            let code = strip_to_code(raw);
+            let opens = code.matches('{').count() as i64;
+            let closes = code.matches('}').count() as i64;
+
+            let mut in_test = test_at.is_some() || test_pending;
+            if !in_test && code.contains("#[cfg(test)]") {
+                test_pending = true;
+                test_pending_since = depth;
+                in_test = true;
+            }
+
+            depth += opens - closes;
+
+            if test_pending {
+                if opens > 0 {
+                    // The item body opened; the region lives until depth
+                    // returns to the attribute's level.
+                    test_at = Some(test_pending_since);
+                    test_pending = false;
+                } else if code.trim_end().ends_with(';') {
+                    // Braceless item (`#[cfg(test)] use …;`).
+                    test_pending = false;
+                }
+            }
+            if let Some(d) = test_at {
+                if depth <= d {
+                    test_at = None; // closing line still counts as test
+                }
+            }
+
+            lines.push(Line {
+                number: idx + 1,
+                text: raw.to_string(),
+                code,
+                in_test,
+                allow: parse_allow(raw),
+            });
+        }
+        SourceFile { rel: rel.to_string(), lines }
+    }
+
+    /// Non-test lines (the hot-path rules' view).
+    pub fn code_lines(&self) -> impl Iterator<Item = &Line> {
+        self.lines.iter().filter(|l| !l.in_test)
+    }
+
+    /// The body of the item whose header line contains `header_pat`
+    /// (e.g. `"fn codec_tag"`): the lines from the header through the
+    /// matching closing brace. `None` if the header is absent.
+    pub fn item_body(&self, header_pat: &str) -> Option<&[Line]> {
+        let start = self.lines.iter().position(|l| l.code.contains(header_pat))?;
+        let mut depth = 0i64;
+        let mut opened = false;
+        for (off, l) in self.lines[start..].iter().enumerate() {
+            depth += l.code.matches('{').count() as i64;
+            depth -= l.code.matches('}').count() as i64;
+            if l.code.contains('{') {
+                opened = true;
+            }
+            if opened && depth <= 0 {
+                return Some(&self.lines[start..=start + off]);
+            }
+        }
+        Some(&self.lines[start..])
+    }
+
+    /// Python sibling of [`Self::item_body`]: the `def` whose header
+    /// line contains `header_pat`, delimited by indentation (blank
+    /// lines inside the body are kept).
+    pub fn item_py_body(&self, header_pat: &str) -> Option<&[Line]> {
+        let start = self.lines.iter().position(|l| l.text.contains(header_pat))?;
+        let indent_of = |s: &str| s.len() - s.trim_start().len();
+        let indent = indent_of(&self.lines[start].text);
+        let mut end = start;
+        for (off, l) in self.lines[start + 1..].iter().enumerate() {
+            if l.text.trim().is_empty() {
+                continue;
+            }
+            if indent_of(&l.text) <= indent {
+                break;
+            }
+            end = start + 1 + off;
+        }
+        Some(&self.lines[start..=end])
+    }
+
+    /// Line number of the item header containing `header_pat` (1 when
+    /// absent, so findings always carry a clickable location).
+    pub fn item_line(&self, header_pat: &str) -> usize {
+        self.lines
+            .iter()
+            .find(|l| l.code.contains(header_pat))
+            .map(|l| l.number)
+            .unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_and_comments_are_blanked() {
+        let c = strip_to_code(r#"let x = "a.unwrap()"; // .expect(boom)"#);
+        assert!(!c.contains("unwrap"));
+        assert!(!c.contains("expect"));
+        assert!(c.contains("let x ="));
+    }
+
+    #[test]
+    fn char_literals_do_not_eat_the_line() {
+        let c = strip_to_code("if c == '\"' { x.unwrap() }");
+        assert!(c.contains(".unwrap()"), "{c}");
+        let c = strip_to_code("fn f<'a>(x: &'a str) { x.unwrap() }");
+        assert!(c.contains(".unwrap()"), "{c}");
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn hot() {\n    x.unwrap();\n}\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\nfn hot2() { z.unwrap(); }\n";
+        let f = SourceFile::parse("x.rs", src);
+        let tests: Vec<usize> =
+            f.lines.iter().filter(|l| l.in_test).map(|l| l.number).collect();
+        assert_eq!(tests, vec![4, 5, 6, 7]);
+        assert!(!f.lines[7].in_test, "code after the test mod is hot again");
+    }
+
+    #[test]
+    fn braceless_cfg_test_item_closes() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn hot() { x.unwrap(); }\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.lines[1].in_test);
+        assert!(!f.lines[2].in_test);
+    }
+
+    #[test]
+    fn allow_directives_parse() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "// dsq-lint: allow(panic_hygiene, guarded by is_passthrough above)\nx.unwrap();\n",
+        );
+        let (rule, reason) = f.lines[0].allow.clone().unwrap();
+        assert_eq!(rule, "panic_hygiene");
+        assert!(reason.contains("is_passthrough"));
+    }
+
+    #[test]
+    fn allow_placeholders_in_prose_do_not_register() {
+        let f = SourceFile::parse(
+            "x.rs",
+            "//! Escapes: `// dsq-lint: allow(<rule>, <reason>)` suppress findings.\n",
+        );
+        assert!(f.lines[0].allow.is_none(), "angle-bracket placeholders are prose, not escapes");
+    }
+
+    #[test]
+    fn item_body_spans_the_braces() {
+        let src = "fn a() {\n  1\n}\nfn b() {\n  2\n}\n";
+        let f = SourceFile::parse("x.rs", src);
+        let body = f.item_body("fn a").unwrap();
+        assert_eq!(body.len(), 3);
+        assert_eq!(f.item_line("fn b"), 4);
+    }
+}

@@ -128,6 +128,84 @@ pub fn header(title: &str) {
     println!("{}", "-".repeat(84));
 }
 
+/// Machine-readable bench report (ROADMAP track 3b): results collected
+/// during a run and serialized as `BENCH_<name>.json` at the repo root,
+/// so successive runs leave a comparable perf trajectory instead of
+/// scrollback. Hand-rolled JSON (no serde offline), same convention as
+/// the stash store's `stash.json` index.
+pub struct JsonReport {
+    name: String,
+    profile: String,
+    entries: Vec<String>,
+}
+
+impl JsonReport {
+    /// `name` becomes the file name (`BENCH_<name>.json`); `profile` is
+    /// recorded so smoke and full runs are never compared to each other.
+    pub fn new(name: &str, profile: &str) -> JsonReport {
+        JsonReport { name: name.to_string(), profile: profile.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one result; `elems_per_iter` adds a derived
+    /// elements-per-second throughput field when meaningful.
+    pub fn push(&mut self, r: &BenchResult, elems_per_iter: Option<f64>) {
+        let mut e = format!(
+            "{{\"name\": {}, \"iters\": {}, \"median_ns\": {:.1}, \"mean_ns\": {:.1}, \
+             \"stddev_ns\": {:.1}, \"min_ns\": {:.1}, \"max_ns\": {:.1}",
+            json_str(&r.name),
+            r.iters,
+            r.median_ns,
+            r.mean_ns,
+            r.stddev_ns,
+            r.min_ns,
+            r.max_ns
+        );
+        if let Some(n) = elems_per_iter {
+            e.push_str(&format!(", \"elem_per_s\": {:.0}", r.throughput(n)));
+        }
+        e.push('}');
+        self.entries.push(e);
+    }
+
+    /// Serialize the report.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"bench\": {},\n  \"profile\": {},\n  \"results\": [\n    {}\n  ]\n}}\n",
+            json_str(&self.name),
+            json_str(&self.profile),
+            self.entries.join(",\n    ")
+        )
+    }
+
+    /// Write `BENCH_<name>.json` at the repo root (found by walking up
+    /// from the current directory — `cargo bench` runs in `rust/`).
+    /// Returns the path written.
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let cwd = std::env::current_dir()?;
+        let root = crate::analysis::find_root(&cwd).unwrap_or(cwd);
+        let path = root.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+}
+
+/// Minimal JSON string escape (quotes and backslashes; bench names are
+/// plain ASCII).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -155,6 +233,28 @@ mod tests {
         assert!(fmt_ns(5_000.0).contains("µs"));
         assert!(fmt_ns(5_000_000.0).contains("ms"));
         assert!(fmt_ns(5e9).contains("s"));
+    }
+
+    #[test]
+    fn json_report_escapes_and_derives_throughput() {
+        let mut j = JsonReport::new("quantizer", "smoke");
+        let r = BenchResult {
+            name: "enc \"x\"".into(),
+            iters: 3,
+            mean_ns: 1e9,
+            median_ns: 1e9,
+            stddev_ns: 0.0,
+            min_ns: 1e9,
+            max_ns: 1e9,
+        };
+        j.push(&r, Some(500.0));
+        j.push(&r, None);
+        let s = j.to_json();
+        assert!(s.contains("\"bench\": \"quantizer\""));
+        assert!(s.contains("\"profile\": \"smoke\""));
+        assert!(s.contains("\\\"x\\\""));
+        assert!(s.contains("\"elem_per_s\": 500"));
+        assert_eq!(s.matches("\"iters\"").count(), 2);
     }
 
     #[test]

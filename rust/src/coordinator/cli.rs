@@ -41,6 +41,7 @@ pub fn dispatch(args: &[String]) -> i32 {
         "roofline" => cmd_roofline(rest),
         "experiment" => cmd_experiment(rest),
         "formats" => cmd_formats(),
+        "lint" => cmd_lint(rest),
         "stash" => cmd_stash(rest),
         "info" => cmd_info(rest),
         "version" => {
@@ -76,6 +77,9 @@ subcommands:
   experiment   regenerate a paper table/figure (table1-iwslt, table1-glue,
                table4, table5, table6, figure1, all)
   formats      list the registered number formats (the --schedule grammar)
+  lint         check the cross-layer invariants (registry coverage,
+               rust/python qcfg sync, magic constants, panic hygiene,
+               lock discipline); dsq lint [--root <repo-dir>]
   stash        inspect a stash-store run dir (per-slot residency + traffic)
   info         artifact manifest summary
   version      print version
@@ -434,6 +438,60 @@ fn cmd_formats() -> Result<()> {
         stash::BUDGET_GRAMMAR
     );
     Ok(())
+}
+
+/// `dsq lint [--root <dir>]`: run the cross-layer invariant checker
+/// ([`crate::analysis`]). Prints one `lint[rule] file:line: message`
+/// per finding; exit 0 when clean, 1 on findings (via [`Error::Lint`]),
+/// 2 on usage errors. Without `--root` the repo root is found by
+/// walking up from the current directory, so the subcommand works from
+/// the repo root, `rust/`, or any subdir.
+fn cmd_lint(args: &[String]) -> Result<()> {
+    let mut root: Option<std::path::PathBuf> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| Error::Config("--root needs a directory".into()))?;
+                root = Some(std::path::PathBuf::from(v));
+            }
+            other => {
+                return Err(Error::Config(format!("unknown lint flag '{other}'")));
+            }
+        }
+    }
+    let root = match root {
+        Some(r) => r,
+        None => {
+            let cwd = std::env::current_dir()?;
+            crate::analysis::find_root(&cwd).ok_or_else(|| {
+                Error::Config(format!(
+                    "cannot locate the repo root from {} (no rust/src/quant/format.rs \
+                     above it); pass --root <dir>",
+                    cwd.display()
+                ))
+            })?
+        }
+    };
+    let report = crate::analysis::run_lint(&root)?;
+    for f in &report.findings {
+        println!("{f}");
+    }
+    if report.findings.is_empty() {
+        println!(
+            "dsq lint: {} rules over {}: clean",
+            report.rules_run,
+            root.display()
+        );
+        Ok(())
+    } else {
+        Err(Error::Lint(format!(
+            "{} finding(s) — cross-layer invariants violated",
+            report.findings.len()
+        )))
+    }
 }
 
 /// `dsq stash <run-dir>`: print the stash store's index — per-slot

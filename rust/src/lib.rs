@@ -23,6 +23,7 @@
 //! Python never runs at request time: once `make artifacts` has produced
 //! the HLO text, the `dsq` binary is self-contained.
 
+pub mod analysis;
 pub mod bench;
 pub mod coordinator;
 pub mod costmodel;
@@ -53,6 +54,8 @@ pub enum Error {
     Config(String),
     #[error("training diverged: {0}")]
     Diverged(String),
+    #[error("lint: {0}")]
+    Lint(String),
 }
 
 pub type Result<T> = std::result::Result<T, Error>;

@@ -28,6 +28,27 @@
 //! `e<E>m<M>[sr]` spelling, so bf16 (`e8m7`), fp16 (`e5m10`) and
 //! stochastic-rounding variants fall out of the same grammar with no
 //! extra rows.
+//!
+//! # Adding a format
+//!
+//! Each item below is enforced by `dsq lint` (`registry_coverage` /
+//! `qcfg_sync` in [`crate::analysis`]) — skipping one is a build
+//! failure, not a latent bug:
+//!
+//! 1. a [`FORMAT_REGISTRY`] row ([`FormatFamily`]: keyword, suffix,
+//!    width range, constructor, help);
+//! 2. a quantizer arm in [`FormatSpec::quantize_into_stream`];
+//! 3. codec arms in `quant/packed.rs`: `codec_tag` (a fresh tag
+//!    number), `width_byte` if the width encoding is non-trivial, and
+//!    the inverse `spec_from_tag` arm for that tag;
+//! 4. cost-model arms in `costmodel/formats.rs`: `storage_bits` and
+//!    `mac_cost`;
+//! 5. if the family introduces a new `mode_scalar` value: the matching
+//!    `MODE_*` constant in `python/compile/layers.py`, dispatch in its
+//!    helpers, and (for a new compiled variant) `_VARIANTS` +
+//!    `aot.py` exports + `runtime/artifact.rs` routing;
+//! 6. nothing for the benches or `dsq formats` — both enumerate the
+//!    registry, and the lint checks they still do.
 
 use crate::util::rng::Pcg32;
 use crate::{Error, Result};

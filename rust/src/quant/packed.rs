@@ -369,6 +369,7 @@ impl Codec for FormatSpec {
                     }
                     w.align();
                 }
+                // dsq-lint: allow(panic_hygiene, fp32 took the is_passthrough fast path above)
                 FormatSpec::Fp32 => unreachable!("fp32 is passthrough"),
             }
             out
@@ -399,6 +400,7 @@ impl Codec for FormatSpec {
                 (len / inner) * row_bytes(inner) + row_bytes(len % inner)
             }
             FormatSpec::Float { .. } => (bits * len).div_ceil(8),
+            // dsq-lint: allow(panic_hygiene, fp32 returned via the is_passthrough arm above)
             FormatSpec::Fp32 => unreachable!("fp32 is passthrough"),
         }
     }
@@ -511,6 +513,7 @@ impl PackedTensor {
                     out.push(float_value(r.take(bits), exp_bits, man_bits));
                 }
             }
+            // dsq-lint: allow(panic_hygiene, fp32 decoded via the is_passthrough fast path above)
             FormatSpec::Fp32 => unreachable!("fp32 is passthrough"),
         }
         out
@@ -672,6 +675,22 @@ mod tests {
         let p = FormatSpec::fixed(4).encode(&x, &[4], 4);
         assert_eq!(p.decode(), vec![4.0, 1.0, -2.0, 0.0]);
         assert_eq!(p.payload(), &[0x81, 0x14, 0x0E]);
+    }
+
+    #[test]
+    fn serialized_header_golden_bytes() {
+        // Pins the on-disk record header — PACKED_VERSION, family tag,
+        // width byte, flags — so a header change is a deliberate edit
+        // here, not a silent format break (`dsq lint` enforces that this
+        // reference exists).
+        let x = vec![4.0f32, 1.3, -2.5, 0.4];
+        let p = FormatSpec::fixed(4).encode(&x, &[4], 4);
+        let mut bytes = Vec::new();
+        p.write_into(&mut bytes).unwrap();
+        assert_eq!(PACKED_VERSION, 1);
+        assert_eq!(&bytes[..4], &[1, 1, 4, 0], "version, fixed tag, width, flags");
+        let back = PackedTensor::read_from(&mut bytes.as_slice()).unwrap();
+        assert_eq!(back, p);
     }
 
     #[test]

@@ -603,9 +603,18 @@ impl StashStore {
             if self.spill.is_none() {
                 self.spill = Some(SpillFile::create(self.dir.join(SEGMENT_FILE))?);
             }
-            let file = self.spill.as_mut().expect("just created");
+            let Some(file) = self.spill.as_mut() else {
+                return Err(Error::Config(
+                    "stash spill segment unavailable right after creation".into(),
+                ));
+            };
             let t = tensor_mut(state, n, id);
-            let TensorData::Packed(p) = &t.data else { unreachable!("victim is resident") };
+            let TensorData::Packed(p) = &t.data else {
+                return Err(Error::Config(format!(
+                    "stash budget victim slot {id} is not resident — \
+                     store index and model state are out of sync"
+                )));
+            };
             let handle = file.append(p)?;
             self.meter.spill_write_bytes += handle.record_len as u64;
             let shape = t.shape.clone();

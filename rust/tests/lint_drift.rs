@@ -1,0 +1,319 @@
+//! Drift-injection tests for `dsq lint`: each fixture copies the real
+//! contract files into a temp tree, injects exactly the drift class a
+//! rule exists to catch, and asserts the lint (a) exits nonzero and
+//! (b) names the right rule, file and line. The clean-tree test pins
+//! the other direction: HEAD itself must lint clean, so a rule that
+//! starts firing spuriously fails here before it fails CI.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use dsq::analysis::{self, run_lint, Finding};
+
+/// The repo root: the bench/test cwd is `rust/`, so walk up from the
+/// manifest dir.
+fn repo_root() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    analysis::find_root(&manifest).expect("repo root above CARGO_MANIFEST_DIR")
+}
+
+/// Fresh scratch dir per fixture (no tempfile crate offline).
+fn scratch(tag: &str) -> PathBuf {
+    static N: AtomicU32 = AtomicU32::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "dsq-lint-fixture-{}-{}-{}",
+        std::process::id(),
+        N.fetch_add(1, Ordering::Relaxed),
+        tag
+    ));
+    if dir.exists() {
+        fs::remove_dir_all(&dir).expect("clear stale fixture dir");
+    }
+    fs::create_dir_all(&dir).expect("create fixture dir");
+    dir
+}
+
+/// Copy the lint's contract files from the real repo into `dst`. The
+/// resulting tree is the minimal input `run_lint` accepts; the scoped
+/// rules (panic hygiene, locks) additionally see whatever the fixture
+/// adds under `rust/src/stash/`.
+fn copy_contract_files(root: &Path, dst: &Path) {
+    const FILES: &[&str] = &[
+        "rust/src/quant/format.rs",
+        "rust/src/quant/packed.rs",
+        "rust/src/costmodel/formats.rs",
+        "rust/src/model/checkpoint.rs",
+        "rust/src/coordinator/cli.rs",
+        "rust/src/coordinator/session.rs",
+        "rust/src/runtime/artifact.rs",
+        "rust/benches/quantizer_hotpath.rs",
+        "rust/benches/stash_store.rs",
+        "python/compile/layers.py",
+        "python/compile/aot.py",
+        "python/compile/kernels/ref.py",
+    ];
+    for rel in FILES {
+        let to = dst.join(rel);
+        fs::create_dir_all(to.parent().unwrap()).expect("mkdir");
+        fs::copy(root.join(rel), &to).unwrap_or_else(|e| panic!("copy {rel}: {e}"));
+    }
+}
+
+/// Rewrite one file in the fixture tree by exact substring replacement,
+/// panicking if the needle is gone (so a refactor of the real file
+/// breaks the fixture loudly instead of testing nothing).
+fn rewrite(dst: &Path, rel: &str, from: &str, to: &str) {
+    let path = dst.join(rel);
+    let text = fs::read_to_string(&path).expect("read fixture file");
+    assert!(
+        text.contains(from),
+        "fixture needle {from:?} not found in {rel} — update the drift test"
+    );
+    fs::write(&path, text.replace(from, to)).expect("write fixture file");
+}
+
+fn findings_for<'a>(fs: &'a [Finding], rule: &str) -> Vec<&'a Finding> {
+    fs.iter().filter(|f| f.rule == rule).collect()
+}
+
+#[test]
+fn head_tree_lints_clean() {
+    let report = run_lint(&repo_root()).expect("lint runs on HEAD");
+    assert!(
+        report.findings.is_empty(),
+        "HEAD must lint clean; got:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    assert_eq!(report.rules_run, 5);
+}
+
+#[test]
+fn fixture_tree_lints_clean_unmodified() {
+    // The copy itself must be clean, or every drift assertion below
+    // would be testing copy artifacts rather than the injected drift.
+    let dst = scratch("clean");
+    copy_contract_files(&repo_root(), &dst);
+    let report = run_lint(&dst).expect("lint runs on fixture");
+    assert!(
+        report.findings.is_empty(),
+        "unmodified fixture must lint clean; got:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn skewed_python_mode_constant_is_a_qcfg_finding() {
+    // The PR-4 bug class: python's BFP mode scalar silently disagreeing
+    // with rust's. layers.py carries `MODE_BFP = 2.0`; skew it.
+    let dst = scratch("mode-skew");
+    copy_contract_files(&repo_root(), &dst);
+    rewrite(&dst, "python/compile/layers.py", "MODE_BFP = 2.0", "MODE_BFP = 7.0");
+    let report = run_lint(&dst).expect("lint runs");
+    let hits = findings_for(&report.findings, "qcfg_sync");
+    assert!(
+        !hits.is_empty(),
+        "mode skew must be a qcfg_sync finding; all findings:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    let named = hits.iter().any(|f| {
+        f.file == "python/compile/layers.py" && f.line > 0 && f.message.contains("bfp")
+    });
+    assert!(named, "finding must name layers.py, a line, and the bfp family: {hits:?}");
+    fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn deleted_codec_arm_is_a_coverage_finding() {
+    // Remove the Bfp arm from `codec_tag` — the registry row survives,
+    // so the coverage matrix has a hole the codec can no longer fill.
+    let dst = scratch("codec-arm");
+    copy_contract_files(&repo_root(), &dst);
+    let path = dst.join("rust/src/quant/packed.rs");
+    let text = fs::read_to_string(&path).expect("read packed.rs");
+    let filtered: Vec<&str> = text
+        .lines()
+        .filter(|l| !(l.contains("FormatSpec::Bfp") && l.contains("=> 3")))
+        .collect();
+    assert!(
+        filtered.len() < text.lines().count(),
+        "expected to delete the Bfp codec_tag arm — update the drift test"
+    );
+    fs::write(&path, filtered.join("\n")).expect("write packed.rs");
+    let report = run_lint(&dst).expect("lint runs");
+    let hits = findings_for(&report.findings, "registry_coverage");
+    assert!(
+        hits.iter().any(|f| f.file == "rust/src/quant/packed.rs"
+            && f.line > 0
+            && f.message.to_lowercase().contains("bfp")),
+        "missing codec arm must be a registry_coverage finding naming packed.rs + bfp:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn duplicated_checkpoint_magic_is_a_magic_finding() {
+    // Point the schedule writer at the checkpoint magic: the literal
+    // b"DSQCKPT2" is now const-defined twice, and b"DSQSCHD1" vanishes
+    // from the tree entirely — both are magic_constants findings.
+    let dst = scratch("magic-dup");
+    copy_contract_files(&repo_root(), &dst);
+    rewrite(&dst, "rust/src/model/checkpoint.rs", "b\"DSQSCHD1\"", "b\"DSQCKPT2\"");
+    let report = run_lint(&dst).expect("lint runs");
+    let hits = findings_for(&report.findings, "magic_constants");
+    assert!(
+        hits.iter().any(|f| f.file == "rust/src/model/checkpoint.rs"
+            && f.line > 0
+            && f.message.contains("DSQCKPT2")),
+        "duplicated magic must be a magic_constants finding naming checkpoint.rs:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn unannotated_hot_path_unwrap_is_a_panic_finding_and_allow_clears_it() {
+    let dst = scratch("panic");
+    copy_contract_files(&repo_root(), &dst);
+    let stash = dst.join("rust/src/stash/prefetch.rs");
+    fs::create_dir_all(stash.parent().unwrap()).expect("mkdir stash");
+    fs::write(
+        &stash,
+        "pub fn peek(v: &[u8]) -> u8 {\n    *v.first().unwrap()\n}\n",
+    )
+    .expect("write fixture stash file");
+    let report = run_lint(&dst).expect("lint runs");
+    let hits = findings_for(&report.findings, "panic_hygiene");
+    assert!(
+        hits.iter()
+            .any(|f| f.file == "rust/src/stash/prefetch.rs" && f.line == 2),
+        "hot-path unwrap must be a panic_hygiene finding at line 2:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+
+    // The escape hatch, with a real rule name and reason, clears it.
+    // (The directive is assembled at runtime so the linter scanning
+    // THIS file on HEAD never sees it as a live escape.)
+    let allow = format!("// dsq-lint{}", ": allow(panic_hygiene, fixture proves the escape works)");
+    fs::write(
+        &stash,
+        format!("pub fn peek(v: &[u8]) -> u8 {{\n    {allow}\n    *v.first().unwrap()\n}}\n"),
+    )
+    .expect("rewrite fixture stash file");
+    let report = run_lint(&dst).expect("lint runs");
+    assert!(
+        report.findings.is_empty(),
+        "annotated unwrap must lint clean:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn typoed_allow_rule_is_itself_a_finding() {
+    let dst = scratch("escape");
+    copy_contract_files(&repo_root(), &dst);
+    let stash = dst.join("rust/src/stash/prefetch.rs");
+    fs::create_dir_all(stash.parent().unwrap()).expect("mkdir stash");
+    // Assembled at runtime so the linter scanning THIS file on HEAD
+    // never sees the (deliberately) typo'd escape.
+    let allow = format!("// dsq-lint{}", ": allow(panic_hygeine, typo'd rule never suppresses)");
+    fs::write(
+        &stash,
+        format!("pub fn peek(v: &[u8]) -> u8 {{\n    {allow}\n    *v.first().unwrap()\n}}\n"),
+    )
+    .expect("write fixture stash file");
+    let report = run_lint(&dst).expect("lint runs");
+    let escape = findings_for(&report.findings, "lint_escape");
+    let panic = findings_for(&report.findings, "panic_hygiene");
+    assert!(!escape.is_empty(), "typo'd allow must be a lint_escape finding");
+    assert!(!panic.is_empty(), "typo'd allow must not suppress the underlying finding");
+    fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn inverted_lock_order_is_a_lock_discipline_finding() {
+    // The stash store has no mutexes yet; the rule exists for the
+    // readback prefetcher on the roadmap. Prove it fires on the classic
+    // AB/BA shape so the first real deadlock candidate is caught.
+    let dst = scratch("locks");
+    copy_contract_files(&repo_root(), &dst);
+    let stash = dst.join("rust/src/stash/prefetch.rs");
+    fs::create_dir_all(stash.parent().unwrap()).expect("mkdir stash");
+    fs::write(
+        &stash,
+        "use std::sync::Mutex;\n\
+         pub struct P { lru: Mutex<u32>, budget: Mutex<u32> }\n\
+         impl P {\n\
+             pub fn evict(&self) -> u32 {\n\
+                 let a = self.lru.lock().unwrap();\n\
+                 let b = self.budget.lock().unwrap();\n\
+                 *a + *b\n\
+             }\n\
+             pub fn prefetch(&self) -> u32 {\n\
+                 let b = self.budget.lock().unwrap();\n\
+                 let a = self.lru.lock().unwrap();\n\
+                 *a + *b\n\
+             }\n\
+         }\n",
+    )
+    .expect("write fixture stash file");
+    let report = run_lint(&dst).expect("lint runs");
+    let hits = findings_for(&report.findings, "lock_discipline");
+    assert!(
+        hits.iter().any(|f| f.file == "rust/src/stash/prefetch.rs"
+            && f.message.contains("lru")
+            && f.message.contains("budget")),
+        "AB/BA lock order must be a lock_discipline finding naming both mutexes:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn missing_required_input_fails_loudly() {
+    let dst = scratch("missing");
+    copy_contract_files(&repo_root(), &dst);
+    fs::remove_file(dst.join("python/compile/layers.py")).expect("remove layers.py");
+    let err = run_lint(&dst).expect_err("lint must refuse a tree missing a contract file");
+    assert!(
+        err.to_string().contains("layers.py"),
+        "error must name the missing input: {err}"
+    );
+    fs::remove_dir_all(&dst).ok();
+}
+
+/// End-to-end exit codes through the real binary (the CI entry point).
+/// Skipped when the integration-test env doesn't expose the binary.
+#[test]
+fn cli_lint_exit_codes() {
+    let Some(bin) = option_env!("CARGO_BIN_EXE_dsq") else { return };
+    let root = repo_root();
+    let ok = std::process::Command::new(bin)
+        .args(["lint", "--root"])
+        .arg(&root)
+        .output()
+        .expect("run dsq lint");
+    assert!(
+        ok.status.success(),
+        "dsq lint on HEAD must exit 0; stdout:\n{}\nstderr:\n{}",
+        String::from_utf8_lossy(&ok.stdout),
+        String::from_utf8_lossy(&ok.stderr)
+    );
+    assert!(String::from_utf8_lossy(&ok.stdout).contains("clean"));
+
+    // A drifted tree exits 1 (not 2: findings are not a config error).
+    let dst = scratch("cli");
+    copy_contract_files(&root, &dst);
+    rewrite(&dst, "python/compile/layers.py", "MODE_BFP = 2.0", "MODE_BFP = 7.0");
+    let bad = std::process::Command::new(bin)
+        .args(["lint", "--root"])
+        .arg(&dst)
+        .output()
+        .expect("run dsq lint on fixture");
+    assert_eq!(bad.status.code(), Some(1), "findings must exit 1");
+    assert!(String::from_utf8_lossy(&bad.stdout).contains("lint[qcfg_sync]"));
+    fs::remove_dir_all(&dst).ok();
+}
