@@ -1,0 +1,123 @@
+//! Bench: the replica exchange — one dequant–reduce–requant all-reduce
+//! round between two in-process replicas, across the registry formats.
+//!
+//! One "round" is the exchange's real per-step work on both ranks:
+//! encode the full (params, m, v) state into packed v2 wire records,
+//! meet at the ring barrier, decode every peer frame, mean, and requant
+//! at salt 0. The scoped-thread spawn that hosts the two replicas is
+//! inside the timed region — that is the price the in-process design
+//! actually pays per `run_replicas` call, and it is identical across
+//! formats, so the per-format delta is pure codec + reduce cost.
+//!
+//! `--smoke` (or `DSQ_BENCH_SMOKE=1`): a seconds-long CI profile that
+//! still executes every format cell and *asserts* on each that the
+//! comms meter agrees with the cost model within box-metadata slack
+//! ([`dsq::stash::audit_observed_comms`]), and that the fp32 wire
+//! format is bit-transparent (a mirrored 2-replica reduce leaves the
+//! state untouched) — an exchange regression fails the workflow, not
+//! just a number. Leaves `BENCH_exchange.json` at the repo root for
+//! `dsq bench gate`.
+
+use dsq::bench::{header, Bencher, JsonReport};
+use dsq::model::ModelState;
+use dsq::quant::{registered_specs, FormatSpec};
+use dsq::runtime::HostTensor;
+use dsq::stash::{audit_observed_comms, run_replicas};
+use dsq::util::rng::Pcg32;
+
+fn make_state(rng: &mut Pcg32, scale: usize) -> ModelState {
+    // Same transformer-ish mix the stash-store bench uses: square
+    // weights, a ragged projection, a bias.
+    let mk = |rows: usize, cols: usize, rng: &mut Pcg32| {
+        let data: Vec<f32> =
+            (0..rows * cols).map(|_| rng.normal() * (rng.f32() * 6.0 - 3.0).exp2()).collect();
+        if rows == 1 {
+            HostTensor::f32(vec![cols], data)
+        } else {
+            HostTensor::f32(vec![rows, cols], data)
+        }
+    };
+    let params = vec![
+        mk(scale, scale, rng),
+        mk(scale, scale + 5, rng), // minor axis not a box multiple
+        mk(1, scale, rng),
+    ];
+    let zeros: Vec<HostTensor> = params.iter().map(HostTensor::zeros_like).collect();
+    ModelState { params, m: zeros.clone(), v: zeros, step: 1 }
+}
+
+fn flat(state: &ModelState) -> Vec<f32> {
+    let mut out = Vec::new();
+    for group in [&state.params, &state.m, &state.v] {
+        for t in group {
+            out.extend_from_slice(t.as_f32().expect("dense"));
+        }
+    }
+    out
+}
+
+/// One full 2-replica round: both ranks all-reduce `dense`, return
+/// rank 0's post-reduce state.
+fn one_round(spec: FormatSpec, dense: &ModelState) -> ModelState {
+    run_replicas(2, spec, |_rank, ex| {
+        let mut st = dense.clone();
+        ex.all_reduce_state(&mut st, 1.0)?;
+        Ok(st)
+    })
+    .expect("exchange round")
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("DSQ_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    header(if smoke {
+        "Replica exchange: 2-replica all-reduce round (smoke profile)"
+    } else {
+        "Replica exchange: 2-replica all-reduce round latency + traffic"
+    });
+    let b = if smoke {
+        Bencher {
+            warmup: std::time::Duration::from_millis(10),
+            measure: std::time::Duration::from_millis(40),
+            min_iters: 2,
+            max_iters: 1_000,
+        }
+    } else {
+        Bencher::default()
+    };
+    let mut json = JsonReport::new("exchange", if smoke { "smoke" } else { "full" });
+    let scale = if smoke { 48 } else { 128 };
+    let mut rng = Pcg32::new(7);
+
+    let widths = [4u32, 8, 16];
+    let mut specs = vec![FormatSpec::Fp32];
+    specs.extend(registered_specs(&widths).into_iter().filter(|s| *s != FormatSpec::Fp32));
+    for spec in specs {
+        let dense = make_state(&mut rng, scale);
+        let elems: usize = dense.params.iter().map(HostTensor::len).sum::<usize>() * 3;
+        if smoke {
+            // Correctness gates (the reason CI runs this in smoke mode):
+            // meter-vs-model agreement on every format cell, and fp32
+            // bit-transparency of the mirrored reduce.
+            audit_observed_comms(&spec)
+                .unwrap_or_else(|e| panic!("{spec}: comms meter disagrees: {e}"));
+            if spec == FormatSpec::Fp32 {
+                let reduced = one_round(spec, &dense);
+                assert_eq!(
+                    flat(&reduced).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    flat(&dense).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "fp32 mirrored all-reduce must be bit-transparent"
+                );
+            }
+        }
+        let r = b.bench(&format!("{spec:<8} 2-replica round ({elems} elems)"), || {
+            std::hint::black_box(one_round(spec, &dense));
+        });
+        println!("{}", r.report());
+        json.push(&r, Some(elems as f64));
+    }
+    match json.write() {
+        Ok(p) => println!("\nwrote {}", p.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

@@ -12,10 +12,12 @@
 //! The analysis is lexical and conservative: within one function, lock
 //! A "precedes" lock B if A's `.lock()` call appears on an earlier (or
 //! the same) line — guard drops are not tracked, so a function that
-//! releases A before taking B still contributes an A→B edge. Today the
-//! store is single-threaded-with-a-join-handle and holds **zero**
-//! mutexes, so the rule is load-bearing for the first PR that adds one;
-//! a deliberate, commented opposite-order pair can be escaped with
+//! releases A before taking B still contributes an A→B edge. Since
+//! PR 7 the rule is live: the replica exchange
+//! (`rust/src/stash/exchange.rs`) holds two mutexes (the `ring` post
+//! board and the `comms` traffic meter) shared by every replica thread,
+//! with the global order *ring before comms*. A deliberate, commented
+//! opposite-order pair can be escaped with
 //! `// dsq-lint: allow(lock_discipline, <reason>)`.
 
 use std::collections::BTreeMap;

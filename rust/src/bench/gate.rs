@@ -1,0 +1,302 @@
+//! Bench regression gate: compare the `BENCH_<name>.json` reports the
+//! smoke benches leave at the repo root against committed baselines in
+//! `rust/benches/baselines/`, and fail loudly on drift.
+//!
+//! Two failure classes, both CI-fatal (ROADMAP track 3b — perf
+//! trajectories must be load-bearing, not scrollback):
+//!
+//! * **stale** — a gated report is missing, unparseable, empty, or was
+//!   produced under a different profile than its baseline (smoke vs
+//!   full numbers are never comparable);
+//! * **regressed** — a benchmark disappeared/appeared relative to the
+//!   baseline name set, or its median latency grew beyond the allowed
+//!   ratio (default 1.5×; generous because CI machines are noisy, tight
+//!   enough to catch an accidental O(n) → O(n²)).
+//!
+//! Baselines are committed by `dsq bench publish` after a deliberate
+//! perf change. A fresh baseline may instead be the bootstrap marker
+//! `{"bootstrap": true}`: the gate then checks the current report's
+//! *structure* only (it exists, parses, and has positive medians) and
+//! reminds the operator to publish — so the gate is live from the first
+//! CI run even though committed numbers from a dev machine would be
+//! meaningless.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+use crate::{Error, Result};
+
+/// Reports the gate covers: every name here must have a committed
+/// baseline (or bootstrap marker) and a fresh `BENCH_<name>.json`.
+pub const GATED: &[&str] = &["quantizer", "stash", "exchange"];
+
+/// Default allowed median-latency growth before a bench counts as
+/// regressed.
+pub const DEFAULT_RATIO: f64 = 1.5;
+
+/// One parsed bench report: the profile it ran under and each
+/// benchmark's median latency.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchDoc {
+    pub bench: String,
+    pub profile: String,
+    /// `(name, median_ns)` in file order.
+    pub results: Vec<(String, f64)>,
+    /// True for a committed `{"bootstrap": true}` placeholder baseline.
+    pub bootstrap: bool,
+}
+
+impl BenchDoc {
+    /// Parse a `BENCH_<name>.json` (or baseline) file.
+    pub fn load(path: &Path) -> Result<BenchDoc> {
+        let j = json::parse_file(path)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display())))?;
+        Self::from_json(&j, path)
+    }
+
+    fn from_json(j: &Json, path: &Path) -> Result<BenchDoc> {
+        let bootstrap = j.path("bootstrap").and_then(Json::as_bool).unwrap_or(false);
+        let bench = j.path("bench").and_then(Json::as_str).unwrap_or_default().to_string();
+        let profile = j.path("profile").and_then(Json::as_str).unwrap_or_default().to_string();
+        let mut results = Vec::new();
+        for r in j.path("results").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = r
+                .path("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| {
+                    Error::Config(format!("{}: result without a name", path.display()))
+                })?
+                .to_string();
+            let median = r.path("median_ns").and_then(Json::as_f64).ok_or_else(|| {
+                Error::Config(format!("{}: '{name}' has no median_ns", path.display()))
+            })?;
+            results.push((name, median));
+        }
+        if bench.is_empty() && !bootstrap {
+            return Err(Error::Config(format!(
+                "{}: not a bench report (no \"bench\" field)",
+                path.display()
+            )));
+        }
+        Ok(BenchDoc { bench, profile, results, bootstrap })
+    }
+
+    fn median_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|(n, _)| n == name).map(|&(_, m)| m)
+    }
+}
+
+/// Compare one current report against its baseline. Returns findings
+/// (empty = pass). Pure so the drift fixtures can feed it synthetic
+/// documents.
+pub fn compare(name: &str, baseline: &BenchDoc, current: &BenchDoc, ratio: f64) -> Vec<String> {
+    let mut findings = Vec::new();
+    if current.results.is_empty() {
+        findings.push(format!("{name}: stale — current report has no results"));
+        return findings;
+    }
+    if current.results.iter().any(|&(_, m)| !m.is_finite() || m <= 0.0) {
+        findings.push(format!("{name}: stale — non-positive median in current report"));
+    }
+    if baseline.bootstrap {
+        // Structural checks only; numbers start counting once published.
+        return findings;
+    }
+    if baseline.profile != current.profile {
+        findings.push(format!(
+            "{name}: stale — profile '{}' vs baseline '{}' (not comparable)",
+            current.profile, baseline.profile
+        ));
+        return findings;
+    }
+    for (bname, base) in &baseline.results {
+        match current.median_of(bname) {
+            None => findings.push(format!(
+                "{name}: regressed — benchmark '{bname}' vanished from the report"
+            )),
+            Some(cur) if cur > base * ratio => findings.push(format!(
+                "{name}: regressed — '{bname}' median {:.0} ns vs baseline {:.0} ns \
+                 (> {ratio}x)",
+                cur, base
+            )),
+            Some(_) => {}
+        }
+    }
+    for (cname, _) in &current.results {
+        if baseline.median_of(cname).is_none() {
+            findings.push(format!(
+                "{name}: stale — new benchmark '{cname}' not in the baseline \
+                 (publish to accept it)"
+            ));
+        }
+    }
+    findings
+}
+
+/// Where a gated report lives: current at the repo root (where
+/// [`super::JsonReport::write`] puts it), baseline committed under
+/// `rust/benches/baselines/`.
+pub fn report_paths(root: &Path, name: &str) -> (PathBuf, PathBuf) {
+    (
+        root.join(format!("BENCH_{name}.json")),
+        root.join("rust/benches/baselines").join(format!("BENCH_{name}.json")),
+    )
+}
+
+/// Run the gate over every [`GATED`] report. `Ok(notes)` when clean
+/// (notes flag any bootstrap baselines still awaiting a publish);
+/// `Err(Error::Lint)` listing every finding otherwise.
+pub fn run_gate(root: &Path, ratio: f64) -> Result<Vec<String>> {
+    let mut findings = Vec::new();
+    let mut notes = Vec::new();
+    for name in GATED {
+        let (cur_path, base_path) = report_paths(root, name);
+        let baseline = match BenchDoc::load(&base_path) {
+            Ok(b) => b,
+            Err(e) => {
+                findings.push(format!("{name}: no usable baseline — {e}"));
+                continue;
+            }
+        };
+        let current = match BenchDoc::load(&cur_path) {
+            Ok(c) => c,
+            Err(e) => {
+                findings.push(format!(
+                    "{name}: stale — no current report ({e}); run the smoke bench first"
+                ));
+                continue;
+            }
+        };
+        findings.extend(compare(name, &baseline, &current, ratio));
+        if baseline.bootstrap && findings.is_empty() {
+            notes.push(format!(
+                "{name}: baseline is a bootstrap marker — `dsq bench publish` to pin numbers"
+            ));
+        }
+    }
+    if findings.is_empty() {
+        Ok(notes)
+    } else {
+        Err(Error::Lint(findings.join("\n")))
+    }
+}
+
+/// Copy every current gated report over its committed baseline (the
+/// deliberate-perf-change workflow). Errors if any current report is
+/// missing or malformed — a baseline must always parse.
+pub fn publish(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut published = Vec::new();
+    for name in GATED {
+        let (cur_path, base_path) = report_paths(root, name);
+        BenchDoc::load(&cur_path)?; // must parse before it can be a baseline
+        if let Some(dir) = base_path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::copy(&cur_path, &base_path)?;
+        published.push(base_path);
+    }
+    Ok(published)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(profile: &str, results: &[(&str, f64)]) -> BenchDoc {
+        BenchDoc {
+            bench: "x".into(),
+            profile: profile.into(),
+            results: results.iter().map(|&(n, m)| (n.to_string(), m)).collect(),
+            bootstrap: false,
+        }
+    }
+
+    #[test]
+    fn clean_comparison_passes() {
+        let base = doc("smoke", &[("a", 100.0), ("b", 200.0)]);
+        let cur = doc("smoke", &[("a", 120.0), ("b", 150.0)]);
+        assert!(compare("t", &base, &cur, 1.5).is_empty());
+    }
+
+    #[test]
+    fn median_regression_fires() {
+        let base = doc("smoke", &[("a", 100.0)]);
+        let cur = doc("smoke", &[("a", 151.0)]);
+        let f = compare("t", &base, &cur, 1.5);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].contains("regressed") && f[0].contains("'a'"), "{f:?}");
+    }
+
+    #[test]
+    fn name_set_drift_fires_both_ways() {
+        let base = doc("smoke", &[("a", 100.0), ("gone", 50.0)]);
+        let cur = doc("smoke", &[("a", 100.0), ("new", 50.0)]);
+        let f = compare("t", &base, &cur, 1.5);
+        assert!(f.iter().any(|m| m.contains("'gone' vanished")), "{f:?}");
+        assert!(f.iter().any(|m| m.contains("'new'") && m.contains("not in the baseline")), "{f:?}");
+    }
+
+    #[test]
+    fn profile_mismatch_and_empty_report_are_stale() {
+        let base = doc("full", &[("a", 100.0)]);
+        let cur = doc("smoke", &[("a", 100.0)]);
+        let f = compare("t", &base, &cur, 1.5);
+        assert!(f.iter().any(|m| m.contains("stale") && m.contains("profile")), "{f:?}");
+        let f = compare("t", &base, &doc("full", &[]), 1.5);
+        assert!(f.iter().any(|m| m.contains("no results")), "{f:?}");
+    }
+
+    #[test]
+    fn bootstrap_baseline_checks_structure_only() {
+        let base = BenchDoc {
+            bench: String::new(),
+            profile: String::new(),
+            results: vec![],
+            bootstrap: true,
+        };
+        let cur = doc("smoke", &[("a", 100.0)]);
+        assert!(compare("t", &base, &cur, 1.5).is_empty());
+        let f = compare("t", &base, &doc("smoke", &[("a", 0.0)]), 1.5);
+        assert!(f.iter().any(|m| m.contains("non-positive")), "{f:?}");
+        assert!(compare("t", &base, &doc("smoke", &[]), 1.5)[0].contains("no results"));
+    }
+
+    #[test]
+    fn load_parses_real_reports_and_rejects_junk() {
+        let dir = std::env::temp_dir().join(format!("dsq-gate-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = dir.join("BENCH_good.json");
+        std::fs::write(
+            &good,
+            "{\"bench\": \"stash\", \"profile\": \"smoke\", \"results\": [\
+             {\"name\": \"enc\", \"median_ns\": 42.5}]}",
+        )
+        .unwrap();
+        let d = BenchDoc::load(&good).unwrap();
+        assert_eq!(d.bench, "stash");
+        assert_eq!(d.results, vec![("enc".to_string(), 42.5)]);
+        assert!(!d.bootstrap);
+        let boot = dir.join("BENCH_boot.json");
+        std::fs::write(&boot, "{\"bootstrap\": true}").unwrap();
+        assert!(BenchDoc::load(&boot).unwrap().bootstrap);
+        let junk = dir.join("BENCH_junk.json");
+        std::fs::write(&junk, "{\"profile\": \"smoke\"}").unwrap();
+        assert!(BenchDoc::load(&junk).is_err());
+        std::fs::write(&junk, "not json").unwrap();
+        assert!(BenchDoc::load(&junk).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn gate_covers_the_committed_baselines() {
+        // Every gated name must have a committed baseline file — the
+        // gate's own contract with the repo layout.
+        let cwd = std::env::current_dir().unwrap();
+        let Some(root) = crate::analysis::find_root(&cwd) else { return };
+        for name in GATED {
+            let (_, base) = report_paths(&root, name);
+            assert!(base.is_file(), "missing committed baseline {}", base.display());
+            BenchDoc::load(&base).expect("committed baseline must parse");
+        }
+    }
+}

@@ -7,6 +7,8 @@
 //! table is its generation + consistency checks; the hot-path benches
 //! time real code).
 
+pub mod gate;
+
 use std::time::{Duration, Instant};
 
 use crate::util::stats;

@@ -42,6 +42,7 @@ pub fn dispatch(args: &[String]) -> i32 {
         "experiment" => cmd_experiment(rest),
         "formats" => cmd_formats(),
         "lint" => cmd_lint(rest),
+        "bench" => cmd_bench(rest),
         "stash" => cmd_stash(rest),
         "info" => cmd_info(rest),
         "version" => {
@@ -80,6 +81,8 @@ subcommands:
   lint         check the cross-layer invariants (registry coverage,
                rust/python qcfg sync, magic constants, panic hygiene,
                lock discipline); dsq lint [--root <repo-dir>]
+  bench        gate BENCH_*.json smoke reports against committed baselines
+               (dsq bench gate [--ratio r] | dsq bench publish)
   stash        inspect a stash-store run dir (per-slot residency + traffic)
   info         artifact manifest summary
   version      print version
@@ -98,6 +101,16 @@ is prefetched back before dispatch — numerics are unchanged, only
 residency). Stashed runs print measured stash/spill traffic with a
 modeled-vs-observed DRAM comparison; --stash-dir keeps the store's
 segment + index on disk for `dsq stash <dir>`.
+
+--replicas <n> trains n in-process data-parallel replicas (threads) over
+a sharded batch stream, all-reducing the post-step state in packed DSQ
+records after every step; --comms <spec> picks the wire format (fp32 =
+bit-transparent full-precision reduce; SR formats draw rank-salted
+rounding streams so replicas never correlate). --mirror-replicas feeds
+every replica the identical stream instead of round-robin shards — with
+--comms fp32 that run is bit-identical to single-replica. Replicated
+runs print measured comms traffic with a modeled-vs-observed
+comparison, next to the stash DRAM line.
 
 --schedule accepts dsq (the paper's BFP ladder), dsq-<family>
 (dsq-fixed, dsq-fixedsr), dsq-fp8 (FP8-LM-style floats: E4M3
@@ -177,6 +190,23 @@ fn common_train_flags(spec: ArgSpec) -> ArgSpec {
             "directory for the stash store's spill segment + stash.json index \
              (inspect with `dsq stash <dir>`; default: a per-run temp dir)",
         )
+        .opt(
+            "replicas",
+            "1",
+            "in-process data-parallel replicas (threads); 1 = today's \
+             single-replica path, bit-for-bit",
+        )
+        .opt(
+            "comms",
+            "",
+            "packed format replicas exchange state in (e.g. fp32, fixed8sr); \
+             requires --replicas > 1; default fp32 (bit-transparent reduce)",
+        )
+        .bool(
+            "mirror-replicas",
+            "mirror the batch stream across replicas instead of round-robin \
+             sharding it (the fp32 bit-identity configuration)",
+        )
         .bool("json", "print the full report as JSON")
 }
 
@@ -187,6 +217,34 @@ fn parse_prefetch(a: &Args) -> Result<usize> {
         return Err(Error::Config("--prefetch must be >= 1".into()));
     }
     Ok(p)
+}
+
+/// Parse the replication triple `--replicas` / `--comms` /
+/// `--mirror-replicas`. `--comms` goes through the format registry
+/// (any registered spec is a wire format) and is rejected without
+/// `--replicas > 1` — a comms format with nobody to talk to is a
+/// config mistake, not a no-op.
+fn parse_replicas(a: &Args) -> Result<(usize, FormatSpec, bool)> {
+    let replicas = a.get_usize("replicas")?;
+    if replicas == 0 {
+        return Err(Error::Config("--replicas must be >= 1".into()));
+    }
+    let comms = opt_format(a, "comms")?;
+    if replicas == 1 && comms.is_some() {
+        return Err(Error::Config(
+            "--comms requires --replicas > 1 (single-replica runs exchange nothing)".into(),
+        ));
+    }
+    Ok((replicas, comms.unwrap_or(FormatSpec::Fp32), a.get_bool("mirror-replicas")))
+}
+
+/// The comms-traffic line after a replicated run: modeled vs observed
+/// exchange bytes (absent for single-replica runs, which exchange
+/// nothing).
+fn print_comms_line(report: &crate::coordinator::RunReport) {
+    if let Some(c) = &report.comms {
+        println!("{}", c.summary());
+    }
 }
 
 /// Parse an optional `--stash-state` spec ("" = dense f32 state). A bad
@@ -225,6 +283,7 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         .opt("val-batches", "4", "validation batches")
         .opt("bleu-batches", "4", "test batches for BLEU (0 = skip)");
     let a = spec.parse(raw)?;
+    let (replicas, comms, mirror_replicas) = parse_replicas(&a)?;
     let cfg = TrainerConfig {
         artifacts: PathBuf::from(a.get("artifacts")),
         seed: a.get_u64("seed")?,
@@ -242,10 +301,12 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         stash_format: opt_format(&a, "stash-state")?,
         stash_budget: opt_budget(&a, "stash-budget")?,
         stash_dir: opt_path(&a, "stash-dir"),
+        replicas,
+        comms,
+        mirror_replicas,
     };
-    let mut schedule = parse_schedule(a.get("schedule"))?;
-    let mut trainer = Trainer::new(cfg)?;
-    let report = trainer.run(schedule.as_mut())?;
+    let sched_spec = a.get("schedule").to_string();
+    let report = Trainer::run_replicated(cfg, || parse_schedule(&sched_spec))?;
     println!(
         "steps={} val_loss={:.4} token_acc={:.1}% bleu={} diverged={} ({:.2} steps/s)",
         report.steps,
@@ -257,6 +318,7 @@ fn cmd_train(raw: &[String]) -> Result<()> {
     );
     print_cost_line(&report, &TransformerWorkload::iwslt_6layer(), "IWSLT");
     print_stash_line(&report);
+    print_comms_line(&report);
     if a.get_bool("json") {
         println!("{}", report.to_json().to_string_pretty());
     }
@@ -290,6 +352,7 @@ fn cmd_finetune(raw: &[String]) -> Result<()> {
         .opt("nclasses", "3", "2 = QNLI-style, 3 = MNLI-style")
         .opt("val-batches", "4", "validation batches");
     let a = spec.parse(raw)?;
+    let (replicas, comms, mirror_replicas) = parse_replicas(&a)?;
     let cfg = FinetuneConfig {
         artifacts: PathBuf::from(a.get("artifacts")),
         seed: a.get_u64("seed")?,
@@ -306,10 +369,12 @@ fn cmd_finetune(raw: &[String]) -> Result<()> {
         stash_format: opt_format(&a, "stash-state")?,
         stash_budget: opt_budget(&a, "stash-budget")?,
         stash_dir: opt_path(&a, "stash-dir"),
+        replicas,
+        comms,
+        mirror_replicas,
     };
-    let mut schedule = parse_schedule(a.get("schedule"))?;
-    let mut tuner = Finetuner::new(cfg)?;
-    let report = tuner.run(schedule.as_mut())?;
+    let sched_spec = a.get("schedule").to_string();
+    let report = Finetuner::run_replicated(cfg, || parse_schedule(&sched_spec))?;
     println!(
         "steps={} val_loss={:.4} accuracy={:.1}% diverged={} ({:.2} steps/s)",
         report.steps,
@@ -322,6 +387,7 @@ fn cmd_finetune(raw: &[String]) -> Result<()> {
     // MNLI/QNLI columns) — same line `dsq train` prints for IWSLT.
     print_cost_line(&report, &TransformerWorkload::roberta_base(), "RoBERTa-base");
     print_stash_line(&report);
+    print_comms_line(&report);
     if a.get_bool("json") {
         println!("{}", report.to_json().to_string_pretty());
     }
@@ -491,6 +557,74 @@ fn cmd_lint(args: &[String]) -> Result<()> {
             "{} finding(s) — cross-layer invariants violated",
             report.findings.len()
         )))
+    }
+}
+
+/// `dsq bench gate [--root <dir>] [--ratio <r>]` / `dsq bench publish
+/// [--root <dir>]`: the bench regression gate ([`crate::bench::gate`]).
+/// `gate` compares every gated `BENCH_<name>.json` at the repo root
+/// against its committed baseline in `rust/benches/baselines/` and
+/// exits 1 (via [`Error::Lint`]) on stale or regressed reports;
+/// `publish` copies the current reports over the baselines (the
+/// deliberate-perf-change workflow).
+fn cmd_bench(args: &[String]) -> Result<()> {
+    use crate::bench::gate;
+    let (action, rest) = args
+        .split_first()
+        .ok_or_else(|| Error::Config("bench action required: gate | publish".into()))?;
+    let mut root: Option<PathBuf> = None;
+    let mut ratio = gate::DEFAULT_RATIO;
+    let mut it = rest.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => {
+                let v =
+                    it.next().ok_or_else(|| Error::Config("--root needs a directory".into()))?;
+                root = Some(PathBuf::from(v));
+            }
+            "--ratio" => {
+                let v = it.next().ok_or_else(|| Error::Config("--ratio needs a number".into()))?;
+                ratio = v.parse().map_err(|_| {
+                    Error::Config(format!("--ratio: '{v}' is not a number"))
+                })?;
+                if ratio.is_nan() || ratio < 1.0 {
+                    return Err(Error::Config("--ratio must be >= 1.0".into()));
+                }
+            }
+            other => return Err(Error::Config(format!("unknown bench flag '{other}'"))),
+        }
+    }
+    let root = match root {
+        Some(r) => r,
+        None => {
+            let cwd = std::env::current_dir()?;
+            crate::analysis::find_root(&cwd).ok_or_else(|| {
+                Error::Config(format!(
+                    "cannot locate the repo root from {}; pass --root <dir>",
+                    cwd.display()
+                ))
+            })?
+        }
+    };
+    match action.as_str() {
+        "gate" => {
+            let notes = gate::run_gate(&root, ratio)?;
+            for n in &notes {
+                println!("note: {n}");
+            }
+            println!(
+                "dsq bench gate: {} report(s) within {ratio}x of baseline",
+                gate::GATED.len()
+            );
+            Ok(())
+        }
+        "publish" => {
+            for p in gate::publish(&root)? {
+                println!("published {}", p.display());
+            }
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown bench action '{other}' (gate | publish)"))),
     }
 }
 
@@ -707,6 +841,72 @@ mod tests {
         let spec = common_train_flags(ArgSpec::new("t", "test"));
         let a = spec.parse(&["--prefetch".to_string(), "0".to_string()]).unwrap();
         assert!(matches!(parse_prefetch(&a), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn replica_flags_default_validate_and_parse() {
+        // Default: single replica, fp32 comms, round-robin moot.
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec.parse(&[]).unwrap();
+        assert_eq!(parse_replicas(&a).unwrap(), (1, FormatSpec::Fp32, false));
+        // A replicated run with an SR comms format through the registry.
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec
+            .parse(&[
+                "--replicas".to_string(),
+                "2".to_string(),
+                "--comms".to_string(),
+                "fixed8sr".to_string(),
+                "--mirror-replicas".to_string(),
+            ])
+            .unwrap();
+        assert_eq!(parse_replicas(&a).unwrap(), (2, FormatSpec::fixed_sr(8), true));
+        // 0 replicas and comms-without-replicas are config mistakes.
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec.parse(&["--replicas".to_string(), "0".to_string()]).unwrap();
+        assert!(matches!(parse_replicas(&a), Err(Error::Config(_))));
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec.parse(&["--comms".to_string(), "fp32".to_string()]).unwrap();
+        match parse_replicas(&a) {
+            Err(Error::Config(msg)) => assert!(msg.contains("--replicas"), "{msg}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // A bad comms spec names the flag and lists the registry.
+        let spec = common_train_flags(ArgSpec::new("t", "test"));
+        let a = spec
+            .parse(&[
+                "--replicas".to_string(),
+                "2".to_string(),
+                "--comms".to_string(),
+                "int8".to_string(),
+            ])
+            .unwrap();
+        match parse_replicas(&a) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("--comms") && msg.contains("'int8'"), "{msg}");
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bench_subcommand_validates_usage() {
+        // Missing action, bogus action, and bad flags all exit 2.
+        assert_eq!(dispatch(&["bench".to_string()]), 2);
+        assert_eq!(dispatch(&["bench".to_string(), "bogus".to_string()]), 2);
+        assert_eq!(
+            dispatch(&["bench".to_string(), "gate".to_string(), "--ratio".to_string()]),
+            2
+        );
+        assert_eq!(
+            dispatch(&[
+                "bench".to_string(),
+                "gate".to_string(),
+                "--ratio".to_string(),
+                "0.5".to_string(),
+            ]),
+            2
+        );
     }
 
     #[test]

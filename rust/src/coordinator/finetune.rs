@@ -15,7 +15,7 @@ use crate::data::classify::{ClassifyConfig, ClassifyTask};
 use crate::model::ModelState;
 use crate::runtime::ArtifactManifest;
 use crate::schedule::{FormatSpec, Schedule};
-use crate::stash::StashBudget;
+use crate::stash::{run_replicas, ReplicaShard, StashBudget};
 use crate::{Error, Result};
 
 use super::lr::LrSchedule;
@@ -52,6 +52,16 @@ pub struct FinetuneConfig {
     /// Spill-segment / index directory (see
     /// [`SessionConfig::stash_dir`]); `None` = per-run temp dir.
     pub stash_dir: Option<PathBuf>,
+    /// In-process data-parallel replica count (`--replicas`; 1 = the
+    /// single-replica path, bit-for-bit today's behavior). Replicated
+    /// runs go through [`Finetuner::run_replicated`].
+    pub replicas: usize,
+    /// Packed format the replicas exchange state in (`--comms`); only
+    /// meaningful when `replicas > 1`.
+    pub comms: FormatSpec,
+    /// Mirror the batch stream across replicas instead of round-robin
+    /// sharding it (see [`crate::stash::ReplicaShard::mirror`]).
+    pub mirror_replicas: bool,
 }
 
 impl FinetuneConfig {
@@ -72,6 +82,9 @@ impl FinetuneConfig {
             stash_format: None,
             stash_budget: StashBudget::Unlimited,
             stash_dir: None,
+            replicas: 1,
+            comms: FormatSpec::Fp32,
+            mirror_replicas: false,
         }
     }
 
@@ -91,7 +104,31 @@ impl FinetuneConfig {
             stash_format: self.stash_format,
             stash_budget: self.stash_budget,
             stash_dir: self.stash_dir.clone(),
+            shard: None,
         }
+    }
+
+    /// Per-rank view of a replicated config: rank 0 keeps checkpointing;
+    /// peers only train. Spill directories get a per-rank suffix so
+    /// replicas never share index files.
+    fn for_rank(&self, rank: usize) -> Self {
+        let mut cfg = self.clone();
+        if self.replicas > 1 {
+            if rank != 0 {
+                cfg.checkpoint = None;
+                cfg.checkpoint_every_steps = 0;
+            }
+            cfg.stash_dir = self.stash_dir.as_ref().map(|d| d.join(format!("rank{rank}")));
+        }
+        cfg
+    }
+
+    fn shard_for(&self, rank: usize) -> Option<ReplicaShard> {
+        (self.replicas > 1).then_some(ReplicaShard {
+            rank,
+            replicas: self.replicas,
+            mirror: self.mirror_replicas,
+        })
     }
 }
 
@@ -103,6 +140,10 @@ pub struct Finetuner {
 
 impl Finetuner {
     pub fn new(cfg: FinetuneConfig) -> Result<Self> {
+        Self::with_shard(cfg, None)
+    }
+
+    fn with_shard(cfg: FinetuneConfig, shard: Option<ReplicaShard>) -> Result<Self> {
         let man = ArtifactManifest::load(&cfg.artifacts)?;
         let (b, l, v, ncls) = (
             man.cls.cfg("batch")?,
@@ -127,8 +168,33 @@ impl Finetuner {
             seq_len: l,
             seed: cfg.seed,
         };
-        let session = Session::new(cfg.session_config(), task, man)?;
+        let mut scfg = cfg.session_config();
+        scfg.shard = shard;
+        let session = Session::new(scfg, task, man)?;
         Ok(Finetuner { cfg, session })
+    }
+
+    /// Run `cfg.replicas` in-process data-parallel replicas, exchanging
+    /// state in `cfg.comms` packed records after every step (see
+    /// [`crate::stash::exchange`]). `replicas <= 1` is exactly
+    /// [`Finetuner::new`] + [`Finetuner::run`] — today's path,
+    /// bit-for-bit. Rank 0's report is returned, with
+    /// [`RunReport::comms`] carrying the metered exchange traffic.
+    pub fn run_replicated(
+        cfg: FinetuneConfig,
+        make_schedule: impl Fn() -> Result<Box<dyn Schedule>> + Sync,
+    ) -> Result<RunReport> {
+        if cfg.replicas <= 1 {
+            let mut f = Finetuner::new(cfg)?;
+            let mut schedule = make_schedule()?;
+            return f.run(schedule.as_mut());
+        }
+        run_replicas(cfg.replicas, cfg.comms, |rank, ex| {
+            let mut f = Finetuner::with_shard(cfg.for_rank(rank), cfg.shard_for(rank))?;
+            f.session().set_exchange(ex)?;
+            let mut schedule = make_schedule()?;
+            f.run(schedule.as_mut())
+        })
     }
 
     pub fn manifest(&self) -> &ArtifactManifest {

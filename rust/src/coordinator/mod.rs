@@ -24,6 +24,15 @@
 //! float recipe, …) is one new `Task` impl — batch supply, step/eval
 //! input assembly, eval normalization, headline metric — not another
 //! copy of the loop.
+//!
+//! Data-parallel replication (`--replicas N`) stays in this layer too:
+//! [`Trainer::run_replicated`] / [`Finetuner::run_replicated`] spin up
+//! N sessions on threads, each owning a [`crate::stash::ReplicaShard`]
+//! of the batch stream, and wire them to one
+//! [`crate::stash::Exchange`] that all-reduces the post-step state in
+//! `--comms` packed records (dequant → mean → requant at salt 0, so
+//! every rank lands on identical bytes). Metered comms traffic rides
+//! the report as [`RunReport::comms`].
 
 pub mod cli;
 pub mod finetune;
@@ -35,7 +44,8 @@ pub use cli::dispatch;
 pub use finetune::{FinetuneConfig, Finetuner};
 pub use lr::LrSchedule;
 pub use session::{
-    ClsTask, ExeCache, NmtTask, RunReport, Session, SessionConfig, Task, TaskMetric,
+    next_global_batch, replica_consumes, ClsTask, ExeCache, NmtTask, RunReport, Session,
+    SessionConfig, Task, TaskMetric,
 };
 pub use trainer::{Trainer, TrainerConfig};
 

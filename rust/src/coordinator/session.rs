@@ -23,7 +23,25 @@
 //!   detector;
 //! * checkpointing, mid-run (`checkpoint_every_steps`) and final, with
 //!   the schedule's resumable [`ScheduleState`] in the trailer so a
-//!   resumed run continues the DSQ ladder at the saved level.
+//!   resumed run continues the DSQ ladder at the saved level. Mid-run
+//!   (crash-salvage) checkpoints additionally carry the batch-stream
+//!   [`checkpoint::ResumePosition`], so resuming one continues the
+//!   interrupted epoch at the next unconsumed batch instead of
+//!   re-drawing the epoch stream and silently replaying seen data;
+//! * replica participation (`--replicas`): a [`ReplicaShard`] in the
+//!   config picks this session's slice of the *global* batch stream
+//!   (round-robin by batch index, or mirrored for the bit-identity
+//!   configuration), and a [`ReplicaExchange`] handle installed via
+//!   [`Session::set_exchange`] all-reduces the post-step state between
+//!   replicas in the `--comms` packed format — the dequant–reduce–
+//!   requant protocol documented in `stash::exchange`, with its
+//!   metered comms bytes landing on [`RunReport::comms`].
+//!
+//! **Replica seeding contract:** every stochastic-rounding encode onto
+//! the exchange wire is salted with the replica rank (salt 0 ≡ the
+//! unsalted single-replica stream), so replicas never share rounding
+//! noise; the post-reduce requantize runs at salt 0 on every rank,
+//! keeping replica states bit-identical after each exchange.
 //!
 //! A [`Task`] supplies what differs: batch synthesis, step/eval input
 //! assembly, eval-output normalization, and the headline metric
@@ -46,7 +64,11 @@ use crate::metrics::{bleu, LossTracker};
 use crate::model::{checkpoint, ModelState};
 use crate::runtime::{ArtifactManifest, Executable, HostTensor, Runtime};
 use crate::schedule::{FormatSpec, PrecisionConfig, Schedule, ScheduleState};
-use crate::stash::{StashBudget, StashStore, StashStoreConfig, StashTraffic};
+use crate::model::checkpoint::ResumePosition;
+use crate::stash::{
+    CommsTraffic, ReplicaExchange, ReplicaShard, StashBudget, StashStore, StashStoreConfig,
+    StashTraffic,
+};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use crate::{Error, Result};
@@ -70,11 +92,12 @@ pub struct SessionConfig {
     pub checkpoint: Option<PathBuf>,
     pub init_checkpoint: Option<PathBuf>,
     /// Save `checkpoint` every N steps mid-run (0 = final save only).
-    /// Mid-run checkpoints are crash-salvage: resuming one starts a
-    /// *fresh* run from the saved params/Adam step/ladder level — the
-    /// epoch loop restarts, so the resumed run re-draws its own epoch
-    /// batch streams rather than continuing the interrupted epoch
-    /// mid-stream (vary `seed` on resume to avoid re-seeing data).
+    /// Mid-run checkpoints are crash-salvage: they carry the
+    /// batch-stream [`ResumePosition`] trailer, so resuming one
+    /// continues the interrupted epoch at the next unconsumed batch
+    /// (same seed, no batch seen twice) instead of re-drawing the epoch
+    /// stream from the top. Final (end-of-run) checkpoints carry no
+    /// position — resuming them starts a fresh set of epochs.
     pub checkpoint_every_steps: usize,
     /// Bounded prefetch depth for the batch generator thread (≥ 1).
     pub prefetch: usize,
@@ -97,6 +120,36 @@ pub struct SessionConfig {
     /// index (`--stash-dir`; what `dsq stash <dir>` inspects). `None`
     /// uses a per-run temp directory that is removed when the run ends.
     pub stash_dir: Option<PathBuf>,
+    /// This session's slice of the data-parallel batch stream
+    /// (`--replicas`). `None` ≡ `{rank 0 of 1}`: the single-replica
+    /// path, bit-for-bit today's behavior. Round-robin shards consume a
+    /// `replicas`-times larger global epoch stream (every batch exactly
+    /// once across replicas); mirrored shards all consume the identical
+    /// stream. Stepping in lockstep with peers additionally needs a
+    /// [`ReplicaExchange`] installed via [`Session::set_exchange`].
+    pub shard: Option<ReplicaShard>,
+}
+
+/// Whether this shard consumes global batch `idx` of an epoch stream,
+/// given that the first `skip` global batches were already consumed by
+/// the pre-crash run (mid-epoch resume; 0 otherwise). Round-robin deals
+/// by index; mirrored shards consume everything. The partition
+/// invariant — every global batch consumed by exactly one replica
+/// (round-robin) and never twice across a resume — is unit-tested
+/// below and is what makes N replicas a true 2×/N×-batch emulation.
+pub fn replica_consumes(shard: &ReplicaShard, skip: usize, idx: usize) -> bool {
+    idx >= skip && (shard.mirror || idx % shard.replicas == shard.rank)
+}
+
+/// The first globally-unconsumed batch index once *every* replica has
+/// finished the step that consumed `idx` on this shard — what a
+/// mid-run checkpoint persists as [`ResumePosition::batch`].
+pub fn next_global_batch(shard: &ReplicaShard, idx: usize) -> usize {
+    if shard.mirror {
+        idx + 1
+    } else {
+        idx - shard.rank + shard.replicas
+    }
 }
 
 /// One workload plugged into the [`Session`] engine.
@@ -260,6 +313,11 @@ pub struct RunReport {
     /// stash/spill/checkpoint counters plus the modeled-vs-observed
     /// DRAM comparison. `None` for dense-state runs.
     pub stash: Option<StashTraffic>,
+    /// Measured replica-exchange traffic (`--replicas > 1` runs): the
+    /// comms-bytes column next to the DRAM one — codec-observed wire
+    /// bytes vs the modeled `container_bits()` number, aggregated over
+    /// all ranks. `None` for single-replica runs.
+    pub comms: Option<CommsTraffic>,
 }
 
 impl RunReport {
@@ -337,6 +395,7 @@ impl RunReport {
                 ),
             ),
             ("stash", self.stash.as_ref().map_or(Json::Null, StashTraffic::to_json)),
+            ("comms", self.comms.as_ref().map_or(Json::Null, CommsTraffic::to_json)),
         ])
     }
 }
@@ -356,6 +415,13 @@ pub struct Session<T: Task> {
     /// Schedule state recovered from `init_checkpoint`, applied to the
     /// schedule at the start of [`Session::run`].
     restored_schedule: Option<ScheduleState>,
+    /// Batch-stream position recovered from a crash-salvage
+    /// `init_checkpoint`: the epoch/offset the run resumes at (consumed
+    /// at the start of [`Session::run`]).
+    resume_pos: Option<ResumePosition>,
+    /// All-reduce handle for data-parallel runs (installed by the
+    /// replica orchestrator via [`Session::set_exchange`]).
+    exchange: Option<ReplicaExchange>,
 }
 
 impl<T: Task> Session<T> {
@@ -387,11 +453,21 @@ impl<T: Task> Session<T> {
                     .into(),
             ));
         }
+        if let Some(sh) = &cfg.shard {
+            if sh.replicas == 0 || sh.rank >= sh.replicas {
+                return Err(Error::Config(format!(
+                    "bad replica shard: rank {} of {} replicas",
+                    sh.rank, sh.replicas
+                )));
+            }
+        }
         let model = task.model();
         let mm = man.model(model)?;
-        let (mut state, restored_schedule) = match &cfg.init_checkpoint {
-            Some(path) => checkpoint::load_checkpoint_full(path, mm)?,
-            None => (ModelState::init(Runtime::global(), &man, model, cfg.seed as i32)?, None),
+        let (mut state, restored_schedule, resume_pos) = match &cfg.init_checkpoint {
+            Some(path) => checkpoint::load_checkpoint_positioned(path, mm)?,
+            None => {
+                (ModelState::init(Runtime::global(), &man, model, cfg.seed as i32)?, None, None)
+            }
         };
         let mut stash = match &cfg.stash_format {
             Some(spec) => {
@@ -417,7 +493,43 @@ impl<T: Task> Session<T> {
             store.start_prefetch(&state);
         }
         let exes = ExeCache::new(&man, model)?;
-        Ok(Session { cfg, task, man, state, exes, model, stash, restored_schedule })
+        Ok(Session {
+            cfg,
+            task,
+            man,
+            state,
+            exes,
+            model,
+            stash,
+            restored_schedule,
+            resume_pos,
+            exchange: None,
+        })
+    }
+
+    /// Install the per-rank all-reduce handle for a data-parallel run.
+    /// Requires a matching [`SessionConfig::shard`] — the shard decides
+    /// which batches this session consumes, the exchange reduces its
+    /// state with the peers', and the two must agree on rank/replicas.
+    pub fn set_exchange(&mut self, ex: ReplicaExchange) -> Result<()> {
+        let Some(sh) = self.cfg.shard else {
+            return Err(Error::Config(
+                "a replica exchange needs a shard config (which slice of the batch \
+                 stream is this replica's?)"
+                    .into(),
+            ));
+        };
+        if sh.rank != ex.rank() || sh.replicas != ex.replicas() {
+            return Err(Error::Config(format!(
+                "replica exchange is rank {} of {}, but this session shards as rank {} of {}",
+                ex.rank(),
+                ex.replicas(),
+                sh.rank,
+                sh.replicas
+            )));
+        }
+        self.exchange = Some(ex);
+        Ok(())
     }
 
     pub fn cfg(&self) -> &SessionConfig {
@@ -444,6 +556,12 @@ impl<T: Task> Session<T> {
     /// The stash store's traffic report, when this run stashes state.
     pub fn stash_traffic(&self) -> Option<StashTraffic> {
         self.stash.as_ref().map(StashStore::traffic_report)
+    }
+
+    /// The replica exchange's comms-traffic report, when this run is
+    /// data-parallel (aggregated across all ranks sharing the core).
+    pub fn comms_traffic(&self) -> Option<CommsTraffic> {
+        self.exchange.as_ref().map(ReplicaExchange::traffic_report)
     }
 
     /// Mean per-unit loss + accuracy over batches (see [`RunReport`]
@@ -481,13 +599,24 @@ impl<T: Task> Session<T> {
     }
 
     /// Save `cfg.checkpoint` (no-op when unset) with the schedule's
-    /// resumable state in the trailer. Spilled slots stream their
-    /// records from the spill segment without rehydrating; the bytes
-    /// written land on the traffic meter.
-    fn save_checkpoint(&mut self, schedule: &dyn Schedule) -> Result<()> {
+    /// resumable state in the trailer — plus, for mid-run saves, the
+    /// batch-stream position the resumed run continues at. Spilled
+    /// slots stream their records from the spill segment without
+    /// rehydrating; the bytes written land on the traffic meter.
+    fn save_checkpoint(
+        &mut self,
+        schedule: &dyn Schedule,
+        position: Option<&ResumePosition>,
+    ) -> Result<()> {
         let Some(path) = self.cfg.checkpoint.clone() else { return Ok(()) };
         let mm = self.man.model(self.model)?;
-        checkpoint::save_checkpoint_full(&path, &self.state, mm, schedule.snapshot().as_ref())?;
+        checkpoint::save_checkpoint_positioned(
+            &path,
+            &self.state,
+            mm,
+            schedule.snapshot().as_ref(),
+            position,
+        )?;
         if let Some(store) = &mut self.stash {
             store.note_checkpoint_bytes(std::fs::metadata(&path)?.len());
         }
@@ -522,9 +651,33 @@ impl<T: Task> Session<T> {
             schedule.describe()
         );
 
-        'epochs: for epoch in 0..self.cfg.epochs {
-            // Batch generator thread (bounded prefetch).
-            let mut produce = self.task.batch_producer(epoch, self.cfg.batches_per_epoch);
+        let shard =
+            self.cfg.shard.unwrap_or(ReplicaShard { rank: 0, replicas: 1, mirror: true });
+        // Global epoch stream size: round-robin shards deal a
+        // `replicas`-times larger pool so every replica still takes
+        // `batches_per_epoch` owned steps per epoch (the N×-batch
+        // emulation); mirrored — and single-replica — streams are the
+        // plain per-epoch pool.
+        let epoch_total = if shard.mirror {
+            self.cfg.batches_per_epoch
+        } else {
+            self.cfg.batches_per_epoch * shard.replicas
+        };
+        // Crash-salvage resume: continue the interrupted epoch at the
+        // first unconsumed global batch instead of re-drawing streams
+        // and replaying seen data.
+        let resume = self.resume_pos.take();
+        let start_epoch = resume.map_or(0, |p| p.epoch as usize);
+        let mut resume_skip = resume.map_or(0, |p| (p.batch as usize).min(epoch_total));
+        if let Some(p) = resume {
+            crate::info!("resuming the batch stream at epoch {} offset {}", p.epoch, p.batch);
+        }
+
+        'epochs: for epoch in start_epoch..self.cfg.epochs {
+            // Batch generator thread (bounded prefetch). Every replica
+            // synthesizes the identical global stream (seeded by epoch
+            // alone) and consumes only its shard of it.
+            let mut produce = self.task.batch_producer(epoch, epoch_total);
             let (tx, rx) = mpsc::sync_channel::<T::Batch>(self.cfg.prefetch);
             let producer = std::thread::spawn(move || {
                 while let Some(batch) = produce() {
@@ -533,8 +686,15 @@ impl<T: Task> Session<T> {
                     }
                 }
             });
+            let skip = std::mem::take(&mut resume_skip);
 
+            let mut gidx = 0usize;
             for batch in rx.iter() {
+                let idx = gidx;
+                gidx += 1;
+                if !replica_consumes(&shard, skip, idx) {
+                    continue;
+                }
                 let pc = schedule.current();
                 let exe = self.exes.get_train(&pc)?;
                 // Materialize the stash before dispatch: the readback
@@ -560,7 +720,17 @@ impl<T: Task> Session<T> {
                     store.note_dispatch_read(&self.state);
                 }
                 let outs = exe.run(&inputs)?;
-                let loss = self.state.absorb_step_output(outs)? as f64;
+                let mut loss = self.state.absorb_step_output(outs)? as f64;
+                // Lockstep all-reduce with the peer replicas: dequant,
+                // mean in rank order, requant at salt 0 — every replica
+                // leaves this call with bit-identical state and loss, so
+                // divergence detection and the schedule stay in lockstep
+                // too (no rank can abort while peers block on the
+                // barrier; an *error* here tears the exchange down via
+                // the orchestrator instead).
+                if let Some(ex) = &self.exchange {
+                    loss = ex.all_reduce_state(&mut self.state, loss as f32)? as f64;
+                }
                 // Re-stash: step outputs arrive dense from the artifact;
                 // the resident copy goes back to packed storage (the
                 // stash *write*), the budget spills the overflow, and
@@ -597,7 +767,17 @@ impl<T: Task> Session<T> {
                 if self.cfg.checkpoint_every_steps > 0
                     && self.state.step % self.cfg.checkpoint_every_steps as u64 == 0
                 {
-                    self.save_checkpoint(schedule)?;
+                    // The position a resumed run continues at: the first
+                    // global batch no replica has consumed once everyone
+                    // finishes this step (normalized to the next epoch's
+                    // origin when this step closed the epoch out).
+                    let done = next_global_batch(&shard, idx);
+                    let pos = if done >= epoch_total {
+                        ResumePosition { epoch: epoch as u64 + 1, batch: 0 }
+                    } else {
+                        ResumePosition { epoch: epoch as u64, batch: done as u64 }
+                    };
+                    self.save_checkpoint(schedule, Some(&pos))?;
                 }
             }
             producer.join().map_err(|_| Error::Config("batch producer panicked".into()))?;
@@ -638,7 +818,10 @@ impl<T: Task> Session<T> {
                 crate::warn!("skipping final checkpoint: state diverged");
             }
         } else {
-            self.save_checkpoint(schedule)?;
+            // End-of-run saves carry no position: resuming a *finished*
+            // run starts a fresh set of epochs (the mid-ladder resume
+            // semantics every pre-position checkpoint had).
+            self.save_checkpoint(schedule, None)?;
         }
         Ok(RunReport {
             steps: self.state.step,
@@ -656,6 +839,7 @@ impl<T: Task> Session<T> {
             schedule_desc: schedule.describe(),
             wall_s: start.elapsed().as_secs_f64(),
             stash: self.stash_traffic(),
+            comms: self.comms_traffic(),
         })
     }
 }
@@ -1008,6 +1192,7 @@ mod tests {
             stash_format: None,
             stash_budget: StashBudget::Unlimited,
             stash_dir: None,
+            shard: None,
         };
         // prefetch 0 is rejected up front (no PJRT involved).
         let r = Session::new(cfg.clone(), nmt_task(), man.clone());
@@ -1030,13 +1215,86 @@ mod tests {
             other => panic!("expected Config error, got {other:?}"),
         }
         // Likewise a stash dir without a stash store to put there.
-        let cfg4 = SessionConfig { prefetch: 4, stash_dir: Some("/tmp/x".into()), ..cfg };
-        match Session::new(cfg4, nmt_task(), man).err() {
+        let cfg4 =
+            SessionConfig { prefetch: 4, stash_dir: Some("/tmp/x".into()), ..cfg.clone() };
+        match Session::new(cfg4, nmt_task(), man.clone()).err() {
             Some(Error::Config(msg)) => {
                 assert!(msg.contains("--stash-state"), "{msg}");
             }
             other => panic!("expected Config error, got {other:?}"),
         }
+        // An out-of-range replica shard is caught before any PJRT work.
+        let cfg5 = SessionConfig {
+            prefetch: 4,
+            shard: Some(ReplicaShard { rank: 2, replicas: 2, mirror: false }),
+            ..cfg
+        };
+        match Session::new(cfg5, nmt_task(), man).err() {
+            Some(Error::Config(msg)) => assert!(msg.contains("rank 2"), "{msg}"),
+            other => panic!("expected Config error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn round_robin_shard_partitions_every_batch_exactly_once() {
+        // The data-parallel contract: across ranks, each global batch of
+        // an epoch is consumed by exactly one replica — no batch dropped,
+        // none seen twice. Mirrored shards consume everything.
+        for replicas in [1usize, 2, 3, 5] {
+            let total = 4 * replicas;
+            for idx in 0..total {
+                let owners: Vec<usize> = (0..replicas)
+                    .filter(|&rank| {
+                        replica_consumes(
+                            &ReplicaShard { rank, replicas, mirror: false },
+                            0,
+                            idx,
+                        )
+                    })
+                    .collect();
+                assert_eq!(owners.len(), 1, "batch {idx} with {replicas} replicas: {owners:?}");
+            }
+            // Every rank owns exactly batches_per_epoch = total/replicas.
+            for rank in 0..replicas {
+                let sh = ReplicaShard { rank, replicas, mirror: false };
+                let owned = (0..total).filter(|&i| replica_consumes(&sh, 0, i)).count();
+                assert_eq!(owned, total / replicas);
+            }
+        }
+        let mirror = ReplicaShard { rank: 1, replicas: 2, mirror: true };
+        assert!((0..8).all(|i| replica_consumes(&mirror, 0, i)));
+    }
+
+    #[test]
+    fn resume_skip_never_replays_a_consumed_batch() {
+        // Crash-salvage invariant: batches consumed before the crash
+        // (0..skip) and after the resume (the skip-filtered stream) are
+        // disjoint and together cover the epoch exactly once — per rank.
+        for replicas in [1usize, 2, 3] {
+            let total = 6 * replicas;
+            for rank in 0..replicas {
+                let sh = ReplicaShard { rank, replicas, mirror: false };
+                // Simulate a crash right after the step that consumed
+                // global batch `cut`; the checkpoint records the
+                // next-unconsumed position.
+                for cut in (0..total).filter(|&i| replica_consumes(&sh, 0, i)) {
+                    let skip = next_global_batch(&sh, cut);
+                    let before: Vec<usize> =
+                        (0..skip).filter(|&i| replica_consumes(&sh, 0, i)).collect();
+                    let after: Vec<usize> =
+                        (0..total).filter(|&i| replica_consumes(&sh, skip, i)).collect();
+                    assert!(before.iter().all(|i| !after.contains(i)), "replayed a batch");
+                    let mut union = before;
+                    union.extend(&after);
+                    let want: Vec<usize> =
+                        (0..total).filter(|&i| replica_consumes(&sh, 0, i)).collect();
+                    assert_eq!(union, want, "resume must cover the rest exactly once");
+                }
+            }
+        }
+        // And the mirrored/single-replica position is just idx + 1.
+        let single = ReplicaShard { rank: 0, replicas: 1, mirror: true };
+        assert_eq!(next_global_batch(&single, 3), 4);
     }
 
     #[test]
@@ -1064,6 +1322,7 @@ mod tests {
             schedule_desc: "static fp32".into(),
             wall_s: 2.0,
             stash: None,
+            comms: None,
         };
         let r = mk(Some(TaskMetric::Bleu(20.0)));
         assert_eq!(r.bleu(), Some(20.0));

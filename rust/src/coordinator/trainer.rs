@@ -10,7 +10,7 @@ use crate::data::{Batcher, TranslationConfig, TranslationTask, Variant};
 use crate::model::ModelState;
 use crate::runtime::ArtifactManifest;
 use crate::schedule::{FormatSpec, Schedule};
-use crate::stash::StashBudget;
+use crate::stash::{run_replicas, ReplicaShard, StashBudget};
 use crate::Result;
 
 use super::lr::LrSchedule;
@@ -48,6 +48,20 @@ pub struct TrainerConfig {
     /// Spill-segment / index directory (see
     /// [`SessionConfig::stash_dir`]); `None` = per-run temp dir.
     pub stash_dir: Option<PathBuf>,
+    /// In-process data-parallel replica count (`--replicas`; 1 = the
+    /// single-replica path, bit-for-bit today's behavior). Replicated
+    /// runs go through [`Trainer::run_replicated`].
+    pub replicas: usize,
+    /// Packed format the replicas exchange state in (`--comms`); only
+    /// meaningful when `replicas > 1`. `fp32` reduces in full precision
+    /// (bit-transparent); SR formats draw rank-salted rounding streams.
+    pub comms: FormatSpec,
+    /// Mirror the batch stream across replicas instead of round-robin
+    /// sharding it — the transparency configuration (N replicas consume
+    /// identical data, so under `fp32` comms the run is bit-identical
+    /// to single-replica). Round-robin (the default) is the N×-batch
+    /// data-parallel emulation.
+    pub mirror_replicas: bool,
 }
 
 impl TrainerConfig {
@@ -69,6 +83,9 @@ impl TrainerConfig {
             stash_format: None,
             stash_budget: StashBudget::Unlimited,
             stash_dir: None,
+            replicas: 1,
+            comms: FormatSpec::Fp32,
+            mirror_replicas: false,
         }
     }
 
@@ -88,7 +105,33 @@ impl TrainerConfig {
             stash_format: self.stash_format,
             stash_budget: self.stash_budget,
             stash_dir: self.stash_dir.clone(),
+            shard: None,
         }
+    }
+
+    /// Per-rank view of a replicated config: rank 0 keeps the headline
+    /// duties (checkpointing, BLEU decode); peers only train. Spill
+    /// directories get a per-rank suffix so replicas never share index
+    /// files.
+    fn for_rank(&self, rank: usize) -> Self {
+        let mut cfg = self.clone();
+        if self.replicas > 1 {
+            if rank != 0 {
+                cfg.checkpoint = None;
+                cfg.checkpoint_every_steps = 0;
+                cfg.bleu_batches = 0;
+            }
+            cfg.stash_dir = self.stash_dir.as_ref().map(|d| d.join(format!("rank{rank}")));
+        }
+        cfg
+    }
+
+    fn shard_for(&self, rank: usize) -> Option<ReplicaShard> {
+        (self.replicas > 1).then_some(ReplicaShard {
+            rank,
+            replicas: self.replicas,
+            mirror: self.mirror_replicas,
+        })
     }
 }
 
@@ -100,6 +143,10 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: TrainerConfig) -> Result<Self> {
+        Self::with_shard(cfg, None)
+    }
+
+    fn with_shard(cfg: TrainerConfig, shard: Option<ReplicaShard>) -> Result<Self> {
         let man = ArtifactManifest::load(&cfg.artifacts)?;
         let (b, s, t, v) = (
             man.nmt.cfg("batch")?,
@@ -119,8 +166,35 @@ impl Trainer {
             seed: cfg.seed,
             bleu_batches: cfg.bleu_batches,
         };
-        let session = Session::new(cfg.session_config(), task, man)?;
+        let mut scfg = cfg.session_config();
+        scfg.shard = shard;
+        let session = Session::new(scfg, task, man)?;
         Ok(Trainer { cfg, session })
+    }
+
+    /// Run `cfg.replicas` in-process data-parallel replicas, exchanging
+    /// state in `cfg.comms` packed records after every step (see
+    /// [`crate::stash::exchange`]). `replicas <= 1` is exactly
+    /// [`Trainer::new`] + [`Trainer::run`] — today's path, bit-for-bit.
+    /// Each replica gets its own schedule from `make_schedule`; rank 0's
+    /// report (post-reduce state is identical on every rank) is
+    /// returned, with [`RunReport::comms`] carrying the metered
+    /// exchange traffic.
+    pub fn run_replicated(
+        cfg: TrainerConfig,
+        make_schedule: impl Fn() -> Result<Box<dyn Schedule>> + Sync,
+    ) -> Result<RunReport> {
+        if cfg.replicas <= 1 {
+            let mut t = Trainer::new(cfg)?;
+            let mut schedule = make_schedule()?;
+            return t.run(schedule.as_mut());
+        }
+        run_replicas(cfg.replicas, cfg.comms, |rank, ex| {
+            let mut t = Trainer::with_shard(cfg.for_rank(rank), cfg.shard_for(rank))?;
+            t.session().set_exchange(ex)?;
+            let mut schedule = make_schedule()?;
+            t.run(schedule.as_mut())
+        })
     }
 
     pub fn manifest(&self) -> &ArtifactManifest {

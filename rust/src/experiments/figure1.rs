@@ -43,6 +43,26 @@ pub fn stash_traffic_rows(w: &TransformerWorkload) -> Vec<(&'static str, f64, f6
         .collect()
 }
 
+/// The comms measured column (PR 7): per wire format, the modeled
+/// `container_bits()` of one two-replica exchange round next to the
+/// meter-observed wire bits ([`crate::stash::measure_state_comms`]) —
+/// the comms-bytes story gets the same modeled-vs-observed treatment
+/// the DRAM column has. Returns `(spec string, modeled, observed)`.
+pub fn comms_traffic_rows() -> Vec<(String, f64, f64)> {
+    let widths = [8u32];
+    let mut specs = vec![FormatSpec::Fp32];
+    specs.extend(
+        crate::quant::registered_specs(&widths).into_iter().filter(|s| *s != FormatSpec::Fp32),
+    );
+    specs
+        .into_iter()
+        .filter_map(|spec| {
+            let t = crate::stash::measure_state_comms(spec).ok()?;
+            Some((spec.to_string(), t.meter.modeled_comms_bits, t.meter.observed_comms_bits()))
+        })
+        .collect()
+}
+
 pub fn print_roofline(m: &Machine, w: &TransformerWorkload) {
     println!(
         "roofline on {} (peak {:.0} TMAC/s, bw {:.0} GB/s, balance I_opt = {:.1} MAC/byte), workload {}",
@@ -75,6 +95,11 @@ pub fn print_stash_traffic(w: &TransformerWorkload) {
     println!("{:<32} {:>16} {:>16}", "config", "modeled (Mbit)", "observed (Mbit)");
     for (label, modeled, observed) in stash_traffic_rows(w) {
         println!("{label:<32} {:>16.2} {:>16.2}", modeled / 1e6, observed / 1e6);
+    }
+    println!("\ncomms traffic per 2-replica exchange round (modeled vs wire-observed):");
+    println!("{:<32} {:>16} {:>16}", "wire format", "modeled (Kbit)", "observed (Kbit)");
+    for (spec, modeled, observed) in comms_traffic_rows() {
+        println!("{spec:<32} {:>16.2} {:>16.2}", modeled / 1e3, observed / 1e3);
     }
 }
 
@@ -136,6 +161,13 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
     for (label, modeled, observed) in stash_traffic_rows(&w) {
         md.push_str(&format!("| {label} | {:.2} | {:.2} |\n", modeled / 1e6, observed / 1e6));
     }
+    md.push_str(
+        "\n## Comms traffic per 2-replica exchange round (measured)\n\n\
+         | wire format | modeled Kbit | observed Kbit |\n|---|---|---|\n",
+    );
+    for (spec, modeled, observed) in comms_traffic_rows() {
+        md.push_str(&format!("| {spec} | {:.2} | {:.2} |\n", modeled / 1e3, observed / 1e3));
+    }
     let json = Json::obj(vec![
         ("machines", Json::arr(json_machines)),
         (
@@ -145,6 +177,16 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
                     ("config", Json::str(label)),
                     ("modeled_bits", Json::num(modeled)),
                     ("observed_bits", Json::num(observed)),
+                ])
+            })),
+        ),
+        (
+            "comms_traffic",
+            Json::arr(comms_traffic_rows().into_iter().map(|(spec, modeled, observed)| {
+                Json::obj(vec![
+                    ("spec", Json::str(&spec)),
+                    ("modeled_comms_bits", Json::num(modeled)),
+                    ("observed_comms_bits", Json::num(observed)),
                 ])
             })),
         ),
@@ -188,5 +230,21 @@ mod tests {
         // The DSQ point stashes at bfp2 — its measured traffic must be
         // far below the fp32 point's.
         assert!(rows[4].2 < rows[0].2 / 8.0, "{rows:?}");
+    }
+
+    #[test]
+    fn measured_comms_column_covers_fp32_and_the_8bit_registry() {
+        let rows = comms_traffic_rows();
+        assert!(rows.len() >= 2, "{rows:?}");
+        assert_eq!(rows[0].0, "fp32");
+        for (spec, modeled, observed) in &rows {
+            assert!(*modeled > 0.0 && *observed > 0.0, "{spec}: empty measurement");
+        }
+        // An 8-bit wire format must move clearly fewer observed bits
+        // than the fp32 wire per round (record framing is shared, so
+        // the gap is smaller than the raw 4x payload ratio).
+        let fp32 = rows[0].2;
+        let sub = rows.iter().find(|(s, _, _)| s.contains('8')).expect("an 8-bit row");
+        assert!(sub.2 < fp32 * 0.7, "{rows:?}");
     }
 }

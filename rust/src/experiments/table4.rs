@@ -38,45 +38,48 @@ pub const SWEEP: &[(&str, f64)] = &[
 pub fn run(opts: &ExperimentOpts) -> Result<()> {
     let mut md = String::from(
         "# Table 4: stash precision sweep (Stashing BFP, synthetic IWSLT-style task)\n\n\
-         The measured column is the codec-observed bytes one stash round\n\
-         trip of the final model state takes at the row's q1 format —\n\
-         one synthetic step through the stash store, not a modeled\n\
-         number.\n\n\
-         | precision | BLEU | Δ vs fp32 | paper Δ | stash state (measured) |\n\
-         |---|---|---|---|---|\n",
+         The measured columns are codec-observed bytes, not modeled\n\
+         numbers: one stash round trip of the final model state at the\n\
+         row's q1 format (one synthetic step through the stash store),\n\
+         and the wire bytes one rank sends + receives in a two-replica\n\
+         exchange round of that state at the same format.\n\n\
+         | precision | BLEU | Δ vs fp32 | paper Δ | stash state (measured) | comms/round (measured) |\n\
+         |---|---|---|---|---|---|\n",
     );
     let mut json_rows = Vec::new();
 
     // fp32 baseline first.
-    let (fp32_bleu, fp32_measured) = if opts.train {
+    let (fp32_bleu, fp32_measured, fp32_comms) = if opts.train {
         train_one(opts, PrecisionConfig::FP32)?
     } else {
-        (None, None)
+        (None, None, None)
     };
     md.push_str(&format!(
-        "| fp32 [32,32,32,32] | {} | - | - | {} |\n",
+        "| fp32 [32,32,32,32] | {} | - | - | {} | {} |\n",
         fp32_bleu.map_or("-".into(), |b| format!("{b:.2}")),
         fp32_measured.map_or("-".into(), crate::stash::fmt_bytes),
+        fp32_comms.map_or("-".into(), crate::stash::fmt_bytes),
     ));
 
     for (setup, paper_delta) in SWEEP {
         let p = PrecisionConfig::parse(&format!("bfp:{setup}"))?;
-        let (bleu, delta, measured) = if opts.train {
-            let (bleu, measured) = train_one(opts, p)?;
+        let (bleu, delta, measured, comms) = if opts.train {
+            let (bleu, measured, comms) = train_one(opts, p)?;
             let delta = match (bleu, fp32_bleu) {
                 (Some(b), Some(f)) => Some(b - f),
                 _ => None,
             };
-            (bleu, delta, measured)
+            (bleu, delta, measured, comms)
         } else {
-            (None, None, None)
+            (None, None, None, None)
         };
         md.push_str(&format!(
-            "| {} | {} | {} | {paper_delta:+.2} | {} |\n",
+            "| {} | {} | {} | {paper_delta:+.2} | {} | {} |\n",
             setup,
             bleu.map_or("-".into(), |b| format!("{b:.2}")),
             delta.map_or("-".into(), |d| format!("{d:+.2}")),
             measured.map_or("-".into(), crate::stash::fmt_bytes),
+            comms.map_or("-".into(), crate::stash::fmt_bytes),
         ));
         json_rows.push(Json::obj(vec![
             ("precision", Json::str(setup)),
@@ -87,17 +90,25 @@ pub fn run(opts: &ExperimentOpts) -> Result<()> {
                 "measured_stash_bytes",
                 measured.map_or(Json::Null, |b| Json::num(b as f64)),
             ),
+            (
+                "measured_comms_bytes",
+                comms.map_or(Json::Null, |b| Json::num(b as f64)),
+            ),
         ]));
     }
     println!("{md}");
     super::write_report(&opts.out, "table4", &md, &Json::arr(json_rows))
 }
 
-/// One sweep row: BLEU from the run, plus the measured stash bytes of
-/// one state round trip through the stash store at the row's q1 format
-/// (pure measurement on the final state — the run's numerics are
-/// untouched).
-fn train_one(opts: &ExperimentOpts, p: PrecisionConfig) -> Result<(Option<f64>, Option<u64>)> {
+/// One sweep row: BLEU from the run, plus two pure measurements on the
+/// final state (the run's numerics are untouched) — the stash bytes of
+/// one round trip through the stash store at the row's q1 format, and
+/// the wire bytes one rank moves (tx + rx) in a two-replica exchange
+/// round at that same format.
+fn train_one(
+    opts: &ExperimentOpts,
+    p: PrecisionConfig,
+) -> Result<(Option<f64>, Option<u64>, Option<u64>)> {
     let cfg = TrainerConfig {
         artifacts: opts.artifacts.clone(),
         seed: 0,
@@ -110,5 +121,10 @@ fn train_one(opts: &ExperimentOpts, p: PrecisionConfig) -> Result<(Option<f64>, 
     let mut trainer = Trainer::new(cfg)?;
     let report = trainer.run(schedule.as_mut())?;
     let traffic = crate::stash::measure_state_traffic(trainer.state(), &p.stash())?;
-    Ok((report.bleu(), Some(traffic.meter.stash_write_bytes)))
+    let comms = crate::stash::measure_comms_round(trainer.state(), p.stash())?;
+    Ok((
+        report.bleu(),
+        Some(traffic.meter.stash_write_bytes),
+        Some(comms.meter.comms_tx_bytes + comms.meter.comms_rx_bytes),
+    ))
 }

@@ -26,13 +26,23 @@
 //! tensors stay packed in memory (decoded lazily at the PJRT boundary),
 //! so load-then-save reproduces the file bit-for-bit.
 //!
-//! **Schedule-state trailer** (optional, both versions): after the
-//! tensor groups a checkpoint may carry a `DSQSCHD1` record —
-//! `u32 level, u32 stale, u32 observed, f64 best_loss` — the resumable
-//! [`ScheduleState`] of the precision controller. A resumed run restores
-//! it so the DSQ ladder continues where it stopped instead of silently
-//! restarting at `[2,2,2,16]`. Files without the trailer (all pre-trailer
-//! checkpoints, and runs under stateless schedules) load as `None`.
+//! **Trailers** (optional, both versions): after the tensor groups a
+//! checkpoint may carry self-describing trailer records, each led by an
+//! 8-byte magic, in any order (at most one of each):
+//!
+//! * `DSQSCHD1` — `u32 level, u32 stale, u32 observed, f64 best_loss` —
+//!   the resumable [`ScheduleState`] of the precision controller. A
+//!   resumed run restores it so the DSQ ladder continues where it
+//!   stopped instead of silently restarting at `[2,2,2,16]`.
+//! * `DSQPOSN1` — `u64 epoch, u64 batch` — the batch-stream
+//!   [`ResumePosition`]: the 0-based epoch index and the offset of the
+//!   *next unconsumed batch* within that epoch at save time. Crash
+//!   salvage resumes mid-epoch from here instead of re-drawing the
+//!   epoch stream and silently replaying already-seen batches.
+//!
+//! Files without a given trailer (all pre-trailer checkpoints, runs
+//! under stateless schedules, end-of-run saves) load that slot as
+//! `None`.
 //!
 //! Checkpoints are validated against the artifact manifest on load, so a
 //! checkpoint from a different model config fails loudly instead of
@@ -51,6 +61,18 @@ const MAGIC: &[u8; 8] = b"DSQCKPT1";
 const MAGIC_V2: &[u8; 8] = b"DSQCKPT2";
 /// Optional schedule-state trailer magic (after the tensor groups).
 const SCHED_MAGIC: &[u8; 8] = b"DSQSCHD1";
+/// Optional batch-stream position trailer magic.
+const POSN_MAGIC: &[u8; 8] = b"DSQPOSN1";
+
+/// Where in the sharded batch stream a mid-run checkpoint was taken:
+/// the first batch a resumed run should consume. `epoch` is 0-based;
+/// `batch` is the offset within that epoch's stream (in *global* batch
+/// indices, before any replica sharding).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResumePosition {
+    pub epoch: u64,
+    pub batch: u64,
+}
 
 /// A loaded checkpoint (pre-validation).
 #[derive(Debug)]
@@ -199,10 +221,17 @@ fn write_schedule_trailer(w: &mut impl Write, s: &ScheduleState) -> Result<()> {
     Ok(())
 }
 
-/// Read the optional trailer. Clean EOF right after the tensor groups
-/// means "no trailer" (every pre-trailer checkpoint); anything else —
-/// including a *truncated* magic — is corruption and fails loudly.
-fn read_schedule_trailer(r: &mut impl Read) -> Result<Option<ScheduleState>> {
+fn write_position_trailer(w: &mut impl Write, p: &ResumePosition) -> Result<()> {
+    w.write_all(POSN_MAGIC)?;
+    write_u64(w, p.epoch)?;
+    write_u64(w, p.batch)?;
+    Ok(())
+}
+
+/// Read one trailer magic, or `None` on clean EOF right after the
+/// tensor groups / previous trailer. A *truncated* magic is corruption
+/// and fails loudly.
+fn read_trailer_magic(r: &mut impl Read) -> Result<Option<[u8; 8]>> {
     let mut magic = [0u8; 8];
     let mut got = 0;
     while got < magic.len() {
@@ -216,14 +245,42 @@ fn read_schedule_trailer(r: &mut impl Read) -> Result<Option<ScheduleState>> {
     if got == 0 {
         return Ok(None);
     }
-    if got < magic.len() || &magic != SCHED_MAGIC {
-        return Err(Error::Manifest("unrecognized checkpoint trailer".into()));
+    if got < magic.len() {
+        return Err(Error::Manifest("truncated checkpoint trailer".into()));
     }
-    let level = read_u32(r)?;
-    let stale = read_u32(r)?;
-    let observed = read_u32(r)?;
-    let best_loss = f64::from_bits(read_u64(r)?);
-    Ok(Some(ScheduleState { level, stale, observed, best_loss }))
+    Ok(Some(magic))
+}
+
+/// Read the optional trailer records (any order, at most one of each)
+/// until clean EOF. Unknown magics — including any pre-trailer garbage
+/// — fail loudly instead of silently resuming with fresh state.
+fn read_trailers(
+    r: &mut impl Read,
+) -> Result<(Option<ScheduleState>, Option<ResumePosition>)> {
+    let mut schedule = None;
+    let mut position = None;
+    while let Some(magic) = read_trailer_magic(r)? {
+        match &magic {
+            m if m == SCHED_MAGIC => {
+                if schedule.is_some() {
+                    return Err(Error::Manifest("duplicate schedule trailer".into()));
+                }
+                let level = read_u32(r)?;
+                let stale = read_u32(r)?;
+                let observed = read_u32(r)?;
+                let best_loss = f64::from_bits(read_u64(r)?);
+                schedule = Some(ScheduleState { level, stale, observed, best_loss });
+            }
+            m if m == POSN_MAGIC => {
+                if position.is_some() {
+                    return Err(Error::Manifest("duplicate position trailer".into()));
+                }
+                position = Some(ResumePosition { epoch: read_u64(r)?, batch: read_u64(r)? });
+            }
+            _ => return Err(Error::Manifest("unrecognized checkpoint trailer".into())),
+        }
+    }
+    Ok((schedule, position))
 }
 
 fn save_with(
@@ -232,6 +289,7 @@ fn save_with(
     mm: &ModelManifest,
     framing: TensorFraming<'_>,
     schedule: Option<&ScheduleState>,
+    position: Option<&ResumePosition>,
 ) -> Result<()> {
     ModelState::validate_against(&state.params, mm)?;
     if let Some(parent) = path.parent() {
@@ -277,6 +335,9 @@ fn save_with(
         if let Some(s) = schedule {
             write_schedule_trailer(&mut w, s)?;
         }
+        if let Some(p) = position {
+            write_position_trailer(&mut w, p)?;
+        }
         w.flush()?;
         // Durability before visibility: the bytes must be on disk
         // before the rename makes them the checkpoint.
@@ -302,9 +363,24 @@ pub fn save_checkpoint_full(
     mm: &ModelManifest,
     schedule: Option<&ScheduleState>,
 ) -> Result<()> {
+    save_checkpoint_positioned(path, state, mm, schedule, None)
+}
+
+/// [`save_checkpoint_full`] plus an optional batch-stream
+/// [`ResumePosition`] trailer. Mid-run (crash-salvage) saves pass the
+/// next-unconsumed-batch position so a resumed run continues mid-epoch
+/// instead of replaying the epoch from the top; end-of-run saves pass
+/// `None` (there is nothing left to resume into).
+pub fn save_checkpoint_positioned(
+    path: &Path,
+    state: &ModelState,
+    mm: &ModelManifest,
+    schedule: Option<&ScheduleState>,
+    position: Option<&ResumePosition>,
+) -> Result<()> {
     let framing =
         if state.is_packed() { TensorFraming::Packed(None) } else { TensorFraming::Dense };
-    save_with(path, state, mm, framing, schedule)
+    save_with(path, state, mm, framing, schedule, position)
 }
 
 /// Save with every tensor packed into `spec` (quantizing dense tensors
@@ -318,7 +394,7 @@ pub fn save_checkpoint_packed(
     mm: &ModelManifest,
     spec: &FormatSpec,
 ) -> Result<()> {
-    save_with(path, state, mm, TensorFraming::Packed(Some(spec)), None)
+    save_with(path, state, mm, TensorFraming::Packed(Some(spec)), None, None)
 }
 
 /// Load and validate a checkpoint against the manifest, dropping any
@@ -335,6 +411,16 @@ pub fn load_checkpoint_full(
     path: &Path,
     mm: &ModelManifest,
 ) -> Result<(ModelState, Option<ScheduleState>)> {
+    load_checkpoint_positioned(path, mm).map(|(state, sched, _)| (state, sched))
+}
+
+/// Load a checkpoint plus both optional trailers: the resumable
+/// [`ScheduleState`] and the batch-stream [`ResumePosition`] (each
+/// `None` when the file does not carry it).
+pub fn load_checkpoint_positioned(
+    path: &Path,
+    mm: &ModelManifest,
+) -> Result<(ModelState, Option<ScheduleState>, Option<ResumePosition>)> {
     let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
@@ -378,11 +464,11 @@ pub fn load_checkpoint_full(
         }
         all.push(group);
     }
-    let schedule = read_schedule_trailer(&mut r)?;
+    let (schedule, position) = read_trailers(&mut r)?;
     let v = all.pop().unwrap();
     let m = all.pop().unwrap();
     let params = all.pop().unwrap();
-    Ok((ModelState { params, m, v, step }, schedule))
+    Ok((ModelState { params, m, v, step }, schedule, position))
 }
 
 #[cfg(test)]
@@ -530,6 +616,66 @@ mod tests {
         assert_eq!(bytes, std::fs::read(&path2).unwrap());
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn position_trailer_roundtrips_alongside_the_schedule() {
+        let path = tmpfile("posn-trailer.bin");
+        let sched = ScheduleState { level: 2, stale: 0, observed: 5, best_loss: 3.25 };
+        let pos = ResumePosition { epoch: 1, batch: 5 };
+        save_checkpoint_positioned(&path, &state(), &mm(), Some(&sched), Some(&pos)).unwrap();
+        let (back, got_sched, got_pos) = load_checkpoint_positioned(&path, &mm()).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(got_sched, Some(sched));
+        assert_eq!(got_pos, Some(pos));
+        // The compat loaders still read the tensors and drop trailers.
+        let (_, got_sched) = load_checkpoint_full(&path, &mm()).unwrap();
+        assert_eq!(got_sched, Some(sched));
+        assert_eq!(load_checkpoint(&path, &mm()).unwrap().step, 42);
+        // Resaving the loaded trailers reproduces the file exactly.
+        let path2 = tmpfile("posn-trailer2.bin");
+        save_checkpoint_positioned(&path2, &back, &mm(), got_sched.as_ref(), got_pos.as_ref())
+            .unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), std::fs::read(&path2).unwrap());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn position_trailer_golden_bytes() {
+        // Pin the on-disk framing: the file ends with the DSQPOSN1 magic
+        // followed by little-endian u64 epoch and batch.
+        let path = tmpfile("posn-golden.bin");
+        let pos = ResumePosition { epoch: 3, batch: 0x0102_0304 };
+        save_checkpoint_positioned(&path, &state(), &mm(), None, Some(&pos)).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let tail = &bytes[bytes.len() - 24..];
+        assert_eq!(&tail[..8], b"DSQPOSN1");
+        assert_eq!(&tail[8..16], &3u64.to_le_bytes());
+        assert_eq!(&tail[16..24], &0x0102_0304u64.to_le_bytes());
+        // Everything before the trailer is exactly the positionless file.
+        let plain = tmpfile("posn-golden-plain.bin");
+        save_checkpoint(&plain, &state(), &mm()).unwrap();
+        assert_eq!(&bytes[..bytes.len() - 24], std::fs::read(&plain).unwrap().as_slice());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&plain).ok();
+    }
+
+    #[test]
+    fn duplicate_or_truncated_position_trailer_is_rejected() {
+        let path = tmpfile("posn-dup.bin");
+        let pos = ResumePosition { epoch: 0, batch: 7 };
+        save_checkpoint_positioned(&path, &state(), &mm(), None, Some(&pos)).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // A second DSQPOSN1 record is corruption, not a silent override.
+        let mut bytes = good.clone();
+        bytes.extend_from_slice(&good[good.len() - 24..]);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_checkpoint_positioned(&path, &mm()).is_err());
+        // A truncated position payload fails loudly too.
+        std::fs::write(&path, &good[..good.len() - 9]).unwrap();
+        assert!(load_checkpoint_positioned(&path, &mm()).is_err());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

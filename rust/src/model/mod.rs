@@ -12,8 +12,9 @@
 pub mod checkpoint;
 
 pub use checkpoint::{
-    load_checkpoint, load_checkpoint_full, save_checkpoint, save_checkpoint_full,
-    save_checkpoint_packed, Checkpoint,
+    load_checkpoint, load_checkpoint_full, load_checkpoint_positioned, save_checkpoint,
+    save_checkpoint_full, save_checkpoint_packed, save_checkpoint_positioned, Checkpoint,
+    ResumePosition,
 };
 
 use crate::quant::{stash_stream, FormatSpec};

@@ -297,11 +297,32 @@ impl FormatSpec {
     /// layer id, …) so each gets a decorrelated rounding stream while
     /// staying deterministic in `(step, stream)`.
     pub fn quantize_into_stream(&self, x: &mut [f32], inner: usize, step: u64, stream: u64) {
+        self.quantize_into_stream_salted(x, inner, step, stream, 0);
+    }
+
+    /// Like [`FormatSpec::quantize_into_stream`], with an additional
+    /// caller identity `salt` folded into the SR seed. This is the
+    /// replica seeding contract for data-parallel exchange: seeding on
+    /// `(step, stream)` alone gives every replica the *same* rounding
+    /// stream at a given step — perfectly correlated noise that biases
+    /// the all-reduce mean instead of averaging out. Passing the replica
+    /// rank as `salt` decorrelates the replicas; `salt == 0` reproduces
+    /// the unsalted stream bit-for-bit (pinned by a regression test), so
+    /// single-replica paths and rank 0 are unchanged.
+    pub fn quantize_into_stream_salted(
+        &self,
+        x: &mut [f32],
+        inner: usize,
+        step: u64,
+        stream: u64,
+        salt: u64,
+    ) {
         let sr_rng = |width_salt: u64| {
             Pcg32::new(
                 SR_STREAM_SALT
                     ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15)
                     ^ stream.wrapping_mul(0xD1B5_4A32_D192_ED03)
+                    ^ salt.wrapping_mul(0xA076_1D64_78BD_642F)
                     ^ width_salt,
             )
         };
@@ -703,6 +724,50 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn replica_salt_zero_reproduces_unsalted_streams_exactly() {
+        // The replica seeding contract: salt 0 IS the legacy stream.
+        // Every SR format, across several (step, stream) points, must
+        // produce byte-identical output through the salted entry point —
+        // a regression here silently breaks bit-compat of every
+        // single-replica run and every rank-0 artifact.
+        let mut rng = Pcg32::new(11);
+        let x = gen_f32s(&mut rng, 256, 6.0);
+        for sr in [FormatSpec::fixed_sr(8), FormatSpec::fixed_sr(4), FormatSpec::float_sr(4, 3)] {
+            for (step, stream) in [(0u64, 0u64), (7, 0), (7, 3), (1 << 40, 9)] {
+                let mut legacy = x.clone();
+                sr.quantize_into_stream(&mut legacy, 256, step, stream);
+                let mut salted = x.clone();
+                sr.quantize_into_stream_salted(&mut salted, 256, step, stream, 0);
+                assert_eq!(legacy, salted, "{sr} at ({step},{stream}): salt 0 must be identity");
+            }
+        }
+    }
+
+    #[test]
+    fn replica_salts_decorrelate_and_stay_deterministic() {
+        let mut rng = Pcg32::new(12);
+        let x = gen_f32s(&mut rng, 256, 6.0);
+        for sr in [FormatSpec::fixed_sr(8), FormatSpec::float_sr(4, 3)] {
+            let q = |salt: u64| {
+                let mut b = x.clone();
+                sr.quantize_into_stream_salted(&mut b, 256, 7, 2, salt);
+                b
+            };
+            assert_ne!(q(0), q(1), "{sr}: replica ranks must draw distinct streams");
+            assert_ne!(q(1), q(2), "{sr}: replica ranks must draw distinct streams");
+            assert_eq!(q(1), q(1), "{sr}: (step, stream, salt) must stay deterministic");
+        }
+        // Non-stochastic formats are salt-blind by construction.
+        for f in [FormatSpec::Fp32, FormatSpec::bfp(4), FormatSpec::fixed(8)] {
+            let mut a = x.clone();
+            let mut b = x.clone();
+            f.quantize_into_stream_salted(&mut a, 256, 7, 2, 0);
+            f.quantize_into_stream_salted(&mut b, 256, 7, 2, 5);
+            assert_eq!(a, b, "{f}: deterministic formats must ignore the salt");
+        }
     }
 
     #[test]

@@ -102,6 +102,23 @@ pub trait Codec {
         inner: usize,
         step: u64,
         stream: u64,
+    ) -> PackedTensor {
+        self.encode_stream_salted(x, shape, inner, step, stream, 0)
+    }
+
+    /// [`Codec::encode_stream`] with a caller-identity `salt` folded into
+    /// the SR seed ([`FormatSpec::quantize_into_stream_salted`]) — the
+    /// wire-encode entry point for replica exchange, where each rank must
+    /// draw a decorrelated rounding stream for the same `(step, stream)`.
+    /// Salt 0 is bit-identical to [`Codec::encode_stream`].
+    fn encode_stream_salted(
+        &self,
+        x: &[f32],
+        shape: &[usize],
+        inner: usize,
+        step: u64,
+        stream: u64,
+        salt: u64,
     ) -> PackedTensor;
 
     /// [`Codec::encode_stream`] at the step-0 stream (matching
@@ -310,13 +327,14 @@ fn raw_f32_bytes(x: &[f32]) -> Vec<u8> {
 }
 
 impl Codec for FormatSpec {
-    fn encode_stream(
+    fn encode_stream_salted(
         &self,
         x: &[f32],
         shape: &[usize],
         inner: usize,
         step: u64,
         stream: u64,
+        salt: u64,
     ) -> PackedTensor {
         assert_eq!(shape.iter().product::<usize>(), x.len(), "shape/data mismatch");
         assert!(inner > 0, "inner must be >= 1");
@@ -328,7 +346,7 @@ impl Codec for FormatSpec {
             // power-of-two step). Duplicating the element rule here
             // would invite drift; dividing cannot.
             let mut q = x.to_vec();
-            self.quantize_into_stream(&mut q, inner, step, stream);
+            self.quantize_into_stream_salted(&mut q, inner, step, stream, salt);
             let bits = lane_bits(self);
             let mut out = Vec::with_capacity(self.packed_len(x.len(), inner));
             match *self {
@@ -898,6 +916,34 @@ mod tests {
         assert_eq!(a, b, "same (step, stream) must pack bit-identically");
         let c = sr.encode_stream(&x, &[64], 64, 2, 0);
         assert_ne!(a.payload(), c.payload(), "different steps must repack differently");
+    }
+
+    #[test]
+    fn salted_encode_matches_unsalted_at_salt_zero_and_decorrelates_ranks() {
+        let mut rng = Pcg32::new(9);
+        let x = gen_f32s(&mut rng, 64, 5.0);
+        for spec in registered_specs(&[4u32, 8]) {
+            let base = spec.encode_stream(&x, &[64], 64, 7, 3);
+            let rank0 = spec.encode_stream_salted(&x, &[64], 64, 7, 3, 0);
+            assert_eq!(base, rank0, "{spec}: salt 0 must reproduce the unsalted wire bytes");
+            let rank1 = spec.encode_stream_salted(&x, &[64], 64, 7, 3, 1);
+            if spec.is_stochastic() {
+                assert_ne!(
+                    rank0.payload(),
+                    rank1.payload(),
+                    "{spec}: ranks must pack decorrelated SR payloads"
+                );
+            } else {
+                assert_eq!(rank0, rank1, "{spec}: deterministic formats ignore the salt");
+            }
+            // Decoded salted payloads are still exactly the salted quantize.
+            let mut want = x.clone();
+            spec.quantize_into_stream_salted(&mut want, 64, 7, 3, 1);
+            let got = rank1.decode();
+            for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+                assert!(same_f32(g, w), "{spec} elem {i}: decoded {g}, quantized {w}");
+            }
+        }
     }
 
     #[test]

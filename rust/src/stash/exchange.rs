@@ -1,0 +1,822 @@
+//! Replica exchange: the in-process all-reduce that turns N `Session`
+//! replicas into one data-parallel run, speaking the stash layer's v2
+//! packed-record wire format.
+//!
+//! ## Protocol
+//!
+//! All replicas share one [`Exchange`] core holding a single-round
+//! in-memory ring: one slot per rank, a round counter, and a condvar.
+//! Each step every rank
+//!
+//! 1. **encodes** its post-step state (params, m, v — the same tensors
+//!    the stash store owns) as one frame of v2 packed records in the
+//!    comms [`FormatSpec`], plus a trailing fp32 loss word;
+//! 2. **posts** the frame into its slot and blocks until every rank's
+//!    slot for the round is full (a fast rank re-entering first waits
+//!    for its own slot to drain, so rounds cannot overlap);
+//! 3. **decodes** all N frames in rank order, sums dense f32, divides
+//!    by N, and **requantizes** the mean at salt 0 — every rank applies
+//!    the identical dequant–reduce–requant, so replica states re-converge
+//!    bit-identically each step. The last rank to collect clears the
+//!    ring for the next round.
+//!
+//! Under `fp32` comms the encode/decode legs are exact passthrough and
+//! the mean of two identical states is bit-identical to either (the
+//! mirrored two-replica transparency test pins this).
+//!
+//! ## Replica seeding contract
+//!
+//! Stochastic-rounding encodes are salted with the **replica rank**
+//! ([`Codec::encode_stream_salted`]): seeding on `(step, stream)` alone
+//! would give every replica the same rounding stream — perfectly
+//! correlated noise that biases the reduction instead of averaging out.
+//! Salt 0 reproduces the unsalted stream exactly, so rank 0 and every
+//! single-replica path are bit-compatible with the non-replicated
+//! system. The post-reduce requantize of the (identical) mean always
+//! runs at salt 0 on every rank.
+//!
+//! ## Failure teardown
+//!
+//! A replica that dies — divergence abort, I/O error, panic — must not
+//! strand peers on the barrier. [`Exchange::fail`] (called by
+//! [`run_replicas`] on any worker error, and by a drop-guard on panic)
+//! poisons the ring; every waiter, and every later arrival, returns a
+//! loud [`Error`] instead of hanging.
+//!
+//! ## Lock order
+//!
+//! Two mutexes, one global order: `ring` (barrier state) strictly before
+//! `comms` (traffic meter). No function acquires `comms` before `ring` —
+//! `dsq lint`'s `lock_discipline` rule enforces this mechanically.
+
+use std::io::Read;
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+
+use crate::model::ModelState;
+use crate::quant::{stash_stream, Codec, FormatSpec, PackedTensor};
+use crate::runtime::HostTensor;
+use crate::{Error, Result};
+
+use super::TrafficMeter;
+
+/// How a replica participates in the sharded batch stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicaShard {
+    /// This replica's rank in `[0, replicas)`.
+    pub rank: usize,
+    /// Total replica count.
+    pub replicas: usize,
+    /// When true every replica consumes the *same* stream (the
+    /// transparency/bit-identity configuration); when false the epoch
+    /// stream is dealt round-robin, so N replicas consume N× the data
+    /// per step — the 2×-batch emulation.
+    pub mirror: bool,
+}
+
+/// Comms traffic report: the exchange-side mirror of `StashTraffic` —
+/// modeled `container_bits()` next to codec-observed wire bytes, with
+/// the same box-metadata allowance.
+#[derive(Clone, Copy, Debug)]
+pub struct CommsTraffic {
+    pub spec: FormatSpec,
+    pub replicas: usize,
+    /// Aggregate meter across all ranks (only the `comms_*` channels are
+    /// populated by the exchange).
+    pub meter: TrafficMeter,
+    /// Legitimate modeled-vs-observed slack in bits, accumulated per
+    /// encoded/decoded tensor exactly like the stash store does.
+    pub allowance_bits: f64,
+}
+
+impl CommsTraffic {
+    /// |observed − modeled| in bits.
+    pub fn gap_bits(&self) -> f64 {
+        (self.meter.observed_comms_bits() - self.meter.modeled_comms_bits).abs()
+    }
+
+    /// True when the codec-observed wire bits agree with the cost
+    /// model's `container_bits()` within the box-metadata allowance.
+    pub fn agrees(&self) -> bool {
+        self.gap_bits() <= self.allowance_bits
+    }
+
+    /// One-line human summary for run reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "comms[{} x{}]: observed {:.0} bits (tx {} B, rx {} B, frames {} B), \
+             modeled {:.0} bits, gap {:.0} <= allowance {:.0}",
+            self.spec,
+            self.replicas,
+            self.meter.observed_comms_bits(),
+            self.meter.comms_tx_bytes,
+            self.meter.comms_rx_bytes,
+            self.meter.comms_frame_bytes,
+            self.meter.modeled_comms_bits,
+            self.gap_bits(),
+            self.allowance_bits,
+        )
+    }
+
+    /// JSON fragment for `RunReport::to_json`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("spec", Json::str(&self.spec.spec_string())),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("observed_comms_bits", Json::num(self.meter.observed_comms_bits())),
+            ("modeled_comms_bits", Json::num(self.meter.modeled_comms_bits)),
+            ("comms_tx_bytes", Json::num(self.meter.comms_tx_bytes as f64)),
+            ("comms_rx_bytes", Json::num(self.meter.comms_rx_bytes as f64)),
+            ("comms_frame_bytes", Json::num(self.meter.comms_frame_bytes as f64)),
+            ("allowance_bits", Json::num(self.allowance_bits)),
+            ("agrees", Json::Bool(self.agrees())),
+        ])
+    }
+}
+
+/// Barrier state for the single in-flight round.
+struct Ring {
+    /// One posted frame per rank; a full vector completes the round.
+    posts: Vec<Option<Arc<Vec<u8>>>>,
+    /// Ranks that have collected the current round's frames.
+    taken: usize,
+    /// Completed rounds (diagnostics only).
+    round: u64,
+    /// Set once by [`Exchange::fail`]; every wait exits with an error.
+    failed: Option<String>,
+}
+
+/// Aggregate comms meter, shared by all ranks.
+#[derive(Default)]
+struct Comms {
+    meter: TrafficMeter,
+    allowance_bits: f64,
+}
+
+struct Core {
+    n: usize,
+    spec: FormatSpec,
+    ring: Mutex<Ring>,
+    ring_cv: Condvar,
+    comms: Mutex<Comms>,
+}
+
+const ABORT_PREFIX: &str = "replica exchange aborted";
+
+fn abort_error(msg: &str) -> Error {
+    Error::Config(format!("{ABORT_PREFIX}: {msg}"))
+}
+
+/// Minor-axis length convention for box-based formats — the stash
+/// layer's rule (last dim, scalars count as 1).
+fn tensor_inner(shape: &[usize]) -> usize {
+    shape.last().copied().filter(|&d| d > 0).unwrap_or(1)
+}
+
+/// Shared exchange core: construct once, hand one [`ReplicaExchange`]
+/// per rank. Cloning shares the core (used for failure injection from
+/// the orchestrator).
+#[derive(Clone)]
+pub struct Exchange {
+    core: Arc<Core>,
+}
+
+impl Exchange {
+    pub fn new(spec: FormatSpec, replicas: usize) -> Result<Exchange> {
+        if replicas == 0 {
+            return Err(Error::Config("replica exchange needs at least 1 replica".into()));
+        }
+        Ok(Exchange {
+            core: Arc::new(Core {
+                n: replicas,
+                spec,
+                ring: Mutex::new(Ring {
+                    posts: vec![None; replicas],
+                    taken: 0,
+                    round: 0,
+                    failed: None,
+                }),
+                ring_cv: Condvar::new(),
+                comms: Mutex::new(Comms::default()),
+            }),
+        })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.core.n
+    }
+
+    pub fn spec(&self) -> FormatSpec {
+        self.core.spec
+    }
+
+    /// The per-rank participant handle.
+    pub fn handle(&self, rank: usize) -> Result<ReplicaExchange> {
+        if rank >= self.core.n {
+            return Err(Error::Config(format!(
+                "replica rank {rank} out of range (replicas = {})",
+                self.core.n
+            )));
+        }
+        Ok(ReplicaExchange { core: Arc::clone(&self.core), rank })
+    }
+
+    /// Tear the exchange down: every blocked or future barrier call on
+    /// any rank returns an error naming `msg`. First failure wins;
+    /// idempotent after that.
+    pub fn fail(&self, msg: &str) {
+        let mut ring = self.core.ring.lock().unwrap_or_else(PoisonError::into_inner);
+        if ring.failed.is_none() {
+            ring.failed = Some(msg.to_string());
+        }
+        self.core.ring_cv.notify_all();
+    }
+
+    /// Aggregate comms traffic across all ranks so far.
+    pub fn traffic_report(&self) -> CommsTraffic {
+        let comms = self.core.comms.lock().unwrap_or_else(PoisonError::into_inner);
+        CommsTraffic {
+            spec: self.core.spec,
+            replicas: self.core.n,
+            meter: comms.meter,
+            allowance_bits: comms.allowance_bits,
+        }
+    }
+
+    /// Completed all-reduce rounds.
+    pub fn rounds(&self) -> u64 {
+        self.core.ring.lock().unwrap_or_else(PoisonError::into_inner).round
+    }
+}
+
+/// One rank's handle onto the exchange.
+pub struct ReplicaExchange {
+    core: Arc<Core>,
+    rank: usize,
+}
+
+impl ReplicaExchange {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.core.n
+    }
+
+    pub fn spec(&self) -> FormatSpec {
+        self.core.spec
+    }
+
+    /// The factory view of this handle's core (for reports / teardown).
+    pub fn exchange(&self) -> Exchange {
+        Exchange { core: Arc::clone(&self.core) }
+    }
+
+    /// Post one frame and block until every rank's frame for this round
+    /// is in; returns all N frames in rank order. Errors (never hangs)
+    /// if any rank tore the exchange down.
+    pub fn all_reduce_bytes(&self, frame: Vec<u8>) -> Result<Vec<Arc<Vec<u8>>>> {
+        let core = &*self.core;
+        let mut ring = core.ring.lock().unwrap_or_else(PoisonError::into_inner);
+        // Wait for this rank's slot from the previous round to drain —
+        // rounds never overlap, so one slot vector is the whole ring.
+        loop {
+            if let Some(msg) = &ring.failed {
+                return Err(abort_error(msg));
+            }
+            if ring.posts[self.rank].is_none() {
+                break;
+            }
+            ring = core.ring_cv.wait(ring).unwrap_or_else(PoisonError::into_inner);
+        }
+        ring.posts[self.rank] = Some(Arc::new(frame));
+        core.ring_cv.notify_all();
+        loop {
+            if let Some(msg) = &ring.failed {
+                return Err(abort_error(msg));
+            }
+            if ring.posts.iter().all(Option::is_some) {
+                break;
+            }
+            ring = core.ring_cv.wait(ring).unwrap_or_else(PoisonError::into_inner);
+        }
+        let all: Vec<Arc<Vec<u8>>> = ring.posts.iter().flatten().map(Arc::clone).collect();
+        ring.taken += 1;
+        if ring.taken == core.n {
+            for p in ring.posts.iter_mut() {
+                *p = None;
+            }
+            ring.taken = 0;
+            ring.round += 1;
+            core.ring_cv.notify_all();
+        }
+        Ok(all)
+    }
+
+    /// See [`Exchange::fail`].
+    pub fn fail(&self, msg: &str) {
+        self.exchange().fail(msg);
+    }
+
+    /// The dequant–reduce–requant all-reduce over one post-step state:
+    /// encode (rank-salted), barrier-exchange, decode all ranks, mean in
+    /// rank order, requantize the mean at salt 0, write back. Returns
+    /// the mean loss. With 1 replica this is a strict no-op so the
+    /// default path stays bit-for-bit.
+    pub fn all_reduce_state(&self, state: &mut ModelState, loss: f32) -> Result<f32> {
+        if self.core.n == 1 {
+            return Ok(loss);
+        }
+        let spec = self.core.spec;
+        let step = state.step;
+
+        // Encode this rank's contribution as one frame of v2 records.
+        let mut frame: Vec<u8> = Vec::new();
+        let mut tx_payload = 0u64;
+        let mut modeled_bits = 0f64;
+        let mut allowance_bits = 0f64;
+        for (g, group) in [&state.params, &state.m, &state.v].into_iter().enumerate() {
+            for (i, t) in group.iter().enumerate() {
+                let x = t.as_f32()?;
+                let inner = tensor_inner(&t.shape);
+                let p = spec.encode_stream_salted(
+                    x,
+                    &t.shape,
+                    inner,
+                    step,
+                    stash_stream(g, i),
+                    self.rank as u64,
+                );
+                tx_payload += p.packed_len() as u64;
+                modeled_bits += spec.container_bits() * x.len() as f64;
+                allowance_bits += spec.storage_allowance_bits(x.len(), inner);
+                p.write_into(&mut frame)?;
+            }
+        }
+        frame.extend_from_slice(&loss.to_le_bytes());
+        let frame_bytes = frame.len() as u64;
+
+        let frames = self.all_reduce_bytes(frame)?;
+
+        // Decode every rank in rank order (own frame included: peers see
+        // this rank through the wire, so this rank must too) and sum.
+        let ntensors = state.params.len() * 3;
+        let mut sums: Vec<Vec<f32>> = Vec::with_capacity(ntensors);
+        let mut loss_sum = 0f32;
+        let mut rx_payload = 0u64;
+        for (r, buf) in frames.iter().enumerate() {
+            let mut cur: &[u8] = buf;
+            for (g, group) in [&state.params, &state.m, &state.v].into_iter().enumerate() {
+                for (i, t) in group.iter().enumerate() {
+                    let p = PackedTensor::read_from(&mut cur)?;
+                    if p.spec() != spec || p.shape() != t.shape.as_slice() {
+                        return Err(Error::Shape(format!(
+                            "exchange frame from rank {r} mismatches tensor ({g},{i}): \
+                             {} {:?} vs expected {} {:?}",
+                            p.spec(),
+                            p.shape(),
+                            spec,
+                            t.shape
+                        )));
+                    }
+                    if r != self.rank {
+                        rx_payload += p.packed_len() as u64;
+                    }
+                    let decoded = p.decode();
+                    let k = g * state.params.len() + i;
+                    if r == 0 {
+                        sums.push(decoded);
+                    } else {
+                        for (s, d) in sums[k].iter_mut().zip(&decoded) {
+                            *s += d;
+                        }
+                    }
+                }
+            }
+            let mut lb = [0u8; 4];
+            cur.read_exact(&mut lb)?;
+            if !cur.is_empty() {
+                return Err(Error::Shape(format!(
+                    "exchange frame from rank {r} has {} trailing bytes",
+                    cur.len()
+                )));
+            }
+            loss_sum += f32::from_le_bytes(lb);
+        }
+
+        // Mean + requantize at salt 0 — identical on every rank, so the
+        // replica states re-converge bit-for-bit each round.
+        let n = self.core.n as f32;
+        let nparams = state.params.len();
+        for (g, group) in
+            [&mut state.params, &mut state.m, &mut state.v].into_iter().enumerate()
+        {
+            for (i, t) in group.iter_mut().enumerate() {
+                let mut mean = std::mem::take(&mut sums[g * nparams + i]);
+                for v in mean.iter_mut() {
+                    *v /= n;
+                }
+                let inner = tensor_inner(&t.shape);
+                spec.quantize_into_stream(&mut mean, inner, step, stash_stream(g, i));
+                *t = HostTensor::f32(t.shape.clone(), mean);
+            }
+        }
+
+        // Meter outside the ring lock; `ring` before `comms` everywhere.
+        let rx_tensors = (self.core.n - 1) as f64;
+        self.note_round(
+            tx_payload,
+            rx_payload,
+            frame_bytes,
+            modeled_bits * (1.0 + rx_tensors),
+            allowance_bits * (1.0 + rx_tensors),
+        );
+        Ok(loss_sum / n)
+    }
+
+    fn note_round(
+        &self,
+        tx_payload: u64,
+        rx_payload: u64,
+        frame_bytes: u64,
+        modeled_bits: f64,
+        allowance_bits: f64,
+    ) {
+        let mut comms = self.core.comms.lock().unwrap_or_else(PoisonError::into_inner);
+        comms.meter.comms_tx_bytes += tx_payload;
+        comms.meter.comms_rx_bytes += rx_payload;
+        comms.meter.comms_frame_bytes += frame_bytes;
+        comms.meter.modeled_comms_bits += modeled_bits;
+        comms.allowance_bits += allowance_bits;
+    }
+
+    /// This rank's view of the aggregate comms traffic.
+    pub fn traffic_report(&self) -> CommsTraffic {
+        self.exchange().traffic_report()
+    }
+}
+
+/// Tears the exchange down if a worker unwinds without reporting.
+struct AbortGuard {
+    ex: Exchange,
+    rank: usize,
+    armed: bool,
+}
+
+impl Drop for AbortGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            self.ex.fail(&format!("replica {} panicked mid-run", self.rank));
+        }
+    }
+}
+
+/// Run `run(rank, handle)` on `replicas` scoped threads sharing one
+/// exchange. Any worker error (or panic) tears the exchange down so
+/// peers blocked on the barrier error out instead of hanging; the
+/// originating failure is preferred over secondary barrier aborts when
+/// reporting. On success, rank 0's result is returned.
+pub fn run_replicas<R: Send>(
+    replicas: usize,
+    spec: FormatSpec,
+    run: impl Fn(usize, ReplicaExchange) -> Result<R> + Sync,
+) -> Result<R> {
+    let ex = Exchange::new(spec, replicas)?;
+    let results: Vec<Result<R>> = std::thread::scope(|s| {
+        let joins: Result<Vec<_>> = (0..replicas)
+            .map(|rank| {
+                let h = ex.handle(rank)?;
+                let exf = ex.clone();
+                let run = &run;
+                Ok(s.spawn(move || {
+                    let mut guard = AbortGuard { ex: exf.clone(), rank, armed: true };
+                    let r = run(rank, h);
+                    guard.armed = false;
+                    if let Err(e) = &r {
+                        exf.fail(&format!("replica {rank} failed: {e}"));
+                    }
+                    r
+                }))
+            })
+            .collect();
+        match joins {
+            Ok(joins) => joins
+                .into_iter()
+                .enumerate()
+                .map(|(rank, j)| {
+                    j.join().unwrap_or_else(|_| {
+                        Err(Error::Config(format!("replica {rank} panicked")))
+                    })
+                })
+                .collect(),
+            Err(e) => vec![Err(e)],
+        }
+    });
+    // Prefer the originating error: a barrier abort is a symptom.
+    if let Some(idx) = results
+        .iter()
+        .position(|r| matches!(r, Err(e) if !e.to_string().contains(ABORT_PREFIX)))
+    {
+        let rank = idx;
+        return results.into_iter().nth(rank).unwrap_or_else(|| {
+            Err(Error::Config("replica result vanished".into()))
+        });
+    }
+    if let Some(idx) = results.iter().position(Result::is_err) {
+        return results.into_iter().nth(idx).unwrap_or_else(|| {
+            Err(Error::Config("replica result vanished".into()))
+        });
+    }
+    results.into_iter().next().unwrap_or_else(|| {
+        Err(Error::Config("replica exchange ran zero replicas".into()))
+    })
+}
+
+/// Run one two-replica all-reduce round of `state` in `spec` and return
+/// the metered comms traffic — pure measurement on clones; the caller's
+/// state and numerics are untouched. The measurement behind the
+/// experiments' "measured comms" columns.
+pub fn measure_comms_round(state: &ModelState, spec: FormatSpec) -> Result<CommsTraffic> {
+    run_replicas(2, spec, |rank, ex| {
+        let mut st = state.clone();
+        ex.all_reduce_state(&mut st, 1.0 + rank as f32)?;
+        Ok(ex.traffic_report())
+    })
+}
+
+/// [`measure_comms_round`] over a synthetic state with the stash audit
+/// shapes (a ragged matrix, a vector, a scalar) — the fixed workload
+/// behind [`audit_observed_comms`] and the figure's comms column.
+pub fn measure_state_comms(spec: FormatSpec) -> Result<CommsTraffic> {
+    let shapes: [&[usize]; 3] = [&[3, 21], &[5], &[]];
+    let params: Vec<HostTensor> = shapes
+        .iter()
+        .map(|s| {
+            let len = s.iter().product::<usize>().max(1);
+            HostTensor::f32(
+                s.to_vec(),
+                (0..len).map(|i| (i as f32 * 0.37 - 3.0) * 1.5f32.powi(i as i32 % 7)).collect(),
+            )
+        })
+        .collect();
+    let zeros: Vec<HostTensor> = params.iter().map(HostTensor::zeros_like).collect();
+    let state = ModelState { params, m: zeros.clone(), v: zeros, step: 3 };
+    measure_comms_round(&state, spec)
+}
+
+/// `audit_observed_traffic`-style sweep for the comms channel: run one
+/// synthetic two-replica all-reduce round over the stash audit shapes
+/// and check the meter's observed wire bits agree with the modeled
+/// `container_bits()` within the box-metadata allowance.
+pub fn audit_observed_comms(spec: &FormatSpec) -> std::result::Result<(), String> {
+    let spec = *spec;
+    let report =
+        measure_state_comms(spec).map_err(|e| format!("{spec}: audit round failed: {e}"))?;
+    if report.meter.comms_tx_bytes == 0 || report.meter.comms_rx_bytes == 0 {
+        return Err(format!("{spec}: audit metered no comms traffic"));
+    }
+    if !report.agrees() {
+        return Err(format!(
+            "{spec}: observed {} bits vs modeled {} (gap {} > allowance {})",
+            report.meter.observed_comms_bits(),
+            report.meter.modeled_comms_bits,
+            report.gap_bits(),
+            report.allowance_bits
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::registered_specs;
+
+    fn demo_state(offset: f32) -> ModelState {
+        let params = vec![
+            HostTensor::f32(vec![2, 21], (0..42).map(|i| i as f32 * 0.25 - 4.0 + offset).collect()),
+            HostTensor::f32(vec![5], (0..5).map(|i| i as f32 - 2.0 + offset).collect()),
+        ];
+        let m: Vec<HostTensor> =
+            params.iter().map(|t| HostTensor::f32(t.shape.clone(), vec![offset; t.len()])).collect();
+        let v: Vec<HostTensor> = params.iter().map(HostTensor::zeros_like).collect();
+        ModelState { params, m, v, step: 7 }
+    }
+
+    fn flat(state: &ModelState) -> Vec<f32> {
+        [&state.params, &state.m, &state.v]
+            .iter()
+            .flat_map(|g| g.iter())
+            .flat_map(|t| t.as_f32().unwrap().iter().copied())
+            .collect()
+    }
+
+    #[test]
+    fn mirrored_fp32_all_reduce_is_bit_transparent() {
+        // Two replicas with identical state: mean of (x, x) at fp32 is x
+        // exactly, so the exchange must be invisible bit-for-bit.
+        let want = flat(&demo_state(0.0));
+        let (losses, states) = run_replicas(2, FormatSpec::Fp32, |_rank, ex| {
+            let mut st = demo_state(0.0);
+            let loss = ex.all_reduce_state(&mut st, 0.625)?;
+            Ok((loss, flat(&st)))
+        })
+        .unwrap();
+        assert_eq!(losses, 0.625);
+        assert_eq!(states, want, "mirrored fp32 exchange must be bit-transparent");
+    }
+
+    #[test]
+    fn fp32_mean_is_exact_and_identical_on_every_rank() {
+        // Ranks hold different states; both must converge to the same
+        // exact (a + b) / 2.
+        let a = demo_state(0.0);
+        let b = demo_state(1.0);
+        let want: Vec<f32> =
+            flat(&a).iter().zip(flat(&b).iter()).map(|(x, y)| (x + y) / 2.0).collect();
+        let ex = Exchange::new(FormatSpec::Fp32, 2).unwrap();
+        let got: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let joins: Vec<_> = [a, b]
+                .into_iter()
+                .enumerate()
+                .map(|(rank, mut st)| {
+                    let h = ex.handle(rank).unwrap();
+                    s.spawn(move || {
+                        let loss = h.all_reduce_state(&mut st, rank as f32).unwrap();
+                        assert_eq!(loss, 0.5, "losses average in fp32");
+                        flat(&st)
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        assert_eq!(got[0], want);
+        assert_eq!(got[1], want, "all ranks must hold the identical reduced state");
+        assert_eq!(ex.rounds(), 1);
+    }
+
+    #[test]
+    fn quantized_comms_matches_the_dequant_reduce_requant_oracle() {
+        // Replays the exact pipeline by hand for a stochastic format:
+        // rank-salted encode, dense mean, salt-0 requantize.
+        let spec = FormatSpec::fixed_sr(8);
+        let states = [demo_state(0.0), demo_state(1.0)];
+        let step = states[0].step;
+        let mut want: Vec<Vec<f32>> = Vec::new();
+        for (g, _) in ["p", "m", "v"].iter().enumerate() {
+            let nparams = states[0].params.len();
+            for i in 0..nparams {
+                let pick = |st: &ModelState| match g {
+                    0 => st.params[i].clone(),
+                    1 => st.m[i].clone(),
+                    _ => st.v[i].clone(),
+                };
+                let t0 = pick(&states[0]);
+                let inner = tensor_inner(&t0.shape);
+                let mut sum = vec![0f32; t0.len()];
+                for (rank, st) in states.iter().enumerate() {
+                    let t = pick(st);
+                    let enc = spec.encode_stream_salted(
+                        t.as_f32().unwrap(),
+                        &t.shape,
+                        inner,
+                        step,
+                        stash_stream(g, i),
+                        rank as u64,
+                    );
+                    for (s, d) in sum.iter_mut().zip(enc.decode()) {
+                        *s += d;
+                    }
+                }
+                for v in sum.iter_mut() {
+                    *v /= 2.0;
+                }
+                spec.quantize_into_stream(&mut sum, inner, step, stash_stream(g, i));
+                want.push(sum);
+            }
+        }
+        let want: Vec<f32> = want.into_iter().flatten().collect();
+        let got = run_replicas(2, spec, |rank, ex| {
+            let mut st = demo_state(rank as f32);
+            ex.all_reduce_state(&mut st, 0.0)?;
+            Ok(flat(&st))
+        })
+        .unwrap();
+        assert_eq!(got, want, "all_reduce_state must equal the explicit pipeline");
+    }
+
+    #[test]
+    fn injected_failure_unblocks_a_waiting_peer_with_an_error() {
+        // Satellite bugfix: a dead replica must never strand peers on
+        // the barrier. Rank 0 blocks (rank 1 never posts); the injected
+        // failure must surface as an Error, not a hang.
+        let ex = Exchange::new(FormatSpec::Fp32, 2).unwrap();
+        let h0 = ex.handle(0).unwrap();
+        let exf = ex.clone();
+        let err = std::thread::scope(|s| {
+            let j = s.spawn(move || h0.all_reduce_bytes(vec![1, 2, 3]).map(|_| ()));
+            // Give rank 0 time to reach the wait, then kill the exchange
+            // the way the orchestrator does when a worker errors.
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            exf.fail("replica 1 failed: injected I/O error");
+            j.join().unwrap().unwrap_err()
+        });
+        let msg = err.to_string();
+        assert!(
+            msg.contains("replica exchange aborted") && msg.contains("injected I/O error"),
+            "barrier must report the teardown loudly: {msg}"
+        );
+        // Late arrivals see the same loud error immediately.
+        let h1 = ex.handle(1).unwrap();
+        assert!(h1.all_reduce_bytes(vec![9]).is_err(), "post-failure calls must error");
+    }
+
+    #[test]
+    fn run_replicas_propagates_a_mid_run_worker_failure() {
+        // Rank 1 dies before its first barrier; rank 0 is already
+        // blocked in all_reduce_state. The run must end (no deadlock)
+        // with the originating error, not the secondary barrier abort.
+        let err = run_replicas(2, FormatSpec::Fp32, |rank, ex| {
+            let mut st = demo_state(0.0);
+            if rank == 1 {
+                return Err(Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "disk gone",
+                )));
+            }
+            ex.all_reduce_state(&mut st, 0.0)?;
+            Ok(())
+        })
+        .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("disk gone"), "originating failure must win: {msg}");
+    }
+
+    #[test]
+    fn run_replicas_surfaces_a_panicking_worker() {
+        let err = run_replicas(2, FormatSpec::Fp32, |rank, ex| {
+            let mut st = demo_state(0.0);
+            if rank == 1 {
+                panic!("synthetic panic");
+            }
+            ex.all_reduce_state(&mut st, 0.0)?;
+            Ok(())
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+    }
+
+    #[test]
+    fn single_replica_exchange_is_a_strict_noop() {
+        let ex = Exchange::new(FormatSpec::fixed_sr(4), 1).unwrap();
+        let h = ex.handle(0).unwrap();
+        let mut st = demo_state(0.0);
+        let before = flat(&st);
+        let loss = h.all_reduce_state(&mut st, 2.5).unwrap();
+        assert_eq!(loss, 2.5);
+        assert_eq!(flat(&st), before, "n=1 must not touch the state");
+        let t = ex.traffic_report();
+        assert_eq!(t.meter.comms_tx_bytes, 0, "n=1 must meter no comms traffic");
+    }
+
+    #[test]
+    fn comms_meter_agrees_with_the_model_across_the_registry() {
+        // The audit_observed_traffic-style sweep, per registered format.
+        for spec in registered_specs(&[2u32, 4, 8, 16]) {
+            audit_observed_comms(&spec).unwrap();
+        }
+    }
+
+    #[test]
+    fn rank_salted_wire_frames_decorrelate_for_sr_formats() {
+        // The replica-correlation bugfix, observed at the wire level:
+        // two ranks encoding the *same* state with an SR comms spec must
+        // post different payloads.
+        let spec = FormatSpec::fixed_sr(6);
+        let frames = run_replicas(2, spec, |_rank, ex| {
+            let st = demo_state(0.0);
+            let t = &st.params[0];
+            let inner = tensor_inner(&t.shape);
+            let p = spec.encode_stream_salted(
+                t.as_f32().unwrap(),
+                &t.shape,
+                inner,
+                st.step,
+                stash_stream(0, 0),
+                ex.rank() as u64,
+            );
+            let all = ex.all_reduce_bytes(p.payload().to_vec())?;
+            Ok(all.iter().map(|b| b.as_ref().clone()).collect::<Vec<Vec<u8>>>())
+        })
+        .unwrap();
+        assert_ne!(frames[0], frames[1], "rank salt must decorrelate the SR wire bytes");
+    }
+
+    #[test]
+    fn exchange_rejects_bad_config() {
+        assert!(Exchange::new(FormatSpec::Fp32, 0).is_err());
+        let ex = Exchange::new(FormatSpec::Fp32, 2).unwrap();
+        assert!(ex.handle(2).is_err(), "rank must be < replicas");
+    }
+}

@@ -50,6 +50,17 @@
 //! directory after every stash pass — per-slot tier/bytes/last-touch
 //! plus the meter — which is what the `dsq stash <dir>` inspector
 //! prints.
+//!
+//! Since PR 7 the v2 packed-record layout is also a *wire* format: the
+//! [`exchange`] submodule runs an in-process all-reduce between N
+//! replica sessions, posting whole states as frames of packed records
+//! over an in-memory ring and metering the exchanged bytes on the
+//! meter's `comms_*` channels (tx = own encoded payloads, rx = peer
+//! payloads decoded) — the interconnect-scale mirror of the DRAM-scale
+//! stash channels above, judged against the same
+//! `container_bits()`-modeled number via [`CommsTraffic`]. See the
+//! `exchange` module docs for the barrier protocol, the replica
+//! SR-seeding contract, and the failure-teardown semantics.
 
 use std::collections::HashMap;
 use std::fs::{File, OpenOptions};
@@ -64,6 +75,13 @@ use crate::quant::{stash_stream, FormatSpec, PackedTensor};
 use crate::runtime::{HostTensor, TensorData};
 use crate::util::json::Json;
 use crate::{Error, Result};
+
+pub mod exchange;
+
+pub use exchange::{
+    audit_observed_comms, measure_comms_round, measure_state_comms, run_replicas, CommsTraffic,
+    Exchange, ReplicaExchange, ReplicaShard,
+};
 
 /// Grammar of `--stash-budget` values, quoted by every parse error.
 pub const BUDGET_GRAMMAR: &str = "<bytes> | <n>k[i]b | <n>m[i]b | <n>g[i]b | unlimited";
@@ -180,12 +198,27 @@ pub struct TrafficMeter {
     /// `container_bits() × elements` summed over the same tensors the
     /// observed counters saw.
     pub modeled_stash_bits: f64,
+    /// Packed payload bytes this replica encoded onto the exchange wire
+    /// (its own all-reduce contribution each round).
+    pub comms_tx_bytes: u64,
+    /// Packed payload bytes decoded off the wire from *peer* replicas.
+    pub comms_rx_bytes: u64,
+    /// Whole frame bytes posted to the ring (records + loss word) —
+    /// the wire-level counterpart of the spill tier's record bytes.
+    pub comms_frame_bytes: u64,
+    /// The cost model's counterpart of the comms tx+rx events.
+    pub modeled_comms_bits: f64,
 }
 
 impl TrafficMeter {
     /// Observed DRAM-scale stash traffic in bits (write + read).
     pub fn observed_stash_bits(&self) -> f64 {
         (self.stash_write_bytes + self.stash_read_bytes) as f64 * 8.0
+    }
+
+    /// Observed interconnect-scale comms traffic in bits (tx + rx).
+    pub fn observed_comms_bits(&self) -> f64 {
+        (self.comms_tx_bytes + self.comms_rx_bytes) as f64 * 8.0
     }
 
     /// True when the spill tier carried any traffic.
@@ -202,6 +235,11 @@ impl TrafficMeter {
             ("checkpoint_bytes", Json::num(self.checkpoint_bytes as f64)),
             ("modeled_stash_bits", Json::num(self.modeled_stash_bits)),
             ("observed_stash_bits", Json::num(self.observed_stash_bits())),
+            ("comms_tx_bytes", Json::num(self.comms_tx_bytes as f64)),
+            ("comms_rx_bytes", Json::num(self.comms_rx_bytes as f64)),
+            ("comms_frame_bytes", Json::num(self.comms_frame_bytes as f64)),
+            ("modeled_comms_bits", Json::num(self.modeled_comms_bits)),
+            ("observed_comms_bits", Json::num(self.observed_comms_bits())),
         ])
     }
 }

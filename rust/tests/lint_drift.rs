@@ -47,6 +47,7 @@ fn copy_contract_files(root: &Path, dst: &Path) {
         "rust/src/coordinator/cli.rs",
         "rust/src/coordinator/session.rs",
         "rust/src/runtime/artifact.rs",
+        "rust/src/stash/exchange.rs",
         "rust/benches/quantizer_hotpath.rs",
         "rust/benches/stash_store.rs",
         "python/compile/layers.py",
@@ -235,9 +236,8 @@ fn typoed_allow_rule_is_itself_a_finding() {
 
 #[test]
 fn inverted_lock_order_is_a_lock_discipline_finding() {
-    // The stash store has no mutexes yet; the rule exists for the
-    // readback prefetcher on the roadmap. Prove it fires on the classic
-    // AB/BA shape so the first real deadlock candidate is caught.
+    // Prove the rule fires on the classic AB/BA shape in a fresh stash
+    // module, independent of the real exchange mutexes.
     let dst = scratch("locks");
     copy_contract_files(&repo_root(), &dst);
     let stash = dst.join("rust/src/stash/prefetch.rs");
@@ -267,6 +267,46 @@ fn inverted_lock_order_is_a_lock_discipline_finding() {
             && f.message.contains("lru")
             && f.message.contains("budget")),
         "AB/BA lock order must be a lock_discipline finding naming both mutexes:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn inverted_exchange_mutex_order_is_a_lock_discipline_finding() {
+    // The exchange's real lock-order invariant (PR 7): every function
+    // takes the `ring` post board strictly before the `comms` traffic
+    // meter. Append a pair of probe functions to the *copied* real
+    // exchange.rs that acquire the two actual mutexes in both orders —
+    // the rule must flag the AB/BA pair by the real field names. (The
+    // lint is lexical, so the appended probes need not compile against
+    // the private types.)
+    let dst = scratch("exchange-locks");
+    copy_contract_files(&repo_root(), &dst);
+    let path = dst.join("rust/src/stash/exchange.rs");
+    let mut text = fs::read_to_string(&path).expect("read copied exchange.rs");
+    assert!(
+        text.contains("ring") && text.contains("comms"),
+        "exchange.rs no longer names the ring/comms mutexes — update the drift test"
+    );
+    text.push_str(
+        "\nfn drift_probe_ab(core: &Core) {\n\
+         \x20   let _a = core.ring.lock();\n\
+         \x20   let _b = core.comms.lock();\n\
+         }\n\
+         fn drift_probe_ba(core: &Core) {\n\
+         \x20   let _b = core.comms.lock();\n\
+         \x20   let _a = core.ring.lock();\n\
+         }\n",
+    );
+    fs::write(&path, text).expect("write fixture exchange.rs");
+    let report = run_lint(&dst).expect("lint runs");
+    let hits = findings_for(&report.findings, "lock_discipline");
+    assert!(
+        hits.iter().any(|f| f.file == "rust/src/stash/exchange.rs"
+            && f.message.contains("ring")
+            && f.message.contains("comms")),
+        "AB/BA exchange mutex order must be a lock_discipline finding naming ring + comms:\n{}",
         report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
     );
     fs::remove_dir_all(&dst).ok();

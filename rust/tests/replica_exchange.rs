@@ -1,0 +1,172 @@
+//! Data-parallel milestone tests (PR 7): N in-process `Session`
+//! replicas over the sharded batch stream, exchanging state every step
+//! through the packed-record all-reduce in `dsq::stash::exchange`.
+//!
+//! Acceptance: a two-replica mirrored run under `--comms fp32` is
+//! bit-identical to the single-replica run; quantized comms stay
+//! within tolerance; and the comms meter's modeled `container_bits()`
+//! agree with the codec-observed wire bytes within the box-metadata
+//! allowance. Gated on `make artifacts` like `coordinator_e2e`.
+
+use std::path::{Path, PathBuf};
+
+use dsq::coordinator::{LrSchedule, Trainer, TrainerConfig};
+use dsq::data::Variant;
+use dsq::schedule::{FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn base_cfg(dir: &Path) -> TrainerConfig {
+    TrainerConfig {
+        epochs: 1,
+        batches_per_epoch: 6,
+        val_batches: 2,
+        bleu_batches: 0,
+        lr: LrSchedule::InverseSqrt { peak_lr: 3e-3, warmup_steps: 20 },
+        variant: Variant::Iwslt,
+        ..TrainerConfig::quick(dir.to_path_buf())
+    }
+}
+
+fn fp32_schedule() -> dsq::Result<Box<dyn Schedule>> {
+    Ok(Box::new(StaticSchedule(PrecisionConfig::FP32)))
+}
+
+/// The comms meter acceptance shared by every replicated run: traffic
+/// flowed in both directions and the modeled-vs-observed comparison
+/// holds within the accumulated allowance.
+fn assert_comms_metered(r: &dsq::coordinator::RunReport, spec: FormatSpec) {
+    let c = r.comms.as_ref().expect("replicated run carries comms traffic");
+    assert_eq!(c.replicas, 2);
+    assert_eq!(c.spec, spec);
+    assert!(c.meter.comms_tx_bytes > 0, "no bytes sent");
+    assert!(c.meter.comms_rx_bytes > 0, "no bytes received");
+    assert!(
+        c.agrees(),
+        "modeled {} vs observed {} bits (gap {}, allowance {})",
+        c.meter.modeled_comms_bits,
+        c.meter.observed_comms_bits(),
+        c.gap_bits(),
+        c.allowance_bits
+    );
+}
+
+#[test]
+fn two_mirrored_replicas_at_fp32_match_single_replica_bit_for_bit() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = base_cfg(&dir);
+    let mut schedule = fp32_schedule().unwrap();
+    let mut single = Trainer::new(cfg.clone()).unwrap();
+    let r1 = single.run(schedule.as_mut()).unwrap();
+    assert_eq!(r1.steps, 6);
+    assert!(r1.comms.is_none(), "single-replica runs meter no comms");
+
+    let cfg2 = TrainerConfig {
+        replicas: 2,
+        mirror_replicas: true,
+        comms: FormatSpec::Fp32,
+        ..cfg
+    };
+    let r2 = Trainer::run_replicated(cfg2, fp32_schedule).unwrap();
+    assert!(!r2.diverged);
+    assert_eq!(r2.steps, r1.steps);
+    // fp32 packed records carry raw bits and (x + x) / 2 == x exactly,
+    // so the mirrored exchange is bit-transparent: every step loss and
+    // every validation agree with the single-replica run to the last
+    // bit.
+    assert_eq!(r2.loss_curve, r1.loss_curve, "mirrored fp32 run must be bit-identical");
+    assert_eq!(r2.val_curve, r1.val_curve);
+    assert_eq!(r2.final_val_loss.to_bits(), r1.final_val_loss.to_bits());
+    assert_comms_metered(&r2, FormatSpec::Fp32);
+}
+
+#[test]
+fn run_replicated_with_one_replica_is_the_plain_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = base_cfg(&dir);
+    let mut schedule = fp32_schedule().unwrap();
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    let r1 = t.run(schedule.as_mut()).unwrap();
+    // `--replicas 1` short-circuits to exactly Trainer::new + run —
+    // today's path bit-for-bit, with no exchange and no comms column.
+    let r2 = Trainer::run_replicated(cfg, fp32_schedule).unwrap();
+    assert_eq!(r2.loss_curve, r1.loss_curve);
+    assert_eq!(r2.final_val_loss.to_bits(), r1.final_val_loss.to_bits());
+    assert!(r2.comms.is_none());
+}
+
+#[test]
+fn mirrored_replicas_with_quantized_comms_stay_within_tolerance() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = base_cfg(&dir);
+    let mut schedule = fp32_schedule().unwrap();
+    let mut single = Trainer::new(cfg.clone()).unwrap();
+    let r1 = single.run(schedule.as_mut()).unwrap();
+
+    // Same mirrored stream, but the exchange dequant-reduce-requants
+    // through fixed8 SR records: the trajectory picks up bounded
+    // rounding noise and must stay near the fp32 one, not match it.
+    let cfg2 = TrainerConfig {
+        replicas: 2,
+        mirror_replicas: true,
+        comms: FormatSpec::fixed_sr(8),
+        ..cfg
+    };
+    let r2 = Trainer::run_replicated(cfg2, fp32_schedule).unwrap();
+    assert!(!r2.diverged);
+    assert_eq!(r2.steps, r1.steps);
+    assert_comms_metered(&r2, FormatSpec::fixed_sr(8));
+    let rel = (r2.final_val_loss - r1.final_val_loss).abs() / r1.final_val_loss.abs().max(1e-9);
+    assert!(
+        rel < 0.25,
+        "q8 comms drifted: final val loss {} vs fp32 {} (rel {rel:.3})",
+        r2.final_val_loss,
+        r1.final_val_loss
+    );
+    let (first_q, first_f) = (r2.loss_curve[0].1, r1.loss_curve[0].1);
+    let rel0 = (first_q - first_f).abs() / first_f.abs().max(1e-9);
+    assert!(rel0 < 0.25, "first-step loss off: {first_q} vs {first_f} (rel {rel0:.3})");
+}
+
+#[test]
+fn round_robin_replicas_with_quantized_comms_track_the_single_replica_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = base_cfg(&dir);
+    let mut schedule = fp32_schedule().unwrap();
+    let mut single = Trainer::new(cfg.clone()).unwrap();
+    let r1 = single.run(schedule.as_mut()).unwrap();
+
+    // Round-robin (the default): two replicas deal a 12-batch global
+    // stream and take 6 owned steps each — the 2×-batch emulation the
+    // milestone asks for. The per-step loss is the rank-averaged loss
+    // over two distinct batches, so the trajectory tracks the
+    // single-replica one within batch-noise tolerance rather than
+    // matching it bitwise.
+    let cfg2 = TrainerConfig {
+        replicas: 2,
+        mirror_replicas: false,
+        comms: FormatSpec::fixed_sr(8),
+        ..cfg
+    };
+    let r2 = Trainer::run_replicated(cfg2, fp32_schedule).unwrap();
+    assert!(!r2.diverged);
+    assert_eq!(r2.steps, r1.steps, "each rank owns batches_per_epoch steps");
+    assert_comms_metered(&r2, FormatSpec::fixed_sr(8));
+    assert!(r2.final_val_loss.is_finite());
+    let rel = (r2.final_val_loss - r1.final_val_loss).abs() / r1.final_val_loss.abs().max(1e-9);
+    assert!(
+        rel < 0.25,
+        "2x-batch emulation diverged from single-replica trajectory: \
+         final val loss {} vs {} (rel {rel:.3})",
+        r2.final_val_loss,
+        r1.final_val_loss
+    );
+}

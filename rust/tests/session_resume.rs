@@ -8,11 +8,18 @@
 
 use std::path::PathBuf;
 
-use dsq::coordinator::{LrSchedule, Trainer, TrainerConfig};
-use dsq::data::Variant;
+use dsq::coordinator::{
+    ExeCache, LrSchedule, NmtTask, Session, SessionConfig, Task, TaskMetric, Trainer,
+    TrainerConfig,
+};
+use dsq::data::{Batch, Batcher, TranslationConfig, TranslationTask, Variant};
+use dsq::model::checkpoint::ResumePosition;
 use dsq::model::{checkpoint, ModelState};
-use dsq::runtime::{HostTensor, ModelManifest, ParamSpec};
-use dsq::schedule::{DsqController, DsqControllerConfig, Schedule, ScheduleState};
+use dsq::runtime::{ArtifactManifest, HostTensor, ModelManifest, ParamSpec};
+use dsq::schedule::{
+    DsqController, DsqControllerConfig, PrecisionConfig, Schedule, ScheduleState, StaticSchedule,
+};
+use dsq::stash::StashBudget;
 
 fn fake_mm() -> ModelManifest {
     ModelManifest {
@@ -175,4 +182,192 @@ fn session_resumes_mid_ladder_e2e() {
 /// The paper-default bfp ladder config at `level`.
 fn ctl1_ladder_config(level: usize) -> dsq::schedule::PrecisionConfig {
     DsqControllerConfig::paper_default("bfp").unwrap().ladder[level]
+}
+
+#[test]
+fn batch_position_rides_checkpoint_trailer() {
+    // Crash-salvage checkpoints carry the batch-stream position; the
+    // trailer round-trips alongside (and independently of) the
+    // schedule one.
+    let pos = ResumePosition { epoch: 2, batch: 5 };
+    let path = tmpfile("posn.bin");
+    checkpoint::save_checkpoint_positioned(&path, &fake_state(), &fake_mm(), None, Some(&pos))
+        .unwrap();
+    let (state, sched, restored) =
+        checkpoint::load_checkpoint_positioned(&path, &fake_mm()).unwrap();
+    assert_eq!(state.step, 7);
+    assert_eq!(sched, None);
+    assert_eq!(restored, Some(pos));
+
+    // Finished-run checkpoints (and every pre-position file) carry no
+    // position: resuming them starts a fresh set of epochs.
+    checkpoint::save_checkpoint_full(&path, &fake_state(), &fake_mm(), None).unwrap();
+    let (_, _, none) = checkpoint::load_checkpoint_positioned(&path, &fake_mm()).unwrap();
+    assert_eq!(none, None);
+    std::fs::remove_file(&path).ok();
+}
+
+/// A [`Task`] that replays the inner task's epoch stream but cuts the
+/// producer off after `take` batches — the step loop sees exactly what
+/// a run killed between two steps saw, so its state is the true
+/// mid-epoch state of the full stream (same seed, same pool, same
+/// shuffle), not an approximation from a shorter epoch.
+struct TruncatedNmt {
+    inner: NmtTask,
+    take: usize,
+}
+
+impl Task for TruncatedNmt {
+    type Batch = Batch;
+
+    fn model(&self) -> &'static str {
+        self.inner.model()
+    }
+
+    fn describe(&self) -> &'static str {
+        "truncated translation training"
+    }
+
+    fn batch_producer(
+        &self,
+        epoch: usize,
+        nbatches: usize,
+    ) -> Box<dyn FnMut() -> Option<Batch> + Send> {
+        let mut produce = self.inner.batch_producer(epoch, nbatches);
+        let mut left = self.take;
+        Box::new(move || {
+            if left == 0 {
+                return None;
+            }
+            left -= 1;
+            produce()
+        })
+    }
+
+    fn val_batches(&self, n: usize) -> Vec<Batch> {
+        self.inner.val_batches(n)
+    }
+
+    fn push_step_inputs(&self, batch: &Batch, inputs: &mut Vec<HostTensor>) {
+        self.inner.push_step_inputs(batch, inputs)
+    }
+
+    fn push_eval_inputs(&self, batch: &Batch, inputs: &mut Vec<HostTensor>) {
+        self.inner.push_eval_inputs(batch, inputs)
+    }
+
+    fn eval_terms(&self, outs: &[HostTensor]) -> dsq::Result<(f64, f64, f64)> {
+        self.inner.eval_terms(outs)
+    }
+
+    fn final_metric(
+        &self,
+        state: &ModelState,
+        exes: &mut ExeCache,
+        final_eval_acc: f64,
+        diverged: bool,
+    ) -> dsq::Result<Option<TaskMetric>> {
+        self.inner.final_metric(state, exes, final_eval_acc, diverged)
+    }
+}
+
+#[test]
+fn mid_epoch_resume_consumes_each_batch_exactly_once_e2e() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ckpt = tmpfile("midepoch.bin");
+    let cfg = TrainerConfig {
+        epochs: 1,
+        batches_per_epoch: 4,
+        val_batches: 2,
+        bleu_batches: 0,
+        lr: LrSchedule::InverseSqrt { peak_lr: 3e-3, warmup_steps: 20 },
+        variant: Variant::Iwslt,
+        ..TrainerConfig::quick(dir.clone())
+    };
+
+    // Reference: the uninterrupted 4-batch epoch.
+    let mut schedule: Box<dyn Schedule> = Box::new(StaticSchedule(PrecisionConfig::FP32));
+    let mut full = Trainer::new(cfg.clone()).unwrap();
+    let rf = full.run(schedule.as_mut()).unwrap();
+    assert_eq!(rf.steps, 4);
+
+    // "Crash" after step 2: replay the SAME 4-batch epoch stream but
+    // stop after two batches, then write the crash-salvage checkpoint a
+    // mid-run save would have written — state after step 2, position
+    // (epoch 0, batch 2).
+    let man = ArtifactManifest::load(&dir).unwrap();
+    let (b, s, t, v) = (
+        man.nmt.cfg("batch").unwrap(),
+        man.nmt.cfg("src_len").unwrap(),
+        man.nmt.cfg("tgt_len").unwrap(),
+        man.nmt.cfg("vocab").unwrap(),
+    );
+    let task = TruncatedNmt {
+        inner: NmtTask {
+            task: TranslationTask::new(TranslationConfig {
+                vocab: v as i32,
+                src_len: s,
+                tgt_len: t,
+                variant: Variant::Iwslt,
+                seed: 0,
+            }),
+            batcher: Batcher::new(b, s, t),
+            seed: 0,
+            bleu_batches: 0,
+        },
+        take: 2,
+    };
+    let scfg = SessionConfig {
+        artifacts: dir.clone(),
+        seed: 0,
+        epochs: 1,
+        batches_per_epoch: 4,
+        lr: cfg.lr.clone(),
+        val_batches: 2,
+        val_every_steps: 0,
+        checkpoint: None,
+        init_checkpoint: None,
+        checkpoint_every_steps: 0,
+        prefetch: 4,
+        stash_format: None,
+        stash_budget: StashBudget::Unlimited,
+        stash_dir: None,
+        shard: None,
+    };
+    let mut half = Session::new(scfg, task, man).unwrap();
+    let mut schedule2: Box<dyn Schedule> = Box::new(StaticSchedule(PrecisionConfig::FP32));
+    let rh = half.run(schedule2.as_mut()).unwrap();
+    assert_eq!(rh.steps, 2);
+    // The truncated run's two steps ARE the reference's first two.
+    assert_eq!(&rh.loss_curve[..], &rf.loss_curve[..2]);
+    checkpoint::save_checkpoint_positioned(
+        &ckpt,
+        half.state(),
+        &half.manifest().nmt,
+        None,
+        Some(&ResumePosition { epoch: 0, batch: 2 }),
+    )
+    .unwrap();
+
+    // Resume: the salvaged run must consume exactly batches 2 and 3 —
+    // no batch twice, none skipped. Bit-for-bit that means its two
+    // steps land on the reference's step-3/step-4 losses and the final
+    // params match the uninterrupted run's exactly.
+    let cfg2 = TrainerConfig { init_checkpoint: Some(ckpt.clone()), ..cfg };
+    let mut schedule3: Box<dyn Schedule> = Box::new(StaticSchedule(PrecisionConfig::FP32));
+    let mut resumed = Trainer::new(cfg2).unwrap();
+    let rr = resumed.run(schedule3.as_mut()).unwrap();
+    assert_eq!(rr.steps, 4, "resume must finish the epoch, not restart it");
+    assert_eq!(
+        &rr.loss_curve[..],
+        &rf.loss_curve[2..],
+        "resumed steps must consume exactly the unconsumed batches"
+    );
+    assert_eq!(rr.final_val_loss.to_bits(), rf.final_val_loss.to_bits());
+    assert_eq!(
+        resumed.state().params,
+        full.state().params,
+        "resumed run must land on the uninterrupted run's state"
+    );
+    std::fs::remove_file(&ckpt).ok();
 }
