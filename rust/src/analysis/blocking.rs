@@ -1,0 +1,52 @@
+//! Rule `blocking_under_lock`: no blocking operation — channel
+//! `send`/`recv`, no-arg thread `join`, `thread::sleep`, `File`/`fs`
+//! I/O — may be reached while a mutex is held, directly or through any
+//! call chain.
+//!
+//! This is the PR-7 barrier-deadlock class made a build failure: a
+//! replica thread that parks at a channel or joins a worker while
+//! holding the exchange `ring` (or any stash/coordinator mutex) stalls
+//! every peer spinning on that lock, and under a failed peer the park
+//! never returns. The rule shares the call graph and held-set walk with
+//! `lock_discipline` ([`super::callgraph`]); condvar `.wait(…)` is
+//! deliberately not a blocking token, because it releases the mutex
+//! while parked — the exchange barrier is the legal pattern.
+//!
+//! Findings anchor at the outermost frame (the blocking call, or the
+//! call that leads to it), so a provably-safe site is escaped where the
+//! decision is made: `// dsq-lint: allow(blocking_under_lock, <reason>)`.
+//!
+//! The runtime twin of this rule is
+//! [`crate::util::ordwitness::assert_lock_free`], which panics in debug
+//! builds if a blocking edge is crossed with a witnessed lock held.
+
+use std::collections::BTreeSet;
+
+use super::callgraph::Graph;
+use super::{locks, Finding, Tree, RULE_BLOCKING};
+
+pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
+    let graph = Graph::build(tree.rust_files(), locks::SCOPES);
+    // A call resolving to several candidates reports once per site.
+    let mut seen: BTreeSet<(String, usize, String, String)> = BTreeSet::new();
+    for b in graph.blocked_ops() {
+        let Some(head) = b.chain.first() else { continue };
+        if !seen.insert((head.file.clone(), head.line, b.op.clone(), b.lock.clone())) {
+            continue;
+        }
+        findings.push(Finding::new(
+            RULE_BLOCKING,
+            &head.file,
+            head.line,
+            format!(
+                "{} reached while holding lock '{}' (acquired {}:{}) via {} — \
+                 release the lock before blocking",
+                b.op,
+                b.lock,
+                head.file,
+                b.lock_line,
+                Graph::chain_display(&b.chain),
+            ),
+        ));
+    }
+}

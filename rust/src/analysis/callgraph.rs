@@ -1,0 +1,716 @@
+//! Lexical call graph over the concurrency-scoped modules — the
+//! substrate the interprocedural rules (`lock_discipline`,
+//! `blocking_under_lock`) run on.
+//!
+//! Built from the same annotated line stream as every other rule
+//! ([`super::source`] — no AST, no new deps): function definitions are
+//! delimited by `fn ` headers with the enclosing `impl` type tracked by
+//! brace depth, and each function body yields an ordered event stream:
+//!
+//! * `Acquire` — a `.lock()` call, named by the receiver field (the
+//!   dotted chain before it, minus `self.`, so `self.core.ring.lock()`
+//!   and `core.ring.lock()` name the same lock);
+//! * `Block` — a token from [`BLOCKING`]: channel `send`/`recv`,
+//!   no-arg `.join()` (args would match `Path::join`), `thread::sleep`,
+//!   and `File`/`fs` I/O. Condvar `.wait(…)` is deliberately *not* a
+//!   blocking token: it releases the mutex while parked, which is the
+//!   exchange barrier's whole design;
+//! * `Call` — an identifier followed by `(`, classified as a method
+//!   call (`x.f(`), a qualified call (`T::f(`, with `Self::` resolved
+//!   to the enclosing impl type), or a free call (`f(`).
+//!
+//! Calls resolve only to functions *defined in the scoped files*:
+//! method calls match same-named impl methods (type-blind — the
+//! receiver's type is unknowable lexically, so over-approximate),
+//! qualified calls match by `(type, name)` or module suffix, and free
+//! calls match free functions (same module preferred). Ubiquitous std
+//! names ([`AMBIENT`]) never resolve, so `v.len()` cannot edge into a
+//! project method that happens to share the name.
+//!
+//! Per-function summaries (locks transitively acquired, blocking ops
+//! transitively reached — each with a representative [`Frame`] chain)
+//! are propagated along call edges to a bounded monotone fixpoint:
+//! every `(function, lock)` key keeps its first-discovered chain, so
+//! recursion converges and chains stay finite. The event walk then
+//! replays each function with a held-lock set (direct acquisitions
+//! only): lock-order pairs and blocked-while-held sites fall out with
+//! full call paths attached. Known conservative limits, documented not
+//! hidden: guard drops are not tracked (a released lock still orders
+//! later acquisitions), and helpers that *return* a guard to their
+//! caller do not extend the caller's held set.
+
+use std::collections::BTreeMap;
+
+use super::source::SourceFile;
+
+/// One step of a call path: the function `func` (module-qualified
+/// display name) acting at `file:line` — either calling the next frame
+/// or, on the last frame, performing the acquisition/blocking op.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub func: String,
+    pub file: String,
+    pub line: usize,
+}
+
+/// A lock reachable from some function, with the call path to its
+/// `.lock()` site (one frame when acquired directly).
+#[derive(Clone, Debug)]
+pub struct Acquired {
+    pub lock: String,
+    pub chain: Vec<Frame>,
+}
+
+/// Observed "lock `first` held when `second` is acquired" ordering.
+#[derive(Clone, Debug)]
+pub struct OrderPair {
+    pub first_lock: String,
+    pub first_file: String,
+    pub first_line: usize,
+    pub first_func: String,
+    pub second: Acquired,
+}
+
+/// A blocking operation reached while `lock` (acquired at
+/// `lock_line` in `chain[0].func`) is held.
+#[derive(Clone, Debug)]
+pub struct BlockedOp {
+    pub lock: String,
+    pub lock_line: usize,
+    pub op: String,
+    pub chain: Vec<Frame>,
+}
+
+/// Blocking tokens and their display labels. `.join()` is matched
+/// exactly with no argument so `Path::join(part)` stays out.
+pub const BLOCKING: &[(&str, &str)] = &[
+    (".recv()", "channel recv"),
+    (".recv_timeout(", "channel recv"),
+    (".send(", "channel send"),
+    (".join()", "thread join"),
+    ("thread::sleep(", "sleep"),
+    ("File::open(", "file I/O"),
+    ("File::create(", "file I/O"),
+    ("OpenOptions::new(", "file I/O"),
+    ("fs::write(", "file I/O"),
+    ("fs::read", "file I/O"),
+];
+
+/// Ubiquitous std method/function names that never resolve to project
+/// definitions — without this deny-list, `v.len()` anywhere would edge
+/// into any scoped `fn len` and drown the graph in false paths.
+const AMBIENT: &[&str] = &[
+    "all", "and_then", "any", "as_bytes", "as_mut", "as_ref", "as_slice", "as_str", "chain",
+    "clear", "clone", "cloned", "collect", "contains", "contains_key", "copied", "count",
+    "default", "drain", "drop", "entry", "enumerate", "eq", "expect", "extend", "filter",
+    "filter_map", "find", "first", "flat_map", "flatten", "flush", "fmt", "fold", "from", "get",
+    "get_mut", "hash", "insert", "into", "into_iter", "is_empty", "is_none", "is_some", "iter",
+    "iter_mut", "join", "last", "len", "lock", "map", "map_err", "max", "min", "new", "next",
+    "notify_all", "notify_one", "nth", "ok", "or_else", "parse", "pop", "position", "push",
+    "read", "read_exact", "recv", "remove", "replace", "resize", "retain", "rev", "seek", "send",
+    "skip", "sort", "sort_by", "sort_by_key", "spawn", "split", "sum", "take", "to_owned",
+    "to_string", "to_vec", "trim", "unwrap", "unwrap_or", "unwrap_or_default", "unwrap_or_else",
+    "wait", "windows", "write", "write_all", "zip",
+];
+
+const KEYWORDS: &[&str] = &[
+    "as", "dyn", "else", "fn", "for", "if", "impl", "in", "let", "loop", "match", "move", "pub",
+    "return", "unsafe", "use", "where", "while",
+];
+
+/// Fixpoint iteration cap. Summaries are monotone (first chain per
+/// `(function, lock)` key wins, never replaced) so the loop converges
+/// on its own; the cap bounds pathological trees and, with it, chain
+/// length (≤ cap + 1 frames).
+const MAX_FIXPOINT_ITERS: usize = 12;
+
+enum Callee {
+    Method(String),
+    Qualified(String, String),
+    Free(String),
+}
+
+enum Event {
+    Acquire { lock: String, line: usize },
+    Block { op: String, line: usize },
+    Call { callee: Callee, line: usize },
+}
+
+struct Func {
+    name: String,
+    impl_type: Option<String>,
+    module: String,
+    file: String,
+    events: Vec<Event>,
+}
+
+impl Func {
+    fn display(&self) -> String {
+        match &self.impl_type {
+            Some(t) => format!("{}::{}::{}", self.module, t, self.name),
+            None => format!("{}::{}", self.module, self.name),
+        }
+    }
+}
+
+/// The built graph plus the derived concurrency facts the rules read.
+pub struct Graph {
+    funcs: Vec<Func>,
+    /// Locks each function may acquire, transitively, with a chain.
+    acquires: Vec<BTreeMap<String, Vec<Frame>>>,
+    order_pairs: Vec<OrderPair>,
+    blocked_ops: Vec<BlockedOp>,
+}
+
+/// `rust/src/stash/exchange.rs` → `stash::exchange`;
+/// `rust/src/stash/mod.rs` → `stash`.
+fn module_of(rel: &str) -> String {
+    let p = rel.strip_prefix("rust/src/").unwrap_or(rel);
+    let p = p.strip_suffix(".rs").unwrap_or(p);
+    let p = p.strip_suffix("/mod").unwrap_or(p);
+    p.replace('/', "::")
+}
+
+/// Receiver of a `.lock()` call at byte offset `at`: the dotted ident
+/// chain before it minus `self`, named by its last field.
+pub fn receiver(code: &str, at: usize) -> Option<String> {
+    let head = &code[..at];
+    let start = head
+        .rfind(|c: char| !(c.is_ascii_alphanumeric() || c == '_' || c == '.'))
+        .map(|i| i + 1)
+        .unwrap_or(0);
+    let chain = head[start..].trim_matches('.');
+    if chain.is_empty() {
+        return None;
+    }
+    let tail: Vec<&str> = chain.split('.').filter(|s| *s != "self").collect();
+    tail.last().map(|s| s.to_string())
+}
+
+fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// The `impl` type named by a header line (`impl Foo {`,
+/// `impl<T> Bar<T> {`, `impl Trait for Baz {`), if the line is one.
+fn impl_type(code: &str) -> Option<String> {
+    let trimmed = code.trim_start();
+    let rest = trimmed.strip_prefix("impl")?;
+    // `impl` must be the keyword, not a prefix of an identifier.
+    let rest = match rest.as_bytes().first() {
+        Some(b'<') => &rest[rest.find('>')? + 1..],
+        Some(c) if !is_ident(*c) => rest,
+        _ => return None,
+    };
+    let rest = match rest.find(" for ") {
+        Some(at) => &rest[at + " for ".len()..],
+        None => rest,
+    };
+    let ty: String = rest
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if ty.is_empty() {
+        None
+    } else {
+        Some(ty)
+    }
+}
+
+/// Call sites on one line: each identifier directly followed by `(`,
+/// classified by what precedes it. Macros (`name!(`) and definition
+/// sites (`fn name(`) never register.
+fn calls_on(code: &str) -> Vec<(usize, Callee)> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    for at in 0..bytes.len() {
+        if bytes[at] != b'(' {
+            continue;
+        }
+        let mut s = at;
+        while s > 0 && is_ident(bytes[s - 1]) {
+            s -= 1;
+        }
+        if s == at || bytes[s].is_ascii_digit() {
+            continue;
+        }
+        let name = &code[s..at];
+        let before = &code[..s];
+        if before.ends_with('.') {
+            if !AMBIENT.contains(&name) {
+                out.push((s, Callee::Method(name.to_string())));
+            }
+        } else if before.ends_with("::") {
+            let qhead = &bytes[..s - 2];
+            let mut qs = qhead.len();
+            while qs > 0 && is_ident(qhead[qs - 1]) {
+                qs -= 1;
+            }
+            let qual = &code[qs..s - 2];
+            if !qual.is_empty() {
+                out.push((s, Callee::Qualified(qual.to_string(), name.to_string())));
+            }
+        } else {
+            let def_site = before.trim_end().ends_with("fn");
+            let upper = name.starts_with(|c: char| c.is_ascii_uppercase());
+            if !def_site && !upper && !KEYWORDS.contains(&name) && !AMBIENT.contains(&name) {
+                out.push((s, Callee::Free(name.to_string())));
+            }
+        }
+    }
+    out
+}
+
+impl Graph {
+    /// Build the graph over every file whose path starts with one of
+    /// `scopes`, and derive the order pairs and blocked-while-held ops.
+    pub fn build<'a>(files: impl Iterator<Item = &'a SourceFile>, scopes: &[&str]) -> Graph {
+        let mut funcs: Vec<Func> = Vec::new();
+        for f in files {
+            if !scopes.iter().any(|p| f.rel.starts_with(p)) {
+                continue;
+            }
+            extract(f, &mut funcs);
+        }
+        let resolved = resolve(&funcs);
+        let (acquires, blocks) = summaries(&funcs, &resolved);
+        let (order_pairs, blocked_ops) = walk(&funcs, &resolved, &acquires, &blocks);
+        Graph { funcs, acquires, order_pairs, blocked_ops }
+    }
+
+    /// Every observed "first held, second acquired" ordering.
+    pub fn order_pairs(&self) -> &[OrderPair] {
+        &self.order_pairs
+    }
+
+    /// Every blocking op reached while a lock is held.
+    pub fn blocked_ops(&self) -> &[BlockedOp] {
+        &self.blocked_ops
+    }
+
+    /// Lock names the function whose display name ends with `func`
+    /// may acquire, transitively (test/diagnostic accessor).
+    pub fn acquires_of(&self, func: &str) -> Vec<String> {
+        self.funcs
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| {
+                let d = f.display();
+                d == func || d.ends_with(&format!("::{func}"))
+            })
+            .flat_map(|(i, _)| self.acquires[i].keys().cloned())
+            .collect()
+    }
+
+    /// `a (f.rs:1) -> b (g.rs:2)` rendering of a call path.
+    pub fn chain_display(chain: &[Frame]) -> String {
+        chain
+            .iter()
+            .map(|fr| format!("{} ({}:{})", fr.func, fr.file, fr.line))
+            .collect::<Vec<_>>()
+            .join(" -> ")
+    }
+}
+
+/// Split one file into functions with ordered event streams.
+fn extract(f: &SourceFile, funcs: &mut Vec<Func>) {
+    let module = module_of(&f.rel);
+    let mut depth: i64 = 0;
+    let mut impls: Vec<(String, i64)> = Vec::new();
+    let mut pending_impl: Option<String> = None;
+    let mut cur: Option<usize> = None;
+    for l in f.code_lines() {
+        let code = l.code.as_str();
+        if let Some(ty) = impl_type(code) {
+            pending_impl = Some(ty);
+        }
+        if let Some(at) = code.find("fn ") {
+            let name: String = code[at + 3..]
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() && code.contains('(') {
+                funcs.push(Func {
+                    name,
+                    impl_type: impls.last().map(|(t, _)| t.clone()),
+                    module: module.clone(),
+                    file: f.rel.clone(),
+                    events: Vec::new(),
+                });
+                cur = Some(funcs.len() - 1);
+            }
+        }
+        if let Some(fi) = cur {
+            let mut events: Vec<(usize, Event)> = Vec::new();
+            let mut from = 0;
+            while let Some(at) = code[from..].find(".lock()") {
+                let col = from + at;
+                if let Some(lock) = receiver(code, col) {
+                    events.push((col, Event::Acquire { lock, line: l.number }));
+                }
+                from = col + ".lock()".len();
+            }
+            for (tok, label) in BLOCKING {
+                let mut from = 0;
+                while let Some(at) = code[from..].find(tok) {
+                    let col = from + at;
+                    events.push((col, Event::Block { op: label.to_string(), line: l.number }));
+                    from = col + tok.len();
+                }
+            }
+            for (col, callee) in calls_on(code) {
+                events.push((col, Event::Call { callee, line: l.number }));
+            }
+            events.sort_by_key(|(col, _)| *col);
+            funcs[fi].events.extend(events.into_iter().map(|(_, e)| e));
+        }
+        let before = depth;
+        depth += code.matches('{').count() as i64 - code.matches('}').count() as i64;
+        if pending_impl.is_some() && code.contains('{') {
+            if let Some(ty) = pending_impl.take() {
+                impls.push((ty, before));
+            }
+        }
+        while impls.last().is_some_and(|(_, d)| depth <= *d) {
+            impls.pop();
+        }
+    }
+}
+
+/// Resolve every `Call` event to the scoped functions it may reach.
+/// `resolved[func][event_index]` is empty for non-calls and unresolved
+/// calls (std, out-of-scope, ambient).
+fn resolve(funcs: &[Func]) -> Vec<Vec<Vec<usize>>> {
+    funcs
+        .iter()
+        .map(|f| {
+            f.events
+                .iter()
+                .map(|ev| {
+                    let Event::Call { callee, .. } = ev else { return Vec::new() };
+                    match callee {
+                        Callee::Method(name) => funcs
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, g)| g.impl_type.is_some() && g.name == *name)
+                            .map(|(i, _)| i)
+                            .collect(),
+                        Callee::Qualified(qual, name) => {
+                            let qual: &str = if qual == "Self" {
+                                f.impl_type.as_deref().unwrap_or(qual.as_str())
+                            } else {
+                                qual.as_str()
+                            };
+                            let by_type: Vec<usize> = funcs
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, g)| {
+                                    g.name == *name && g.impl_type.as_deref() == Some(qual)
+                                })
+                                .map(|(i, _)| i)
+                                .collect();
+                            if !by_type.is_empty() {
+                                return by_type;
+                            }
+                            // Lowercase qualifier: a module path segment.
+                            funcs
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, g)| {
+                                    g.name == *name
+                                        && g.impl_type.is_none()
+                                        && (g.module == qual
+                                            || g.module.ends_with(&format!("::{qual}")))
+                                })
+                                .map(|(i, _)| i)
+                                .collect()
+                        }
+                        Callee::Free(name) => {
+                            let frees: Vec<usize> = funcs
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, g)| g.impl_type.is_none() && g.name == *name)
+                                .map(|(i, _)| i)
+                                .collect();
+                            let local: Vec<usize> = frees
+                                .iter()
+                                .copied()
+                                .filter(|&i| funcs[i].module == f.module)
+                                .collect();
+                            if local.is_empty() {
+                                frees
+                            } else {
+                                local
+                            }
+                        }
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+type Summary = Vec<BTreeMap<String, Vec<Frame>>>;
+
+/// Bounded fixpoint over call edges: locks acquired and blocking ops
+/// reached by each function, transitively, with representative chains.
+fn summaries(funcs: &[Func], resolved: &[Vec<Vec<usize>>]) -> (Summary, Summary) {
+    let mut acq: Summary = vec![BTreeMap::new(); funcs.len()];
+    let mut blk: Summary = vec![BTreeMap::new(); funcs.len()];
+    for (fi, f) in funcs.iter().enumerate() {
+        for ev in &f.events {
+            match ev {
+                Event::Acquire { lock, line } => {
+                    acq[fi].entry(lock.clone()).or_insert_with(|| {
+                        vec![Frame { func: f.display(), file: f.file.clone(), line: *line }]
+                    });
+                }
+                Event::Block { op, line } => {
+                    blk[fi].entry(op.clone()).or_insert_with(|| {
+                        vec![Frame { func: f.display(), file: f.file.clone(), line: *line }]
+                    });
+                }
+                Event::Call { .. } => {}
+            }
+        }
+    }
+    for _ in 0..MAX_FIXPOINT_ITERS {
+        let mut changed = false;
+        let (acq_prev, blk_prev) = (acq.clone(), blk.clone());
+        for (fi, f) in funcs.iter().enumerate() {
+            for (ei, ev) in f.events.iter().enumerate() {
+                let Event::Call { line, .. } = ev else { continue };
+                for &ti in &resolved[fi][ei] {
+                    let hop = Frame { func: f.display(), file: f.file.clone(), line: *line };
+                    for (lock, chain) in &acq_prev[ti] {
+                        if !acq[fi].contains_key(lock) {
+                            let mut c = vec![hop.clone()];
+                            c.extend(chain.iter().cloned());
+                            acq[fi].insert(lock.clone(), c);
+                            changed = true;
+                        }
+                    }
+                    for (op, chain) in &blk_prev[ti] {
+                        if !blk[fi].contains_key(op) {
+                            let mut c = vec![hop.clone()];
+                            c.extend(chain.iter().cloned());
+                            blk[fi].insert(op.clone(), c);
+                            changed = true;
+                        }
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    (acq, blk)
+}
+
+/// Replay each function with a held-lock set (direct acquisitions
+/// only — guard drops are not tracked, calls do not extend the set).
+fn walk(
+    funcs: &[Func],
+    resolved: &[Vec<Vec<usize>>],
+    acq: &Summary,
+    blk: &Summary,
+) -> (Vec<OrderPair>, Vec<BlockedOp>) {
+    let mut pairs = Vec::new();
+    let mut blocked = Vec::new();
+    for (fi, f) in funcs.iter().enumerate() {
+        let mut held: Vec<(String, usize)> = Vec::new();
+        for (ei, ev) in f.events.iter().enumerate() {
+            match ev {
+                Event::Acquire { lock, line } => {
+                    for (h, hline) in &held {
+                        if h != lock {
+                            pairs.push(OrderPair {
+                                first_lock: h.clone(),
+                                first_file: f.file.clone(),
+                                first_line: *hline,
+                                first_func: f.display(),
+                                second: Acquired {
+                                    lock: lock.clone(),
+                                    chain: vec![Frame {
+                                        func: f.display(),
+                                        file: f.file.clone(),
+                                        line: *line,
+                                    }],
+                                },
+                            });
+                        }
+                    }
+                    if !held.iter().any(|(h, _)| h == lock) {
+                        held.push((lock.clone(), *line));
+                    }
+                }
+                Event::Block { op, line } => {
+                    if let Some((h, hline)) = held.last() {
+                        blocked.push(BlockedOp {
+                            lock: h.clone(),
+                            lock_line: *hline,
+                            op: op.clone(),
+                            chain: vec![Frame {
+                                func: f.display(),
+                                file: f.file.clone(),
+                                line: *line,
+                            }],
+                        });
+                    }
+                }
+                Event::Call { line, .. } => {
+                    for &ti in &resolved[fi][ei] {
+                        let hop = Frame { func: f.display(), file: f.file.clone(), line: *line };
+                        for (lock, chain) in &acq[ti] {
+                            for (h, hline) in &held {
+                                if h != lock {
+                                    let mut c = vec![hop.clone()];
+                                    c.extend(chain.iter().cloned());
+                                    pairs.push(OrderPair {
+                                        first_lock: h.clone(),
+                                        first_file: f.file.clone(),
+                                        first_line: *hline,
+                                        first_func: f.display(),
+                                        second: Acquired { lock: lock.clone(), chain: c },
+                                    });
+                                }
+                            }
+                        }
+                        if let Some((h, hline)) = held.last() {
+                            for (op, chain) in &blk[ti] {
+                                let mut c = vec![hop.clone()];
+                                c.extend(chain.iter().cloned());
+                                blocked.push(BlockedOp {
+                                    lock: h.clone(),
+                                    lock_line: *hline,
+                                    op: op.clone(),
+                                    chain: c,
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (pairs, blocked)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn graph(src: &str) -> Graph {
+        let f = SourceFile::parse("rust/src/stash/fixture.rs", src);
+        Graph::build(std::iter::once(&f), &["rust/src/stash/"])
+    }
+
+    #[test]
+    fn method_and_free_calls_resolve_separately() {
+        let g = graph(
+            "struct S;\n\
+             impl S {\n\
+                 fn lockit(&self) { self.a.lock(); }\n\
+             }\n\
+             fn lockit() { b.lock(); }\n\
+             fn via_method(s: &S) { s.lockit(); }\n\
+             fn via_free() { lockit(); }\n",
+        );
+        assert_eq!(g.acquires_of("via_method"), vec!["a"]);
+        assert_eq!(g.acquires_of("via_free"), vec!["b"]);
+    }
+
+    #[test]
+    fn self_qualified_calls_resolve_to_the_impl_type() {
+        let g = graph(
+            "struct S;\n\
+             impl S {\n\
+                 fn inner() { c.lock(); }\n\
+                 fn outer() { Self::inner(); }\n\
+             }\n",
+        );
+        assert_eq!(g.acquires_of("outer"), vec!["c"]);
+    }
+
+    #[test]
+    fn recursion_terminates_and_merges_summaries() {
+        let g = graph(
+            "fn r1() { r2(); a.lock(); }\n\
+             fn r2() { r1(); b.lock(); }\n",
+        );
+        assert_eq!(g.acquires_of("r1"), vec!["a", "b"]);
+        assert_eq!(g.acquires_of("r2"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn ambient_method_names_never_edge_into_project_functions() {
+        let g = graph(
+            "struct S;\n\
+             impl S {\n\
+                 fn len(&self) { a.lock(); }\n\
+             }\n\
+             fn caller(v: &[u8]) { v.len(); }\n",
+        );
+        assert!(g.acquires_of("caller").is_empty(), "len() is ambient, no edge");
+    }
+
+    #[test]
+    fn cross_function_order_pair_carries_the_call_path() {
+        let g = graph(
+            "fn helper(p: &P) { p.budget.lock(); }\n\
+             fn outer(p: &P) {\n\
+                 let _a = p.lru.lock();\n\
+                 helper(p);\n\
+             }\n",
+        );
+        let pair = g
+            .order_pairs()
+            .iter()
+            .find(|p| p.first_lock == "lru" && p.second.lock == "budget")
+            .expect("interprocedural lru→budget pair");
+        let path = Graph::chain_display(&pair.second.chain);
+        assert!(path.contains("outer") && path.contains("helper"), "{path}");
+    }
+
+    #[test]
+    fn blocking_reached_through_a_call_is_attributed() {
+        let g = graph(
+            "fn helper(rx: &R) { rx.recv(); }\n\
+             fn outer(p: &P, rx: &R) {\n\
+                 let _g = p.ring.lock();\n\
+                 helper(rx);\n\
+             }\n",
+        );
+        assert!(
+            g.blocked_ops().iter().any(|b| b.lock == "ring"
+                && b.op == "channel recv"
+                && Graph::chain_display(&b.chain).contains("helper")),
+            "recv via helper while holding ring must surface"
+        );
+    }
+
+    #[test]
+    fn condvar_wait_is_not_a_blocking_token() {
+        let g = graph(
+            "fn barrier(core: &C) {\n\
+                 let mut ring = core.ring.lock();\n\
+                 ring = ring.wait(&core.ring_cv);\n\
+                 let _ = ring;\n\
+             }\n",
+        );
+        assert!(g.blocked_ops().is_empty(), "wait releases the lock while parked");
+    }
+
+    #[test]
+    fn path_join_with_args_is_not_thread_join() {
+        let g = graph(
+            "fn write_side(p: &P, dir: &Path) {\n\
+                 let _g = p.ring.lock();\n\
+                 let _ = dir.join(name);\n\
+             }\n",
+        );
+        assert!(g.blocked_ops().is_empty(), ".join(arg) is Path::join, not a thread join");
+    }
+}

@@ -1,33 +1,78 @@
-//! Rule `lock_discipline`: consistent mutex acquisition order in the
-//! stash store.
+//! Rule `lock_discipline`: one global mutex acquisition order across
+//! the stash/coordinator modules — now interprocedural.
 //!
 //! The stash store pairs an LRU/budget path with a background readback
-//! prefetcher; the moment those two share mutexes, an inconsistent
-//! acquisition order is a deadlock waiting for load. This rule scans
-//! the stash (and Session) modules for `.lock()` acquisitions, records
-//! the order in which each function takes distinct locks, and flags any
-//! pair of locks acquired in *both* orders somewhere in the scanned
-//! modules.
-//!
-//! The analysis is lexical and conservative: within one function, lock
-//! A "precedes" lock B if A's `.lock()` call appears on an earlier (or
-//! the same) line — guard drops are not tracked, so a function that
-//! releases A before taking B still contributes an A→B edge. Since
-//! PR 7 the rule is live: the replica exchange
+//! prefetcher, and since PR 7 the replica exchange
 //! (`rust/src/stash/exchange.rs`) holds two mutexes (the `ring` post
 //! board and the `comms` traffic meter) shared by every replica thread,
-//! with the global order *ring before comms*. A deliberate, commented
+//! with the global order *ring before comms*. The moment two code paths
+//! acquire a shared pair in opposite orders, a deadlock is waiting for
+//! load — and the inversion is invisible to any per-function scan when
+//! lock A is taken in `f`, which then calls `g`, which takes lock B.
+//!
+//! This rule builds the lexical call graph ([`super::callgraph`]) over
+//! [`SCOPES`], propagates held-lock sets along call edges to a bounded
+//! fixpoint, and flags any lock pair observed in both orders — naming
+//! the full call path (`f -> g -> .lock()`) on each side, so a
+//! cross-function AB/BA split reads as the single ordering bug it is.
+//!
+//! The analysis is lexical and conservative: guard drops are not
+//! tracked (a function that releases A before taking B still
+//! contributes an A→B edge), and a helper that *returns* a guard does
+//! not extend its caller's held set. A deliberate, commented
 //! opposite-order pair can be escaped with
 //! `// dsq-lint: allow(lock_discipline, <reason>)`.
+//!
+//! [`check_per_function`] keeps the superseded PR-6 per-function scan
+//! alive as a baseline: the drift fixtures prove the interprocedural
+//! upgrade is load-bearing by exhibiting an inversion the old logic
+//! provably misses.
 
 use std::collections::BTreeMap;
 
+use super::callgraph::{Graph, OrderPair};
 use super::{Finding, Tree, RULE_LOCKS};
 
-/// Modules the order graph is built over.
-const SCOPES: &[&str] = &["rust/src/stash/", "rust/src/coordinator/session.rs"];
+/// Modules the order graph is built over: the whole stash layer and the
+/// whole coordinator (the session loop plus the trainer/finetune
+/// adapters that drive it).
+pub const SCOPES: &[&str] = &["rust/src/stash/", "rust/src/coordinator/"];
 
-/// One lock-acquisition site.
+pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
+    let graph = Graph::build(tree.rust_files(), SCOPES);
+    // Representative pair per ordered lock pair (first observation wins
+    // — the walk is deterministic, so findings are stable).
+    let mut edges: BTreeMap<(String, String), &OrderPair> = BTreeMap::new();
+    for p in graph.order_pairs() {
+        edges.entry((p.first_lock.clone(), p.second.lock.clone())).or_insert(p);
+    }
+    for ((a, b), ab) in &edges {
+        if a >= b {
+            continue;
+        }
+        let Some(ba) = edges.get(&(b.clone(), a.clone())) else { continue };
+        findings.push(Finding::new(
+            RULE_LOCKS,
+            &ab.first_file,
+            ab.first_line,
+            format!(
+                "locks '{a}' and '{b}' are acquired in both orders: {} holds '{a}' \
+                 ({}:{}) and then acquires '{b}' via {} -> .lock(), but {} holds '{b}' \
+                 ({}:{}) and then acquires '{a}' via {} -> .lock() — pick one global order",
+                ab.first_func,
+                ab.first_file,
+                ab.first_line,
+                Graph::chain_display(&ab.second.chain),
+                ba.first_func,
+                ba.first_file,
+                ba.first_line,
+                Graph::chain_display(&ba.second.chain),
+            ),
+        ));
+    }
+}
+
+/// One lock-acquisition site (per-function baseline).
 #[derive(Clone)]
 struct Acq {
     lock: String,
@@ -36,26 +81,11 @@ struct Acq {
     line: usize,
 }
 
-/// Receiver of a `.lock()` call: the dotted ident chain before it,
-/// without a leading `self.` (so `self.index.lock()` and
-/// `store.index.lock()` name the same lock field).
-fn receiver(code: &str, at: usize) -> Option<String> {
-    let head = &code[..at];
-    let start = head
-        .rfind(|c: char| !(c.is_ascii_alphanumeric() || c == '_' || c == '.'))
-        .map(|i| i + 1)
-        .unwrap_or(0);
-    let chain = head[start..].trim_matches('.');
-    if chain.is_empty() {
-        return None;
-    }
-    let tail: Vec<&str> = chain.split('.').filter(|s| *s != "self").collect();
-    // The lock is named by the field, not the path to it.
-    tail.last().map(|s| s.to_string())
-}
-
-pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
-    // Per-function ordered acquisitions.
+/// The superseded per-function order scan (PR 6): within one function,
+/// lock A "precedes" lock B if A's `.lock()` call appears on an earlier
+/// (or the same) line. Kept so the drift fixtures can demonstrate the
+/// inversion classes it cannot see; [`check`] is the live rule.
+pub fn check_per_function(tree: &Tree, findings: &mut Vec<Finding>) {
     let mut funcs: Vec<Vec<Acq>> = Vec::new();
     for f in tree.rust_files() {
         if !SCOPES.iter().any(|p| f.rel.starts_with(p)) {
@@ -75,11 +105,11 @@ pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
                     cur = Some((name, Vec::new()));
                 }
             }
-            let mut rest = l.code.as_str();
-            let mut off = 0;
-            while let Some(at) = rest.find(".lock()") {
+            let mut from = 0;
+            while let Some(at) = l.code[from..].find(".lock()") {
+                let col = from + at;
                 if let (Some((func, acqs)), Some(lock)) =
-                    (cur.as_mut(), receiver(&l.code, off + at))
+                    (cur.as_mut(), super::callgraph::receiver(&l.code, col))
                 {
                     acqs.push(Acq {
                         lock,
@@ -88,8 +118,7 @@ pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
                         line: l.number,
                     });
                 }
-                off += at + ".lock()".len();
-                rest = &rest[at + ".lock()".len()..];
+                from = col + ".lock()".len();
             }
         }
         if let Some((_, acqs)) = cur.take() {
@@ -97,7 +126,6 @@ pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
         }
     }
 
-    // Order edges: (a, b) -> first site where a was taken before b.
     let mut edges: BTreeMap<(String, String), (Acq, Acq)> = BTreeMap::new();
     for acqs in &funcs {
         for (i, a) in acqs.iter().enumerate() {

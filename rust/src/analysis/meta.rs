@@ -1,0 +1,110 @@
+//! Rule `lint_meta`: the linter's own docs must not drift. The
+//! [`super::RULES`] const, the rule table in `analysis/mod.rs`'s module
+//! doc, and ROADMAP.md's "Static analysis" table must list the same
+//! rule set — a linter whose documentation disagrees with its code
+//! fails its own build.
+//!
+//! `lint_escape` is the one deliberate exception: it is the escape
+//! mechanism's self-check, documented in prose next to the escape
+//! syntax rather than as a table row, on both sides.
+//!
+//! Parsing is raw-text (`Line::text`): both tables live in comments /
+//! markdown, which the `code` view blanks. A doc row is a line whose
+//! trimmed text starts with `//! | \`` (mod.rs) or `| \`` (ROADMAP,
+//! scoped between the `## Static analysis` header and the next `## `),
+//! and the rule is the first backtick-quoted identifier.
+
+use std::collections::BTreeSet;
+
+use super::source::SourceFile;
+use super::{Finding, Tree, RULE_ESCAPE, RULE_META, RULES};
+
+const MOD_RS: &str = "rust/src/analysis/mod.rs";
+const ROADMAP: &str = "ROADMAP.md";
+const ROADMAP_HEADER: &str = "## Static analysis";
+
+/// First backtick-quoted token of a table row, if the trimmed line
+/// starts with `prefix`.
+fn row_rule(text: &str, prefix: &str) -> Option<String> {
+    let t = text.trim_start();
+    let rest = t.strip_prefix(prefix)?;
+    let rest = rest.trim_start().strip_prefix('`')?;
+    let end = rest.find('`')?;
+    let name = &rest[..end];
+    if name.is_empty() || !name.chars().all(|c| c.is_ascii_lowercase() || c == '_') {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+/// (rules listed, line of the first row or the table vicinity).
+fn mod_doc_rules(f: &SourceFile) -> (BTreeSet<String>, usize) {
+    let mut rules = BTreeSet::new();
+    let mut line = 1;
+    for l in &f.lines {
+        if let Some(r) = row_rule(&l.text, "//! |") {
+            if rules.is_empty() {
+                line = l.number;
+            }
+            rules.insert(r);
+        }
+    }
+    (rules, line)
+}
+
+fn roadmap_rules(f: &SourceFile) -> (BTreeSet<String>, usize) {
+    let mut rules = BTreeSet::new();
+    let mut line = 1;
+    let mut in_section = false;
+    for l in &f.lines {
+        let t = l.text.trim_start();
+        if t.starts_with(ROADMAP_HEADER) {
+            in_section = true;
+            line = l.number;
+            continue;
+        }
+        if in_section && t.starts_with("## ") {
+            break;
+        }
+        if in_section {
+            if let Some(r) = row_rule(&l.text, "|") {
+                rules.insert(r);
+            }
+        }
+    }
+    (rules, line)
+}
+
+pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
+    let expected: BTreeSet<String> =
+        RULES.iter().filter(|r| **r != RULE_ESCAPE).map(|r| r.to_string()).collect();
+    let tables: [(&str, fn(&SourceFile) -> (BTreeSet<String>, usize), &str); 2] = [
+        (MOD_RS, mod_doc_rules, "analysis/mod.rs module-doc rule table"),
+        (ROADMAP, roadmap_rules, "ROADMAP \"Static analysis\" table"),
+    ];
+    for (rel, parse, what) in tables {
+        let (rows, line) = parse(tree.file(rel));
+        for missing in expected.difference(&rows) {
+            findings.push(Finding::new(
+                RULE_META,
+                rel,
+                line,
+                format!(
+                    "{what} is missing a row for rule '{missing}' — the RULES const, \
+                     the module-doc table, and the ROADMAP table must list the same rules"
+                ),
+            ));
+        }
+        for extra in rows.difference(&expected) {
+            findings.push(Finding::new(
+                RULE_META,
+                rel,
+                line,
+                format!(
+                    "{what} lists '{extra}', which is not in the RULES const — \
+                     delete the row or implement the rule"
+                ),
+            ));
+        }
+    }
+}

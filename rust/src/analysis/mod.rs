@@ -19,24 +19,35 @@
 //! | `qcfg_sync`        | rust↔python mode tables, 100·E+M packing, variant lists agree ([`qcfg`]) |
 //! | `magic_constants`  | on-disk magics defined once + pinned by golden tests ([`magic`]) |
 //! | `panic_hygiene`    | no `unwrap`/`expect`/`panic!` on the hot path ([`panics`]) |
-//! | `lock_discipline`  | stash/prefetcher mutexes acquired in one global order ([`locks`]) |
+//! | `lock_discipline`  | one global mutex order, interprocedurally along the call graph ([`locks`]) |
+//! | `blocking_under_lock` | no send/recv/join/sleep/File I/O reached while a lock is held ([`blocking`]) |
+//! | `lint_meta`        | RULES const ↔ this table ↔ ROADMAP "Static analysis" table agree ([`meta`]) |
 //!
 //! Escapes: `// dsq-lint: allow(<rule>, <reason>)` on the finding's
 //! line or the line above suppresses it; the reason is mandatory and
 //! the rule name must be real, so a typo'd escape is itself a finding.
 //!
-//! Run as `dsq lint [--root <dir>]` (exit 0 clean, 1 on findings) —
-//! wired into CI next to build/test/clippy — or in-process via
-//! [`run_lint`], which is how the drift-injection fixture tests prove
-//! each rule actually fires (`rust/tests/lint_drift.rs`).
+//! Run as `dsq lint [--root <dir>] [--json] [--github]` (exit 0 clean,
+//! 1 on findings; `--json` emits a machine-readable report, `--github`
+//! prints `::error file=…,line=…::` annotations so findings are
+//! clickable in a PR diff) — wired into CI next to build/test/clippy —
+//! or in-process via [`run_lint`], which is how the drift-injection
+//! fixture tests prove each rule actually fires
+//! (`rust/tests/lint_drift.rs`). The concurrency rules share a lexical
+//! call graph ([`callgraph`]) and have a runtime twin: the debug-build
+//! lock-order witness ([`crate::util::ordwitness`]) asserts the same
+//! global order and lock-free blocking edges on every test run.
 
 use std::path::{Path, PathBuf};
 
 use crate::{Error, Result};
 
+pub mod blocking;
+pub mod callgraph;
 pub mod coverage;
 pub mod locks;
 pub mod magic;
+pub mod meta;
 pub mod panics;
 pub mod qcfg;
 pub mod source;
@@ -48,10 +59,20 @@ pub const RULE_QCFG: &str = "qcfg_sync";
 pub const RULE_MAGIC: &str = "magic_constants";
 pub const RULE_PANIC: &str = "panic_hygiene";
 pub const RULE_LOCKS: &str = "lock_discipline";
+pub const RULE_BLOCKING: &str = "blocking_under_lock";
+pub const RULE_META: &str = "lint_meta";
 pub const RULE_ESCAPE: &str = "lint_escape";
 
-pub const RULES: &[&str] =
-    &[RULE_COVERAGE, RULE_QCFG, RULE_MAGIC, RULE_PANIC, RULE_LOCKS, RULE_ESCAPE];
+pub const RULES: &[&str] = &[
+    RULE_COVERAGE,
+    RULE_QCFG,
+    RULE_MAGIC,
+    RULE_PANIC,
+    RULE_LOCKS,
+    RULE_BLOCKING,
+    RULE_META,
+    RULE_ESCAPE,
+];
 
 /// One lint violation, locatable as `file:line`.
 #[derive(Clone, Debug)]
@@ -70,6 +91,17 @@ impl Finding {
         message: impl Into<String>,
     ) -> Finding {
         Finding { rule, file: file.into(), line, message: message.into() }
+    }
+
+    /// The machine-readable form emitted by `dsq lint --json`.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("rule", Json::str(self.rule)),
+            ("file", Json::str(&self.file)),
+            ("line", Json::Num(self.line as f64)),
+            ("message", Json::str(&self.message)),
+        ])
     }
 }
 
@@ -101,6 +133,9 @@ const REQUIRED: &[&str] = &[
     "python/compile/layers.py",
     "python/compile/aot.py",
     "python/compile/kernels/ref.py",
+    // lint_meta parses its own module doc and the ROADMAP rule table.
+    "rust/src/analysis/mod.rs",
+    "ROADMAP.md",
 ];
 
 impl Tree {
@@ -183,6 +218,8 @@ pub fn run_lint(root: &Path) -> Result<Report> {
     magic::check(&tree, &mut findings);
     panics::check(&tree, &mut findings);
     locks::check(&tree, &mut findings);
+    blocking::check(&tree, &mut findings);
+    meta::check(&tree, &mut findings);
 
     // Apply escapes: an allow(rule, reason) on the finding's line or
     // the line above suppresses it.

@@ -80,7 +80,10 @@ subcommands:
   formats      list the registered number formats (the --schedule grammar)
   lint         check the cross-layer invariants (registry coverage,
                rust/python qcfg sync, magic constants, panic hygiene,
-               lock discipline); dsq lint [--root <repo-dir>]
+               call-graph lock discipline + blocking-under-lock, lint
+               self-consistency); dsq lint [--root <repo-dir>] [--json]
+               [--github] — --json prints a machine-readable report,
+               --github prints ::error annotations for PR diffs
   bench        gate BENCH_*.json smoke reports against committed baselines
                (dsq bench gate [--ratio r] | dsq bench publish)
   stash        inspect a stash-store run dir (per-slot residency + traffic)
@@ -506,14 +509,19 @@ fn cmd_formats() -> Result<()> {
     Ok(())
 }
 
-/// `dsq lint [--root <dir>]`: run the cross-layer invariant checker
-/// ([`crate::analysis`]). Prints one `lint[rule] file:line: message`
-/// per finding; exit 0 when clean, 1 on findings (via [`Error::Lint`]),
-/// 2 on usage errors. Without `--root` the repo root is found by
-/// walking up from the current directory, so the subcommand works from
-/// the repo root, `rust/`, or any subdir.
+/// `dsq lint [--root <dir>] [--json] [--github]`: run the cross-layer
+/// invariant checker ([`crate::analysis`]). Default output is one
+/// clickable `lint[rule] file:line: message` per finding; `--json`
+/// prints a machine-readable report instead (the CI artifact), and
+/// `--github` prints `::error file=…,line=…::` workflow annotations so
+/// findings land on the PR diff. Exit 0 when clean, 1 on findings (via
+/// [`Error::Lint`]), 2 on usage errors. Without `--root` the repo root
+/// is found by walking up from the current directory, so the
+/// subcommand works from the repo root, `rust/`, or any subdir.
 fn cmd_lint(args: &[String]) -> Result<()> {
     let mut root: Option<std::path::PathBuf> = None;
+    let mut json = false;
+    let mut github = false;
     let mut it = args.iter();
     while let Some(a) = it.next() {
         match a.as_str() {
@@ -523,6 +531,8 @@ fn cmd_lint(args: &[String]) -> Result<()> {
                     .ok_or_else(|| Error::Config("--root needs a directory".into()))?;
                 root = Some(std::path::PathBuf::from(v));
             }
+            "--json" => json = true,
+            "--github" => github = true,
             other => {
                 return Err(Error::Config(format!("unknown lint flag '{other}'")));
             }
@@ -542,15 +552,34 @@ fn cmd_lint(args: &[String]) -> Result<()> {
         }
     };
     let report = crate::analysis::run_lint(&root)?;
-    for f in &report.findings {
-        println!("{f}");
+    if github {
+        for f in &report.findings {
+            println!("{}", github_annotation(f));
+        }
+    }
+    if json {
+        use crate::util::json::Json;
+        let doc = Json::obj(vec![
+            ("root", Json::str(&root.display().to_string())),
+            ("rules", Json::arr(crate::analysis::RULES.iter().map(|r| Json::str(r)))),
+            ("rules_run", Json::Num(report.rules_run as f64)),
+            ("clean", Json::Bool(report.findings.is_empty())),
+            ("findings", Json::arr(report.findings.iter().map(|f| f.to_json()))),
+        ]);
+        println!("{}", doc.to_string_pretty());
+    } else if !github {
+        for f in &report.findings {
+            println!("{f}");
+        }
     }
     if report.findings.is_empty() {
-        println!(
-            "dsq lint: {} rules over {}: clean",
-            report.rules_run,
-            root.display()
-        );
+        if !json && !github {
+            println!(
+                "dsq lint: {} rules over {}: clean",
+                report.rules_run,
+                root.display()
+            );
+        }
         Ok(())
     } else {
         Err(Error::Lint(format!(
@@ -558,6 +587,27 @@ fn cmd_lint(args: &[String]) -> Result<()> {
             report.findings.len()
         )))
     }
+}
+
+/// One finding as a GitHub Actions workflow command, so CI failures are
+/// clickable on the PR diff. Properties escape `%`, newlines, `:` and
+/// `,` per the workflow-command grammar; the free-text message escapes
+/// only `%` and newlines.
+fn github_annotation(f: &crate::analysis::Finding) -> String {
+    let prop = |s: &str| {
+        s.replace('%', "%25")
+            .replace('\r', "%0D")
+            .replace('\n', "%0A")
+            .replace(':', "%3A")
+            .replace(',', "%2C")
+    };
+    let msg = f.message.replace('%', "%25").replace('\r', "%0D").replace('\n', "%0A");
+    format!(
+        "::error file={},line={},title={}::{msg}",
+        prop(&f.file),
+        f.line,
+        prop(&format!("lint[{}]", f.rule)),
+    )
 }
 
 /// `dsq bench gate [--root <dir>] [--ratio <r>]` / `dsq bench publish

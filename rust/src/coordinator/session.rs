@@ -688,6 +688,10 @@ impl<T: Task> Session<T> {
             });
             let skip = std::mem::take(&mut resume_skip);
 
+            // The consume loop parks on the channel between batches; a
+            // witnessed lock held here would stall the whole replica
+            // group (the blocking_under_lock class, asserted at runtime).
+            crate::util::ordwitness::assert_lock_free("consuming the batch channel");
             let mut gidx = 0usize;
             for batch in rx.iter() {
                 let idx = gidx;
@@ -780,6 +784,7 @@ impl<T: Task> Session<T> {
                     self.save_checkpoint(schedule, Some(&pos))?;
                 }
             }
+            crate::util::ordwitness::assert_lock_free("joining the batch producer");
             producer.join().map_err(|_| Error::Config("batch producer panicked".into()))?;
 
             // Per-epoch validation — unless the step cadence already

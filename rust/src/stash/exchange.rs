@@ -46,13 +46,19 @@
 //! ## Lock order
 //!
 //! Two mutexes, one global order: `ring` (barrier state) strictly before
-//! `comms` (traffic meter). No function acquires `comms` before `ring` —
-//! `dsq lint`'s `lock_discipline` rule enforces this mechanically.
+//! `comms` (traffic meter). No function acquires `comms` before `ring`.
+//! The order is enforced twice: statically by `dsq lint`'s
+//! interprocedural `lock_discipline` rule (with `blocking_under_lock`
+//! refusing channel/join/sleep/File-I/O parks while either is held),
+//! and dynamically by the debug-build lock-order witness — both mutexes
+//! are [`WitnessedMutex`]es ranked `ring` (10) < `comms` (20), so every
+//! test run asserts the declared order per thread at runtime.
 
 use std::io::Read;
-use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::sync::{Arc, Condvar};
 
 use crate::model::ModelState;
+use crate::util::ordwitness::{self, WitnessedMutex};
 use crate::quant::{stash_stream, Codec, FormatSpec, PackedTensor};
 use crate::runtime::HostTensor;
 use crate::{Error, Result};
@@ -156,9 +162,12 @@ struct Comms {
 struct Core {
     n: usize,
     spec: FormatSpec,
-    ring: Mutex<Ring>,
+    /// Post board, rank [`ordwitness::RANK_EXCHANGE_RING`] — the global
+    /// order `ring` before `comms` is asserted statically by
+    /// `lock_discipline` and dynamically by the debug-build witness.
+    ring: WitnessedMutex<Ring>,
     ring_cv: Condvar,
-    comms: Mutex<Comms>,
+    comms: WitnessedMutex<Comms>,
 }
 
 const ABORT_PREFIX: &str = "replica exchange aborted";
@@ -190,14 +199,17 @@ impl Exchange {
             core: Arc::new(Core {
                 n: replicas,
                 spec,
-                ring: Mutex::new(Ring {
-                    posts: vec![None; replicas],
-                    taken: 0,
-                    round: 0,
-                    failed: None,
-                }),
+                ring: WitnessedMutex::new(
+                    ordwitness::RANK_EXCHANGE_RING,
+                    "exchange.ring",
+                    Ring { posts: vec![None; replicas], taken: 0, round: 0, failed: None },
+                ),
                 ring_cv: Condvar::new(),
-                comms: Mutex::new(Comms::default()),
+                comms: WitnessedMutex::new(
+                    ordwitness::RANK_EXCHANGE_COMMS,
+                    "exchange.comms",
+                    Comms::default(),
+                ),
             }),
         })
     }
@@ -225,7 +237,7 @@ impl Exchange {
     /// any rank returns an error naming `msg`. First failure wins;
     /// idempotent after that.
     pub fn fail(&self, msg: &str) {
-        let mut ring = self.core.ring.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut ring = self.core.ring.lock();
         if ring.failed.is_none() {
             ring.failed = Some(msg.to_string());
         }
@@ -234,7 +246,7 @@ impl Exchange {
 
     /// Aggregate comms traffic across all ranks so far.
     pub fn traffic_report(&self) -> CommsTraffic {
-        let comms = self.core.comms.lock().unwrap_or_else(PoisonError::into_inner);
+        let comms = self.core.comms.lock();
         CommsTraffic {
             spec: self.core.spec,
             replicas: self.core.n,
@@ -245,7 +257,7 @@ impl Exchange {
 
     /// Completed all-reduce rounds.
     pub fn rounds(&self) -> u64 {
-        self.core.ring.lock().unwrap_or_else(PoisonError::into_inner).round
+        self.core.ring.lock().round
     }
 }
 
@@ -278,7 +290,7 @@ impl ReplicaExchange {
     /// if any rank tore the exchange down.
     pub fn all_reduce_bytes(&self, frame: Vec<u8>) -> Result<Vec<Arc<Vec<u8>>>> {
         let core = &*self.core;
-        let mut ring = core.ring.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut ring = core.ring.lock();
         // Wait for this rank's slot from the previous round to drain —
         // rounds never overlap, so one slot vector is the whole ring.
         loop {
@@ -288,7 +300,7 @@ impl ReplicaExchange {
             if ring.posts[self.rank].is_none() {
                 break;
             }
-            ring = core.ring_cv.wait(ring).unwrap_or_else(PoisonError::into_inner);
+            ring = ring.wait(&core.ring_cv);
         }
         ring.posts[self.rank] = Some(Arc::new(frame));
         core.ring_cv.notify_all();
@@ -299,7 +311,7 @@ impl ReplicaExchange {
             if ring.posts.iter().all(Option::is_some) {
                 break;
             }
-            ring = core.ring_cv.wait(ring).unwrap_or_else(PoisonError::into_inner);
+            ring = ring.wait(&core.ring_cv);
         }
         let all: Vec<Arc<Vec<u8>>> = ring.posts.iter().flatten().map(Arc::clone).collect();
         ring.taken += 1;
@@ -443,7 +455,7 @@ impl ReplicaExchange {
         modeled_bits: f64,
         allowance_bits: f64,
     ) {
-        let mut comms = self.core.comms.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut comms = self.core.comms.lock();
         comms.meter.comms_tx_bytes += tx_payload;
         comms.meter.comms_rx_bytes += rx_payload;
         comms.meter.comms_frame_bytes += frame_bytes;
@@ -505,6 +517,7 @@ pub fn run_replicas<R: Send>(
                 .into_iter()
                 .enumerate()
                 .map(|(rank, j)| {
+                    ordwitness::assert_lock_free("joining a replica worker");
                     j.join().unwrap_or_else(|_| {
                         Err(Error::Config(format!("replica {rank} panicked")))
                     })

@@ -324,6 +324,7 @@ impl SpillHandle {
     /// produced, so checkpoints can stream a spilled tensor to disk
     /// byte-for-byte without rehydrating it.
     pub fn read_record(&self) -> Result<Vec<u8>> {
+        crate::util::ordwitness::assert_lock_free("stash spill readback");
         let mut f = File::open(self.path.as_path())?;
         f.seek(SeekFrom::Start(self.offset))?;
         let mut buf = vec![0u8; self.record_len];
@@ -354,6 +355,7 @@ impl SpillFile {
 
     /// Append one record; returns the handle addressing it.
     fn append(&mut self, p: &PackedTensor) -> Result<SpillHandle> {
+        crate::util::ordwitness::assert_lock_free("stash spill append");
         let mut buf = Vec::with_capacity(p.record_len());
         p.write_into(&mut buf)?;
         self.file.seek(SeekFrom::Start(self.cursor))?;
@@ -668,6 +670,7 @@ impl StashStore {
     pub fn fetch_state(&mut self, state: &mut ModelState) -> Result<()> {
         let mut ready: HashMap<usize, PackedTensor> = HashMap::new();
         if let Some(h) = self.prefetch.take() {
+            crate::util::ordwitness::assert_lock_free("joining the stash prefetcher");
             let got = h
                 .join()
                 .map_err(|_| Error::Config("stash prefetch thread panicked".into()))?
@@ -738,6 +741,7 @@ impl StashStore {
 
     fn join_prefetch(&mut self) -> Result<()> {
         if let Some(h) = self.prefetch.take() {
+            crate::util::ordwitness::assert_lock_free("joining the stash prefetcher");
             h.join()
                 .map_err(|_| Error::Config("stash prefetch thread panicked".into()))?
                 .map_err(Error::Config)?;
@@ -748,6 +752,7 @@ impl StashStore {
     /// Write the `stash.json` index: per-slot residency + the meter —
     /// what `dsq stash <dir>` prints.
     fn write_index(&self, state: &ModelState) -> Result<()> {
+        crate::util::ordwitness::assert_lock_free("writing the stash index");
         let n = state.params.len();
         let slots = (0..slot_count(state)).map(|id| {
             let (g, i) = (id / n, id % n);

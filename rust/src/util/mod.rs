@@ -6,6 +6,7 @@
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod ordwitness;
 pub mod prop;
 pub mod rng;
 pub mod stats;

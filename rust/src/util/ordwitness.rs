@@ -1,0 +1,268 @@
+//! Debug-build lock-order witness: the runtime twin of the static
+//! `lock_discipline` / `blocking_under_lock` rules.
+//!
+//! The static rules (`crate::analysis::{locks, blocking}`) prove lock
+//! ordering over the *lexical* call graph; this module asserts the same
+//! declared order *dynamically*, on every test run, per thread:
+//!
+//! * every shared mutex is a [`WitnessedMutex`] carrying a numeric rank
+//!   and a name; acquisition pushes onto a thread-local stack and
+//!   panics if the rank does not strictly exceed the rank currently on
+//!   top — an AB/BA inversion dies at the first inverted acquisition,
+//!   deterministically, instead of deadlocking one run in a thousand;
+//! * [`assert_lock_free`] is the runtime counterpart of
+//!   `blocking_under_lock`: call it at blocking edges (thread joins,
+//!   channel parks, spill-file I/O) and it panics if any witnessed lock
+//!   is held on this thread.
+//!
+//! Zero cost in release: the stack, the rank/name fields and every
+//! check compile away under `#[cfg(debug_assertions)]`; what remains is
+//! a plain poison-recovering `Mutex` (matching the repo's
+//! `unwrap_or_else(PoisonError::into_inner)` convention — meters and
+//! post boards stay usable after a peer panics, and the exchange has
+//! its own teardown protocol).
+//!
+//! Declared global order (gaps left for future subsystems — ranks must
+//! strictly increase along any acquisition chain, so same-rank
+//! reacquisition is also refused):
+//!
+//! | rank | lock |
+//! |------|------|
+//! | [`RANK_EXCHANGE_RING`]  (10) | `stash::exchange` `ring` post board |
+//! | [`RANK_EXCHANGE_COMMS`] (20) | `stash::exchange` `comms` traffic meter |
+//!
+//! The stash store and its readback prefetcher are deliberately
+//! lock-free (the prefetcher is a `JoinHandle`, not a shared mutex);
+//! their blocking edges carry [`assert_lock_free`] so that design
+//! stays enforced, not assumed.
+//!
+//! Guards survive a condvar wait by going through
+//! [`WitnessedGuard::wait`]: the mutex is released while parked (which
+//! is why condvar waits are legal under `blocking_under_lock`) but the
+//! witness entry stays, because the lock is re-held the moment the wait
+//! returns.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+
+/// The exchange `ring` post board — first in the global order.
+pub const RANK_EXCHANGE_RING: u32 = 10;
+/// The exchange `comms` traffic meter — always after `ring`.
+pub const RANK_EXCHANGE_COMMS: u32 = 20;
+
+#[cfg(debug_assertions)]
+thread_local! {
+    /// Per-thread stack of held (rank, name) pairs, acquisition order.
+    static HELD: std::cell::RefCell<Vec<(u32, &'static str)>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+#[cfg(debug_assertions)]
+fn note_acquire(rank: u32, name: &'static str) {
+    HELD.with(|h| {
+        let mut h = h.borrow_mut();
+        if let Some(&(top, top_name)) = h.last() {
+            assert!(
+                top < rank,
+                "lock-order witness: acquiring '{name}' (rank {rank}) while holding \
+                 '{top_name}' (rank {top}) — declared global order violated"
+            );
+        }
+        h.push((rank, name));
+    });
+}
+
+#[cfg(debug_assertions)]
+fn note_release(rank: u32, name: &'static str) {
+    HELD.with(|h| {
+        let mut h = h.borrow_mut();
+        // Guards may drop out of acquisition order; remove the matching
+        // entry wherever it sits.
+        if let Some(i) = h.iter().rposition(|&(r, n)| r == rank && n == name) {
+            h.remove(i);
+        }
+    });
+}
+
+/// Ranks currently held by this thread, acquisition order (debug-only
+/// diagnostic; the witness tests pin `wait` semantics through it).
+#[cfg(debug_assertions)]
+pub fn held_ranks() -> Vec<u32> {
+    HELD.with(|h| h.borrow().iter().map(|&(r, _)| r).collect())
+}
+
+/// Runtime counterpart of the `blocking_under_lock` lint rule: panics
+/// (debug builds only) if this thread holds any witnessed lock while
+/// crossing a blocking edge named `op`.
+pub fn assert_lock_free(op: &str) {
+    #[cfg(debug_assertions)]
+    HELD.with(|h| {
+        if let Some(&(rank, name)) = h.borrow().last() {
+            panic!(
+                "lock-order witness: {op} while holding '{name}' (rank {rank}) — \
+                 blocking operations must run lock-free"
+            );
+        }
+    });
+    #[cfg(not(debug_assertions))]
+    let _ = op;
+}
+
+/// A `Mutex` that asserts the declared global acquisition order in
+/// debug builds and is a plain poison-recovering mutex in release.
+pub struct WitnessedMutex<T> {
+    #[cfg(debug_assertions)]
+    rank: u32,
+    #[cfg(debug_assertions)]
+    name: &'static str,
+    inner: Mutex<T>,
+}
+
+impl<T> WitnessedMutex<T> {
+    pub fn new(rank: u32, name: &'static str, value: T) -> WitnessedMutex<T> {
+        #[cfg(not(debug_assertions))]
+        let _ = (rank, name);
+        WitnessedMutex {
+            #[cfg(debug_assertions)]
+            rank,
+            #[cfg(debug_assertions)]
+            name,
+            inner: Mutex::new(value),
+        }
+    }
+
+    /// Acquire, recovering from poisoning. The rank check runs *before*
+    /// parking on the mutex, so an ordering violation panics loudly
+    /// instead of deadlocking against the thread holding the peer lock.
+    pub fn lock(&self) -> WitnessedGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        note_acquire(self.rank, self.name);
+        WitnessedGuard {
+            inner: Some(self.inner.lock().unwrap_or_else(PoisonError::into_inner)),
+            #[cfg(debug_assertions)]
+            rank: self.rank,
+            #[cfg(debug_assertions)]
+            name: self.name,
+        }
+    }
+}
+
+/// Guard returned by [`WitnessedMutex::lock`]; releases the witness
+/// entry on drop. `inner` is `Some` for the guard's whole life — the
+/// `Option` only exists so [`Self::wait`] can thread the std guard
+/// through a condvar without dropping the witness entry.
+pub struct WitnessedGuard<'a, T> {
+    inner: Option<MutexGuard<'a, T>>,
+    #[cfg(debug_assertions)]
+    rank: u32,
+    #[cfg(debug_assertions)]
+    name: &'static str,
+}
+
+impl<'a, T> WitnessedGuard<'a, T> {
+    /// Park on `cv`, releasing the mutex while parked (condvar
+    /// semantics) but keeping the witness entry: the lock is re-held
+    /// the instant the wait returns, so to every *other* acquisition
+    /// on this thread it never stopped being held.
+    pub fn wait(mut self, cv: &Condvar) -> WitnessedGuard<'a, T> {
+        let g = self.inner.take().expect("witnessed guard holds its mutex guard");
+        self.inner = Some(cv.wait(g).unwrap_or_else(PoisonError::into_inner));
+        self
+    }
+}
+
+impl<T> std::ops::Deref for WitnessedGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.inner.as_deref().expect("witnessed guard holds its mutex guard")
+    }
+}
+
+impl<T> std::ops::DerefMut for WitnessedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_deref_mut().expect("witnessed guard holds its mutex guard")
+    }
+}
+
+impl<T> Drop for WitnessedGuard<'_, T> {
+    fn drop(&mut self) {
+        #[cfg(debug_assertions)]
+        if self.inner.is_some() {
+            note_release(self.rank, self.name);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn in_order_acquisition_is_clean() {
+        let ring = WitnessedMutex::new(RANK_EXCHANGE_RING, "t.ring", 1u32);
+        let comms = WitnessedMutex::new(RANK_EXCHANGE_COMMS, "t.comms", 2u32);
+        let a = ring.lock();
+        let b = comms.lock();
+        assert_eq!(*a + *b, 3);
+    }
+
+    #[test]
+    fn out_of_order_release_is_legal() {
+        let ring = WitnessedMutex::new(RANK_EXCHANGE_RING, "t2.ring", 0u32);
+        let comms = WitnessedMutex::new(RANK_EXCHANGE_COMMS, "t2.comms", 0u32);
+        let a = ring.lock();
+        let b = comms.lock();
+        drop(a); // release the *outer* lock first
+        drop(b);
+        let _again = ring.lock(); // stack is clean, reacquire is fine
+    }
+
+    // The inversion/blocking panics only fire in debug builds (the
+    // release CI lane runs these tests too, where the witness is
+    // compiled out), so the `should_panic` expectations are debug-only.
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "declared global order violated")]
+    fn rank_inversion_panics_in_debug() {
+        let ring = WitnessedMutex::new(RANK_EXCHANGE_RING, "t3.ring", ());
+        let comms = WitnessedMutex::new(RANK_EXCHANGE_COMMS, "t3.comms", ());
+        let _b = comms.lock();
+        let _a = ring.lock(); // comms (20) held, ring (10) requested
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "blocking operations must run lock-free")]
+    fn blocking_while_holding_a_lock_panics_in_debug() {
+        let ring = WitnessedMutex::new(RANK_EXCHANGE_RING, "t4.ring", ());
+        let _g = ring.lock();
+        assert_lock_free("test blocking edge");
+    }
+
+    #[test]
+    fn assert_lock_free_is_silent_when_nothing_is_held() {
+        assert_lock_free("no locks held");
+    }
+
+    #[test]
+    fn wait_preserves_the_witness_entry() {
+        let m = Arc::new(WitnessedMutex::new(RANK_EXCHANGE_RING, "t5.m", false));
+        let cv = Arc::new(Condvar::new());
+        let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+        let t = std::thread::spawn(move || {
+            *m2.lock() = true;
+            cv2.notify_all();
+        });
+        let mut g = m.lock();
+        while !*g {
+            g = g.wait(&cv);
+        }
+        #[cfg(debug_assertions)]
+        assert_eq!(held_ranks(), vec![RANK_EXCHANGE_RING], "entry survives the wait");
+        drop(g);
+        #[cfg(debug_assertions)]
+        assert!(held_ranks().is_empty(), "drop releases the entry");
+        t.join().expect("notifier thread");
+    }
+}

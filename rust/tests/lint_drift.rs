@@ -53,6 +53,8 @@ fn copy_contract_files(root: &Path, dst: &Path) {
         "python/compile/layers.py",
         "python/compile/aot.py",
         "python/compile/kernels/ref.py",
+        "rust/src/analysis/mod.rs",
+        "ROADMAP.md",
     ];
     for rel in FILES {
         let to = dst.join(rel);
@@ -86,7 +88,7 @@ fn head_tree_lints_clean() {
         "HEAD must lint clean; got:\n{}",
         report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
     );
-    assert_eq!(report.rules_run, 5);
+    assert_eq!(report.rules_run, 7);
 }
 
 #[test]
@@ -307,6 +309,123 @@ fn inverted_exchange_mutex_order_is_a_lock_discipline_finding() {
             && f.message.contains("ring")
             && f.message.contains("comms")),
         "AB/BA exchange mutex order must be a lock_discipline finding naming ring + comms:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn cross_function_lock_inversion_needs_the_call_graph() {
+    // The interprocedural upgrade's load-bearing case: lock A in `f`,
+    // call `g`, lock B in `g`; elsewhere B then A in one body. No single
+    // function acquires both locks in the A→B direction, so the
+    // superseded per-function scan must pass the tree — and the
+    // call-graph rule must report it with both call paths named.
+    let dst = scratch("xfn-locks");
+    copy_contract_files(&repo_root(), &dst);
+    let stash = dst.join("rust/src/stash/prefetch.rs");
+    fs::create_dir_all(stash.parent().unwrap()).expect("mkdir stash");
+    fs::write(
+        &stash,
+        "use std::sync::Mutex;\n\
+         pub struct P { lru: Mutex<u32>, budget: Mutex<u32> }\n\
+         fn drift_take_budget(p: &P) {\n\
+         \x20   let _b = p.budget.lock();\n\
+         }\n\
+         fn drift_ab(p: &P) {\n\
+         \x20   let _a = p.lru.lock();\n\
+         \x20   drift_take_budget(p);\n\
+         }\n\
+         fn drift_ba(p: &P) {\n\
+         \x20   let _b = p.budget.lock();\n\
+         \x20   let _a = p.lru.lock();\n\
+         }\n",
+    )
+    .expect("write fixture stash file");
+
+    let tree = analysis::Tree::load(&dst).expect("fixture tree loads");
+    let mut old = Vec::new();
+    analysis::locks::check_per_function(&tree, &mut old);
+    assert!(
+        old.is_empty(),
+        "the split inversion must be invisible per-function (that is the point): {:?}",
+        old.iter().map(ToString::to_string).collect::<Vec<_>>()
+    );
+
+    let report = run_lint(&dst).expect("lint runs");
+    let hits = findings_for(&report.findings, "lock_discipline");
+    assert!(
+        hits.iter().any(|f| f.file == "rust/src/stash/prefetch.rs"
+            && f.message.contains("lru")
+            && f.message.contains("budget")
+            && f.message.contains("drift_ab")
+            && f.message.contains("drift_take_budget")
+            && f.message.contains("drift_ba")),
+        "cross-function AB/BA must be a lock_discipline finding naming both call paths:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn recv_while_holding_ring_is_a_blocking_finding() {
+    // The PR-7 barrier-deadlock class: a channel park while holding the
+    // exchange's `ring` mutex — directly, and through a helper so the
+    // finding carries the call path.
+    let dst = scratch("blocking");
+    copy_contract_files(&repo_root(), &dst);
+    let path = dst.join("rust/src/stash/exchange.rs");
+    let mut text = fs::read_to_string(&path).expect("read copied exchange.rs");
+    assert!(
+        text.contains("ring"),
+        "exchange.rs no longer names the ring mutex — update the drift test"
+    );
+    text.push_str(
+        "\nfn drift_recv_helper(rx: &Receiver) {\n\
+         \x20   let _ = rx.recv();\n\
+         }\n\
+         fn drift_recv_under_ring(core: &Core, rx: &Receiver) {\n\
+         \x20   let _g = core.ring.lock();\n\
+         \x20   let _ = rx.recv();\n\
+         \x20   drift_recv_helper(rx);\n\
+         }\n",
+    );
+    fs::write(&path, text).expect("write fixture exchange.rs");
+    let report = run_lint(&dst).expect("lint runs");
+    let hits = findings_for(&report.findings, "blocking_under_lock");
+    assert!(
+        hits.iter().any(|f| f.file == "rust/src/stash/exchange.rs"
+            && f.message.contains("'ring'")
+            && f.message.contains("channel recv")),
+        "recv while holding ring must be a blocking_under_lock finding:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    assert!(
+        hits.iter().any(|f| f.message.contains("drift_recv_helper")),
+        "the through-a-helper park must surface with the call path named:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    fs::remove_dir_all(&dst).ok();
+}
+
+#[test]
+fn dropped_roadmap_rule_row_is_a_lint_meta_finding() {
+    // The linter's own docs are an invariant too: retire a rule row
+    // from ROADMAP's "Static analysis" table (and plant an undocumented
+    // one) and the lint must fail its own build.
+    let dst = scratch("meta");
+    copy_contract_files(&repo_root(), &dst);
+    rewrite(&dst, "ROADMAP.md", "| `magic_constants` |", "| `zzz_retired_rule` |");
+    let report = run_lint(&dst).expect("lint runs");
+    let hits = findings_for(&report.findings, "lint_meta");
+    assert!(
+        hits.iter().any(|f| f.file == "ROADMAP.md" && f.message.contains("magic_constants")),
+        "the missing row must be a lint_meta finding naming the rule:\n{}",
+        report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+    assert!(
+        hits.iter().any(|f| f.message.contains("zzz_retired_rule")),
+        "a documented-but-unimplemented rule must also be a finding:\n{}",
         report.findings.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
     );
     fs::remove_dir_all(&dst).ok();
