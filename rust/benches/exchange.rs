@@ -9,20 +9,31 @@
 //! actually pays per `run_replicas` call, and it is identical across
 //! formats, so the per-format delta is pure codec + reduce cost.
 //!
+//! Every format cell runs under **both transports**: `mem` (the
+//! in-memory ring, scoped-thread spawn inside the timed region as
+//! above) and `socket` (a TCP-loopback [`SocketHub`] plus two
+//! long-lived connected ranks — bind/connect/handshake happen once
+//! per cell outside the timed region, so the socket row is the
+//! steady-state per-round wire cost, framing and loopback included).
+//! The transport is a column in the row label and lands in
+//! `BENCH_exchange.json` like any other cell.
+//!
 //! `--smoke` (or `DSQ_BENCH_SMOKE=1`): a seconds-long CI profile that
 //! still executes every format cell and *asserts* on each that the
 //! comms meter agrees with the cost model within box-metadata slack
 //! ([`dsq::stash::audit_observed_comms`]), and that the fp32 wire
 //! format is bit-transparent (a mirrored 2-replica reduce leaves the
-//! state untouched) — an exchange regression fails the workflow, not
-//! just a number. Leaves `BENCH_exchange.json` at the repo root for
-//! `dsq bench gate`.
+//! state untouched) — on the mem *and* the socket transport — an
+//! exchange regression fails the workflow, not just a number. Leaves
+//! `BENCH_exchange.json` at the repo root for `dsq bench gate`.
+
+use std::sync::{mpsc, Arc};
 
 use dsq::bench::{header, Bencher, JsonReport};
 use dsq::model::ModelState;
 use dsq::quant::{registered_specs, FormatSpec};
 use dsq::runtime::HostTensor;
-use dsq::stash::{audit_observed_comms, run_replicas};
+use dsq::stash::{audit_observed_comms, run_replicas, Exchange, SocketHub, SocketTransport};
 use dsq::util::rng::Pcg32;
 
 fn make_state(rng: &mut Pcg32, scale: usize) -> ModelState {
@@ -67,6 +78,67 @@ fn one_round(spec: FormatSpec, dense: &ModelState) -> ModelState {
     .expect("exchange round")
 }
 
+/// The socket column's counterpart of [`one_round`]'s host: a
+/// TCP-loopback hub plus two connected ranks on long-lived threads,
+/// each doing one all-reduce per command. Bind, connect, and handshake
+/// happen once in [`SocketRig::start`]; [`SocketRig::round`] is the
+/// timed steady-state unit.
+struct SocketRig {
+    cmds: Vec<mpsc::Sender<ModelState>>,
+    done: mpsc::Receiver<ModelState>,
+    ranks: Vec<std::thread::JoinHandle<()>>,
+    hub: std::thread::JoinHandle<dsq::Result<u64>>,
+}
+
+impl SocketRig {
+    fn start(spec: FormatSpec) -> SocketRig {
+        let hub = SocketHub::bind("127.0.0.1:0", 2, b"bench".to_vec()).expect("bind bench hub");
+        let addr = hub.addr().to_string();
+        let hub = std::thread::spawn(move || hub.serve());
+        let (done_tx, done) = mpsc::channel();
+        let mut cmds = Vec::new();
+        let mut ranks = Vec::new();
+        for rank in 0..2usize {
+            let (tx, rx) = mpsc::channel::<ModelState>();
+            cmds.push(tx);
+            let addr = addr.clone();
+            let done_tx = done_tx.clone();
+            ranks.push(std::thread::spawn(move || {
+                let (t, _config) =
+                    SocketTransport::connect(&addr, rank, 2).expect("connect bench rank");
+                let ex = Exchange::with_transport(spec, Arc::new(t));
+                let h = ex.handle(rank).expect("bench rank handle");
+                for mut st in rx {
+                    h.all_reduce_state(&mut st, 1.0).expect("socket exchange round");
+                    if rank == 0 {
+                        done_tx.send(st).expect("report bench round");
+                    }
+                }
+            }));
+        }
+        SocketRig { cmds, done, ranks, hub }
+    }
+
+    /// One mirrored 2-replica round over the wire; returns rank 0's
+    /// post-reduce state.
+    fn round(&self, dense: &ModelState) -> ModelState {
+        for tx in &self.cmds {
+            tx.send(dense.clone()).expect("dispatch bench round");
+        }
+        self.done.recv().expect("collect bench round")
+    }
+
+    /// Drop the command lanes, letting both ranks EOF their streams so
+    /// the hub winds down cleanly.
+    fn shutdown(self) {
+        drop(self.cmds);
+        for t in self.ranks {
+            t.join().expect("bench rank thread");
+        }
+        self.hub.join().expect("bench hub thread").expect("bench hub serve");
+    }
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke")
         || std::env::var("DSQ_BENCH_SMOKE").is_ok_and(|v| v == "1");
@@ -98,7 +170,7 @@ fn main() {
         if smoke {
             // Correctness gates (the reason CI runs this in smoke mode):
             // meter-vs-model agreement on every format cell, and fp32
-            // bit-transparency of the mirrored reduce.
+            // bit-transparency of the mirrored reduce on both transports.
             audit_observed_comms(&spec)
                 .unwrap_or_else(|e| panic!("{spec}: comms meter disagrees: {e}"));
             if spec == FormatSpec::Fp32 {
@@ -110,11 +182,27 @@ fn main() {
                 );
             }
         }
-        let r = b.bench(&format!("{spec:<8} 2-replica round ({elems} elems)"), || {
+        let r = b.bench(&format!("{spec:<8} mem    2-replica round ({elems} elems)"), || {
             std::hint::black_box(one_round(spec, &dense));
         });
         println!("{}", r.report());
         json.push(&r, Some(elems as f64));
+
+        let rig = SocketRig::start(spec);
+        if smoke && spec == FormatSpec::Fp32 {
+            let reduced = rig.round(&dense);
+            assert_eq!(
+                flat(&reduced).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                flat(&dense).iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "fp32 mirrored all-reduce must be bit-transparent over the socket transport"
+            );
+        }
+        let r = b.bench(&format!("{spec:<8} socket 2-replica round ({elems} elems)"), || {
+            std::hint::black_box(rig.round(&dense));
+        });
+        println!("{}", r.report());
+        json.push(&r, Some(elems as f64));
+        rig.shutdown();
     }
     match json.write() {
         Ok(p) => println!("\nwrote {}", p.display()),

@@ -1,16 +1,21 @@
 //! Rule `blocking_under_lock`: no blocking operation — channel
 //! `send`/`recv`, no-arg thread `join`, `thread::sleep`, `File`/`fs`
-//! I/O — may be reached while a mutex is held, directly or through any
-//! call chain.
+//! I/O, and socket I/O (stream `read_exact`/`write_all`, no-arg
+//! `accept`, `TcpStream`/`UnixStream` connects) — may be reached while
+//! a mutex is held, directly or through any call chain.
 //!
 //! This is the PR-7 barrier-deadlock class made a build failure: a
 //! replica thread that parks at a channel or joins a worker while
 //! holding the exchange `ring` (or any stash/coordinator mutex) stalls
 //! every peer spinning on that lock, and under a failed peer the park
-//! never returns. The rule shares the call graph and held-set walk with
-//! `lock_discipline` ([`super::callgraph`]); condvar `.wait(…)` is
-//! deliberately not a blocking token, because it releases the mutex
-//! while parked — the exchange barrier is the legal pattern.
+//! never returns. The socket transport raises the stakes — a stream
+//! read can block for the full read timeout, so the transport keeps
+//! its `failed` mutex confined to flag helpers and the rule proves no
+//! wire I/O ever runs under it. The rule shares the call graph and
+//! held-set walk with `lock_discipline` ([`super::callgraph`]);
+//! condvar `.wait(…)` is deliberately not a blocking token, because it
+//! releases the mutex while parked — the exchange barrier is the legal
+//! pattern.
 //!
 //! Findings anchor at the outermost frame (the blocking call, or the
 //! call that leads to it), so a provably-safe site is escaped where the

@@ -12,9 +12,12 @@
 //!   and `core.ring.lock()` name the same lock);
 //! * `Block` — a token from [`BLOCKING`]: channel `send`/`recv`,
 //!   no-arg `.join()` (args would match `Path::join`), `thread::sleep`,
-//!   and `File`/`fs` I/O. Condvar `.wait(…)` is deliberately *not* a
-//!   blocking token: it releases the mutex while parked, which is the
-//!   exchange barrier's whole design;
+//!   `File`/`fs` I/O, and — since the socket transport — stream
+//!   `read_exact`/`write_all`, no-arg `.accept()`, and
+//!   `TcpStream`/`UnixStream` connects, so socket I/O under a held
+//!   lock is a finding like any other blocking edge. Condvar `.wait(…)`
+//!   is deliberately *not* a blocking token: it releases the mutex
+//!   while parked, which is the exchange barrier's whole design;
 //! * `Call` — an identifier followed by `(`, classified as a method
 //!   call (`x.f(`), a qualified call (`T::f(`, with `Self::` resolved
 //!   to the enclosing impl type), or a free call (`f(`).
@@ -82,7 +85,8 @@ pub struct BlockedOp {
 }
 
 /// Blocking tokens and their display labels. `.join()` is matched
-/// exactly with no argument so `Path::join(part)` stays out.
+/// exactly with no argument so `Path::join(part)` stays out, and
+/// `.accept()` likewise so non-socket `accept(arg)` helpers stay out.
 pub const BLOCKING: &[(&str, &str)] = &[
     (".recv()", "channel recv"),
     (".recv_timeout(", "channel recv"),
@@ -94,6 +98,11 @@ pub const BLOCKING: &[(&str, &str)] = &[
     ("OpenOptions::new(", "file I/O"),
     ("fs::write(", "file I/O"),
     ("fs::read", "file I/O"),
+    (".read_exact(", "stream read"),
+    (".write_all(", "stream write"),
+    (".accept()", "socket accept"),
+    ("TcpStream::connect(", "socket connect"),
+    ("UnixStream::connect(", "socket connect"),
 ];
 
 /// Ubiquitous std method/function names that never resolve to project

@@ -20,7 +20,7 @@
 //! | `magic_constants`  | on-disk magics defined once + pinned by golden tests ([`magic`]) |
 //! | `panic_hygiene`    | no `unwrap`/`expect`/`panic!` on the hot path ([`panics`]) |
 //! | `lock_discipline`  | one global mutex order, interprocedurally along the call graph ([`locks`]) |
-//! | `blocking_under_lock` | no send/recv/join/sleep/File I/O reached while a lock is held ([`blocking`]) |
+//! | `blocking_under_lock` | no send/recv/join/sleep/file or socket I/O reached while a lock is held ([`blocking`]) |
 //! | `lint_meta`        | RULES const ↔ this table ↔ ROADMAP "Static analysis" table agree ([`meta`]) |
 //!
 //! Escapes: `// dsq-lint: allow(<rule>, <reason>)` on the finding's

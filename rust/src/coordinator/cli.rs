@@ -19,7 +19,7 @@ use std::path::PathBuf;
 use crate::costmodel::{self, TransformerWorkload, WorkloadKind};
 use crate::data::Variant;
 use crate::schedule::{DsqController, FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
-use crate::stash::{self, StashBudget};
+use crate::stash::{self, StashBudget, TransportSpec};
 use crate::util::cli::{ArgSpec, Args};
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -44,6 +44,7 @@ pub fn dispatch(args: &[String]) -> i32 {
         "lint" => cmd_lint(rest),
         "bench" => cmd_bench(rest),
         "stash" => cmd_stash(rest),
+        "worker" => super::worker::cmd_worker(rest),
         "info" => cmd_info(rest),
         "version" => {
             println!("dsq {} — Dynamic Stashing Quantization trainer", env!("CARGO_PKG_VERSION"));
@@ -87,6 +88,9 @@ subcommands:
   bench        gate BENCH_*.json smoke reports against committed baselines
                (dsq bench gate [--ratio r] | dsq bench publish)
   stash        inspect a stash-store run dir (per-slot residency + traffic)
+  worker       socket-transport replica worker: dsq worker --rank <r>
+               --connect <addr> --replicas <n>; spawned automatically by a
+               --transport socket:<addr> run, not meant for hand-invocation
   info         artifact manifest summary
   version      print version
 
@@ -105,15 +109,23 @@ residency). Stashed runs print measured stash/spill traffic with a
 modeled-vs-observed DRAM comparison; --stash-dir keeps the store's
 segment + index on disk for `dsq stash <dir>`.
 
---replicas <n> trains n in-process data-parallel replicas (threads) over
-a sharded batch stream, all-reducing the post-step state in packed DSQ
-records after every step; --comms <spec> picks the wire format (fp32 =
+--replicas <n> trains n data-parallel replicas over a sharded batch
+stream, all-reducing the post-step state in packed DSQ records after
+every step; --comms <spec> picks the wire format (fp32 =
 bit-transparent full-precision reduce; SR formats draw rank-salted
 rounding streams so replicas never correlate). --mirror-replicas feeds
 every replica the identical stream instead of round-robin shards — with
 --comms fp32 that run is bit-identical to single-replica. Replicated
 runs print measured comms traffic with a modeled-vs-observed
 comparison, next to the stash DRAM line.
+
+--transport picks how those replicas are hosted: mem (the default)
+runs them as threads over an in-memory ring, bit-identical to the
+pre-transport behavior; socket:<path.sock> or socket:<host>:<port>
+runs them as real OS processes — the parent binds a hub socket, spawns
+one `dsq worker` per extra rank (port 0 picks a free TCP port), and
+hosts rank 0 itself, every rank exchanging versioned DSQWIRE1 frames
+over the socket. socket:* requires --replicas > 1.
 
 --schedule accepts dsq (the paper's BFP ladder), dsq-<family>
 (dsq-fixed, dsq-fixedsr), dsq-fp8 (FP8-LM-style floats: E4M3
@@ -205,6 +217,13 @@ fn common_train_flags(spec: ArgSpec) -> ArgSpec {
             "packed format replicas exchange state in (e.g. fp32, fixed8sr); \
              requires --replicas > 1; default fp32 (bit-transparent reduce)",
         )
+        .opt(
+            "transport",
+            "mem",
+            "how replicas are hosted: mem (threads over an in-memory ring) or \
+             socket:<path.sock> | socket:<host>:<port> (one OS process per \
+             rank via `dsq worker`); socket:* requires --replicas > 1",
+        )
         .bool(
             "mirror-replicas",
             "mirror the batch stream across replicas instead of round-robin \
@@ -222,12 +241,16 @@ fn parse_prefetch(a: &Args) -> Result<usize> {
     Ok(p)
 }
 
-/// Parse the replication triple `--replicas` / `--comms` /
-/// `--mirror-replicas`. `--comms` goes through the format registry
-/// (any registered spec is a wire format) and is rejected without
-/// `--replicas > 1` — a comms format with nobody to talk to is a
-/// config mistake, not a no-op.
-fn parse_replicas(a: &Args) -> Result<(usize, FormatSpec, bool)> {
+/// Parse the replication quad `--replicas` / `--comms` /
+/// `--mirror-replicas` / `--transport`. `--comms` goes through the
+/// format registry (any registered spec is a wire format) and is
+/// rejected without `--replicas > 1` — a comms format with nobody to
+/// talk to is a config mistake, not a no-op. `--transport` goes through
+/// [`TransportSpec::parse`] (a bad value names the offending token and
+/// quotes the valid grammar; this wrapper prepends the flag name), and
+/// `socket:*` is likewise rejected without `--replicas > 1` — a
+/// multi-process transport with one process is a config mistake.
+fn parse_replicas(a: &Args) -> Result<(usize, FormatSpec, bool, TransportSpec)> {
     let replicas = a.get_usize("replicas")?;
     if replicas == 0 {
         return Err(Error::Config("--replicas must be >= 1".into()));
@@ -238,7 +261,22 @@ fn parse_replicas(a: &Args) -> Result<(usize, FormatSpec, bool)> {
             "--comms requires --replicas > 1 (single-replica runs exchange nothing)".into(),
         ));
     }
-    Ok((replicas, comms.unwrap_or(FormatSpec::Fp32), a.get_bool("mirror-replicas")))
+    let transport = TransportSpec::parse(a.get("transport")).map_err(|e| match e {
+        Error::Config(msg) => Error::Config(format!("--transport: {msg}")),
+        other => other,
+    })?;
+    if replicas == 1 && transport.is_socket() {
+        return Err(Error::Config(format!(
+            "--transport {transport} requires --replicas > 1 (a multi-process \
+             transport with a single process exchanges nothing)"
+        )));
+    }
+    Ok((
+        replicas,
+        comms.unwrap_or(FormatSpec::Fp32),
+        a.get_bool("mirror-replicas"),
+        transport,
+    ))
 }
 
 /// The comms-traffic line after a replicated run: modeled vs observed
@@ -279,14 +317,20 @@ fn opt_budget(a: &Args, key: &str) -> Result<StashBudget> {
     }
 }
 
-fn cmd_train(raw: &[String]) -> Result<()> {
+/// Parse the full `dsq train` argv into its config, `--schedule` spec,
+/// and `--json` flag. Split from [`cmd_train`] so the multi-process
+/// path can replay the *same bytes* through the *same parser*: the
+/// orchestrator ships its argv to every `dsq worker` as the handshake
+/// CONFIG payload, and each worker re-parses it here — one parser, one
+/// config, no drift between the processes of a socket-transport run.
+pub(crate) fn parse_train_cli(raw: &[String]) -> Result<(TrainerConfig, String, bool)> {
     let spec = common_train_flags(ArgSpec::new("train", "train seq2seq with DSQ"))
         .opt("lr", "isqrt:3e-3:100", "lr schedule: const:x | isqrt:x:warmup | poly:x:w:total")
         .opt("variant", "iwslt", "task variant: iwslt | wmt")
         .opt("val-batches", "4", "validation batches")
         .opt("bleu-batches", "4", "test batches for BLEU (0 = skip)");
     let a = spec.parse(raw)?;
-    let (replicas, comms, mirror_replicas) = parse_replicas(&a)?;
+    let (replicas, comms, mirror_replicas, transport) = parse_replicas(&a)?;
     let cfg = TrainerConfig {
         artifacts: PathBuf::from(a.get("artifacts")),
         seed: a.get_u64("seed")?,
@@ -307,9 +351,33 @@ fn cmd_train(raw: &[String]) -> Result<()> {
         replicas,
         comms,
         mirror_replicas,
+        transport,
     };
-    let sched_spec = a.get("schedule").to_string();
-    let report = Trainer::run_replicated(cfg, || parse_schedule(&sched_spec))?;
+    Ok((cfg, a.get("schedule").to_string(), a.get_bool("json")))
+}
+
+fn cmd_train(raw: &[String]) -> Result<()> {
+    let (cfg, sched_spec, json) = parse_train_cli(raw)?;
+    let report = match cfg.transport.clone() {
+        TransportSpec::Socket(addr) => {
+            let exe = std::env::current_exe()?;
+            super::worker::orchestrate(
+                &exe,
+                "train",
+                raw,
+                &addr,
+                cfg.replicas,
+                cfg.comms,
+                |ex| {
+                    let mut t = Trainer::replica(&cfg, 0)?;
+                    t.session().set_exchange(ex)?;
+                    let mut schedule = parse_schedule(&sched_spec)?;
+                    t.run(schedule.as_mut())
+                },
+            )?
+        }
+        TransportSpec::Mem => Trainer::run_replicated(cfg, || parse_schedule(&sched_spec))?,
+    };
     println!(
         "steps={} val_loss={:.4} token_acc={:.1}% bleu={} diverged={} ({:.2} steps/s)",
         report.steps,
@@ -322,7 +390,7 @@ fn cmd_train(raw: &[String]) -> Result<()> {
     print_cost_line(&report, &TransformerWorkload::iwslt_6layer(), "IWSLT");
     print_stash_line(&report);
     print_comms_line(&report);
-    if a.get_bool("json") {
+    if json {
         println!("{}", report.to_json().to_string_pretty());
     }
     Ok(())
@@ -349,13 +417,16 @@ fn print_stash_line(report: &crate::coordinator::RunReport) {
     }
 }
 
-fn cmd_finetune(raw: &[String]) -> Result<()> {
+/// The `dsq finetune` twin of [`parse_train_cli`] — same split, same
+/// reason: the socket-transport workers replay the orchestrator's argv
+/// through this exact parser.
+pub(crate) fn parse_finetune_cli(raw: &[String]) -> Result<(FinetuneConfig, String, bool)> {
     let spec = common_train_flags(ArgSpec::new("finetune", "fine-tune the classifier"))
         .opt("lr", "poly:1e-3:20:2000", "lr schedule")
         .opt("nclasses", "3", "2 = QNLI-style, 3 = MNLI-style")
         .opt("val-batches", "4", "validation batches");
     let a = spec.parse(raw)?;
-    let (replicas, comms, mirror_replicas) = parse_replicas(&a)?;
+    let (replicas, comms, mirror_replicas, transport) = parse_replicas(&a)?;
     let cfg = FinetuneConfig {
         artifacts: PathBuf::from(a.get("artifacts")),
         seed: a.get_u64("seed")?,
@@ -375,9 +446,33 @@ fn cmd_finetune(raw: &[String]) -> Result<()> {
         replicas,
         comms,
         mirror_replicas,
+        transport,
     };
-    let sched_spec = a.get("schedule").to_string();
-    let report = Finetuner::run_replicated(cfg, || parse_schedule(&sched_spec))?;
+    Ok((cfg, a.get("schedule").to_string(), a.get_bool("json")))
+}
+
+fn cmd_finetune(raw: &[String]) -> Result<()> {
+    let (cfg, sched_spec, json) = parse_finetune_cli(raw)?;
+    let report = match cfg.transport.clone() {
+        TransportSpec::Socket(addr) => {
+            let exe = std::env::current_exe()?;
+            super::worker::orchestrate(
+                &exe,
+                "finetune",
+                raw,
+                &addr,
+                cfg.replicas,
+                cfg.comms,
+                |ex| {
+                    let mut f = Finetuner::replica(&cfg, 0)?;
+                    f.session().set_exchange(ex)?;
+                    let mut schedule = parse_schedule(&sched_spec)?;
+                    f.run(schedule.as_mut())
+                },
+            )?
+        }
+        TransportSpec::Mem => Finetuner::run_replicated(cfg, || parse_schedule(&sched_spec))?,
+    };
     println!(
         "steps={} val_loss={:.4} accuracy={:.1}% diverged={} ({:.2} steps/s)",
         report.steps,
@@ -391,7 +486,7 @@ fn cmd_finetune(raw: &[String]) -> Result<()> {
     print_cost_line(&report, &TransformerWorkload::roberta_base(), "RoBERTa-base");
     print_stash_line(&report);
     print_comms_line(&report);
-    if a.get_bool("json") {
+    if json {
         println!("{}", report.to_json().to_string_pretty());
     }
     Ok(())
@@ -898,7 +993,7 @@ mod tests {
         // Default: single replica, fp32 comms, round-robin moot.
         let spec = common_train_flags(ArgSpec::new("t", "test"));
         let a = spec.parse(&[]).unwrap();
-        assert_eq!(parse_replicas(&a).unwrap(), (1, FormatSpec::Fp32, false));
+        assert_eq!(parse_replicas(&a).unwrap(), (1, FormatSpec::Fp32, false, TransportSpec::Mem));
         // A replicated run with an SR comms format through the registry.
         let spec = common_train_flags(ArgSpec::new("t", "test"));
         let a = spec
@@ -910,7 +1005,10 @@ mod tests {
                 "--mirror-replicas".to_string(),
             ])
             .unwrap();
-        assert_eq!(parse_replicas(&a).unwrap(), (2, FormatSpec::fixed_sr(8), true));
+        assert_eq!(
+            parse_replicas(&a).unwrap(),
+            (2, FormatSpec::fixed_sr(8), true, TransportSpec::Mem)
+        );
         // 0 replicas and comms-without-replicas are config mistakes.
         let spec = common_train_flags(ArgSpec::new("t", "test"));
         let a = spec.parse(&["--replicas".to_string(), "0".to_string()]).unwrap();
@@ -937,6 +1035,62 @@ mod tests {
             }
             other => panic!("expected Config error, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn transport_flag_parses_and_errors_name_flag_token_and_grammar() {
+        let parse_with = |argv: &[&str]| {
+            let spec = common_train_flags(ArgSpec::new("t", "test"));
+            spec.parse(&argv.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+        };
+        // Both socket spellings parse when replicated.
+        let a = parse_with(&["--replicas", "2", "--transport", "socket:/tmp/x.sock"]);
+        let (_, _, _, t) = parse_replicas(&a).unwrap();
+        assert_eq!(t, TransportSpec::Socket("/tmp/x.sock".into()));
+        let a = parse_with(&["--replicas", "2", "--transport", "socket:127.0.0.1:0"]);
+        let (_, _, _, t) = parse_replicas(&a).unwrap();
+        assert_eq!(t, TransportSpec::Socket("127.0.0.1:0".into()));
+        // The satellite contract: a bad value names the flag, the
+        // offending token, and the valid grammar — no bare failures.
+        let a = parse_with(&["--replicas", "2", "--transport", "carrier-pigeon"]);
+        match parse_replicas(&a) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("--transport"), "names the flag: {msg}");
+                assert!(msg.contains("carrier-pigeon"), "names the token: {msg}");
+                assert!(msg.contains(stash::TRANSPORT_GRAMMAR), "lists the grammar: {msg}");
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // socket: with no address is named too.
+        let a = parse_with(&["--replicas", "2", "--transport", "socket:"]);
+        match parse_replicas(&a) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("--transport") && msg.contains("socket:"), "{msg}");
+                assert!(msg.contains(stash::TRANSPORT_GRAMMAR), "{msg}");
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+        // A multi-process transport with one process is rejected loudly,
+        // pointing at --replicas.
+        let a = parse_with(&["--transport", "socket:/tmp/x.sock"]);
+        match parse_replicas(&a) {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("--replicas > 1"), "points at --replicas: {msg}");
+                assert!(msg.contains("socket:/tmp/x.sock"), "names the transport: {msg}");
+            }
+            other => panic!("expected Config error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn worker_subcommand_requires_its_flags() {
+        // `dsq worker` without --rank/--connect/--replicas is a usage
+        // error (exit 2), like every other CLI misuse.
+        assert_eq!(dispatch(&["worker".to_string()]), 2);
+        assert_eq!(
+            dispatch(&["worker".to_string(), "--rank".to_string(), "1".to_string()]),
+            2
+        );
     }
 
     #[test]

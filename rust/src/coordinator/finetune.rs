@@ -15,7 +15,7 @@ use crate::data::classify::{ClassifyConfig, ClassifyTask};
 use crate::model::ModelState;
 use crate::runtime::ArtifactManifest;
 use crate::schedule::{FormatSpec, Schedule};
-use crate::stash::{run_replicas, ReplicaShard, StashBudget};
+use crate::stash::{run_replicas, ReplicaShard, StashBudget, TransportSpec};
 use crate::{Error, Result};
 
 use super::lr::LrSchedule;
@@ -62,6 +62,12 @@ pub struct FinetuneConfig {
     /// Mirror the batch stream across replicas instead of round-robin
     /// sharding it (see [`crate::stash::ReplicaShard::mirror`]).
     pub mirror_replicas: bool,
+    /// How replicas exchange state (`--transport`): `mem` (default)
+    /// runs them as threads over the in-memory ring via
+    /// [`Finetuner::run_replicated`]; `socket:<addr>` runs them as OS
+    /// processes — the CLI's `worker` orchestration owns that path
+    /// and builds each rank with [`Finetuner::replica`].
+    pub transport: TransportSpec,
 }
 
 impl FinetuneConfig {
@@ -85,6 +91,7 @@ impl FinetuneConfig {
             replicas: 1,
             comms: FormatSpec::Fp32,
             mirror_replicas: false,
+            transport: TransportSpec::Mem,
         }
     }
 
@@ -143,6 +150,15 @@ impl Finetuner {
         Self::with_shard(cfg, None)
     }
 
+    /// Build rank `rank`'s view of a replicated run — the per-rank
+    /// config plus its batch shard — without deciding how the ranks
+    /// are hosted. The thread path ([`Finetuner::run_replicated`]) and
+    /// the multi-process `worker` orchestration both build replicas
+    /// through here, so the two transports train identical sessions.
+    pub fn replica(cfg: &FinetuneConfig, rank: usize) -> Result<Self> {
+        Self::with_shard(cfg.for_rank(rank), cfg.shard_for(rank))
+    }
+
     fn with_shard(cfg: FinetuneConfig, shard: Option<ReplicaShard>) -> Result<Self> {
         let man = ArtifactManifest::load(&cfg.artifacts)?;
         let (b, l, v, ncls) = (
@@ -189,8 +205,17 @@ impl Finetuner {
             let mut schedule = make_schedule()?;
             return f.run(schedule.as_mut());
         }
+        if cfg.transport.is_socket() {
+            // Process orchestration (hub + spawned `dsq worker`s) is
+            // the CLI's job — reaching here means a caller skipped it.
+            return Err(Error::Config(format!(
+                "transport {} needs the multi-process worker orchestration \
+                 (run through the dsq CLI); run_replicated only hosts --transport mem",
+                cfg.transport
+            )));
+        }
         run_replicas(cfg.replicas, cfg.comms, |rank, ex| {
-            let mut f = Finetuner::with_shard(cfg.for_rank(rank), cfg.shard_for(rank))?;
+            let mut f = Finetuner::replica(&cfg, rank)?;
             f.session().set_exchange(ex)?;
             let mut schedule = make_schedule()?;
             f.run(schedule.as_mut())

@@ -25,20 +25,26 @@
 //! input assembly, eval normalization, headline metric — not another
 //! copy of the loop.
 //!
-//! Data-parallel replication (`--replicas N`) stays in this layer too:
-//! [`Trainer::run_replicated`] / [`Finetuner::run_replicated`] spin up
-//! N sessions on threads, each owning a [`crate::stash::ReplicaShard`]
-//! of the batch stream, and wire them to one
-//! [`crate::stash::Exchange`] that all-reduces the post-step state in
-//! `--comms` packed records (dequant → mean → requant at salt 0, so
-//! every rank lands on identical bytes). Metered comms traffic rides
-//! the report as [`RunReport::comms`].
+//! Data-parallel replication (`--replicas N`) stays in this layer too,
+//! hosted two ways behind one collective surface (`--transport`):
+//! `--transport mem` (the default) has [`Trainer::run_replicated`] /
+//! [`Finetuner::run_replicated`] spin up N sessions on threads wired to
+//! one [`crate::stash::Exchange`] over the in-memory ring; `--transport
+//! socket:<addr>` has [`worker::orchestrate`] bind a
+//! [`crate::stash::SocketHub`], spawn N−1 `dsq worker` OS processes,
+//! and host rank 0 in-parent, every rank exchanging versioned wire
+//! frames over the socket. Either way each rank owns a
+//! [`crate::stash::ReplicaShard`] of the batch stream and all-reduces
+//! the post-step state in `--comms` packed records (dequant → mean →
+//! requant at salt 0, so every rank lands on identical bytes). Metered
+//! comms traffic rides the report as [`RunReport::comms`].
 
 pub mod cli;
 pub mod finetune;
 pub mod lr;
 pub mod session;
 pub mod trainer;
+pub mod worker;
 
 pub use cli::dispatch;
 pub use finetune::{FinetuneConfig, Finetuner};

@@ -10,8 +10,8 @@ use crate::data::{Batcher, TranslationConfig, TranslationTask, Variant};
 use crate::model::ModelState;
 use crate::runtime::ArtifactManifest;
 use crate::schedule::{FormatSpec, Schedule};
-use crate::stash::{run_replicas, ReplicaShard, StashBudget};
-use crate::Result;
+use crate::stash::{run_replicas, ReplicaShard, StashBudget, TransportSpec};
+use crate::{Error, Result};
 
 use super::lr::LrSchedule;
 use super::session::{NmtTask, RunReport, Session, SessionConfig};
@@ -62,6 +62,12 @@ pub struct TrainerConfig {
     /// to single-replica). Round-robin (the default) is the N×-batch
     /// data-parallel emulation.
     pub mirror_replicas: bool,
+    /// How replicas exchange state (`--transport`): `mem` (default)
+    /// runs them as threads over the in-memory ring via
+    /// [`Trainer::run_replicated`]; `socket:<addr>` runs them as OS
+    /// processes — the CLI's `worker` orchestration owns that path
+    /// and builds each rank with [`Trainer::replica`].
+    pub transport: TransportSpec,
 }
 
 impl TrainerConfig {
@@ -86,6 +92,7 @@ impl TrainerConfig {
             replicas: 1,
             comms: FormatSpec::Fp32,
             mirror_replicas: false,
+            transport: TransportSpec::Mem,
         }
     }
 
@@ -146,6 +153,15 @@ impl Trainer {
         Self::with_shard(cfg, None)
     }
 
+    /// Build rank `rank`'s view of a replicated run — the per-rank
+    /// config plus its batch shard — without deciding how the ranks
+    /// are hosted. The thread path ([`Trainer::run_replicated`]) and
+    /// the multi-process `worker` orchestration both build replicas
+    /// through here, so the two transports train identical sessions.
+    pub fn replica(cfg: &TrainerConfig, rank: usize) -> Result<Self> {
+        Self::with_shard(cfg.for_rank(rank), cfg.shard_for(rank))
+    }
+
     fn with_shard(cfg: TrainerConfig, shard: Option<ReplicaShard>) -> Result<Self> {
         let man = ArtifactManifest::load(&cfg.artifacts)?;
         let (b, s, t, v) = (
@@ -189,8 +205,17 @@ impl Trainer {
             let mut schedule = make_schedule()?;
             return t.run(schedule.as_mut());
         }
+        if cfg.transport.is_socket() {
+            // Process orchestration (hub + spawned `dsq worker`s) is
+            // the CLI's job — reaching here means a caller skipped it.
+            return Err(Error::Config(format!(
+                "transport {} needs the multi-process worker orchestration \
+                 (run through the dsq CLI); run_replicated only hosts --transport mem",
+                cfg.transport
+            )));
+        }
         run_replicas(cfg.replicas, cfg.comms, |rank, ex| {
-            let mut t = Trainer::with_shard(cfg.for_rank(rank), cfg.shard_for(rank))?;
+            let mut t = Trainer::replica(&cfg, rank)?;
             t.session().set_exchange(ex)?;
             let mut schedule = make_schedule()?;
             t.run(schedule.as_mut())

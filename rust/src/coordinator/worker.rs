@@ -1,0 +1,402 @@
+//! Multi-process replica orchestration: the `--transport socket` twin
+//! of [`crate::stash::run_replicas`].
+//!
+//! One `dsq train`/`dsq finetune` invocation with `--transport
+//! socket:<addr>` becomes N real OS processes sharing one collective:
+//!
+//! 1. [`orchestrate`] binds a [`SocketHub`] on the requested address
+//!    (TCP port 0 lets the OS pick) and serves it on a thread;
+//! 2. it spawns ranks `1..N` as `dsq worker --rank <r> --connect
+//!    <addr> --replicas <n>` child processes of the same binary;
+//! 3. rank 0 runs in-parent over its own connected
+//!    [`SocketTransport`], so the orchestrator's report is rank 0's
+//!    report exactly as on the thread path;
+//! 4. each worker's handshake returns the CONFIG payload — the
+//!    original subcommand argv as a JSON array — which the worker
+//!    re-parses with the *same* CLI parser the orchestrator used, then
+//!    builds its rank via `Trainer::replica` / `Finetuner::replica`.
+//!    One parser, one config: the processes cannot drift.
+//!
+//! Teardown mirrors the in-memory contract: any rank's error calls
+//! `Exchange::fail`, which puts an abort frame on the wire; the hub
+//! broadcasts it, so every surviving process errors out with the
+//! exchange's `ABORT_PREFIX` (carrying the originating message)
+//! within the read timeout instead of hanging. A rank that dies
+//! without a word (kill -9) closes its stream, which the hub treats
+//! the same way.
+//!
+//! The `exchange-selftest` config runs the collective over a synthetic
+//! deterministic state with no artifacts on disk — the process-level
+//! e2e tests drive it to pin cross-transport bit-identity and
+//! injected-failure teardown against real child processes.
+//!
+//! This module is deliberately lock-free: every blocking edge (socket
+//! connects inside the transport, the hub join, child waits) runs with
+//! no lock held, witnessed by [`ordwitness::assert_lock_free`].
+
+use std::path::Path;
+use std::process::{Child, Command};
+use std::sync::Arc;
+
+use crate::model::ModelState;
+use crate::quant::FormatSpec;
+use crate::runtime::HostTensor;
+use crate::stash::{Exchange, ReplicaExchange, SocketHub, SocketTransport, Transport};
+use crate::util::cli::ArgSpec;
+use crate::util::json::{self, Json};
+use crate::util::ordwitness;
+use crate::{Error, Result};
+
+use super::finetune::Finetuner;
+use super::trainer::Trainer;
+
+/// The CONFIG payload: the orchestrator's subcommand argv as a JSON
+/// array, broadcast verbatim to every worker at handshake.
+fn config_payload(subcmd: &str, raw: &[String]) -> Vec<u8> {
+    Json::arr(std::iter::once(subcmd).chain(raw.iter().map(String::as_str)).map(Json::str))
+        .to_string()
+        .into_bytes()
+}
+
+fn parse_config_argv(bytes: Vec<u8>) -> Result<Vec<String>> {
+    let text = String::from_utf8(bytes)
+        .map_err(|_| Error::Config("worker CONFIG payload is not UTF-8".into()))?;
+    let doc = json::parse(&text)?;
+    let arr = doc
+        .as_arr()
+        .ok_or_else(|| Error::Config(format!("worker CONFIG payload is not an argv array: {text}")))?;
+    arr.iter()
+        .map(|j| {
+            j.as_str().map(str::to_string).ok_or_else(|| {
+                Error::Config(format!("worker CONFIG argv holds a non-string entry: {text}"))
+            })
+        })
+        .collect()
+}
+
+/// Run `rank`'s leg of the collective, tearing the exchange down on
+/// error so no peer is left blocked — the per-process mirror of the
+/// error handling inside [`crate::stash::run_replicas`].
+fn run_rank<R>(
+    ex: &Exchange,
+    rank: usize,
+    run: impl FnOnce(ReplicaExchange) -> Result<R>,
+) -> Result<R> {
+    let result = ex.handle(rank).and_then(run);
+    if let Err(e) = &result {
+        ex.fail(&format!("replica {rank} failed: {e}"));
+    }
+    result
+}
+
+/// Host a socket-transport replicated run: bind the hub on `addr`,
+/// spawn ranks `1..replicas` as `exe worker …` child processes whose
+/// CONFIG payload replays `subcmd` + `raw`, and run rank 0 in-parent
+/// via `run0`. Returns rank 0's result once the hub and every child
+/// have wound down; any rank's failure surfaces here with the
+/// originating message (relayed through the hub's abort broadcast).
+pub fn orchestrate<R>(
+    exe: &Path,
+    subcmd: &str,
+    raw: &[String],
+    addr: &str,
+    replicas: usize,
+    comms: FormatSpec,
+    run0: impl FnOnce(ReplicaExchange) -> Result<R>,
+) -> Result<R> {
+    if replicas < 2 {
+        return Err(Error::Config(format!(
+            "socket orchestration needs at least 2 replicas (got {replicas})"
+        )));
+    }
+    let hub = SocketHub::bind(addr, replicas, config_payload(subcmd, raw))?;
+    let resolved = hub.addr().to_string();
+    let hub_thread = std::thread::spawn(move || hub.serve());
+
+    let mut children: Vec<(usize, Child)> = Vec::new();
+    let mut spawn_failure: Option<Error> = None;
+    for rank in 1..replicas {
+        let spawned = Command::new(exe)
+            .arg("worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--connect")
+            .arg(&resolved)
+            .arg("--replicas")
+            .arg(replicas.to_string())
+            .spawn();
+        match spawned {
+            Ok(c) => children.push((rank, c)),
+            Err(e) => {
+                spawn_failure = Some(Error::Config(format!(
+                    "spawning worker rank {rank} ({}): {e}",
+                    exe.display()
+                )));
+                break;
+            }
+        }
+    }
+
+    let rank0 = match spawn_failure {
+        Some(e) => {
+            // Rank 0 never connects; the already-spawned workers die
+            // now and the hub's accept timeout tears the round down.
+            for (_, c) in children.iter_mut() {
+                let _ = c.kill();
+            }
+            Err(e)
+        }
+        None => match SocketTransport::connect(&resolved, 0, replicas) {
+            Err(e) => Err(e),
+            Ok((transport, _config)) => {
+                let ex = Exchange::with_transport(comms, Arc::new(transport));
+                run_rank(&ex, 0, run0)
+                // `ex` (and with it rank 0's stream) drops here, so the
+                // hub sees rank 0's clean EOF before we join it below.
+            }
+        },
+    };
+
+    ordwitness::assert_lock_free("joining the socket hub thread");
+    let hub_result = hub_thread
+        .join()
+        .unwrap_or_else(|_| Err(Error::Config("socket hub panicked".into())));
+    let mut child_failure: Option<Error> = None;
+    for (rank, mut c) in children {
+        ordwitness::assert_lock_free("waiting for a worker process to exit");
+        match c.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => {
+                child_failure.get_or_insert(Error::Config(format!(
+                    "worker rank {rank} exited with {status}"
+                )));
+            }
+            Err(e) => {
+                child_failure.get_or_insert(Error::Config(format!(
+                    "waiting for worker rank {rank}: {e}"
+                )));
+            }
+        }
+    }
+
+    // Rank 0's error already carries the originating failure (a worker
+    // fault arrives as the relayed abort message); the hub and child
+    // statuses only matter when rank 0 itself succeeded.
+    let value = rank0?;
+    hub_result?;
+    if let Some(e) = child_failure {
+        return Err(e);
+    }
+    Ok(value)
+}
+
+/// `dsq worker --rank <r> --connect <addr> --replicas <n>`: one spawned
+/// replica of a `--transport socket` run. Not meant for hand-invocation
+/// — the orchestrating `dsq train`/`dsq finetune` process spawns these
+/// and supplies their config over the handshake.
+pub fn cmd_worker(raw: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("worker", "socket-transport replica worker (spawned, not hand-run)")
+        .req("rank", "this worker's replica rank (1..replicas; rank 0 runs in the orchestrator)")
+        .req("connect", "hub address (unix socket path or host:port)")
+        .req("replicas", "total replica count of the run");
+    let a = spec.parse(raw)?;
+    run_worker(a.get("connect"), a.get_usize("rank")?, a.get_usize("replicas")?)
+}
+
+fn run_worker(addr: &str, rank: usize, replicas: usize) -> Result<()> {
+    let (transport, config) = SocketTransport::connect(addr, rank, replicas)?;
+    let transport: Arc<dyn Transport> = Arc::new(transport);
+    let argv = parse_config_argv(config)?;
+    let (subcmd, rest) = argv
+        .split_first()
+        .ok_or_else(|| Error::Config("worker CONFIG argv is empty".into()))?;
+    match subcmd.as_str() {
+        "train" => {
+            let (cfg, sched, _json) = super::cli::parse_train_cli(rest)?;
+            check_replicas(cfg.replicas, replicas)?;
+            let ex = Exchange::with_transport(cfg.comms, transport);
+            run_rank(&ex, rank, |h| {
+                let mut t = Trainer::replica(&cfg, rank)?;
+                t.session().set_exchange(h)?;
+                let mut schedule = super::cli::parse_schedule(&sched)?;
+                t.run(schedule.as_mut())
+            })?;
+            Ok(())
+        }
+        "finetune" => {
+            let (cfg, sched, _json) = super::cli::parse_finetune_cli(rest)?;
+            check_replicas(cfg.replicas, replicas)?;
+            let ex = Exchange::with_transport(cfg.comms, transport);
+            run_rank(&ex, rank, |h| {
+                let mut f = Finetuner::replica(&cfg, rank)?;
+                f.session().set_exchange(h)?;
+                let mut schedule = super::cli::parse_schedule(&sched)?;
+                f.run(schedule.as_mut())
+            })?;
+            Ok(())
+        }
+        "exchange-selftest" => run_selftest_worker(rest, rank, transport),
+        other => Err(Error::Config(format!(
+            "worker CONFIG names unknown subcommand '{other}' (train | finetune | \
+             exchange-selftest)"
+        ))),
+    }
+}
+
+/// The worker's config must describe the same world it was launched
+/// into — a mismatch means the orchestrator and worker disagree.
+fn check_replicas(cfg_replicas: usize, launched: usize) -> Result<()> {
+    if cfg_replicas != launched {
+        return Err(Error::Config(format!(
+            "worker launched for {launched} replicas but its config says --replicas \
+             {cfg_replicas}"
+        )));
+    }
+    Ok(())
+}
+
+/// Flag schema for the `exchange-selftest` CONFIG — shared by the
+/// worker side here and the process-level tests that drive it.
+fn selftest_spec() -> ArgSpec {
+    ArgSpec::new("exchange-selftest", "artifact-free collective check over a synthetic state")
+        .opt("elems", "64", "elements in the synthetic parameter tensor")
+        .opt("rounds", "3", "all-reduce rounds to run")
+        .opt("comms", "fp32", "wire format for the exchange")
+        .opt("die-rank", "", "rank that injects a failure (empty = nobody dies)")
+        .opt("die-round", "0", "round before which --die-rank fails")
+}
+
+fn run_selftest_worker(rest: &[String], rank: usize, transport: Arc<dyn Transport>) -> Result<()> {
+    let a = selftest_spec().parse(rest)?;
+    let comms = FormatSpec::parse(a.get("comms"))?;
+    let die_at = if a.get("die-rank") == rank.to_string().as_str() {
+        Some(a.get_u64("die-round")?)
+    } else {
+        None
+    };
+    let elems = a.get_usize("elems")?;
+    let rounds = a.get_u64("rounds")?;
+    let ex = Exchange::with_transport(comms, transport);
+    let state = run_rank(&ex, rank, |h| selftest_run(h, elems, rounds, die_at))?;
+    let digest = state
+        .iter()
+        .fold(0u64, |acc, v| acc.rotate_left(7) ^ u64::from(v.to_bits()));
+    println!("exchange-selftest rank {rank}: {rounds} rounds, state digest {digest:016x}");
+    Ok(())
+}
+
+/// Deterministic synthetic state for the exchange selftest — identical
+/// on every rank (the mirrored configuration), so fp32 comms must be
+/// bit-transparent across any transport.
+pub fn selftest_state(elems: usize) -> ModelState {
+    let n = elems.max(1);
+    let params = vec![
+        HostTensor::f32(
+            vec![n],
+            (0..n).map(|i| (i as f32 * 0.37 - 3.0) * 1.5f32.powi(i as i32 % 7)).collect(),
+        ),
+        HostTensor::f32(vec![], vec![0.5]),
+    ];
+    let m: Vec<HostTensor> =
+        params.iter().map(|t| HostTensor::f32(t.shape.clone(), vec![0.25; t.len()])).collect();
+    let v: Vec<HostTensor> = params.iter().map(HostTensor::zeros_like).collect();
+    ModelState { params, m, v, step: 7 }
+}
+
+/// Flattened `(params, m, v)` view — what the selftest's bit-identity
+/// assertions compare across transports.
+pub fn flat_state(state: &ModelState) -> Result<Vec<f32>> {
+    let mut out = Vec::new();
+    for group in [&state.params, &state.m, &state.v] {
+        for t in group {
+            out.extend_from_slice(t.as_f32()?);
+        }
+    }
+    Ok(out)
+}
+
+/// One rank's selftest leg: `rounds` all-reduce rounds over
+/// [`selftest_state`], returning the flattened final state. `die_at`
+/// injects a failure before posting that round — the process-level
+/// teardown tests' fault hook.
+pub fn selftest_run(
+    ex: ReplicaExchange,
+    elems: usize,
+    rounds: u64,
+    die_at: Option<u64>,
+) -> Result<Vec<f32>> {
+    let mut state = selftest_state(elems);
+    for round in 0..rounds {
+        if die_at == Some(round) {
+            return Err(Error::Config(format!(
+                "replica {} injected a selftest fault before round {round}",
+                ex.rank()
+            )));
+        }
+        ex.all_reduce_state(&mut state, 1.0)?;
+    }
+    flat_state(&state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stash::{run_replicas, ABORT_PREFIX};
+
+    #[test]
+    fn config_payload_roundtrips_through_json() {
+        let raw = vec!["--elems".to_string(), "8".to_string(), "--comms".to_string(), "fp32".to_string()];
+        let argv = parse_config_argv(config_payload("exchange-selftest", &raw)).unwrap();
+        assert_eq!(argv[0], "exchange-selftest");
+        assert_eq!(&argv[1..], raw.as_slice());
+        assert!(parse_config_argv(b"{\"not\": \"an array\"}".to_vec()).is_err());
+        assert!(parse_config_argv(vec![0xFF, 0xFE]).is_err());
+    }
+
+    #[test]
+    fn selftest_is_bit_transparent_over_the_mem_transport() {
+        // Mirrored fp32 all-reduce must leave the selftest state
+        // untouched — the same invariant the socket e2e pins against
+        // real processes, here on the default transport.
+        let want = flat_state(&selftest_state(16)).unwrap();
+        let got = run_replicas(2, FormatSpec::Fp32, |_rank, ex| selftest_run(ex, 16, 3, None))
+            .unwrap();
+        assert_eq!(got, want, "mirrored fp32 selftest must be bit-transparent");
+    }
+
+    #[test]
+    fn selftest_die_at_injects_a_teardown() {
+        let err = run_replicas(2, FormatSpec::Fp32, |rank, ex| {
+            selftest_run(ex, 8, 2, (rank == 1).then_some(1))
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("injected a selftest fault"), "originating fault must win: {err}");
+        assert!(!err.contains(ABORT_PREFIX), "not the secondary barrier abort: {err}");
+    }
+
+    #[test]
+    fn orchestrate_rejects_a_single_replica() {
+        let err = orchestrate(
+            Path::new("/nonexistent-dsq"),
+            "exchange-selftest",
+            &[],
+            "127.0.0.1:0",
+            1,
+            FormatSpec::Fp32,
+            |_h| Ok(()),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("at least 2 replicas"), "{err}");
+    }
+
+    #[test]
+    fn selftest_flags_parse_with_defaults() {
+        let a = selftest_spec().parse(&[]).unwrap();
+        assert_eq!(a.get_usize("elems").unwrap(), 64);
+        assert_eq!(a.get_u64("rounds").unwrap(), 3);
+        assert_eq!(a.get("comms"), "fp32");
+        assert_eq!(a.get("die-rank"), "");
+    }
+}

@@ -1,24 +1,40 @@
-//! Replica exchange: the in-process all-reduce that turns N `Session`
-//! replicas into one data-parallel run, speaking the stash layer's v2
-//! packed-record wire format.
+//! Replica exchange: transport-agnostic collectives that turn N
+//! `Session` replicas into one data-parallel run, speaking the stash
+//! layer's v2 packed-record format over any [`Transport`].
+//!
+//! ## Layering
+//!
+//! Since the multi-process refactor the exchange is three modules with
+//! hard seams:
+//!
+//! * [`super::wire`] — the versioned DSQWIRE1 frame codec (header +
+//!   length-prefixed payload, torn-frame detection). Only socket-style
+//!   transports put it on a real wire; the payload format is the same
+//!   everywhere.
+//! * [`super::transport`] — how payloads move: post-and-collect
+//!   semantics behind the [`Transport`] trait. `MemTransport` is the
+//!   original in-process ring (one post slot per rank under the `ring`
+//!   mutex — `--transport mem`, the default, bit-identical to the
+//!   pre-refactor exchange); `SocketTransport` runs N OS processes
+//!   over Unix/TCP sockets (`--transport socket:<addr>`).
+//! * this module — the *collective*: the dequant–reduce–requant
+//!   all-reduce over whichever transport, plus the comms traffic
+//!   meter. Nothing here knows how bytes travel.
 //!
 //! ## Protocol
 //!
-//! All replicas share one [`Exchange`] core holding a single-round
-//! in-memory ring: one slot per rank, a round counter, and a condvar.
 //! Each step every rank
 //!
 //! 1. **encodes** its post-step state (params, m, v — the same tensors
-//!    the stash store owns) as one frame of v2 packed records in the
+//!    the stash store owns) as one payload of v2 packed records in the
 //!    comms [`FormatSpec`], plus a trailing fp32 loss word;
-//! 2. **posts** the frame into its slot and blocks until every rank's
-//!    slot for the round is full (a fast rank re-entering first waits
-//!    for its own slot to drain, so rounds cannot overlap);
-//! 3. **decodes** all N frames in rank order, sums dense f32, divides
+//! 2. **posts** the payload through [`Transport::post_collect`], which
+//!    blocks until every rank's payload for the round is available and
+//!    returns all N in rank order;
+//! 3. **decodes** all N payloads in rank order, sums dense f32, divides
 //!    by N, and **requantizes** the mean at salt 0 — every rank applies
-//!    the identical dequant–reduce–requant, so replica states re-converge
-//!    bit-identically each step. The last rank to collect clears the
-//!    ring for the next round.
+//!    the identical dequant–reduce–requant, so replica states
+//!    re-converge bit-identically each step.
 //!
 //! Under `fp32` comms the encode/decode legs are exact passthrough and
 //! the mean of two identical states is bit-identical to either (the
@@ -38,31 +54,40 @@
 //! ## Failure teardown
 //!
 //! A replica that dies — divergence abort, I/O error, panic — must not
-//! strand peers on the barrier. [`Exchange::fail`] (called by
+//! strand peers on the collective. [`Exchange::fail`] (called by
 //! [`run_replicas`] on any worker error, and by a drop-guard on panic)
-//! poisons the ring; every waiter, and every later arrival, returns a
-//! loud [`Error`] instead of hanging.
+//! tears the transport down; every waiter, and every later arrival,
+//! returns a loud [`Error`] carrying the transport's `ABORT_PREFIX`
+//! instead of hanging. The same contract holds across processes: a
+//! dead socket peer aborts every survivor within the read timeout.
 //!
 //! ## Lock order
 //!
-//! Two mutexes, one global order: `ring` (barrier state) strictly before
-//! `comms` (traffic meter). No function acquires `comms` before `ring`.
-//! The order is enforced twice: statically by `dsq lint`'s
-//! interprocedural `lock_discipline` rule (with `blocking_under_lock`
-//! refusing channel/join/sleep/File-I/O parks while either is held),
-//! and dynamically by the debug-build lock-order witness — both mutexes
-//! are [`WitnessedMutex`]es ranked `ring` (10) < `comms` (20), so every
-//! test run asserts the declared order per thread at runtime.
+//! One global order across the exchange stack: the mem transport's
+//! `ring` mutex (barrier state, witness rank 10) strictly before this
+//! module's `comms` mutex (traffic meter, witness rank 20), with the
+//! socket transport's `failed` flag (rank 15) between them. No
+//! function acquires `comms` before `ring`. The order is enforced
+//! twice: statically by `dsq lint`'s interprocedural `lock_discipline`
+//! rule (with `blocking_under_lock` refusing channel/join/sleep/File
+//! and socket I/O parks while any lock is held), and dynamically by
+//! the debug-build lock-order witness — all three are
+//! [`WitnessedMutex`]es, so every test run asserts the declared order
+//! per thread at runtime.
+//!
+//! [`WitnessedMutex`]: crate::util::ordwitness::WitnessedMutex
 
 use std::io::Read;
-use std::sync::{Arc, Condvar};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::model::ModelState;
-use crate::util::ordwitness::{self, WitnessedMutex};
 use crate::quant::{stash_stream, Codec, FormatSpec, PackedTensor};
 use crate::runtime::HostTensor;
+use crate::util::ordwitness::{self, WitnessedMutex};
 use crate::{Error, Result};
 
+use super::transport::{MemTransport, Transport, ABORT_PREFIX};
 use super::TrafficMeter;
 
 /// How a replica participates in the sharded batch stream.
@@ -140,19 +165,7 @@ impl CommsTraffic {
     }
 }
 
-/// Barrier state for the single in-flight round.
-struct Ring {
-    /// One posted frame per rank; a full vector completes the round.
-    posts: Vec<Option<Arc<Vec<u8>>>>,
-    /// Ranks that have collected the current round's frames.
-    taken: usize,
-    /// Completed rounds (diagnostics only).
-    round: u64,
-    /// Set once by [`Exchange::fail`]; every wait exits with an error.
-    failed: Option<String>,
-}
-
-/// Aggregate comms meter, shared by all ranks.
+/// Aggregate comms meter, shared by all ranks of this process.
 #[derive(Default)]
 struct Comms {
     meter: TrafficMeter,
@@ -160,20 +173,13 @@ struct Comms {
 }
 
 struct Core {
-    n: usize,
     spec: FormatSpec,
-    /// Post board, rank [`ordwitness::RANK_EXCHANGE_RING`] — the global
-    /// order `ring` before `comms` is asserted statically by
-    /// `lock_discipline` and dynamically by the debug-build witness.
-    ring: WitnessedMutex<Ring>,
-    ring_cv: Condvar,
+    /// How payloads move between ranks. The mem transport's `ring`
+    /// mutex sorts strictly before `comms` in the global lock order.
+    transport: Arc<dyn Transport>,
+    /// Traffic meter, rank [`ordwitness::RANK_EXCHANGE_COMMS`] — always
+    /// acquired with no other exchange lock held.
     comms: WitnessedMutex<Comms>,
-}
-
-const ABORT_PREFIX: &str = "replica exchange aborted";
-
-fn abort_error(msg: &str) -> Error {
-    Error::Config(format!("{ABORT_PREFIX}: {msg}"))
 }
 
 /// Minor-axis length convention for box-based formats — the stash
@@ -191,31 +197,30 @@ pub struct Exchange {
 }
 
 impl Exchange {
+    /// The default in-process exchange over [`MemTransport`].
     pub fn new(spec: FormatSpec, replicas: usize) -> Result<Exchange> {
-        if replicas == 0 {
-            return Err(Error::Config("replica exchange needs at least 1 replica".into()));
-        }
-        Ok(Exchange {
+        Ok(Self::with_transport(spec, Arc::new(MemTransport::new(replicas)?)))
+    }
+
+    /// An exchange over any transport — the multi-process seam: hand in
+    /// a connected `SocketTransport` and the same collective runs
+    /// across OS processes.
+    pub fn with_transport(spec: FormatSpec, transport: Arc<dyn Transport>) -> Exchange {
+        Exchange {
             core: Arc::new(Core {
-                n: replicas,
                 spec,
-                ring: WitnessedMutex::new(
-                    ordwitness::RANK_EXCHANGE_RING,
-                    "exchange.ring",
-                    Ring { posts: vec![None; replicas], taken: 0, round: 0, failed: None },
-                ),
-                ring_cv: Condvar::new(),
+                transport,
                 comms: WitnessedMutex::new(
                     ordwitness::RANK_EXCHANGE_COMMS,
                     "exchange.comms",
                     Comms::default(),
                 ),
             }),
-        })
+        }
     }
 
     pub fn replicas(&self) -> usize {
-        self.core.n
+        self.core.transport.replicas()
     }
 
     pub fn spec(&self) -> FormatSpec {
@@ -224,24 +229,20 @@ impl Exchange {
 
     /// The per-rank participant handle.
     pub fn handle(&self, rank: usize) -> Result<ReplicaExchange> {
-        if rank >= self.core.n {
+        let n = self.core.transport.replicas();
+        if rank >= n {
             return Err(Error::Config(format!(
-                "replica rank {rank} out of range (replicas = {})",
-                self.core.n
+                "replica rank {rank} out of range (replicas = {n})"
             )));
         }
-        Ok(ReplicaExchange { core: Arc::clone(&self.core), rank })
+        Ok(ReplicaExchange { core: Arc::clone(&self.core), rank, seq: AtomicU64::new(0) })
     }
 
-    /// Tear the exchange down: every blocked or future barrier call on
-    /// any rank returns an error naming `msg`. First failure wins;
+    /// Tear the exchange down: every blocked or future collective call
+    /// on any rank returns an error naming `msg`. First failure wins;
     /// idempotent after that.
     pub fn fail(&self, msg: &str) {
-        let mut ring = self.core.ring.lock();
-        if ring.failed.is_none() {
-            ring.failed = Some(msg.to_string());
-        }
-        self.core.ring_cv.notify_all();
+        self.core.transport.fail(msg);
     }
 
     /// Aggregate comms traffic across all ranks so far.
@@ -249,15 +250,16 @@ impl Exchange {
         let comms = self.core.comms.lock();
         CommsTraffic {
             spec: self.core.spec,
-            replicas: self.core.n,
+            replicas: self.core.transport.replicas(),
             meter: comms.meter,
             allowance_bits: comms.allowance_bits,
         }
     }
 
-    /// Completed all-reduce rounds.
+    /// Completed all-reduce rounds, as visible to this process's
+    /// transport.
     pub fn rounds(&self) -> u64 {
-        self.core.ring.lock().round
+        self.core.transport.rounds()
     }
 }
 
@@ -265,6 +267,9 @@ impl Exchange {
 pub struct ReplicaExchange {
     core: Arc<Core>,
     rank: usize,
+    /// Per-handle frame counter — all ranks advance it in lockstep, so
+    /// self-describing transports can detect desynchronized rounds.
+    seq: AtomicU64,
 }
 
 impl ReplicaExchange {
@@ -273,7 +278,7 @@ impl ReplicaExchange {
     }
 
     pub fn replicas(&self) -> usize {
-        self.core.n
+        self.core.transport.replicas()
     }
 
     pub fn spec(&self) -> FormatSpec {
@@ -285,65 +290,38 @@ impl ReplicaExchange {
         Exchange { core: Arc::clone(&self.core) }
     }
 
-    /// Post one frame and block until every rank's frame for this round
-    /// is in; returns all N frames in rank order. Errors (never hangs)
-    /// if any rank tore the exchange down.
+    /// One collective round through the transport.
+    fn post_round(&self, step: u64, tensors: u32, payload: Vec<u8>) -> Result<Vec<Arc<Vec<u8>>>> {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.core.transport.post_collect(self.rank, step, seq, tensors, payload)
+    }
+
+    /// Post one raw payload and block until every rank's payload for
+    /// this round is in; returns all N in rank order. Errors (never
+    /// hangs) if any rank tore the exchange down.
     pub fn all_reduce_bytes(&self, frame: Vec<u8>) -> Result<Vec<Arc<Vec<u8>>>> {
-        let core = &*self.core;
-        let mut ring = core.ring.lock();
-        // Wait for this rank's slot from the previous round to drain —
-        // rounds never overlap, so one slot vector is the whole ring.
-        loop {
-            if let Some(msg) = &ring.failed {
-                return Err(abort_error(msg));
-            }
-            if ring.posts[self.rank].is_none() {
-                break;
-            }
-            ring = ring.wait(&core.ring_cv);
-        }
-        ring.posts[self.rank] = Some(Arc::new(frame));
-        core.ring_cv.notify_all();
-        loop {
-            if let Some(msg) = &ring.failed {
-                return Err(abort_error(msg));
-            }
-            if ring.posts.iter().all(Option::is_some) {
-                break;
-            }
-            ring = ring.wait(&core.ring_cv);
-        }
-        let all: Vec<Arc<Vec<u8>>> = ring.posts.iter().flatten().map(Arc::clone).collect();
-        ring.taken += 1;
-        if ring.taken == core.n {
-            for p in ring.posts.iter_mut() {
-                *p = None;
-            }
-            ring.taken = 0;
-            ring.round += 1;
-            core.ring_cv.notify_all();
-        }
-        Ok(all)
+        self.post_round(0, 0, frame)
     }
 
     /// See [`Exchange::fail`].
     pub fn fail(&self, msg: &str) {
-        self.exchange().fail(msg);
+        self.core.transport.fail(msg);
     }
 
     /// The dequant–reduce–requant all-reduce over one post-step state:
-    /// encode (rank-salted), barrier-exchange, decode all ranks, mean in
+    /// encode (rank-salted), post-and-collect, decode all ranks, mean in
     /// rank order, requantize the mean at salt 0, write back. Returns
     /// the mean loss. With 1 replica this is a strict no-op so the
     /// default path stays bit-for-bit.
     pub fn all_reduce_state(&self, state: &mut ModelState, loss: f32) -> Result<f32> {
-        if self.core.n == 1 {
+        let n_replicas = self.core.transport.replicas();
+        if n_replicas == 1 {
             return Ok(loss);
         }
         let spec = self.core.spec;
         let step = state.step;
 
-        // Encode this rank's contribution as one frame of v2 records.
+        // Encode this rank's contribution as one payload of v2 records.
         let mut frame: Vec<u8> = Vec::new();
         let mut tx_payload = 0u64;
         let mut modeled_bits = 0f64;
@@ -367,9 +345,12 @@ impl ReplicaExchange {
             }
         }
         frame.extend_from_slice(&loss.to_le_bytes());
-        let frame_bytes = frame.len() as u64;
+        // The transport knows its envelope: the mem ring ships bare
+        // payloads, the socket path adds the wire header.
+        let frame_bytes = self.core.transport.frame_bytes(frame.len());
 
-        let frames = self.all_reduce_bytes(frame)?;
+        let ntensors = (state.params.len() * 3) as u32;
+        let frames = self.post_round(step, ntensors, frame)?;
 
         // Decode every rank in rank order (own frame included: peers see
         // this rank through the wire, so this rank must too) and sum.
@@ -419,7 +400,7 @@ impl ReplicaExchange {
 
         // Mean + requantize at salt 0 — identical on every rank, so the
         // replica states re-converge bit-for-bit each round.
-        let n = self.core.n as f32;
+        let n = n_replicas as f32;
         let nparams = state.params.len();
         for (g, group) in
             [&mut state.params, &mut state.m, &mut state.v].into_iter().enumerate()
@@ -435,8 +416,9 @@ impl ReplicaExchange {
             }
         }
 
-        // Meter outside the ring lock; `ring` before `comms` everywhere.
-        let rx_tensors = (self.core.n - 1) as f64;
+        // Meter after the collective; the transport's ring mutex (if
+        // any) is long released, so `ring` before `comms` holds.
+        let rx_tensors = (n_replicas - 1) as f64;
         self.note_round(
             tx_payload,
             rx_payload,
@@ -485,10 +467,11 @@ impl Drop for AbortGuard {
 }
 
 /// Run `run(rank, handle)` on `replicas` scoped threads sharing one
-/// exchange. Any worker error (or panic) tears the exchange down so
-/// peers blocked on the barrier error out instead of hanging; the
-/// originating failure is preferred over secondary barrier aborts when
-/// reporting. On success, rank 0's result is returned.
+/// in-memory exchange. Any worker error (or panic) tears the exchange
+/// down so peers blocked on the collective error out instead of
+/// hanging; the originating failure is preferred over secondary
+/// barrier aborts when reporting. On success, rank 0's result is
+/// returned.
 pub fn run_replicas<R: Send>(
     replicas: usize,
     spec: FormatSpec,

@@ -52,14 +52,19 @@
 //! prints.
 //!
 //! Since PR 7 the v2 packed-record layout is also a *wire* format: the
-//! [`exchange`] submodule runs an in-process all-reduce between N
-//! replica sessions, posting whole states as frames of packed records
-//! over an in-memory ring and metering the exchanged bytes on the
-//! meter's `comms_*` channels (tx = own encoded payloads, rx = peer
-//! payloads decoded) — the interconnect-scale mirror of the DRAM-scale
-//! stash channels above, judged against the same
-//! `container_bits()`-modeled number via [`CommsTraffic`]. See the
-//! `exchange` module docs for the barrier protocol, the replica
+//! [`exchange`] submodule runs an all-reduce between N replica
+//! sessions, posting whole states as frames of packed records and
+//! metering the exchanged bytes on the meter's `comms_*` channels
+//! (tx = own encoded payloads, rx = peer payloads decoded) — the
+//! interconnect-scale mirror of the DRAM-scale stash channels above,
+//! judged against the same `container_bits()`-modeled number via
+//! [`CommsTraffic`]. Since the multi-process refactor that exchange is
+//! layered: [`wire`] owns the versioned `DSQWIRE1` frame envelope,
+//! [`transport`] owns movement ([`MemTransport`]'s in-memory ring —
+//! the default, bit-identical to PR 7 — and [`SocketTransport`]'s
+//! multi-process Unix/TCP path behind `--transport socket:<addr>`),
+//! and [`exchange`] keeps only the transport-agnostic collective. See
+//! the `exchange` module docs for the round protocol, the replica
 //! SR-seeding contract, and the failure-teardown semantics.
 
 use std::collections::HashMap;
@@ -77,11 +82,18 @@ use crate::util::json::Json;
 use crate::{Error, Result};
 
 pub mod exchange;
+pub mod transport;
+pub mod wire;
 
 pub use exchange::{
     audit_observed_comms, measure_comms_round, measure_state_comms, run_replicas, CommsTraffic,
     Exchange, ReplicaExchange, ReplicaShard,
 };
+pub use transport::{
+    MemTransport, SocketHub, SocketTransport, Transport, TransportSpec, ABORT_PREFIX,
+    TRANSPORT_GRAMMAR,
+};
+pub use wire::WireFrame;
 
 /// Grammar of `--stash-budget` values, quoted by every parse error.
 pub const BUDGET_GRAMMAR: &str = "<bytes> | <n>k[i]b | <n>m[i]b | <n>g[i]b | unlimited";

@@ -1,0 +1,958 @@
+//! Replica transports: how exchange frames move between ranks.
+//!
+//! [`super::exchange`] owns the *collective* (dequant–reduce–requant
+//! all-reduce); this module owns the *movement*. The seam is the
+//! [`Transport`] trait — post-and-collect semantics, deliberately
+//! `send`/`recv`/`barrier`-free: one call posts this rank's frame
+//! payload and blocks until every rank's payload for the round is
+//! available, returning all of them in rank order. Peer failure is
+//! surfaced as an `Err` on **every** peer (the PR 7 no-deadlock
+//! teardown contract): a transport may block, but it may never hang
+//! past its timeouts once any rank has died.
+//!
+//! Two implementations:
+//!
+//! * [`MemTransport`] (`--transport mem`, the default) — the original
+//!   in-process ring, moved here verbatim from `exchange.rs`: one
+//!   post slot per rank, a round counter, and a condvar under the
+//!   `ring` mutex (witness rank `ring` 10 < `comms` 20). Payload
+//!   bytes are handed over as-is — no envelope — so the default path
+//!   is bit- and meter-identical to the pre-refactor exchange.
+//! * [`SocketTransport`] (`--transport socket:<addr>`) — N real OS
+//!   processes over Unix-domain (`socket:/path.sock`) or TCP-loopback
+//!   (`socket:host:port`) streams, speaking [`super::wire`]
+//!   `DSQWIRE1` frames through a central [`SocketHub`] (bound by the
+//!   orchestrating process, rank 0's parent). Handshake: each worker
+//!   connects (with retry up to a timeout), sends a `HELLO rank
+//!   replicas` control frame, and receives a CONFIG control frame
+//!   carrying the orchestrator's opaque config payload. Each round
+//!   the hub reads one data frame per rank (in rank order) and
+//!   broadcasts all N back to every connection. A worker that dies
+//!   mid-round — torn frame, EOF, read timeout, or an explicit abort
+//!   frame from [`Transport::fail`] — makes the hub broadcast an
+//!   abort frame to every survivor, so all peers error out with the
+//!   exchange's `ABORT_PREFIX` within the read timeout instead of
+//!   hanging. Clean shutdown is EOF at a frame boundary on every
+//!   connection.
+//!
+//! ## Locking
+//!
+//! Socket I/O must never happen under a held lock (`dsq lint`'s
+//! `blocking_under_lock` rule counts stream reads/writes, accepts,
+//! and connects as blocking ops). [`SocketTransport`] therefore keeps
+//! its only mutex — the `failed` flag, witness rank
+//! [`ordwitness::RANK_TRANSPORT_SOCKET`] (15) — confined to the
+//! `check_failed`/`set_failed` helpers; `post_collect` itself holds
+//! nothing across the wire, and the hub is single-threaded and
+//! lock-free by construction.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar};
+use std::time::{Duration, Instant};
+
+use crate::util::ordwitness::{self, WitnessedMutex};
+use crate::{Error, Result};
+
+use super::wire::{WireFrame, HEADER_LEN};
+
+/// Every barrier abort on every rank carries this prefix, so
+/// orchestrators can prefer the originating failure over the
+/// secondary teardown errors it caused.
+pub const ABORT_PREFIX: &str = "replica exchange aborted";
+
+pub(crate) fn abort_error(msg: &str) -> Error {
+    Error::Config(format!("{ABORT_PREFIX}: {msg}"))
+}
+
+/// The valid `--transport` grammar, quoted by parse errors.
+pub const TRANSPORT_GRAMMAR: &str = "mem | socket:<path.sock> | socket:<host>:<port>";
+
+/// Default wait for a worker to reach the hub (and the hub to see all
+/// workers): covers process spawn + connect retry.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Default cap on any single blocking read once connected — the bound
+/// on how long a peer failure can take to surface.
+pub const READ_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Parsed `--transport` flag value.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TransportSpec {
+    /// The in-process ring (default).
+    Mem,
+    /// Multi-process socket transport; the address is a Unix socket
+    /// path (contains `/`) or a TCP `host:port`.
+    Socket(String),
+}
+
+impl TransportSpec {
+    /// Parse a `--transport` value, naming the offending token and the
+    /// valid grammar on error (the CLI prepends the flag name).
+    pub fn parse(s: &str) -> Result<TransportSpec> {
+        let t = s.trim();
+        if t == "mem" {
+            return Ok(TransportSpec::Mem);
+        }
+        if let Some(addr) = t.strip_prefix("socket:") {
+            if addr.is_empty() {
+                return Err(Error::Config(format!(
+                    "\"{s}\" names no address after \"socket:\" (valid: {TRANSPORT_GRAMMAR})"
+                )));
+            }
+            return Ok(TransportSpec::Socket(addr.to_string()));
+        }
+        Err(Error::Config(format!(
+            "unrecognized transport \"{s}\" (valid: {TRANSPORT_GRAMMAR})"
+        )))
+    }
+
+    pub fn is_socket(&self) -> bool {
+        matches!(self, TransportSpec::Socket(_))
+    }
+}
+
+impl fmt::Display for TransportSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportSpec::Mem => write!(f, "mem"),
+            TransportSpec::Socket(addr) => write!(f, "socket:{addr}"),
+        }
+    }
+}
+
+/// How exchange frames move between ranks. One call = one collective
+/// round: post this rank's payload, block until every rank's payload
+/// for the round is in, return all of them in rank order. Any peer
+/// failure must surface as `Err` on every rank (never a hang).
+pub trait Transport: Send + Sync {
+    /// Total replica count this transport connects.
+    fn replicas(&self) -> usize;
+
+    /// Post `payload` as `rank`'s frame for this round and collect all
+    /// ranks' payloads in rank order. `step`/`seq`/`tensors` describe
+    /// the frame for self-describing wires (the in-memory ring ignores
+    /// them); all ranks proceed in lockstep, so every rank passes the
+    /// same values each round.
+    fn post_collect(
+        &self,
+        rank: usize,
+        step: u64,
+        seq: u64,
+        tensors: u32,
+        payload: Vec<u8>,
+    ) -> Result<Vec<Arc<Vec<u8>>>>;
+
+    /// Tear the transport down: every blocked or future
+    /// `post_collect` on any rank returns an error naming `msg`.
+    /// First failure wins; idempotent after that.
+    fn fail(&self, msg: &str);
+
+    /// Completed collective rounds, as visible to this transport
+    /// instance (global for the ring, per-process for sockets).
+    fn rounds(&self) -> u64;
+
+    /// Metered on-the-wire bytes for a frame with `payload_len`
+    /// payload bytes. The ring ships bare payloads; the socket path
+    /// adds the wire header.
+    fn frame_bytes(&self, payload_len: usize) -> u64 {
+        payload_len as u64
+    }
+}
+
+/// Barrier state for the single in-flight round of the in-memory ring.
+struct Ring {
+    /// One posted frame per rank; a full vector completes the round.
+    posts: Vec<Option<Arc<Vec<u8>>>>,
+    /// Ranks that have collected the current round's frames.
+    taken: usize,
+    /// Completed rounds (diagnostics only).
+    round: u64,
+    /// Set once by [`Transport::fail`]; every wait exits with an error.
+    failed: Option<String>,
+}
+
+/// The in-process ring: one slot per rank under a single mutex +
+/// condvar. This is the pre-refactor exchange barrier verbatim —
+/// payloads are reference-counted and never copied, so `--transport
+/// mem` is bit- and meter-identical to the fused implementation.
+pub struct MemTransport {
+    n: usize,
+    /// Post board, rank [`ordwitness::RANK_EXCHANGE_RING`] — the
+    /// global order `ring` before `comms` is asserted statically by
+    /// `lock_discipline` and dynamically by the debug-build witness.
+    ring: WitnessedMutex<Ring>,
+    ring_cv: Condvar,
+}
+
+impl MemTransport {
+    pub fn new(replicas: usize) -> Result<MemTransport> {
+        if replicas == 0 {
+            return Err(Error::Config("replica exchange needs at least 1 replica".into()));
+        }
+        Ok(MemTransport {
+            n: replicas,
+            ring: WitnessedMutex::new(
+                ordwitness::RANK_EXCHANGE_RING,
+                "exchange.ring",
+                Ring { posts: vec![None; replicas], taken: 0, round: 0, failed: None },
+            ),
+            ring_cv: Condvar::new(),
+        })
+    }
+}
+
+impl Transport for MemTransport {
+    fn replicas(&self) -> usize {
+        self.n
+    }
+
+    fn post_collect(
+        &self,
+        rank: usize,
+        _step: u64,
+        _seq: u64,
+        _tensors: u32,
+        payload: Vec<u8>,
+    ) -> Result<Vec<Arc<Vec<u8>>>> {
+        if rank >= self.n {
+            return Err(Error::Config(format!(
+                "replica rank {rank} out of range (replicas = {})",
+                self.n
+            )));
+        }
+        let mut ring = self.ring.lock();
+        // Wait for this rank's slot from the previous round to drain —
+        // rounds never overlap, so one slot vector is the whole ring.
+        loop {
+            if let Some(msg) = &ring.failed {
+                return Err(abort_error(msg));
+            }
+            if ring.posts[rank].is_none() {
+                break;
+            }
+            ring = ring.wait(&self.ring_cv);
+        }
+        ring.posts[rank] = Some(Arc::new(payload));
+        self.ring_cv.notify_all();
+        loop {
+            if let Some(msg) = &ring.failed {
+                return Err(abort_error(msg));
+            }
+            if ring.posts.iter().all(Option::is_some) {
+                break;
+            }
+            ring = ring.wait(&self.ring_cv);
+        }
+        let all: Vec<Arc<Vec<u8>>> = ring.posts.iter().flatten().map(Arc::clone).collect();
+        ring.taken += 1;
+        if ring.taken == self.n {
+            for p in ring.posts.iter_mut() {
+                *p = None;
+            }
+            ring.taken = 0;
+            ring.round += 1;
+            self.ring_cv.notify_all();
+        }
+        Ok(all)
+    }
+
+    fn fail(&self, msg: &str) {
+        let mut ring = self.ring.lock();
+        if ring.failed.is_none() {
+            ring.failed = Some(msg.to_string());
+        }
+        self.ring_cv.notify_all();
+    }
+
+    fn rounds(&self) -> u64 {
+        self.ring.lock().round
+    }
+}
+
+/// A connected stream of either flavor. `&Stream` implements
+/// `Read`/`Write` (delegating to `&UnixStream`/`&TcpStream`), so the
+/// transport can do I/O through a shared reference without a lock.
+enum Stream {
+    Unix(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl Stream {
+    /// Connect to `addr` (Unix path if it contains `/`, else TCP),
+    /// retrying until `timeout` — workers race the hub's bind.
+    fn connect(addr: &str, timeout: Duration) -> Result<Stream> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let attempt = if addr.contains('/') {
+                UnixStream::connect(addr).map(Stream::Unix)
+            } else {
+                TcpStream::connect(addr).map(Stream::Tcp)
+            };
+            match attempt {
+                Ok(s) => return Ok(s),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::Config(format!(
+                            "socket transport: connecting to {addr} timed out \
+                             after {timeout:?}: {e}"
+                        )));
+                    }
+                    ordwitness::assert_lock_free("retrying a socket connect");
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        }
+    }
+
+    fn set_read_timeout(&self, d: Duration) -> Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_read_timeout(Some(d))?,
+            Stream::Tcp(s) => s.set_read_timeout(Some(d))?,
+        }
+        Ok(())
+    }
+
+    fn set_blocking(&self) -> Result<()> {
+        match self {
+            Stream::Unix(s) => s.set_nonblocking(false)?,
+            Stream::Tcp(s) => s.set_nonblocking(false)?,
+        }
+        Ok(())
+    }
+
+    fn shutdown(&self) {
+        let _ = match self {
+            Stream::Unix(s) => s.shutdown(Shutdown::Both),
+            Stream::Tcp(s) => s.shutdown(Shutdown::Both),
+        };
+    }
+}
+
+impl Read for &Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match *self {
+            Stream::Unix(ref s) => Read::read(&mut &*s, buf),
+            Stream::Tcp(ref s) => Read::read(&mut &*s, buf),
+        }
+    }
+}
+
+impl Write for &Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match *self {
+            Stream::Unix(ref s) => Write::write(&mut &*s, buf),
+            Stream::Tcp(ref s) => Write::write(&mut &*s, buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match *self {
+            Stream::Unix(ref s) => Write::flush(&mut &*s),
+            Stream::Tcp(ref s) => Write::flush(&mut &*s),
+        }
+    }
+}
+
+enum Listener {
+    Unix(UnixListener),
+    Tcp(TcpListener),
+}
+
+/// The worker-side socket transport: one connected stream to the hub.
+/// One process = one rank = one instance; `post_collect` validates
+/// the caller's rank against the connected one.
+pub struct SocketTransport {
+    rank: usize,
+    n: usize,
+    stream: Stream,
+    /// First failure message, witness rank
+    /// [`ordwitness::RANK_TRANSPORT_SOCKET`]. The only lock in this
+    /// type; confined to `check_failed`/`set_failed` so no socket I/O
+    /// ever happens while it is held.
+    failed: WitnessedMutex<Option<String>>,
+    completed: AtomicU64,
+}
+
+impl SocketTransport {
+    /// Connect to the hub at `addr` as `rank` of `replicas`, with the
+    /// default timeouts. Returns the transport plus the orchestrator's
+    /// opaque CONFIG payload from the handshake.
+    pub fn connect(addr: &str, rank: usize, replicas: usize) -> Result<(SocketTransport, Vec<u8>)> {
+        Self::connect_with_timeouts(addr, rank, replicas, CONNECT_TIMEOUT, READ_TIMEOUT)
+    }
+
+    pub fn connect_with_timeouts(
+        addr: &str,
+        rank: usize,
+        replicas: usize,
+        connect_timeout: Duration,
+        read_timeout: Duration,
+    ) -> Result<(SocketTransport, Vec<u8>)> {
+        if replicas < 2 {
+            return Err(Error::Config(format!(
+                "socket transport needs at least 2 replicas (got {replicas})"
+            )));
+        }
+        if rank >= replicas {
+            return Err(Error::Config(format!(
+                "replica rank {rank} out of range (replicas = {replicas})"
+            )));
+        }
+        let stream = Stream::connect(addr, connect_timeout)?;
+        stream.set_read_timeout(read_timeout)?;
+        WireFrame::control(format!("HELLO {rank} {replicas}").into_bytes())
+            .write_into(&mut &stream)?;
+        // CONFIG arrives once every rank has joined; an abort frame here
+        // means the hub rejected the handshake.
+        let cfg = WireFrame::read_from(&mut &stream)?;
+        if cfg.is_abort() {
+            return Err(abort_error(&cfg.abort_message()));
+        }
+        if !cfg.is_control() {
+            return Err(Error::Config(format!(
+                "socket transport: expected a CONFIG frame, got sender rank {}",
+                cfg.header.rank
+            )));
+        }
+        Ok((
+            SocketTransport {
+                rank,
+                n: replicas,
+                stream,
+                failed: WitnessedMutex::new(
+                    ordwitness::RANK_TRANSPORT_SOCKET,
+                    "transport.socket.failed",
+                    None,
+                ),
+                completed: AtomicU64::new(0),
+            },
+            cfg.payload,
+        ))
+    }
+
+    /// The only reader of the `failed` lock; never called with I/O in
+    /// flight so the lock is never held across a blocking op.
+    fn check_failed(&self) -> Result<()> {
+        let failed = self.failed.lock();
+        match &*failed {
+            Some(msg) => Err(abort_error(msg)),
+            None => Ok(()),
+        }
+    }
+
+    /// The only writer of the `failed` lock; first failure wins.
+    fn set_failed(&self, msg: &str) {
+        let mut failed = self.failed.lock();
+        if failed.is_none() {
+            *failed = Some(msg.to_string());
+        }
+    }
+}
+
+impl Transport for SocketTransport {
+    fn replicas(&self) -> usize {
+        self.n
+    }
+
+    fn post_collect(
+        &self,
+        rank: usize,
+        step: u64,
+        seq: u64,
+        tensors: u32,
+        payload: Vec<u8>,
+    ) -> Result<Vec<Arc<Vec<u8>>>> {
+        if rank != self.rank {
+            return Err(Error::Config(format!(
+                "socket transport is connected as rank {} but was asked to post as rank {rank}",
+                self.rank
+            )));
+        }
+        self.check_failed()?;
+        ordwitness::assert_lock_free("posting a frame on the socket transport");
+        let frame = WireFrame::data(rank as u32, step, seq, tensors, payload);
+        if let Err(e) = frame.write_into(&mut &self.stream) {
+            let msg = format!("replica {rank} lost the hub mid-post: {e}");
+            self.set_failed(&msg);
+            return Err(abort_error(&msg));
+        }
+        // The hub echoes every rank's frame back in rank order; our own
+        // comes through the wire too, so all ranks decode identical bytes.
+        let mut all: Vec<Arc<Vec<u8>>> = Vec::with_capacity(self.n);
+        for r in 0..self.n {
+            let got = match WireFrame::read_from(&mut &self.stream) {
+                Ok(f) => f,
+                Err(e) => {
+                    let msg = format!("replica {rank} lost the hub mid-collect: {e}");
+                    self.set_failed(&msg);
+                    return Err(abort_error(&msg));
+                }
+            };
+            if got.is_abort() {
+                let msg = got.abort_message();
+                self.set_failed(&msg);
+                return Err(abort_error(&msg));
+            }
+            if got.header.rank as usize != r || got.header.step != step || got.header.seq != seq {
+                let msg = format!(
+                    "out-of-order frame: got (rank {}, step {}, seq {}), \
+                     expected (rank {r}, step {step}, seq {seq})",
+                    got.header.rank, got.header.step, got.header.seq
+                );
+                self.set_failed(&msg);
+                return Err(abort_error(&msg));
+            }
+            all.push(Arc::new(got.payload));
+        }
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        Ok(all)
+    }
+
+    fn fail(&self, msg: &str) {
+        self.set_failed(msg);
+        // Best effort: tell the hub why, then sever the stream so peers
+        // unblock even if the abort frame never lands.
+        let _ = WireFrame::abort(msg).write_into(&mut &self.stream);
+        self.stream.shutdown();
+    }
+
+    fn rounds(&self) -> u64 {
+        self.completed.load(Ordering::Relaxed)
+    }
+
+    fn frame_bytes(&self, payload_len: usize) -> u64 {
+        (HEADER_LEN + payload_len) as u64
+    }
+}
+
+/// The hub end of the socket transport: bound by the orchestrating
+/// process, it accepts one connection per rank, broadcasts the CONFIG
+/// payload, then relays rounds until every worker shuts down cleanly
+/// (EOF at a frame boundary) or any worker fails (abort broadcast to
+/// all survivors). Single-threaded and lock-free; run [`serve`] on a
+/// dedicated thread.
+///
+/// [`serve`]: SocketHub::serve
+pub struct SocketHub {
+    listener: Listener,
+    addr: String,
+    n: usize,
+    config: Vec<u8>,
+    accept_timeout: Duration,
+    read_timeout: Duration,
+    unix_path: Option<String>,
+}
+
+impl SocketHub {
+    /// Bind on `addr` (Unix path if it contains `/`, else TCP — use
+    /// port 0 to let the OS pick). `config` is broadcast verbatim to
+    /// every worker once all have joined.
+    pub fn bind(addr: &str, replicas: usize, config: Vec<u8>) -> Result<SocketHub> {
+        if replicas < 2 {
+            return Err(Error::Config(format!(
+                "socket transport needs at least 2 replicas (got {replicas})"
+            )));
+        }
+        let (listener, addr, unix_path) = if addr.contains('/') {
+            // A stale socket file from a killed run blocks bind; it is
+            // ours by construction, so clear it.
+            let _ = std::fs::remove_file(addr);
+            let l = UnixListener::bind(addr)?;
+            l.set_nonblocking(true)?;
+            (Listener::Unix(l), addr.to_string(), Some(addr.to_string()))
+        } else {
+            let l = TcpListener::bind(addr)?;
+            l.set_nonblocking(true)?;
+            let resolved = l.local_addr()?.to_string();
+            (Listener::Tcp(l), resolved, None)
+        };
+        Ok(SocketHub {
+            listener,
+            addr,
+            n: replicas,
+            config,
+            accept_timeout: CONNECT_TIMEOUT,
+            read_timeout: READ_TIMEOUT,
+            unix_path,
+        })
+    }
+
+    /// The bound address with any OS-assigned TCP port resolved —
+    /// what workers should `--connect` to.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn set_timeouts(&mut self, accept: Duration, read: Duration) {
+        self.accept_timeout = accept;
+        self.read_timeout = read;
+    }
+
+    /// Accept one connection, polling the non-blocking listener until
+    /// `deadline`.
+    fn accept_one(&self, deadline: Instant) -> Result<Stream> {
+        loop {
+            let got = match &self.listener {
+                Listener::Unix(l) => match l.accept() {
+                    Ok((s, _)) => Some(Stream::Unix(s)),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                    Err(e) => return Err(Error::Io(e)),
+                },
+                Listener::Tcp(l) => match l.accept() {
+                    Ok((s, _)) => Some(Stream::Tcp(s)),
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                    Err(e) => return Err(Error::Io(e)),
+                },
+            };
+            if let Some(s) = got {
+                s.set_blocking()?;
+                s.set_read_timeout(self.read_timeout)?;
+                return Ok(s);
+            }
+            if Instant::now() >= deadline {
+                return Err(abort_error(&format!(
+                    "hub on {} timed out waiting for workers ({:?})",
+                    self.addr, self.accept_timeout
+                )));
+            }
+            ordwitness::assert_lock_free("waiting for a replica worker to connect");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// Broadcast an abort frame to every live connection and return the
+    /// teardown error — the socket-path twin of poisoning the ring.
+    fn abort_iter<'a>(
+        &self,
+        conns: impl Iterator<Item = &'a Stream>,
+        msg: &str,
+    ) -> Result<u64> {
+        let frame = WireFrame::abort(msg);
+        for c in conns {
+            let _ = frame.write_into(&mut &*c);
+            c.shutdown();
+        }
+        Err(abort_error(msg))
+    }
+
+    /// Validate one HELLO frame against the hub's config and the slots
+    /// already claimed; returns the rank to seat or the abort message.
+    fn claim_slot(
+        &self,
+        pending: &[Option<Stream>],
+        hello: &WireFrame,
+    ) -> std::result::Result<usize, String> {
+        let (rank, replicas) = parse_hello(hello).map_err(|e| e.to_string())?;
+        if replicas != self.n {
+            return Err(format!(
+                "rank {rank} was launched for {replicas} replicas but the hub serves {}",
+                self.n
+            ));
+        }
+        if rank >= self.n {
+            return Err(format!("handshake rank {rank} out of range (replicas = {})", self.n));
+        }
+        if pending[rank].is_some() {
+            return Err(format!("two workers claimed rank {rank}"));
+        }
+        Ok(rank)
+    }
+
+    /// Run the hub to completion: handshake, then relay rounds until
+    /// clean EOF from every rank (returns the completed round count)
+    /// or any failure (abort broadcast to all survivors, `Err`).
+    pub fn serve(self) -> Result<u64> {
+        // Handshake: one HELLO per rank, each claiming a unique slot.
+        let deadline = Instant::now() + self.accept_timeout;
+        let mut pending: Vec<Option<Stream>> = (0..self.n).map(|_| None).collect();
+        let mut accepted = 0usize;
+        while accepted < self.n {
+            let s = match self.accept_one(deadline) {
+                Ok(s) => s,
+                Err(e) => return self.abort_iter(pending.iter().flatten(), &e.to_string()),
+            };
+            let hello = match WireFrame::read_from(&mut &s) {
+                Ok(f) => f,
+                Err(e) => {
+                    let msg = format!("handshake read failed: {e}");
+                    return self
+                        .abort_iter(pending.iter().flatten().chain(std::iter::once(&s)), &msg);
+                }
+            };
+            match self.claim_slot(&pending, &hello) {
+                Ok(rank) => {
+                    pending[rank] = Some(s);
+                    accepted += 1;
+                }
+                Err(msg) => {
+                    return self
+                        .abort_iter(pending.iter().flatten().chain(std::iter::once(&s)), &msg);
+                }
+            }
+        }
+        let conns: Vec<Stream> = pending.into_iter().flatten().collect();
+
+        // Everyone is in: release the workers with the CONFIG payload.
+        let config = WireFrame::control(self.config.clone());
+        for c in &conns {
+            if let Err(e) = config.write_into(&mut &*c) {
+                return self.abort_iter(conns.iter(), &format!("broadcasting CONFIG: {e}"));
+            }
+        }
+
+        // Round loop: read one data frame per rank in rank order, then
+        // broadcast all of them to every rank.
+        let mut rounds = 0u64;
+        loop {
+            let mut frames: Vec<WireFrame> = Vec::with_capacity(self.n);
+            for (r, c) in conns.iter().enumerate() {
+                let got = match WireFrame::read_or_eof(&mut &*c) {
+                    Ok(g) => g,
+                    Err(e) => {
+                        let msg = format!("reading rank {r} in round {rounds}: {e}");
+                        return self.abort_iter(conns.iter(), &msg);
+                    }
+                };
+                let f = match got {
+                    Some(f) => f,
+                    None if r == 0 => {
+                        // Rank 0 closed at a frame boundary: a clean end
+                        // of run iff every other rank is at EOF too.
+                        for (r2, c2) in conns.iter().enumerate().skip(1) {
+                            match WireFrame::read_or_eof(&mut &*c2) {
+                                Ok(None) => {}
+                                Ok(Some(_)) => {
+                                    let msg = format!(
+                                        "replica {r2} posted a frame after rank 0 shut down"
+                                    );
+                                    return self.abort_iter(conns.iter(), &msg);
+                                }
+                                Err(e) => {
+                                    let msg = format!("draining rank {r2} at shutdown: {e}");
+                                    return self.abort_iter(conns.iter(), &msg);
+                                }
+                            }
+                        }
+                        return Ok(rounds);
+                    }
+                    None => {
+                        let msg = format!("replica {r} disconnected mid-round {rounds}");
+                        return self.abort_iter(conns.iter(), &msg);
+                    }
+                };
+                if f.is_abort() {
+                    return self.abort_iter(conns.iter(), &f.abort_message());
+                }
+                if f.header.rank as usize != r {
+                    let msg = format!(
+                        "frame from rank {} arrived on replica {r}'s connection",
+                        f.header.rank
+                    );
+                    return self.abort_iter(conns.iter(), &msg);
+                }
+                frames.push(f);
+            }
+            for c in &conns {
+                for f in &frames {
+                    if let Err(e) = f.write_into(&mut &*c) {
+                        let msg = format!("broadcasting round {rounds}: {e}");
+                        return self.abort_iter(conns.iter(), &msg);
+                    }
+                }
+            }
+            rounds += 1;
+        }
+    }
+}
+
+/// Parse a `HELLO <rank> <replicas>` handshake frame.
+fn parse_hello(f: &WireFrame) -> Result<(usize, usize)> {
+    let text = String::from_utf8_lossy(&f.payload).into_owned();
+    let bad = || Error::Config(format!("socket transport: malformed handshake frame {text:?}"));
+    if !f.is_control() {
+        return Err(bad());
+    }
+    let mut it = text.split_whitespace();
+    if it.next() != Some("HELLO") {
+        return Err(bad());
+    }
+    let rank: usize = it.next().and_then(|t| t.parse().ok()).ok_or_else(bad)?;
+    let replicas: usize = it.next().and_then(|t| t.parse().ok()).ok_or_else(bad)?;
+    Ok((rank, replicas))
+}
+
+impl Drop for SocketHub {
+    fn drop(&mut self) {
+        if let Some(p) = &self.unix_path {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uds_path(tag: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("dsq-transport-{}-{tag}.sock", std::process::id()));
+        p.to_string_lossy().into_owned()
+    }
+
+    fn fast(hub: &mut SocketHub) {
+        hub.set_timeouts(Duration::from_secs(5), Duration::from_secs(5));
+    }
+
+    #[test]
+    fn transport_spec_parse_names_the_token_and_grammar() {
+        assert_eq!(TransportSpec::parse("mem").unwrap(), TransportSpec::Mem);
+        assert_eq!(
+            TransportSpec::parse("socket:/tmp/x.sock").unwrap(),
+            TransportSpec::Socket("/tmp/x.sock".into())
+        );
+        assert!(TransportSpec::parse("socket:127.0.0.1:0").unwrap().is_socket());
+        let e = TransportSpec::parse("carrier-pigeon").unwrap_err().to_string();
+        assert!(e.contains("carrier-pigeon") && e.contains(TRANSPORT_GRAMMAR), "{e}");
+        let e = TransportSpec::parse("socket:").unwrap_err().to_string();
+        assert!(e.contains("socket:") && e.contains(TRANSPORT_GRAMMAR), "{e}");
+        assert_eq!(TransportSpec::Socket("a:1".into()).to_string(), "socket:a:1");
+        assert_eq!(TransportSpec::Mem.to_string(), "mem");
+    }
+
+    #[test]
+    fn mem_transport_posts_and_collects_in_rank_order() {
+        let t = Arc::new(MemTransport::new(2).unwrap());
+        let results: Vec<Vec<Vec<u8>>> = std::thread::scope(|s| {
+            let joins: Vec<_> = (0..2)
+                .map(|rank| {
+                    let t = Arc::clone(&t);
+                    s.spawn(move || {
+                        let all = t.post_collect(rank, 0, 0, 0, vec![rank as u8]).unwrap();
+                        all.iter().map(|b| b.as_ref().clone()).collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().unwrap()).collect()
+        });
+        assert_eq!(results[0], vec![vec![0u8], vec![1u8]]);
+        assert_eq!(results[0], results[1], "every rank collects identical bytes");
+        assert_eq!(t.rounds(), 1);
+        assert!(t.post_collect(5, 0, 0, 0, vec![]).is_err(), "rank must be < replicas");
+        assert_eq!(t.frame_bytes(10), 10, "the ring ships bare payloads");
+        assert!(MemTransport::new(0).is_err());
+    }
+
+    fn socket_round_trip(addr: &str) {
+        let mut hub = SocketHub::bind(addr, 2, b"cfg!".to_vec()).unwrap();
+        fast(&mut hub);
+        let addr = hub.addr().to_string();
+        let hub_j = std::thread::spawn(move || hub.serve());
+        let clients: Vec<_> = (0..2usize)
+            .map(|rank| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let (t, cfg) = SocketTransport::connect(&addr, rank, 2).unwrap();
+                    assert_eq!(cfg, b"cfg!", "CONFIG payload must arrive verbatim");
+                    for round in 0..2u64 {
+                        let all =
+                            t.post_collect(rank, 7, round, 3, vec![rank as u8; 4]).unwrap();
+                        assert_eq!(all.len(), 2);
+                        assert_eq!(*all[0], vec![0u8; 4]);
+                        assert_eq!(*all[1], vec![1u8; 4]);
+                    }
+                    assert_eq!(t.rounds(), 2);
+                    assert_eq!(t.frame_bytes(4), (HEADER_LEN + 4) as u64);
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        assert_eq!(hub_j.join().unwrap().unwrap(), 2, "hub must see both rounds then clean EOF");
+    }
+
+    #[test]
+    fn socket_rounds_trip_over_tcp_loopback() {
+        socket_round_trip("127.0.0.1:0");
+    }
+
+    #[test]
+    fn socket_rounds_trip_over_a_unix_socket() {
+        let path = uds_path("roundtrip");
+        socket_round_trip(&path);
+        assert!(!std::path::Path::new(&path).exists(), "hub drop must clear the socket file");
+    }
+
+    #[test]
+    fn a_dead_socket_peer_aborts_the_survivor_instead_of_hanging() {
+        // The satellite bugfix, socket edition: rank 1 joins the
+        // handshake then dies without posting; rank 0's blocked collect
+        // must error with the teardown prefix, not hang.
+        let mut hub = SocketHub::bind("127.0.0.1:0", 2, Vec::new()).unwrap();
+        fast(&mut hub);
+        let addr = hub.addr().to_string();
+        let hub_j = std::thread::spawn(move || hub.serve());
+        let survivor_addr = addr.clone();
+        let survivor = std::thread::spawn(move || {
+            let (t, _) = SocketTransport::connect(&survivor_addr, 0, 2).unwrap();
+            t.post_collect(0, 0, 0, 0, vec![1, 2, 3]).map(|_| ())
+        });
+        let (dead, _) = SocketTransport::connect(&addr, 1, 2).unwrap();
+        drop(dead);
+        let err = survivor.join().unwrap().unwrap_err().to_string();
+        assert!(err.contains(ABORT_PREFIX), "survivor must see the teardown: {err}");
+        assert!(hub_j.join().unwrap().is_err(), "the hub run itself must report the abort");
+    }
+
+    #[test]
+    fn an_explicit_socket_failure_carries_its_message_to_peers() {
+        // Transport::fail on one rank must surface the *original*
+        // message on every peer (mirrors the in-memory injected-failure
+        // test from PR 7).
+        let mut hub = SocketHub::bind("127.0.0.1:0", 2, Vec::new()).unwrap();
+        fast(&mut hub);
+        let addr = hub.addr().to_string();
+        let hub_j = std::thread::spawn(move || hub.serve());
+        let survivor_addr = addr.clone();
+        let survivor = std::thread::spawn(move || {
+            let (t, _) = SocketTransport::connect(&survivor_addr, 0, 2).unwrap();
+            t.post_collect(0, 0, 0, 0, vec![9]).map(|_| ())
+        });
+        let (t1, _) = SocketTransport::connect(&addr, 1, 2).unwrap();
+        t1.fail("replica 1 failed: injected I/O error");
+        let err = survivor.join().unwrap().unwrap_err().to_string();
+        assert!(
+            err.contains(ABORT_PREFIX) && err.contains("injected I/O error"),
+            "peers must see the originating message: {err}"
+        );
+        // The failed transport itself refuses further rounds.
+        let err = t1.post_collect(1, 0, 0, 0, vec![]).unwrap_err().to_string();
+        assert!(err.contains(ABORT_PREFIX), "{err}");
+        assert!(hub_j.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn hub_rejects_a_mismatched_handshake() {
+        let mut hub = SocketHub::bind("127.0.0.1:0", 2, Vec::new()).unwrap();
+        fast(&mut hub);
+        let addr = hub.addr().to_string();
+        let hub_j = std::thread::spawn(move || hub.serve());
+        // Claims 3 replicas against a 2-replica hub: the handshake must
+        // come back as a loud abort, not a hang or a silent seat.
+        let err = SocketTransport::connect(&addr, 0, 3).unwrap_err().to_string();
+        assert!(err.contains(ABORT_PREFIX), "{err}");
+        assert!(err.contains("3 replicas"), "must name the mismatch: {err}");
+        assert!(hub_j.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn socket_transport_rejects_bad_config() {
+        assert!(SocketTransport::connect("127.0.0.1:1", 0, 1).is_err(), "needs >= 2 replicas");
+        assert!(SocketTransport::connect("127.0.0.1:1", 5, 2).is_err(), "rank < replicas");
+        assert!(SocketHub::bind("127.0.0.1:0", 1, Vec::new()).is_err());
+    }
+}

@@ -1,0 +1,348 @@
+//! Versioned wire-frame codec for the replica exchange.
+//!
+//! Every byte that crosses a replica boundary — whether through the
+//! in-memory ring or a real socket — is one **frame**: a fixed 40-byte
+//! self-describing header followed by a length-prefixed payload. The
+//! payload of a data frame is exactly what [`crate::stash::exchange`]
+//! has always shipped: the packed v2 records for every state tensor in
+//! registry order, followed by one little-endian `f32` loss word. The
+//! codec owns only the envelope; it never interprets the payload.
+//!
+//! # Frame layout (`DSQWIRE1`)
+//!
+//! | bytes  | field        | encoding                                  |
+//! |--------|--------------|-------------------------------------------|
+//! | 0..8   | magic        | `DSQWIRE1` (ASCII, version in the name)   |
+//! | 8..12  | rank         | `u32` LE — sender replica rank            |
+//! | 12..20 | step         | `u64` LE — optimizer step of this round   |
+//! | 20..28 | seq          | `u64` LE — per-sender frame sequence no.  |
+//! | 28..32 | tensors      | `u32` LE — tensor-record count in payload |
+//! | 32..40 | payload len  | `u64` LE — payload byte count             |
+//! | 40..   | payload      | packed v2 records + trailing loss word    |
+//!
+//! Two reserved ranks carry control traffic instead of tensor data:
+//! [`RANK_ABORT`] frames ship a UTF-8 teardown message (the
+//! `ABORT_PREFIX` propagation path), and [`RANK_CONTROL`] frames carry
+//! transport-internal handshake payloads (HELLO / CONFIG). Real
+//! replica ranks are always below both.
+//!
+//! # Torn-frame detection
+//!
+//! [`WireFrame::read_from`] refuses to return a partial frame: EOF in
+//! the middle of the header or the payload is an error naming how many
+//! bytes arrived versus how many the header promised, a wrong magic is
+//! an error quoting the bytes found, and a payload length above
+//! [`MAX_PAYLOAD`] is rejected before any allocation (a torn or
+//! corrupt header cannot ask us to allocate the universe).
+//! [`WireFrame::read_or_eof`] is the one sanctioned clean-shutdown
+//! path: EOF *exactly at a frame boundary* (zero header bytes read)
+//! returns `Ok(None)`; everything else behaves like `read_from`.
+//!
+//! The exact header bytes are pinned by a golden-byte test below —
+//! bump the magic to `DSQWIRE2` if the layout ever changes.
+
+use crate::{Error, Result};
+use std::io::{Read, Write};
+
+/// The one definition of the wire magic. Grep for `DSQWIRE1` finds
+/// this constant, the golden-byte test pinning it, and prose only.
+pub const WIRE_MAGIC: &[u8; 8] = b"DSQWIRE1";
+
+/// Fixed header length in bytes: magic(8) + rank(4) + step(8) +
+/// seq(8) + tensors(4) + payload-len(8).
+pub const HEADER_LEN: usize = 40;
+
+/// Sender rank of an abort (teardown) frame; payload is the UTF-8
+/// error message.
+pub const RANK_ABORT: u32 = u32::MAX;
+
+/// Sender rank of a transport-internal control frame (handshake
+/// HELLO / CONFIG payloads).
+pub const RANK_CONTROL: u32 = u32::MAX - 1;
+
+/// Upper bound on a single frame's payload, enforced before
+/// allocation on the read path. Generous — the largest real frame is
+/// a full model state in packed records — but finite, so a torn or
+/// corrupt length field fails fast instead of aborting on OOM.
+pub const MAX_PAYLOAD: u64 = 1 << 32;
+
+/// The fixed-size portion of a frame: everything but the payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    /// Sender replica rank, or [`RANK_ABORT`] / [`RANK_CONTROL`].
+    pub rank: u32,
+    /// Optimizer step the frame belongs to (0 for control traffic).
+    pub step: u64,
+    /// Per-sender monotonically increasing frame counter.
+    pub seq: u64,
+    /// Number of packed tensor records in the payload (0 for control).
+    pub tensors: u32,
+}
+
+/// One complete wire frame: header + owned payload bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireFrame {
+    pub header: FrameHeader,
+    pub payload: Vec<u8>,
+}
+
+fn wire_error(msg: String) -> Error {
+    Error::Config(format!("wire frame: {msg}"))
+}
+
+fn u32_at(buf: &[u8], at: usize) -> u32 {
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&buf[at..at + 4]);
+    u32::from_le_bytes(b)
+}
+
+fn u64_at(buf: &[u8], at: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&buf[at..at + 8]);
+    u64::from_le_bytes(b)
+}
+
+impl WireFrame {
+    /// A data frame from a real replica rank.
+    pub fn data(rank: u32, step: u64, seq: u64, tensors: u32, payload: Vec<u8>) -> Self {
+        WireFrame {
+            header: FrameHeader { rank, step, seq, tensors },
+            payload,
+        }
+    }
+
+    /// A teardown frame carrying a UTF-8 error message; every peer
+    /// that reads one surfaces the message as an `ABORT_PREFIX` error.
+    pub fn abort(msg: &str) -> Self {
+        WireFrame {
+            header: FrameHeader { rank: RANK_ABORT, step: 0, seq: 0, tensors: 0 },
+            payload: msg.as_bytes().to_vec(),
+        }
+    }
+
+    /// A transport-internal control frame (handshake payloads).
+    pub fn control(payload: Vec<u8>) -> Self {
+        WireFrame {
+            header: FrameHeader { rank: RANK_CONTROL, step: 0, seq: 0, tensors: 0 },
+            payload,
+        }
+    }
+
+    /// True for teardown frames written by [`WireFrame::abort`].
+    pub fn is_abort(&self) -> bool {
+        self.header.rank == RANK_ABORT
+    }
+
+    /// True for handshake frames written by [`WireFrame::control`].
+    pub fn is_control(&self) -> bool {
+        self.header.rank == RANK_CONTROL
+    }
+
+    /// The teardown message of an abort frame (lossy UTF-8).
+    pub fn abort_message(&self) -> String {
+        String::from_utf8_lossy(&self.payload).into_owned()
+    }
+
+    /// Total on-the-wire size of this frame in bytes.
+    pub fn frame_len(&self) -> usize {
+        HEADER_LEN + self.payload.len()
+    }
+
+    /// Serialize the 40-byte header into a stack buffer.
+    fn header_bytes(&self) -> [u8; HEADER_LEN] {
+        let mut h = [0u8; HEADER_LEN];
+        h[0..8].copy_from_slice(WIRE_MAGIC);
+        h[8..12].copy_from_slice(&self.header.rank.to_le_bytes());
+        h[12..20].copy_from_slice(&self.header.step.to_le_bytes());
+        h[20..28].copy_from_slice(&self.header.seq.to_le_bytes());
+        h[28..32].copy_from_slice(&self.header.tensors.to_le_bytes());
+        h[32..40].copy_from_slice(&(self.payload.len() as u64).to_le_bytes());
+        h
+    }
+
+    /// Write the complete frame (header + payload) to `w`.
+    pub fn write_into(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&self.header_bytes())
+            .map_err(|e| wire_error(format!("writing header: {e}")))?;
+        w.write_all(&self.payload)
+            .map_err(|e| wire_error(format!("writing {} payload bytes: {e}", self.payload.len())))?;
+        Ok(())
+    }
+
+    /// Read exactly one frame from `r`, rejecting torn frames: EOF
+    /// anywhere inside the header or payload is an error naming the
+    /// byte counts, as are a wrong magic and an implausible length.
+    pub fn read_from(r: &mut impl Read) -> Result<WireFrame> {
+        match read_frame(r, false)? {
+            Some(f) => Ok(f),
+            // read_frame(eof_ok = false) never returns None.
+            None => Err(wire_error("empty stream".into())),
+        }
+    }
+
+    /// Like [`WireFrame::read_from`], but EOF *before any header byte*
+    /// is the sanctioned clean-shutdown signal and returns `Ok(None)`.
+    pub fn read_or_eof(r: &mut impl Read) -> Result<Option<WireFrame>> {
+        read_frame(r, true)
+    }
+}
+
+/// Read one frame; `eof_ok` permits clean EOF at a frame boundary.
+fn read_frame(r: &mut impl Read, eof_ok: bool) -> Result<Option<WireFrame>> {
+    let mut head = [0u8; HEADER_LEN];
+    let mut got = 0usize;
+    while got < HEADER_LEN {
+        let n = r
+            .read(&mut head[got..])
+            .map_err(|e| wire_error(format!("reading header: {e}")))?;
+        if n == 0 {
+            if got == 0 && eof_ok {
+                return Ok(None);
+            }
+            return Err(wire_error(format!(
+                "torn frame: EOF after {got} of {HEADER_LEN} header bytes"
+            )));
+        }
+        got += n;
+    }
+    if &head[0..8] != WIRE_MAGIC {
+        return Err(wire_error(format!(
+            "bad magic {:?} (expected {:?})",
+            &head[0..8],
+            WIRE_MAGIC
+        )));
+    }
+    let header = FrameHeader {
+        rank: u32_at(&head, 8),
+        step: u64_at(&head, 12),
+        seq: u64_at(&head, 20),
+        tensors: u32_at(&head, 28),
+    };
+    let plen = u64_at(&head, 32);
+    if plen > MAX_PAYLOAD {
+        return Err(wire_error(format!(
+            "implausible payload length {plen} (cap {MAX_PAYLOAD}) — torn or corrupt header"
+        )));
+    }
+    let mut payload = vec![0u8; plen as usize];
+    let mut got = 0usize;
+    while got < payload.len() {
+        let n = r
+            .read(&mut payload[got..])
+            .map_err(|e| wire_error(format!("reading payload: {e}")))?;
+        if n == 0 {
+            return Err(wire_error(format!(
+                "torn frame: EOF after {got} of {plen} payload bytes (rank {})",
+                header.rank
+            )));
+        }
+        got += n;
+    }
+    Ok(Some(WireFrame { header, payload }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &WireFrame) -> WireFrame {
+        let mut buf = Vec::new();
+        f.write_into(&mut buf).unwrap();
+        assert_eq!(buf.len(), f.frame_len());
+        let mut cur = &buf[..];
+        let got = WireFrame::read_or_eof(&mut cur).unwrap().unwrap();
+        assert!(cur.is_empty(), "reader consumed exactly one frame");
+        got
+    }
+
+    #[test]
+    fn golden_bytes_pin_the_frame_header() {
+        // The wire contract: any edit that changes these bytes must
+        // bump the magic. rank=3, step=0x0102030405060708,
+        // seq=0x1122334455667788, tensors=7, payload = [0xAA, 0xBB].
+        let f = WireFrame::data(3, 0x0102030405060708, 0x1122334455667788, 7, vec![0xAA, 0xBB]);
+        let mut buf = Vec::new();
+        f.write_into(&mut buf).unwrap();
+        let expect: Vec<u8> = [
+            b"DSQWIRE1" as &[u8],              // magic — the one raw-literal site
+            &3u32.to_le_bytes(),               // rank
+            &[0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01], // step LE
+            &[0x88, 0x77, 0x66, 0x55, 0x44, 0x33, 0x22, 0x11], // seq LE
+            &7u32.to_le_bytes(),               // tensors
+            &2u64.to_le_bytes(),               // payload len
+            &[0xAA, 0xBB],                     // payload
+        ]
+        .concat();
+        assert_eq!(buf, expect);
+        assert_eq!(buf.len(), HEADER_LEN + 2);
+    }
+
+    #[test]
+    fn data_frame_roundtrips() {
+        let f = WireFrame::data(2, 41, 9, 6, (0u8..=255).collect());
+        let got = roundtrip(&f);
+        assert_eq!(got, f);
+        assert!(!got.is_abort() && !got.is_control());
+    }
+
+    #[test]
+    fn abort_and_control_frames_roundtrip() {
+        let a = WireFrame::abort("replica 1 failed: disk gone");
+        let got = roundtrip(&a);
+        assert!(got.is_abort());
+        assert_eq!(got.abort_message(), "replica 1 failed: disk gone");
+
+        let c = WireFrame::control(b"HELLO 0".to_vec());
+        let got = roundtrip(&c);
+        assert!(got.is_control());
+        assert_eq!(got.payload, b"HELLO 0");
+    }
+
+    #[test]
+    fn torn_header_and_torn_payload_are_named_errors() {
+        let f = WireFrame::data(0, 1, 2, 3, vec![1, 2, 3, 4]);
+        let mut buf = Vec::new();
+        f.write_into(&mut buf).unwrap();
+
+        // Truncate mid-header.
+        for cut in [1usize, HEADER_LEN - 1] {
+            let mut cur = &buf[..cut];
+            let err = WireFrame::read_or_eof(&mut cur).unwrap_err().to_string();
+            assert!(err.contains("torn frame"), "{err}");
+            assert!(err.contains(&format!("{cut} of {HEADER_LEN} header bytes")), "{err}");
+        }
+
+        // Truncate mid-payload.
+        let mut cur = &buf[..HEADER_LEN + 2];
+        let err = WireFrame::read_or_eof(&mut cur).unwrap_err().to_string();
+        assert!(err.contains("torn frame"), "{err}");
+        assert!(err.contains("2 of 4 payload bytes"), "{err}");
+    }
+
+    #[test]
+    fn clean_eof_at_a_frame_boundary_is_none_but_read_from_errors() {
+        let mut cur: &[u8] = &[];
+        assert!(WireFrame::read_or_eof(&mut cur).unwrap().is_none());
+
+        let mut cur: &[u8] = &[];
+        let err = WireFrame::read_from(&mut cur).unwrap_err().to_string();
+        assert!(err.contains("torn frame"), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_and_implausible_length_are_rejected() {
+        let f = WireFrame::data(0, 0, 0, 0, vec![]);
+        let mut buf = Vec::new();
+        f.write_into(&mut buf).unwrap();
+
+        let mut bad = buf.clone();
+        bad[7] = b'9';
+        let err = WireFrame::read_or_eof(&mut &bad[..]).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+
+        let mut huge = buf;
+        huge[32..40].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        let err = WireFrame::read_or_eof(&mut &huge[..]).unwrap_err().to_string();
+        assert!(err.contains("implausible payload length"), "{err}");
+    }
+}

@@ -28,7 +28,8 @@
 //!
 //! | rank | lock |
 //! |------|------|
-//! | [`RANK_EXCHANGE_RING`]  (10) | `stash::exchange` `ring` post board |
+//! | [`RANK_EXCHANGE_RING`]  (10) | `stash::transport` mem `ring` post board |
+//! | [`RANK_TRANSPORT_SOCKET`] (15) | `stash::transport` socket `failed` flag |
 //! | [`RANK_EXCHANGE_COMMS`] (20) | `stash::exchange` `comms` traffic meter |
 //!
 //! The stash store and its readback prefetcher are deliberately
@@ -46,6 +47,9 @@ use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
 
 /// The exchange `ring` post board — first in the global order.
 pub const RANK_EXCHANGE_RING: u32 = 10;
+/// The socket transport's `failed` flag — never held across I/O, and
+/// slotted between `ring` and `comms` so either may nest around it.
+pub const RANK_TRANSPORT_SOCKET: u32 = 15;
 /// The exchange `comms` traffic meter — always after `ring`.
 pub const RANK_EXCHANGE_COMMS: u32 = 20;
 

@@ -13,6 +13,7 @@ use std::path::{Path, PathBuf};
 use dsq::coordinator::{LrSchedule, Trainer, TrainerConfig};
 use dsq::data::Variant;
 use dsq::schedule::{FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
+use dsq::util::json::{self, Json};
 
 fn artifacts_dir() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -86,6 +87,107 @@ fn two_mirrored_replicas_at_fp32_match_single_replica_bit_for_bit() {
     assert_eq!(r2.val_curve, r1.val_curve);
     assert_eq!(r2.final_val_loss.to_bits(), r1.final_val_loss.to_bits());
     assert_comms_metered(&r2, FormatSpec::Fp32);
+}
+
+/// Run `dsq train` through the real binary with `extra` flags appended
+/// to a fixed tiny fp32 config, and return the parsed `--json` report.
+/// The socket-transport run and its references all go through this one
+/// argv, so the only degree of freedom is the replication quad.
+fn train_via_binary(bin: &str, dir: &Path, extra: &[&str]) -> Json {
+    let mut args = vec![
+        "train".to_string(),
+        "--artifacts".to_string(),
+        dir.to_string_lossy().into_owned(),
+        "--epochs".to_string(),
+        "1".to_string(),
+        "--batches-per-epoch".to_string(),
+        "6".to_string(),
+        "--val-batches".to_string(),
+        "2".to_string(),
+        "--bleu-batches".to_string(),
+        "0".to_string(),
+        "--lr".to_string(),
+        "isqrt:3e-3:20".to_string(),
+        "--schedule".to_string(),
+        "fp32".to_string(),
+        "--json".to_string(),
+    ];
+    args.extend(extra.iter().map(|s| s.to_string()));
+    let out = std::process::Command::new(bin).args(&args).output().expect("run dsq train");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(
+        out.status.success(),
+        "dsq train {extra:?} failed; stdout:\n{stdout}\nstderr:\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    // The JSON report is the last thing printed: parse from the final
+    // line holding a lone `{` (worker processes share the stream, so
+    // summary lines may precede it).
+    let mut at = None;
+    let mut pos = 0usize;
+    for l in stdout.lines() {
+        if l.trim() == "{" {
+            at = Some(pos);
+        }
+        pos += l.len() + 1;
+    }
+    let at = at.unwrap_or_else(|| panic!("no JSON report in stdout:\n{stdout}"));
+    json::parse(&stdout[at..]).expect("report parses as JSON")
+}
+
+fn loss_curve_of(report: &Json) -> Vec<(f64, f64)> {
+    report
+        .get("loss_curve")
+        .and_then(Json::as_arr)
+        .expect("report has a loss_curve")
+        .iter()
+        .map(|pair| {
+            let p = pair.as_arr().expect("curve entry is [step, loss]");
+            (p[0].as_f64().unwrap(), p[1].as_f64().unwrap())
+        })
+        .collect()
+}
+
+#[test]
+fn socket_transport_train_matches_mem_and_single_replica_bit_for_bit() {
+    // The PR 9 acceptance e2e: the same `dsq train` argv through the
+    // same binary, three ways — single replica, two mirrored in-memory
+    // replicas, and two mirrored replicas as real OS processes over
+    // `--transport socket` — must agree on every step loss and the
+    // final validation loss exactly. Needs both the built binary and
+    // `make artifacts`.
+    let Some(bin) = option_env!("CARGO_BIN_EXE_dsq") else { return };
+    let Some(dir) = artifacts_dir() else { return };
+    let single = train_via_binary(bin, &dir, &[]);
+    let mem = train_via_binary(
+        bin,
+        &dir,
+        &["--replicas", "2", "--mirror-replicas", "--comms", "fp32"],
+    );
+    let socket = train_via_binary(
+        bin,
+        &dir,
+        &[
+            "--replicas",
+            "2",
+            "--mirror-replicas",
+            "--comms",
+            "fp32",
+            "--transport",
+            "socket:127.0.0.1:0",
+        ],
+    );
+    let reference = loss_curve_of(&single);
+    assert!(!reference.is_empty());
+    assert_eq!(loss_curve_of(&mem), reference, "mem transport drifted from single-replica");
+    assert_eq!(
+        loss_curve_of(&socket),
+        reference,
+        "socket transport drifted from single-replica"
+    );
+    let final_loss = |r: &Json| r.get("final_val_loss").and_then(Json::as_f64).unwrap();
+    assert_eq!(final_loss(&mem), final_loss(&single));
+    assert_eq!(final_loss(&socket), final_loss(&single));
 }
 
 #[test]

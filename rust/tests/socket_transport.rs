@@ -1,0 +1,141 @@
+//! Multi-process socket-transport e2e (PR 9): the `--transport socket`
+//! path driven against real child processes of the built `dsq` binary.
+//!
+//! Every test here is gated on `CARGO_BIN_EXE_dsq` (set by cargo for
+//! integration tests of a package with a `dsq` binary) and skips
+//! silently when it is absent, mirroring `lint_drift::cli_lint_exit_codes`.
+//!
+//! What is pinned:
+//!
+//! * **Cross-transport bit-identity** — the `exchange-selftest`
+//!   collective over TCP loopback and over a Unix-domain socket both
+//!   return rank 0 state bit-identical to the in-memory
+//!   [`run_replicas`] result *and* to the untouched single-replica
+//!   state (fp32 mirrored all-reduce is bit-transparent on every
+//!   transport).
+//! * **Teardown under a dead peer** — a worker process that injects a
+//!   fault mid-run must propagate the abort to every surviving peer
+//!   within the transport timeout (not hang), and the orchestrator's
+//!   error must carry the *originating* message relayed through the
+//!   hub, exactly as the in-memory transport's teardown test demands.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use dsq::coordinator::worker::{flat_state, orchestrate, selftest_run, selftest_state};
+use dsq::quant::FormatSpec;
+use dsq::stash::run_replicas;
+
+fn bin() -> Option<PathBuf> {
+    match option_env!("CARGO_BIN_EXE_dsq") {
+        Some(p) => Some(PathBuf::from(p)),
+        None => {
+            eprintln!("skipping: CARGO_BIN_EXE_dsq not set (run via cargo test)");
+            None
+        }
+    }
+}
+
+fn selftest_argv(extra: &[&str]) -> Vec<String> {
+    ["--elems", "24", "--rounds", "3", "--comms", "fp32"]
+        .iter()
+        .chain(extra)
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// Run the 2-process selftest collective over `addr` and return rank
+/// 0's flattened post-reduce state.
+fn socket_selftest(addr: &str) -> dsq::Result<Vec<f32>> {
+    let exe = bin().expect("caller checked");
+    orchestrate(&exe, "exchange-selftest", &selftest_argv(&[]), addr, 2, FormatSpec::Fp32, |ex| {
+        selftest_run(ex, 24, 3, None)
+    })
+}
+
+#[test]
+fn socket_selftest_is_bit_identical_to_mem_and_single_replica() {
+    if bin().is_none() {
+        return;
+    }
+    // The reference: a mirrored fp32 all-reduce computes (x + x) / 2 ==
+    // x exactly, so the untouched synthetic state IS the expected
+    // output on any correct transport.
+    let single = flat_state(&selftest_state(24)).unwrap();
+    let mem = run_replicas(2, FormatSpec::Fp32, |_rank, ex| selftest_run(ex, 24, 3, None))
+        .expect("mem-transport selftest");
+    let socket = socket_selftest("127.0.0.1:0").expect("socket-transport selftest");
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&mem), bits(&single), "mem transport must be fp32 bit-transparent");
+    assert_eq!(
+        bits(&socket),
+        bits(&single),
+        "socket transport must match the single-replica state bit-for-bit"
+    );
+}
+
+#[cfg(unix)]
+#[test]
+fn socket_selftest_over_a_unix_domain_socket() {
+    if bin().is_none() {
+        return;
+    }
+    let mut path = std::env::temp_dir();
+    path.push(format!("dsq-socket-e2e-{}.sock", std::process::id()));
+    let addr = path.to_str().expect("temp path is UTF-8").to_string();
+    let single = flat_state(&selftest_state(24)).unwrap();
+    let socket = socket_selftest(&addr).expect("unix-socket selftest");
+    std::fs::remove_file(&path).ok();
+    assert_eq!(
+        socket.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        single.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+        "unix-domain transport must match the single-replica state bit-for-bit"
+    );
+}
+
+#[test]
+fn worker_death_mid_exchange_tears_down_every_peer_within_timeout() {
+    let Some(exe) = bin() else { return };
+    // Rank 1 (a real child process) injects a fault before its second
+    // round. Rank 0 is already parked in round 1's collect; the abort
+    // must be relayed through the hub and surface here promptly — well
+    // under the 60s read timeout — carrying the originating message.
+    let start = Instant::now();
+    let err = orchestrate(
+        &exe,
+        "exchange-selftest",
+        &selftest_argv(&["--die-rank", "1", "--die-round", "1"]),
+        "127.0.0.1:0",
+        2,
+        FormatSpec::Fp32,
+        |ex| selftest_run(ex, 24, 3, None),
+    )
+    .expect_err("a dead worker must fail the whole run")
+    .to_string();
+    let elapsed = start.elapsed();
+    assert!(
+        err.contains("injected a selftest fault"),
+        "rank 0's error must relay the originating worker fault: {err}"
+    );
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "teardown must beat the read timeout, took {elapsed:?}: {err}"
+    );
+}
+
+#[test]
+fn worker_subcommand_without_a_hub_fails_cleanly() {
+    let Some(exe) = bin() else { return };
+    // A worker pointed at an address nobody serves must exit nonzero
+    // with a connect error, not hang past its connect deadline.
+    let start = Instant::now();
+    let out = std::process::Command::new(&exe)
+        .args(["worker", "--rank", "1", "--connect", "127.0.0.1:1", "--replicas", "2"])
+        .output()
+        .expect("run dsq worker");
+    assert!(!out.status.success(), "connecting to a dead address must fail");
+    assert!(
+        start.elapsed() < Duration::from_secs(30),
+        "the connect retry loop must respect its deadline"
+    );
+}
