@@ -1,10 +1,17 @@
 //! Bench: end-to-end train-step latency through PJRT (the L3 request
-//! path) at each precision config, plus the executable-dispatch
-//! before/after comparison for the Session engine's memoized cache.
+//! path) at each precision config, the executable-dispatch before/after
+//! comparison for the Session engine's memoized cache, and the span
+//! recorder's overhead budget.
 //!
-//! This is the real-hardware half of §Perf: what one coordinator step
-//! costs on this testbed, and how the runtime overhead (literal
-//! marshalling, executable lookup) compares to the XLA compute.
+//! **Recorder overhead** (artifact-free, also the `DSQ_BENCH_SMOKE=1`
+//! CI mode): a synthetic ~100 µs step is timed three ways —
+//! uninstrumented, with the session's span pattern against a *disabled*
+//! recorder, and with tracing on (spans + per-step flush into a temp
+//! dir). Passes alternate between the variants and each variant keeps
+//! its best (min) median across repeats, so drift hits all three
+//! equally. Smoke mode asserts the disabled recorder stays within 1% of
+//! the uninstrumented median — the "tracing off costs nothing" contract
+//! `--trace` rests on.
 //!
 //! **Executable dispatch**: before the Session engine, both training
 //! loops resolved the step executable on *every step* via
@@ -14,21 +21,130 @@
 //! and then serves a local `HashMap` hit. Both paths are timed below so
 //! the win is recorded, not assumed.
 //!
-//! Requires `make artifacts`. The artifact compile (~2 min) happens once
-//! at startup and is excluded from the timings.
+//! The PJRT sections require `make artifacts` (the compile happens once
+//! at startup, excluded from timings) and are skipped — loudly — when
+//! the artifacts are absent. Results land in `BENCH_train_step.json`.
 
 use std::path::PathBuf;
 
-use dsq::bench::{fmt_ns, header, Bencher};
+use dsq::bench::{fmt_ns, header, BenchResult, Bencher, JsonReport};
 use dsq::coordinator::{ExeCache, LrSchedule, Trainer, TrainerConfig};
 use dsq::data::Variant;
+use dsq::obs::{Phase, Recorder};
 use dsq::runtime::Runtime;
 use dsq::schedule::{FormatSpec, PrecisionConfig, Schedule, StaticSchedule};
 
+/// The stand-in for one XLA step: ~100 µs of FMA over a small buffer,
+/// big enough that per-span nanoseconds are measured against realistic
+/// step granularity rather than an empty loop.
+fn synthetic_step(xs: &mut [f32]) {
+    for _ in 0..32 {
+        for x in xs.iter_mut() {
+            *x = x.mul_add(1.000_1, 3.0e-4);
+        }
+    }
+    std::hint::black_box(xs.first().copied());
+}
+
+/// The session's per-step span pattern (see `Session::run`): four
+/// top-level spans around the work plus one imported sub-phase.
+fn instrumented_step(obs: &Recorder, step: u64, xs: &mut [f32]) {
+    let b = obs.span_start(Phase::BatchWait);
+    obs.span_close(b, step, 0);
+    let r = obs.span_start(Phase::StashRead);
+    obs.span_close(r, step, 0);
+    let d = obs.span_start(Phase::Dispatch);
+    synthetic_step(xs);
+    obs.span_close(d, step, 0);
+    let w = obs.span_start(Phase::StashWrite);
+    obs.span_close(w, step, 4096);
+    obs.span_import(Phase::Quantize, step, 1, 4096);
+}
+
+/// Alternating passes, min-of-medians: returns the three best medians
+/// (baseline, disabled, traced) plus the last full result of each for
+/// the JSON report.
+fn recorder_overhead(b: &Bencher, reps: usize) -> ([f64; 3], [BenchResult; 3]) {
+    let mut trace_dir = std::env::temp_dir();
+    trace_dir.push(format!("dsq-bench-trace-{}", std::process::id()));
+    std::fs::remove_dir_all(&trace_dir).ok();
+    let disabled = Recorder::disabled();
+    let traced = Recorder::to_dir(&trace_dir, 0).expect("bench trace dir");
+
+    let mut xs = vec![1.0f32; 8192];
+    let mut step = 0u64;
+    let mut best = [f64::INFINITY; 3];
+    let mut last: [Option<BenchResult>; 3] = [None, None, None];
+    for _ in 0..reps {
+        let r0 = b.bench("step: uninstrumented baseline", || synthetic_step(&mut xs));
+        let r1 = b.bench("step: recorder disabled", || {
+            step += 1;
+            instrumented_step(&disabled, step, &mut xs);
+        });
+        let r2 = b.bench("step: tracing on (spans + flush)", || {
+            step += 1;
+            instrumented_step(&traced, step, &mut xs);
+            traced.flush_events().expect("flush bench trace");
+        });
+        for (i, r) in [r0, r1, r2].into_iter().enumerate() {
+            best[i] = best[i].min(r.median_ns);
+            last[i] = Some(r);
+        }
+    }
+    std::fs::remove_dir_all(&trace_dir).ok();
+    (best, last.map(|r| r.expect("reps >= 1")))
+}
+
 fn main() {
+    let smoke = std::env::var("DSQ_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    let profile = if smoke { "smoke" } else { "full" };
+    let mut json = JsonReport::new("train_step", profile);
+
+    // ---- Recorder overhead (artifact-free; the smoke-mode payload) --
+    header("Recorder overhead (synthetic ~100 µs step)");
+    let (b, reps) = if smoke {
+        let quick = Bencher {
+            warmup: std::time::Duration::from_millis(50),
+            measure: std::time::Duration::from_millis(200),
+            min_iters: 30,
+            max_iters: 100_000,
+        };
+        (quick, 3)
+    } else {
+        (Bencher::default(), 5)
+    };
+    let (best, results) = recorder_overhead(&b, reps);
+    for r in &results {
+        println!("{}", r.report());
+        json.push(r, None);
+    }
+    let [base, disabled, traced] = best;
+    println!(
+        "best medians: baseline {}, disabled {} ({:+.3}%), traced {} ({:+.3}%)",
+        fmt_ns(base),
+        fmt_ns(disabled),
+        (disabled / base - 1.0) * 100.0,
+        fmt_ns(traced),
+        (traced / base - 1.0) * 100.0,
+    );
+    if smoke {
+        assert!(
+            disabled <= base * 1.01,
+            "disabled recorder costs {:.3}% over the uninstrumented step (budget: 1%)",
+            (disabled / base - 1.0) * 100.0
+        );
+    }
+
+    // ---- PJRT sections (need compiled artifacts) --------------------
     let artifacts = PathBuf::from("artifacts");
-    if !artifacts.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts` first");
+    if smoke || !artifacts.join("manifest.json").exists() {
+        if !smoke {
+            dsq::warn!("skipping the PJRT sections: run `make artifacts` first");
+        }
+        match json.write() {
+            Ok(path) => dsq::info!("bench report written to {}", path.display()),
+            Err(e) => dsq::warn!("could not write bench json: {e}"),
+        }
         return;
     }
     header("Train-step latency (PJRT CPU, small testbed model)");
@@ -74,6 +190,18 @@ fn main() {
             report2.steps_per_s(),
             report.wall_s
         );
+        json.push(
+            &BenchResult {
+                name: format!("train step: {name}"),
+                iters: report2.steps,
+                mean_ns: per_step_ns,
+                median_ns: per_step_ns,
+                stddev_ns: 0.0,
+                min_ns: per_step_ns,
+                max_ns: per_step_ns,
+            },
+            None,
+        );
     }
 
     // Executable dispatch: the legacy per-step path vs the Session's
@@ -95,6 +223,8 @@ fn main() {
         fmt_ns(legacy.mean_ns - cached.mean_ns),
         legacy.mean_ns / cached.mean_ns.max(1e-9)
     );
+    json.push(&legacy, None);
+    json.push(&cached, None);
 
     // Literal marshalling overhead: build the input vec without executing.
     let state =
@@ -105,4 +235,10 @@ fn main() {
         }
     });
     println!("\n{}", r.report());
+    json.push(&r, None);
+
+    match json.write() {
+        Ok(path) => dsq::info!("bench report written to {}", path.display()),
+        Err(e) => dsq::warn!("could not write bench json: {e}"),
+    }
 }

@@ -33,10 +33,11 @@ use std::collections::BTreeMap;
 use super::callgraph::{Graph, OrderPair};
 use super::{Finding, Tree, RULE_LOCKS};
 
-/// Modules the order graph is built over: the whole stash layer and the
+/// Modules the order graph is built over: the whole stash layer, the
 /// whole coordinator (the session loop plus the trainer/finetune
-/// adapters that drive it).
-pub const SCOPES: &[&str] = &["rust/src/stash/", "rust/src/coordinator/"];
+/// adapters that drive it), and the obs recorder (whose `obsbuf` mutex
+/// must stay memory-only — its file I/O runs off-lock).
+pub const SCOPES: &[&str] = &["rust/src/stash/", "rust/src/coordinator/", "rust/src/obs/"];
 
 pub fn check(tree: &Tree, findings: &mut Vec<Finding>) {
     let graph = Graph::build(tree.rust_files(), SCOPES);

@@ -2,8 +2,9 @@
 //! tests.
 //!
 //! The binary formats are guarded by 8-byte magics (`DSQCKPT1`,
-//! `DSQCKPT2`, `DSQSCHD1`, and the exchange wire-frame `DSQWIRE1`)
-//! plus the packed-record `PACKED_VERSION` byte. Each must be:
+//! `DSQCKPT2`, `DSQSCHD1`, the exchange wire-frame `DSQWIRE1`, and the
+//! telemetry trace/manifest schema `DSQTRCE1`) plus the packed-record
+//! `PACKED_VERSION` byte. Each must be:
 //!
 //! * **defined exactly once** (a second `const` binding — or two
 //!   different consts bound to the same literal, e.g. a trailer magic

@@ -22,12 +22,15 @@ use super::{Finding, Tree, RULE_PANIC};
 /// Modules on the per-step hot path. The `stash/` prefix covers the
 /// whole tiered store *including* the replica exchange
 /// (`stash/exchange.rs`); the trainer/finetune adapters drive the
-/// Session loop on every run, so they are held to the same bar.
+/// Session loop on every run, so they are held to the same bar. The
+/// obs recorder rides inside every instrumented step, so a panic there
+/// would kill exactly the runs it is meant to observe.
 pub const HOT_PATHS: &[&str] = &[
     "rust/src/stash/",
     "rust/src/coordinator/session.rs",
     "rust/src/coordinator/trainer.rs",
     "rust/src/coordinator/finetune.rs",
+    "rust/src/obs/",
     "rust/src/quant/packed.rs",
 ];
 

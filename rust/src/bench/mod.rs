@@ -123,11 +123,13 @@ impl Bencher {
     }
 }
 
-/// Standard bench-report header used by all bench targets.
+/// Standard bench-report header used by all bench targets. Status
+/// decoration, so it goes through the leveled logger — `--quiet` /
+/// `DSQ_LOG=error` silences it along with the rest of the run banter.
 pub fn header(title: &str) {
-    println!("\n=== {title} ===");
-    println!("{:<44} {:>12} {:>12} {:>10}", "benchmark", "median", "mean", "stddev");
-    println!("{}", "-".repeat(84));
+    crate::info!("=== {title} ===");
+    crate::info!("{:<44} {:>12} {:>12} {:>10}", "benchmark", "median", "mean", "stddev");
+    crate::info!("{}", "-".repeat(84));
 }
 
 /// Machine-readable bench report (ROADMAP track 3b): results collected

@@ -44,6 +44,7 @@ pub fn dispatch(args: &[String]) -> i32 {
         "lint" => cmd_lint(rest),
         "bench" => cmd_bench(rest),
         "stash" => cmd_stash(rest),
+        "trace" => cmd_trace(rest),
         "worker" => super::worker::cmd_worker(rest),
         "info" => cmd_info(rest),
         "version" => {
@@ -59,11 +60,11 @@ pub fn dispatch(args: &[String]) -> i32 {
     match result {
         Ok(()) => 0,
         Err(Error::Config(msg)) => {
-            eprintln!("{msg}");
+            crate::error!("{msg}");
             2
         }
         Err(e) => {
-            eprintln!("error: {e}");
+            crate::error!("error: {e}");
             1
         }
     }
@@ -88,6 +89,8 @@ subcommands:
   bench        gate BENCH_*.json smoke reports against committed baselines
                (dsq bench gate [--ratio r] | dsq bench publish)
   stash        inspect a stash-store run dir (per-slot residency + traffic)
+  trace        analyze a --trace telemetry dir: per-phase step-time breakdown,
+               share of step, cross-rank skew, modeled-vs-observed traffic
   worker       socket-transport replica worker: dsq worker --rank <r>
                --connect <addr> --replicas <n>; spawned automatically by a
                --transport socket:<addr> run, not meant for hand-invocation
@@ -118,6 +121,15 @@ every replica the identical stream instead of round-robin shards — with
 --comms fp32 that run is bit-identical to single-replica. Replicated
 runs print measured comms traffic with a modeled-vs-observed
 comparison, next to the stash DRAM line.
+
+--trace <dir> records span-based telemetry at near-zero cost: every rank
+writes trace.rank<N>.jsonl (one DSQTRCE1-schema JSON event per span:
+batch wait, dispatch, stash read/write, quantize, spill, exchange,
+checkpoint, validate) plus run.rank<N>.json — a structured manifest with
+per-phase count/total/p50/p95/bytes, the controller's precision ladder
+with the step each rung started at, and the stash/comms traffic meters.
+`dsq trace <dir>` renders the breakdown. Works across transports; the
+dir is shared, files are rank-tagged.
 
 --transport picks how those replicas are hosted: mem (the default)
 runs them as threads over an in-memory ring, bit-identical to the
@@ -223,6 +235,12 @@ fn common_train_flags(spec: ArgSpec) -> ArgSpec {
             "how replicas are hosted: mem (threads over an in-memory ring) or \
              socket:<path.sock> | socket:<host>:<port> (one OS process per \
              rank via `dsq worker`); socket:* requires --replicas > 1",
+        )
+        .opt(
+            "trace",
+            "",
+            "telemetry directory: write trace.rank<N>.jsonl span events + a \
+             run.rank<N>.json manifest per rank (inspect with `dsq trace <dir>`)",
         )
         .bool(
             "mirror-replicas",
@@ -352,6 +370,7 @@ pub(crate) fn parse_train_cli(raw: &[String]) -> Result<(TrainerConfig, String, 
         comms,
         mirror_replicas,
         transport,
+        trace_dir: opt_path(&a, "trace"),
     };
     Ok((cfg, a.get("schedule").to_string(), a.get_bool("json")))
 }
@@ -447,6 +466,7 @@ pub(crate) fn parse_finetune_cli(raw: &[String]) -> Result<(FinetuneConfig, Stri
         comms,
         mirror_replicas,
         transport,
+        trace_dir: opt_path(&a, "trace"),
     };
     Ok((cfg, a.get("schedule").to_string(), a.get_bool("json")))
 }
@@ -825,6 +845,22 @@ fn cmd_stash(raw: &[String]) -> Result<()> {
             tb("observed_stash_bits") / 1e6,
         );
     }
+    Ok(())
+}
+
+/// `dsq trace <dir>`: analyze the telemetry a `--trace <dir>` run
+/// wrote — per-phase step-time breakdown (count, total, share of step,
+/// p50/p95, bytes) for every rank's `run.rank<N>.json` manifest,
+/// modeled-vs-observed traffic next to the timings, and cross-rank
+/// phase skew for replicated runs. See [`crate::obs::analyze`].
+fn cmd_trace(raw: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("trace", "analyze a --trace telemetry directory");
+    let a = spec.parse(raw)?;
+    let dir = a.positional.first().ok_or_else(|| {
+        Error::Config("trace directory required (the --trace <dir> of a run)".into())
+    })?;
+    let runs = crate::obs::analyze::load_runs(&PathBuf::from(dir))?;
+    print!("{}", crate::obs::analyze::render(&runs));
     Ok(())
 }
 

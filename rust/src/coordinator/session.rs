@@ -62,6 +62,7 @@ use crate::data::batcher::{assemble_cls, Batcher, ClsBatch};
 use crate::data::{Batch, ClassifyTask, TranslationTask};
 use crate::metrics::{bleu, LossTracker};
 use crate::model::{checkpoint, ModelState};
+use crate::obs::{Phase, Recorder, RunInfo};
 use crate::runtime::{ArtifactManifest, Executable, HostTensor, Runtime};
 use crate::schedule::{FormatSpec, PrecisionConfig, Schedule, ScheduleState};
 use crate::model::checkpoint::ResumePosition;
@@ -128,6 +129,12 @@ pub struct SessionConfig {
     /// stream. Stepping in lockstep with peers additionally needs a
     /// [`ReplicaExchange`] installed via [`Session::set_exchange`].
     pub shard: Option<ReplicaShard>,
+    /// Telemetry directory (`--trace`): the session writes
+    /// `trace.rank<N>.jsonl` (span events) and `run.rank<N>.json` (the
+    /// structured run manifest) here — see [`crate::obs`]. Shared
+    /// across ranks in replicated runs (files are rank-tagged). `None`
+    /// = tracing disabled, at near-zero per-step cost.
+    pub trace_dir: Option<PathBuf>,
 }
 
 /// Whether this shard consumes global batch `idx` of an epoch stream,
@@ -422,6 +429,8 @@ pub struct Session<T: Task> {
     /// All-reduce handle for data-parallel runs (installed by the
     /// replica orchestrator via [`Session::set_exchange`]).
     exchange: Option<ReplicaExchange>,
+    /// Span recorder for `--trace` runs (the disabled no-op otherwise).
+    obs: Recorder,
 }
 
 impl<T: Task> Session<T> {
@@ -493,6 +502,10 @@ impl<T: Task> Session<T> {
             store.start_prefetch(&state);
         }
         let exes = ExeCache::new(&man, model)?;
+        let obs = match &cfg.trace_dir {
+            Some(dir) => Recorder::to_dir(dir, cfg.shard.as_ref().map_or(0, |s| s.rank))?,
+            None => Recorder::disabled(),
+        };
         Ok(Session {
             cfg,
             task,
@@ -504,6 +517,7 @@ impl<T: Task> Session<T> {
             restored_schedule,
             resume_pos,
             exchange: None,
+            obs,
         })
     }
 
@@ -592,7 +606,9 @@ impl<T: Task> Session<T> {
         val_set: &[T::Batch],
         val_curve: &mut Vec<(u64, f64)>,
     ) -> Result<(f64, f64)> {
+        let span = self.obs.span_start(Phase::Validate);
         let (val_loss, val_acc) = self.evaluate(val_set)?;
+        self.obs.span_close(span, self.state.step, 0);
         val_curve.push((self.state.step, val_loss));
         schedule.observe_validation(val_loss);
         Ok((val_loss, val_acc))
@@ -609,6 +625,7 @@ impl<T: Task> Session<T> {
         position: Option<&ResumePosition>,
     ) -> Result<()> {
         let Some(path) = self.cfg.checkpoint.clone() else { return Ok(()) };
+        let span = self.obs.span_start(Phase::Checkpoint);
         let mm = self.man.model(self.model)?;
         checkpoint::save_checkpoint_positioned(
             &path,
@@ -617,9 +634,11 @@ impl<T: Task> Session<T> {
             schedule.snapshot().as_ref(),
             position,
         )?;
+        let bytes = std::fs::metadata(&path)?.len();
         if let Some(store) = &mut self.stash {
-            store.note_checkpoint_bytes(std::fs::metadata(&path)?.len());
+            store.note_checkpoint_bytes(bytes);
         }
+        self.obs.span_close(span, self.state.step, bytes);
         crate::info!("checkpoint saved to {path:?}");
         Ok(())
     }
@@ -693,7 +712,10 @@ impl<T: Task> Session<T> {
             // group (the blocking_under_lock class, asserted at runtime).
             crate::util::ordwitness::assert_lock_free("consuming the batch channel");
             let mut gidx = 0usize;
-            for batch in rx.iter() {
+            loop {
+                let bspan = self.obs.span_start(Phase::BatchWait);
+                let Ok(batch) = rx.recv() else { break };
+                self.obs.span_close(bspan, self.state.step + 1, 0);
                 let idx = gidx;
                 gidx += 1;
                 if !replica_consumes(&shard, skip, idx) {
@@ -705,7 +727,16 @@ impl<T: Task> Session<T> {
                 // prefetcher started after the previous step has been
                 // pulling spilled slots back while we waited on the
                 // batch channel, so this drains it rather than reading
-                // cold.
+                // cold. The StashRead span covers the whole input
+                // staging region (fetch + clone + dispatch-read note);
+                // the SpillRead sub-phase is imported from the store's
+                // own clock.
+                let read0 = self
+                    .obs
+                    .is_active()
+                    .then(|| self.stash.as_ref().map(|s| (s.traffic(), s.phase_ns())))
+                    .flatten();
+                let rspan = self.obs.span_start(Phase::StashRead);
                 if let Some(store) = &mut self.stash {
                     store.fetch_state(&mut self.state)?;
                 }
@@ -723,8 +754,28 @@ impl<T: Task> Session<T> {
                     // the stash *read* of the write/read cycle.
                     store.note_dispatch_read(&self.state);
                 }
+                if let (Some((m0, p0)), Some(store)) = (read0, self.stash.as_ref()) {
+                    let (m1, p1) = (store.traffic(), store.phase_ns());
+                    let step = self.state.step + 1;
+                    self.obs.span_close(
+                        rspan,
+                        step,
+                        (m1.stash_read_bytes - m0.stash_read_bytes)
+                            + (m1.spill_read_bytes - m0.spill_read_bytes),
+                    );
+                    self.obs.span_import(
+                        Phase::SpillRead,
+                        step,
+                        p1.spill_read_ns - p0.spill_read_ns,
+                        m1.spill_read_bytes - m0.spill_read_bytes,
+                    );
+                } else {
+                    self.obs.span_close(rspan, self.state.step + 1, 0);
+                }
+                let dspan = self.obs.span_start(Phase::Dispatch);
                 let outs = exe.run(&inputs)?;
                 let mut loss = self.state.absorb_step_output(outs)? as f64;
+                self.obs.span_close(dspan, self.state.step, 0);
                 // Lockstep all-reduce with the peer replicas: dequant,
                 // mean in rank order, requant at salt 0 — every replica
                 // leaves this call with bit-identical state and loss, so
@@ -733,7 +784,41 @@ impl<T: Task> Session<T> {
                 // barrier; an *error* here tears the exchange down via
                 // the orchestrator instead).
                 if let Some(ex) = &self.exchange {
+                    let c0 = self.obs.is_active().then(|| ex.counter_snapshot());
+                    let espan = self.obs.span_start(Phase::Exchange);
                     loss = ex.all_reduce_state(&mut self.state, loss as f32)? as f64;
+                    if let Some(c0) = c0 {
+                        // The exchange's own clocks split the round into
+                        // encode / post / reduce sub-phases; bytes are
+                        // the wire deltas this round moved.
+                        let c1 = ex.counter_snapshot();
+                        let step = self.state.step;
+                        self.obs.span_close(
+                            espan,
+                            step,
+                            (c1.tx_bytes - c0.tx_bytes) + (c1.rx_bytes - c0.rx_bytes),
+                        );
+                        self.obs.span_import(
+                            Phase::ExchEncode,
+                            step,
+                            c1.encode_ns - c0.encode_ns,
+                            c1.tx_bytes - c0.tx_bytes,
+                        );
+                        self.obs.span_import(
+                            Phase::ExchPost,
+                            step,
+                            c1.post_ns - c0.post_ns,
+                            c1.frame_bytes - c0.frame_bytes,
+                        );
+                        self.obs.span_import(
+                            Phase::ExchReduce,
+                            step,
+                            c1.reduce_ns - c0.reduce_ns,
+                            c1.rx_bytes - c0.rx_bytes,
+                        );
+                    } else {
+                        self.obs.span_close(espan, self.state.step, 0);
+                    }
                 }
                 // Re-stash: step outputs arrive dense from the artifact;
                 // the resident copy goes back to packed storage (the
@@ -741,8 +826,35 @@ impl<T: Task> Session<T> {
                 // the prefetcher starts reading it back in the
                 // background.
                 if let Some(store) = &mut self.stash {
+                    let write0 =
+                        self.obs.is_active().then(|| (store.traffic(), store.phase_ns()));
+                    let wspan = self.obs.span_start(Phase::StashWrite);
                     store.stash_state(&mut self.state)?;
                     store.start_prefetch(&self.state);
+                    let step = self.state.step;
+                    if let Some((m0, p0)) = write0 {
+                        let (m1, p1) = (store.traffic(), store.phase_ns());
+                        self.obs.span_close(
+                            wspan,
+                            step,
+                            (m1.stash_write_bytes - m0.stash_write_bytes)
+                                + (m1.spill_write_bytes - m0.spill_write_bytes),
+                        );
+                        self.obs.span_import(
+                            Phase::Quantize,
+                            step,
+                            p1.quantize_ns - p0.quantize_ns,
+                            m1.stash_write_bytes - m0.stash_write_bytes,
+                        );
+                        self.obs.span_import(
+                            Phase::SpillWrite,
+                            step,
+                            p1.spill_write_ns - p0.spill_write_ns,
+                            m1.spill_write_bytes - m0.spill_write_bytes,
+                        );
+                    } else {
+                        self.obs.span_close(wspan, step, 0);
+                    }
                 }
                 tracker.record(self.state.step, loss);
                 match trace.last_mut() {
@@ -783,6 +895,10 @@ impl<T: Task> Session<T> {
                     };
                     self.save_checkpoint(schedule, Some(&pos))?;
                 }
+                // Drain the bounded event buffer while the producer
+                // refills the channel — the trace file is appended here,
+                // off every lock, not from inside the recorder's mutex.
+                self.obs.flush_events()?;
             }
             crate::util::ordwitness::assert_lock_free("joining the batch producer");
             producer.join().map_err(|_| Error::Config("batch producer panicked".into()))?;
@@ -806,7 +922,12 @@ impl<T: Task> Session<T> {
         // broke off mid-epoch (divergence) or never validated.
         let (final_val_loss, final_eval_acc) = match last_val {
             Some((s, l, a)) if s == self.state.step => (l, a),
-            _ => self.evaluate(&val_set)?,
+            _ => {
+                let span = self.obs.span_start(Phase::Validate);
+                let r = self.evaluate(&val_set)?;
+                self.obs.span_close(span, self.state.step, 0);
+                r
+            }
         };
         // The headline metric (BLEU decode) reads the params directly;
         // bring any slots the budget spilled after the last step back.
@@ -828,7 +949,7 @@ impl<T: Task> Session<T> {
             // semantics every pre-position checkpoint had).
             self.save_checkpoint(schedule, None)?;
         }
-        Ok(RunReport {
+        let report = RunReport {
             steps: self.state.step,
             final_val_loss,
             best_val_loss: val_curve
@@ -845,7 +966,40 @@ impl<T: Task> Session<T> {
             wall_s: start.elapsed().as_secs_f64(),
             stash: self.stash_traffic(),
             comms: self.comms_traffic(),
-        })
+        };
+        // Finalize the run manifest (`--trace`): the precision ladder
+        // with the step each rung started at, the run config, and the
+        // traffic reports `dsq trace` cross-checks span bytes against.
+        // This tail also covers the diverged early-exit path.
+        let mut ladder = Vec::new();
+        let mut at = 0u64;
+        for (pc, n) in &report.trace {
+            ladder.push((at + 1, pc.spec_string()));
+            at += *n as u64;
+        }
+        let config = Json::obj(vec![
+            ("artifacts", Json::str(&self.cfg.artifacts.display().to_string())),
+            ("seed", Json::num(self.cfg.seed as f64)),
+            ("epochs", Json::num(self.cfg.epochs as f64)),
+            ("batches_per_epoch", Json::num(self.cfg.batches_per_epoch as f64)),
+            (
+                "stash_format",
+                self.cfg.stash_format.map_or(Json::Null, |f| Json::str(&f.to_string())),
+            ),
+            ("stash_budget", Json::str(&self.cfg.stash_budget.to_string())),
+            ("replicas", Json::num(shard.replicas as f64)),
+            ("schedule", Json::str(&report.schedule_desc)),
+        ]);
+        self.obs.finish_run(&RunInfo {
+            argv: std::env::args().collect(),
+            config,
+            steps: report.steps,
+            wall_s: report.wall_s,
+            stash: report.stash.as_ref().map(StashTraffic::to_json),
+            comms: report.comms.as_ref().map(CommsTraffic::to_json),
+            ladder,
+        })?;
+        Ok(report)
     }
 }
 
@@ -1198,6 +1352,7 @@ mod tests {
             stash_budget: StashBudget::Unlimited,
             stash_dir: None,
             shard: None,
+            trace_dir: None,
         };
         // prefetch 0 is rejected up front (no PJRT involved).
         let r = Session::new(cfg.clone(), nmt_task(), man.clone());

@@ -68,6 +68,10 @@ pub struct TrainerConfig {
     /// processes — the CLI's `worker` orchestration owns that path
     /// and builds each rank with [`Trainer::replica`].
     pub transport: TransportSpec,
+    /// Telemetry directory (`--trace`): each rank writes
+    /// `trace.rank<N>.jsonl` + `run.rank<N>.json` here (see
+    /// [`crate::obs`]). `None` = tracing disabled.
+    pub trace_dir: Option<PathBuf>,
 }
 
 impl TrainerConfig {
@@ -93,6 +97,7 @@ impl TrainerConfig {
             comms: FormatSpec::Fp32,
             mirror_replicas: false,
             transport: TransportSpec::Mem,
+            trace_dir: None,
         }
     }
 
@@ -113,13 +118,14 @@ impl TrainerConfig {
             stash_budget: self.stash_budget,
             stash_dir: self.stash_dir.clone(),
             shard: None,
+            trace_dir: self.trace_dir.clone(),
         }
     }
 
     /// Per-rank view of a replicated config: rank 0 keeps the headline
     /// duties (checkpointing, BLEU decode); peers only train. Spill
     /// directories get a per-rank suffix so replicas never share index
-    /// files.
+    /// files (the trace dir is shared — obs files are rank-tagged).
     fn for_rank(&self, rank: usize) -> Self {
         let mut cfg = self.clone();
         if self.replicas > 1 {

@@ -34,11 +34,13 @@
 //! connects inside the transport, the hub join, child waits) runs with
 //! no lock held, witnessed by [`ordwitness::assert_lock_free`].
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::model::ModelState;
+use crate::obs::{Phase, Recorder, RunInfo};
 use crate::quant::FormatSpec;
 use crate::runtime::HostTensor;
 use crate::stash::{Exchange, ReplicaExchange, SocketHub, SocketTransport, Transport};
@@ -264,6 +266,7 @@ fn selftest_spec() -> ArgSpec {
         .opt("comms", "fp32", "wire format for the exchange")
         .opt("die-rank", "", "rank that injects a failure (empty = nobody dies)")
         .opt("die-round", "0", "round before which --die-rank fails")
+        .opt("trace", "", "telemetry directory — rank-tagged span trace + run manifest")
 }
 
 fn run_selftest_worker(rest: &[String], rank: usize, transport: Arc<dyn Transport>) -> Result<()> {
@@ -276,12 +279,15 @@ fn run_selftest_worker(rest: &[String], rank: usize, transport: Arc<dyn Transpor
     };
     let elems = a.get_usize("elems")?;
     let rounds = a.get_u64("rounds")?;
+    let trace_dir = Some(a.get("trace")).filter(|t| !t.is_empty()).map(PathBuf::from);
     let ex = Exchange::with_transport(comms, transport);
-    let state = run_rank(&ex, rank, |h| selftest_run(h, elems, rounds, die_at))?;
+    let state = run_rank(&ex, rank, |h| {
+        selftest_run_traced(h, elems, rounds, die_at, trace_dir.as_deref())
+    })?;
     let digest = state
         .iter()
         .fold(0u64, |acc, v| acc.rotate_left(7) ^ u64::from(v.to_bits()));
-    println!("exchange-selftest rank {rank}: {rounds} rounds, state digest {digest:016x}");
+    crate::info!("exchange-selftest rank {rank}: {rounds} rounds, state digest {digest:016x}");
     Ok(())
 }
 
@@ -325,7 +331,29 @@ pub fn selftest_run(
     rounds: u64,
     die_at: Option<u64>,
 ) -> Result<Vec<f32>> {
+    selftest_run_traced(ex, elems, rounds, die_at, None)
+}
+
+/// [`selftest_run`] with optional telemetry (`--trace`): one `exchange`
+/// span per round, with the wire-byte deltas and the encode/post/reduce
+/// sub-phases imported from the handle's counters; on success the rank
+/// writes its `trace.rank<N>.jsonl` + `run.rank<N>.json` into
+/// `trace_dir` (see [`crate::obs`]). The manifest's wall clock is the
+/// round loop itself, so the exchange spans account for essentially all
+/// of it — what the socket-transport e2e asserts.
+pub fn selftest_run_traced(
+    ex: ReplicaExchange,
+    elems: usize,
+    rounds: u64,
+    die_at: Option<u64>,
+    trace_dir: Option<&Path>,
+) -> Result<Vec<f32>> {
+    let obs = match trace_dir {
+        Some(dir) => Recorder::to_dir(dir, ex.rank())?,
+        None => Recorder::disabled(),
+    };
     let mut state = selftest_state(elems);
+    let start = Instant::now();
     for round in 0..rounds {
         if die_at == Some(round) {
             return Err(Error::Config(format!(
@@ -333,8 +361,52 @@ pub fn selftest_run(
                 ex.rank()
             )));
         }
+        let c0 = obs.is_active().then(|| ex.counter_snapshot());
+        let span = obs.span_start(Phase::Exchange);
         ex.all_reduce_state(&mut state, 1.0)?;
+        if let Some(c0) = c0 {
+            let c1 = ex.counter_snapshot();
+            obs.span_close(
+                span,
+                round + 1,
+                (c1.tx_bytes - c0.tx_bytes) + (c1.rx_bytes - c0.rx_bytes),
+            );
+            obs.span_import(
+                Phase::ExchEncode,
+                round + 1,
+                c1.encode_ns - c0.encode_ns,
+                c1.tx_bytes - c0.tx_bytes,
+            );
+            obs.span_import(
+                Phase::ExchPost,
+                round + 1,
+                c1.post_ns - c0.post_ns,
+                c1.frame_bytes - c0.frame_bytes,
+            );
+            obs.span_import(
+                Phase::ExchReduce,
+                round + 1,
+                c1.reduce_ns - c0.reduce_ns,
+                c1.rx_bytes - c0.rx_bytes,
+            );
+        } else {
+            obs.span_close(span, round + 1, 0);
+        }
     }
+    obs.finish_run(&RunInfo {
+        argv: std::env::args().collect(),
+        config: Json::obj(vec![
+            ("elems", Json::num(elems as f64)),
+            ("rounds", Json::num(rounds as f64)),
+            ("replicas", Json::num(ex.replicas() as f64)),
+            ("comms", Json::str(&ex.spec().spec_string())),
+        ]),
+        steps: rounds,
+        wall_s: start.elapsed().as_secs_f64(),
+        stash: None,
+        comms: Some(ex.traffic_report().to_json()),
+        ladder: Vec::new(),
+    })?;
     flat_state(&state)
 }
 

@@ -31,6 +31,7 @@ pub mod data;
 pub mod experiments;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod schedule;

@@ -1,0 +1,318 @@
+//! `dsq trace <dir>`: load and render the run manifests written by
+//! [`Recorder`](super::Recorder).
+//!
+//! Everything here is data-driven from the manifest JSON (schema
+//! [`TRACE_MAGIC`](super::TRACE_MAGIC)): per-phase step-time breakdown
+//! with share-of-step, nested phases indented under their parents,
+//! cross-rank skew when several ranks wrote into the same directory,
+//! and the modeled-vs-observed traffic columns next to the timings —
+//! the wall-clock counterpart of the byte tables.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::bench::fmt_ns;
+use crate::stash::fmt_bytes;
+use crate::util::json::{self, Json};
+use crate::{Error, Result};
+
+/// Load every `run.*.json` manifest under `dir`, sorted by file name
+/// (rank order for rank-tagged files). Errors when the directory holds
+/// no manifests or one carries an unsupported schema.
+pub fn load_runs(dir: &Path) -> Result<Vec<(String, Json)>> {
+    let mut names: Vec<String> = Vec::new();
+    for entry in std::fs::read_dir(dir)?.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.starts_with("run.") && name.ends_with(".json") {
+            names.push(name);
+        }
+    }
+    names.sort();
+    if names.is_empty() {
+        return Err(Error::Config(format!(
+            "no run.*.json manifests under {} — run with --trace <dir> first",
+            dir.display()
+        )));
+    }
+    let want = super::schema_str();
+    let mut runs = Vec::new();
+    for name in names {
+        let doc = json::parse_file(&dir.join(&name))?;
+        let got = doc.get("schema").and_then(Json::as_str).unwrap_or("<missing>").to_string();
+        if got != want {
+            return Err(Error::Config(format!(
+                "{name}: schema '{got}' is not the supported '{want}'"
+            )));
+        }
+        runs.push((name, doc));
+    }
+    Ok(runs)
+}
+
+/// Render loaded manifests as the analyzer report (pure string; the
+/// CLI prints it).
+pub fn render(runs: &[(String, Json)]) -> String {
+    let mut out = String::new();
+    for (name, doc) in runs {
+        render_run(&mut out, name, doc);
+    }
+    if runs.len() > 1 {
+        render_skew(&mut out, runs);
+    }
+    out
+}
+
+fn num(doc: &Json, key: &str) -> f64 {
+    doc.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn phase_entries(doc: &Json) -> Vec<&Json> {
+    doc.get("phases").and_then(Json::as_arr).map(|v| v.iter().collect()).unwrap_or_default()
+}
+
+fn is_top_level(entry: &Json) -> bool {
+    matches!(entry.get("parent"), Some(Json::Null) | None)
+}
+
+fn render_run(out: &mut String, name: &str, doc: &Json) {
+    let rank = num(doc, "rank") as u64;
+    let steps = num(doc, "steps") as u64;
+    let wall_s = num(doc, "wall_s");
+    let _ = writeln!(out, "== {name} · rank {rank} · steps {steps} · wall {wall_s:.3} s");
+    let entries = phase_entries(doc);
+    let step_total_ns: f64 =
+        entries.iter().filter(|e| is_top_level(e)).map(|e| num(e, "total_ns")).sum();
+    let _ = writeln!(
+        out,
+        "{:<22} {:>8} {:>12} {:>7} {:>12} {:>12} {:>12}",
+        "phase", "count", "total", "share", "p50", "p95", "bytes"
+    );
+    for top in entries.iter().filter(|e| is_top_level(e)) {
+        render_phase_row(out, top, step_total_ns, 0);
+        let pname = top.get("phase").and_then(Json::as_str).unwrap_or("");
+        for nested in entries
+            .iter()
+            .filter(|e| e.get("parent").and_then(Json::as_str) == Some(pname))
+        {
+            render_phase_row(out, nested, step_total_ns, 2);
+        }
+    }
+    if wall_s > 0.0 {
+        let covered = step_total_ns / 1e9 / wall_s * 100.0;
+        let _ = writeln!(
+            out,
+            "step phases total {} of {wall_s:.3} s wall ({covered:.1}%)",
+            fmt_ns(step_total_ns)
+        );
+    }
+    let dropped = num(doc, "events_dropped") as u64;
+    if dropped > 0 {
+        let _ = writeln!(out, "events dropped: {dropped}");
+    }
+    render_ladder(out, doc);
+    render_traffic(out, doc, &entries);
+    out.push('\n');
+}
+
+fn render_phase_row(out: &mut String, entry: &Json, step_total_ns: f64, indent: usize) {
+    let pname = entry.get("phase").and_then(Json::as_str).unwrap_or("?");
+    let total_ns = num(entry, "total_ns");
+    let share = if is_top_level(entry) && step_total_ns > 0.0 {
+        format!("{:.1}%", total_ns / step_total_ns * 100.0)
+    } else {
+        "·".to_string()
+    };
+    let bytes = num(entry, "bytes") as u64;
+    let bytes_col = if bytes > 0 { fmt_bytes(bytes) } else { "-".to_string() };
+    let _ = writeln!(
+        out,
+        "{:<22} {:>8} {:>12} {:>7} {:>12} {:>12} {:>12}",
+        format!("{}{pname}", " ".repeat(indent)),
+        num(entry, "count") as u64,
+        fmt_ns(total_ns),
+        share,
+        fmt_ns(num(entry, "p50_ns")),
+        fmt_ns(num(entry, "p95_ns")),
+        bytes_col
+    );
+}
+
+fn render_ladder(out: &mut String, doc: &Json) {
+    let Some(rungs) = doc.get("ladder").and_then(Json::as_arr) else { return };
+    if rungs.is_empty() {
+        return;
+    }
+    let desc: Vec<String> = rungs
+        .iter()
+        .map(|r| {
+            let step = num(r, "step") as u64;
+            let spec = r.get("spec").and_then(Json::as_str).unwrap_or("?");
+            format!("step {step} → {spec}")
+        })
+        .collect();
+    let _ = writeln!(out, "ladder: {}", desc.join(", "));
+}
+
+fn render_traffic(out: &mut String, doc: &Json, entries: &[&Json]) {
+    if let Some(stash) = doc.get("stash").filter(|s| !matches!(s, Json::Null)) {
+        // StashTraffic::to_json nests the meter under "traffic".
+        let m = stash.get("traffic").unwrap_or(stash);
+        let _ = writeln!(
+            out,
+            "traffic (stash): write {}, read {}, spill write {}, spill read {}, checkpoint {}; \
+             modeled {:.3e} bits vs observed {:.3e} bits ({})",
+            fmt_bytes(num(m, "stash_write_bytes") as u64),
+            fmt_bytes(num(m, "stash_read_bytes") as u64),
+            fmt_bytes(num(m, "spill_write_bytes") as u64),
+            fmt_bytes(num(m, "spill_read_bytes") as u64),
+            fmt_bytes(num(m, "checkpoint_bytes") as u64),
+            num(m, "modeled_stash_bits"),
+            num(m, "observed_stash_bits"),
+            agree_str(stash)
+        );
+    }
+    if let Some(comms) = doc.get("comms").filter(|c| !matches!(c, Json::Null)) {
+        let tx = num(comms, "comms_tx_bytes") as u64;
+        let rx = num(comms, "comms_rx_bytes") as u64;
+        let _ = writeln!(
+            out,
+            "traffic (comms): tx {}, rx {}, frames {}; \
+             modeled {:.3e} bits vs observed {:.3e} bits ({})",
+            fmt_bytes(tx),
+            fmt_bytes(rx),
+            fmt_bytes(num(comms, "comms_frame_bytes") as u64),
+            num(comms, "modeled_comms_bits"),
+            num(comms, "observed_comms_bits"),
+            agree_str(comms)
+        );
+        // The wall-clock-vs-bytes cross-check: bytes the exchange spans
+        // attributed against what the comms meter counted.
+        let span_bytes: f64 = entries
+            .iter()
+            .filter(|e| e.get("phase").and_then(Json::as_str) == Some("exchange"))
+            .map(|e| num(e, "bytes"))
+            .sum();
+        if span_bytes > 0.0 && tx + rx > 0 {
+            let meter = (tx + rx) as f64;
+            let delta = (span_bytes - meter).abs() / meter * 100.0;
+            let _ = writeln!(
+                out,
+                "exchange span bytes {} vs comms meter tx+rx {} (Δ {delta:.1}%)",
+                fmt_bytes(span_bytes as u64),
+                fmt_bytes(tx + rx)
+            );
+        }
+    }
+}
+
+fn agree_str(traffic: &Json) -> &'static str {
+    match traffic.get("agrees").and_then(Json::as_bool) {
+        Some(true) => "agrees",
+        Some(false) => "DISAGREES",
+        None => "unchecked",
+    }
+}
+
+fn render_skew(out: &mut String, runs: &[(String, Json)]) {
+    let _ = writeln!(out, "== cross-rank skew ({} ranks)", runs.len());
+    let _ = writeln!(
+        out,
+        "{:<22} {:>12} {:>12} {:>12}",
+        "phase", "min total", "max total", "skew"
+    );
+    // Phase order from the first run; every rank runs the same step.
+    let order: Vec<String> = phase_entries(&runs[0].1)
+        .iter()
+        .filter(|e| is_top_level(e))
+        .filter_map(|e| e.get("phase").and_then(Json::as_str).map(str::to_string))
+        .collect();
+    for pname in order {
+        let totals: Vec<f64> = runs
+            .iter()
+            .filter_map(|(_, doc)| {
+                phase_entries(doc)
+                    .iter()
+                    .find(|e| e.get("phase").and_then(Json::as_str) == Some(pname.as_str()))
+                    .map(|e| num(e, "total_ns"))
+            })
+            .collect();
+        if totals.len() < 2 {
+            continue;
+        }
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for &t in &totals {
+            lo = lo.min(t);
+            hi = hi.max(t);
+        }
+        let _ = writeln!(
+            out,
+            "{pname:<22} {:>12} {:>12} {:>12}",
+            fmt_ns(lo),
+            fmt_ns(hi),
+            fmt_ns(hi - lo)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Phase, Recorder, RunInfo};
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let mut d = std::env::temp_dir();
+        d.push(format!("dsq-obs-analyze-{tag}-{}", std::process::id()));
+        d
+    }
+
+    fn write_run(dir: &Path, rank: usize) {
+        let r = Recorder::to_dir(dir, rank).unwrap();
+        for step in 0..2u64 {
+            let s = r.span_start(Phase::Dispatch);
+            r.span_close(s, step, 100);
+            let e = r.span_start(Phase::Exchange);
+            r.span_close(e, step, 64);
+            r.span_import(Phase::ExchEncode, step, 500, 0);
+        }
+        let info = RunInfo { steps: 2, wall_s: 0.01, ..RunInfo::empty() };
+        r.finish_run(&info).unwrap();
+    }
+
+    #[test]
+    fn load_renders_single_and_multi_rank() {
+        let dir = tmpdir("render");
+        write_run(&dir, 0);
+        write_run(&dir, 1);
+        let runs = load_runs(&dir).unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].0, "run.rank0.json");
+        let report = render(&runs);
+        assert!(report.contains("dispatch"), "{report}");
+        assert!(report.contains("exchange"), "{report}");
+        assert!(report.contains("  exch_encode"), "nested phase indented: {report}");
+        assert!(report.contains("cross-rank skew (2 ranks)"), "{report}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_dir_is_a_config_error() {
+        let dir = tmpdir("empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = load_runs(&dir).unwrap_err().to_string();
+        assert!(err.contains("no run.*.json manifests"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_schema_is_rejected_by_name() {
+        let dir = tmpdir("schema");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("run.rank0.json"), "{\"schema\": \"BOGUS\"}").unwrap();
+        let err = load_runs(&dir).unwrap_err().to_string();
+        assert!(err.contains("BOGUS"), "{err}");
+        assert!(err.contains("run.rank0.json"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,556 @@
+//! Run telemetry: span-based step tracing, per-phase aggregates, and
+//! structured run manifests (ROADMAP "Observability").
+//!
+//! The paper's thesis is that DSQ training is *memory-bound*. The
+//! [`TrafficMeter`](crate::stash::TrafficMeter) already counts every
+//! stash and comms byte; this module adds the wall-clock counterpart —
+//! where a training step's time actually goes (batch wait vs dispatch
+//! vs quantize vs spill vs exchange vs checkpoint) — so ROADMAP track 3
+//! can pick parallelization targets from measurements instead of
+//! guesses.
+//!
+//! # Design
+//!
+//! * [`Recorder`] is a cheap cloneable handle threaded into every
+//!   instrumented component. Disabled (the default) a span is a single
+//!   `Option` check; the `train_step_latency` bench asserts the
+//!   disabled overhead stays under 1% of the median step.
+//! * [`ObsSpan`]s carry a monotonic [`Instant`]; closing one folds the
+//!   duration and attributed bytes into a per-phase aggregate and
+//!   appends one JSONL event to a bounded in-memory buffer. Events past
+//!   the buffer cap are counted in `events_dropped`, never silently
+//!   lost. Sub-phase timings measured elsewhere (stash store clocks,
+//!   exchange counters) enter through [`Recorder::span_import`].
+//! * All file I/O stays *off-lock*: [`Recorder::flush_events`] first
+//!   drains the buffer under the witnessed mutex (rank
+//!   [`RANK_OBS_BUFFER`](crate::util::ordwitness::RANK_OBS_BUFFER)),
+//!   then appends to the trace file with no lock held —
+//!   `ordwitness::assert_lock_free` is the runtime proof, the
+//!   `blocking_under_lock` lint the static one.
+//! * [`Recorder::finish_run`] writes the `run.rank<N>.json` manifest:
+//!   argv/config, per-phase aggregates (count/total/min/max/p50/p95 and
+//!   attributed bytes), the stash + comms traffic columns, and the
+//!   controller ladder transitions. The schema is versioned by
+//!   [`TRACE_MAGIC`] and pinned by `rust/tests/trace_schema.rs`.
+//!
+//! Replicated runs write one trace + manifest pair per rank into the
+//! same `--trace <dir>` (worker processes tag files with their own
+//! rank); `dsq trace <dir>` ([`analyze`]) renders the per-phase
+//! breakdown, share-of-step, cross-rank skew, and modeled-vs-observed
+//! traffic next to the timings.
+
+pub mod analyze;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::ordwitness::{WitnessedMutex, RANK_OBS_BUFFER};
+use crate::Result;
+
+/// Trace/manifest schema version: the `schema` field of every
+/// `run.rank<N>.json` manifest and trace JSONL header line. Bump on any
+/// breaking schema change; `rust/tests/trace_schema.rs` pins the bytes.
+pub const TRACE_MAGIC: &[u8; 8] = b"DSQTRCE1";
+
+/// [`TRACE_MAGIC`] as the string carried in the JSON `schema` field.
+pub fn schema_str() -> String {
+    String::from_utf8_lossy(TRACE_MAGIC).into_owned()
+}
+
+/// Per-phase sample reservoir cap: aggregates keep the most recent
+/// `SAMPLE_CAP` durations (ring-replaced) for p50/p95 without unbounded
+/// memory on long runs.
+const SAMPLE_CAP: usize = 4096;
+
+/// Pending-event cap: JSONL events buffered between flushes beyond this
+/// are dropped (and counted) rather than growing without bound.
+const MAX_PENDING: usize = 8192;
+
+/// A traced phase of the training step.
+///
+/// Top-level phases partition the step wall-clock — their totals sum to
+/// (approximately) the measured step time. Nested phases attribute time
+/// *inside* a parent (see [`Phase::parent`]) and are excluded from
+/// step-time sums by the analyzer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Blocking on the batch-producer channel.
+    BatchWait,
+    /// Executable dispatch + step-output absorb.
+    Dispatch,
+    /// Materializing state for dispatch (spill readback + fetch).
+    StashRead,
+    /// Packing state back into the stash after the step.
+    StashWrite,
+    /// The replica-exchange all-reduce round.
+    Exchange,
+    /// Checkpoint serialization + write.
+    Checkpoint,
+    /// Validation passes.
+    Validate,
+    /// Nested in [`Phase::StashWrite`]: quantize/pack kernels.
+    Quantize,
+    /// Nested in [`Phase::StashWrite`]: spill segment writes.
+    SpillWrite,
+    /// Nested in [`Phase::StashRead`]: spill readback.
+    SpillRead,
+    /// Nested in [`Phase::Exchange`]: wire-format encode.
+    ExchEncode,
+    /// Nested in [`Phase::Exchange`]: posting/collecting frames.
+    ExchPost,
+    /// Nested in [`Phase::Exchange`]: decode + mean + requantize.
+    ExchReduce,
+}
+
+impl Phase {
+    /// Every phase, top-level first, in manifest order.
+    pub const ALL: [Phase; 13] = [
+        Phase::BatchWait,
+        Phase::Dispatch,
+        Phase::StashRead,
+        Phase::StashWrite,
+        Phase::Exchange,
+        Phase::Checkpoint,
+        Phase::Validate,
+        Phase::Quantize,
+        Phase::SpillWrite,
+        Phase::SpillRead,
+        Phase::ExchEncode,
+        Phase::ExchPost,
+        Phase::ExchReduce,
+    ];
+
+    /// The snake_case name used in events and manifests.
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::BatchWait => "batch_wait",
+            Phase::Dispatch => "dispatch",
+            Phase::StashRead => "stash_read",
+            Phase::StashWrite => "stash_write",
+            Phase::Exchange => "exchange",
+            Phase::Checkpoint => "checkpoint",
+            Phase::Validate => "validate",
+            Phase::Quantize => "quantize",
+            Phase::SpillWrite => "spill_write",
+            Phase::SpillRead => "spill_read",
+            Phase::ExchEncode => "exch_encode",
+            Phase::ExchPost => "exch_post",
+            Phase::ExchReduce => "exch_reduce",
+        }
+    }
+
+    /// `Some(parent)` for nested phases, `None` for the top-level
+    /// step-partition phases.
+    pub fn parent(self) -> Option<Phase> {
+        match self {
+            Phase::Quantize | Phase::SpillWrite => Some(Phase::StashWrite),
+            Phase::SpillRead => Some(Phase::StashRead),
+            Phase::ExchEncode | Phase::ExchPost | Phase::ExchReduce => Some(Phase::Exchange),
+            _ => None,
+        }
+    }
+}
+
+/// Aggregate over every closed span of one phase.
+#[derive(Clone, Debug)]
+struct PhaseAgg {
+    count: u64,
+    total_ns: u64,
+    min_ns: u64,
+    max_ns: u64,
+    bytes: u64,
+    samples: Vec<u64>,
+}
+
+impl Default for PhaseAgg {
+    fn default() -> Self {
+        PhaseAgg {
+            count: 0,
+            total_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+            bytes: 0,
+            samples: Vec::new(),
+        }
+    }
+}
+
+impl PhaseAgg {
+    fn fold(&mut self, dur_ns: u64, bytes: u64) {
+        self.count += 1;
+        self.total_ns += dur_ns;
+        self.min_ns = self.min_ns.min(dur_ns);
+        self.max_ns = self.max_ns.max(dur_ns);
+        self.bytes += bytes;
+        if self.samples.len() < SAMPLE_CAP {
+            self.samples.push(dur_ns);
+        } else {
+            self.samples[((self.count - 1) % SAMPLE_CAP as u64) as usize] = dur_ns;
+        }
+    }
+
+    fn pct_ns(&self, p: f64) -> u64 {
+        let xs: Vec<f64> = self.samples.iter().map(|&v| v as f64).collect();
+        crate::util::stats::percentile(&xs, p).round() as u64
+    }
+}
+
+/// The mutex-protected recorder state: per-phase aggregates plus the
+/// bounded pending-event buffer. Everything done under this lock is
+/// memory-only; file I/O happens after the guard is dropped.
+struct ObsBuf {
+    phases: Vec<PhaseAgg>,
+    pending: Vec<String>,
+    dropped: u64,
+}
+
+impl Default for ObsBuf {
+    fn default() -> Self {
+        ObsBuf {
+            phases: Phase::ALL.iter().map(|_| PhaseAgg::default()).collect(),
+            pending: Vec::new(),
+            dropped: 0,
+        }
+    }
+}
+
+struct RecorderInner {
+    origin: Instant,
+    rank: usize,
+    trace_path: PathBuf,
+    run_path: PathBuf,
+    obsbuf: WitnessedMutex<ObsBuf>,
+}
+
+/// An open span: created by [`Recorder::span_start`], consumed by
+/// [`Recorder::span_close`]. When the recorder is disabled the span
+/// carries no timestamp and closing it is a no-op.
+#[must_use = "close the span via Recorder::span_close or the phase is never recorded"]
+pub struct ObsSpan {
+    phase: Phase,
+    start: Option<Instant>,
+}
+
+/// A cheap handle to the run's telemetry sink.
+///
+/// Cloning shares the underlying buffer; the default/[`disabled`]
+/// recorder does nothing and costs one branch per span.
+///
+/// [`disabled`]: Recorder::disabled
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Option<Arc<RecorderInner>>,
+}
+
+impl Recorder {
+    /// The no-op recorder used when `--trace` is not given.
+    pub fn disabled() -> Recorder {
+        Recorder::default()
+    }
+
+    /// A recorder writing `trace.rank<rank>.jsonl` (truncated, header
+    /// line first) and, at [`Recorder::finish_run`],
+    /// `run.rank<rank>.json` under `dir`.
+    pub fn to_dir(dir: &Path, rank: usize) -> Result<Recorder> {
+        crate::util::ordwitness::assert_lock_free("creating the obs trace dir");
+        std::fs::create_dir_all(dir)?;
+        let trace_path = dir.join(format!("trace.rank{rank}.jsonl"));
+        let run_path = dir.join(format!("run.rank{rank}.json"));
+        let header = Json::obj(vec![
+            ("schema", Json::str(&schema_str())),
+            ("kind", Json::str("header")),
+            ("rank", Json::num(rank as f64)),
+        ]);
+        let mut line = header.to_string();
+        line.push('\n');
+        std::fs::write(&trace_path, line)?;
+        Ok(Recorder {
+            inner: Some(Arc::new(RecorderInner {
+                origin: Instant::now(),
+                rank,
+                trace_path,
+                run_path,
+                obsbuf: WitnessedMutex::new(RANK_OBS_BUFFER, "obs.buffer", ObsBuf::default()),
+            })),
+        })
+    }
+
+    /// Whether spans are actually recorded.
+    pub fn is_active(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a span for `phase`. Costs one branch when disabled.
+    pub fn span_start(&self, phase: Phase) -> ObsSpan {
+        ObsSpan { phase, start: self.inner.as_ref().map(|_| Instant::now()) }
+    }
+
+    /// Close `span`, folding its duration and `bytes` into the phase
+    /// aggregate and buffering one JSONL event (memory-only; the file
+    /// write happens in [`Recorder::flush_events`]).
+    pub fn span_close(&self, span: ObsSpan, step: u64, bytes: u64) {
+        let (Some(inner), Some(start)) = (self.inner.as_deref(), span.start) else {
+            return;
+        };
+        let dur_ns = start.elapsed().as_nanos() as u64;
+        let t_ns = inner.origin.elapsed().as_nanos() as u64;
+        Self::obs_record(inner, span.phase, step, t_ns, dur_ns, bytes);
+    }
+
+    /// Record a duration measured elsewhere (stash-store clocks,
+    /// exchange counters) as a nested-phase event. Zero duration and
+    /// zero bytes is skipped so inactive sub-phases stay out of the
+    /// manifest.
+    pub fn span_import(&self, phase: Phase, step: u64, dur_ns: u64, bytes: u64) {
+        let Some(inner) = self.inner.as_deref() else { return };
+        if dur_ns == 0 && bytes == 0 {
+            return;
+        }
+        let t_ns = inner.origin.elapsed().as_nanos() as u64;
+        Self::obs_record(inner, phase, step, t_ns, dur_ns, bytes);
+    }
+
+    /// Memory-only: formats the event line *before* taking the lock and
+    /// does nothing but aggregate folds and a bounded push under it.
+    fn obs_record(
+        inner: &RecorderInner,
+        phase: Phase,
+        step: u64,
+        t_ns: u64,
+        dur_ns: u64,
+        bytes: u64,
+    ) {
+        let name = phase.name();
+        let line = format!(
+            "{{\"phase\":\"{name}\",\"step\":{step},\"t_ns\":{t_ns},\
+             \"dur_ns\":{dur_ns},\"bytes\":{bytes}}}"
+        );
+        let mut buf = inner.obsbuf.lock();
+        buf.phases[phase as usize].fold(dur_ns, bytes);
+        if buf.pending.len() < MAX_PENDING {
+            buf.pending.push(line);
+        } else {
+            buf.dropped += 1;
+        }
+    }
+
+    /// Drain the pending buffer under the lock; memory-only.
+    fn obs_take_lines(inner: &RecorderInner) -> Vec<String> {
+        std::mem::take(&mut inner.obsbuf.lock().pending)
+    }
+
+    /// Snapshot the aggregates under the lock; memory-only.
+    fn obs_snapshot(inner: &RecorderInner) -> (Vec<PhaseAgg>, u64) {
+        let buf = inner.obsbuf.lock();
+        (buf.phases.to_vec(), buf.dropped)
+    }
+
+    /// Append buffered events to the trace file. The buffer is drained
+    /// under the lock first; the file write runs with no lock held.
+    pub fn flush_events(&self) -> Result<()> {
+        let Some(inner) = self.inner.as_deref() else { return Ok(()) };
+        let lines = Self::obs_take_lines(inner);
+        if lines.is_empty() {
+            return Ok(());
+        }
+        crate::util::ordwitness::assert_lock_free("flushing obs trace events");
+        append_jsonl(&inner.trace_path, &lines)
+    }
+
+    /// Flush remaining events and write the `run.rank<N>.json`
+    /// manifest. Returns the manifest path, or `None` when disabled.
+    pub fn finish_run(&self, info: &RunInfo) -> Result<Option<PathBuf>> {
+        let Some(inner) = self.inner.as_deref() else { return Ok(None) };
+        self.flush_events()?;
+        let (phases, dropped) = Self::obs_snapshot(inner);
+        let manifest = build_manifest(info, inner.rank, &phases, dropped);
+        crate::util::ordwitness::assert_lock_free("writing the obs run manifest");
+        std::fs::write(&inner.run_path, manifest.to_string_pretty())?;
+        Ok(Some(inner.run_path.clone()))
+    }
+}
+
+/// Everything [`Recorder::finish_run`] needs that the recorder does not
+/// observe itself: run identity, traffic columns, and the controller
+/// ladder transitions.
+pub struct RunInfo {
+    pub argv: Vec<String>,
+    pub config: Json,
+    pub steps: u64,
+    pub wall_s: f64,
+    pub stash: Option<Json>,
+    pub comms: Option<Json>,
+    /// `(step, spec)` pairs: the quantization ladder rung entered at
+    /// each step (the first entry is the opening rung).
+    pub ladder: Vec<(u64, String)>,
+}
+
+impl RunInfo {
+    /// An empty shell; callers fill in what they have.
+    pub fn empty() -> RunInfo {
+        RunInfo {
+            argv: Vec::new(),
+            config: Json::Null,
+            steps: 0,
+            wall_s: 0.0,
+            stash: None,
+            comms: None,
+            ladder: Vec::new(),
+        }
+    }
+}
+
+/// One `write_all` of all pending lines; called with no lock held.
+fn append_jsonl(path: &Path, lines: &[String]) -> Result<()> {
+    use std::io::Write;
+    let mut buf = String::new();
+    for l in lines {
+        buf.push_str(l);
+        buf.push('\n');
+    }
+    let mut f = std::fs::OpenOptions::new().append(true).create(true).open(path)?;
+    f.write_all(buf.as_bytes())?;
+    Ok(())
+}
+
+fn build_manifest(info: &RunInfo, rank: usize, phases: &[PhaseAgg], dropped: u64) -> Json {
+    let entries = Phase::ALL.iter().filter_map(|&p| {
+        let a = &phases[p as usize];
+        if a.count == 0 {
+            return None;
+        }
+        let parent = match p.parent() {
+            Some(pp) => Json::str(pp.name()),
+            None => Json::Null,
+        };
+        Some(Json::obj(vec![
+            ("phase", Json::str(p.name())),
+            ("parent", parent),
+            ("count", Json::num(a.count as f64)),
+            ("total_ns", Json::num(a.total_ns as f64)),
+            ("min_ns", Json::num(a.min_ns as f64)),
+            ("max_ns", Json::num(a.max_ns as f64)),
+            ("p50_ns", Json::num(a.pct_ns(50.0) as f64)),
+            ("p95_ns", Json::num(a.pct_ns(95.0) as f64)),
+            ("bytes", Json::num(a.bytes as f64)),
+        ]))
+    });
+    let ladder = info.ladder.iter().map(|(step, spec)| {
+        Json::obj(vec![("step", Json::num(*step as f64)), ("spec", Json::str(spec))])
+    });
+    Json::obj(vec![
+        ("schema", Json::str(&schema_str())),
+        ("rank", Json::num(rank as f64)),
+        ("argv", Json::arr(info.argv.iter().map(|a| Json::str(a)))),
+        ("config", info.config.clone()),
+        ("steps", Json::num(info.steps as f64)),
+        ("wall_s", Json::num(info.wall_s)),
+        ("phases", Json::arr(entries)),
+        ("ladder", Json::arr(ladder)),
+        ("stash", info.stash.clone().unwrap_or(Json::Null)),
+        ("comms", info.comms.clone().unwrap_or(Json::Null)),
+        ("events_dropped", Json::num(dropped as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let mut d = std::env::temp_dir();
+        d.push(format!("dsq-obs-{tag}-{}", std::process::id()));
+        d
+    }
+
+    #[test]
+    fn disabled_recorder_is_a_no_op() {
+        let r = Recorder::disabled();
+        assert!(!r.is_active());
+        let s = r.span_start(Phase::Dispatch);
+        r.span_close(s, 0, 123);
+        r.span_import(Phase::Quantize, 0, 5, 5);
+        r.flush_events().unwrap();
+        assert_eq!(r.finish_run(&RunInfo::empty()).unwrap(), None);
+    }
+
+    #[test]
+    fn spans_aggregate_and_flush_to_jsonl() {
+        let dir = tmpdir("spans");
+        let r = Recorder::to_dir(&dir, 0).unwrap();
+        assert!(r.is_active());
+        for step in 0..3u64 {
+            let s = r.span_start(Phase::Dispatch);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            r.span_close(s, step, 10);
+        }
+        r.span_import(Phase::Quantize, 2, 1_000, 7);
+        r.flush_events().unwrap();
+        let trace = std::fs::read_to_string(dir.join("trace.rank0.jsonl")).unwrap();
+        let lines: Vec<&str> = trace.lines().collect();
+        assert_eq!(lines.len(), 5, "header + 3 dispatch + 1 quantize: {trace}");
+        let header = json::parse(lines[0]).unwrap();
+        assert_eq!(header.get("schema").and_then(Json::as_str), Some("DSQTRCE1"));
+        let ev = json::parse(lines[1]).unwrap();
+        assert_eq!(ev.get("phase").and_then(Json::as_str), Some("dispatch"));
+        assert!(ev.get("dur_ns").and_then(Json::as_i64).unwrap() > 0);
+        let info = RunInfo { steps: 3, wall_s: 0.5, ..RunInfo::empty() };
+        let path = r.finish_run(&info).unwrap().unwrap();
+        let man = json::parse_file(&path).unwrap();
+        assert_eq!(man.get("schema").and_then(Json::as_str), Some("DSQTRCE1"));
+        let phases = man.get("phases").and_then(Json::as_arr).unwrap();
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0].get("phase").and_then(Json::as_str), Some("dispatch"));
+        assert_eq!(phases[0].get("count").and_then(Json::as_i64), Some(3));
+        assert_eq!(phases[0].get("bytes").and_then(Json::as_i64), Some(30));
+        assert_eq!(phases[1].get("parent").and_then(Json::as_str), Some("stash_write"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pending_buffer_is_bounded_and_drops_are_counted() {
+        let dir = tmpdir("bounded");
+        let r = Recorder::to_dir(&dir, 1).unwrap();
+        for i in 0..(MAX_PENDING as u64 + 10) {
+            r.span_import(Phase::Validate, i, 1, 0);
+        }
+        let info = RunInfo::empty();
+        let path = r.finish_run(&info).unwrap().unwrap();
+        let man = json::parse_file(&path).unwrap();
+        assert_eq!(man.get("events_dropped").and_then(Json::as_i64), Some(10));
+        let agg = man.path("phases/0");
+        assert_eq!(
+            agg.and_then(|a| a.get("count")).and_then(Json::as_i64),
+            Some(MAX_PENDING as i64 + 10),
+            "aggregates must see every event even past the pending cap"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn phase_parents_are_top_level() {
+        for p in Phase::ALL {
+            if let Some(parent) = p.parent() {
+                assert_eq!(parent.parent(), None, "{} nests under a nested phase", p.name());
+            }
+        }
+    }
+
+    #[test]
+    fn agg_percentiles_track_samples() {
+        let mut a = PhaseAgg::default();
+        for v in 1..=100u64 {
+            a.fold(v, 0);
+        }
+        assert_eq!(a.count, 100);
+        assert_eq!(a.min_ns, 1);
+        assert_eq!(a.max_ns, 100);
+        let p50 = a.pct_ns(50.0);
+        assert!((45..=55).contains(&p50), "p50 {p50}");
+        let p95 = a.pct_ns(95.0);
+        assert!((90..=100).contains(&p95), "p95 {p95}");
+    }
+}

@@ -80,6 +80,7 @@
 use std::io::Read;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::model::ModelState;
 use crate::quant::{stash_stream, Codec, FormatSpec, PackedTensor};
@@ -235,7 +236,12 @@ impl Exchange {
                 "replica rank {rank} out of range (replicas = {n})"
             )));
         }
-        Ok(ReplicaExchange { core: Arc::clone(&self.core), rank, seq: AtomicU64::new(0) })
+        Ok(ReplicaExchange {
+            core: Arc::clone(&self.core),
+            rank,
+            seq: AtomicU64::new(0),
+            stats: ExchangeStats::default(),
+        })
     }
 
     /// Tear the exchange down: every blocked or future collective call
@@ -263,6 +269,41 @@ impl Exchange {
     }
 }
 
+/// Per-handle wire/clock counters, bumped lock-free after every
+/// all-reduce round. Unlike the shared `comms` meter (aggregated across
+/// ranks, behind a mutex), these are *this rank's* numbers — what the
+/// session's span recorder diffs around each round to attribute
+/// exchange time and bytes to the step that spent them.
+#[derive(Default)]
+struct ExchangeStats {
+    tx_bytes: AtomicU64,
+    rx_bytes: AtomicU64,
+    frame_bytes: AtomicU64,
+    encode_ns: AtomicU64,
+    post_ns: AtomicU64,
+    reduce_ns: AtomicU64,
+}
+
+/// A point-in-time copy of one rank's [`ReplicaExchange`] counters
+/// ([`ReplicaExchange::counter_snapshot`]): cumulative wire bytes plus
+/// the encode / post / reduce clocks, in nanoseconds since the handle
+/// was created.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExchangeCounters {
+    /// Own encoded payload bytes shipped (pre-envelope).
+    pub tx_bytes: u64,
+    /// Peer payload bytes decoded.
+    pub rx_bytes: u64,
+    /// On-the-wire frame bytes (payload + transport envelope).
+    pub frame_bytes: u64,
+    /// Time spent encoding this rank's contribution.
+    pub encode_ns: u64,
+    /// Time blocked in post-and-collect (the barrier wait).
+    pub post_ns: u64,
+    /// Time spent decoding peers + mean + requantize.
+    pub reduce_ns: u64,
+}
+
 /// One rank's handle onto the exchange.
 pub struct ReplicaExchange {
     core: Arc<Core>,
@@ -270,6 +311,8 @@ pub struct ReplicaExchange {
     /// Per-handle frame counter — all ranks advance it in lockstep, so
     /// self-describing transports can detect desynchronized rounds.
     seq: AtomicU64,
+    /// Per-rank telemetry counters (see [`ExchangeCounters`]).
+    stats: ExchangeStats,
 }
 
 impl ReplicaExchange {
@@ -322,6 +365,7 @@ impl ReplicaExchange {
         let step = state.step;
 
         // Encode this rank's contribution as one payload of v2 records.
+        let t_encode = Instant::now();
         let mut frame: Vec<u8> = Vec::new();
         let mut tx_payload = 0u64;
         let mut modeled_bits = 0f64;
@@ -348,9 +392,13 @@ impl ReplicaExchange {
         // The transport knows its envelope: the mem ring ships bare
         // payloads, the socket path adds the wire header.
         let frame_bytes = self.core.transport.frame_bytes(frame.len());
+        let encode_ns = t_encode.elapsed().as_nanos() as u64;
 
         let ntensors = (state.params.len() * 3) as u32;
+        let t_post = Instant::now();
         let frames = self.post_round(step, ntensors, frame)?;
+        let post_ns = t_post.elapsed().as_nanos() as u64;
+        let t_reduce = Instant::now();
 
         // Decode every rank in rank order (own frame included: peers see
         // this rank through the wire, so this rank must too) and sum.
@@ -416,6 +464,15 @@ impl ReplicaExchange {
             }
         }
 
+        // Per-rank telemetry first — lock-free, so it cannot perturb
+        // the lock order the meter below is witnessed under.
+        self.stats.tx_bytes.fetch_add(tx_payload, Ordering::Relaxed);
+        self.stats.rx_bytes.fetch_add(rx_payload, Ordering::Relaxed);
+        self.stats.frame_bytes.fetch_add(frame_bytes, Ordering::Relaxed);
+        self.stats.encode_ns.fetch_add(encode_ns, Ordering::Relaxed);
+        self.stats.post_ns.fetch_add(post_ns, Ordering::Relaxed);
+        self.stats.reduce_ns.fetch_add(t_reduce.elapsed().as_nanos() as u64, Ordering::Relaxed);
+
         // Meter after the collective; the transport's ring mutex (if
         // any) is long released, so `ring` before `comms` holds.
         let rx_tensors = (n_replicas - 1) as f64;
@@ -448,6 +505,21 @@ impl ReplicaExchange {
     /// This rank's view of the aggregate comms traffic.
     pub fn traffic_report(&self) -> CommsTraffic {
         self.exchange().traffic_report()
+    }
+
+    /// Point-in-time copy of this rank's wire/clock counters. Lock-free
+    /// (plain relaxed atomic loads) — the session's span recorder diffs
+    /// two snapshots around every round to attribute exchange time and
+    /// bytes to the step that spent them.
+    pub fn counter_snapshot(&self) -> ExchangeCounters {
+        ExchangeCounters {
+            tx_bytes: self.stats.tx_bytes.load(Ordering::Relaxed),
+            rx_bytes: self.stats.rx_bytes.load(Ordering::Relaxed),
+            frame_bytes: self.stats.frame_bytes.load(Ordering::Relaxed),
+            encode_ns: self.stats.encode_ns.load(Ordering::Relaxed),
+            post_ns: self.stats.post_ns.load(Ordering::Relaxed),
+            reduce_ns: self.stats.reduce_ns.load(Ordering::Relaxed),
+        }
     }
 }
 

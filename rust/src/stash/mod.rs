@@ -74,6 +74,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::model::ModelState;
 use crate::quant::{stash_stream, FormatSpec, PackedTensor};
@@ -87,7 +88,7 @@ pub mod wire;
 
 pub use exchange::{
     audit_observed_comms, measure_comms_round, measure_state_comms, run_replicas, CommsTraffic,
-    Exchange, ReplicaExchange, ReplicaShard,
+    Exchange, ExchangeCounters, ReplicaExchange, ReplicaShard,
 };
 pub use transport::{
     MemTransport, SocketHub, SocketTransport, Transport, TransportSpec, ABORT_PREFIX,
@@ -417,6 +418,23 @@ static STORE_SEQ: AtomicU64 = AtomicU64::new(0);
 /// the handle type stays `Send` without constraining `Error`).
 type PrefetchResult = std::result::Result<Vec<(usize, PackedTensor)>, String>;
 
+/// Cumulative time the store has spent in each internal phase
+/// (nanoseconds since construction). Read via
+/// [`StashStore::phase_ns`] by the session's span recorder, which
+/// turns the per-step deltas into `quantize` / `spill_write` /
+/// `spill_read` sub-phase spans — the store stays ignorant of
+/// [`crate::obs`], it only keeps the clocks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StashPhaseNs {
+    /// Packing state into the store's format ([`StashStore::stash_state`]'s
+    /// re-encode loop).
+    pub quantize_ns: u64,
+    /// Spilling over-budget slots to the segment file.
+    pub spill_write_ns: u64,
+    /// Reading spilled slots back (prefetch join + synchronous reads).
+    pub spill_read_ns: u64,
+}
+
 /// The tiered stash store (see the module docs).
 pub struct StashStore {
     spec: FormatSpec,
@@ -430,6 +448,8 @@ pub struct StashStore {
     slots: Vec<SlotMeta>,
     /// In-flight readback.
     prefetch: Option<JoinHandle<PrefetchResult>>,
+    /// Per-phase wall-clock totals (see [`StashPhaseNs`]).
+    phase: StashPhaseNs,
 }
 
 const INDEX_FILE: &str = "stash.json";
@@ -478,6 +498,7 @@ impl StashStore {
             allowance_bits: 0.0,
             slots: Vec::new(),
             prefetch: None,
+            phase: StashPhaseNs::default(),
         })
     }
 
@@ -506,6 +527,12 @@ impl StashStore {
     /// Snapshot of the traffic counters.
     pub fn traffic(&self) -> TrafficMeter {
         self.meter
+    }
+
+    /// Snapshot of the cumulative per-phase clocks (see
+    /// [`StashPhaseNs`]).
+    pub fn phase_ns(&self) -> StashPhaseNs {
+        self.phase
     }
 
     /// The run-level traffic report (for `RunReport::stash`).
@@ -577,6 +604,7 @@ impl StashStore {
                 f.rewind();
             }
         }
+        let t_pack = Instant::now();
         for g in 0..3 {
             for i in 0..n {
                 let id = g * n + i;
@@ -615,7 +643,10 @@ impl StashStore {
                 self.slots[id].last_touch = step;
             }
         }
+        self.phase.quantize_ns += t_pack.elapsed().as_nanos() as u64;
+        let t_spill = Instant::now();
         self.enforce_budget(state)?;
+        self.phase.spill_write_ns += t_spill.elapsed().as_nanos() as u64;
         self.write_index(state)?;
         Ok(())
     }
@@ -680,6 +711,8 @@ impl StashStore {
     /// next dispatch sees a fully materialized state. Metered as spill
     /// readback; values are bit-identical to what was spilled.
     pub fn fetch_state(&mut self, state: &mut ModelState) -> Result<()> {
+        let t0 = Instant::now();
+        let mut did_work = false;
         let mut ready: HashMap<usize, PackedTensor> = HashMap::new();
         if let Some(h) = self.prefetch.take() {
             crate::util::ordwitness::assert_lock_free("joining the stash prefetcher");
@@ -688,6 +721,7 @@ impl StashStore {
                 .map_err(|_| Error::Config("stash prefetch thread panicked".into()))?
                 .map_err(Error::Config)?;
             ready.extend(got);
+            did_work = true;
         }
         let n = state.params.len();
         for id in 0..slot_count(state) {
@@ -700,6 +734,12 @@ impl StashStore {
             };
             self.meter.spill_read_bytes += record_len;
             *t = HostTensor::packed(p);
+            did_work = true;
+        }
+        // No-op calls (every step of an unbudgeted run) stay off the
+        // clock, so `spill_read_ns` only accumulates real readback work.
+        if did_work {
+            self.phase.spill_read_ns += t0.elapsed().as_nanos() as u64;
         }
         Ok(())
     }

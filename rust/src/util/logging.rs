@@ -23,16 +23,34 @@ pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Parse a level name (case-insensitive). `None` for anything outside
+/// the valid set — the caller decides how loudly to complain.
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s.to_ascii_lowercase().as_str() {
+        "debug" => Some(Level::Debug),
+        "info" => Some(Level::Info),
+        "warn" => Some(Level::Warn),
+        "error" => Some(Level::Error),
+        _ => None,
+    }
+}
+
+/// Apply `DSQ_LOG` if set. An unrecognized value used to be silently
+/// coerced to `Info` — a typo like `DSQ_LOG=trace` just ate every debug
+/// line with no hint why. Now it warns loudly, naming the bad value and
+/// the valid set, and keeps the default.
 pub fn level_from_env() {
     if let Ok(v) = std::env::var("DSQ_LOG") {
-        let lvl = match v.to_ascii_lowercase().as_str() {
-            "debug" => Level::Debug,
-            "info" => Level::Info,
-            "warn" => Level::Warn,
-            "error" => Level::Error,
-            _ => Level::Info,
-        };
-        set_level(lvl);
+        match parse_level(&v) {
+            Some(lvl) => set_level(lvl),
+            None => log(
+                Level::Warn,
+                format_args!(
+                    "DSQ_LOG={v:?} is not a log level (valid: debug|info|warn|error); \
+                     keeping the default"
+                ),
+            ),
+        }
     }
 }
 
@@ -94,6 +112,22 @@ mod tests {
         assert!(enabled(Level::Warn));
         assert!(enabled(Level::Error));
         set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn parse_level_accepts_the_valid_set_case_insensitively() {
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("INFO"), Some(Level::Info));
+        assert_eq!(parse_level("Warn"), Some(Level::Warn));
+        assert_eq!(parse_level("error"), Some(Level::Error));
+    }
+
+    #[test]
+    fn parse_level_rejects_everything_else() {
+        // The values the old code silently coerced to Info.
+        for bad in ["trace", "verbose", "2", "", " info"] {
+            assert_eq!(parse_level(bad), None, "{bad:?} must not parse");
+        }
     }
 
     #[test]

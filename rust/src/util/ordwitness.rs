@@ -31,6 +31,7 @@
 //! | [`RANK_EXCHANGE_RING`]  (10) | `stash::transport` mem `ring` post board |
 //! | [`RANK_TRANSPORT_SOCKET`] (15) | `stash::transport` socket `failed` flag |
 //! | [`RANK_EXCHANGE_COMMS`] (20) | `stash::exchange` `comms` traffic meter |
+//! | [`RANK_OBS_BUFFER`] (30) | `obs` recorder `obsbuf` event buffer |
 //!
 //! The stash store and its readback prefetcher are deliberately
 //! lock-free (the prefetcher is a `JoinHandle`, not a shared mutex);
@@ -52,6 +53,10 @@ pub const RANK_EXCHANGE_RING: u32 = 10;
 pub const RANK_TRANSPORT_SOCKET: u32 = 15;
 /// The exchange `comms` traffic meter — always after `ring`.
 pub const RANK_EXCHANGE_COMMS: u32 = 20;
+/// The obs recorder's event buffer — last in the order, so telemetry
+/// may be recorded while any other subsystem lock is held (it never
+/// holds anything itself while file I/O runs).
+pub const RANK_OBS_BUFFER: u32 = 30;
 
 #[cfg(debug_assertions)]
 thread_local! {

@@ -190,6 +190,65 @@ fn budgeted_stash_spill_matches_unbudgeted_run_exactly() {
 }
 
 #[test]
+fn traced_run_manifest_matches_the_stash_traffic_meter() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Telemetry consistency on a real stashed run: the bytes the
+    // stash_read / stash_write spans attribute per step must line up
+    // exactly with the TrafficMeter columns the report carries — the
+    // only meter traffic outside the spans is the initial stash in
+    // Session::new, one full-state write before step 1.
+    let trace = std::env::temp_dir().join(format!("dsq-e2e-trace-{}", std::process::id()));
+    std::fs::remove_dir_all(&trace).ok();
+    let mut cfg = quick_cfg(&dir);
+    cfg.epochs = 1;
+    cfg.batches_per_epoch = 4;
+    cfg.bleu_batches = 0;
+    cfg.stash_format = Some(FormatSpec::bfp(8));
+    cfg.trace_dir = Some(trace.clone());
+    let mut schedule: Box<dyn Schedule> =
+        Box::new(StaticSchedule(PrecisionConfig::stashing(FormatSpec::bfp(16))));
+    let report = Trainer::new(cfg).unwrap().run(schedule.as_mut()).unwrap();
+    let meter = report.stash.as_ref().expect("stashed run carries traffic").meter;
+
+    let man = dsq::util::json::parse_file(&trace.join("run.rank0.json")).unwrap();
+    use dsq::util::json::Json;
+    assert_eq!(man.get("schema").and_then(Json::as_str), Some("DSQTRCE1"));
+    assert_eq!(man.get("steps").and_then(Json::as_i64), Some(4));
+    // The manifest's stash column IS the report's traffic, verbatim.
+    assert_eq!(man.get("stash"), Some(&report.stash.as_ref().unwrap().to_json()));
+
+    let phases = man.get("phases").and_then(Json::as_arr).unwrap();
+    let agg = |name: &str| {
+        phases
+            .iter()
+            .find(|p| p.get("phase").and_then(Json::as_str) == Some(name))
+            .unwrap_or_else(|| panic!("manifest lacks the {name} phase"))
+    };
+    let bytes = |name: &str| agg(name).get("bytes").and_then(Json::as_i64).unwrap() as u64;
+
+    // Reads are metered only at dispatch, always inside the span.
+    assert_eq!(agg("stash_read").get("count").and_then(Json::as_i64), Some(4));
+    assert_eq!(bytes("stash_read"), meter.stash_read_bytes + meter.spill_read_bytes);
+
+    // Writes: 4 in-span step writes + the identical initial stash the
+    // constructor does before the recorder sees anything — so the span
+    // bytes are exactly 4/5 of the meter column.
+    assert_eq!(agg("stash_write").get("count").and_then(Json::as_i64), Some(4));
+    assert_eq!(bytes("stash_write") * 5, (meter.stash_write_bytes + meter.spill_write_bytes) * 4);
+
+    // Unbudgeted: nothing spills, so the quantize sub-phase accounts
+    // for every span-attributed write byte.
+    assert_eq!(meter.spill_write_bytes, 0);
+    assert_eq!(bytes("quantize"), bytes("stash_write"));
+
+    // Every top-level phase the loop exercises is present with samples.
+    for name in ["batch_wait", "dispatch", "stash_read", "stash_write", "validate"] {
+        assert!(agg(name).get("count").and_then(Json::as_i64).unwrap() > 0, "{name} unsampled");
+    }
+    std::fs::remove_dir_all(&trace).ok();
+}
+
+#[test]
 fn budgeted_stash_finetune_matches_unbudgeted_run_exactly() {
     let Some(dir) = artifacts_dir() else { return };
     // Same acceptance criterion on the classification task.

@@ -333,6 +333,7 @@ fn mid_epoch_resume_consumes_each_batch_exactly_once_e2e() {
         stash_budget: StashBudget::Unlimited,
         stash_dir: None,
         shard: None,
+        trace_dir: None,
     };
     let mut half = Session::new(scfg, task, man).unwrap();
     let mut schedule2: Box<dyn Schedule> = Box::new(StaticSchedule(PrecisionConfig::FP32));

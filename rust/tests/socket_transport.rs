@@ -18,13 +18,21 @@
 //!   within the transport timeout (not hang), and the orchestrator's
 //!   error must carry the *originating* message relayed through the
 //!   hub, exactly as the in-memory transport's teardown test demands.
+//! * **Per-rank telemetry** — a two-replica `--trace` run writes a
+//!   rank-tagged trace + manifest pair per process into one shared
+//!   directory, the top-level spans account for each rank's wall clock
+//!   to within 5%, and `dsq trace` renders both ranks.
 
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
-use dsq::coordinator::worker::{flat_state, orchestrate, selftest_run, selftest_state};
+use dsq::coordinator::worker::{
+    flat_state, orchestrate, selftest_run, selftest_run_traced, selftest_state,
+};
+use dsq::obs::analyze;
 use dsq::quant::FormatSpec;
 use dsq::stash::run_replicas;
+use dsq::util::json::{self, Json};
 
 fn bin() -> Option<PathBuf> {
     match option_env!("CARGO_BIN_EXE_dsq") {
@@ -121,6 +129,72 @@ fn worker_death_mid_exchange_tears_down_every_peer_within_timeout() {
         elapsed < Duration::from_secs(30),
         "teardown must beat the read timeout, took {elapsed:?}: {err}"
     );
+}
+
+#[test]
+fn two_replica_socket_trace_writes_per_rank_manifests() {
+    let Some(exe) = bin() else { return };
+    // CI points DSQ_TRACE_SMOKE_DIR at a workspace path so the files
+    // survive as artifacts; locally we use (and clean) a temp dir.
+    let (dir, keep) = match std::env::var("DSQ_TRACE_SMOKE_DIR") {
+        Ok(d) => (PathBuf::from(d), true),
+        Err(_) => {
+            let mut d = std::env::temp_dir();
+            d.push(format!("dsq-trace-e2e-{}", std::process::id()));
+            std::fs::remove_dir_all(&d).ok();
+            (d, false)
+        }
+    };
+    let dir_str = dir.to_str().expect("trace dir is UTF-8").to_string();
+    let argv: Vec<String> =
+        ["--elems", "4096", "--rounds", "5", "--comms", "fp32", "--trace", &dir_str]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+    orchestrate(&exe, "exchange-selftest", &argv, "127.0.0.1:0", 2, FormatSpec::Fp32, |ex| {
+        selftest_run_traced(ex, 4096, 5, None, Some(&dir))
+    })
+    .expect("traced socket selftest");
+
+    // Every rank — the in-parent rank 0 and the real child process —
+    // wrote its own rank-tagged trace + manifest pair into the shared
+    // directory.
+    for rank in 0..2 {
+        let man_path = dir.join(format!("run.rank{rank}.json"));
+        let trace_path = dir.join(format!("trace.rank{rank}.jsonl"));
+        assert!(man_path.is_file(), "missing {}", man_path.display());
+        assert!(trace_path.is_file(), "missing {}", trace_path.display());
+        let man = json::parse_file(&man_path).unwrap();
+        assert_eq!(man.get("schema").and_then(Json::as_str), Some("DSQTRCE1"));
+        assert_eq!(man.get("rank").and_then(Json::as_i64), Some(rank));
+        assert_eq!(man.get("steps").and_then(Json::as_i64), Some(5));
+
+        // The acceptance bar: top-level phase totals account for the
+        // step wall-clock to within 5% — the spans cover the loop.
+        let wall_ns = man.get("wall_s").and_then(Json::as_f64).unwrap() * 1e9;
+        let covered: f64 = man
+            .get("phases")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .filter(|p| p.get("parent") == Some(&Json::Null))
+            .map(|p| p.get("total_ns").and_then(Json::as_f64).unwrap())
+            .sum();
+        assert!(
+            covered >= 0.95 * wall_ns && covered <= 1.05 * wall_ns,
+            "rank {rank}: top-level spans cover {covered:.0} ns of {wall_ns:.0} ns wall"
+        );
+    }
+
+    // The analyzer renders both ranks from the same directory.
+    let runs = analyze::load_runs(&dir).expect("load manifests");
+    assert_eq!(runs.len(), 2);
+    let report = analyze::render(&runs);
+    assert!(report.contains("exchange"), "breakdown must name the exchange phase:\n{report}");
+    assert!(report.contains("rank 1"), "both ranks must render:\n{report}");
+    if !keep {
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }
 
 #[test]

@@ -1,0 +1,189 @@
+//! Golden tests pinning the telemetry schema (`DSQTRCE1`): the trace
+//! JSONL event shape, the `run.rank<N>.json` manifest shape, and the
+//! span-attributed-bytes vs `TrafficMeter` consistency contract on a
+//! real two-replica exchange.
+//!
+//! Anything that changes these assertions is a schema break and must
+//! bump `dsq::obs::TRACE_MAGIC`.
+
+use std::path::PathBuf;
+
+use dsq::coordinator::worker::{flat_state, selftest_run_traced, selftest_state};
+use dsq::obs::{schema_str, Phase, Recorder, RunInfo, TRACE_MAGIC};
+use dsq::quant::FormatSpec;
+use dsq::stash::run_replicas;
+use dsq::util::json::{self, Json};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let mut d = std::env::temp_dir();
+    d.push(format!("dsq-trace-schema-{tag}-{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+#[test]
+fn trace_magic_is_pinned() {
+    // The versioned schema tag. Breaking the manifest or event shape
+    // means bumping this constant (DSQTRCE2, ...) — and this test.
+    assert_eq!(TRACE_MAGIC, b"DSQTRCE1");
+    assert_eq!(schema_str().as_bytes(), b"DSQTRCE1");
+}
+
+#[test]
+fn trace_jsonl_events_keep_their_golden_shape() {
+    let dir = tmpdir("jsonl");
+    let r = Recorder::to_dir(&dir, 3).unwrap();
+    let s = r.span_start(Phase::StashWrite);
+    r.span_close(s, 42, 1024);
+    r.span_import(Phase::Quantize, 42, 500, 768);
+    r.flush_events().unwrap();
+
+    let trace = std::fs::read_to_string(dir.join("trace.rank3.jsonl")).unwrap();
+    let lines: Vec<Json> = trace.lines().map(|l| json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 3, "header + 2 events: {trace}");
+
+    // Header line: schema + kind + rank, nothing load-bearing beyond.
+    assert_eq!(lines[0].get("schema").and_then(Json::as_str), Some("DSQTRCE1"));
+    assert_eq!(lines[0].get("kind").and_then(Json::as_str), Some("header"));
+    assert_eq!(lines[0].get("rank").and_then(Json::as_i64), Some(3));
+
+    // Event lines: exactly the five pinned keys.
+    for (ev, phase, bytes) in [(&lines[1], "stash_write", 1024), (&lines[2], "quantize", 768)] {
+        let obj = ev.as_obj().unwrap();
+        let mut keys: Vec<&str> = obj.keys().map(String::as_str).collect();
+        keys.sort_unstable();
+        assert_eq!(keys, ["bytes", "dur_ns", "phase", "step", "t_ns"]);
+        assert_eq!(ev.get("phase").and_then(Json::as_str), Some(phase));
+        assert_eq!(ev.get("step").and_then(Json::as_i64), Some(42));
+        assert_eq!(ev.get("bytes").and_then(Json::as_i64), Some(bytes));
+        assert!(ev.get("t_ns").and_then(Json::as_i64).unwrap() >= 0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn run_manifest_keeps_its_golden_shape() {
+    let dir = tmpdir("manifest");
+    let r = Recorder::to_dir(&dir, 0).unwrap();
+    for step in 1..=4u64 {
+        let s = r.span_start(Phase::Dispatch);
+        r.span_close(s, step, 0);
+        r.span_import(Phase::Quantize, step, 250, 64);
+    }
+    let info = RunInfo {
+        argv: vec!["dsq".into(), "train".into()],
+        config: Json::obj(vec![("seed", Json::num(7.0))]),
+        steps: 4,
+        wall_s: 0.25,
+        stash: None,
+        comms: None,
+        ladder: vec![(1, "fp8_e4m3".into()), (3, "bfp:8:16".into())],
+    };
+    let path = r.finish_run(&info).unwrap().unwrap();
+    assert!(path.ends_with("run.rank0.json"));
+    let man = json::parse_file(&path).unwrap();
+
+    // Top-level keys, pinned exactly.
+    let mut keys: Vec<&str> = man.as_obj().unwrap().keys().map(String::as_str).collect();
+    keys.sort_unstable();
+    assert_eq!(
+        keys,
+        [
+            "argv", "comms", "config", "events_dropped", "ladder", "phases", "rank", "schema",
+            "stash", "steps", "wall_s"
+        ]
+    );
+    assert_eq!(man.get("schema").and_then(Json::as_str), Some("DSQTRCE1"));
+    assert_eq!(man.get("rank").and_then(Json::as_i64), Some(0));
+    assert_eq!(man.get("steps").and_then(Json::as_i64), Some(4));
+    assert_eq!(man.path("argv/1").and_then(Json::as_str), Some("train"));
+    assert_eq!(man.path("config/seed").and_then(Json::as_i64), Some(7));
+    assert_eq!(man.get("events_dropped").and_then(Json::as_i64), Some(0));
+    assert_eq!(man.get("stash"), Some(&Json::Null));
+
+    // Ladder rungs are (step, spec) objects in entry order.
+    assert_eq!(man.path("ladder/0/step").and_then(Json::as_i64), Some(1));
+    assert_eq!(man.path("ladder/1/spec").and_then(Json::as_str), Some("bfp:8:16"));
+
+    // Phase entries: only phases with samples, top-level order first,
+    // each carrying the full aggregate column set.
+    let phases = man.get("phases").and_then(Json::as_arr).unwrap();
+    assert_eq!(phases.len(), 2);
+    let dispatch = &phases[0];
+    assert_eq!(dispatch.get("phase").and_then(Json::as_str), Some("dispatch"));
+    assert_eq!(dispatch.get("parent"), Some(&Json::Null));
+    let mut pkeys: Vec<&str> =
+        dispatch.as_obj().unwrap().keys().map(String::as_str).collect();
+    pkeys.sort_unstable();
+    assert_eq!(
+        pkeys,
+        ["bytes", "count", "max_ns", "min_ns", "p50_ns", "p95_ns", "parent", "phase", "total_ns"]
+    );
+    let quantize = &phases[1];
+    assert_eq!(quantize.get("phase").and_then(Json::as_str), Some("quantize"));
+    assert_eq!(quantize.get("parent").and_then(Json::as_str), Some("stash_write"));
+    assert_eq!(quantize.get("count").and_then(Json::as_i64), Some(4));
+    assert_eq!(quantize.get("total_ns").and_then(Json::as_i64), Some(1000));
+    assert_eq!(quantize.get("bytes").and_then(Json::as_i64), Some(256));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The consistency contract: summed over ranks, the bytes the exchange
+/// spans attribute to the `exchange` phase must equal the aggregate
+/// `TrafficMeter` comms tx+rx columns — the span recorder and the meter
+/// count the same wire, so they must agree exactly.
+#[test]
+fn exchange_span_bytes_match_the_traffic_meter() {
+    let dir = tmpdir("consistency");
+    let dir2 = dir.clone();
+    let got = run_replicas(2, FormatSpec::Fp32, move |_rank, ex| {
+        selftest_run_traced(ex, 96, 4, None, Some(&dir2))
+    })
+    .unwrap();
+
+    let mut span_bytes = 0i64;
+    let mut meter_bytes = None;
+    for rank in 0..2 {
+        let man = json::parse_file(&dir.join(format!("run.rank{rank}.json"))).unwrap();
+        assert_eq!(man.get("schema").and_then(Json::as_str), Some("DSQTRCE1"));
+        let phases = man.get("phases").and_then(Json::as_arr).unwrap();
+        let exch = phases
+            .iter()
+            .find(|p| p.get("phase").and_then(Json::as_str) == Some("exchange"))
+            .unwrap_or_else(|| panic!("rank {rank} manifest has no exchange phase"));
+        assert_eq!(exch.get("count").and_then(Json::as_i64), Some(4));
+        span_bytes += exch.get("bytes").and_then(Json::as_i64).unwrap();
+        // Both ranks report the same aggregate meter (shared core).
+        let tx = man.path("comms/comms_tx_bytes").and_then(Json::as_i64).unwrap();
+        let rx = man.path("comms/comms_rx_bytes").and_then(Json::as_i64).unwrap();
+        assert!(tx > 0 && rx > 0, "rank {rank}: tx {tx} rx {rx}");
+        let total = tx + rx;
+        assert_eq!(*meter_bytes.get_or_insert(total), total, "ranks disagree on the meter");
+    }
+    assert_eq!(
+        span_bytes,
+        meter_bytes.unwrap(),
+        "span-attributed exchange bytes must equal the TrafficMeter comms columns"
+    );
+
+    // The nested sub-phases partition the same wire bytes: encode
+    // attributes tx, reduce attributes rx.
+    let man = json::parse_file(&dir.join("run.rank0.json")).unwrap();
+    let phases = man.get("phases").and_then(Json::as_arr).unwrap();
+    let bytes_of = |name: &str| {
+        phases
+            .iter()
+            .find(|p| p.get("phase").and_then(Json::as_str) == Some(name))
+            .and_then(|p| p.get("bytes"))
+            .and_then(Json::as_i64)
+            .unwrap_or_else(|| panic!("rank 0 manifest has no {name} phase"))
+    };
+    let exch0 = bytes_of("exchange");
+    assert_eq!(bytes_of("exch_encode") + bytes_of("exch_reduce"), exch0);
+    std::fs::remove_dir_all(&dir).ok();
+
+    // And the state itself came back intact: tracing must not perturb
+    // the mirrored fp32 bit-transparency contract.
+    let want = flat_state(&selftest_state(96)).unwrap();
+    assert_eq!(got, want, "tracing perturbed the mirrored fp32 selftest");
+}
